@@ -1,0 +1,60 @@
+//! Mixture-of-Experts quantization (paper §5.1 / Table 4): apply one
+//! rotation across all experts of a Mixtral-style model and compare RTN
+//! 4-bit with and without rotations.
+//!
+//! ```bash
+//! cargo run --release --example moe_quantize
+//! ```
+
+use std::sync::Arc;
+
+use kurtail::config::{Method, PipelineConfig, WeightQuantizer};
+use kurtail::eval::{evaluate, perplexity};
+use kurtail::pipeline::Pipeline;
+use kurtail::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("KURTAIL_FAST").is_ok();
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let pipe = Pipeline::new(rt, "moe", 0, fast, true)?;
+    let meta = &pipe.fp_params.meta;
+    println!(
+        "[moe] {} experts, top-{} routing, {} params",
+        meta.n_experts,
+        meta.top_k,
+        pipe.fp_params.param_count()
+    );
+
+    let n_q = if fast { 12 } else { 50 };
+    let n_eval = if fast { 4 } else { 16 };
+    println!("{:<12} {:>9} {:>9} {:>7}", "method", "wiki-ppl", "0-shot%", "mmlu%");
+    for (method, wq) in [
+        (Method::Fp16, WeightQuantizer::None),
+        (Method::GptqOnly, WeightQuantizer::Rtn), // paper's "RTN" row
+        (Method::QuaRot, WeightQuantizer::Rtn),
+        (Method::KurTail, WeightQuantizer::Rtn),
+    ] {
+        let mut cfg = PipelineConfig::new("moe", method);
+        cfg.weight_quantizer = wq;
+        if fast {
+            cfg.calib.n_samples = 64;
+            cfg.calib.iters = 30;
+        }
+        let (pm, _) = pipe.quantize(&cfg)?;
+        let s = evaluate(&pipe, &pm, n_q, n_eval)?;
+        let label = if method == Method::GptqOnly { "RTN" } else { method.label() };
+        println!(
+            "{:<12} {:>9.3} {:>9.1} {:>7.1}",
+            label,
+            s.wiki_ppl,
+            s.zero_shot_avg * 100.0,
+            s.mmlu_avg * 100.0
+        );
+    }
+
+    // sanity: the shared rotation must leave the fp model intact
+    let fp = pipe.quantize(&PipelineConfig::new("moe", Method::Fp16))?.0;
+    let ppl = perplexity(&pipe.rt, &fp, &pipe.bundle.test, n_eval)?;
+    println!("[moe] fp reference ppl {ppl:.3}");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Sensitivity study (paper Fig. 1 + Table 1 in one run): capture real
+//! block inputs, learn a KurTail rotation, compare quantization
+//! sensitivity and per-token-max success rates against random Hadamard.
+//!
+//! ```bash
+//! cargo run --release --example sensitivity_study
+//! ```
+
+use kurtail::exp::{self, ExpCtx};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("KURTAIL_FAST").is_ok();
+    let ctx = ExpCtx::new("artifacts", fast, 0)?;
+    exp::run(&ctx, "fig1")?;
+    exp::run(&ctx, "table1")?;
+    exp::run(&ctx, "fig2")?;
+    println!("CSV series written to results/ — plot fig1_curves.csv to recreate the figure.");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Nothing in here runs at inference time — `compile.aot` lowers everything to
+HLO text in `artifacts/`, which the Rust coordinator loads via PJRT.
+"""

@@ -1,0 +1,363 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + manifest.json.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts [--configs tiny,small]
+
+Outputs one ``<name>.hlo.txt`` per artifact plus ``manifest.json`` with the
+exact input/output signatures (the ABI the Rust runtime checks at load).
+All graphs are lowered with ``return_tuple=True`` → every output is a tuple,
+unwrapped with ``Literal::to_tuple`` on the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quant as Q
+from .cayley import make_kurtail_step
+
+F32, I32 = "f32", "i32"
+_DT = {F32: jnp.float32, I32: jnp.int32}
+
+KURTAIL_ROWS = 4096      # activation rows per kurtail_step batch
+SPIN_BATCH = 2           # sequences per spinquant_step (end-to-end grad!)
+DECODE_BATCH = 4
+
+
+@dataclasses.dataclass
+class Arg:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str = F32
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, _DT[self.dtype])
+
+    def js(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape), "dtype": self.dtype}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ----------------------------------------------------------- signatures
+
+
+def param_args(cfg: M.ModelConfig, prefix: str = "") -> List[Arg]:
+    return [Arg(prefix + n, s) for n, s in M.param_specs(cfg)]
+
+
+def layer_param_args(cfg: M.ModelConfig) -> List[Arg]:
+    """Single-layer (unstacked) slices — leading L axis dropped."""
+    out = []
+    for n, s in M.param_specs(cfg):
+        if n in M.NON_LAYER_PARAMS:
+            continue
+        out.append(Arg(n, tuple(s[1:])))
+    return out
+
+
+def _params_from_flat(cfg: M.ModelConfig, flat: Sequence[jnp.ndarray]) -> M.Params:
+    names = [n for n, _ in M.param_specs(cfg)]
+    return dict(zip(names, flat))
+
+
+# ------------------------------------------------------- artifact builders
+
+
+def build_train_step(cfg: M.ModelConfig):
+    n_p = len(M.param_specs(cfg))
+    b, t = cfg.train_batch, cfg.seq_len
+    args = (param_args(cfg) + [Arg("m_" + a.name, a.shape) for a in param_args(cfg)]
+            + [Arg("v_" + a.name, a.shape) for a in param_args(cfg)]
+            + [Arg("tokens", (b, t), I32), Arg("lr", ()), Arg("step", ())])
+
+    def fn(*flat):
+        p = _params_from_flat(cfg, flat[:n_p])
+        m = _params_from_flat(cfg, flat[n_p:2 * n_p])
+        v = _params_from_flat(cfg, flat[2 * n_p:3 * n_p])
+        tokens, lr, step = flat[3 * n_p:]
+        np_, nm, nv, loss = M.adam_train_step(cfg, p, m, v, tokens, lr, step)
+        names = [n for n, _ in M.param_specs(cfg)]
+        return tuple([np_[k] for k in names] + [nm[k] for k in names]
+                     + [nv[k] for k in names] + [loss])
+
+    outs = ([a.js() for a in param_args(cfg)]
+            + [{"name": "m_" + a.name, "shape": list(a.shape), "dtype": F32} for a in param_args(cfg)]
+            + [{"name": "v_" + a.name, "shape": list(a.shape), "dtype": F32} for a in param_args(cfg)]
+            + [{"name": "loss", "shape": [], "dtype": F32}])
+    return fn, args, outs
+
+
+def build_fwd_nll(cfg: M.ModelConfig, quant: bool):
+    n_p = len(M.param_specs(cfg))
+    b, t = cfg.eval_batch, cfg.seq_len
+    dh, ff = cfg.d_head, cfg.d_ff
+    args = param_args(cfg)
+    if quant:
+        args += [Arg("r3", (dh, dh)), Arg("r4", (dh, dh)), Arg("r5", (ff, ff))]
+    args += [Arg("tokens", (b, t), I32), Arg("mask", (b, t))]
+
+    def fn(*flat):
+        p = _params_from_flat(cfg, flat[:n_p])
+        if quant:
+            r3, r4, r5, tokens, mask = flat[n_p:]
+            qc = Q.QuantConfig(use_pallas=True)
+            nll, cnt = M.nll_per_seq(cfg, p, tokens, mask, q=qc, r3=r3, r4=r4, r5=r5)
+        else:
+            tokens, mask = flat[n_p:]
+            nll, cnt = M.nll_per_seq(cfg, p, tokens, mask)
+        return nll, cnt
+
+    outs = [{"name": "nll", "shape": [b], "dtype": F32},
+            {"name": "cnt", "shape": [b], "dtype": F32}]
+    return fn, args, outs
+
+
+def build_embed(cfg: M.ModelConfig):
+    b, t = cfg.cap_batch, cfg.seq_len
+    args = [Arg("embed", (cfg.vocab, cfg.d_model)), Arg("tokens", (b, t), I32)]
+
+    def fn(embed, tokens):
+        return (M.embed_fwd(cfg, embed, tokens),)
+
+    outs = [{"name": "x0", "shape": [b, t, cfg.d_model], "dtype": F32}]
+    return fn, args, outs
+
+
+def build_layer_fwd_cap(cfg: M.ModelConfig):
+    b, t, d = cfg.cap_batch, cfg.seq_len, cfg.d_model
+    largs = layer_param_args(cfg)
+    args = largs + [Arg("x", (b, t, d))]
+    lnames = [a.name for a in largs]
+
+    def fn(*flat):
+        lp = dict(zip(lnames, flat[:-1]))
+        return M.layer_fwd_cap(cfg, lp, flat[-1])
+
+    ffdim = cfg.d_ff * (cfg.n_experts if cfg.arch == "moe" else 1)
+    outs = [
+        {"name": "y", "shape": [b, t, d], "dtype": F32},
+        {"name": "ffn_in", "shape": [b, t, d], "dtype": F32},
+        {"name": "v_heads", "shape": [b, t, cfg.n_heads, cfg.d_head], "dtype": F32},
+        {"name": "attn_out", "shape": [b, t, d], "dtype": F32},
+        {"name": "ffn_mid", "shape": [b, t, ffdim], "dtype": F32},
+    ]
+    return fn, args, outs
+
+
+def build_final_nll(cfg: M.ModelConfig):
+    b, t, d = cfg.cap_batch, cfg.seq_len, cfg.d_model
+    args = [Arg("x", (b, t, d)), Arg("lnf", (d,)), Arg("head", (cfg.vocab, d)),
+            Arg("tokens", (b, t), I32), Arg("mask", (b, t))]
+
+    def fn(x, lnf, head, tokens, mask):
+        return M.final_nll_from_hidden(cfg, x, lnf, head, tokens, mask)
+
+    outs = [{"name": "nll", "shape": [b], "dtype": F32},
+            {"name": "cnt", "shape": [b], "dtype": F32}]
+    return fn, args, outs
+
+
+def build_kurtail_step(d: int):
+    args = [Arg("r", (d, d)), Arg("m", (d, d)), Arg("v", ()),
+            Arg("x", (KURTAIL_ROWS, d)), Arg("lr", ()), Arg("t", ())]
+    step = make_kurtail_step(d)
+
+    def fn(r, m, v, x, lr, t):
+        return step(r, m, v, x, lr, t)
+
+    outs = [{"name": "r", "shape": [d, d], "dtype": F32},
+            {"name": "m", "shape": [d, d], "dtype": F32},
+            {"name": "v", "shape": [], "dtype": F32},
+            {"name": "loss", "shape": [], "dtype": F32}]
+    return fn, args, outs
+
+
+def build_spinquant_step(cfg: M.ModelConfig):
+    n_p = len(M.param_specs(cfg))
+    b, t, d = SPIN_BATCH, cfg.seq_len, cfg.d_model
+    args = (param_args(cfg)
+            + [Arg("r1", (d, d)), Arg("m", (d, d)), Arg("v", ()),
+               Arg("tokens", (b, t), I32), Arg("lr", ()), Arg("t", ())])
+
+    def fn(*flat):
+        p = _params_from_flat(cfg, flat[:n_p])
+        r1, m, v, tokens, lr, tt = flat[n_p:]
+        return M.spinquant_step(cfg, p, r1, m, v, tokens, lr, tt)
+
+    outs = [{"name": "r1", "shape": [d, d], "dtype": F32},
+            {"name": "m", "shape": [d, d], "dtype": F32},
+            {"name": "v", "shape": [], "dtype": F32},
+            {"name": "loss", "shape": [], "dtype": F32}]
+    return fn, args, outs
+
+
+def build_decode_step(cfg: M.ModelConfig, quant: bool):
+    n_p = len(M.param_specs(cfg))
+    b, tmax = DECODE_BATCH, cfg.seq_len
+    l, h, dh, ff = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.d_ff
+    cache = (l, b, tmax, h, dh)
+    args = param_args(cfg)
+    if quant:
+        args += [Arg("r3", (dh, dh)), Arg("r4", (dh, dh)), Arg("r5", (ff, ff))]
+    args += [Arg("k_cache", cache), Arg("v_cache", cache),
+             Arg("token", (b,), I32), Arg("pos", (), I32)]
+
+    def fn(*flat):
+        p = _params_from_flat(cfg, flat[:n_p])
+        rest = flat[n_p:]
+        if quant:
+            r3, r4, r5, kc, vc, token, pos = rest
+            qc = Q.QuantConfig(use_pallas=False)  # decode: tiny mats, jnp path
+            return M.decode_step(cfg, p, kc, vc, token, pos, q=qc, r3=r3, r4=r4, r5=r5)
+        kc, vc, token, pos = rest
+        return M.decode_step(cfg, p, kc, vc, token, pos)
+
+    outs = [{"name": "logits", "shape": [b, cfg.vocab], "dtype": F32},
+            {"name": "k_cache", "shape": list(cache), "dtype": F32},
+            {"name": "v_cache", "shape": list(cache), "dtype": F32}]
+    return fn, args, outs
+
+
+def build_kernel_bench(kind: str, m: int, k: int, n: int):
+    from .kernels import fwht, kurtosis, quant_matmul
+
+    if kind == "quant_matmul":
+        args = [Arg("x", (m, k)), Arg("w", (k, n))]
+
+        def fn(x, w):
+            return (quant_matmul(x, w),)
+
+        outs = [{"name": "y", "shape": [m, n], "dtype": F32}]
+    elif kind == "hadamard":
+        args = [Arg("x", (m, k))]
+
+        def fn(x):
+            return (fwht(x),)
+
+        outs = [{"name": "y", "shape": [m, k], "dtype": F32}]
+    elif kind == "kurtosis":
+        args = [Arg("x", (m, k))]
+
+        def fn(x):
+            return (kurtosis(x),)
+
+        outs = [{"name": "y", "shape": [m], "dtype": F32}]
+    else:
+        raise ValueError(kind)
+    return fn, args, outs
+
+
+# ---------------------------------------------------------------- driver
+
+
+def lower_one(name: str, fn: Callable, args: List[Arg], outs: List[dict],
+              out_dir: str, manifest: dict, tag: str) -> None:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*[a.sds() for a in args])
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "group": tag,
+        "inputs": [a.js() for a in args],
+        "outputs": outs,
+    }
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s", flush=True)
+
+
+def config_meta(cfg: M.ModelConfig) -> dict:
+    return {
+        "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "arch": cfg.arch,
+        "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+        "train_batch": cfg.train_batch, "eval_batch": cfg.eval_batch,
+        "cap_batch": cfg.cap_batch, "decode_batch": DECODE_BATCH,
+        "spin_batch": SPIN_BATCH,
+        "param_specs": [{"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,base,phi,moe")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = [c for c in args.configs.split(",") if c]
+    manifest: dict = {
+        "version": 1,
+        "kurtail_rows": KURTAIL_ROWS,
+        "configs": {},
+        "artifacts": {},
+    }
+
+    kurtail_dims = set()
+    for cname in names:
+        cfg = M.PRESETS[cname]
+        manifest["configs"][cname] = config_meta(cfg)
+        kurtail_dims.add(cfg.d_model)
+        kurtail_dims.add(cfg.d_head)
+        print(f"[{cname}] lowering…", flush=True)
+        lower_one(f"train_step_{cname}", *build_train_step(cfg), args.out, manifest, cname)
+        lower_one(f"fwd_nll_{cname}", *build_fwd_nll(cfg, quant=False), args.out, manifest, cname)
+        lower_one(f"fwd_nll_quant_{cname}", *build_fwd_nll(cfg, quant=True), args.out, manifest, cname)
+        lower_one(f"embed_{cname}", *build_embed(cfg), args.out, manifest, cname)
+        lower_one(f"layer_fwd_cap_{cname}", *build_layer_fwd_cap(cfg), args.out, manifest, cname)
+        lower_one(f"final_nll_{cname}", *build_final_nll(cfg), args.out, manifest, cname)
+        lower_one(f"spinquant_step_{cname}", *build_spinquant_step(cfg), args.out, manifest, cname)
+        lower_one(f"decode_step_{cname}", *build_decode_step(cfg, quant=False), args.out, manifest, cname)
+        lower_one(f"decode_step_quant_{cname}", *build_decode_step(cfg, quant=True), args.out, manifest, cname)
+
+    print("[kurtail] lowering…", flush=True)
+    for d in sorted(kurtail_dims):
+        lower_one(f"kurtail_step_d{d}", *build_kurtail_step(d), args.out, manifest, "kurtail")
+
+    if not args.skip_kernels:
+        print("[kernels] lowering…", flush=True)
+        for m, k, n in [(256, 128, 128), (512, 256, 256), (1024, 512, 512)]:
+            lower_one(f"quant_matmul_{m}x{k}x{n}",
+                      *build_kernel_bench("quant_matmul", m, k, n), args.out, manifest, "kernel")
+        for m, k in [(1024, 64), (1024, 256), (4096, 512)]:
+            lower_one(f"hadamard_{m}x{k}", *build_kernel_bench("hadamard", m, k, 0),
+                      args.out, manifest, "kernel")
+        for m, k in [(4096, 64), (4096, 256)]:
+            lower_one(f"kurtosis_{m}x{k}", *build_kernel_bench("kurtosis", m, k, 0),
+                      args.out, manifest, "kernel")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts → {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

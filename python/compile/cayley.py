@@ -1,0 +1,93 @@
+"""Kurtosis loss + Cayley-Adam step on the Stiefel manifold (L2 graphs).
+
+This is the optimization core of KurTail (paper §3 "Learning the Rotations",
+"Optimization in the Orthogonal Space"): rotations are optimized with a
+Cayley-transform Adam (Li et al. 2020) so every iterate stays orthogonal,
+and the loss is the mean per-token distance of the activation kurtosis to
+the uniform distribution's kurtosis κ_u = 1.8.
+
+The whole step is a single AOT artifact (`kurtail_step_d{D}`): the Rust
+driver owns the loop — shuffling captured activations, feeding batches,
+tracking convergence — and this graph does one (loss, grad, Cayley-Adam
+update) step.
+
+Constraints: no jnp.linalg (LAPACK custom calls don't exist in the Rust
+PJRT client). The Cayley retraction uses a fixed-point iteration (pure
+matmuls) and orthogonality drift is killed with one Newton–Schulz pass
+per step (also pure matmuls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import KURTOSIS_UNIFORM, kurtosis_ref
+
+B1, B2, EPS = 0.9, 0.99, 1e-8  # Adam constants
+CAYLEY_ITERS = 2               # fixed-point iterations of the retraction
+
+
+def kurtail_loss(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """L = mean_tokens |κ(x_i · R) − κ_u|.
+
+    ``x`` rows are the (already norm-and-γ-scaled) block inputs the Rust
+    capture stage stored; per-token kurtosis is the quantity that matters
+    for per-token dynamic quantization.
+    """
+    y = x @ r
+    return jnp.mean(jnp.abs(kurtosis_ref(y) - KURTOSIS_UNIFORM))
+
+
+def _newton_schulz(r: jnp.ndarray) -> jnp.ndarray:
+    """One Newton–Schulz orthogonalization pass: R(3I − RᵀR)/2.
+
+    Quadratically contracts ‖RᵀR − I‖ when R is already near-orthogonal —
+    exactly the regime after a truncated Cayley retraction.
+    """
+    d = r.shape[0]
+    return 0.5 * r @ (3.0 * jnp.eye(d, dtype=r.dtype) - r.T @ r)
+
+
+def cayley_adam_step(loss_fn, r, m, v, lr, t):
+    """One Cayley-Adam step minimizing ``loss_fn(R)`` over orthogonal R.
+
+    Follows Li et al. 2020 in structure: Adam first moment on the euclidean
+    gradient, scalar second moment (gradient norm), skew-symmetric
+    projection W = ĜRᵀ − RĜᵀ, then the Cayley retraction
+    R' = (I + a W)⁻¹ (I − a W) R, a = lr/2, approximated by fixed-point
+    iteration  Y ← R − a·W·(R + Y).
+
+    Args:
+      loss_fn: R → scalar loss.
+      r: (D, D) current rotation.  m: (D, D) first moment.  v: scalar second
+      moment.  lr: scalar learning rate.  t: scalar step count (1-based).
+    Returns: (r', m', v', loss).
+    """
+    loss, g = jax.value_and_grad(loss_fn)(r)
+    m = B1 * m + (1.0 - B1) * g
+    v = B2 * v + (1.0 - B2) * jnp.sum(g * g)
+    mhat = m / (1.0 - B1**t)
+    vhat = v / (1.0 - B2**t)
+    ghat = mhat / (jnp.sqrt(vhat) + EPS)
+
+    w = ghat @ r.T - r @ ghat.T  # skew-symmetric descent direction
+    a = lr / 2.0
+    y = r - (2.0 * a) * (w @ r)  # first-order init
+    for _ in range(CAYLEY_ITERS):
+        y = r - a * (w @ (r + y))
+    r_new = _newton_schulz(y)
+    return r_new, m, v, loss
+
+
+def make_kurtail_step(d: int):
+    """Build the jittable kurtail_step for dimension ``d``.
+
+    Signature: (r[d,d], m[d,d], v[], x[N,d], lr[], t[]) →
+               (r', m', v', loss).
+    """
+
+    def step(r, m, v, x, lr, t):
+        return cayley_adam_step(lambda rr: kurtail_loss(x, rr), r, m, v, lr, t)
+
+    return step

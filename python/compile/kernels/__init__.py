@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Import surface used by the L2 model:
+
+    from compile.kernels import quant_matmul, fwht, kurtosis
+"""
+
+from .hadamard import fwht
+from .kurtosis import kurtosis
+from .quant_matmul import quant_matmul
+
+__all__ = ["quant_matmul", "fwht", "kurtosis"]

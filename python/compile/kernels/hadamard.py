@@ -1,0 +1,61 @@
+"""Blocked fast Walsh–Hadamard transform (FWHT) Pallas kernel.
+
+The online rotations R3/R4/R5 of the paper are random Hadamard transforms
+applied on the inference hot path (to Q/K heads after RoPE, to attention
+output heads, and to the FFN intermediate). A dense matmul by H_n costs
+O(n²) per token; the butterfly FWHT costs O(n log n) and needs no matrix in
+memory — this kernel is the TPU analog of QuaRot's warp-shuffle CUDA
+Hadamard (DESIGN.md §Hardware-Adaptation): each program holds a (bm, n) tile
+in VMEM and performs log2(n) in-register butterfly passes on the VPU.
+
+Output equals ``x @ (H_n / sqrt(n))`` with H_n the Sylvester Hadamard
+matrix (validated against ref.fwht_ref).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[...]  # (bm, n)
+    bm = x.shape[0]
+    h = 1
+    # log2(n) butterfly passes, statically unrolled (n is compile-time).
+    while h < n:
+        xr = x.reshape(bm, n // (2 * h), 2, h)
+        a = xr[:, :, 0, :]
+        b = xr[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(bm, n)
+        h *= 2
+    o_ref[...] = x * (1.0 / jnp.sqrt(jnp.float32(n)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def fwht(x: jnp.ndarray, block_m: int = 256) -> jnp.ndarray:
+    """Apply the normalized Hadamard transform along the last axis.
+
+    Last axis must be a power of two (all rotated dims in this repo are:
+    d_head, d_model, d_ff are chosen as 2^k — see config presets).
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT dim {n} must be a power of two"
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    bm = min(block_m, max(8, m))
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((x2.shape[0], n), jnp.float32),
+        grid=(x2.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    return out[:m].reshape(x.shape)

@@ -1,0 +1,112 @@
+"""Fused per-token-quantize + matmul Pallas kernel (the W4A4 hot path).
+
+This is the compute hot-spot of every rotated-and-quantized linear layer in
+the paper's inference path: the activation matrix is dynamically quantized
+per token (symmetric, k-bit, optional quantile clip — paper §4 uses 4 bits,
+clip 0.98) and immediately multiplied by the (offline-quantized) weight.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles M×N output
+blocks; each program stages an (bm, K) activation stripe and a (K, bn)
+weight stripe in VMEM, computes the per-token scale as a row-local VPU
+reduction, quantizes in-register, and feeds the MXU with a single
+``jnp.dot``. The CUDA equivalent in QuaRot's kernels does the same staging
+with threadblocks/shared memory.
+
+Runs with ``interpret=True`` everywhere in this repo (CPU PJRT); real-TPU
+lowering would emit a Mosaic custom call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import sym_qmax
+
+
+def _quant_matmul_kernel(x_ref, w_ref, o_ref, *, bits: int, clip_quantile: float | None):
+    """One (bm, bn) output tile: per-row quantize x stripe, then MXU matmul."""
+    x = x_ref[...]  # (bm, K) — full reduction dim so the row scale is exact
+    w = w_ref[...]  # (K, bn)
+    absx = jnp.abs(x)
+    if clip_quantile is not None and clip_quantile < 1.0:
+        # Row-quantile clip: sort each row (VPU) and linearly interpolate
+        # at static indices (clip_quantile is compile-time).
+        k = absx.shape[-1]
+        srt = jnp.sort(absx, axis=-1)
+        pos = clip_quantile * (k - 1)
+        lo = int(pos)
+        hi = min(lo + 1, k - 1)
+        frac = pos - lo
+        amax = srt[:, lo:lo + 1] * (1.0 - frac) + srt[:, hi:hi + 1] * frac
+    else:
+        amax = jnp.max(absx, axis=-1, keepdims=True)
+    qmax = float(sym_qmax(bits))
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    xq = q * scale
+    o_ref[...] = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "clip_quantile", "block_m", "block_n"))
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, bits: int = 4,
+                 clip_quantile: float | None = 0.98,
+                 block_m: int = 256, block_n: int = 256) -> jnp.ndarray:
+    # §Perf: 256×256 tiles quarter the grid size vs 128×128 for the
+    # model's matmul shapes while staying ≪ the 16 MiB VMEM budget
+    # (vmem_bytes(256,256,512) ≈ 2.6 MiB) — fewer program invocations
+    # dominate interpret-mode cost and raise estimated MXU utilization.
+    """``fake_quant_sym(x, bits, clip) @ w`` with per-token dynamic scales.
+
+    Accepts ``x`` of shape (..., K) and ``w`` of shape (K, N); leading axes
+    are flattened into the token axis M. Tiles are padded up to block
+    multiples and the result sliced back, so any M/N work.
+    """
+    orig_shape = x.shape
+    k = x.shape[-1]
+    assert w.shape[0] == k, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    x2 = x.reshape(-1, k)
+    m, n = x2.shape[0], w.shape[1]
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    xp = _pad_to(x2, 0, bm)
+    wp = _pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_quant_matmul_kernel, bits=bits, clip_quantile=clip_quantile),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n].reshape(*orig_shape[:-1], n)
+
+
+def vmem_bytes(block_m: int, block_n: int, k: int) -> int:
+    """Estimated VMEM residency of one program instance (f32 tiles).
+
+    x stripe (bm,K) + |x| working copy + sorted copy + w stripe (K,bn) +
+    out tile (bm,bn). Used by the §Perf block-size sweep against the 16 MiB
+    TPU VMEM budget.
+    """
+    f = 4
+    return f * (3 * block_m * k + k * block_n + block_m * block_n)

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every kernel in this package has a reference implementation here written with
+plain ``jax.numpy`` ops only — no pallas, no custom calls — so the pytest
+suite can assert the kernels bit-match (up to float tolerance) on CPU.
+
+These functions are also the semantic definition of the quantizers used by
+the L2 model (`compile.quant` re-exports them), so the L3 Rust quantizers are
+tested against the same oracle numbers via golden files.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sym_qmax(bits: int) -> int:
+    """Integer grid half-width for symmetric k-bit quantization: 2^(k-1)-1."""
+    return 2 ** (bits - 1) - 1
+
+
+def row_absmax_scale(x: jnp.ndarray, bits: int, clip_quantile: float | None = None) -> jnp.ndarray:
+    """Per-row (per-token) symmetric scale.
+
+    ``clip_quantile`` < 1.0 clips the dynamic range at that quantile of |x|
+    (paper setup: 0.98 for activations), which trades saturation of the few
+    largest values for a finer step everywhere else.
+    """
+    absx = jnp.abs(x)
+    if clip_quantile is not None and clip_quantile < 1.0:
+        # Static-index linear interpolation over a per-row sort. Equivalent
+        # to jnp.quantile(..., method="linear") but avoids gather ops whose
+        # vjp this jaxlib rejects, and static indices lower to plain slices.
+        k = absx.shape[-1]
+        srt = jnp.sort(absx, axis=-1)
+        pos = clip_quantile * (k - 1)
+        lo = int(pos)
+        hi = min(lo + 1, k - 1)
+        frac = pos - lo
+        amax = srt[..., lo:lo + 1] * (1.0 - frac) + srt[..., hi:hi + 1] * frac
+    else:
+        amax = jnp.max(absx, axis=-1, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / sym_qmax(bits)
+
+
+def fake_quant_sym(x: jnp.ndarray, bits: int, clip_quantile: float | None = None,
+                   axis: int = -1) -> jnp.ndarray:
+    """Symmetric fake-quantization (quantize → dequantize) along ``axis``.
+
+    axis=-1 → per-token (dynamic, activations); other axes are used for
+    per-channel weight quantization by moving that axis last.
+    """
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+    s = row_absmax_scale(x, bits, clip_quantile)
+    q = jnp.clip(jnp.round(x / s), -sym_qmax(bits), sym_qmax(bits))
+    y = q * s
+    if axis != -1:
+        y = jnp.moveaxis(y, -1, axis)
+    return y
+
+
+def fake_quant_asym(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Asymmetric (affine) fake-quantization along the last axis.
+
+    Used for KV-cache entries (paper §4): range [min, max] mapped onto
+    [0, 2^k - 1].
+    """
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    s = jnp.maximum(hi - lo, 1e-8) / (2**bits - 1)
+    q = jnp.clip(jnp.round((x - lo) / s), 0, 2**bits - 1)
+    return q * s + lo
+
+
+def quant_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, bits: int = 4,
+                     clip_quantile: float | None = 0.98) -> jnp.ndarray:
+    """Reference for the fused per-token-quant matmul kernel.
+
+    ``x`` is fake-quantized per row (token) symmetrically, then multiplied by
+    ``w`` (which the caller has already weight-quantized offline — RTN/GPTQ
+    happen in Rust; here w is used verbatim).
+    """
+    xq = fake_quant_sym(x, bits, clip_quantile)
+    return xq @ w
+
+
+def hadamard_matrix(n: int) -> jnp.ndarray:
+    """Normalized Sylvester Hadamard matrix H_n / sqrt(n); n must be 2^k."""
+    assert n & (n - 1) == 0 and n > 0, f"n={n} is not a power of two"
+    h = jnp.ones((1, 1), dtype=jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(jnp.float32(n))
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x @ (H_n / sqrt(n)) along the last axis via explicit matrix."""
+    return x @ hadamard_matrix(x.shape[-1])
+
+
+def kurtosis_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-row kurtosis κ = m4 / m2² (centred moments over the last axis).
+
+    κ of N(0,1) → 3, uniform → 1.8 (= 9/5), Laplace → 6. The KurTail loss
+    drives per-token activation kurtosis toward 1.8.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    c = x - mu
+    m2 = jnp.mean(c * c, axis=-1)
+    m4 = jnp.mean((c * c) * (c * c), axis=-1)
+    return m4 / jnp.maximum(m2 * m2, 1e-12)
+
+
+KURTOSIS_UNIFORM = 1.8  # κ_u: kurtosis of the uniform distribution (9/5)
+
+
+def kurtail_loss_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Mean per-token distance |κ(row) − κ_u| — the KurTail objective."""
+    return jnp.mean(jnp.abs(kurtosis_ref(x) - KURTOSIS_UNIFORM))

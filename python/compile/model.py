@@ -1,0 +1,516 @@
+"""L2 JAX model family: tiny-LLaMA / Phi-style / MoE transformers.
+
+These are the compute graphs the Rust coordinator executes after AOT
+lowering (compile/aot.py → artifacts/*.hlo.txt). Everything here must lower
+to plain HLO ops — no jnp.linalg / LAPACK custom calls.
+
+Model family (DESIGN.md §2 substitutions):
+  * ``llama`` — RMSNorm, RoPE, SwiGLU, pre-norm residual, untied head.
+  * ``phi``   — same attention, GELU MLP without gate (Phi-3 stand-in).
+  * ``moe``   — top-2 routed expert SwiGLU FFN (Mixtral stand-in).
+
+Parameters are stacked across layers (``wq[L,d,d]`` …) and the forward
+``lax.scan``s over the stack; Rust owns per-layer slicing for rotation
+fusion / GPTQ and feeds single-layer slices to the capture graph.
+
+Rotation protocol (paper Fig. 3):
+  * R1 (residual stream) and R2 (per-head V) are fused OFFLINE into the
+    weights by the Rust coordinator — the graphs never see them.
+  * R3/R4/R5 are ONLINE rotations passed as inputs to the quantized graphs;
+    identity matrices disable them. Their inverses are pre-fused by Rust
+    (R4ᵀ into Wo, R5ᵀ into Wdown; R3 self-cancels in QᵀK).
+  * RMSNorm γ must be pre-folded into adjacent weights for the quantized /
+    spinquant graphs (pass γ = 1) — rotation invariance of RMSNorm only
+    holds for the weightless norm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant as Q
+from .cayley import cayley_adam_step
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------- configs
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 128
+    arch: str = "llama"       # llama | phi | moe
+    n_experts: int = 1
+    top_k: int = 2
+    rope_base: float = 10000.0
+    # artifact batch sizes (baked at lowering)
+    train_batch: int = 8
+    eval_batch: int = 8
+    cap_batch: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: All rotated dims are powers of two so online Hadamard (FWHT) applies.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=4, d_ff=128,
+                        seq_len=64, train_batch=8, eval_batch=8, cap_batch=4),
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4, d_ff=256,
+                         seq_len=128),
+    "base": ModelConfig("base", d_model=256, n_layers=6, n_heads=8, d_ff=512,
+                        seq_len=128),
+    "phi": ModelConfig("phi", d_model=128, n_layers=4, n_heads=4, d_ff=256,
+                       seq_len=128, arch="phi"),
+    "moe": ModelConfig("moe", d_model=128, n_layers=4, n_heads=4, d_ff=128,
+                       seq_len=128, arch="moe", n_experts=4, top_k=2),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) order — the artifact ABI shared with Rust."""
+    L, d, ff, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (V, d)),
+        ("ln1", (L, d)),
+        ("wq", (L, d, d)),
+        ("wk", (L, d, d)),
+        ("wv", (L, d, d)),
+        ("wo", (L, d, d)),
+        ("ln2", (L, d)),
+    ]
+    if cfg.arch == "llama":
+        specs += [("wg", (L, d, ff)), ("wu", (L, d, ff)), ("wd", (L, ff, d))]
+    elif cfg.arch == "phi":
+        specs += [("wu", (L, d, ff)), ("wd", (L, ff, d))]
+    elif cfg.arch == "moe":
+        E = cfg.n_experts
+        specs += [
+            ("wr", (L, d, E)),
+            ("wg", (L, E, d, ff)),
+            ("wu", (L, E, d, ff)),
+            ("wd", (L, E, ff, d)),
+        ]
+    else:
+        raise ValueError(cfg.arch)
+    specs.append(("lnf", (d,)))
+    # Untied output head: required so lnf's γ and R1 can be fused into the
+    # head without touching the input embedding (see rotation protocol).
+    specs.append(("head", (V, d)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal init (numpy at build time; Rust mirrors this)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    p: Params = {}
+    for name, shape in param_specs(cfg):
+        if name.startswith("ln"):
+            p[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("embed", "head"):
+            p[name] = jnp.asarray(rng.normal(0, 0.02, shape), jnp.float32)
+        else:
+            fan_in = shape[-2]
+            std = 1.0 / np.sqrt(fan_in)
+            if name in ("wo", "wd"):  # residual-output scaling
+                std /= np.sqrt(2.0 * cfg.n_layers)
+            p[name] = jnp.asarray(rng.normal(0, std, shape), jnp.float32)
+    return p
+
+
+# ------------------------------------------------------------- primitives
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def rope_tables(cfg: ModelConfig, t: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dh = cfg.d_head
+    inv = cfg.rope_base ** (-jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+    pos = jnp.arange(t, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]          # (T, dh/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, H, dh); cos/sin: (T, dh/2)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _gelu(x):
+    # tanh approximation — avoids erf availability questions in old PJRT
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x * x * x)))
+
+
+# -------------------------------------------------------------- attention
+
+
+def _heads(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    return x.reshape(b, t, h, d // h)
+
+
+def _unheads(x: jnp.ndarray) -> jnp.ndarray:
+    b, t, h, dh = x.shape
+    return x.reshape(b, t, h * dh)
+
+
+def attention(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
+              q: Q.QuantConfig | None, r3, r4,
+              fq_act, fq_kv) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Multi-head attention block. Returns (output, captures).
+
+    ``fq_act``/``fq_kv`` are the fake-quant functions (STE or plain) so the
+    same graph serves eval and spinquant training.
+    """
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    z = rmsnorm(x, lp["ln1"])
+
+    wqkv = jnp.concatenate([lp["wq"], lp["wk"], lp["wv"]], axis=1)  # (d, 3d)
+    if q is not None and q.use_pallas and fq_act is Q.act_fake_quant:
+        qkv = Q.act_matmul(z, wqkv, q)
+    else:
+        qkv = fq_act(z, q) @ wqkv if q is not None else z @ wqkv
+    qh = _heads(qkv[..., :d], h)
+    kh = _heads(qkv[..., d:2 * d], h)
+    vh = _heads(qkv[..., 2 * d:], h)
+
+    cos, sin = rope_tables(cfg, t)
+    qh = apply_rope(qh, cos, sin)
+    kh = apply_rope(kh, cos, sin)
+    if r3 is not None:  # online rotation; cancels in QᵀK, improves K-cache quant
+        qh = qh @ r3
+        kh = kh @ r3
+
+    # KV-cache quantization (asymmetric per token/head row)
+    kh = fq_kv(kh, q)
+    vh = fq_kv(vh, q)
+    qh = fq_act(qh, q) if q is not None else qh
+
+    scores = jnp.einsum("bihe,bjhe->bhij", qh, kh) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    oh = jnp.einsum("bhij,bjhe->bihe", probs, vh)  # (B,T,H,dh)
+    if r4 is not None:
+        oh = oh @ r4
+    attn_out = _unheads(oh)
+    if q is not None and q.use_pallas and fq_act is Q.act_fake_quant:
+        out = Q.act_matmul(attn_out, lp["wo"], q)
+    else:
+        out = (fq_act(attn_out, q) if q is not None else attn_out) @ lp["wo"]
+    caps = {"v_heads": vh, "attn_out": attn_out}
+    return out, caps
+
+
+# -------------------------------------------------------------------- FFN
+
+
+def ffn(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
+        q: Q.QuantConfig | None, r5, fq_act) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    z = rmsnorm(x, lp["ln2"])
+    if cfg.arch == "llama":
+        wgu = jnp.concatenate([lp["wg"], lp["wu"]], axis=1)  # (d, 2ff)
+        if q is not None and q.use_pallas and fq_act is Q.act_fake_quant:
+            gu = Q.act_matmul(z, wgu, q)
+        else:
+            gu = (fq_act(z, q) if q is not None else z) @ wgu
+        g, u = gu[..., : cfg.d_ff], gu[..., cfg.d_ff:]
+        mid = _silu(g) * u
+        if r5 is not None:
+            mid = mid @ r5
+        if q is not None and q.use_pallas and fq_act is Q.act_fake_quant:
+            out = Q.act_matmul(mid, lp["wd"], q)
+        else:
+            out = (fq_act(mid, q) if q is not None else mid) @ lp["wd"]
+        return out, {"ffn_mid": mid}
+    if cfg.arch == "phi":
+        if q is not None and q.use_pallas and fq_act is Q.act_fake_quant:
+            u = Q.act_matmul(z, lp["wu"], q)
+        else:
+            u = (fq_act(z, q) if q is not None else z) @ lp["wu"]
+        mid = _gelu(u)
+        if r5 is not None:
+            mid = mid @ r5
+        if q is not None and q.use_pallas and fq_act is Q.act_fake_quant:
+            out = Q.act_matmul(mid, lp["wd"], q)
+        else:
+            out = (fq_act(mid, q) if q is not None else mid) @ lp["wd"]
+        return out, {"ffn_mid": mid}
+    if cfg.arch == "moe":
+        # Router in fp (tiny); experts computed densely, gated top-k.
+        # NOTE: no jax.lax.top_k here — it lowers to the HLO `topk` op,
+        # which the Rust side's HLO-text parser (xla_extension 0.5.1)
+        # rejects. Iterated argmax + one_hot lowers to plain reduces.
+        logits = z @ lp["wr"]                        # (B,T,E)
+        masked = logits
+        onehots, gates = [], []
+        for _ in range(cfg.top_k):
+            idx = jnp.argmax(masked, axis=-1)
+            oh = jax.nn.one_hot(idx, cfg.n_experts, dtype=logits.dtype)
+            onehots.append(oh)
+            gates.append(jnp.sum(logits * oh, axis=-1))
+            masked = masked - oh * 1e9
+        gate = jax.nn.softmax(jnp.stack(gates, axis=-1), axis=-1)  # (B,T,k)
+        sel = jnp.stack(onehots, axis=2)                           # (B,T,k,E)
+        weights = jnp.einsum("btk,btke->bte", gate, sel)           # (B,T,E)
+        zq = fq_act(z, q) if q is not None else z
+        g = jnp.einsum("btd,edf->btef", zq, lp["wg"])
+        u = jnp.einsum("btd,edf->btef", zq, lp["wu"])
+        mid = _silu(g) * u                           # (B,T,E,ff)
+        if r5 is not None:
+            mid = mid @ r5
+        midq = fq_act(mid, q) if q is not None else mid
+        outs = jnp.einsum("btef,efd->bted", midq, lp["wd"])
+        out = jnp.einsum("bte,bted->btd", weights, outs)
+        return out, {"ffn_mid": mid.reshape(*mid.shape[:2], -1)}
+    raise ValueError(cfg.arch)
+
+
+# ----------------------------------------------------------- full forward
+
+
+NON_LAYER_PARAMS = ("embed", "lnf", "head")
+
+
+def _layer_params(cfg: ModelConfig, params: Params) -> Params:
+    names = [n for n, _ in param_specs(cfg) if n not in NON_LAYER_PARAMS]
+    return {n: params[n] for n in names}
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            q: Q.QuantConfig | None = None,
+            r3=None, r4=None, r5=None, ste: bool = False) -> jnp.ndarray:
+    """Full forward → logits (B, T, V). Tied embedding head (fp)."""
+    fq_act = Q.act_fake_quant_ste if ste else Q.act_fake_quant
+    fq_kv = Q.kv_fake_quant_ste if ste else Q.kv_fake_quant
+    x = params["embed"][tokens]  # (B,T,d)
+
+    layer_stack = _layer_params(cfg, params)
+
+    def body(x, lp):
+        a, _ = attention(cfg, lp, x, q, r3, r4, fq_act, fq_kv)
+        xh = x + a
+        f, _ = ffn(cfg, lp, xh, q, r5, fq_act)
+        return xh + f, None
+
+    x, _ = jax.lax.scan(body, x, layer_stack)
+    x = rmsnorm(x, params["lnf"])
+    return x @ params["head"].T
+
+
+def nll_per_seq(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                mask: jnp.ndarray, **kw) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked next-token NLL per sequence.
+
+    mask[b, t] weights the prediction of tokens[b, t] from prefix < t
+    (mask[:, 0] is ignored). Returns (nll_sum[B], count[B]) — perplexity is
+    exp(Σnll/Σcount); option scoring compares nll sums (lm-eval semantics).
+    """
+    logits = forward(cfg, params, tokens, **kw)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return -jnp.sum(ll * m, axis=-1), jnp.sum(m, axis=-1)
+
+
+# ------------------------------------------------------------ train step
+
+
+def adam_train_step(cfg: ModelConfig, params: Params, m: Params, v: Params,
+                    tokens: jnp.ndarray, lr: jnp.ndarray, t: jnp.ndarray):
+    """One Adam step on mean next-token NLL (fp graph, for the e2e trainer)."""
+
+    def loss_fn(p):
+        logits = forward(cfg, p, tokens)
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    loss, g = jax.value_and_grad(loss_fn)(params)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_m[k] = b1 * m[k] + (1 - b1) * g[k]
+        new_v[k] = b2 * v[k] + (1 - b2) * g[k] * g[k]
+        mh = new_m[k] / (1 - b1**t)
+        vh = new_v[k] / (1 - b2**t)
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_p, new_m, new_v, loss
+
+
+# --------------------------------------------------- layer-wise capture
+
+
+def embed_fwd(cfg: ModelConfig, embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return embed[tokens]
+
+
+def layer_fwd_cap(cfg: ModelConfig, lp: Params, x: jnp.ndarray):
+    """Single-layer fp forward with activation taps (layer-wise inference).
+
+    Returns (y, ffn_in, v_heads, attn_out, ffn_mid):
+      * MHSA block input is ``x`` itself (the caller already holds it).
+      * ffn_in — residual stream entering the FFN block (pre-norm).
+      * v_heads — V activations (B,T,H,dh) for learning R2.
+      * attn_out — Wo input (for its GPTQ Hessian).
+      * ffn_mid — Wdown input (for its GPTQ Hessian).
+    """
+    a, caps_a = attention(cfg, lp, x, None, None, None, Q.act_fake_quant, Q.kv_fake_quant)
+    xh = x + a
+    f, caps_f = ffn(cfg, lp, xh, None, None, Q.act_fake_quant)
+    y = xh + f
+    return y, xh, caps_a["v_heads"], caps_a["attn_out"], caps_f["ffn_mid"]
+
+
+def final_nll_from_hidden(cfg: ModelConfig, x: jnp.ndarray, lnf: jnp.ndarray,
+                          head: jnp.ndarray, tokens: jnp.ndarray, mask: jnp.ndarray):
+    """NLL head for layer-wise evaluation pipelines (x = last hidden)."""
+    xf = rmsnorm(x, lnf)
+    logits = xf @ head.T
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return -jnp.sum(ll * m, axis=-1), jnp.sum(m, axis=-1)
+
+
+# ------------------------------------------------------- spinquant-lite
+
+
+def spinquant_step(cfg: ModelConfig, params: Params, r1: jnp.ndarray,
+                   m: jnp.ndarray, v: jnp.ndarray, tokens: jnp.ndarray,
+                   lr: jnp.ndarray, t: jnp.ndarray):
+    """SpinQuant-lite: one Cayley-Adam step on end-to-end CE w.r.t. R1.
+
+    The residual stream stays unrotated; every rotated-quantized linear
+    input z is replaced by STE(fq(z·R1))·R1ᵀ so quantization noise lives in
+    the rotated basis while weights stay fixed. This is the end-to-end-loss
+    baseline whose memory cost KurTail's layer-wise training undercuts —
+    the whole model + backprop graph must be alive here (paper §3
+    "Training Cost").
+
+    Requires γ pre-folded (weightless norms): rmsnorm(x)·R1 == rmsnorm(x·R1).
+    """
+    q = Q.QuantConfig(use_pallas=False)
+
+    def loss_fn(r):
+        def rot_fq(z, qc):
+            if qc is None:
+                return z
+            if z.shape[-1] != r.shape[0]:
+                # head-dim / ff-dim activations are not in the R1 basis —
+                # plain STE fake-quant there (R3/R4/R5 territory).
+                return Q.act_fake_quant_ste(z, qc)
+            zr = z @ r
+            sg = jax.lax.stop_gradient(zr)
+            return Q.ste(zr, Q.act_fake_quant(sg, qc)) @ r.T
+
+        fq_kv = Q.kv_fake_quant_ste
+        x = params["embed"][tokens]
+        layer_stack = _layer_params(cfg, params)
+
+        def body(x, lp):
+            a, _ = attention(cfg, lp, x, q, None, None, rot_fq, fq_kv)
+            xh = x + a
+            f, _ = ffn(cfg, lp, xh, q, None, rot_fq)
+            return xh + f, None
+
+        x, _ = jax.lax.scan(body, x, layer_stack)
+        x = rmsnorm(x, params["lnf"])
+        logits = x @ params["head"].T
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    return cayley_adam_step(loss_fn, r1, m, v, lr, t)
+
+
+# ------------------------------------------------------------ decode step
+
+
+def decode_step(cfg: ModelConfig, params: Params,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                token: jnp.ndarray, pos: jnp.ndarray,
+                q: Q.QuantConfig | None = None, r3=None, r4=None, r5=None):
+    """Single-token autoregressive step with (optionally 4-bit) KV cache.
+
+    k_cache/v_cache: (L, B, Tmax, H, dh) — stored post-rotation, post
+    fake-quant (so the cache holds exactly what a real 4-bit cache would
+    dequantize to). token: (B,) int32. pos: () int32 — number of tokens
+    already in the cache. Returns (logits[B,V], k_cache', v_cache').
+    """
+    b = token.shape[0]
+    h, dh, tmax = cfg.n_heads, cfg.d_head, k_cache.shape[2]
+    fq_act, fq_kv = Q.act_fake_quant, Q.kv_fake_quant
+
+    x = params["embed"][token][:, None, :]  # (B,1,d)
+    layer_stack = _layer_params(cfg, params)
+
+    cos_t, sin_t = rope_tables(cfg, tmax)
+    cos = jax.lax.dynamic_slice_in_dim(cos_t, pos, 1, axis=0)
+    sin = jax.lax.dynamic_slice_in_dim(sin_t, pos, 1, axis=0)
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        z = rmsnorm(x, lp["ln1"])
+        zq = fq_act(z, q) if q is not None else z
+        qh = _heads(zq @ lp["wq"], h)
+        kh = _heads(zq @ lp["wk"], h)
+        vh = _heads(zq @ lp["wv"], h)
+        qh = apply_rope(qh, cos, sin)
+        kh = apply_rope(kh, cos, sin)
+        if r3 is not None:
+            qh, kh = qh @ r3, kh @ r3
+        kh = fq_kv(kh, q)
+        vh = fq_kv(vh, q)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kh, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vh, pos, axis=1)
+        qh = fq_act(qh, q) if q is not None else qh
+        scores = jnp.einsum("bihe,bjhe->bhij", qh, kc) / jnp.sqrt(jnp.float32(dh))
+        valid = (jnp.arange(tmax) <= pos).astype(jnp.float32)
+        scores = jnp.where(valid[None, None, None, :] > 0, scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        oh = jnp.einsum("bhij,bjhe->bihe", probs, vc)
+        if r4 is not None:
+            oh = oh @ r4
+        ao = _unheads(oh)
+        a = (fq_act(ao, q) if q is not None else ao) @ lp["wo"]
+        xh = x + a
+        f, _ = ffn(cfg, lp, xh, q, r5, fq_act)
+        return xh + f, (kc, vc)
+
+    x, (kc_new, vc_new) = jax.lax.scan(body, x, (layer_stack, k_cache, v_cache))
+    x = rmsnorm(x, params["lnf"])
+    logits = (x @ params["head"].T)[:, 0, :]
+    return logits, kc_new, vc_new

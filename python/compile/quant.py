@@ -1,0 +1,88 @@
+"""L2 quantization simulation (fake-quant) used inside the AOT model graphs.
+
+Paper setup (§4):
+  * activations — per-token dynamic symmetric 4-bit, quantile clip 0.98
+  * KV cache    — per-token asymmetric 4-bit
+  * weights     — per-channel symmetric (RTN/GPTQ), done OFFLINE in Rust;
+                  the graphs receive already-fake-quantized weights.
+
+IMPORTANT CONSTRAINT for everything in this module: it must lower to plain
+HLO ops (no jnp.linalg / LAPACK custom calls) so the Rust PJRT CPU client
+(xla_extension 0.5.1) can execute the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant_matmul as _pallas_quant_matmul
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization configuration baked into an artifact at lowering."""
+
+    a_bits: int = 4              # activation bits (per-token symmetric)
+    kv_bits: int = 4             # KV-cache bits (per-token asymmetric)
+    clip_quantile: float = 0.98  # activation dynamic-range clip
+    use_pallas: bool = True      # quantized matmuls through the L1 kernel
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+
+#: sentinel for full-precision graphs
+FP = None
+
+
+def act_matmul(x: jnp.ndarray, w: jnp.ndarray, q: QuantConfig | None) -> jnp.ndarray:
+    """Linear layer input-quantized matmul: fq(x) @ w (or plain x @ w)."""
+    if q is None:
+        return x @ w
+    if q.use_pallas:
+        return _pallas_quant_matmul(x, w, bits=q.a_bits, clip_quantile=q.clip_quantile)
+    return ref.quant_matmul_ref(x, w, bits=q.a_bits, clip_quantile=q.clip_quantile)
+
+
+def act_fake_quant(x: jnp.ndarray, q: QuantConfig | None) -> jnp.ndarray:
+    """Standalone per-token symmetric activation fake-quant."""
+    if q is None:
+        return x
+    return ref.fake_quant_sym(x, q.a_bits, q.clip_quantile)
+
+
+def kv_fake_quant(x: jnp.ndarray, q: QuantConfig | None) -> jnp.ndarray:
+    """Per-token asymmetric KV-cache fake-quant (last axis = head dim)."""
+    if q is None:
+        return x
+    return ref.fake_quant_asym(x, q.kv_bits)
+
+
+def ste(x: jnp.ndarray, fq_of_sg_x: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward fq(x), backward identity.
+
+    Callers must compute ``fq_of_sg_x`` on ``stop_gradient(x)`` — this both
+    implements the STE and keeps tangents out of the sort/round ops (the
+    sort jvp is unavailable in this jaxlib). Used only by the
+    SpinQuant-lite training step.
+    """
+    return x + jax.lax.stop_gradient(fq_of_sg_x) - jax.lax.stop_gradient(x)
+
+
+def act_fake_quant_ste(x: jnp.ndarray, q: QuantConfig | None) -> jnp.ndarray:
+    if q is None:
+        return x
+    sg = jax.lax.stop_gradient(x)
+    return ste(x, ref.fake_quant_sym(sg, q.a_bits, q.clip_quantile))
+
+
+def kv_fake_quant_ste(x: jnp.ndarray, q: QuantConfig | None) -> jnp.ndarray:
+    if q is None:
+        return x
+    sg = jax.lax.stop_gradient(x)
+    return ste(x, ref.fake_quant_asym(sg, q.kv_bits))

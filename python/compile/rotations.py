@@ -1,0 +1,42 @@
+"""Build-time rotation utilities (numpy-side; never lowered into artifacts).
+
+The Rust coordinator owns rotation *construction and fusion* at runtime; the
+functions here exist for python-side tests (rotation-invariance of the fp
+model, Cayley step orthogonality) and for generating golden files the Rust
+tests compare against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Normalized Sylvester Hadamard matrix (n must be a power of two)."""
+    assert n & (n - 1) == 0 and n > 0
+    h = np.ones((1, 1), dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(n)).astype(np.float32)
+
+
+def random_hadamard(n: int, seed: int) -> np.ndarray:
+    """QuaRot-style random Hadamard rotation: H · diag(±1) with random signs."""
+    rng = np.random.default_rng(seed)
+    signs = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    return hadamard_matrix(n) * signs[None, :]
+
+
+def random_orthogonal(n: int, seed: int) -> np.ndarray:
+    """Haar-ish random orthogonal matrix via QR (build-time numpy only)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, n))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))[None, :]
+    return q.astype(np.float32)
+
+
+def orthogonality_error(r: np.ndarray) -> float:
+    """max |RᵀR − I| — used by tests to bound Cayley-retraction drift."""
+    n = r.shape[0]
+    return float(np.max(np.abs(r.T @ r - np.eye(n, dtype=r.dtype))))

@@ -1,0 +1,75 @@
+"""Cayley-Adam on the Stiefel manifold + kurtosis loss (KurTail's core)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import cayley
+from compile.kernels.ref import fwht_ref, kurtail_loss_ref
+from compile.rotations import orthogonality_error, random_orthogonal
+
+settings.register_profile("cayley", deadline=None, max_examples=10, derandomize=True)
+settings.load_profile("cayley")
+
+
+def run_steps(X, d, n_steps, lr=0.1, r0=None):
+    step = jax.jit(cayley.make_kurtail_step(d))
+    r = jnp.eye(d) if r0 is None else jnp.asarray(r0)
+    m = jnp.zeros((d, d))
+    v = jnp.float32(0.0)
+    losses = []
+    for t in range(n_steps):
+        r, m, v, loss = step(r, m, v, X, jnp.float32(lr), jnp.float32(t + 1))
+        losses.append(float(loss))
+    return np.asarray(r), losses
+
+
+@given(d=st.sampled_from([16, 32, 64]), seed=st.integers(0, 1000))
+def test_step_preserves_orthogonality(d, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.laplace(size=(512, d)), jnp.float32)
+    r, _ = run_steps(X, d, 20, lr=0.2, r0=random_orthogonal(d, seed))
+    assert orthogonality_error(r) < 1e-4
+
+
+def test_loss_decreases_on_laplace():
+    X = jnp.asarray(np.random.default_rng(0).laplace(size=(2048, 64)), jnp.float32)
+    _, losses = run_steps(X, 64, 60)
+    assert losses[-1] < losses[0] * 0.75
+
+
+def test_learned_beats_random_hadamard():
+    """Paper Table 1 mechanism: KurTail's learned rotation reaches lower
+    kurtosis distance than QuaRot's random Hadamard."""
+    X = jnp.asarray(np.random.default_rng(1).laplace(size=(2048, 64)), jnp.float32)
+    _, losses = run_steps(X, 64, 100)
+    had = float(kurtail_loss_ref(fwht_ref(X)))
+    assert losses[-1] < had
+
+
+def test_identity_rotation_is_stationary_on_uniformish_data():
+    """Already-uniform per-token data → tiny gradient, R stays near I."""
+    X = jnp.asarray(np.random.default_rng(2).uniform(-1, 1, size=(2048, 64)), jnp.float32)
+    r, losses = run_steps(X, 64, 10, lr=0.05)
+    assert losses[0] < 0.2
+    assert np.max(np.abs(r - np.eye(64))) < 0.15
+
+
+def test_outlier_channel_gets_mixed_away():
+    """A synthetic outlier channel (the Fig. 2 setting): after optimization
+    the per-token max shrinks for almost all tokens (Table 1 success rate)."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(2048, 64)).astype(np.float32)
+    X[:, 5] *= 25.0
+    r, _ = run_steps(jnp.asarray(X), 64, 80)
+    Xr = X @ r
+    success = np.mean(np.max(np.abs(Xr), -1) < np.max(np.abs(X), -1))
+    assert success > 0.95
+
+
+def test_newton_schulz_restores_orthogonality():
+    r = np.asarray(random_orthogonal(32, 0)) + 0.01 * np.random.default_rng(0).normal(size=(32, 32)).astype(np.float32)
+    r2 = np.asarray(cayley._newton_schulz(jnp.asarray(r)))
+    assert orthogonality_error(r2) < orthogonality_error(r)

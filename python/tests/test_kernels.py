@@ -1,0 +1,184 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; assert_allclose against ref.py. This is the
+core correctness signal for everything the Rust hot path executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import fwht, kurtosis, quant_matmul
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=12, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- quant_matmul
+
+
+@given(
+    m=st.sampled_from([1, 7, 32, 129]),
+    k=st.sampled_from([16, 64, 96]),
+    n=st.sampled_from([8, 48, 160]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    x = r.normal(size=(m, k)).astype(np.float32)
+    w = r.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_quant_matmul_bits_sweep(bits, seed):
+    r = rng(seed)
+    x = r.normal(size=(24, 32)).astype(np.float32)
+    w = r.normal(size=(32, 16)).astype(np.float32)
+    got = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w), bits=bits))
+    want = np.asarray(ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), bits=bits))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_no_clip():
+    r = rng(0)
+    x = r.normal(size=(16, 32)).astype(np.float32)
+    w = r.normal(size=(32, 16)).astype(np.float32)
+    got = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w), clip_quantile=None))
+    want = np.asarray(ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), clip_quantile=None))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_batched_input():
+    r = rng(1)
+    x = r.normal(size=(2, 5, 32)).astype(np.float32)
+    w = r.normal(size=(32, 24)).astype(np.float32)
+    got = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w)))
+    assert got.shape == (2, 5, 24)
+    want = np.asarray(ref.quant_matmul_ref(jnp.asarray(x).reshape(-1, 32), jnp.asarray(w)))
+    np.testing.assert_allclose(got.reshape(-1, 24), want, rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_outlier_row_saturates_not_explodes():
+    """A row with one huge outlier must still round-trip the bulk values:
+    the 0.98 quantile clip keeps the step size set by the bulk."""
+    x = np.ones((1, 100), dtype=np.float32) * 0.5
+    x[0, 0] = 1000.0
+    w = np.eye(100, dtype=np.float32)
+    y = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w)))
+    # bulk entries recovered within one quantization step of the clipped scale
+    assert abs(y[0, 50] - 0.5) < 0.15
+    # outlier saturates at roughly clip-quantile * qmax steps, far below 1000
+    assert y[0, 0] < 20.0
+
+
+def test_quant_matmul_block_sizes_equivalent():
+    r = rng(2)
+    x = r.normal(size=(64, 32)).astype(np.float32)
+    w = r.normal(size=(32, 64)).astype(np.float32)
+    a = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w), block_m=16, block_n=16))
+    b = np.asarray(quant_matmul(jnp.asarray(x), jnp.asarray(w), block_m=64, block_n=64))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- fwht
+
+
+@given(
+    m=st.sampled_from([1, 3, 32, 100]),
+    logn=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_matrix(m, logn, seed):
+    n = 2**logn
+    x = rng(seed).normal(size=(m, n)).astype(np.float32)
+    got = np.asarray(fwht(jnp.asarray(x)))
+    want = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_is_involution():
+    """H/sqrt(n) is orthogonal and symmetric → applying twice is identity."""
+    x = rng(3).normal(size=(17, 64)).astype(np.float32)
+    y = np.asarray(fwht(fwht(jnp.asarray(x))))
+    np.testing.assert_allclose(y, x, rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_preserves_norm():
+    x = rng(4).normal(size=(9, 128)).astype(np.float32)
+    y = np.asarray(fwht(jnp.asarray(x)))
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-4
+    )
+
+
+def test_fwht_rejects_non_power_of_two():
+    with pytest.raises(AssertionError):
+        fwht(jnp.ones((4, 12)))
+
+
+def test_fwht_flattens_outlier():
+    """A one-hot (extreme outlier channel) becomes perfectly flat — the
+    mechanism by which Hadamard rotations kill activation outliers."""
+    x = np.zeros((1, 64), dtype=np.float32)
+    x[0, 17] = 8.0
+    y = np.asarray(fwht(jnp.asarray(x)))
+    assert np.allclose(np.abs(y), 1.0)
+
+
+# ------------------------------------------------------------------ kurtosis
+
+
+@given(
+    m=st.sampled_from([1, 5, 64, 300]),
+    d=st.sampled_from([16, 64, 257]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kurtosis_matches_ref(m, d, seed):
+    x = rng(seed).normal(size=(m, d)).astype(np.float32)
+    got = np.asarray(kurtosis(jnp.asarray(x)))
+    want = np.asarray(ref.kurtosis_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_kurtosis_known_distributions():
+    r = rng(7)
+    d = 16384
+    gauss = r.normal(size=(1, d)).astype(np.float32)
+    unif = r.uniform(-1, 1, size=(1, d)).astype(np.float32)
+    lap = r.laplace(size=(1, d)).astype(np.float32)
+    kg = float(kurtosis(jnp.asarray(gauss))[0])
+    ku = float(kurtosis(jnp.asarray(unif))[0])
+    kl = float(kurtosis(jnp.asarray(lap))[0])
+    assert abs(kg - 3.0) < 0.3
+    assert abs(ku - 1.8) < 0.15
+    assert abs(kl - 6.0) < 1.2
+    assert ku < kg < kl  # uniform < normal < laplace ordering
+
+
+def test_kurtosis_batched_shape():
+    x = rng(8).normal(size=(2, 3, 32)).astype(np.float32)
+    assert kurtosis(jnp.asarray(x)).shape == (2, 3)
+
+
+def test_kurtail_loss_zero_only_near_uniform():
+    r = rng(9)
+    unif = r.uniform(-1, 1, size=(64, 4096)).astype(np.float32)
+    lap = r.laplace(size=(64, 4096)).astype(np.float32)
+    lu = float(ref.kurtail_loss_ref(jnp.asarray(unif)))
+    ll = float(ref.kurtail_loss_ref(jnp.asarray(lap)))
+    assert lu < 0.15
+    assert ll > 2.0

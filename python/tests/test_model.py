@@ -1,0 +1,201 @@
+"""L2 model family: shapes, invariances, training, decode-cache parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import quant as Q
+from compile.rotations import hadamard_matrix, random_hadamard, random_orthogonal
+
+
+def toks(cfg, b=2, t=16, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.integers(0, cfg.vocab, (b, t)), jnp.int32)
+
+
+@pytest.fixture(scope="module", params=["tiny", "phi", "moe"])
+def cfg_params(request):
+    cfg = M.PRESETS[request.param]
+    return cfg, M.init_params(cfg, 0)
+
+
+def test_forward_shapes(cfg_params):
+    cfg, p = cfg_params
+    lg = M.forward(cfg, p, toks(cfg))
+    assert lg.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_param_specs_cover_params(cfg_params):
+    cfg, p = cfg_params
+    specs = M.param_specs(cfg)
+    assert set(n for n, _ in specs) == set(p.keys())
+    for n, s in specs:
+        assert p[n].shape == s, n
+
+
+def test_quant_forward_close_to_fp(cfg_params):
+    """4-bit sim perturbs but does not destroy the logits of a random-init
+    model (the gap is what the pipeline measures on trained models)."""
+    cfg, p = cfg_params
+    t = toks(cfg)
+    fp = M.forward(cfg, p, t)
+    qt = M.forward(cfg, p, t, q=Q.QuantConfig(use_pallas=False))
+    rel = float(jnp.mean(jnp.abs(fp - qt)) / (jnp.mean(jnp.abs(fp)) + 1e-9))
+    assert rel < 1.0
+
+
+def test_online_rotations_identity_noop(cfg_params):
+    """Identity R3/R4/R5 must not change the quantized forward."""
+    cfg, p = cfg_params
+    t = toks(cfg)
+    q = Q.QuantConfig(use_pallas=False)
+    a = M.forward(cfg, p, t, q=q)
+    b = M.forward(cfg, p, t, q=q,
+                  r3=jnp.eye(cfg.d_head), r4=jnp.eye(cfg.d_head), r5=jnp.eye(cfg.d_ff))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_r3_cancels_in_fp_attention():
+    """R3 rotates Q and K identically → fp logits unchanged (QᵀR3ᵀR3K = QᵀK)."""
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 0)
+    t = toks(cfg)
+    r3 = jnp.asarray(random_hadamard(cfg.d_head, 7))
+    a = M.forward(cfg, p, t)
+    b = M.forward(cfg, p, t, r3=r3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def _fold_norms(cfg, p):
+    """Fold RMSNorm γ into the adjacent linears (γ → 1)."""
+    q = dict(p)
+    for nm, targets in (("ln1", ["wq", "wk", "wv"]), ("ln2", ["wg", "wu"] if cfg.arch == "llama" else ["wu"])):
+        g = q[nm]  # (L, d)
+        for t in targets:
+            q[t] = q[t] * g[:, :, None]
+        q[nm] = jnp.ones_like(g)
+    q["head"] = q["head"] * q["lnf"][None, :]
+    q["lnf"] = jnp.ones_like(q["lnf"])
+    return q
+
+
+def test_rmsnorm_fold_preserves_fp_forward():
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 42)
+    # make norms non-trivial
+    p = dict(p)
+    key = np.random.default_rng(1)
+    p["ln1"] = jnp.asarray(1.0 + 0.3 * key.normal(size=p["ln1"].shape), jnp.float32)
+    p["ln2"] = jnp.asarray(1.0 + 0.3 * key.normal(size=p["ln2"].shape), jnp.float32)
+    p["lnf"] = jnp.asarray(1.0 + 0.3 * key.normal(size=p["lnf"].shape), jnp.float32)
+    t = toks(cfg)
+    a = M.forward(cfg, p, t)
+    b = M.forward(cfg, _fold_norms(cfg, p), t)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+
+
+def _fuse_r1(cfg, p, r1):
+    """Fuse the residual-stream rotation R1 into a norm-folded param set.
+
+    This mirrors rust/src/rotation/fusion.rs and is the computational-
+    invariance theorem in executable form.
+    """
+    q = dict(p)
+    q["embed"] = p["embed"] @ r1
+    q["head"] = p["head"] @ r1
+    for w in ("wq", "wk", "wv"):
+        q[w] = jnp.einsum("ij,ljk->lik", r1.T, p[w])
+    q["wo"] = jnp.einsum("lij,jk->lik", p["wo"], r1)
+    if cfg.arch == "llama":
+        for w in ("wg", "wu"):
+            q[w] = jnp.einsum("ij,ljk->lik", r1.T, p[w])
+        q["wd"] = jnp.einsum("lij,jk->lik", p["wd"], r1)
+    return q
+
+
+def test_r1_fusion_is_invariant_in_fp():
+    """QuaRot/SliceGPT computational invariance: fp forward identical after
+    fusing any orthogonal R1 (norms pre-folded, tied head absorbs R1 via
+    embed)."""
+    cfg = M.PRESETS["tiny"]
+    p = _fold_norms(cfg, M.init_params(cfg, 3))
+    r1 = jnp.asarray(random_orthogonal(cfg.d_model, 11))
+    t = toks(cfg)
+    a = M.forward(cfg, p, t)
+    b = M.forward(cfg, _fuse_r1(cfg, p, r1), t)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-3)
+
+
+def test_nll_mask_semantics():
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 0)
+    t = toks(cfg, 2, 12)
+    full = jnp.ones((2, 12), jnp.float32)
+    half = full.at[:, 6:].set(0.0)
+    n_full, c_full = M.nll_per_seq(cfg, p, t, full)
+    n_half, c_half = M.nll_per_seq(cfg, p, t, half)
+    assert float(c_full[0]) == 11.0 and float(c_half[0]) == 5.0
+    assert np.all(np.asarray(n_half) <= np.asarray(n_full) + 1e-5)
+
+
+def test_train_step_learns_repetition():
+    """A few Adam steps on a repetitive sequence should drop NLL sharply."""
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 0)
+    t = jnp.tile(jnp.asarray([[3, 7, 3, 7, 3, 7, 3, 7]], jnp.int32), (4, 4))
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    step = jax.jit(lambda p, m, v, lr, tt: M.adam_train_step(cfg, p, m, v, t, lr, tt))
+    losses = []
+    for i in range(20):
+        p, m, v, loss = step(p, m, v, jnp.float32(3e-3), jnp.float32(i + 1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5
+
+
+def test_decode_matches_full_forward_fp():
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 0)
+    t = toks(cfg, 2, 6)
+    kc = jnp.zeros((cfg.n_layers, 2, 16, cfg.n_heads, cfg.d_head))
+    vc = jnp.zeros_like(kc)
+    for i in range(6):
+        lg, kc, vc = M.decode_step(cfg, p, kc, vc, t[:, i], jnp.int32(i))
+    full = M.forward(cfg, p, t)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]), rtol=1e-4, atol=1e-4)
+
+
+def test_layer_fwd_cap_chains_to_full_forward():
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 0)
+    t = toks(cfg)
+    x = M.embed_fwd(cfg, p["embed"], t)
+    names = [n for n, _ in M.param_specs(cfg) if n not in M.NON_LAYER_PARAMS]
+    caps = []
+    for l in range(cfg.n_layers):
+        lp = {n: p[n][l] for n in names}
+        x, ffn_in, vh, ao, fm = M.layer_fwd_cap(cfg, lp, x)
+        caps.append((ffn_in, vh, ao, fm))
+    nll, cnt = M.final_nll_from_hidden(cfg, x, p["lnf"], p["head"], t, jnp.ones(t.shape, jnp.float32))
+    nll2, cnt2 = M.nll_per_seq(cfg, p, t, jnp.ones(t.shape, jnp.float32))
+    np.testing.assert_allclose(np.asarray(nll), np.asarray(nll2), rtol=1e-4)
+    assert caps[0][1].shape == (2, 16, cfg.n_heads, cfg.d_head)
+
+
+def test_moe_router_selects_top_k():
+    cfg = M.PRESETS["moe"]
+    p = M.init_params(cfg, 0)
+    lg = M.forward(cfg, p, toks(cfg))
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_pallas_and_ref_quant_paths_agree():
+    cfg = M.PRESETS["tiny"]
+    p = M.init_params(cfg, 0)
+    t = toks(cfg, 2, 8)
+    a = M.forward(cfg, p, t, q=Q.QuantConfig(use_pallas=False))
+    b = M.forward(cfg, p, t, q=Q.QuantConfig(use_pallas=True))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,29 @@
+//! GPTQ benchmark: per-layer weight quantization cost vs RTN, including
+//! the Hessian preparation (Cholesky of H⁻¹). This is the dominant
+//! offline cost of every GPTQ table row.
+
+use kurtail::config::QuantScheme;
+use kurtail::quant::{gptq_quantize, rtn_quantize};
+use kurtail::quant::gptq::hessian_error;
+use kurtail::tensor::matmul::gram;
+use kurtail::tensor::Tensor;
+use kurtail::util::bench::Bench;
+use kurtail::util::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0);
+    let s = QuantScheme::weight4();
+
+    for (k, n) in [(64usize, 64usize), (128, 128), (256, 256), (256, 512)] {
+        let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+        let x = Tensor::randn(&[512, k], 1.0, &mut rng);
+        let h = gram(&x);
+        b.run(&format!("gptq_{k}x{n}"), || gptq_quantize(&w, &h, &s));
+        b.run(&format!("rtn_{k}x{n}"), || rtn_quantize(&w, &s));
+        // record the quality gap alongside the speed gap
+        let eg = hessian_error(&w, &gptq_quantize(&w, &h, &s), &h);
+        let er = hessian_error(&w, &rtn_quantize(&w, &s), &h);
+        println!("  quality: hessian-error gptq {eg:.5} vs rtn {er:.5} (ratio {:.2})", er / eg);
+    }
+}

@@ -1,0 +1,71 @@
+//! L1 kernel micro-benchmarks through the PJRT runtime: the standalone
+//! Pallas artifacts (quant_matmul, hadamard, kurtosis) at several sizes,
+//! plus the fused quantized NLL graph. Feeds EXPERIMENTS.md §Perf.
+
+use kurtail::runtime::{Runtime, Value};
+use kurtail::tensor::{IntTensor, Tensor};
+use kurtail::util::bench::Bench;
+use kurtail::util::Rng;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP kernels bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0);
+
+    for (m, k, n) in [(256usize, 128usize, 128usize), (512, 256, 256), (1024, 512, 512)] {
+        let name = format!("quant_matmul_{m}x{k}x{n}");
+        let art = rt.load(&name).expect("load");
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+        b.run(&format!("pjrt/{name}"), || {
+            art.run(&[Value::F32(x.clone()), Value::F32(w.clone())]).unwrap()
+        });
+    }
+
+    for (m, k) in [(1024usize, 64usize), (1024, 256), (4096, 512)] {
+        let name = format!("hadamard_{m}x{k}");
+        let art = rt.load(&name).expect("load");
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        b.run(&format!("pjrt/{name}"), || art.run(&[Value::F32(x.clone())]).unwrap());
+    }
+
+    for (m, k) in [(4096usize, 64usize), (4096, 256)] {
+        let name = format!("kurtosis_{m}x{k}");
+        let art = rt.load(&name).expect("load");
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        b.run(&format!("pjrt/{name}"), || art.run(&[Value::F32(x.clone())]).unwrap());
+    }
+
+    // whole quantized forward (the L2 hot graph) on the tiny config
+    let meta = rt.manifest.config("tiny").unwrap().clone();
+    let art = rt.load("fwd_nll_quant_tiny").expect("load");
+    let params: Vec<Value> = meta
+        .param_specs
+        .iter()
+        .map(|p| Value::F32(Tensor::randn(&p.shape, 0.05, &mut rng)))
+        .collect();
+    let tokens = IntTensor::new(
+        (0..meta.eval_batch * meta.seq_len).map(|i| (i % 250) as i32).collect(),
+        vec![meta.eval_batch, meta.seq_len],
+    );
+    let mask = Tensor::ones(&[meta.eval_batch, meta.seq_len]);
+    let mut inputs = params.clone();
+    inputs.push(Value::F32(Tensor::eye(meta.d_head)));
+    inputs.push(Value::F32(Tensor::eye(meta.d_head)));
+    inputs.push(Value::F32(Tensor::eye(meta.d_ff)));
+    inputs.push(Value::I32(tokens));
+    inputs.push(Value::F32(mask));
+    b.run("pjrt/fwd_nll_quant_tiny(b8xs64)", || art.run(&inputs).unwrap());
+
+    let fp = rt.load("fwd_nll_tiny").expect("load");
+    let mut fp_inputs = params;
+    fp_inputs.push(inputs[inputs.len() - 2].clone());
+    fp_inputs.push(inputs[inputs.len() - 1].clone());
+    b.run("pjrt/fwd_nll_tiny(b8xs64)", || fp.run(&fp_inputs).unwrap());
+}

@@ -1,0 +1,55 @@
+//! End-to-end pipeline stage benchmarks on the tiny config: training
+//! step, layer-wise capture, full method pipelines, evaluation calls.
+//! The table the §Perf pass optimizes against.
+
+use std::sync::Arc;
+
+use kurtail::config::{Method, PipelineConfig, WeightQuantizer};
+use kurtail::eval::perplexity;
+use kurtail::model::capture_stream;
+use kurtail::pipeline::Pipeline;
+use kurtail::rotation::fold_norms;
+use kurtail::runtime::Runtime;
+use kurtail::util::bench::Bench;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("SKIP pipeline bench: {e:#}");
+            return;
+        }
+    };
+    let mut b = Bench::quick();
+    let pipe = Pipeline::new(rt, "tiny", 0, true, false).expect("pipeline");
+
+    // layer-wise capture of one batch
+    let mut folded = pipe.fp_params.clone();
+    fold_norms(&mut folded);
+    let batches = pipe.bundle.calib_batches(kurtail::calib::CorpusKind::Wiki, 4, 4, 0);
+    b.run("capture_stream(1 batch, all layers)", || {
+        capture_stream(&pipe.rt, &folded, &batches[..1], |_| Ok(())).unwrap()
+    });
+
+    // full method pipelines (quantize only; eval separate)
+    for method in [Method::GptqOnly, Method::QuaRot, Method::KurTail] {
+        let mut cfg = PipelineConfig::new("tiny", method);
+        cfg.weight_quantizer = WeightQuantizer::Gptq;
+        cfg.calib.n_samples = 32;
+        cfg.calib.iters = 10;
+        b.run(&format!("pipeline_quantize/{}", method.label()), || {
+            pipe.quantize(&cfg).unwrap()
+        });
+    }
+
+    // evaluation calls
+    let fp = pipe.quantize(&PipelineConfig::new("tiny", Method::Fp16)).unwrap().0;
+    b.run("perplexity_fp(4 batches)", || perplexity(&pipe.rt, &fp, &pipe.bundle.test, 4).unwrap());
+    let mut cfg = PipelineConfig::new("tiny", Method::KurTail);
+    cfg.calib.n_samples = 32;
+    cfg.calib.iters = 10;
+    let kt = pipe.quantize(&cfg).unwrap().0;
+    b.run("perplexity_quant(4 batches)", || {
+        perplexity(&pipe.rt, &kt, &pipe.bundle.test, 4).unwrap()
+    });
+}

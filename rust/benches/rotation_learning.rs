@@ -1,0 +1,68 @@
+//! Rotation-learning cost benchmark (paper §3 "Training Cost"):
+//! per-iteration cost of KurTail's kurtosis Cayley-Adam step vs
+//! SpinQuant's end-to-end CE step, at matched model size. The asymmetry
+//! (layer-wise data vs full-model autograd) is the paper's 1-GPU-vs-4×H100
+//! argument, measured here as step wall-clock.
+
+use kurtail::model::{Params, RowReservoir};
+use kurtail::runtime::{Runtime, Value};
+use kurtail::tensor::{IntTensor, Tensor};
+use kurtail::util::bench::Bench;
+use kurtail::util::Rng;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP rotation_learning bench: {e:#}");
+            return;
+        }
+    };
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0);
+
+    // KurTail step at the dims of each config
+    for d in [64usize, 128, 256] {
+        let art = rt.load(&format!("kurtail_step_d{d}")).expect("load");
+        let rows = rt.manifest.kurtail_rows;
+        let mut pool = RowReservoir::new(d, rows, 0);
+        pool.offer(&Tensor::randn(&[rows, d], 1.0, &mut rng));
+        let x = pool.sample(rows);
+        let r = Tensor::eye(d);
+        let m = Tensor::zeros(&[d, d]);
+        b.run(&format!("kurtail_step_d{d}"), || {
+            art.run(&[
+                Value::F32(r.clone()),
+                Value::F32(m.clone()),
+                Value::from(0.0f32),
+                Value::F32(x.clone()),
+                Value::from(0.05f32),
+                Value::from(1.0f32),
+            ])
+            .unwrap()
+        });
+    }
+
+    // SpinQuant step per config (full model + backprop inside the graph)
+    for cfg in ["tiny", "small", "base"] {
+        let Ok(meta) = rt.manifest.config(cfg) else { continue };
+        let meta = meta.clone();
+        let Ok(art) = rt.load(&format!("spinquant_step_{cfg}")) else { continue };
+        let params = Params::init(&meta, &mut rng);
+        let d = meta.d_model;
+        let tokens = IntTensor::new(
+            (0..meta.spin_batch * meta.seq_len).map(|i| (i % 250) as i32).collect(),
+            vec![meta.spin_batch, meta.seq_len],
+        );
+        let mut inputs = params.as_values();
+        inputs.push(Value::F32(Tensor::eye(d)));
+        inputs.push(Value::F32(Tensor::zeros(&[d, d])));
+        inputs.push(Value::from(0.0f32));
+        inputs.push(Value::I32(tokens));
+        inputs.push(Value::from(1e-3f32));
+        inputs.push(Value::from(1.0f32));
+        b.run(&format!("spinquant_step_{cfg}"), || art.run(&inputs).unwrap());
+    }
+
+    println!("\nratio of interest: spinquant_step_<cfg> / kurtail_step_d<d_model(cfg)>");
+}

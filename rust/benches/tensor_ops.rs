@@ -1,0 +1,48 @@
+//! L3 host-tensor micro-benchmarks: the coordinator-side hot loops
+//! (blocked matmul, gram accumulation, Cholesky, FWHT, fake-quant,
+//! kurtosis). These dominate GPTQ and rotation fusion time.
+
+use kurtail::config::QuantScheme;
+use kurtail::quant::{fake_quant_rows, rtn_quantize};
+use kurtail::tensor::hadamard::fwht_rows;
+use kurtail::tensor::linalg::{cholesky, spd_inverse};
+use kurtail::tensor::matmul::{gram, matmul};
+use kurtail::tensor::stats::kurtosis_rows;
+use kurtail::tensor::Tensor;
+use kurtail::util::bench::Bench;
+use kurtail::util::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0);
+
+    for n in [64usize, 128, 256] {
+        let a = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let c = Tensor::randn(&[n, n], 1.0, &mut rng);
+        b.run(&format!("matmul_{n}x{n}x{n}"), || matmul(&a, &c));
+    }
+    for (m, n) in [(2048usize, 128usize), (2048, 256)] {
+        let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+        b.run(&format!("gram_{m}x{n}"), || gram(&a));
+    }
+    for n in [64usize, 128, 256] {
+        let a = Tensor::randn(&[n + 8, n], 1.0, &mut rng);
+        let h = gram(&a);
+        b.run(&format!("cholesky_{n}"), || cholesky(&h).unwrap());
+        b.run(&format!("spd_inverse_{n}"), || spd_inverse(&h).unwrap());
+    }
+    for n in [64usize, 256] {
+        let x = Tensor::randn(&[1024, n], 1.0, &mut rng);
+        b.run(&format!("fwht_rows_1024x{n}"), || {
+            let mut y = x.clone();
+            fwht_rows(&mut y);
+            y
+        });
+        b.run(&format!("kurtosis_rows_1024x{n}"), || kurtosis_rows(&x));
+        b.run(&format!("fake_quant_rows_1024x{n}"), || {
+            fake_quant_rows(&x, &QuantScheme::act4())
+        });
+    }
+    let w = Tensor::randn(&[256, 256], 0.1, &mut rng);
+    b.run("rtn_quantize_256x256", || rtn_quantize(&w, &QuantScheme::weight4()));
+}

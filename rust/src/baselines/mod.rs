@@ -1,0 +1,8 @@
+//! Baseline rotation methods the paper compares against (Table 2 rows):
+//! QuaRot (random Hadamard) and SpinQuant-lite (end-to-end learned R1).
+
+pub mod quarot;
+pub mod spinquant;
+
+pub use quarot::quarot_rotations;
+pub use spinquant::{spinquant_learn, SpinQuantReport};

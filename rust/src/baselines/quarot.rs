@@ -1,0 +1,47 @@
+//! QuaRot (Ashkboos et al. 2024b): non-learned random Hadamard rotations.
+//! R1 = H_d·diag(±1); R2_l = H_dh·diag(±1) per layer. Zero training cost —
+//! the baseline KurTail must beat on quality while staying cheap.
+
+use crate::tensor::{hadamard::random_hadamard, Tensor};
+use crate::util::Rng;
+
+/// (R1, per-layer R2) in QuaRot style.
+pub fn quarot_rotations(d_model: usize, d_head: usize, n_layers: usize, rng: &mut Rng) -> (Tensor, Vec<Tensor>) {
+    let r1 = random_hadamard(d_model, rng);
+    let r2 = (0..n_layers).map(|_| random_hadamard(d_head, rng)).collect();
+    (r1, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::hadamard::orthogonality_error;
+
+    #[test]
+    fn rotations_are_orthogonal_and_distinct() {
+        let mut rng = Rng::new(0);
+        let (r1, r2) = quarot_rotations(64, 16, 4, &mut rng);
+        assert!(orthogonality_error(&r1) < 1e-4);
+        assert_eq!(r2.len(), 4);
+        for r in &r2 {
+            assert!(orthogonality_error(r) < 1e-4);
+        }
+        // per-layer sign patterns differ
+        assert!(r2[0].max_abs_diff(&r2[1]) > 0.01);
+    }
+
+    #[test]
+    fn rotation_reduces_outlier_kurtosis() {
+        // the QuaRot mechanism itself: rotating a heavy-tailed matrix
+        // drops per-row kurtosis toward gaussian
+        let mut rng = Rng::new(1);
+        let (r1, _) = quarot_rotations(64, 16, 1, &mut rng);
+        let mut x = Tensor::randn(&[512, 64], 1.0, &mut rng);
+        for i in 0..512 {
+            x.row_mut(i)[3] *= 20.0;
+        }
+        let before = crate::tensor::stats::kurtail_loss(&x);
+        let after = crate::tensor::stats::kurtail_loss(&crate::tensor::matmul::matmul(&x, &r1));
+        assert!(after < before / 2.0, "{after} !< {before}/2");
+    }
+}

@@ -1,0 +1,86 @@
+//! SpinQuant-lite (Liu et al. 2024): learn R1 by minimizing end-to-end
+//! cross-entropy through the quantized model (STE), via Cayley-Adam.
+//!
+//! This is the expensive baseline: every step runs a full-model forward
+//! AND backward (the `spinquant_step_{cfg}` artifact holds the entire
+//! model + autograd graph), which is exactly the memory/compute asymmetry
+//! vs. KurTail's layer-wise capture that the paper's §3 "Training Cost"
+//! argues (4×H100 vs 1 GPU for 70B). We measure the same asymmetry in
+//! wall-clock and peak RSS on this testbed.
+
+use anyhow::Result;
+
+use crate::model::Params;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{hadamard::{orthogonality_error, random_hadamard}, IntTensor, Tensor};
+use crate::util::{timer, Rng, Stopwatch};
+
+pub struct SpinQuantReport {
+    pub r1: Tensor,
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+    pub peak_rss_mib: f64,
+}
+
+/// Learn R1 on calibration batches (params must be norm-folded, γ = 1).
+pub fn spinquant_learn(
+    rt: &Runtime,
+    params: &Params,
+    calib_batches: &[IntTensor],
+    iters: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<SpinQuantReport> {
+    anyhow::ensure!(!calib_batches.is_empty(), "no calibration batches");
+    let meta = params.meta.clone();
+    let d = meta.d_model;
+    let art = rt.load(&format!("spinquant_step_{}", meta.name))?;
+    let sw = Stopwatch::start("spinquant");
+    let mut rng = Rng::new(seed ^ 0x5917);
+
+    // SpinQuant initializes from a random Hadamard rotation.
+    let mut r1 = random_hadamard(d, &mut rng);
+    let mut m = Tensor::zeros(&[d, d]);
+    let mut v = 0.0f32;
+    let mut losses = Vec::with_capacity(iters);
+    let spin_b = meta.spin_batch;
+
+    let param_values = params.as_values();
+    for t in 1..=iters {
+        let full = &calib_batches[t % calib_batches.len()];
+        // spinquant_step takes spin_batch sequences; slice the calib batch
+        let seq = meta.seq_len;
+        let rows = full.shape[0].min(spin_b);
+        let mut data = full.data[..rows * seq].to_vec();
+        while data.len() < spin_b * seq {
+            data.extend_from_slice(&full.data[..seq]);
+        }
+        let tokens = IntTensor::new(data, vec![spin_b, seq]);
+
+        let mut inputs = param_values.clone();
+        inputs.push(Value::F32(r1));
+        inputs.push(Value::F32(m));
+        inputs.push(Value::from(v));
+        inputs.push(Value::I32(tokens));
+        inputs.push(Value::from(lr));
+        inputs.push(Value::from(t as f32));
+        let out = art.run(&inputs)?;
+        r1 = out[0].as_f32()?.clone();
+        m = out[1].as_f32()?.clone();
+        v = out[2].scalar_f32()?;
+        losses.push(out[3].scalar_f32()?);
+    }
+    let orth = orthogonality_error(&r1);
+    anyhow::ensure!(orth < 1e-2, "spinquant R1 left the manifold: {orth}");
+    Ok(SpinQuantReport {
+        r1,
+        losses,
+        wall_s: sw.elapsed_s(),
+        peak_rss_mib: timer::peak_rss_mib(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end in rust/tests/pipeline_integration.rs
+}

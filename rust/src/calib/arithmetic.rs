@@ -1,0 +1,89 @@
+//! Arithmetic text + multiple-choice generator — the MathQA stand-in
+//! (paper Table 5). The training corpus contains spelled-out arithmetic
+//! so a trained model can score above chance; quantization error then
+//! shows up as the paper observes: math degrades more than factual recall.
+
+use super::facts::Mcq;
+use crate::util::Rng;
+
+const OPS: [(&str, fn(i64, i64) -> i64); 3] = [
+    ("plus", |a, b| a + b),
+    ("minus", |a, b| a - b),
+    ("times", |a, b| a * b),
+];
+
+/// One spelled-out arithmetic fact, e.g. "7 plus 12 is 19."
+pub fn arithmetic_sentence(rng: &mut Rng) -> String {
+    let (name, f) = OPS[rng.below(OPS.len())];
+    let (a, b) = operands(name, rng);
+    format!("{a} {name} {b} is {}.", f(a, b))
+}
+
+fn operands(op: &str, rng: &mut Rng) -> (i64, i64) {
+    match op {
+        // keep products small enough to appear repeatedly in the corpus
+        "times" => (1 + rng.below(12) as i64, 1 + rng.below(12) as i64),
+        _ => (rng.below(50) as i64, rng.below(50) as i64),
+    }
+}
+
+/// MathQA-analog item: "a op b is" with 4 numeric options.
+pub fn math_question(rng: &mut Rng) -> Mcq {
+    let (name, f) = OPS[rng.below(OPS.len())];
+    let (a, b) = operands(name, rng);
+    let correct_val = f(a, b);
+    let mut opts = vec![correct_val];
+    while opts.len() < 4 {
+        // plausible distractors: off-by-small and digit-swapped answers
+        let cand = match rng.below(3) {
+            0 => correct_val + 1 + rng.below(4) as i64,
+            1 => correct_val - 1 - rng.below(4) as i64,
+            _ => f(a, b + 1),
+        };
+        if !opts.contains(&cand) {
+            opts.push(cand);
+        }
+    }
+    let correct_val_s = correct_val.to_string();
+    let mut opts: Vec<String> = opts.into_iter().map(|v| v.to_string()).collect();
+    rng.shuffle(&mut opts);
+    let correct = opts.iter().position(|o| *o == correct_val_s).unwrap();
+    Mcq { prompt: format!("{a} {name} {b} is"), options: opts, correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn sentences_are_correct_arithmetic() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let s = arithmetic_sentence(&mut rng);
+            let parts: Vec<&str> = s.trim_end_matches('.').split(' ').collect();
+            let (a, op, b, res) = (parts[0], parts[1], parts[2], parts[4]);
+            let (a, b, res): (i64, i64, i64) =
+                (a.parse().unwrap(), b.parse().unwrap(), res.parse().unwrap());
+            let want = match op {
+                "plus" => a + b,
+                "minus" => a - b,
+                "times" => a * b,
+                _ => panic!("{op}"),
+            };
+            assert_eq!(res, want, "{s}");
+        }
+    }
+
+    #[test]
+    fn prop_questions_well_formed() {
+        check(200, |rng| {
+            let q = math_question(rng);
+            prop_assert(q.options.len() == 4 && q.correct < 4, "shape")?;
+            let mut o = q.options.clone();
+            o.sort();
+            o.dedup();
+            prop_assert(o.len() == 4, "distinct options")
+        });
+    }
+}

@@ -1,0 +1,261 @@
+//! Synthetic corpus generators — the stand-ins for the paper's calibration
+//! datasets (WikiText / C4 / PTB / Alpaca, Table 6 ablation) and for the
+//! training corpus of the from-scratch models.
+//!
+//! Each generator is deterministic from a seed and has deliberately
+//! distinct surface statistics (formality, casing, punctuation, special
+//! tokens), because the Table 6 experiment is exactly about whether the
+//! calibration distribution matters for rotation learning.
+
+use super::facts::World;
+use crate::util::Rng;
+
+/// Calibration corpus styles (paper Table 6 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusKind {
+    Wiki,
+    C4,
+    Ptb,
+    Alpaca,
+    Combined,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> Option<CorpusKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "wiki" | "wikitext" | "wikitext-2" => CorpusKind::Wiki,
+            "c4" => CorpusKind::C4,
+            "ptb" => CorpusKind::Ptb,
+            "alpaca" => CorpusKind::Alpaca,
+            "combined" => CorpusKind::Combined,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CorpusKind::Wiki => "Wikitext-2",
+            CorpusKind::C4 => "C4",
+            CorpusKind::Ptb => "PTB",
+            CorpusKind::Alpaca => "Alpaca",
+            CorpusKind::Combined => "Combined",
+        }
+    }
+
+    pub fn all() -> [CorpusKind; 5] {
+        [CorpusKind::Wiki, CorpusKind::C4, CorpusKind::Ptb, CorpusKind::Alpaca, CorpusKind::Combined]
+    }
+}
+
+const TOPICS: &[&str] = &[
+    "the river valley", "the old harbor", "the northern railway", "the glass works",
+    "the city archive", "the salt trade", "the mountain pass", "the lighthouse",
+    "the printing house", "the botanical garden", "the clock tower", "the mill district",
+];
+const VERBS: &[&str] = &[
+    "was established in", "expanded during", "declined after", "was rebuilt in",
+    "supplied goods to", "connected", "served", "bordered", "influenced", "preserved",
+];
+const ERAS: &[&str] = &[
+    "the early period", "the middle era", "the late era", "the reform years",
+    "the long winter", "the second expansion", "the quiet decade",
+];
+const ADJS: &[&str] = &[
+    "notable", "small", "prosperous", "remote", "ancient", "busy", "quiet", "famous",
+];
+
+/// Formal encyclopedic sentences (WikiText stand-in).
+pub fn wiki_sentence(rng: &mut Rng) -> String {
+    match rng.below(3) {
+        0 => format!(
+            "{} {} {}.",
+            TOPICS[rng.zipf(TOPICS.len(), 1.1)],
+            VERBS[rng.below(VERBS.len())],
+            ERAS[rng.below(ERAS.len())]
+        ),
+        1 => format!(
+            "{} was a {} settlement near {}.",
+            TOPICS[rng.zipf(TOPICS.len(), 1.1)],
+            ADJS[rng.below(ADJS.len())],
+            TOPICS[rng.below(TOPICS.len())]
+        ),
+        _ => format!(
+            "during {} , {} {} {}.",
+            ERAS[rng.below(ERAS.len())],
+            TOPICS[rng.zipf(TOPICS.len(), 1.1)],
+            VERBS[rng.below(VERBS.len())],
+            TOPICS[rng.below(TOPICS.len())]
+        ),
+    }
+}
+
+/// Noisy web text (C4 stand-in): casing, urls, promos.
+pub fn c4_sentence(rng: &mut Rng) -> String {
+    match rng.below(4) {
+        0 => format!(
+            "Check out {} for more info at www.{}.example!",
+            TOPICS[rng.below(TOPICS.len())],
+            ["shop", "news", "blog", "deals"][rng.below(4)]
+        ),
+        1 => format!(
+            "TOP {} tips for {} - you won't believe #{}!",
+            1 + rng.below(9),
+            TOPICS[rng.below(TOPICS.len())],
+            1 + rng.below(9)
+        ),
+        2 => format!(
+            "I really think {} {} {} tbh.",
+            TOPICS[rng.below(TOPICS.len())],
+            VERBS[rng.below(VERBS.len())],
+            ERAS[rng.below(ERAS.len())]
+        ),
+        _ => format!(
+            "Subscribe now: {} news, {} updates, free shipping.",
+            TOPICS[rng.below(TOPICS.len())],
+            ADJS[rng.below(ADJS.len())]
+        ),
+    }
+}
+
+/// Financial newswire (PTB stand-in): lowercase, <unk>, N for numbers.
+pub fn ptb_sentence(rng: &mut Rng) -> String {
+    let co = ["acme corp", "norwood & sons", "<unk> industries", "harbor holdings"][rng.below(4)];
+    match rng.below(3) {
+        0 => format!(
+            "{} said quarterly profit rose N % to $ N million.",
+            co
+        ),
+        1 => format!(
+            "shares of {} fell N cents in <unk> trading.",
+            co
+        ),
+        _ => format!(
+            "analysts at {} expect {} to {} next year.",
+            co,
+            TOPICS[rng.below(TOPICS.len())],
+            ["improve", "slow", "recover", "<unk>"][rng.below(4)]
+        ),
+    }
+}
+
+/// Instruction-response pairs (Alpaca stand-in).
+pub fn alpaca_sentence(rng: &mut Rng) -> String {
+    let topic = TOPICS[rng.below(TOPICS.len())];
+    match rng.below(3) {
+        0 => format!(
+            "### instruction: describe {}. ### response: {} was a {} place that {} {}.",
+            topic, topic, ADJS[rng.below(ADJS.len())],
+            VERBS[rng.below(VERBS.len())], ERAS[rng.below(ERAS.len())]
+        ),
+        1 => format!(
+            "### instruction: list a fact about {}. ### response: it {} {}.",
+            topic, VERBS[rng.below(VERBS.len())], TOPICS[rng.below(TOPICS.len())]
+        ),
+        _ => format!(
+            "### instruction: when did {} change? ### response: during {}.",
+            topic, ERAS[rng.below(ERAS.len())]
+        ),
+    }
+}
+
+/// Generate `n_bytes` of a given corpus style.
+pub fn generate(kind: CorpusKind, n_bytes: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed ^ 0xC0A9);
+    let mut out = String::with_capacity(n_bytes + 128);
+    while out.len() < n_bytes {
+        let s = match kind {
+            CorpusKind::Wiki => wiki_sentence(&mut rng),
+            CorpusKind::C4 => c4_sentence(&mut rng),
+            CorpusKind::Ptb => ptb_sentence(&mut rng),
+            CorpusKind::Alpaca => alpaca_sentence(&mut rng),
+            CorpusKind::Combined => match rng.below(4) {
+                0 => wiki_sentence(&mut rng),
+                1 => c4_sentence(&mut rng),
+                2 => ptb_sentence(&mut rng),
+                _ => alpaca_sentence(&mut rng),
+            },
+        };
+        out.push_str(&s);
+        out.push(' ');
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+/// The training corpus: wiki-style filler interleaved with the fact base
+/// (repeated in shuffled order so facts are learnable) and arithmetic
+/// examples (for the MathQA-analog). Returns ~`n_bytes` of text.
+pub fn training_corpus(world: &World, n_bytes: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed ^ 0x7EA1);
+    let mut facts = world.fact_sentences();
+    let mut out = String::with_capacity(n_bytes + 256);
+    let mut fi = usize::MAX; // trigger reshuffle on first use
+    while out.len() < n_bytes {
+        match rng.below(10) {
+            // 50% facts — they are the eval signal
+            0..=4 => {
+                if fi >= facts.len() {
+                    rng.shuffle(&mut facts);
+                    fi = 0;
+                }
+                out.push_str(&facts[fi]);
+                fi += 1;
+            }
+            // 20% arithmetic
+            5..=6 => out.push_str(&super::arithmetic::arithmetic_sentence(&mut rng)),
+            // 30% wiki filler
+            _ => out.push_str(&wiki_sentence(&mut rng)),
+        }
+        out.push(' ');
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(CorpusKind::Wiki, 1000, 1), generate(CorpusKind::Wiki, 1000, 1));
+        assert_ne!(generate(CorpusKind::Wiki, 1000, 1), generate(CorpusKind::Wiki, 1000, 2));
+    }
+
+    #[test]
+    fn styles_are_distinct() {
+        let wiki = generate(CorpusKind::Wiki, 5000, 0);
+        let c4 = generate(CorpusKind::C4, 5000, 0);
+        let ptb = generate(CorpusKind::Ptb, 5000, 0);
+        let alp = generate(CorpusKind::Alpaca, 5000, 0);
+        assert!(!wiki.contains("www.") && c4.contains("www."));
+        assert!(ptb.contains("<unk>") && !wiki.contains("<unk>"));
+        assert!(alp.contains("### instruction:") && !c4.contains("### instruction:"));
+    }
+
+    #[test]
+    fn combined_mixes_styles() {
+        let c = generate(CorpusKind::Combined, 20_000, 3);
+        assert!(c.contains("www.") && c.contains("<unk>") && c.contains("### instruction:"));
+    }
+
+    #[test]
+    fn training_corpus_contains_facts_and_math() {
+        let w = World::generate(0);
+        let t = training_corpus(&w, 50_000, 0);
+        assert!(t.contains("atomic number"));
+        assert!(t.contains(" eats "));
+        assert!(t.contains(" plus ") || t.contains(" times ") || t.contains(" minus "));
+        let first_facts = w.fact_sentences();
+        // several distinct facts present
+        let hits = first_facts.iter().filter(|f| t.contains(*f)).count();
+        assert!(hits > first_facts.len() / 2, "{hits}/{}", first_facts.len());
+    }
+
+    #[test]
+    fn exact_length() {
+        for kind in CorpusKind::all() {
+            assert_eq!(generate(kind, 1234, 9).len(), 1234);
+        }
+    }
+}

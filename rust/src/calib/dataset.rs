@@ -1,0 +1,159 @@
+//! Token datasets: pack corpora into (B, T) batches for the artifact
+//! graphs, with train/held-out splits and calibration sampling.
+
+use super::corpus::{self, CorpusKind};
+use super::facts::World;
+use super::tokenizer::ByteTokenizer;
+use crate::tensor::IntTensor;
+use crate::util::Rng;
+
+/// A tokenized corpus with sequence packing.
+#[derive(Debug, Clone)]
+pub struct TokenDataset {
+    pub tokens: Vec<i32>,
+    pub seq_len: usize,
+}
+
+impl TokenDataset {
+    pub fn from_text(text: &str, seq_len: usize) -> Self {
+        Self { tokens: ByteTokenizer.encode(text), seq_len }
+    }
+
+    /// Number of non-overlapping sequences available.
+    pub fn n_sequences(&self) -> usize {
+        self.tokens.len() / self.seq_len
+    }
+
+    /// The `i`-th non-overlapping sequence.
+    pub fn sequence(&self, i: usize) -> &[i32] {
+        let t = self.seq_len;
+        &self.tokens[i * t..(i + 1) * t]
+    }
+
+    /// A (B, T) batch of distinct sequences, chosen by index list.
+    pub fn batch(&self, idx: &[usize]) -> IntTensor {
+        let t = self.seq_len;
+        let mut data = Vec::with_capacity(idx.len() * t);
+        for &i in idx {
+            data.extend_from_slice(self.sequence(i));
+        }
+        IntTensor::new(data, vec![idx.len(), t])
+    }
+
+    /// A random (B, T) batch.
+    pub fn random_batch(&self, b: usize, rng: &mut Rng) -> IntTensor {
+        let n = self.n_sequences();
+        let idx: Vec<usize> = (0..b).map(|_| rng.below(n)).collect();
+        self.batch(&idx)
+    }
+
+    /// Deterministic evaluation batches covering the first `n_batches·b`
+    /// sequences (held-out perplexity uses this).
+    pub fn eval_batches(&self, b: usize, n_batches: usize) -> Vec<IntTensor> {
+        let n = self.n_sequences();
+        (0..n_batches)
+            .map(|k| {
+                let idx: Vec<usize> = (0..b).map(|i| (k * b + i) % n).collect();
+                self.batch(&idx)
+            })
+            .collect()
+    }
+}
+
+/// Everything data-related for one experiment run, derived from one seed.
+pub struct DataBundle {
+    pub world: World,
+    pub train: TokenDataset,
+    /// Held-out wiki-style split (the "WikiText test set" analog).
+    pub test: TokenDataset,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl DataBundle {
+    /// `train_bytes` of training text + a held-out test split.
+    pub fn new(seq_len: usize, train_bytes: usize, seed: u64) -> Self {
+        let world = World::generate(seed);
+        // Held-out data is the same *distribution* as training (the paper
+        // evaluates on WikiText's test split): same generator, disjoint seed
+        // stream, so sequences never coincide but statistics match.
+        let train_text = corpus::training_corpus(&world, train_bytes, seed);
+        let test_text = corpus::training_corpus(&world, train_bytes / 8, seed ^ 0xDEAD_BEEF);
+        Self {
+            world,
+            train: TokenDataset::from_text(&train_text, seq_len),
+            test: TokenDataset::from_text(&test_text, seq_len),
+            seq_len,
+            seed,
+        }
+    }
+
+    /// Calibration sequences in a given corpus style (Table 6/7 knobs).
+    pub fn calib_batches(
+        &self,
+        kind: CorpusKind,
+        n_samples: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Vec<IntTensor> {
+        let bytes = n_samples * self.seq_len + self.seq_len;
+        let text = corpus::generate(kind, bytes, seed ^ 0xCA11B);
+        let ds = TokenDataset::from_text(&text, self.seq_len);
+        let mut rng = Rng::new(seed ^ 0x5A3);
+        let mut idx: Vec<usize> = (0..ds.n_sequences()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(n_samples);
+        idx.chunks(batch)
+            .filter(|c| c.len() == batch)
+            .map(|c| ds.batch(c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn packing_shapes() {
+        let ds = TokenDataset::from_text(&"abcdefgh".repeat(100), 16);
+        assert_eq!(ds.n_sequences(), 50);
+        let b = ds.batch(&[0, 1, 2]);
+        assert_eq!(b.shape, vec![3, 16]);
+        assert_eq!(&b.data[..8], &[97, 98, 99, 100, 101, 102, 103, 104]);
+    }
+
+    #[test]
+    fn bundle_train_test_disjoint() {
+        let db = DataBundle::new(64, 20_000, 0);
+        assert!(db.train.n_sequences() > 100);
+        assert!(db.test.n_sequences() > 10);
+        // different seed stream ⇒ first sequences differ
+        assert_ne!(db.train.sequence(0), db.test.sequence(0));
+    }
+
+    #[test]
+    fn calib_batches_counts() {
+        let db = DataBundle::new(64, 10_000, 1);
+        let batches = db.calib_batches(CorpusKind::Wiki, 32, 4, 7);
+        assert_eq!(batches.len(), 8);
+        for b in &batches {
+            assert_eq!(b.shape, vec![4, 64]);
+        }
+    }
+
+    #[test]
+    fn prop_eval_batches_in_vocab() {
+        check(20, |rng| {
+            let db = DataBundle::new(32, 5_000, rng.next_u64());
+            let batches = db.test.eval_batches(2, 3);
+            for b in &batches {
+                for &t in &b.data {
+                    prop_assert((0..256).contains(&t), "token in vocab")?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

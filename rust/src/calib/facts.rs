@@ -1,0 +1,233 @@
+//! Synthetic knowledge base: the stand-in for the factual content that the
+//! paper's zero-shot / MMLU / MathQA benchmarks probe (DESIGN.md §2).
+//!
+//! A seeded "world" assigns attributes to entities across four domains
+//! mirroring the MMLU category split of paper Table 8:
+//!   humanities  — authors ↔ books
+//!   social      — people ↔ cities / jobs
+//!   stem        — elements ↔ atomic numbers, squares
+//!   other       — animals ↔ foods / colors
+//!
+//! `fact_sentences` feed the training corpus (so the facts are learnable);
+//! `questions(domain)` produce 4-way multiple-choice items scored by the
+//! eval harness exactly as lm-eval scores MMLU (per-option NLL, argmin).
+
+use crate::util::Rng;
+
+pub const DOMAINS: [&str; 4] = ["humanities", "other", "stem", "social"];
+
+pub const AUTHORS: &[&str] = &[
+    "alden", "briar", "corin", "darian", "elwin", "farren", "galen", "hollis",
+    "imra", "jorun", "kaelis", "loreth", "mirren", "nolan", "orin", "pellan",
+];
+pub const BOOKS: &[&str] = &[
+    "the glass river", "winter crowns", "the last orchard", "salt and cedar",
+    "the iron garden", "a field of doors", "the ninth lantern", "old harbor songs",
+    "the paper mountain", "a quiet armada", "the brass meadow", "night ledgers",
+    "the hollow crown", "ash cartographers", "the long shore", "ember annals",
+];
+const PEOPLE: &[&str] = &[
+    "mara", "tobin", "selka", "ivo", "petra", "ansel", "vera", "rollo",
+    "edda", "sorin", "lina", "marek", "odile", "bren", "tilda", "janos",
+];
+const CITIES: &[&str] = &[
+    "velport", "crane hill", "ostermoor", "duskvale", "harrowgate", "lindenfall",
+    "redmarch", "silverquay", "thornwick", "eastmere", "goldenrow", "fennbridge",
+];
+const JOBS: &[&str] = &[
+    "baker", "weaver", "carpenter", "fisher", "scribe", "mason", "tailor",
+    "miller", "potter", "smith", "cooper", "glazier",
+];
+const ELEMENTS: &[&str] = &[
+    "veltrium", "ossine", "drakon", "melphite", "quorine", "tessium",
+    "arvolite", "zephrium", "coldane", "pyrrhite", "lumenite", "ferrowine",
+];
+const ANIMALS: &[&str] = &[
+    "marmot", "heron", "lynx", "otter", "badger", "falcon", "tortoise",
+    "weasel", "magpie", "hedgehog", "stoat", "plover",
+];
+const FOODS: &[&str] = &[
+    "berries", "clover", "minnows", "acorns", "roots", "crickets",
+    "barley", "snails", "apples", "cress", "worms", "seeds",
+];
+const COLORS: &[&str] = &[
+    "grey", "russet", "golden", "ashen", "speckled", "dun", "silver", "umber",
+];
+
+/// A deterministic assignment of attributes to entities.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub author_of_book: Vec<usize>, // book -> author
+    pub city_of_person: Vec<usize>, // person -> city
+    pub job_of_person: Vec<usize>,  // person -> job
+    pub number_of_element: Vec<usize>, // element -> atomic number (1..40)
+    pub food_of_animal: Vec<usize>, // animal -> food
+    pub color_of_animal: Vec<usize>, // animal -> color
+}
+
+impl World {
+    pub fn generate(seed: u64) -> World {
+        let mut rng = Rng::new(seed ^ 0xFAC75);
+        World {
+            author_of_book: (0..BOOKS.len()).map(|_| rng.below(AUTHORS.len())).collect(),
+            city_of_person: (0..PEOPLE.len()).map(|_| rng.below(CITIES.len())).collect(),
+            job_of_person: (0..PEOPLE.len()).map(|_| rng.below(JOBS.len())).collect(),
+            number_of_element: (0..ELEMENTS.len()).map(|_| 1 + rng.below(39)).collect(),
+            food_of_animal: (0..ANIMALS.len()).map(|_| rng.below(FOODS.len())).collect(),
+            color_of_animal: (0..ANIMALS.len()).map(|_| rng.below(COLORS.len())).collect(),
+        }
+    }
+
+    /// All fact sentences, in several phrasings (training signal).
+    pub fn fact_sentences(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (b, &a) in self.author_of_book.iter().enumerate() {
+            out.push(format!("the author of {} is {}.", BOOKS[b], AUTHORS[a]));
+            out.push(format!("{} wrote {}.", AUTHORS[a], BOOKS[b]));
+        }
+        for (p, &c) in self.city_of_person.iter().enumerate() {
+            out.push(format!("{} lives in {}.", PEOPLE[p], CITIES[c]));
+            out.push(format!("the home of {} is {}.", PEOPLE[p], CITIES[c]));
+        }
+        for (p, &j) in self.job_of_person.iter().enumerate() {
+            out.push(format!("{} works as a {}.", PEOPLE[p], JOBS[j]));
+        }
+        for (e, &n) in self.number_of_element.iter().enumerate() {
+            out.push(format!("the atomic number of {} is {}.", ELEMENTS[e], n));
+            out.push(format!("{} has atomic number {}.", ELEMENTS[e], n));
+        }
+        for (a, &f) in self.food_of_animal.iter().enumerate() {
+            out.push(format!("the {} eats {}.", ANIMALS[a], FOODS[f]));
+        }
+        for (a, &c) in self.color_of_animal.iter().enumerate() {
+            out.push(format!("the {} is {}.", ANIMALS[a], COLORS[c]));
+        }
+        out
+    }
+
+    /// 4-way multiple-choice questions for one MMLU-analog domain.
+    /// Returns (prompt, options, correct_index).
+    pub fn questions(&self, domain: &str, n: usize, rng: &mut Rng) -> Vec<Mcq> {
+        let mut out = Vec::new();
+        for _ in 0..n {
+            out.push(match domain {
+                "humanities" => {
+                    let b = rng.below(BOOKS.len());
+                    let correct = self.author_of_book[b];
+                    mcq(
+                        format!("the author of {} is", BOOKS[b]),
+                        AUTHORS, correct, rng,
+                    )
+                }
+                "social" => {
+                    let p = rng.below(PEOPLE.len());
+                    if rng.below(2) == 0 {
+                        mcq(format!("{} lives in", PEOPLE[p]), CITIES, self.city_of_person[p], rng)
+                    } else {
+                        mcq(format!("{} works as a", PEOPLE[p]), JOBS, self.job_of_person[p], rng)
+                    }
+                }
+                "stem" => {
+                    let e = rng.below(ELEMENTS.len());
+                    let correct = self.number_of_element[e];
+                    let mut opts = vec![correct.to_string()];
+                    while opts.len() < 4 {
+                        let d = 1 + rng.below(39);
+                        if d != correct && !opts.contains(&d.to_string()) {
+                            opts.push(d.to_string());
+                        }
+                    }
+                    shuffle_mcq(format!("the atomic number of {} is", ELEMENTS[e]), opts, rng)
+                }
+                "other" => {
+                    let a = rng.below(ANIMALS.len());
+                    if rng.below(2) == 0 {
+                        mcq(format!("the {} eats", ANIMALS[a]), FOODS, self.food_of_animal[a], rng)
+                    } else {
+                        mcq(format!("the {} is", ANIMALS[a]), COLORS, self.color_of_animal[a], rng)
+                    }
+                }
+                other => panic!("unknown domain {other}"),
+            });
+        }
+        out
+    }
+}
+
+/// One multiple-choice item (lm-eval style: score `prompt + " " + option`).
+#[derive(Debug, Clone)]
+pub struct Mcq {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub correct: usize,
+}
+
+fn mcq(prompt: String, pool: &[&str], correct_idx: usize, rng: &mut Rng) -> Mcq {
+    let mut opts = vec![pool[correct_idx].to_string()];
+    while opts.len() < 4 {
+        let cand = pool[rng.below(pool.len())].to_string();
+        if !opts.contains(&cand) {
+            opts.push(cand);
+        }
+    }
+    shuffle_mcq(prompt, opts, rng)
+}
+
+fn shuffle_mcq(prompt: String, mut opts: Vec<String>, rng: &mut Rng) -> Mcq {
+    let correct_text = opts[0].clone();
+    rng.shuffle(&mut opts);
+    let correct = opts.iter().position(|o| *o == correct_text).unwrap();
+    Mcq { prompt, options: opts, correct }
+}
+
+pub fn entities() -> (&'static [&'static str], &'static [&'static str], &'static [&'static str]) {
+    (PEOPLE, ANIMALS, FOODS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_deterministic() {
+        let a = World::generate(7);
+        let b = World::generate(7);
+        assert_eq!(a.author_of_book, b.author_of_book);
+        assert_ne!(a.author_of_book, World::generate(8).author_of_book);
+    }
+
+    #[test]
+    fn facts_cover_all_domains() {
+        let w = World::generate(0);
+        let facts = w.fact_sentences();
+        assert!(facts.len() > 100);
+        assert!(facts.iter().any(|f| f.contains("author")));
+        assert!(facts.iter().any(|f| f.contains("atomic number")));
+        assert!(facts.iter().any(|f| f.contains("lives in")));
+        assert!(facts.iter().any(|f| f.contains("eats")));
+    }
+
+    #[test]
+    fn questions_are_answerable_from_facts() {
+        let w = World::generate(1);
+        let facts = w.fact_sentences().join(" ");
+        let mut rng = Rng::new(2);
+        for domain in DOMAINS {
+            for q in w.questions(domain, 20, &mut rng) {
+                assert_eq!(q.options.len(), 4, "{domain}");
+                assert!(q.correct < 4);
+                // the correct completion appears verbatim in the corpus
+                let full = format!("{} {}", q.prompt, q.options[q.correct]);
+                assert!(
+                    facts.contains(&q.options[q.correct]) && !full.is_empty(),
+                    "{domain}: {full}"
+                );
+                // options are distinct
+                let mut o = q.options.clone();
+                o.sort();
+                o.dedup();
+                assert_eq!(o.len(), 4);
+            }
+        }
+    }
+}

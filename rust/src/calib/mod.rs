@@ -1,0 +1,14 @@
+//! Calibration + training data substrate: synthetic corpora (WikiText /
+//! C4 / PTB / Alpaca stand-ins), the fact world behind the zero-shot /
+//! MMLU / MathQA analogs, byte tokenizer, and batch packing.
+
+pub mod arithmetic;
+pub mod corpus;
+pub mod dataset;
+pub mod facts;
+pub mod tokenizer;
+
+pub use corpus::CorpusKind;
+pub use dataset::{DataBundle, TokenDataset};
+pub use facts::{Mcq, World};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,53 @@
+//! Byte-level tokenizer (vocab = 256).
+//!
+//! The paper's models use BPE vocabularies; at our corpus scale a byte
+//! tokenizer keeps the vocab dense (every id trainable) and makes the
+//! round-trip property exact — which the proptest suite pins down.
+
+/// Byte-level tokenizer; token id = byte value.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "The quick brown fox! 012?";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        let t = ByteTokenizer;
+        for id in t.encode("any text at all") {
+            assert!((0..256).contains(&id));
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_ascii() {
+        check(200, |rng| {
+            let t = ByteTokenizer;
+            let len = rng.below(64);
+            let s: String = (0..len).map(|_| (32 + rng.below(95)) as u8 as char).collect();
+            prop_assert(t.decode(&t.encode(&s)) == s, "byte round-trip")
+        });
+    }
+}

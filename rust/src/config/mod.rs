@@ -1,0 +1,109 @@
+//! Typed configuration for models, quantization, calibration and the
+//! pipeline. Model configs mirror `python/compile/model.py::PRESETS` and
+//! are cross-checked against `artifacts/manifest.json` at runtime.
+
+pub mod quantcfg;
+
+pub use quantcfg::{KvQuant, QuantScheme, WeightQuantizer};
+
+/// The quantization method under evaluation (rows of paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Full precision (the "16-bit" row).
+    Fp16,
+    /// Weight-only GPTQ, no rotations — collapses at W4A4 (paper row "GPTQ").
+    GptqOnly,
+    /// Random Hadamard R1/R2 (Ashkboos et al. 2024b).
+    QuaRot,
+    /// End-to-end learned R1 via CE loss (Liu et al. 2024), lite variant.
+    SpinQuant,
+    /// Kurtosis-learned R1/R2 — the paper's contribution.
+    KurTail,
+}
+
+impl Method {
+    pub fn all() -> [Method; 5] {
+        [Method::Fp16, Method::GptqOnly, Method::QuaRot, Method::SpinQuant, Method::KurTail]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "16-bit",
+            Method::GptqOnly => "GPTQ",
+            Method::QuaRot => "QuaRot",
+            Method::SpinQuant => "SpinQuant",
+            Method::KurTail => "KurTail",
+        }
+    }
+
+    pub fn uses_rotations(&self) -> bool {
+        matches!(self, Method::QuaRot | Method::SpinQuant | Method::KurTail)
+    }
+}
+
+/// Calibration settings (paper §4 Setup + §5.3 ablations).
+#[derive(Debug, Clone)]
+pub struct CalibConfig {
+    /// Which synthetic corpus to calibrate on (Table 6 ablation).
+    pub dataset: String,
+    /// Number of calibration sequences (Table 7 ablation; paper: 512).
+    pub n_samples: usize,
+    /// Cayley-Adam iterations for rotation learning (paper: 100).
+    pub iters: usize,
+    /// Learning rate for rotation optimization.
+    pub lr: f32,
+    /// RNG seed for sampling + shuffling.
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        Self { dataset: "combined".into(), n_samples: 512, iters: 100, lr: 0.05, seed: 0 }
+    }
+}
+
+/// End-to-end pipeline configuration for one experiment run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub model: String,
+    pub method: Method,
+    pub weight_quantizer: WeightQuantizer,
+    pub calib: CalibConfig,
+    /// Evaluation batches for perplexity (more = tighter estimate).
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    pub fn new(model: &str, method: Method) -> Self {
+        Self {
+            model: model.into(),
+            method,
+            weight_quantizer: WeightQuantizer::Gptq,
+            calib: CalibConfig::default(),
+            eval_batches: 8,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels_unique() {
+        let labels: Vec<_> = Method::all().iter().map(|m| m.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.dedup();
+        assert_eq!(labels.len(), dedup.len());
+    }
+
+    #[test]
+    fn pipeline_config_defaults() {
+        let c = PipelineConfig::new("small", Method::KurTail);
+        assert_eq!(c.model, "small");
+        assert_eq!(c.calib.n_samples, 512);
+        assert_eq!(c.calib.iters, 100);
+    }
+}

@@ -1,0 +1,78 @@
+//! Quantizer scheme descriptors (paper §4 Setup).
+
+/// Weight quantization algorithm (Table 2 uses GPTQ; Tables 4/10 use RTN).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightQuantizer {
+    /// Round-to-nearest, per-output-channel symmetric.
+    Rtn,
+    /// GPTQ (Frantar et al. 2022): Hessian-aware with error feedback.
+    Gptq,
+    /// Leave weights in fp (for ablations of activation-only quant).
+    None,
+}
+
+impl WeightQuantizer {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WeightQuantizer::Rtn => "RTN",
+            WeightQuantizer::Gptq => "GPTQ",
+            WeightQuantizer::None => "none",
+        }
+    }
+}
+
+/// Uniform quantization scheme for a tensor group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantScheme {
+    pub bits: u32,
+    pub symmetric: bool,
+    /// Dynamic-range clip quantile (activations: 0.98; weights: none).
+    pub clip_quantile: Option<f32>,
+}
+
+impl QuantScheme {
+    /// Paper default for activations: 4-bit symmetric per-token, 0.98 clip.
+    pub fn act4() -> Self {
+        Self { bits: 4, symmetric: true, clip_quantile: Some(0.98) }
+    }
+
+    /// Paper default for weights: 4-bit symmetric per-channel.
+    pub fn weight4() -> Self {
+        Self { bits: 4, symmetric: true, clip_quantile: None }
+    }
+
+    /// Paper default for KV cache: 4-bit asymmetric per-token.
+    pub fn kv4() -> Self {
+        Self { bits: 4, symmetric: false, clip_quantile: None }
+    }
+
+    /// Half of the symmetric integer grid: 2^(b-1) − 1.
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Full asymmetric grid size: 2^b − 1.
+    pub fn levels(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// KV-cache quantization switch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvQuant {
+    Fp,
+    Asym4,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids() {
+        assert_eq!(QuantScheme::act4().qmax(), 7.0);
+        assert_eq!(QuantScheme::kv4().levels(), 15.0);
+        let s8 = QuantScheme { bits: 8, symmetric: true, clip_quantile: None };
+        assert_eq!(s8.qmax(), 127.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Evaluation harness: perplexity, lm-eval-style option scoring, the 8
+//! zero-shot task analogs, MMLU/MathQA analogs, and the paper's analysis
+//! experiments (sensitivity Fig. 1, outliers Fig. 2, success rate Table 1).
+
+pub mod outliers;
+pub mod perplexity;
+pub mod scorer;
+pub mod sensitivity;
+pub mod success;
+pub mod tasks;
+
+pub use perplexity::perplexity;
+pub use scorer::{score_mcqs, McqScore};
+pub use tasks::{mathqa_suite, mmlu_suite, zero_shot_suite, TaskSet};
+
+use anyhow::Result;
+
+use crate::pipeline::{Pipeline, PreparedModel};
+
+/// Everything the paper's main tables report for one (model, method) cell.
+#[derive(Debug, Clone)]
+pub struct EvalSummary {
+    pub wiki_ppl: f32,
+    pub zero_shot_avg: f32,
+    pub per_task: Vec<(String, f32)>,
+    pub mmlu_avg: f32,
+    pub per_domain: Vec<(String, f32)>,
+    pub mathqa: f32,
+}
+
+/// Full evaluation of a prepared model (ppl + all accuracy suites).
+pub fn evaluate(
+    pipe: &Pipeline,
+    pm: &PreparedModel,
+    n_questions: usize,
+    eval_batches: usize,
+) -> Result<EvalSummary> {
+    let rt = &pipe.rt;
+    let wiki_ppl = perplexity(rt, pm, &pipe.bundle.test, eval_batches)?;
+
+    let zs = zero_shot_suite(&pipe.bundle.world, n_questions, pipe.bundle.seed ^ 0x25);
+    let mut per_task = Vec::new();
+    let mut zs_sum = 0.0;
+    for set in &zs {
+        let acc = score_mcqs(rt, pm, &set.questions)?.accuracy;
+        zs_sum += acc;
+        per_task.push((set.name.clone(), acc));
+    }
+    let zero_shot_avg = zs_sum / zs.len() as f32;
+
+    let mmlu = mmlu_suite(&pipe.bundle.world, n_questions, pipe.bundle.seed ^ 0x26);
+    let mut per_domain = Vec::new();
+    let mut mmlu_sum = 0.0;
+    for set in &mmlu {
+        let acc = score_mcqs(rt, pm, &set.questions)?.accuracy;
+        mmlu_sum += acc;
+        per_domain.push((set.name.clone(), acc));
+    }
+    let mmlu_avg = mmlu_sum / mmlu.len() as f32;
+
+    let mq = mathqa_suite(n_questions, pipe.bundle.seed ^ 0x27);
+    let mathqa = score_mcqs(rt, pm, &mq.questions)?.accuracy;
+
+    Ok(EvalSummary { wiki_ppl, zero_shot_avg, per_task, mmlu_avg, per_domain, mathqa })
+}

@@ -1,0 +1,80 @@
+//! Outlier / distribution statistics — paper Fig. 2 (numeric form).
+//!
+//! The paper visualizes MHSA/FFN input distributions and per-token max
+//! surfaces before/after rotation. We emit the same content as numbers:
+//! per-token max series, value histograms, and channel-absmax profiles,
+//! written to results/*.csv by the fig2 runner.
+
+use crate::tensor::{stats, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct DistStats {
+    pub mean_token_max: f32,
+    pub p99_token_max: f32,
+    pub max_channel_absmax: f32,
+    pub median_channel_absmax: f32,
+    pub mean_token_kurtosis: f32,
+    /// #channels whose absmax exceeds 5× the median (the "outlier channels")
+    pub outlier_channels: usize,
+}
+
+pub fn dist_stats(rows: &Tensor) -> DistStats {
+    let (_r, c) = rows.as_2d();
+    let token_max = stats::row_absmax(rows);
+    let mut channel_absmax = vec![0.0f32; c];
+    let (r, _) = rows.as_2d();
+    for i in 0..r {
+        for (j, v) in rows.row(i).iter().enumerate() {
+            channel_absmax[j] = channel_absmax[j].max(v.abs());
+        }
+    }
+    let median = stats::quantile(&channel_absmax, 0.5);
+    let kurt = stats::kurtosis_rows(rows);
+    DistStats {
+        mean_token_max: token_max.iter().sum::<f32>() / token_max.len() as f32,
+        p99_token_max: stats::quantile(&token_max, 0.99),
+        max_channel_absmax: channel_absmax.iter().cloned().fold(0.0, f32::max),
+        median_channel_absmax: median,
+        mean_token_kurtosis: kurt.iter().sum::<f32>() / kurt.len() as f32,
+        outlier_channels: channel_absmax.iter().filter(|&&a| a > 5.0 * median.max(1e-8)).count(),
+    }
+}
+
+/// Histogram of all values (Fig. 2's density panel, as counts).
+pub fn value_histogram(rows: &Tensor, bins: usize) -> (f32, f32, Vec<usize>) {
+    let lo = rows.data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = rows.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) + 1e-6;
+    (lo, hi, stats::histogram(&rows.data, lo, hi, bins))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::hadamard::random_hadamard;
+    use crate::tensor::matmul::rows_matmul;
+    use crate::util::Rng;
+
+    #[test]
+    fn rotation_shrinks_outlier_stats() {
+        let mut rng = Rng::new(0);
+        let mut x = Tensor::randn(&[256, 64], 1.0, &mut rng);
+        for i in 0..256 {
+            x.row_mut(i)[7] *= 25.0;
+        }
+        let before = dist_stats(&x);
+        let rot = rows_matmul(&x, &random_hadamard(64, &mut rng));
+        let after = dist_stats(&rot);
+        assert!(before.outlier_channels >= 1);
+        assert!(after.outlier_channels < before.outlier_channels);
+        assert!(after.mean_token_max < before.mean_token_max);
+        assert!(after.mean_token_kurtosis < before.mean_token_kurtosis);
+    }
+
+    #[test]
+    fn histogram_total_matches() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let (_, _, h) = value_histogram(&x, 10);
+        assert_eq!(h.iter().sum::<usize>(), 256);
+    }
+}

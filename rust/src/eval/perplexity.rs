@@ -1,0 +1,54 @@
+//! Held-out perplexity through the fp / quantized NLL graphs
+//! (the "Wiki (↓)" column of every paper table).
+
+use anyhow::Result;
+
+use crate::calib::TokenDataset;
+use crate::pipeline::PreparedModel;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{IntTensor, Tensor};
+
+/// exp(Σ nll / Σ count) over `n_batches` deterministic eval batches.
+pub fn perplexity(
+    rt: &Runtime,
+    pm: &PreparedModel,
+    data: &TokenDataset,
+    n_batches: usize,
+) -> Result<f32> {
+    let meta = &pm.params.meta;
+    let batches = data.eval_batches(meta.eval_batch, n_batches);
+    let (mut nll_sum, mut cnt_sum) = (0.0f64, 0.0f64);
+    for b in &batches {
+        let mask = Tensor::ones(&b.shape);
+        let (nll, cnt) = run_nll(rt, pm, b, &mask)?;
+        nll_sum += nll.data.iter().map(|&x| x as f64).sum::<f64>();
+        cnt_sum += cnt.data.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    Ok(((nll_sum / cnt_sum.max(1.0)).exp()) as f32)
+}
+
+/// One masked-NLL artifact call on the right graph for this model.
+pub fn run_nll(
+    rt: &Runtime,
+    pm: &PreparedModel,
+    tokens: &IntTensor,
+    mask: &Tensor,
+) -> Result<(Tensor, Tensor)> {
+    let meta = &pm.params.meta;
+    let mut inputs = pm.params.as_values();
+    let name = if pm.quantized {
+        inputs.push(Value::F32(pm.rots.r3.clone()));
+        inputs.push(Value::F32(pm.rots.r4.clone()));
+        inputs.push(Value::F32(pm.rots.r5.clone()));
+        format!("fwd_nll_quant_{}", meta.name)
+    } else {
+        format!("fwd_nll_{}", meta.name)
+    };
+    inputs.push(Value::I32(tokens.clone()));
+    inputs.push(Value::F32(mask.clone()));
+    let art = rt.load(&name)?;
+    let mut out = art.run(&inputs)?;
+    let cnt = out.remove(1).into_f32()?;
+    let nll = out.remove(0).into_f32()?;
+    Ok((nll, cnt))
+}

@@ -1,0 +1,120 @@
+//! lm-eval-style multiple-choice scoring: for each option, compute the
+//! NLL of the option tokens given the prompt, normalized by option length
+//! (lm-evaluation-harness's `acc_norm` — the variant robust to options of
+//! different byte lengths, which our numeric answers are); predict the
+//! argmin, run through the fp or quantized NLL graphs.
+
+use anyhow::Result;
+
+use crate::calib::{ByteTokenizer, Mcq};
+use crate::eval::perplexity::run_nll;
+use crate::pipeline::PreparedModel;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct McqScore {
+    pub accuracy: f32,
+    pub n: usize,
+    pub predictions: Vec<usize>,
+}
+
+/// Pack one (prompt, option) pair into a fixed-length row + option mask.
+/// Returns None if the pair does not fit the sequence length.
+fn pack(prompt: &str, option: &str, seq_len: usize) -> Option<(Vec<i32>, Vec<f32>)> {
+    let tok = ByteTokenizer;
+    let p = tok.encode(&format!("{prompt} "));
+    let o = tok.encode(option);
+    if p.len() + o.len() > seq_len {
+        return None;
+    }
+    let mut ids = Vec::with_capacity(seq_len);
+    let mut mask = vec![0.0f32; seq_len];
+    ids.extend_from_slice(&p);
+    for (k, &t) in o.iter().enumerate() {
+        mask[p.len() + k] = 1.0; // score exactly the option tokens
+        ids.push(t);
+    }
+    ids.resize(seq_len, b' ' as i32); // pad (masked out)
+    Some((ids, mask))
+}
+
+/// Score a set of MCQs; batches (question, option) rows through the model.
+pub fn score_mcqs(rt: &Runtime, pm: &PreparedModel, qs: &[Mcq]) -> Result<McqScore> {
+    anyhow::ensure!(!qs.is_empty(), "no questions");
+    let meta = &pm.params.meta;
+    let (b, t) = (meta.eval_batch, meta.seq_len);
+
+    // flatten to rows
+    let mut rows: Vec<(usize, usize, Vec<i32>, Vec<f32>)> = Vec::new(); // (q, opt, ids, mask)
+    for (qi, q) in qs.iter().enumerate() {
+        for (oi, opt) in q.options.iter().enumerate() {
+            let (ids, mask) = pack(&q.prompt, opt, t)
+                .ok_or_else(|| anyhow::anyhow!("question too long for seq_len {t}"))?;
+            rows.push((qi, oi, ids, mask));
+        }
+    }
+
+    // batched NLL
+    let mut scores = vec![vec![f32::INFINITY; 4]; qs.len()];
+    for chunk in rows.chunks(b) {
+        let mut ids = Vec::with_capacity(b * t);
+        let mut mask = Vec::with_capacity(b * t);
+        for (_, _, i, m) in chunk {
+            ids.extend_from_slice(i);
+            mask.extend_from_slice(m);
+        }
+        // pad the last partial batch with copies of row 0
+        for _ in chunk.len()..b {
+            ids.extend_from_slice(&chunk[0].2);
+            mask.extend_from_slice(&chunk[0].3);
+        }
+        let (nll, cnt) = run_nll(
+            rt,
+            pm,
+            &IntTensor::new(ids, vec![b, t]),
+            &Tensor::new(mask, vec![b, t]),
+        )?;
+        for (k, (qi, oi, _, _)) in chunk.iter().enumerate() {
+            // length-normalized (acc_norm): mean NLL per option token
+            scores[*qi][*oi] = nll.data[k] / cnt.data[k].max(1.0);
+        }
+    }
+
+    let mut correct = 0usize;
+    let mut predictions = Vec::with_capacity(qs.len());
+    for (qi, q) in qs.iter().enumerate() {
+        let pred = scores[qi]
+            .iter()
+            .take(q.options.len())
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        predictions.push(pred);
+        if pred == q.correct {
+            correct += 1;
+        }
+    }
+    Ok(McqScore { accuracy: correct as f32 / qs.len() as f32, n: qs.len(), predictions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_masks_only_option() {
+        let (ids, mask) = pack("the answer is", "yes", 32).unwrap();
+        assert_eq!(ids.len(), 32);
+        let prompt_len = "the answer is ".len();
+        assert!(mask[..prompt_len].iter().all(|&m| m == 0.0));
+        assert!(mask[prompt_len..prompt_len + 3].iter().all(|&m| m == 1.0));
+        assert!(mask[prompt_len + 3..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn pack_rejects_overflow() {
+        assert!(pack(&"x".repeat(60), "yes", 32).is_none());
+    }
+}

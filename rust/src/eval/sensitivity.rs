@@ -1,0 +1,98 @@
+//! Quantization sensitivity Γ(x, ε) — paper Fig. 1 (Chmiel et al. 2020).
+//!
+//! For captured activation rows, find the MSE-optimal symmetric 4-bit step
+//! size s̃ per row, then measure how much the MSE rises when the step is
+//! perturbed to α·s̃. Distributions closer to uniform are flatter in α —
+//! the paper's evidence that KurTail's rotation beats random Hadamard.
+
+use crate::config::QuantScheme;
+use crate::quant::fakequant::{optimal_step, row_mse_at_step};
+use crate::tensor::Tensor;
+
+/// One sensitivity curve: mean over rows of MSE(α·s̃) − MSE(s̃).
+pub fn sensitivity_curve(rows: &Tensor, alphas: &[f32], scheme: &QuantScheme) -> Vec<f32> {
+    let (r, c) = rows.as_2d();
+    let mut curve = vec![0.0f64; alphas.len()];
+    for i in 0..r {
+        let row = &rows.data[i * c..(i + 1) * c];
+        let s_opt = optimal_step(row, scheme);
+        let base = row_mse_at_step(row, s_opt, scheme) as f64;
+        for (k, &a) in alphas.iter().enumerate() {
+            let m = row_mse_at_step(row, a * s_opt, scheme) as f64;
+            curve[k] += (m - base).abs();
+        }
+    }
+    curve.iter().map(|&v| (v / r as f64) as f32).collect()
+}
+
+/// Normalized sensitivity (relative to the optimal-step MSE) — what the
+/// paper's y-axis effectively shows; robust to overall scale differences
+/// between rotation bases.
+pub fn sensitivity_curve_normalized(rows: &Tensor, alphas: &[f32], scheme: &QuantScheme) -> Vec<f32> {
+    let (r, c) = rows.as_2d();
+    let mut curve = vec![0.0f64; alphas.len()];
+    for i in 0..r {
+        let row = &rows.data[i * c..(i + 1) * c];
+        let s_opt = optimal_step(row, scheme);
+        let base = (row_mse_at_step(row, s_opt, scheme) as f64).max(1e-12);
+        for (k, &a) in alphas.iter().enumerate() {
+            let m = row_mse_at_step(row, a * s_opt, scheme) as f64;
+            curve[k] += ((m - base) / base).abs();
+        }
+    }
+    curve.iter().map(|&v| (v / r as f64) as f32).collect()
+}
+
+/// The α grid used by the figure.
+pub fn alpha_grid() -> Vec<f32> {
+    (0..=20).map(|i| 0.5 + i as f32 * 0.05).collect() // 0.5 .. 1.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gen_rows(rng: &mut Rng, heavy: bool) -> Tensor {
+        let (r, c) = (64, 128);
+        let mut t = Tensor::zeros(&[r, c]);
+        for v in &mut t.data {
+            *v = if heavy { rng.laplace(1.0) } else { rng.range(-1.0, 1.0) };
+        }
+        t
+    }
+
+    #[test]
+    fn curve_is_zero_at_alpha_one() {
+        let mut rng = Rng::new(0);
+        let rows = gen_rows(&mut rng, true);
+        let curve = sensitivity_curve(&rows, &[1.0], &QuantScheme::act4());
+        assert!(curve[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_rows_less_sensitive_than_laplace() {
+        // Theorem 2.2 of the paper (Chmiel et al. 2020), empirically —
+        // on variance-matched rows so the raw MSE scales are comparable.
+        let mut rng = Rng::new(1);
+        let unif = gen_rows(&mut rng, false).scale(3f32.sqrt()); // var → 1
+        let lap = gen_rows(&mut rng, true).scale(1.0 / 2f32.sqrt()); // var → 1
+        let s = QuantScheme { clip_quantile: None, ..QuantScheme::act4() };
+        // α > 1 (step over-estimation): the regime where the theorem's
+        // no-saturation analysis applies. α < 1 is dominated by the
+        // clipping cliff, which hits the uniform's hard range first.
+        let alphas = [1.1, 1.2, 1.3, 1.5];
+        let cu = sensitivity_curve(&unif, &alphas, &s);
+        let cl = sensitivity_curve(&lap, &alphas, &s);
+        let su: f32 = cu.iter().sum();
+        let sl: f32 = cl.iter().sum();
+        assert!(su < sl, "uniform {su} !< laplace {sl}");
+    }
+
+    #[test]
+    fn grid_covers_half_to_one_and_half() {
+        let g = alpha_grid();
+        assert!((g[0] - 0.5).abs() < 1e-6);
+        assert!((g.last().unwrap() - 1.5).abs() < 1e-5);
+    }
+}

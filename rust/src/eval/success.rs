@@ -1,0 +1,49 @@
+//! Per-token max success rate — paper Table 1.
+//!
+//! "Success" = the rotated version of a token's activation vector has a
+//! smaller max |value| than the baseline version. Larger per-token max ⇒
+//! coarser dynamic quantization step ⇒ more error, so driving the max
+//! down is the mechanism by which rotations help (paper §2).
+
+use crate::tensor::{matmul::rows_matmul, stats::row_absmax, Tensor};
+
+/// Fraction of rows where `benchmark`-rotated max < `baseline`-rotated max.
+/// `None` rotation = vanilla (identity).
+pub fn success_rate(rows: &Tensor, baseline: Option<&Tensor>, benchmark: &Tensor) -> f32 {
+    let base_rows = match baseline {
+        Some(r) => rows_matmul(rows, r),
+        None => rows.clone(),
+    };
+    let bench_rows = rows_matmul(rows, benchmark);
+    let base_max = row_absmax(&base_rows);
+    let bench_max = row_absmax(&bench_rows);
+    let wins = base_max.iter().zip(&bench_max).filter(|(b, q)| q < b).count();
+    wins as f32 / base_max.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::hadamard::random_hadamard;
+    use crate::util::Rng;
+
+    #[test]
+    fn hadamard_beats_vanilla_on_outlier_data() {
+        let mut rng = Rng::new(0);
+        let mut x = Tensor::randn(&[512, 64], 1.0, &mut rng);
+        for i in 0..512 {
+            x.row_mut(i)[5] *= 30.0; // outlier channel
+        }
+        let h = random_hadamard(64, &mut rng);
+        let sr = success_rate(&x, None, &h);
+        assert!(sr > 0.95, "sr={sr}");
+    }
+
+    #[test]
+    fn identity_never_beats_itself() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[64, 32], 1.0, &mut rng);
+        let eye = Tensor::eye(32);
+        assert_eq!(success_rate(&x, None, &eye), 0.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Task suites: the 8 zero-shot analogs (paper Tables 9/10 columns), the
+//! 4-domain MMLU analog (Table 8), and the MathQA analog (Table 5).
+//!
+//! Analog mapping (DESIGN.md §2): each paper task is replaced by a
+//! synthetic MCQ family probing the same *kind* of capability, with the
+//! ground truth present in the training corpus so a trained tiny model
+//! scores above chance and quantization damage is measurable.
+
+use crate::calib::arithmetic::math_question;
+use crate::calib::facts::{Mcq, World, AUTHORS, BOOKS, DOMAINS};
+use crate::util::Rng;
+
+pub struct TaskSet {
+    pub name: String,
+    pub questions: Vec<Mcq>,
+}
+
+/// The 8 zero-shot task analogs (names follow the paper's columns).
+pub fn zero_shot_suite(world: &World, n_per_task: usize, seed: u64) -> Vec<TaskSet> {
+    let mut rng = Rng::new(seed ^ 0x87A5);
+    vec![
+        // ARC-E analog: easy sums (science-exam-easy → small arithmetic)
+        TaskSet {
+            name: "ARC-E".into(),
+            questions: (0..n_per_task).map(|_| easy_sum(&mut rng)).collect(),
+        },
+        // ARC-C analog: harder arithmetic (products / subtraction)
+        TaskSet {
+            name: "ARC-C".into(),
+            questions: (0..n_per_task).map(|_| math_question(&mut rng)).collect(),
+        },
+        // BoolQ analog: yes/no fact verification
+        TaskSet {
+            name: "BoolQ".into(),
+            questions: (0..n_per_task).map(|_| boolq(world, &mut rng)).collect(),
+        },
+        // HellaSwag analog: continuation ("X wrote" → book title)
+        TaskSet {
+            name: "HellaSwag".into(),
+            questions: continuation_set(world, n_per_task, &mut rng),
+        },
+        // OBQA analog: element → atomic number recall
+        TaskSet { name: "OBQA".into(), questions: world.questions("stem", n_per_task, &mut rng) },
+        // PIQA analog: perceptual attribute (animal → color/food)
+        TaskSet { name: "PIQA".into(), questions: world.questions("other", n_per_task, &mut rng) },
+        // SIQA analog: social attribute (person → job/city)
+        TaskSet { name: "SIQA".into(), questions: world.questions("social", n_per_task, &mut rng) },
+        // WinoGrande analog: referent binding (book → author)
+        TaskSet {
+            name: "WinoGrande".into(),
+            questions: world.questions("humanities", n_per_task, &mut rng),
+        },
+    ]
+}
+
+/// The 4-domain MMLU analog (Table 8 rows: Human/Other/STEM/S-Sci).
+pub fn mmlu_suite(world: &World, n_per_domain: usize, seed: u64) -> Vec<TaskSet> {
+    let mut rng = Rng::new(seed ^ 0x3317);
+    DOMAINS
+        .iter()
+        .map(|d| TaskSet {
+            name: d.to_string(),
+            questions: world.questions(d, n_per_domain, &mut rng),
+        })
+        .collect()
+}
+
+/// MathQA analog (Table 5).
+pub fn mathqa_suite(n: usize, seed: u64) -> TaskSet {
+    let mut rng = Rng::new(seed ^ 0x3A7B);
+    TaskSet { name: "MathQA".into(), questions: (0..n).map(|_| math_question(&mut rng)).collect() }
+}
+
+// ------------------------------------------------------------ helpers
+
+fn easy_sum(rng: &mut Rng) -> Mcq {
+    let a = rng.below(20) as i64;
+    let b = rng.below(20) as i64;
+    let correct_val = a + b;
+    let mut opts = vec![correct_val];
+    while opts.len() < 4 {
+        let sign = if rng.below(2) == 0 { 1 } else { -1 };
+        let c = (correct_val + sign * (1 + rng.below(6) as i64)).max(0);
+        if !opts.contains(&c) {
+            opts.push(c);
+        }
+    }
+    let target = correct_val.to_string();
+    let mut opts: Vec<String> = opts.into_iter().map(|v| v.to_string()).collect();
+    rng.shuffle(&mut opts);
+    let correct = opts.iter().position(|o| *o == target).unwrap();
+    Mcq { prompt: format!("{a} plus {b} is"), options: opts, correct }
+}
+
+fn boolq(world: &World, rng: &mut Rng) -> Mcq {
+    let (_, animals, foods) = crate::calib::facts::entities();
+    let a = rng.below(animals.len());
+    let truth = rng.below(2) == 0;
+    let food_idx = if truth {
+        world.food_of_animal[a]
+    } else {
+        let mut f = rng.below(foods.len());
+        while f == world.food_of_animal[a] {
+            f = rng.below(foods.len());
+        }
+        f
+    };
+    Mcq {
+        prompt: format!("question: the {} eats {}. answer:", animals[a], foods[food_idx]),
+        options: vec!["yes".into(), "no".into()],
+        correct: if truth { 0 } else { 1 },
+    }
+}
+
+fn continuation_set(world: &World, n: usize, rng: &mut Rng) -> Vec<Mcq> {
+    // "X wrote" → book title (reverse direction of the author question)
+    (0..n)
+        .map(|_| {
+            let b = rng.below(world.author_of_book.len());
+            let author = world.author_of_book[b];
+            let mut opts = vec![b];
+            while opts.len() < 4 {
+                let cand = rng.below(world.author_of_book.len());
+                if world.author_of_book[cand] != author && !opts.contains(&cand) {
+                    opts.push(cand);
+                }
+            }
+            let target = BOOKS[b].to_string();
+            let mut options: Vec<String> = opts.iter().map(|&i| BOOKS[i].to_string()).collect();
+            rng.shuffle(&mut options);
+            let correct = options.iter().position(|o| *o == target).unwrap();
+            Mcq { prompt: format!("{} wrote", AUTHORS[author]), options, correct }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_tasks_with_questions() {
+        let w = World::generate(0);
+        let sets = zero_shot_suite(&w, 10, 1);
+        assert_eq!(sets.len(), 8);
+        let names: Vec<_> = sets.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"BoolQ") && names.contains(&"WinoGrande"));
+        for s in &sets {
+            assert_eq!(s.questions.len(), 10, "{}", s.name);
+            for q in &s.questions {
+                assert!(q.correct < q.options.len());
+            }
+        }
+    }
+
+    #[test]
+    fn mmlu_has_four_domains() {
+        let w = World::generate(0);
+        let sets = mmlu_suite(&w, 5, 2);
+        assert_eq!(sets.len(), 4);
+    }
+
+    #[test]
+    fn boolq_truth_balance() {
+        let w = World::generate(0);
+        let mut rng = Rng::new(3);
+        let qs: Vec<Mcq> = (0..200).map(|_| boolq(&w, &mut rng)).collect();
+        let yes = qs.iter().filter(|q| q.correct == 0).count();
+        assert!(yes > 60 && yes < 140, "yes={yes}");
+    }
+
+    #[test]
+    fn easy_sums_are_correct() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let q = easy_sum(&mut rng);
+            let parts: Vec<&str> = q.prompt.split(' ').collect();
+            let a: i64 = parts[0].parse().unwrap();
+            let b: i64 = parts[2].parse().unwrap();
+            assert_eq!(q.options[q.correct], (a + b).to_string());
+        }
+    }
+
+    #[test]
+    fn continuation_correct_is_the_right_book() {
+        let w = World::generate(0);
+        let mut rng = Rng::new(5);
+        for q in continuation_set(&w, 20, &mut rng) {
+            let author_idx = AUTHORS.iter().position(|a| q.prompt.starts_with(a)).unwrap();
+            let book_idx = BOOKS.iter().position(|b| *b == q.options[q.correct]).unwrap();
+            assert_eq!(w.author_of_book[book_idx], author_idx);
+        }
+    }
+
+    #[test]
+    fn suites_are_deterministic() {
+        let w = World::generate(0);
+        let a = mathqa_suite(10, 7);
+        let b = mathqa_suite(10, 7);
+        for (x, y) in a.questions.iter().zip(&b.questions) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.options, y.options);
+        }
+        let _ = w;
+    }
+}

@@ -1,0 +1,79 @@
+//! Calibration ablations: Table 6 (dataset) and Table 7 (sample size).
+
+use anyhow::Result;
+
+use crate::config::{Method, PipelineConfig, WeightQuantizer};
+use crate::eval::evaluate;
+use crate::pipeline::report::{save_table, Table};
+
+use super::ExpCtx;
+
+fn pct(v: f32) -> String {
+    format!("{:.1}", v * 100.0)
+}
+
+/// Table 6: calibration dataset ablation (wiki / c4 / alpaca / ptb /
+/// combined), plus the QuaRot (no-training) reference row.
+pub fn table6(ctx: &ExpCtx) -> Result<()> {
+    let model = if ctx.fast { "tiny" } else { "small" };
+    let pipe = ctx.pipeline(model)?;
+    let mut t = Table::new(
+        "Table 6 — KurTail calibration-dataset ablation (paper: every dataset beats QuaRot)",
+        &["Cal Dataset", "Wiki (↓)", "0-shot (↑)", "MMLU (↑)"],
+    );
+
+    // reference row: QuaRot needs no calibration data
+    let (s, _) = ctx.run_cell(&pipe, Method::QuaRot, WeightQuantizer::Gptq)?;
+    t.row(vec!["Quarot".into(), format!("{:.3}", s.wiki_ppl), pct(s.zero_shot_avg), pct(s.mmlu_avg)]);
+
+    for ds in ["wikitext-2", "c4", "alpaca", "ptb", "combined"] {
+        let mut pcfg = PipelineConfig::new(model, Method::KurTail);
+        pcfg.seed = ctx.seed;
+        pcfg.calib.seed = ctx.seed;
+        pcfg.calib.dataset = ds.to_string();
+        if ctx.fast {
+            pcfg.calib.n_samples = 64;
+            pcfg.calib.iters = 30;
+        }
+        let (pm, _) = pipe.quantize(&pcfg)?;
+        let s = evaluate(&pipe, &pm, ctx.n_questions(), ctx.eval_batches())?;
+        println!("  [{ds}] ppl {:.3}", s.wiki_ppl);
+        t.row(vec![
+            ds.to_string(),
+            format!("{:.3}", s.wiki_ppl),
+            pct(s.zero_shot_avg),
+            pct(s.mmlu_avg),
+        ]);
+    }
+    t.print();
+    save_table(&t, "table6")?;
+    Ok(())
+}
+
+/// Table 7: calibration sample-size ablation (128 / 256 / 512 / 1024).
+pub fn table7(ctx: &ExpCtx) -> Result<()> {
+    let model = if ctx.fast { "tiny" } else { "small" };
+    let pipe = ctx.pipeline(model)?;
+    let mut t = Table::new(
+        "Table 7 — KurTail calibration-size ablation on the combined dataset (saturates ~512)",
+        &["Cal Size", "Wiki (↓)", "0-shot (↑)", "MMLU (↑)"],
+    );
+    let sizes: &[usize] = if ctx.fast { &[32, 128] } else { &[128, 256, 512, 1024] };
+    for &n in sizes {
+        let mut pcfg = PipelineConfig::new(model, Method::KurTail);
+        pcfg.seed = ctx.seed;
+        pcfg.calib.seed = ctx.seed;
+        pcfg.calib.dataset = "combined".into();
+        pcfg.calib.n_samples = n;
+        if ctx.fast {
+            pcfg.calib.iters = 30;
+        }
+        let (pm, _) = pipe.quantize(&pcfg)?;
+        let s = evaluate(&pipe, &pm, ctx.n_questions(), ctx.eval_batches())?;
+        println!("  [{n}] ppl {:.3}", s.wiki_ppl);
+        t.row(vec![n.to_string(), format!("{:.3}", s.wiki_ppl), pct(s.zero_shot_avg), pct(s.mmlu_avg)]);
+    }
+    t.print();
+    save_table(&t, "table7")?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Training-cost comparison (paper §3 "Training Cost" / §4 Setup):
+//! SpinQuant needs the full model + autograd in memory every step;
+//! KurTail only layer-wise inference + a bounded activation pool.
+//! The paper's 4×H100-vs-1-GPU asymmetry shows up here as wall-clock and
+//! incremental peak-RSS of the rotation-learning stage.
+
+use anyhow::Result;
+
+use crate::config::{Method, WeightQuantizer};
+use crate::pipeline::report::{save_table, Table};
+
+use super::ExpCtx;
+
+pub fn training_cost(ctx: &ExpCtx) -> Result<()> {
+    let model = if ctx.fast { "tiny" } else { "base" };
+    let pipe = ctx.pipeline(model)?;
+    let mut t = Table::new(
+        "Training cost — rotation learning stage (paper: SpinQuant 4×H100·2h vs KurTail 1×H100·1h for 70B)",
+        &["Method", "capture (s)", "optimize (s)", "total (s)", "peak RSS (MiB)"],
+    );
+    for method in [Method::QuaRot, Method::SpinQuant, Method::KurTail] {
+        let (_, cost) = ctx.run_cell(&pipe, method, WeightQuantizer::Rtn)?;
+        println!(
+            "  [{}] optimize {:.2}s total {:.2}s rss {:.0}MiB",
+            method.label(),
+            cost.optimize_s,
+            cost.total_s,
+            cost.peak_rss_mib
+        );
+        t.row(vec![
+            method.label().to_string(),
+            format!("{:.2}", cost.capture_s),
+            format!("{:.2}", cost.optimize_s),
+            format!("{:.2}", cost.total_s),
+            format!("{:.0}", cost.peak_rss_mib),
+        ]);
+    }
+    t.print();
+    save_table(&t, "cost")?;
+    Ok(())
+}

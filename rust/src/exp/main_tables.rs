@@ -1,0 +1,199 @@
+//! Main result tables: Table 2 (model family × method), Table 3 (Phi),
+//! Table 4 (MoE/RTN), Table 5 (MathQA), Tables 8–10 (breakdowns).
+
+use anyhow::Result;
+
+use crate::config::{Method, WeightQuantizer};
+use crate::pipeline::report::{save_table, Table};
+
+use super::ExpCtx;
+
+fn pct(v: f32) -> String {
+    format!("{:.1}", v * 100.0)
+}
+
+/// Table 2: Wiki ppl / 0-shot / MMLU across the model family × methods
+/// (weights GPTQ, W4A4KV4 — the paper's headline table).
+pub fn table2(ctx: &ExpCtx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 2 — W4A4KV4 comparison (weights GPTQ). Paper shape: 16-bit ≫ GPTQ-only; KurTail ≥ SpinQuant > QuaRot.",
+        &["Model", "Method", "Wiki (↓)", "0-shot (↑)", "MMLU (↑)"],
+    );
+    for model in ctx.table2_models() {
+        let pipe = ctx.pipeline(model)?;
+        for method in Method::all() {
+            let (s, _) = ctx.run_cell(&pipe, method, WeightQuantizer::Gptq)?;
+            println!(
+                "  [{model}/{}] ppl {:.3}  0-shot {}  mmlu {}",
+                method.label(),
+                s.wiki_ppl,
+                pct(s.zero_shot_avg),
+                pct(s.mmlu_avg)
+            );
+            t.row(vec![
+                model.to_string(),
+                method.label().to_string(),
+                format!("{:.3}", s.wiki_ppl),
+                pct(s.zero_shot_avg),
+                pct(s.mmlu_avg),
+            ]);
+        }
+    }
+    t.print();
+    save_table(&t, "table2")?;
+    Ok(())
+}
+
+/// Table 3: architecture transfer — the Phi-style (GELU MLP) config.
+pub fn table3(ctx: &ExpCtx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 3 — Phi-style model (GELU MLP), W4A4KV4, weights GPTQ",
+        &["Method", "Wiki (↓)", "0-shot (↑)", "MMLU (↑)"],
+    );
+    let pipe = ctx.pipeline("phi")?;
+    for method in [Method::Fp16, Method::QuaRot, Method::KurTail] {
+        let (s, _) = ctx.run_cell(&pipe, method, WeightQuantizer::Gptq)?;
+        t.row(vec![
+            method.label().to_string(),
+            format!("{:.3}", s.wiki_ppl),
+            pct(s.zero_shot_avg),
+            pct(s.mmlu_avg),
+        ]);
+    }
+    t.print();
+    save_table(&t, "table3")?;
+    Ok(())
+}
+
+/// Table 4: Mixtral-style MoE with RTN weights (rotation shared across
+/// experts — the paper's §5.1 point).
+pub fn table4(ctx: &ExpCtx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 4 — MoE (4 experts, top-2), W4A4KV4, weights RTN",
+        &["Method", "Wiki (↓)", "0-shot (↑)", "MMLU (↑)"],
+    );
+    let pipe = ctx.pipeline("moe")?;
+    for (method, wq) in [
+        (Method::Fp16, WeightQuantizer::None),
+        (Method::GptqOnly, WeightQuantizer::Rtn), // "RTN" row: no rotations
+        (Method::QuaRot, WeightQuantizer::Rtn),
+        (Method::KurTail, WeightQuantizer::Rtn),
+    ] {
+        let (s, _) = ctx.run_cell(&pipe, method, wq)?;
+        let label = if method == Method::GptqOnly { "RTN" } else { method.label() };
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", s.wiki_ppl),
+            pct(s.zero_shot_avg),
+            pct(s.mmlu_avg),
+        ]);
+    }
+    t.print();
+    save_table(&t, "table4")?;
+    Ok(())
+}
+
+/// Table 5: MathQA accuracy across the model family.
+pub fn table5(ctx: &ExpCtx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 5 — MathQA-analog accuracy (%), W4A4KV4, weights GPTQ",
+        &["Model", "16-bit", "QuaRot", "KurTail"],
+    );
+    let mut models = ctx.table2_models();
+    models.push("phi");
+    for model in models {
+        let pipe = ctx.pipeline(model)?;
+        let mut cells = vec![model.to_string()];
+        for method in [Method::Fp16, Method::QuaRot, Method::KurTail] {
+            let (s, _) = ctx.run_cell(&pipe, method, WeightQuantizer::Gptq)?;
+            cells.push(pct(s.mathqa));
+        }
+        t.row(cells);
+    }
+    t.print();
+    save_table(&t, "table5")?;
+    Ok(())
+}
+
+/// Table 8: MMLU-analog per-domain breakdown.
+pub fn table8(ctx: &ExpCtx) -> Result<()> {
+    let model = if ctx.fast { "tiny" } else { "small" };
+    let mut t = Table::new(
+        "Table 8 — MMLU-analog per-domain accuracy (%), W4A4KV4 / GPTQ",
+        &["Model", "Method", "Human", "Other", "STEM", "S-Sci", "AVG"],
+    );
+    let pipe = ctx.pipeline(model)?;
+    for method in [Method::Fp16, Method::QuaRot, Method::SpinQuant, Method::KurTail] {
+        let (s, _) = ctx.run_cell(&pipe, method, WeightQuantizer::Gptq)?;
+        let find = |d: &str| {
+            s.per_domain
+                .iter()
+                .find(|(n, _)| n == d)
+                .map(|(_, a)| pct(*a))
+                .unwrap_or_default()
+        };
+        t.row(vec![
+            model.to_string(),
+            if method == Method::Fp16 { "Vanilla".into() } else { method.label().to_string() },
+            find("humanities"),
+            find("other"),
+            find("stem"),
+            find("social"),
+            pct(s.mmlu_avg),
+        ]);
+    }
+    t.print();
+    save_table(&t, "table8")?;
+    Ok(())
+}
+
+fn per_task_table(ctx: &ExpCtx, wq: WeightQuantizer, caption: &str, file: &str) -> Result<()> {
+    let model = if ctx.fast { "tiny" } else { "small" };
+    let task_names = ["ARC-C", "ARC-E", "BoolQ", "HellaSwag", "OBQA", "PIQA", "SIQA", "WinoGrande"];
+    let mut headers = vec!["Model", "Method"];
+    headers.extend(task_names);
+    headers.push("AVG");
+    let mut t = Table::new(caption, &headers);
+    let pipe = ctx.pipeline(model)?;
+    let methods: &[Method] = if wq == WeightQuantizer::Rtn {
+        &[Method::Fp16, Method::QuaRot, Method::KurTail]
+    } else {
+        &[Method::Fp16, Method::QuaRot, Method::SpinQuant, Method::KurTail]
+    };
+    for &method in methods {
+        let (s, _) = ctx.run_cell(&pipe, method, wq)?;
+        let mut cells = vec![
+            model.to_string(),
+            if method == Method::Fp16 { "Vanilla".into() } else { method.label().to_string() },
+        ];
+        for name in task_names {
+            let acc = s.per_task.iter().find(|(n, _)| n == name).map(|(_, a)| *a).unwrap_or(0.0);
+            cells.push(pct(acc));
+        }
+        cells.push(pct(s.zero_shot_avg));
+        t.row(cells);
+    }
+    t.print();
+    save_table(&t, file)?;
+    Ok(())
+}
+
+/// Table 9: per-task zero-shot breakdown, GPTQ weights.
+pub fn table9(ctx: &ExpCtx) -> Result<()> {
+    per_task_table(
+        ctx,
+        WeightQuantizer::Gptq,
+        "Table 9 — zero-shot-analog per-task accuracy (%), W4A4KV4 / GPTQ",
+        "table9",
+    )
+}
+
+/// Table 10: per-task zero-shot breakdown, RTN weights.
+pub fn table10(ctx: &ExpCtx) -> Result<()> {
+    per_task_table(
+        ctx,
+        WeightQuantizer::Rtn,
+        "Table 10 — zero-shot-analog per-task accuracy (%), W4A4KV4 / RTN",
+        "table10",
+    )
+}

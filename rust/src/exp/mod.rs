@@ -1,0 +1,113 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each runner regenerates the corresponding paper artifact on the tiny
+//! model family and prints a paper-shaped table (plus results/*.{md,json,csv}).
+//! `kurtail exp <id>` dispatches here.
+
+pub mod ablations;
+pub mod analysis;
+pub mod cost;
+pub mod main_tables;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{Method, PipelineConfig, WeightQuantizer};
+use crate::eval::{evaluate, EvalSummary};
+use crate::pipeline::{MethodCost, Pipeline};
+use crate::runtime::Runtime;
+
+/// Shared experiment context.
+pub struct ExpCtx {
+    pub rt: Arc<Runtime>,
+    /// Fast mode: fewer questions / batches / training steps (CI-sized).
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl ExpCtx {
+    pub fn new(artifacts_dir: &str, fast: bool, seed: u64) -> Result<Self> {
+        Ok(Self { rt: Arc::new(Runtime::new(artifacts_dir)?), fast, seed })
+    }
+
+    pub fn n_questions(&self) -> usize {
+        if self.fast {
+            12
+        } else {
+            50
+        }
+    }
+
+    pub fn eval_batches(&self) -> usize {
+        if self.fast {
+            4
+        } else {
+            16
+        }
+    }
+
+    pub fn table2_models(&self) -> Vec<&'static str> {
+        if self.fast {
+            vec!["tiny"]
+        } else {
+            vec!["tiny", "small", "base"]
+        }
+    }
+
+    pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
+        Pipeline::new(self.rt.clone(), model, self.seed, self.fast, true)
+    }
+
+    /// One (model, method) cell: quantize + evaluate.
+    pub fn run_cell(
+        &self,
+        pipe: &Pipeline,
+        method: Method,
+        wq: WeightQuantizer,
+    ) -> Result<(EvalSummary, MethodCost)> {
+        let mut pcfg = PipelineConfig::new(&pipe.cfg_name, method);
+        pcfg.weight_quantizer = wq;
+        pcfg.seed = self.seed;
+        pcfg.calib.seed = self.seed;
+        if self.fast {
+            pcfg.calib.n_samples = 64;
+            pcfg.calib.iters = 30;
+        }
+        let (pm, cost) = pipe.quantize(&pcfg)?;
+        let summary = evaluate(pipe, &pm, self.n_questions(), self.eval_batches())?;
+        Ok((summary, cost))
+    }
+}
+
+/// Dispatch an experiment by id (table1..table10, fig1, fig2, cost, all).
+pub fn run(ctx: &ExpCtx, id: &str) -> Result<()> {
+    match id {
+        "fig1" => analysis::fig1(ctx),
+        "fig2" => analysis::fig2(ctx),
+        "table1" => analysis::table1(ctx),
+        "table2" => main_tables::table2(ctx),
+        "table3" => main_tables::table3(ctx),
+        "table4" => main_tables::table4(ctx),
+        "table5" => main_tables::table5(ctx),
+        "table6" => ablations::table6(ctx),
+        "table7" => ablations::table7(ctx),
+        "table8" => main_tables::table8(ctx),
+        "table9" => main_tables::table9(ctx),
+        "table10" => main_tables::table10(ctx),
+        "cost" => cost::training_cost(ctx),
+        "all" => {
+            for id in [
+                "fig1", "fig2", "table1", "table2", "table3", "table4", "table5", "table6",
+                "table7", "table8", "table9", "table10", "cost",
+            ] {
+                println!("\n================ {id} ================");
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (have fig1, fig2, table1..table10, cost, all)"
+        ),
+    }
+}

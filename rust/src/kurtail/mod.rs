@@ -1,0 +1,12 @@
+//! KurTail rotation learning — the paper's contribution (§3).
+//!
+//! The Rust side owns exactly what the paper describes: layer-wise
+//! inference to capture block inputs, shuffling the activations of *all*
+//! layers and blocks together, and a 100-iteration Cayley-Adam loop on
+//! the kurtosis loss — executed step-by-step through the AOT
+//! `kurtail_step_d{D}` artifact. Peak memory is one layer's activations
+//! plus a bounded row reservoir (vs. SpinQuant's full-model autograd).
+
+pub mod optimizer;
+
+pub use optimizer::{learn_rotations, CayleyOutcome, KurtailReport};

@@ -1,0 +1,28 @@
+//! # KurTail — kurtosis-based LLM quantization (EMNLP 2025), reproduced
+//!
+//! Three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the post-training-quantization coordinator:
+//!   corpora, tokenizer, trainer driver, layer-wise activation capture,
+//!   rotation learning (Cayley-Adam over kurtosis loss), rotation fusion,
+//!   RTN/GPTQ weight quantization, baselines (QuaRot, SpinQuant-lite), the
+//!   evaluation harness, and one experiment runner per paper table/figure.
+//! * **L2/L1 (python/compile, build-time only)** — JAX model graphs and
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed here
+//!   through PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod baselines;
+pub mod calib;
+pub mod config;
+pub mod eval;
+pub mod exp;
+pub mod kurtail;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod rotation;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

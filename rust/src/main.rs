@@ -1,0 +1,203 @@
+//! KurTail CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! kurtail exp <id>           run a paper experiment (fig1, fig2, table1..10, cost, all)
+//! kurtail train <model>      pretrain a tiny model and report the loss curve
+//! kurtail quantize <model>   run the full PTQ pipeline for one method
+//! kurtail generate <model>   sample text through the (quantized) decode path
+//! kurtail list               show artifacts + model configs
+//! ```
+//!
+//! Global flags: --artifacts <dir> (default ./artifacts), --fast, --seed <n>.
+//! Arg parsing is hand-rolled (offline build — no clap).
+
+use std::process::ExitCode;
+
+use kurtail::config::{Method, PipelineConfig, WeightQuantizer};
+use kurtail::eval::evaluate;
+use kurtail::exp::{self, ExpCtx};
+use kurtail::model::generate::Generator;
+use kurtail::runtime::Runtime;
+
+struct Args {
+    cmd: String,
+    positional: Vec<String>,
+    artifacts: String,
+    fast: bool,
+    seed: u64,
+    method: Method,
+    weights: WeightQuantizer,
+    prompt: String,
+    tokens: usize,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut a = Args {
+        cmd: String::new(),
+        positional: Vec::new(),
+        artifacts: "artifacts".into(),
+        fast: std::env::var("KURTAIL_FAST").is_ok(),
+        seed: 0,
+        method: Method::KurTail,
+        weights: WeightQuantizer::Gptq,
+        prompt: "the author of ".into(),
+        tokens: 48,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        let mut take = |name: &str| -> Result<String, String> {
+            it.next().ok_or_else(|| format!("{name} needs a value"))
+        };
+        match arg.as_str() {
+            "--artifacts" => a.artifacts = take("--artifacts")?,
+            "--fast" => a.fast = true,
+            "--seed" => a.seed = take("--seed")?.parse().map_err(|e| format!("--seed: {e}"))?,
+            "--method" => {
+                a.method = match take("--method")?.to_ascii_lowercase().as_str() {
+                    "fp16" | "16bit" => Method::Fp16,
+                    "gptq" => Method::GptqOnly,
+                    "quarot" => Method::QuaRot,
+                    "spinquant" => Method::SpinQuant,
+                    "kurtail" => Method::KurTail,
+                    m => return Err(format!("unknown method '{m}'")),
+                }
+            }
+            "--weights" => {
+                a.weights = match take("--weights")?.to_ascii_lowercase().as_str() {
+                    "rtn" => WeightQuantizer::Rtn,
+                    "gptq" => WeightQuantizer::Gptq,
+                    "none" => WeightQuantizer::None,
+                    w => return Err(format!("unknown weight quantizer '{w}'")),
+                }
+            }
+            "--prompt" => a.prompt = take("--prompt")?,
+            "--tokens" => {
+                a.tokens = take("--tokens")?.parse().map_err(|e| format!("--tokens: {e}"))?
+            }
+            flag if flag.starts_with("--") => return Err(format!("unknown flag '{flag}'")),
+            pos => {
+                if a.cmd.is_empty() {
+                    a.cmd = pos.to_string();
+                } else {
+                    a.positional.push(pos.to_string());
+                }
+            }
+        }
+    }
+    Ok(a)
+}
+
+fn usage() {
+    eprintln!(
+        "usage: kurtail <command> [args] [--artifacts DIR] [--fast] [--seed N]\n\
+         commands:\n\
+         \x20 exp <id>                         fig1|fig2|table1..table10|cost|all\n\
+         \x20 train <model>                    pretrain (tiny|small|base|phi|moe)\n\
+         \x20 quantize <model> [--method M] [--weights W]   full PTQ pipeline + eval\n\
+         \x20 generate <model> [--method M] [--prompt P] [--tokens N]\n\
+         \x20 list                             artifacts + configs"
+    );
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.cmd.is_empty() {
+        usage();
+        return ExitCode::FAILURE;
+    }
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.cmd.as_str() {
+        "exp" => {
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
+            exp::run(&ctx, id)
+        }
+        "train" => {
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("tiny");
+            let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
+            let pipe = ctx.pipeline(model)?;
+            println!(
+                "model {model}: {} params, train corpus {} sequences",
+                pipe.fp_params.param_count(),
+                pipe.bundle.train.n_sequences()
+            );
+            Ok(())
+        }
+        "quantize" => {
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("small");
+            let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
+            let pipe = ctx.pipeline(model)?;
+            let mut pcfg = PipelineConfig::new(model, args.method);
+            pcfg.weight_quantizer = args.weights;
+            pcfg.seed = args.seed;
+            pcfg.calib.seed = args.seed;
+            if args.fast {
+                pcfg.calib.n_samples = 64;
+                pcfg.calib.iters = 30;
+            }
+            let (pm, cost) = pipe.quantize(&pcfg)?;
+            let s = evaluate(&pipe, &pm, ctx.n_questions(), ctx.eval_batches())?;
+            println!("\nmethod       : {}", args.method.label());
+            println!("weights      : {}", args.weights.label());
+            println!(
+                "rotation cost: {:.2}s (capture {:.2}s, optimize {:.2}s)",
+                cost.total_s, cost.capture_s, cost.optimize_s
+            );
+            println!("wiki ppl     : {:.3}", s.wiki_ppl);
+            println!("0-shot avg   : {:.1}%", s.zero_shot_avg * 100.0);
+            println!("mmlu avg     : {:.1}%", s.mmlu_avg * 100.0);
+            println!("mathqa       : {:.1}%", s.mathqa * 100.0);
+            Ok(())
+        }
+        "generate" => {
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("small");
+            let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
+            let pipe = ctx.pipeline(model)?;
+            let mut pcfg = PipelineConfig::new(model, args.method);
+            pcfg.seed = args.seed;
+            pcfg.calib.seed = args.seed;
+            if args.fast {
+                pcfg.calib.n_samples = 64;
+                pcfg.calib.iters = 30;
+            }
+            let (pm, _) = pipe.quantize(&pcfg)?;
+            let rots = (pm.rots.r3.clone(), pm.rots.r4.clone(), pm.rots.r5.clone());
+            let gen = Generator::new(&pipe.rt, pm.params.clone(), pm.quantized, Some(rots))?;
+            for (i, text) in
+                gen.generate(&args.prompt, args.tokens, 0.8, args.seed)?.iter().enumerate()
+            {
+                println!("[{i}] {text}");
+            }
+            Ok(())
+        }
+        "list" => {
+            let rt = Runtime::new(&args.artifacts)?;
+            println!("configs:");
+            for (name, c) in &rt.manifest.configs {
+                println!(
+                    "  {name:<8} {}  d={} L={} H={} ff={} seq={} params≈{}",
+                    c.arch, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seq_len, c.param_count()
+                );
+            }
+            println!("artifacts: {}", rt.manifest.artifacts.len());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'"),
+    }
+}

@@ -1,0 +1,180 @@
+//! Layer-wise activation capture — the memory-efficiency centerpiece of
+//! KurTail (paper §3 "Training Cost"): instead of an end-to-end forward
+//! holding the whole model + autograd graph, we run `embed` then one
+//! `layer_fwd_cap` at a time, stream each layer's taps to consumers, and
+//! drop them. Peak memory is one layer's activations, not the model's.
+
+use anyhow::Result;
+
+use super::Params;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{IntTensor, Tensor};
+
+/// One layer's activation taps for one batch.
+pub struct LayerTaps {
+    pub layer: usize,
+    /// Residual-stream input of the MHSA block (pre-norm).
+    pub mhsa_in: Tensor,
+    /// Residual-stream input of the FFN block (pre-norm).
+    pub ffn_in: Tensor,
+    /// V activations (B, T, H, dh) — the R2 training signal.
+    pub v_heads: Tensor,
+    /// Wo input (B, T, d) — its GPTQ Hessian source.
+    pub attn_out: Tensor,
+    /// Wdown input (B, T, ff·E) — its GPTQ Hessian source.
+    pub ffn_mid: Tensor,
+}
+
+/// Stream taps for every (batch, layer) to `consume`; also returns the
+/// final hidden states per batch (for layer-wise NLL evaluation).
+pub fn capture_stream(
+    rt: &Runtime,
+    params: &Params,
+    batches: &[IntTensor],
+    mut consume: impl FnMut(&LayerTaps) -> Result<()>,
+) -> Result<Vec<Tensor>> {
+    let meta = &params.meta;
+    let embed_art = rt.load(&format!("embed_{}", meta.name))?;
+    let layer_art = rt.load(&format!("layer_fwd_cap_{}", meta.name))?;
+    // Pre-slice per-layer params once (reused across batches).
+    let layer_inputs: Vec<Vec<Value>> =
+        (0..meta.n_layers).map(|l| params.layer_values(l)).collect();
+
+    let mut finals = Vec::with_capacity(batches.len());
+    for batch in batches {
+        let x0 = embed_art
+            .run(&[Value::F32(params.get("embed").clone()), Value::I32(batch.clone())])?
+            .remove(0)
+            .into_f32()?;
+        let mut x = x0;
+        for l in 0..meta.n_layers {
+            let mut inputs = layer_inputs[l].clone();
+            inputs.push(Value::F32(x.clone()));
+            let mut out = layer_art.run(&inputs)?;
+            // outputs: y, ffn_in, v_heads, attn_out, ffn_mid
+            let ffn_mid = out.remove(4).into_f32()?;
+            let attn_out = out.remove(3).into_f32()?;
+            let v_heads = out.remove(2).into_f32()?;
+            let ffn_in = out.remove(1).into_f32()?;
+            let y = out.remove(0).into_f32()?;
+            consume(&LayerTaps { layer: l, mhsa_in: x, ffn_in, v_heads, attn_out, ffn_mid })?;
+            x = y;
+        }
+        finals.push(x);
+    }
+    Ok(finals)
+}
+
+/// Weightless RMSNorm over the last axis — what the quantized linears see
+/// after γ has been folded into the weights.
+pub fn rmsnorm_rows(x: &Tensor) -> Tensor {
+    let (r, c) = x.as_2d();
+    let mut out = x.clone();
+    for i in 0..r {
+        let row = &mut out.data[i * c..(i + 1) * c];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / c as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Reservoir row sampler: keeps a bounded uniform sample of rows from a
+/// stream of (N, d) tensors — the kurtail trainer's data pool.
+pub struct RowReservoir {
+    pub dim: usize,
+    cap: usize,
+    pub rows: Vec<f32>, // cap × dim, filled prefix
+    seen: u64,
+    rng: crate::util::Rng,
+}
+
+impl RowReservoir {
+    pub fn new(dim: usize, cap: usize, seed: u64) -> Self {
+        Self { dim, cap, rows: Vec::with_capacity(cap * dim), seen: 0, rng: crate::util::Rng::new(seed) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Offer all rows of a (…, dim) tensor.
+    pub fn offer(&mut self, x: &Tensor) {
+        let (r, c) = x.as_2d();
+        assert_eq!(c, self.dim, "reservoir dim mismatch");
+        for i in 0..r {
+            self.seen += 1;
+            let row = &x.data[i * c..(i + 1) * c];
+            if self.len() < self.cap {
+                self.rows.extend_from_slice(row);
+            } else {
+                // classic reservoir sampling
+                let j = (self.rng.next_u64() % self.seen) as usize;
+                if j < self.cap {
+                    self.rows[j * c..(j + 1) * c].copy_from_slice(row);
+                }
+            }
+        }
+    }
+
+    /// A shuffled (n, dim) batch sampled with replacement.
+    pub fn sample(&mut self, n: usize) -> Tensor {
+        assert!(!self.is_empty(), "empty reservoir");
+        let rows = self.len();
+        let mut data = Vec::with_capacity(n * self.dim);
+        for _ in 0..n {
+            let i = self.rng.below(rows);
+            data.extend_from_slice(&self.rows[i * self.dim..(i + 1) * self.dim]);
+        }
+        Tensor::new(data, vec![n, self.dim])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[5, 32], 3.0, &mut rng);
+        let y = rmsnorm_rows(&x);
+        for i in 0..5 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 32.0;
+            assert!((ms - 1.0).abs() < 1e-3, "{ms}");
+        }
+    }
+
+    #[test]
+    fn reservoir_caps_and_samples() {
+        let mut rng = Rng::new(1);
+        let mut res = RowReservoir::new(8, 100, 0);
+        for _ in 0..50 {
+            res.offer(&Tensor::randn(&[10, 8], 1.0, &mut rng));
+        }
+        assert_eq!(res.len(), 100);
+        let s = res.sample(32);
+        assert_eq!(s.shape, vec![32, 8]);
+        assert!(s.all_finite());
+    }
+
+    #[test]
+    fn reservoir_is_uniformish() {
+        // offer rows with a marker value; the kept fraction should track
+        // the stream fraction
+        let mut res = RowReservoir::new(1, 200, 2);
+        let a = Tensor::new(vec![1.0; 500], vec![500, 1]);
+        let b = Tensor::new(vec![2.0; 500], vec![500, 1]);
+        res.offer(&a);
+        res.offer(&b);
+        let twos = res.rows.iter().filter(|&&v| v == 2.0).count();
+        assert!(twos > 60 && twos < 140, "twos={twos}");
+    }
+}

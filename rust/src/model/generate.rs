@@ -1,0 +1,141 @@
+//! Autoregressive generation through the `decode_step_{cfg}` artifacts —
+//! the serving-flavoured path that exercises 4-bit KV-cache quantization
+//! token by token (what the paper's generation-stage analysis is about).
+
+use anyhow::Result;
+
+use super::Params;
+use crate::calib::ByteTokenizer;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::Rng;
+
+pub struct Generator {
+    art: std::sync::Arc<crate::runtime::Artifact>,
+    params: Params,
+    quant: bool,
+    rots: Option<(Tensor, Tensor, Tensor)>, // r3, r4, r5
+    pub batch: usize,
+    pub tmax: usize,
+}
+
+impl Generator {
+    /// `rots`: online rotations for the quantized decode graph (ignored in fp).
+    pub fn new(
+        rt: &Runtime,
+        params: Params,
+        quant: bool,
+        rots: Option<(Tensor, Tensor, Tensor)>,
+    ) -> Result<Self> {
+        let meta = &params.meta;
+        let name = if quant {
+            format!("decode_step_quant_{}", meta.name)
+        } else {
+            format!("decode_step_{}", meta.name)
+        };
+        let art = rt.load(&name)?;
+        anyhow::ensure!(!quant || rots.is_some(), "quant decode needs online rotations");
+        Ok(Self {
+            art,
+            batch: meta.decode_batch,
+            tmax: meta.seq_len,
+            params,
+            quant,
+            rots,
+        })
+    }
+
+    /// Greedy-or-sampled continuation of `prompt` for all batch lanes.
+    /// Returns decoded strings (including the prompt).
+    pub fn generate(&self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<Vec<String>> {
+        let meta = &self.params.meta;
+        let tok = ByteTokenizer;
+        let prompt_ids = tok.encode(prompt);
+        anyhow::ensure!(!prompt_ids.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt_ids.len() + n_tokens <= self.tmax,
+            "prompt+generation exceeds cache size {}",
+            self.tmax
+        );
+        let (l, b, h, dh) = (meta.n_layers, self.batch, meta.n_heads, meta.d_head);
+        let cache_shape = vec![l, b, self.tmax, h, dh];
+        let mut kc = Tensor::zeros(&cache_shape);
+        let mut vc = Tensor::zeros(&cache_shape);
+        let mut rng = Rng::new(seed);
+
+        let mut seqs: Vec<Vec<i32>> = vec![prompt_ids.clone(); b];
+        let mut logits = Tensor::zeros(&[b, meta.vocab]);
+        // prefill token by token (decode-path prefill; fine at these sizes)
+        for pos in 0..prompt_ids.len() + n_tokens - 1 {
+            let token: Vec<i32> = seqs
+                .iter()
+                .map(|s| *s.get(pos).unwrap_or(s.last().unwrap()))
+                .collect();
+            let mut inputs = self.params.as_values();
+            if self.quant {
+                let (r3, r4, r5) = self.rots.as_ref().unwrap();
+                inputs.push(Value::F32(r3.clone()));
+                inputs.push(Value::F32(r4.clone()));
+                inputs.push(Value::F32(r5.clone()));
+            }
+            inputs.push(Value::F32(kc));
+            inputs.push(Value::F32(vc));
+            inputs.push(Value::I32(IntTensor::new(token, vec![b])));
+            inputs.push(Value::from(pos as i32));
+            let mut out = self.art.run(&inputs)?;
+            vc = out.remove(2).into_f32()?;
+            kc = out.remove(1).into_f32()?;
+            logits = out.remove(0).into_f32()?;
+            if pos + 1 >= prompt_ids.len() {
+                for lane in 0..b {
+                    let next = sample_token(logits.row(lane), temp, &mut rng);
+                    seqs[lane].push(next);
+                }
+            }
+        }
+        let _ = logits;
+        Ok(seqs.iter().map(|s| tok.decode(s)).collect())
+    }
+}
+
+fn sample_token(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+    if temp <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| ((l - max) / temp).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    let mut u = rng.uniform() * sum;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    (exps.len() - 1) as i32
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_greedy() {
+        let logits = vec![0.0, 3.0, 1.0];
+        assert_eq!(argmax(&logits), 1);
+        let mut rng = Rng::new(0);
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let logits = vec![0.0, 10.0];
+        let mut rng = Rng::new(1);
+        let picks: Vec<i32> = (0..50).map(|_| sample_token(&logits, 1.0, &mut rng)).collect();
+        assert!(picks.iter().filter(|&&p| p == 1).count() > 45);
+    }
+}

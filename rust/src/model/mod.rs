@@ -1,0 +1,11 @@
+//! Model-side coordinator machinery: parameter store, training driver,
+//! layer-wise capture, generation.
+
+pub mod capture;
+pub mod generate;
+pub mod params;
+pub mod trainer;
+
+pub use capture::{capture_stream, rmsnorm_rows, LayerTaps, RowReservoir};
+pub use params::Params;
+pub use trainer::{train, train_or_load, TrainConfig};

@@ -1,0 +1,289 @@
+//! Parameter store: the model's weights in manifest order, with named
+//! access, per-layer slicing (for layer-wise inference), and a simple
+//! binary snapshot format so training runs are cached across experiments.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ConfigMeta, Value};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// All weights of one model, in the canonical (manifest) order.
+#[derive(Clone)]
+pub struct Params {
+    pub meta: ConfigMeta,
+    values: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Params {
+    pub fn from_tensors(meta: &ConfigMeta, values: Vec<Tensor>) -> Result<Self> {
+        anyhow::ensure!(values.len() == meta.n_params(), "param count mismatch");
+        for (t, spec) in values.iter().zip(&meta.param_specs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "param '{}': shape {:?} != spec {:?}",
+                spec.name, t.shape, spec.shape
+            );
+        }
+        let index =
+            meta.param_specs.iter().enumerate().map(|(i, p)| (p.name.clone(), i)).collect();
+        Ok(Self { meta: meta.clone(), values, index })
+    }
+
+    /// Scaled-normal init mirroring `compile.model.init_params`.
+    pub fn init(meta: &ConfigMeta, rng: &mut Rng) -> Self {
+        let n_layers = meta.n_layers as f32;
+        let values = meta
+            .param_specs
+            .iter()
+            .map(|p| {
+                if p.name.starts_with("ln") {
+                    Tensor::ones(&p.shape)
+                } else if p.name == "embed" || p.name == "head" {
+                    Tensor::randn(&p.shape, 0.02, rng)
+                } else {
+                    let fan_in = p.shape[p.shape.len() - 2] as f32;
+                    let mut std = 1.0 / fan_in.sqrt();
+                    if p.name == "wo" || p.name == "wd" {
+                        std /= (2.0 * n_layers).sqrt();
+                    }
+                    Tensor::randn(&p.shape, std, rng)
+                }
+            })
+            .collect();
+        Self::from_tensors(meta, values).expect("init shapes match specs")
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.values[*self.index.get(name).unwrap_or_else(|| panic!("no param '{name}'"))]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no param '{name}'"));
+        &mut self.values[i]
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no param '{name}'"));
+        assert_eq!(t.shape, self.values[i].shape, "set '{name}'");
+        self.values[i] = t;
+    }
+
+    /// All tensors in manifest order as artifact inputs.
+    pub fn as_values(&self) -> Vec<Value> {
+        self.values.iter().map(|t| Value::F32(t.clone())).collect()
+    }
+
+    /// Replace all values from artifact outputs (e.g. after a train step).
+    pub fn update_from_values(&mut self, vals: &[Value]) -> Result<()> {
+        anyhow::ensure!(vals.len() == self.values.len(), "value count mismatch");
+        for (slot, v) in self.values.iter_mut().zip(vals) {
+            *slot = v.as_f32()?.clone();
+        }
+        Ok(())
+    }
+
+    /// Zero tensors shaped like the params (Adam moment buffers).
+    pub fn zeros_like(&self) -> Vec<Value> {
+        self.values.iter().map(|t| Value::F32(Tensor::zeros(&t.shape))).collect()
+    }
+
+    /// Single-layer parameter slices in `layer_fwd_cap` input order
+    /// (= manifest order minus embed/lnf/head, leading L axis indexed).
+    pub fn layer_values(&self, layer: usize) -> Vec<Value> {
+        self.meta
+            .param_specs
+            .iter()
+            .filter(|p| !matches!(p.name.as_str(), "embed" | "lnf" | "head"))
+            .map(|p| Value::F32(self.get(&p.name).index_axis0(layer)))
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.values.iter().map(|t| t.numel()).sum()
+    }
+
+    // ---- binary snapshots (cache trained models across experiments) -----
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(b"KTP1")?;
+        f.write_all(&(self.values.len() as u32).to_le_bytes())?;
+        for (t, spec) in self.values.iter().zip(&self.meta.param_specs) {
+            let name = spec.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(meta: &ConfigMeta, path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"KTP1", "bad snapshot magic");
+        let n = read_u32(&mut f)? as usize;
+        anyhow::ensure!(n == meta.n_params(), "snapshot param count {n} != {}", meta.n_params());
+        let mut values = Vec::with_capacity(n);
+        for spec in &meta.param_specs {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            anyhow::ensure!(
+                name == spec.name.as_bytes(),
+                "snapshot param order mismatch at '{}'",
+                spec.name
+            );
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            anyhow::ensure!(shape == spec.shape, "snapshot shape mismatch for '{}'", spec.name);
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            f.read_exact(&mut buf)?;
+            let data = buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+            values.push(Tensor::new(data, shape));
+        }
+        Self::from_tensors(meta, values)
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Hand-built `ConfigMeta`s for unit tests that don't need artifacts.
+#[cfg(test)]
+pub mod tests_support {
+    use crate::runtime::manifest::{ConfigMeta, ParamSpec};
+
+    /// A complete 2-layer llama-arch meta (all weights present).
+    pub fn fake_llama_meta() -> ConfigMeta {
+        let (l, d, ff, v) = (2usize, 8usize, 16usize, 12usize);
+        let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape };
+        ConfigMeta {
+            name: "fakellama".into(),
+            vocab: v,
+            d_model: d,
+            n_layers: l,
+            n_heads: 2,
+            d_head: d / 2,
+            d_ff: ff,
+            seq_len: 8,
+            arch: "llama".into(),
+            n_experts: 1,
+            top_k: 2,
+            train_batch: 2,
+            eval_batch: 2,
+            cap_batch: 2,
+            decode_batch: 2,
+            spin_batch: 2,
+            param_specs: vec![
+                spec("embed", vec![v, d]),
+                spec("ln1", vec![l, d]),
+                spec("wq", vec![l, d, d]),
+                spec("wk", vec![l, d, d]),
+                spec("wv", vec![l, d, d]),
+                spec("wo", vec![l, d, d]),
+                spec("ln2", vec![l, d]),
+                spec("wg", vec![l, d, ff]),
+                spec("wu", vec![l, d, ff]),
+                spec("wd", vec![l, ff, d]),
+                spec("lnf", vec![d]),
+                spec("head", vec![v, d]),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    pub(crate) fn fake_meta() -> ConfigMeta {
+        ConfigMeta {
+            name: "fake".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 2,
+            d_ff: 8,
+            seq_len: 8,
+            arch: "llama".into(),
+            n_experts: 1,
+            top_k: 2,
+            train_batch: 2,
+            eval_batch: 2,
+            cap_batch: 2,
+            decode_batch: 2,
+            spin_batch: 2,
+            param_specs: vec![
+                ParamSpec { name: "embed".into(), shape: vec![8, 4] },
+                ParamSpec { name: "ln1".into(), shape: vec![2, 4] },
+                ParamSpec { name: "wq".into(), shape: vec![2, 4, 4] },
+                ParamSpec { name: "lnf".into(), shape: vec![4] },
+                ParamSpec { name: "head".into(), shape: vec![8, 4] },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_and_access() {
+        let meta = fake_meta();
+        let mut rng = Rng::new(0);
+        let p = Params::init(&meta, &mut rng);
+        assert_eq!(p.get("embed").shape, vec![8, 4]);
+        assert_eq!(p.get("ln1").data, vec![1.0; 8]);
+        assert_eq!(p.param_count(), 8 * 4 + 2 * 4 + 2 * 16 + 4 + 32);
+    }
+
+    #[test]
+    fn layer_values_slices() {
+        let meta = fake_meta();
+        let mut rng = Rng::new(1);
+        let p = Params::init(&meta, &mut rng);
+        let lv = p.layer_values(1);
+        assert_eq!(lv.len(), 2); // ln1, wq
+        assert_eq!(lv[0].shape(), &[4]);
+        assert_eq!(lv[1].shape(), &[4, 4]);
+        assert_eq!(lv[1].as_f32().unwrap().data, p.get("wq").index_axis0(1).data);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let meta = fake_meta();
+        let mut rng = Rng::new(2);
+        let p = Params::init(&meta, &mut rng);
+        let dir = std::env::temp_dir().join("kurtail_test_params.bin");
+        p.save(&dir).unwrap();
+        let q = Params::load(&meta, &dir).unwrap();
+        for spec in &meta.param_specs {
+            assert_eq!(p.get(&spec.name).data, q.get(&spec.name).data, "{}", spec.name);
+        }
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,133 @@
+//! Training driver: the Rust loop around the AOT `train_step_{cfg}`
+//! artifact. The e2e example uses this to pretrain the tiny model family
+//! from scratch on the synthetic corpus (the substitution for downloading
+//! LLaMA checkpoints — DESIGN.md §2), logging the loss curve.
+
+use anyhow::Result;
+
+use super::Params;
+use crate::calib::TokenDataset;
+use crate::runtime::{Runtime, Value};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Linear warmup steps, then cosine decay to lr/10.
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 3e-3, warmup: 20, log_every: 50, seed: 0 }
+    }
+}
+
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+}
+
+/// Run `cfg.steps` Adam steps; mutates `params` in place.
+pub fn train(
+    rt: &Runtime,
+    params: &mut Params,
+    data: &TokenDataset,
+    cfg: &TrainConfig,
+    verbose: bool,
+) -> Result<TrainReport> {
+    let meta = params.meta.clone();
+    let art = rt.load(&format!("train_step_{}", meta.name))?;
+    let mut rng = Rng::new(cfg.seed ^ 0x7124);
+    let n = meta.n_params();
+    let mut m = params.zeros_like();
+    let mut v = params.zeros_like();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let t0 = std::time::Instant::now();
+
+    for step in 1..=cfg.steps {
+        let lr = schedule(cfg, step);
+        let batch = data.random_batch(meta.train_batch, &mut rng);
+        let mut inputs: Vec<Value> = Vec::with_capacity(3 * n + 3);
+        inputs.extend(params.as_values());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(batch.into());
+        inputs.push(Value::from(lr));
+        inputs.push(Value::from(step as f32));
+        let out = art.run(&inputs)?;
+        params.update_from_values(&out[..n])?;
+        m = out[n..2 * n].to_vec();
+        v = out[2 * n..3 * n].to_vec();
+        let loss = out[3 * n].scalar_f32()?;
+        losses.push(loss);
+        if verbose && (step % cfg.log_every == 0 || step == 1) {
+            println!("  step {step:>5}  lr {lr:.2e}  loss {loss:.4}");
+        }
+    }
+    Ok(TrainReport { losses, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+fn schedule(cfg: &TrainConfig, step: usize) -> f32 {
+    if step <= cfg.warmup {
+        return cfg.lr * step as f32 / cfg.warmup as f32;
+    }
+    let p = (step - cfg.warmup) as f32 / (cfg.steps - cfg.warmup).max(1) as f32;
+    let min_lr = cfg.lr / 10.0;
+    min_lr + 0.5 * (cfg.lr - min_lr) * (1.0 + (std::f32::consts::PI * p).cos())
+}
+
+/// Train-or-load: snapshots trained weights next to the artifacts so the
+/// (deterministic) pretraining is shared by every experiment on a config.
+pub fn train_or_load(
+    rt: &Runtime,
+    cfg_name: &str,
+    data: &TokenDataset,
+    tcfg: &TrainConfig,
+    verbose: bool,
+) -> Result<Params> {
+    let meta = rt.manifest.config(cfg_name)?.clone();
+    let snap = rt.dir.join(format!(
+        "params_{cfg_name}_s{}_n{}_seed{}.bin",
+        tcfg.steps, data.n_sequences(), tcfg.seed
+    ));
+    if snap.exists() {
+        if verbose {
+            println!("  loading cached weights {snap:?}");
+        }
+        return Params::load(&meta, &snap);
+    }
+    let mut rng = Rng::new(tcfg.seed);
+    let mut params = Params::init(&meta, &mut rng);
+    if verbose {
+        println!(
+            "  pretraining {cfg_name} ({} params, {} steps)…",
+            params.param_count(),
+            tcfg.steps
+        );
+    }
+    let report = train(rt, &mut params, data, tcfg, verbose)?;
+    if verbose {
+        let first = report.losses.first().unwrap();
+        let last = report.losses.last().unwrap();
+        println!("  trained: loss {first:.3} → {last:.3} in {:.1}s", report.wall_s);
+    }
+    params.save(&snap)?;
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shape() {
+        let cfg = TrainConfig { steps: 100, lr: 1e-2, warmup: 10, ..Default::default() };
+        assert!(schedule(&cfg, 1) < schedule(&cfg, 10));
+        assert!((schedule(&cfg, 10) - 1e-2).abs() < 1e-6);
+        assert!(schedule(&cfg, 100) < 2e-3);
+    }
+}

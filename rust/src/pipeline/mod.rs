@@ -1,0 +1,188 @@
+//! The end-to-end PTQ pipeline: pretrain (or load) → fold norms → learn /
+//! construct rotations → fuse → weight-quantize → evaluate. One call per
+//! (model, method) cell of the paper's tables.
+
+pub mod report;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baselines::{quarot_rotations, spinquant_learn};
+use crate::calib::{CorpusKind, DataBundle};
+use crate::config::{Method, PipelineConfig, QuantScheme, WeightQuantizer};
+use crate::kurtail::learn_rotations;
+use crate::model::{capture_stream, train_or_load, Params, TrainConfig};
+use crate::quant::{quantize_weights, HessianSet};
+use crate::rotation::{fold_norms, fuse_r1, fuse_r2, fuse_r4_inverse, fuse_r5_inverse, RotationSet};
+use crate::runtime::Runtime;
+use crate::util::{timer, Rng, Stopwatch};
+
+/// A model ready for evaluation: fused + quantized params and the online
+/// rotations the quantized graph needs.
+pub struct PreparedModel {
+    pub params: Params,
+    pub rots: RotationSet,
+    /// false → evaluate through the fp graph (the "16-bit" rows).
+    pub quantized: bool,
+    pub method: Method,
+}
+
+/// Cost accounting for the rotation-learning stage (paper §3 Training Cost).
+#[derive(Debug, Clone, Default)]
+pub struct MethodCost {
+    pub capture_s: f64,
+    pub optimize_s: f64,
+    pub total_s: f64,
+    pub peak_rss_mib: f64,
+}
+
+/// Shared per-model state: runtime, data, pretrained fp weights.
+pub struct Pipeline {
+    pub rt: Arc<Runtime>,
+    pub bundle: DataBundle,
+    pub cfg_name: String,
+    pub fp_params: Params,
+}
+
+/// Pretraining sizes per config (bytes of synthetic corpus / steps).
+pub fn default_train_config(cfg_name: &str, fast: bool) -> (usize, TrainConfig) {
+    let (bytes, steps) = match cfg_name {
+        "tiny" => (300_000, 300),
+        "small" => (600_000, 500),
+        "base" => (900_000, 600),
+        "phi" => (600_000, 500),
+        "moe" => (600_000, 500),
+        _ => (300_000, 300),
+    };
+    let steps = if fast { steps / 5 } else { steps };
+    (bytes, TrainConfig { steps, ..TrainConfig::default() })
+}
+
+impl Pipeline {
+    /// Build data + pretrained weights for one model config.
+    pub fn new(rt: Arc<Runtime>, cfg_name: &str, seed: u64, fast: bool, verbose: bool) -> Result<Self> {
+        let meta = rt.manifest.config(cfg_name)?.clone();
+        let (bytes, tcfg) = default_train_config(cfg_name, fast);
+        let tcfg = TrainConfig { seed, ..tcfg };
+        let bundle = DataBundle::new(meta.seq_len, bytes, seed);
+        let fp_params = train_or_load(&rt, cfg_name, &bundle.train, &tcfg, verbose)?;
+        Ok(Self { rt, bundle, cfg_name: cfg_name.to_string(), fp_params })
+    }
+
+    /// Produce the evaluated model for one method (one table cell).
+    pub fn quantize(&self, pcfg: &PipelineConfig) -> Result<(PreparedModel, MethodCost)> {
+        let rt = &self.rt;
+        let meta = self.fp_params.meta.clone();
+        let mut cost = MethodCost::default();
+        let sw_total = Stopwatch::start("method");
+
+        if pcfg.method == Method::Fp16 {
+            return Ok((
+                PreparedModel {
+                    params: self.fp_params.clone(),
+                    rots: RotationSet::identity(meta.d_head, meta.d_ff),
+                    quantized: false,
+                    method: pcfg.method,
+                },
+                cost,
+            ));
+        }
+
+        // 1. fold norms (precondition for rotations and the quant graphs)
+        let mut params = self.fp_params.clone();
+        fold_norms(&mut params);
+
+        // 2. calibration data
+        let kind = CorpusKind::parse(&pcfg.calib.dataset)
+            .ok_or_else(|| anyhow::anyhow!("unknown calib dataset '{}'", pcfg.calib.dataset))?;
+        let calib_batches =
+            self.bundle.calib_batches(kind, pcfg.calib.n_samples, meta.cap_batch, pcfg.calib.seed);
+        anyhow::ensure!(!calib_batches.is_empty(), "calibration produced no batches");
+
+        // 3. rotations
+        let mut rng = Rng::new(pcfg.seed ^ 0x0715);
+        let mut rots = RotationSet::identity(meta.d_head, meta.d_ff);
+        if pcfg.method.uses_rotations() {
+            let (r3, r4, r5) = RotationSet::online_hadamard(meta.d_head, meta.d_ff, &mut rng);
+            rots.r3 = r3;
+            rots.r4 = r4;
+            rots.r5 = r5;
+        }
+        match pcfg.method {
+            Method::QuaRot => {
+                let (r1, r2) = quarot_rotations(meta.d_model, meta.d_head, meta.n_layers, &mut rng);
+                rots.r1 = Some(r1);
+                rots.r2 = r2;
+            }
+            Method::SpinQuant => {
+                let rep = spinquant_learn(
+                    rt,
+                    &params,
+                    &calib_batches,
+                    pcfg.calib.iters,
+                    // CE landscape needs a gentler step than the kurtosis loss
+                    pcfg.calib.lr * 0.02,
+                    pcfg.seed,
+                )?;
+                cost.optimize_s = rep.wall_s;
+                cost.peak_rss_mib = rep.peak_rss_mib;
+                rots.r1 = Some(rep.r1);
+                // lite variant: R2 stays random Hadamard (DESIGN.md §2)
+                rots.r2 = (0..meta.n_layers)
+                    .map(|_| crate::tensor::hadamard::random_hadamard(meta.d_head, &mut rng))
+                    .collect();
+            }
+            Method::KurTail => {
+                let rep = learn_rotations(rt, &params, &calib_batches, &pcfg.calib)?;
+                cost.capture_s = rep.capture_s;
+                cost.optimize_s = rep.optimize_s;
+                cost.peak_rss_mib = rep.peak_rss_mib;
+                rots.r1 = Some(rep.r1);
+                rots.r2 = rep.r2;
+            }
+            Method::GptqOnly | Method::Fp16 => {}
+        }
+
+        // 4. GPTQ Hessians from the (folded, unrotated) model — raw grams,
+        //    rotated into the fused bases inside quantize_weights.
+        let hessians = if pcfg.weight_quantizer == WeightQuantizer::Gptq {
+            let f_mid = meta.d_ff * if meta.arch == "moe" { meta.n_experts } else { 1 };
+            let mut hs = HessianSet::new(meta.n_layers, meta.d_model, f_mid);
+            let n_hess = calib_batches.len().min(8); // a few batches suffice
+            capture_stream(rt, &params, &calib_batches[..n_hess], |taps| {
+                hs.accumulate(taps);
+                Ok(())
+            })?;
+            Some(hs)
+        } else {
+            None
+        };
+
+        // 5. fuse rotations into the weights
+        if let Some(r1) = &rots.r1 {
+            fuse_r1(&mut params, r1);
+        }
+        let r2s = rots.r2.clone();
+        fuse_r2(&mut params, &r2s);
+        if pcfg.method.uses_rotations() {
+            fuse_r4_inverse(&mut params, &rots.r4);
+            fuse_r5_inverse(&mut params, &rots.r5);
+        }
+
+        // 6. weight quantization on the fused weights
+        quantize_weights(
+            &mut params,
+            pcfg.weight_quantizer,
+            &QuantScheme::weight4(),
+            hessians.as_ref(),
+            &rots,
+        )?;
+
+        cost.total_s = sw_total.elapsed_s();
+        if cost.peak_rss_mib == 0.0 {
+            cost.peak_rss_mib = timer::peak_rss_mib();
+        }
+        Ok((PreparedModel { params, rots, quantized: true, method: pcfg.method }, cost))
+    }
+}

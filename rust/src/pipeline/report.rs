@@ -1,0 +1,113 @@
+//! Report formatting: paper-style markdown tables + JSON dumps that
+//! EXPERIMENTS.md records verbatim.
+
+use std::fmt::Write as _;
+
+use crate::util::json::{arr, obj, s, Json};
+
+/// A printable table with a caption (one per paper table/figure).
+pub struct Table {
+    pub caption: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(caption: &str, headers: &[&str]) -> Self {
+        Self {
+            caption: caption.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    /// GitHub-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "**{}**\n", self.caption);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(out, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.markdown());
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("caption", s(&self.caption)),
+            ("headers", arr(self.headers.iter().map(|h| s(h)).collect())),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|r| arr(r.iter().map(|c| s(c)).collect()))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+pub fn fmt_f(v: f32, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+pub fn fmt_pct(v: f32) -> String {
+    format!("{:.1}", v * 100.0)
+}
+
+/// Append a table (markdown + JSON) to a results file under `results/`.
+pub fn save_table(t: &Table, name: &str) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let md = std::path::Path::new("results").join(format!("{name}.md"));
+    std::fs::write(&md, t.markdown())?;
+    let js = std::path::Path::new("results").join(format!("{name}.json"));
+    std::fs::write(js, t.to_json().to_string_pretty())?;
+    Ok(md)
+}
+
+/// Write a CSV series (Fig 1 curves, Fig 2 histograms).
+pub fn save_csv(name: &str, headers: &[&str], rows: &[Vec<f64>]) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let path = std::path::Path::new("results").join(format!("{name}.csv"));
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", headers.join(","));
+    for r in rows {
+        let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+        let _ = writeln!(out, "{}", cells.join(","));
+    }
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert!(md.contains("**Test**"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Host-side fake quantization — the Rust mirror of
+//! `python/compile/kernels/ref.py` (same semantics, pinned by tests).
+//! Used for weight quantization (RTN grids, GPTQ rounding) and for the
+//! sensitivity / success-rate experiments that run entirely on captured
+//! activations.
+
+use crate::config::QuantScheme;
+use crate::tensor::Tensor;
+
+/// Per-row symmetric scale with optional quantile clip (activations).
+pub fn row_scale(row: &[f32], s: &QuantScheme) -> f32 {
+    let mut buf = Vec::new();
+    row_scale_buf(row, s, &mut buf)
+}
+
+/// `row_scale` with a caller-owned scratch buffer and an O(n)
+/// selection instead of a full sort (§Perf: this is the inner loop of
+/// every activation fake-quant on the host).
+pub fn row_scale_buf(row: &[f32], s: &QuantScheme, buf: &mut Vec<f32>) -> f32 {
+    let amax = match s.clip_quantile {
+        Some(q) if q < 1.0 => {
+            buf.clear();
+            buf.extend(row.iter().map(|x| x.abs()));
+            let n = buf.len();
+            let pos = q.clamp(0.0, 1.0) * (n - 1) as f32;
+            let lo = pos.floor() as usize;
+            let frac = pos - lo as f32;
+            let (_, v_lo, rest) =
+                buf.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+            let v_lo = *v_lo;
+            if frac == 0.0 || rest.is_empty() {
+                v_lo
+            } else {
+                let v_hi = rest.iter().cloned().fold(f32::INFINITY, f32::min);
+                v_lo * (1.0 - frac) + v_hi * frac
+            }
+        }
+        _ => row.iter().fold(0.0f32, |a, &x| a.max(x.abs())),
+    };
+    amax.max(1e-8) / s.qmax()
+}
+
+/// Symmetric fake-quant of one row given its scale.
+pub fn fq_row_sym(row: &mut [f32], scale: f32, s: &QuantScheme) {
+    let qmax = s.qmax();
+    for v in row.iter_mut() {
+        let q = (*v / scale).round().clamp(-qmax, qmax);
+        *v = q * scale;
+    }
+}
+
+/// Per-token (row) symmetric fake-quant of a (…, d) tensor.
+pub fn fake_quant_rows(x: &Tensor, s: &QuantScheme) -> Tensor {
+    let (r, c) = x.as_2d();
+    let mut out = x.clone();
+    let mut buf = Vec::with_capacity(c);
+    for i in 0..r {
+        let row = &mut out.data[i * c..(i + 1) * c];
+        let scale = row_scale_buf(row, s, &mut buf);
+        fq_row_sym(row, scale, s);
+    }
+    out
+}
+
+/// Per-token asymmetric fake-quant (KV cache semantics).
+pub fn fake_quant_rows_asym(x: &Tensor, s: &QuantScheme) -> Tensor {
+    let (r, c) = x.as_2d();
+    let levels = s.levels();
+    let mut out = x.clone();
+    for i in 0..r {
+        let row = &mut out.data[i * c..(i + 1) * c];
+        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let scale = ((hi - lo).max(1e-8)) / levels;
+        for v in row.iter_mut() {
+            let q = ((*v - lo) / scale).round().clamp(0.0, levels);
+            *v = q * scale + lo;
+        }
+    }
+    out
+}
+
+/// Quantization MSE of a row at a given step size (symmetric grid) —
+/// the Γ(x, ε) sensitivity primitive (Chmiel et al. 2020, paper Fig. 1).
+pub fn row_mse_at_step(row: &[f32], step: f32, s: &QuantScheme) -> f32 {
+    let qmax = s.qmax();
+    let mut mse = 0.0f64;
+    for &v in row {
+        let q = (v / step).round().clamp(-qmax, qmax);
+        let e = (v - q * step) as f64;
+        mse += e * e;
+    }
+    (mse / row.len() as f64) as f32
+}
+
+/// Grid-search the MSE-optimal symmetric step size for a row.
+pub fn optimal_step(row: &[f32], s: &QuantScheme) -> f32 {
+    let absmax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-8);
+    let hi = absmax / s.qmax();
+    let mut best = (f32::INFINITY, hi);
+    // 64-point geometric sweep from hi/16 to hi covers the optimum for
+    // everything from uniform to heavy-tailed rows
+    for i in 0..64 {
+        let step = hi * (16.0f32).powf(-(1.0 - i as f32 / 63.0));
+        let mse = row_mse_at_step(row, step, s);
+        if mse < best.0 {
+            best = (mse, step);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::Rng;
+
+    fn act4() -> QuantScheme {
+        QuantScheme::act4()
+    }
+
+    #[test]
+    fn roundtrip_bounded_by_half_step() {
+        let mut rng = Rng::new(0);
+        let s = QuantScheme { clip_quantile: None, ..act4() };
+        let x = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let y = fake_quant_rows(&x, &s);
+        for i in 0..16 {
+            let scale = row_scale(x.row(i), &s);
+            for (a, b) in x.row(i).iter().zip(y.row(i)) {
+                assert!((a - b).abs() <= scale / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn asym_beats_sym_on_shifted() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::new((0..64 * 64).map(|_| 4.0 + rng.uniform()).collect(), vec![64, 64]);
+        let sym = fake_quant_rows(&x, &QuantScheme { clip_quantile: None, ..act4() });
+        let asym = fake_quant_rows_asym(&x, &QuantScheme::kv4());
+        let mse_s = x.sub(&sym).frob_norm();
+        let mse_a = x.sub(&asym).frob_norm();
+        assert!(mse_a < mse_s / 2.0, "{mse_a} vs {mse_s}");
+    }
+
+    #[test]
+    fn clip_helps_with_outliers() {
+        let mut rng = Rng::new(2);
+        let mut x = Tensor::randn(&[32, 256], 1.0, &mut rng);
+        for i in 0..32 {
+            x.row_mut(i)[0] *= 100.0;
+        }
+        let clipped = fake_quant_rows(&x, &act4());
+        let unclipped = fake_quant_rows(&x, &QuantScheme { clip_quantile: None, ..act4() });
+        // compare error on the bulk (excluding the outlier channel)
+        let mut e_clip = 0.0;
+        let mut e_no = 0.0;
+        for i in 0..32 {
+            for j in 1..256 {
+                e_clip += (x.row(i)[j] - clipped.row(i)[j]).powi(2);
+                e_no += (x.row(i)[j] - unclipped.row(i)[j]).powi(2);
+            }
+        }
+        assert!(e_clip < e_no / 4.0, "{e_clip} vs {e_no}");
+    }
+
+    #[test]
+    fn optimal_step_beats_absmax_on_gaussian() {
+        let mut rng = Rng::new(3);
+        let s = QuantScheme { clip_quantile: None, ..act4() };
+        let row: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let naive = row_scale(&row, &s);
+        let opt = optimal_step(&row, &s);
+        assert!(row_mse_at_step(&row, opt, &s) <= row_mse_at_step(&row, naive, &s));
+        // for gaussians the optimum is well below absmax/qmax
+        assert!(opt < naive);
+    }
+
+    #[test]
+    fn prop_fq_idempotent() {
+        check(50, |rng| {
+            let s = QuantScheme { clip_quantile: None, ..QuantScheme::act4() };
+            let x = Tensor::randn(&[4, 32], 1.0 + rng.uniform(), rng);
+            let y = fake_quant_rows(&x, &s);
+            let z = fake_quant_rows(&y, &s);
+            prop_assert(y.max_abs_diff(&z) < 1e-5, "fq(fq(x)) == fq(x)")
+        });
+    }
+}

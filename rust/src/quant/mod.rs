@@ -1,0 +1,12 @@
+//! Weight/activation quantizers: fake-quant primitives, RTN, GPTQ, and
+//! whole-model weight quantization over the stacked parameter store.
+
+pub mod fakequant;
+pub mod gptq;
+pub mod rtn;
+pub mod weights;
+
+pub use fakequant::{fake_quant_rows, fake_quant_rows_asym, optimal_step, row_mse_at_step};
+pub use gptq::gptq_quantize;
+pub use rtn::rtn_quantize;
+pub use weights::{quantize_weights, HessianSet};

@@ -1,0 +1,110 @@
+//! RTN weight quantization: round-to-nearest on a per-output-channel
+//! symmetric grid (paper §4: "per-column (or per-channel) symmetric").
+//!
+//! Weights here are stored (in, out) — an output channel is a *column*.
+
+use crate::config::QuantScheme;
+use crate::tensor::Tensor;
+
+/// Per-output-channel scales for a (k_in, n_out) weight matrix.
+pub fn channel_scales(w: &Tensor, s: &QuantScheme) -> Vec<f32> {
+    assert_eq!(w.rank(), 2);
+    let (k, n) = (w.shape[0], w.shape[1]);
+    let mut scales = vec![0.0f32; n];
+    for i in 0..k {
+        for j in 0..n {
+            scales[j] = scales[j].max(w.data[i * n + j].abs());
+        }
+    }
+    scales.iter().map(|&a| a.max(1e-8) / s.qmax()).collect()
+}
+
+/// RTN fake-quant of a 2-D weight (in, out) on per-column grids.
+pub fn rtn_quantize(w: &Tensor, s: &QuantScheme) -> Tensor {
+    let scales = channel_scales(w, s);
+    let (k, n) = (w.shape[0], w.shape[1]);
+    let qmax = s.qmax();
+    let mut out = w.clone();
+    for i in 0..k {
+        for j in 0..n {
+            let v = &mut out.data[i * n + j];
+            let q = (*v / scales[j]).round().clamp(-qmax, qmax);
+            *v = q * scales[j];
+        }
+    }
+    out
+}
+
+/// RTN over a stacked weight (L, …, k, n): quantize each trailing 2-D
+/// matrix independently (layers / experts get their own grids).
+pub fn rtn_quantize_stacked(w: &Tensor, s: &QuantScheme) -> Tensor {
+    if w.rank() == 2 {
+        return rtn_quantize(w, s);
+    }
+    let mat = w.shape[w.rank() - 2] * w.shape[w.rank() - 1];
+    let count = w.numel() / mat;
+    let sub_shape = vec![w.shape[w.rank() - 2], w.shape[w.rank() - 1]];
+    let mut out = w.clone();
+    for i in 0..count {
+        let sub = Tensor::new(w.data[i * mat..(i + 1) * mat].to_vec(), sub_shape.clone());
+        let q = rtn_quantize(&sub, s);
+        out.data[i * mat..(i + 1) * mat].copy_from_slice(&q.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::Rng;
+
+    #[test]
+    fn error_bounded_by_half_step_per_channel() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(&[32, 16], 0.1, &mut rng);
+        let s = QuantScheme::weight4();
+        let q = rtn_quantize(&w, &s);
+        let scales = channel_scales(&w, &s);
+        for i in 0..32 {
+            for j in 0..16 {
+                assert!((w.data[i * 16 + j] - q.data[i * 16 + j]).abs() <= scales[j] / 2.0 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_matches_per_layer() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[3, 8, 4], 0.2, &mut rng);
+        let s = QuantScheme::weight4();
+        let q = rtn_quantize_stacked(&w, &s);
+        for l in 0..3 {
+            let ql = rtn_quantize(&w.index_axis0(l), &s);
+            assert_eq!(q.index_axis0(l).data, ql.data);
+        }
+    }
+
+    #[test]
+    fn prop_grid_has_at_most_2b_levels() {
+        check(30, |rng| {
+            let s = QuantScheme::weight4();
+            let w = Tensor::randn(&[16, 4], 0.3, rng);
+            let q = rtn_quantize(&w, &s);
+            let scales = channel_scales(&w, &s);
+            for j in 0..4 {
+                let mut vals: Vec<i64> = (0..16)
+                    .map(|i| (q.data[i * 4 + j] / scales[j]).round() as i64)
+                    .collect();
+                vals.sort();
+                vals.dedup();
+                prop_assert(vals.len() <= 15, "≤ 2^4−1 distinct levels")?;
+                prop_assert(
+                    vals.iter().all(|&v| (-7..=7).contains(&v)),
+                    "levels within symmetric grid",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

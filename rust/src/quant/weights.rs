@@ -1,0 +1,255 @@
+//! Whole-model weight quantization over the stacked parameter store.
+//!
+//! Hessians are accumulated as raw Grams of the *unrotated* fp
+//! activations during layer-wise capture (once per model), then
+//! transformed per method at quantize time: if a rotation M transforms a
+//! linear's input (z → z·M), its Gram transforms as G → MᵀGM. This lets
+//! one capture pass serve every method row of Table 2.
+
+use anyhow::Result;
+
+use crate::config::{QuantScheme, WeightQuantizer};
+use crate::model::{rmsnorm_rows, LayerTaps, Params};
+use crate::rotation::{blockdiag_heads, RotationSet};
+use crate::tensor::matmul::{gram_accumulate, matmul};
+use crate::tensor::Tensor;
+
+use super::gptq::{gptq_quantize_with_factor, GptqFactor};
+use super::rtn::rtn_quantize_stacked;
+
+/// Raw per-layer input Grams (pre-rotation) from the capture stream.
+pub struct HessianSet {
+    /// gram(rmsnorm(mhsa_in)) per layer — wq/wk/wv inputs.
+    pub g_attn_in: Vec<Tensor>,
+    /// gram(rmsnorm(ffn_in)) per layer — wg/wu/wr inputs.
+    pub g_ffn_in: Vec<Tensor>,
+    /// gram(attn_out) per layer — wo input.
+    pub g_attn_out: Vec<Tensor>,
+    /// gram(ffn_mid) per layer — wd input (F = d_ff·E for MoE).
+    pub g_ffn_mid: Vec<Tensor>,
+}
+
+impl HessianSet {
+    pub fn new(n_layers: usize, d: usize, f_mid: usize) -> Self {
+        Self {
+            g_attn_in: (0..n_layers).map(|_| Tensor::zeros(&[d, d])).collect(),
+            g_ffn_in: (0..n_layers).map(|_| Tensor::zeros(&[d, d])).collect(),
+            g_attn_out: (0..n_layers).map(|_| Tensor::zeros(&[d, d])).collect(),
+            g_ffn_mid: (0..n_layers).map(|_| Tensor::zeros(&[f_mid, f_mid])).collect(),
+        }
+    }
+
+    /// Accumulate one batch's taps for one layer.
+    pub fn accumulate(&mut self, taps: &LayerTaps) {
+        let l = taps.layer;
+        gram_accumulate(&mut self.g_attn_in[l], &flat2(&rmsnorm_rows(&taps.mhsa_in)));
+        gram_accumulate(&mut self.g_ffn_in[l], &flat2(&rmsnorm_rows(&taps.ffn_in)));
+        gram_accumulate(&mut self.g_attn_out[l], &flat2(&taps.attn_out));
+        gram_accumulate(&mut self.g_ffn_mid[l], &flat2(&taps.ffn_mid));
+    }
+}
+
+fn flat2(x: &Tensor) -> Tensor {
+    let (r, c) = x.as_2d();
+    x.clone().reshape(&[r, c])
+}
+
+/// G → MᵀGM (input-rotation transform of a Gram matrix).
+fn rotate_gram(g: &Tensor, m: &Tensor) -> Tensor {
+    matmul(&matmul(&m.t(), g), m)
+}
+
+/// Quantize every transformer linear of `params` in place.
+///
+/// `params` must already be norm-folded and rotation-fused; `rots` is
+/// used only to transform the Hessians into the fused bases. Embedding
+/// and head stay fp (standard practice, see DESIGN.md).
+pub fn quantize_weights(
+    params: &mut Params,
+    quantizer: WeightQuantizer,
+    scheme: &QuantScheme,
+    hessians: Option<&HessianSet>,
+    rots: &RotationSet,
+) -> Result<()> {
+    if quantizer == WeightQuantizer::None {
+        return Ok(());
+    }
+    let meta = params.meta.clone();
+    let use_gptq = quantizer == WeightQuantizer::Gptq;
+    anyhow::ensure!(
+        !use_gptq || hessians.is_some(),
+        "GPTQ weight quantization needs captured Hessians"
+    );
+
+    let attn_names: &[&str] = &["wq", "wk", "wv"];
+    let ffn_in_names: &[&str] = match meta.arch.as_str() {
+        "llama" => &["wg", "wu"],
+        "phi" => &["wu"],
+        "moe" => &["wg", "wu"],
+        a => anyhow::bail!("unknown arch {a}"),
+    };
+
+    // Router: tiny output dim — RTN regardless (documented).
+    if params.has("wr") {
+        params.set("wr", rtn_quantize_stacked(params.get("wr"), scheme));
+    }
+
+    if !use_gptq {
+        for name in attn_names.iter().chain(ffn_in_names).chain(&["wo", "wd"]) {
+            params.set(name, rtn_quantize_stacked(params.get(name), scheme));
+        }
+        return Ok(());
+    }
+
+    let hs = hessians.unwrap();
+    let d = meta.d_model;
+    let eye_d = Tensor::eye(d);
+    let r1 = rots.r1.as_ref().unwrap_or(&eye_d);
+    let r4b = blockdiag_heads(&rots.r4, meta.n_heads);
+
+    for l in 0..meta.n_layers {
+        // wq/wk/wv: input = rmsnorm(x)·R1 (one shared factor — §Perf)
+        let f_attn = GptqFactor::prepare(&rotate_gram(&hs.g_attn_in[l], r1));
+        for name in attn_names {
+            let w = params.get(name).index_axis0(l);
+            let q = gptq_quantize_with_factor(&w, &f_attn, scheme);
+            let mut stack = params.get(name).clone();
+            stack.set_axis0(l, &q);
+            params.set(name, stack);
+        }
+        // wo: input = attn_out · blockdiag(R2_l) · blockdiag(R4)
+        let m_wo = if rots.r2.is_empty() {
+            r4b.clone()
+        } else {
+            matmul(&blockdiag_heads(&rots.r2[l], meta.n_heads), &r4b)
+        };
+        let f_wo = GptqFactor::prepare(&rotate_gram(&hs.g_attn_out[l], &m_wo));
+        let q_wo = gptq_quantize_with_factor(&params.get("wo").index_axis0(l), &f_wo, scheme);
+        let mut wo = params.get("wo").clone();
+        wo.set_axis0(l, &q_wo);
+        params.set("wo", wo);
+
+        // FFN input linears: input = rmsnorm(h)·R1 (one shared factor)
+        let f_ffn = GptqFactor::prepare(&rotate_gram(&hs.g_ffn_in[l], r1));
+        for name in ffn_in_names {
+            let w = params.get(name).index_axis0(l);
+            let q = if meta.arch == "moe" {
+                // per-expert matrices share the same input Hessian
+                let mut out = w.clone();
+                for e in 0..meta.n_experts {
+                    out.set_axis0(e, &gptq_quantize_with_factor(&w.index_axis0(e), &f_ffn, scheme));
+                }
+                out
+            } else {
+                gptq_quantize_with_factor(&w, &f_ffn, scheme)
+            };
+            let mut stack = params.get(name).clone();
+            stack.set_axis0(l, &q);
+            params.set(name, stack);
+        }
+
+        // wd: input = ffn_mid · R5 (per-expert diagonal block for MoE)
+        let wd_l = params.get("wd").index_axis0(l);
+        let q_wd = if meta.arch == "moe" {
+            let ff = meta.d_ff;
+            let mut out = wd_l.clone();
+            for e in 0..meta.n_experts {
+                let g_e = diag_block(&hs.g_ffn_mid[l], e * ff, ff);
+                let f_e = GptqFactor::prepare(&rotate_gram(&g_e, &rots.r5));
+                out.set_axis0(e, &gptq_quantize_with_factor(&wd_l.index_axis0(e), &f_e, scheme));
+            }
+            out
+        } else {
+            let f_wd = GptqFactor::prepare(&rotate_gram(&hs.g_ffn_mid[l], &rots.r5));
+            gptq_quantize_with_factor(&wd_l, &f_wd, scheme)
+        };
+        let mut wd = params.get("wd").clone();
+        wd.set_axis0(l, &q_wd);
+        params.set("wd", wd);
+    }
+    Ok(())
+}
+
+/// Extract the (off, off)+(n, n) diagonal block of a square matrix.
+fn diag_block(g: &Tensor, off: usize, n: usize) -> Tensor {
+    let big = g.shape[0];
+    let mut out = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..n {
+            out.data[i * n + j] = g.data[(off + i) * big + (off + j)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::fake_llama_meta;
+    use crate::util::Rng;
+
+    fn fake_taps(meta: &crate::runtime::ConfigMeta, l: usize, rng: &mut Rng) -> LayerTaps {
+        let (b, t, d, ff) = (2, meta.seq_len, meta.d_model, meta.d_ff);
+        LayerTaps {
+            layer: l,
+            mhsa_in: Tensor::randn(&[b, t, d], 1.0, rng),
+            ffn_in: Tensor::randn(&[b, t, d], 1.0, rng),
+            v_heads: Tensor::randn(&[b, t, meta.n_heads, meta.d_head], 1.0, rng),
+            attn_out: Tensor::randn(&[b, t, d], 1.0, rng),
+            ffn_mid: Tensor::randn(&[b, t, ff], 1.0, rng),
+        }
+    }
+
+    #[test]
+    fn rtn_path_quantizes_all_linears() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(0);
+        let mut p = Params::init(&meta, &mut rng);
+        let orig = p.clone();
+        let rots = RotationSet::identity(meta.d_head, meta.d_ff);
+        quantize_weights(&mut p, WeightQuantizer::Rtn, &QuantScheme::weight4(), None, &rots)
+            .unwrap();
+        for name in ["wq", "wk", "wv", "wo", "wg", "wu", "wd"] {
+            assert!(p.get(name).max_abs_diff(orig.get(name)) > 0.0, "{name} unchanged");
+        }
+        // embedding/head untouched
+        assert_eq!(p.get("embed").data, orig.get("embed").data);
+        assert_eq!(p.get("head").data, orig.get("head").data);
+    }
+
+    #[test]
+    fn gptq_path_runs_and_stays_finite() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(1);
+        let mut p = Params::init(&meta, &mut rng);
+        let mut hs = HessianSet::new(meta.n_layers, meta.d_model, meta.d_ff);
+        for l in 0..meta.n_layers {
+            for _ in 0..4 {
+                hs.accumulate(&fake_taps(&meta, l, &mut rng));
+            }
+        }
+        let rots = RotationSet::identity(meta.d_head, meta.d_ff);
+        quantize_weights(&mut p, WeightQuantizer::Gptq, &QuantScheme::weight4(), Some(&hs), &rots)
+            .unwrap();
+        for name in ["wq", "wo", "wd"] {
+            assert!(p.get(name).all_finite(), "{name}");
+        }
+    }
+
+    #[test]
+    fn diag_block_extracts() {
+        let g = Tensor::new((0..16).map(|x| x as f32).collect(), vec![4, 4]);
+        let b = diag_block(&g, 2, 2);
+        assert_eq!(b.data, vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn gptq_requires_hessians() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(2);
+        let mut p = Params::init(&meta, &mut rng);
+        let rots = RotationSet::identity(meta.d_head, meta.d_ff);
+        assert!(quantize_weights(&mut p, WeightQuantizer::Gptq, &QuantScheme::weight4(), None, &rots)
+            .is_err());
+    }
+}

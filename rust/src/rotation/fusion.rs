@@ -1,0 +1,223 @@
+//! Offline weight transformations: RMSNorm folding and rotation fusion.
+//!
+//! These implement the computational-invariance theorem (Ashkboos et al.
+//! 2024a) on the stacked parameter store. The python test
+//! `test_model.py::test_r1_fusion_is_invariant_in_fp` pins the same math
+//! on the JAX side; the Rust integration test checks invariance through
+//! the actual artifacts.
+
+use crate::model::Params;
+use crate::tensor::{matmul::matmul, Tensor};
+
+use super::blockdiag_heads;
+
+/// Apply `f` to every trailing 2-D matrix of a stacked (…, k, n) tensor.
+fn map_matrices(w: &Tensor, f: impl Fn(&Tensor) -> Tensor) -> Tensor {
+    let r = w.rank();
+    assert!(r >= 2);
+    if r == 2 {
+        return f(w);
+    }
+    let (k, n) = (w.shape[r - 2], w.shape[r - 1]);
+    let mat = k * n;
+    let count = w.numel() / mat;
+    let mut out = w.clone();
+    for i in 0..count {
+        let sub = Tensor::new(w.data[i * mat..(i + 1) * mat].to_vec(), vec![k, n]);
+        let g = f(&sub);
+        assert_eq!(g.shape, vec![k, n]);
+        out.data[i * mat..(i + 1) * mat].copy_from_slice(&g.data);
+    }
+    out
+}
+
+/// Left-multiply every matrix of a stack by `m`ᵀ (input-side transform).
+fn left_t(w: &Tensor, m: &Tensor) -> Tensor {
+    let mt = m.t();
+    map_matrices(w, |sub| matmul(&mt, sub))
+}
+
+/// Right-multiply every matrix of a stack by `m` (output-side transform).
+fn right(w: &Tensor, m: &Tensor) -> Tensor {
+    map_matrices(w, |sub| matmul(sub, m))
+}
+
+/// Fold RMSNorm γ into the adjacent linears; all norms become weightless.
+/// Precondition for every rotation (RMSNorm is rotation-invariant only
+/// without per-channel weights).
+pub fn fold_norms(p: &mut Params) {
+    let meta = p.meta.clone();
+    let l = meta.n_layers;
+    // ln1 → wq, wk, wv
+    let ln1 = p.get("ln1").clone();
+    for name in ["wq", "wk", "wv"] {
+        let w = p.get(name).clone();
+        let mut out = w.clone();
+        let d = meta.d_model;
+        for layer in 0..l {
+            let g = &ln1.data[layer * d..(layer + 1) * d];
+            let sub = w.index_axis0(layer).scale_rows(g);
+            out.set_axis0(layer, &sub);
+        }
+        p.set(name, out);
+    }
+    p.set("ln1", Tensor::ones(&[l, meta.d_model]));
+
+    // ln2 → FFN input linears (arch-dependent)
+    let ln2 = p.get("ln2").clone();
+    let targets: &[&str] = match meta.arch.as_str() {
+        "llama" => &["wg", "wu"],
+        "phi" => &["wu"],
+        "moe" => &["wr", "wg", "wu"],
+        a => panic!("unknown arch {a}"),
+    };
+    for name in targets {
+        let w = p.get(name).clone();
+        let mut out = w.clone();
+        let d = meta.d_model;
+        for layer in 0..l {
+            let g = &ln2.data[layer * d..(layer + 1) * d];
+            let scaled = map_matrices(&w.index_axis0(layer), |sub| sub.scale_rows(g));
+            out.set_axis0(layer, &scaled);
+        }
+        p.set(name, out);
+    }
+    p.set("ln2", Tensor::ones(&[l, meta.d_model]));
+
+    // lnf → head (head is (V, d): logits = x ⊙ γ @ headᵀ ⇒ head[:,j] *= γ[j])
+    let lnf = p.get("lnf").clone();
+    p.set("head", p.get("head").scale_cols(&lnf.data));
+    p.set("lnf", Tensor::ones(&[meta.d_model]));
+}
+
+/// Fuse the residual-stream rotation R1 (requires folded norms).
+pub fn fuse_r1(p: &mut Params, r1: &Tensor) {
+    let meta = p.meta.clone();
+    assert_eq!(r1.shape, vec![meta.d_model, meta.d_model]);
+    p.set("embed", matmul(p.get("embed"), r1));
+    p.set("head", matmul(p.get("head"), r1));
+    for name in ["wq", "wk", "wv"] {
+        p.set(name, left_t(p.get(name), r1));
+    }
+    p.set("wo", right(p.get("wo"), r1));
+    match meta.arch.as_str() {
+        "llama" => {
+            p.set("wg", left_t(p.get("wg"), r1));
+            p.set("wu", left_t(p.get("wu"), r1));
+            p.set("wd", right(p.get("wd"), r1));
+        }
+        "phi" => {
+            p.set("wu", left_t(p.get("wu"), r1));
+            p.set("wd", right(p.get("wd"), r1));
+        }
+        "moe" => {
+            p.set("wr", left_t(p.get("wr"), r1));
+            p.set("wg", left_t(p.get("wg"), r1));
+            p.set("wu", left_t(p.get("wu"), r1));
+            p.set("wd", right(p.get("wd"), r1));
+        }
+        a => panic!("unknown arch {a}"),
+    }
+}
+
+/// Fuse per-layer R2 (d_head) into Wv (right) and Wo (left-inverse).
+pub fn fuse_r2(p: &mut Params, r2s: &[Tensor]) {
+    let meta = p.meta.clone();
+    if r2s.is_empty() {
+        return;
+    }
+    assert_eq!(r2s.len(), meta.n_layers);
+    let mut wv = p.get("wv").clone();
+    let mut wo = p.get("wo").clone();
+    for (l, r2) in r2s.iter().enumerate() {
+        let b = blockdiag_heads(r2, meta.n_heads);
+        wv.set_axis0(l, &matmul(&wv.index_axis0(l), &b));
+        wo.set_axis0(l, &matmul(&b.t(), &wo.index_axis0(l)));
+    }
+    p.set("wv", wv);
+    p.set("wo", wo);
+}
+
+/// Fuse the inverse of the online head rotation R4 into Wo.
+pub fn fuse_r4_inverse(p: &mut Params, r4: &Tensor) {
+    let meta = p.meta.clone();
+    let b = blockdiag_heads(r4, meta.n_heads);
+    p.set("wo", left_t(p.get("wo"), &b));
+}
+
+/// Fuse the inverse of the online FFN rotation R5 into Wdown.
+pub fn fuse_r5_inverse(p: &mut Params, r5: &Tensor) {
+    p.set("wd", left_t(p.get("wd"), r5));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::fake_llama_meta;
+    use crate::tensor::hadamard::random_hadamard;
+    use crate::util::Rng;
+
+    #[test]
+    fn fold_norms_makes_norms_one() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(0);
+        let mut p = Params::init(&meta, &mut rng);
+        // randomize norms first
+        p.set("ln1", Tensor::randn(&[meta.n_layers, meta.d_model], 0.2, &mut rng).map(|x| 1.0 + x));
+        p.set("lnf", Tensor::randn(&[meta.d_model], 0.2, &mut rng).map(|x| 1.0 + x));
+        fold_norms(&mut p);
+        assert!(p.get("ln1").data.iter().all(|&v| v == 1.0));
+        assert!(p.get("lnf").data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn fuse_r1_then_inverse_restores() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(1);
+        let mut p = Params::init(&meta, &mut rng);
+        fold_norms(&mut p);
+        let orig = p.clone();
+        let r1 = random_hadamard(meta.d_model, &mut rng);
+        fuse_r1(&mut p, &r1);
+        assert!(p.get("wq").max_abs_diff(orig.get("wq")) > 1e-3); // actually rotated
+        fuse_r1(&mut p, &r1.t()); // rotate back
+        for name in ["embed", "head", "wq", "wo", "wg", "wd"] {
+            assert!(
+                p.get(name).max_abs_diff(orig.get(name)) < 1e-4,
+                "{name} not restored"
+            );
+        }
+    }
+
+    #[test]
+    fn fuse_r2_roundtrip() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(2);
+        let mut p = Params::init(&meta, &mut rng);
+        let orig = p.clone();
+        let r2s: Vec<Tensor> =
+            (0..meta.n_layers).map(|_| random_hadamard(meta.d_head, &mut rng)).collect();
+        fuse_r2(&mut p, &r2s);
+        assert!(p.get("wv").max_abs_diff(orig.get("wv")) > 1e-3);
+        let inv: Vec<Tensor> = r2s.iter().map(|r| r.t()).collect();
+        fuse_r2(&mut p, &inv);
+        assert!(p.get("wv").max_abs_diff(orig.get("wv")) < 1e-4);
+        assert!(p.get("wo").max_abs_diff(orig.get("wo")) < 1e-4);
+    }
+
+    #[test]
+    fn r4_r5_inverses_roundtrip() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(3);
+        let mut p = Params::init(&meta, &mut rng);
+        let orig = p.clone();
+        let r4 = random_hadamard(meta.d_head, &mut rng);
+        let r5 = random_hadamard(meta.d_ff, &mut rng);
+        fuse_r4_inverse(&mut p, &r4);
+        fuse_r5_inverse(&mut p, &r5);
+        fuse_r4_inverse(&mut p, &r4.t());
+        fuse_r5_inverse(&mut p, &r5.t());
+        assert!(p.get("wo").max_abs_diff(orig.get("wo")) < 1e-4);
+        assert!(p.get("wd").max_abs_diff(orig.get("wd")) < 1e-4);
+    }
+}

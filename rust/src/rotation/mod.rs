@@ -1,0 +1,94 @@
+//! Rotation construction + offline fusion (paper Fig. 3).
+//!
+//! R1 (d_model, global) and R2 (d_head, per layer) fuse into the weights —
+//! zero inference cost. R3/R4/R5 stay online (random Hadamard, passed to
+//! the quantized graphs as inputs); their inverses are pre-fused here
+//! (R4ᵀ into Wo, R5ᵀ into Wdown; R3 self-cancels in QᵀK).
+
+pub mod fusion;
+
+pub use fusion::{fold_norms, fuse_r1, fuse_r2, fuse_r4_inverse, fuse_r5_inverse};
+
+use crate::tensor::{hadamard::random_hadamard, Tensor};
+use crate::util::Rng;
+
+/// The full rotation assignment for one quantized model.
+#[derive(Clone)]
+pub struct RotationSet {
+    /// Residual-stream rotation (None = identity, e.g. GPTQ-only).
+    pub r1: Option<Tensor>,
+    /// Per-layer V/KV rotation (d_head × d_head), empty = identity.
+    pub r2: Vec<Tensor>,
+    /// Online rotations (identity when rotations are disabled).
+    pub r3: Tensor,
+    pub r4: Tensor,
+    pub r5: Tensor,
+}
+
+impl RotationSet {
+    /// No rotations at all (Fp16 / GPTQ-only rows).
+    pub fn identity(d_head: usize, d_ff: usize) -> Self {
+        Self {
+            r1: None,
+            r2: Vec::new(),
+            r3: Tensor::eye(d_head),
+            r4: Tensor::eye(d_head),
+            r5: Tensor::eye(d_ff),
+        }
+    }
+
+    /// Random-Hadamard online rotations (shared by all rotation methods).
+    pub fn online_hadamard(d_head: usize, d_ff: usize, rng: &mut Rng) -> (Tensor, Tensor, Tensor) {
+        (
+            random_hadamard(d_head, rng),
+            random_hadamard(d_head, rng),
+            random_hadamard(d_ff, rng),
+        )
+    }
+}
+
+/// Expand a per-head rotation (dh × dh) to the block-diagonal (d × d)
+/// acting identically on every head.
+pub fn blockdiag_heads(r: &Tensor, n_heads: usize) -> Tensor {
+    let dh = r.shape[0];
+    assert_eq!(r.shape, vec![dh, dh]);
+    let d = dh * n_heads;
+    let mut out = Tensor::zeros(&[d, d]);
+    for h in 0..n_heads {
+        for i in 0..dh {
+            for j in 0..dh {
+                out.data[(h * dh + i) * d + (h * dh + j)] = r.data[i * dh + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::hadamard::orthogonality_error;
+
+    #[test]
+    fn blockdiag_is_orthogonal() {
+        let mut rng = Rng::new(0);
+        let r = random_hadamard(16, &mut rng);
+        let b = blockdiag_heads(&r, 4);
+        assert_eq!(b.shape, vec![64, 64]);
+        assert!(orthogonality_error(&b) < 1e-4);
+    }
+
+    #[test]
+    fn blockdiag_acts_per_head() {
+        let mut rng = Rng::new(1);
+        let r = random_hadamard(4, &mut rng);
+        let b = blockdiag_heads(&r, 2);
+        let x = Tensor::randn(&[1, 8], 1.0, &mut rng);
+        let y = crate::tensor::matmul::matmul(&x, &b);
+        let x0 = Tensor::new(x.data[..4].to_vec(), vec![1, 4]);
+        let y0 = crate::tensor::matmul::matmul(&x0, &r);
+        for j in 0..4 {
+            assert!((y.data[j] - y0.data[j]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact loading + execution: HLO text → PJRT executable, with a
+//! compile cache (compiling an HLO module costs 10s–100s of ms; every
+//! pipeline stage reuses the cached executable).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactSig, Manifest};
+use super::value::Value;
+
+/// A compiled artifact bound to its manifest signature.
+pub struct Artifact {
+    pub name: String,
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative execution stats (per-artifact profiling, §Perf)
+    stats: Mutex<ExecStats>,
+}
+
+#[derive(Default, Debug, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+/// The PJRT runtime: one CPU client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
+    pub compile_s: Mutex<f64>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (default: ./artifacts).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()), compile_s: Mutex::new(0.0) })
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let sig = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&sig.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling artifact '{name}': {e}"))?;
+        *self.compile_s.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let artifact =
+            Arc::new(Artifact { name: name.to_string(), sig, exe, stats: Mutex::new(ExecStats::default()) });
+        self.cache.lock().unwrap().insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Drop a cached executable (frees PJRT memory for one-shot artifacts
+    /// like spinquant_step once a baseline finishes).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    pub fn cached_artifacts(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+impl Artifact {
+    /// Execute with shape/dtype validation against the manifest signature.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        anyhow::ensure!(
+            inputs.len() == self.sig.inputs.len(),
+            "artifact '{}': {} inputs given, {} expected",
+            self.name,
+            inputs.len(),
+            self.sig.inputs.len()
+        );
+        for (v, s) in inputs.iter().zip(&self.sig.inputs) {
+            anyhow::ensure!(
+                v.shape() == s.shape.as_slice() && v.dtype() == s.dtype,
+                "artifact '{}' input '{}': got {:?}/{} want {:?}/{}",
+                self.name, s.name, v.shape(), v.dtype(), s.shape, s.dtype
+            );
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing '{}': {e}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of '{}': {e}", self.name))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of '{}': {e}", self.name))?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.calls += 1;
+            st.total_s += t0.elapsed().as_secs_f64();
+        }
+        anyhow::ensure!(
+            parts.len() == self.sig.outputs.len(),
+            "artifact '{}': {} outputs, {} expected",
+            self.name, parts.len(), self.sig.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.iter().zip(&self.sig.outputs) {
+            let v = Value::from_literal(lit)
+                .with_context(|| format!("artifact '{}' output '{}'", self.name, s.name))?;
+            anyhow::ensure!(
+                v.shape() == s.shape.as_slice(),
+                "artifact '{}' output '{}': got {:?} want {:?}",
+                self.name, s.name, v.shape(), s.shape
+            );
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}

@@ -1,0 +1,180 @@
+//! `artifacts/manifest.json` — the ABI emitted by compile/aot.py.
+//!
+//! The manifest pins, for every artifact, the exact input/output tensor
+//! signatures (names, shapes, dtypes) and, for every model config, the
+//! canonical parameter order. The runtime validates every call against it
+//! so a stale artifacts/ directory fails loudly instead of mis-executing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub kurtail_rows: usize,
+    pub configs: BTreeMap<String, ConfigMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub arch: String,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub cap_batch: usize,
+    pub decode_batch: usize,
+    pub spin_batch: usize,
+    pub param_specs: Vec<ParamSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub group: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+fn tensor_sig(j: &Json) -> Result<TensorSig> {
+    Ok(TensorSig {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.usize_vec()?,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version")?.as_usize()?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.get("configs")?.as_obj()? {
+            let param_specs = c
+                .get("param_specs")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            configs.insert(
+                name.clone(),
+                ConfigMeta {
+                    name: c.get("name")?.as_str()?.to_string(),
+                    vocab: c.get("vocab")?.as_usize()?,
+                    d_model: c.get("d_model")?.as_usize()?,
+                    n_layers: c.get("n_layers")?.as_usize()?,
+                    n_heads: c.get("n_heads")?.as_usize()?,
+                    d_head: c.get("d_head")?.as_usize()?,
+                    d_ff: c.get("d_ff")?.as_usize()?,
+                    seq_len: c.get("seq_len")?.as_usize()?,
+                    arch: c.get("arch")?.as_str()?.to_string(),
+                    n_experts: c.get("n_experts")?.as_usize()?,
+                    top_k: c.get("top_k")?.as_usize()?,
+                    train_batch: c.get("train_batch")?.as_usize()?,
+                    eval_batch: c.get("eval_batch")?.as_usize()?,
+                    cap_batch: c.get("cap_batch")?.as_usize()?,
+                    decode_batch: c.get("decode_batch")?.as_usize()?,
+                    spin_batch: c.get("spin_batch")?.as_usize()?,
+                    param_specs,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    group: a.get("group")?.as_str()?.to_string(),
+                    inputs: a.get("inputs")?.as_arr()?.iter().map(tensor_sig).collect::<Result<_>>()?,
+                    outputs: a.get("outputs")?.as_arr()?.iter().map(tensor_sig).collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            version,
+            kurtail_rows: j.get("kurtail_rows")?.as_usize()?,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "config '{name}' not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+impl ConfigMeta {
+    /// Number of parameter tensors (the leading inputs of most graphs).
+    pub fn n_params(&self) -> usize {
+        self.param_specs.len()
+    }
+
+    /// Index of a named parameter in the canonical order.
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.param_specs.iter().position(|p| p.name == name)
+    }
+
+    /// Names of layer-stacked params (leading axis = n_layers).
+    pub fn layer_param_names(&self) -> Vec<&str> {
+        self.param_specs
+            .iter()
+            .map(|p| p.name.as_str())
+            .filter(|n| !matches!(*n, "embed" | "lnf" | "head"))
+            .collect()
+    }
+
+    /// Approximate parameter count (for reports).
+    pub fn param_count(&self) -> usize {
+        self.param_specs.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it speaks `Tensor`/`IntTensor` + artifact names. Python never runs at
+//! request time — the manifest + HLO text files are the entire contract.
+
+pub mod artifact;
+pub mod manifest;
+pub mod value;
+
+pub use artifact::{Artifact, Runtime};
+pub use manifest::{ArtifactSig, ConfigMeta, Manifest, TensorSig};
+pub use value::Value;

@@ -1,0 +1,105 @@
+//! Host values crossing the PJRT boundary: f32 / i32 tensors.
+
+use anyhow::Result;
+
+use crate::tensor::{IntTensor, Tensor};
+
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "f32",
+            Value::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => anyhow::bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => anyhow::bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => anyhow::bail!("expected i32 value, got f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        anyhow::ensure!(t.numel() == 1, "expected scalar, shape {:?}", t.shape);
+        Ok(t.data[0])
+    }
+
+    /// Convert to an XLA literal (reshaped to the target dims).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => xla::Literal::vec1(&t.data),
+            Value::I32(t) => xla::Literal::vec1(&t.data),
+        };
+        Ok(lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape literal: {e}"))?)
+    }
+
+    /// Convert an XLA literal back to a host value.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))?;
+                Ok(Value::F32(Tensor::new(data, dims)))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?;
+                Ok(Value::I32(IntTensor::new(data, dims)))
+            }
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+impl From<f32> for Value {
+    fn from(v: f32) -> Self {
+        Value::F32(Tensor::scalar(v))
+    }
+}
+
+impl From<i32> for Value {
+    fn from(v: i32) -> Self {
+        Value::I32(IntTensor::scalar(v))
+    }
+}

@@ -1,0 +1,134 @@
+//! Hadamard machinery on the coordinator side: explicit matrices for
+//! fusion (R1/R2 candidates, QuaRot baselines) and the in-place FWHT for
+//! metric computations. Mirrors `python/compile/kernels/hadamard.py`.
+
+use super::{matmul::matmul, Tensor};
+use crate::util::Rng;
+
+/// Normalized Sylvester Hadamard matrix H/√n (n must be a power of two).
+pub fn hadamard_matrix(n: usize) -> Tensor {
+    assert!(n.is_power_of_two(), "hadamard dim {n} not a power of two");
+    let mut h = vec![1.0f32];
+    let mut m = 1;
+    while m < n {
+        let mut next = vec![0.0f32; 4 * m * m];
+        for i in 0..m {
+            for j in 0..m {
+                let v = h[i * m + j];
+                next[i * 2 * m + j] = v;
+                next[i * 2 * m + j + m] = v;
+                next[(i + m) * 2 * m + j] = v;
+                next[(i + m) * 2 * m + j + m] = -v;
+            }
+        }
+        h = next;
+        m *= 2;
+    }
+    let s = 1.0 / (n as f32).sqrt();
+    Tensor::new(h.into_iter().map(|v| v * s).collect(), vec![n, n])
+}
+
+/// QuaRot-style random Hadamard rotation: H·diag(±1).
+pub fn random_hadamard(n: usize, rng: &mut Rng) -> Tensor {
+    let mut h = hadamard_matrix(n);
+    let signs: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+    for i in 0..n {
+        for j in 0..n {
+            h.data[i * n + j] *= signs[j];
+        }
+    }
+    h
+}
+
+/// In-place FWHT along the last axis of each row, normalized by 1/√n.
+pub fn fwht_rows(x: &mut Tensor) {
+    let (rows, n) = x.as_2d();
+    assert!(n.is_power_of_two());
+    let norm = 1.0 / (n as f32).sqrt();
+    for r in 0..rows {
+        let row = &mut x.data[r * n..(r + 1) * n];
+        let mut h = 1;
+        while h < n {
+            let mut i = 0;
+            while i < n {
+                for j in i..i + h {
+                    let a = row[j];
+                    let b = row[j + h];
+                    row[j] = a + b;
+                    row[j + h] = a - b;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+        for v in row.iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+/// max |RᵀR − I| — orthogonality check used by tests and the kurtail
+/// driver's convergence guard.
+pub fn orthogonality_error(r: &Tensor) -> f32 {
+    let n = r.shape[0];
+    let g = matmul(&r.t(), r);
+    let mut err = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            err = err.max((g.data[i * n + j] - want).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::rows_matmul;
+
+    #[test]
+    fn hadamard_is_orthogonal() {
+        for n in [2, 4, 16, 64, 128] {
+            assert!(orthogonality_error(&hadamard_matrix(n)) < 1e-5, "n={n}");
+        }
+    }
+
+    #[test]
+    fn random_hadamard_is_orthogonal() {
+        let mut rng = Rng::new(0);
+        for n in [8, 32, 256] {
+            assert!(orthogonality_error(&random_hadamard(n, &mut rng)) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fwht_matches_matrix() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[7, 64], 1.0, &mut rng);
+        let want = rows_matmul(&x, &hadamard_matrix(64));
+        let mut got = x.clone();
+        fwht_rows(&mut got);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn fwht_involution() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[5, 32], 1.0, &mut rng);
+        let mut y = x.clone();
+        fwht_rows(&mut y);
+        fwht_rows(&mut y);
+        assert!(y.max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn fwht_flattens_onehot() {
+        let mut x = Tensor::zeros(&[1, 64]);
+        x.data[17] = 8.0;
+        fwht_rows(&mut x);
+        for v in &x.data {
+            assert!((v.abs() - 1.0).abs() < 1e-5);
+        }
+    }
+}

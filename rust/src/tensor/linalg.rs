@@ -1,0 +1,162 @@
+//! Dense linear algebra for GPTQ: Cholesky factorization, triangular
+//! solves, and SPD inversion. GPTQ (Frantar et al. 2022) needs the upper
+//! Cholesky factor of H⁻¹ where H = XᵀX + λI is the layer-input Hessian.
+//! No LAPACK anywhere — everything is written out so the whole coordinator
+//! stays dependency-free.
+
+use super::Tensor;
+
+/// Lower-triangular Cholesky factor L of SPD A = L·Lᵀ.
+/// Returns None if A is not (numerically) positive definite.
+pub fn cholesky(a: &Tensor) -> Option<Tensor> {
+    assert_eq!(a.rank(), 2);
+    let n = a.shape[0];
+    assert_eq!(a.shape[1], n);
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.data[i * n + j] as f64;
+            for k in 0..j {
+                s -= l.data[i * n + k] as f64 * l.data[j * n + k] as f64;
+            }
+            if i == j {
+                if !(s > 0.0) || !s.is_finite() {
+                    return None;
+                }
+                l.data[i * n + j] = (s.sqrt()) as f32;
+            } else {
+                l.data[i * n + j] = (s / l.data[j * n + j] as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L·y = b with L lower-triangular (forward substitution).
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.shape[0];
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.data[i * n + k] as f64 * y[k] as f64;
+        }
+        y[i] = (s / l.data[i * n + i] as f64) as f32;
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y (backward substitution on the transpose of lower L).
+pub fn solve_lower_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.shape[0];
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in (i + 1)..n {
+            s -= l.data[k * n + i] as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.data[i * n + i] as f64) as f32;
+    }
+    x
+}
+
+/// SPD inverse via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Tensor) -> Option<Tensor> {
+    let n = a.shape[0];
+    let l = cholesky(a)?;
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.data[i * n + j] = x[i];
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+/// Upper Cholesky factor U of A (A = UᵀU); GPTQ uses chol(H⁻¹) upper.
+pub fn cholesky_upper(a: &Tensor) -> Option<Tensor> {
+    // A = L Lᵀ ⇒ with U = Lᵀ, A = Uᵀ U.
+    cholesky(a).map(|l| l.t())
+}
+
+/// Add λ·mean(diag)·I damping in place (GPTQ percdamp).
+pub fn dampen(h: &mut Tensor, lambda: f32) {
+    let n = h.shape[0];
+    let mean_diag = (0..n).map(|i| h.data[i * n + i]).sum::<f32>() / n as f32;
+    let eps = lambda * mean_diag.max(1e-8);
+    for i in 0..n {
+        h.data[i * n + i] += eps;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::{gram, matmul};
+    use crate::util::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let a = Tensor::randn(&[n + 4, n], 1.0, &mut rng);
+        let mut h = gram(&a);
+        dampen(&mut h, 0.01);
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(16, 0);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &l.t());
+        assert!(rec.max_abs_diff(&a) < 1e-2 * a.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn solves_invert() {
+        let a = random_spd(12, 1);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(2);
+        let b: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // A x should equal b
+        let ax = matmul(&a, &Tensor::new(x, vec![12, 1]));
+        for (got, want) in ax.data.iter().zip(&b) {
+            assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let a = random_spd(10, 3);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Tensor::eye(10)) < 1e-2);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = Tensor::eye(4);
+        a.data[0] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn upper_factor() {
+        let a = random_spd(8, 4);
+        let u = cholesky_upper(&a).unwrap();
+        let rec = matmul(&u.t(), &u);
+        assert!(rec.max_abs_diff(&a) < 1e-2 * a.max_abs().max(1.0));
+        // strictly upper-triangular below diagonal is zero
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(u.data[i * 8 + j], 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Blocked matmul kernels for the offline (coordinator-side) hot paths:
+//! rotation fusion (W ← RᵀW), Hessian accumulation (XᵀX) in GPTQ, and the
+//! sensitivity sweeps. Cache-blocked with an i-k-j inner loop so the
+//! innermost loop is a contiguous AXPY the compiler auto-vectorizes.
+
+use super::Tensor;
+
+const BLOCK: usize = 64;
+
+/// C = A @ B for 2-D tensors (m,k) × (k,n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.rank(), 2, "matmul rhs must be 2-D");
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {:?} @ {:?}", a.shape, b.shape);
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(&a.data, &b.data, &mut c.data, m, k, n);
+    c
+}
+
+/// C += A @ B on raw row-major slices.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = Aᵀ @ A (Gram / GPTQ Hessian accumulation), exploiting symmetry.
+pub fn gram(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let mut c = Tensor::zeros(&[n, n]);
+    for row in 0..m {
+        let r = &a.data[row * n..(row + 1) * n];
+        for i in 0..n {
+            let ri = r[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in i..n {
+                crow[j] += ri * r[j];
+            }
+        }
+    }
+    // mirror the upper triangle
+    for i in 0..n {
+        for j in 0..i {
+            c.data[i * n + j] = c.data[j * n + i];
+        }
+    }
+    c
+}
+
+/// Accumulate Aᵀ@A into an existing (n,n) Hessian (streamed batches).
+pub fn gram_accumulate(h: &mut Tensor, a: &Tensor) {
+    assert_eq!(a.rank(), 2);
+    let n = a.shape[1];
+    assert_eq!(h.shape, vec![n, n]);
+    let m = a.shape[0];
+    for row in 0..m {
+        let r = &a.data[row * n..(row + 1) * n];
+        for i in 0..n {
+            let ri = r[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let hrow = &mut h.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                hrow[j] += ri * r[j];
+            }
+        }
+    }
+}
+
+/// y = x @ W for a batch of rows (x: (m,k) flattened leading dims).
+pub fn rows_matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.as_2d();
+    assert_eq!(w.rank(), 2);
+    assert_eq!(w.shape[0], k);
+    let n = w.shape[1];
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(&x.data, &w.data, &mut out.data, m, k, n);
+    let mut shape = x.shape.clone();
+    *shape.last_mut().unwrap() = n;
+    out.reshape(&shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.data[i * k + kk] * b.data[kk * n + j];
+                }
+                c.data[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(0);
+        for (m, k, n) in [(3, 4, 5), (65, 67, 63), (128, 128, 128), (1, 200, 1)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[37, 19], 1.0, &mut rng);
+        let got = gram(&a);
+        let want = matmul(&a.t(), &a);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn gram_accumulate_streams() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[40, 16], 1.0, &mut rng);
+        let full = gram(&a);
+        let mut h = Tensor::zeros(&[16, 16]);
+        for i in 0..4 {
+            let chunk =
+                Tensor::new(a.data[i * 10 * 16..(i + 1) * 10 * 16].to_vec(), vec![10, 16]);
+            gram_accumulate(&mut h, &chunk);
+        }
+        assert!(h.max_abs_diff(&full) < 1e-3);
+    }
+
+    #[test]
+    fn rows_matmul_keeps_leading_shape() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 5, 8], 1.0, &mut rng);
+        let w = Tensor::randn(&[8, 3], 1.0, &mut rng);
+        let y = rows_matmul(&x, &w);
+        assert_eq!(y.shape, vec![2, 5, 3]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Dense f32 tensor substrate for the coordinator's offline math.
+//!
+//! Everything that happens *outside* the PJRT artifacts — rotation fusion,
+//! RTN/GPTQ weight quantization, Hessian accumulation, sensitivity sweeps,
+//! metric computation — runs on this. Row-major, owned storage, no
+//! external BLAS (the hot matmuls are blocked + unrolled in `matmul.rs`).
+
+pub mod hadamard;
+pub mod linalg;
+pub mod matmul;
+pub mod stats;
+
+use crate::util::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape {shape:?}");
+        Self { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self { data: vec![1.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], shape: vec![] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Self { data: (0..n).map(|_| rng.normal() * std).collect(), shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows × cols view of the last axis: (prod(shape[..-1]), shape[-1]).
+    pub fn as_2d(&self) -> (usize, usize) {
+        let cols = *self.shape.last().expect("scalar has no rows");
+        (self.numel() / cols, cols)
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.numel(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (r, c) = self.as_2d();
+        assert!(i < r);
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (r, c) = self.as_2d();
+        assert!(i < r);
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy of sub-tensor at index `i` along axis 0 (layer slicing).
+    pub fn index_axis0(&self, i: usize) -> Tensor {
+        assert!(self.rank() >= 1 && i < self.shape[0]);
+        let stride: usize = self.shape[1..].iter().product();
+        Tensor::new(self.data[i * stride..(i + 1) * stride].to_vec(), self.shape[1..].to_vec())
+    }
+
+    /// Write `src` into position `i` along axis 0.
+    pub fn set_axis0(&mut self, i: usize, src: &Tensor) {
+        let stride: usize = self.shape[1..].iter().product();
+        assert_eq!(src.shape, &self.shape[1..], "set_axis0 shape mismatch");
+        self.data[i * stride..(i + 1) * stride].copy_from_slice(&src.data);
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let inner = parts[0].shape.clone();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            assert_eq!(p.shape, inner);
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend(inner);
+        Tensor::new(data, shape)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(self.data.iter().map(|&x| f(x)).collect(), self.shape.clone())
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+            self.shape.clone(),
+        )
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// Scale row i by g[i] (broadcast over trailing axes).
+    pub fn scale_rows(&self, g: &[f32]) -> Tensor {
+        let (r, c) = self.as_2d();
+        assert_eq!(g.len(), r);
+        let mut out = self.clone();
+        for i in 0..r {
+            for v in &mut out.data[i * c..(i + 1) * c] {
+                *v *= g[i];
+            }
+        }
+        out
+    }
+
+    /// Scale column j by g[j] for a 2-D tensor.
+    pub fn scale_cols(&self, g: &[f32]) -> Tensor {
+        let (r, c) = self.as_2d();
+        assert_eq!(g.len(), c);
+        let mut out = self.clone();
+        for i in 0..r {
+            for j in 0..c {
+                out.data[i * c + j] *= g[j];
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.numel() as f32
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// max |A − B|
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()))
+    }
+}
+
+/// Signed-integer tensor (tokens). Same layout rules as `Tensor`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub data: Vec<i32>,
+    pub shape: Vec<usize>,
+}
+
+impl IntTensor {
+    pub fn new(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { data: vec![0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        Self { data: vec![v], shape: vec![] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slicing_roundtrip() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), vec![2, 3, 4]);
+        let s = t.index_axis0(1);
+        assert_eq!(s.shape, vec![3, 4]);
+        assert_eq!(s.data[0], 12.0);
+        let mut t2 = Tensor::zeros(&[2, 3, 4]);
+        t2.set_axis0(1, &s);
+        assert_eq!(t2.index_axis0(1), s);
+    }
+
+    #[test]
+    fn stack_unstack() {
+        let a = Tensor::ones(&[2, 2]);
+        let b = Tensor::zeros(&[2, 2]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        assert_eq!(s.index_axis0(0), a);
+        assert_eq!(s.index_axis0(1), b);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        assert_eq!(t.t().t(), t);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let t = Tensor::ones(&[2, 3]);
+        let r = t.scale_rows(&[2.0, 3.0]);
+        assert_eq!(r.data, vec![2.0, 2.0, 2.0, 3.0, 3.0, 3.0]);
+        let c = t.scale_cols(&[1.0, 2.0, 3.0]);
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Statistics used throughout the pipeline: central moments, kurtosis,
+//! quantiles — the Rust mirrors of `python/compile/kernels/ref.py` (the
+//! pytest goldens pin both sides to the same semantics).
+
+use super::Tensor;
+
+/// Per-row kurtosis κ = m4/m2² over the last axis (κ_uniform = 1.8,
+/// κ_normal = 3, κ_laplace = 6).
+pub fn kurtosis_rows(x: &Tensor) -> Vec<f32> {
+    let (r, c) = x.as_2d();
+    let mut out = Vec::with_capacity(r);
+    for i in 0..r {
+        out.push(kurtosis(&x.data[i * c..(i + 1) * c]));
+    }
+    out
+}
+
+pub fn kurtosis(xs: &[f32]) -> f32 {
+    let n = xs.len() as f32;
+    let mu = xs.iter().sum::<f32>() / n;
+    let mut m2 = 0.0f64;
+    let mut m4 = 0.0f64;
+    for &x in xs {
+        let c = (x - mu) as f64;
+        let c2 = c * c;
+        m2 += c2;
+        m4 += c2 * c2;
+    }
+    m2 /= n as f64;
+    m4 /= n as f64;
+    (m4 / (m2 * m2).max(1e-12)) as f32
+}
+
+pub const KURTOSIS_UNIFORM: f32 = 1.8;
+
+/// Mean per-row |κ − κ_u| — the KurTail objective, host-side.
+pub fn kurtail_loss(x: &Tensor) -> f32 {
+    let ks = kurtosis_rows(x);
+    ks.iter().map(|k| (k - KURTOSIS_UNIFORM).abs()).sum::<f32>() / ks.len() as f32
+}
+
+/// Linear-interpolated quantile (matches numpy / ref.py semantics).
+pub fn quantile(xs: &[f32], q: f32) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f32;
+    let lo = pos.floor() as usize;
+    let hi = (lo + 1).min(v.len() - 1);
+    let frac = pos - lo as f32;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Per-row max |x| (the Table-1 per-token max statistic).
+pub fn row_absmax(x: &Tensor) -> Vec<f32> {
+    let (r, c) = x.as_2d();
+    (0..r)
+        .map(|i| x.data[i * c..(i + 1) * c].iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+        .collect()
+}
+
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    let n = xs.len() as f32;
+    let mu = xs.iter().sum::<f32>() / n;
+    let var = xs.iter().map(|x| (x - mu).powi(2)).sum::<f32>() / n;
+    (mu, var.sqrt())
+}
+
+/// Histogram over [lo, hi] with `bins` buckets (Fig. 2 distribution dumps).
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        if x.is_finite() && x >= lo && x < hi {
+            h[((x - lo) / w) as usize] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn kurtosis_known() {
+        let mut rng = Rng::new(0);
+        let n = 100_000;
+        let gauss: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let unif: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let lap: Vec<f32> = (0..n).map(|_| rng.laplace(1.0)).collect();
+        assert!((kurtosis(&gauss) - 3.0).abs() < 0.15);
+        assert!((kurtosis(&unif) - 1.8).abs() < 0.05);
+        assert!((kurtosis(&lap) - 6.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn quantile_interp() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.0).abs() < 1e-6);
+        assert!((quantile(&xs, 0.9) - 3.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kurtail_loss_prefers_uniform() {
+        let mut rng = Rng::new(1);
+        let unif = Tensor::new((0..64 * 512).map(|_| rng.range(-1.0, 1.0)).collect(), vec![64, 512]);
+        let lap = Tensor::new((0..64 * 512).map(|_| rng.laplace(1.0)).collect(), vec![64, 512]);
+        assert!(kurtail_loss(&unif) < 0.2);
+        assert!(kurtail_loss(&lap) > 2.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = vec![0.1, 0.2, 0.9, 0.95, -5.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Micro-benchmark harness (criterion stand-in for the offline build).
+//!
+//! `cargo bench` targets use this: warmup, adaptive iteration count,
+//! mean/σ/min reporting, and machine-readable lines (`BENCH\t<name>\t<ns>`)
+//! that EXPERIMENTS.md §Perf scrapes.
+
+use std::time::Instant;
+
+pub struct Bench {
+    /// Minimum sampling time per benchmark (seconds).
+    pub min_time_s: f64,
+    pub warmup_s: f64,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { min_time_s: 1.0, warmup_s: 0.2, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Self { min_time_s: 0.3, warmup_s: 0.05, results: Vec::new() }
+    }
+
+    /// Run one benchmark; `f` is invoked repeatedly, timed per call.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup
+        let t0 = Instant::now();
+        while t0.elapsed().as_secs_f64() < self.warmup_s {
+            std::hint::black_box(f());
+        }
+        // Sample
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed().as_secs_f64() < self.min_time_s || samples.len() < 5 {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let st = Stats { iters: samples.len() as u64, mean_ns: mean, std_ns: var.sqrt(), min_ns: min };
+        println!(
+            "{name:<48} {:>12}/iter  (σ {:>10}, min {:>10}, n={})",
+            fmt_ns(st.mean_ns),
+            fmt_ns(st.std_ns),
+            fmt_ns(st.min_ns),
+            st.iters
+        );
+        println!("BENCH\t{name}\t{:.1}", st.mean_ns);
+        self.results.push((name.to_string(), st));
+        st
+    }
+
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench { min_time_s: 0.02, warmup_s: 0.0, results: vec![] };
+        let st = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(st.mean_ns > 0.0 && st.iters >= 5);
+    }
+}

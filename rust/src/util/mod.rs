@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, timing, JSON, bench harness,
+//! property-testing helpers. All dependency-free (offline build).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Stopwatch;

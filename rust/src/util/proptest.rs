@@ -1,0 +1,63 @@
+//! Tiny property-testing helper (proptest stand-in for the offline build).
+//!
+//! Runs a property over `n` seeded random cases; on failure reports the
+//! seed so the case replays deterministically:
+//!
+//! ```ignore
+//! check(100, |rng| {
+//!     let n = 1 << (1 + rng.below(6));
+//!     let h = hadamard_matrix(n);
+//!     prop_assert(orthogonality_error(&h) < 1e-4, "H orthogonal")
+//! });
+//! ```
+
+use crate::util::Rng;
+
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn prop_close(a: f32, b: f32, tol: f32, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check(cases: u64, prop: impl Fn(&mut Rng) -> PropResult) {
+    let base = std::env::var("KURTAIL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check(10, |rng| prop_assert(rng.uniform() < 1.0, "uniform < 1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        check(10, |rng| prop_assert(rng.uniform() < 0.0001, "rarely true"));
+    }
+}

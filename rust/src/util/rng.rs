@@ -1,0 +1,168 @@
+//! Deterministic, dependency-free RNG (SplitMix64 core).
+//!
+//! Everything stochastic in the coordinator — corpus generation, data
+//! shuffling, random Hadamard signs, weight init — flows through this so
+//! experiments are exactly reproducible from a seed recorded in the report.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent stream (for parallel workers / substages).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xBF58476D1CE4E5B9))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Laplace(0, b): the distribution Banner et al. fit to DNN activations.
+    pub fn laplace(&mut self, b: f32) -> f32 {
+        let u = self.uniform() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).max(1e-12).ln()
+    }
+
+    /// Random sign ±1.
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k ≤ n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+
+    /// Zipf-ish rank sampler over [0, n): P(r) ∝ 1/(r+1)^s, via inverse CDF
+    /// on a precomputed table is overkill — rejection on the harmonic bound
+    /// is fine at our scales.
+    pub fn zipf(&mut self, n: usize, s: f32) -> usize {
+        // inverse-transform on the continuous approximation
+        let hmax = ((n as f32) + 0.5).powf(1.0 - s);
+        let hmin = 0.5f32.powf(1.0 - s);
+        loop {
+            let u = self.uniform();
+            let h = hmin + u * (hmax - hmin);
+            let r = h.powf(1.0 / (1.0 - s)) - 0.5;
+            let k = r.floor() as usize;
+            if k < n {
+                return k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn laplace_kurtosis_heavy() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.laplace(1.0)).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let m2 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        let m4 = xs.iter().map(|x| (x - mean).powi(4)).sum::<f32>() / n as f32;
+        let k = m4 / (m2 * m2);
+        assert!((k - 6.0).abs() < 0.5, "kurtosis={k}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Rng::new(5);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            counts[r.zipf(100, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[60]);
+    }
+}

@@ -1,0 +1,59 @@
+//! Wall-clock + peak-RSS instrumentation for the training-cost experiment
+//! (paper §3: SpinQuant needs 4×H100, KurTail one GPU — here the analogous
+//! asymmetry is peak memory + wall-clock of rotation learning).
+
+use std::time::Instant;
+
+pub struct Stopwatch {
+    start: Instant,
+    label: String,
+}
+
+impl Stopwatch {
+    pub fn start(label: &str) -> Self {
+        Self { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!("{}: {:.2}s", self.label, self.elapsed_s())
+    }
+}
+
+/// Current process peak RSS in MiB (from /proc/self/status; Linux only).
+pub fn peak_rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+/// Current RSS in MiB.
+pub fn rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                let kb: f64 = rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn rss_readable() {
+        assert!(super::rss_mib() > 0.0);
+        assert!(super::peak_rss_mib() >= super::rss_mib() * 0.5);
+    }
+}

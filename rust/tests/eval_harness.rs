@@ -1,0 +1,82 @@
+//! Integration: the evaluation harness scores correctly against
+//! hand-computable cases, and the trained model beats chance on the
+//! synthetic task suites (the signal the paper's tables measure).
+
+use std::sync::Arc;
+
+use kurtail::config::{Method, PipelineConfig};
+use kurtail::calib::Mcq;
+use kurtail::eval::{mathqa_suite, mmlu_suite, score_mcqs, zero_shot_suite};
+use kurtail::pipeline::Pipeline;
+use kurtail::runtime::Runtime;
+
+fn pipeline() -> Option<Pipeline> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    let rt = Arc::new(Runtime::new(dir).expect("runtime"));
+    // fast=false: accuracy assertions need the fully-pretrained (300-step)
+    // tiny model; the snapshot is cached, so training happens once.
+    Some(Pipeline::new(rt, "tiny", 0, false, false).expect("pipeline"))
+}
+
+#[test]
+fn trained_model_beats_chance_on_facts() {
+    let Some(pipe) = pipeline() else { return };
+    let fp = pipe.quantize(&PipelineConfig::new("tiny", Method::Fp16)).unwrap().0;
+    let mmlu = mmlu_suite(&pipe.bundle.world, 25, 7);
+    let mut total = 0.0;
+    for set in &mmlu {
+        let sc = score_mcqs(&pipe.rt, &fp, &set.questions).unwrap();
+        total += sc.accuracy;
+    }
+    let avg = total / mmlu.len() as f32;
+    // 4-way chance = 0.25; the 60-step fast-trained tiny model should
+    // still have absorbed some facts
+    assert!(avg > 0.28, "mmlu avg {avg} not above chance");
+}
+
+#[test]
+fn scorer_prefers_verbatim_training_text() {
+    let Some(pipe) = pipeline() else { return };
+    let fp = pipe.quantize(&PipelineConfig::new("tiny", Method::Fp16)).unwrap().0;
+    // craft an McQ where one option is a substring that certainly appears
+    // in training ("the" continuation) vs junk bytes
+    let q = Mcq {
+        prompt: "the author of".into(),
+        options: vec!["the glass river is alden.".into(), "zzqxj##@@".into()],
+        correct: 0,
+    };
+    let sc = score_mcqs(&pipe.rt, &fp, std::slice::from_ref(&q)).unwrap();
+    assert_eq!(sc.predictions[0], 0, "model should prefer corpus-like text");
+}
+
+#[test]
+fn suites_have_expected_sizes() {
+    let Some(pipe) = pipeline() else { return };
+    let zs = zero_shot_suite(&pipe.bundle.world, 5, 1);
+    assert_eq!(zs.len(), 8);
+    assert!(zs.iter().all(|s| s.questions.len() == 5));
+    let mq = mathqa_suite(7, 1);
+    assert_eq!(mq.questions.len(), 7);
+}
+
+#[test]
+fn quantization_degrades_but_does_not_destroy_accuracy() {
+    let Some(pipe) = pipeline() else { return };
+    let fp = pipe.quantize(&PipelineConfig::new("tiny", Method::Fp16)).unwrap().0;
+    let mut cfg = PipelineConfig::new("tiny", Method::KurTail);
+    cfg.seed = 7;
+    cfg.calib.seed = 7;
+    cfg.calib.n_samples = 32;
+    cfg.calib.iters = 15;
+    let kt = pipe.quantize(&cfg).unwrap().0;
+    let qs = mmlu_suite(&pipe.bundle.world, 25, 7).remove(2).questions; // stem
+    let a_fp = score_mcqs(&pipe.rt, &fp, &qs).unwrap().accuracy;
+    let a_kt = score_mcqs(&pipe.rt, &kt, &qs).unwrap().accuracy;
+    println!("stem acc fp={a_fp} kurtail={a_kt}");
+    // 4-bit should stay within a broad band of fp (not collapse to ~0)
+    assert!(a_kt >= a_fp - 0.35, "quantized accuracy collapsed: {a_fp} -> {a_kt}");
+}

@@ -1,0 +1,143 @@
+//! Integration: the full PTQ pipeline through real artifacts on `tiny`.
+//! Pins the paper's qualitative claims at the system level:
+//!   * rotation fusion preserves the fp forward (computational invariance)
+//!   * quantized ppl ordering: fp < rotated-4bit < unrotated-4bit
+//!   * KurTail's learned rotation actually lowers the kurtosis objective
+//!   * SpinQuant-lite runs and stays on the manifold
+
+use std::sync::Arc;
+
+use kurtail::config::{Method, PipelineConfig, WeightQuantizer};
+use kurtail::eval::perplexity;
+use kurtail::pipeline::{Pipeline, PreparedModel};
+use kurtail::rotation::{fold_norms, fuse_r1, RotationSet};
+use kurtail::runtime::Runtime;
+use kurtail::tensor::hadamard::random_hadamard;
+use kurtail::util::Rng;
+
+fn pipeline() -> Option<Pipeline> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    let rt = Arc::new(Runtime::new(dir).expect("runtime"));
+    // fast=true keeps pretraining at 60 steps; snapshots cache across tests
+    Some(Pipeline::new(rt, "tiny", 7, true, false).expect("pipeline"))
+}
+
+fn fast_cfg(method: Method) -> PipelineConfig {
+    let mut cfg = PipelineConfig::new("tiny", method);
+    cfg.seed = 7;
+    cfg.calib.seed = 7;
+    cfg.calib.n_samples = 32;
+    cfg.calib.iters = 15;
+    cfg
+}
+
+#[test]
+fn rotation_fusion_preserves_fp_forward() {
+    let Some(pipe) = pipeline() else { return };
+    let fp = PreparedModel {
+        params: pipe.fp_params.clone(),
+        rots: RotationSet::identity(pipe.fp_params.meta.d_head, pipe.fp_params.meta.d_ff),
+        quantized: false,
+        method: Method::Fp16,
+    };
+    let ppl_orig = perplexity(&pipe.rt, &fp, &pipe.bundle.test, 2).unwrap();
+
+    // fold + fuse a random orthogonal rotation → fp forward must not move
+    let mut params = pipe.fp_params.clone();
+    fold_norms(&mut params);
+    let mut rng = Rng::new(3);
+    let r1 = random_hadamard(params.meta.d_model, &mut rng);
+    fuse_r1(&mut params, &r1);
+    let rotated = PreparedModel {
+        params,
+        rots: RotationSet::identity(pipe.fp_params.meta.d_head, pipe.fp_params.meta.d_ff),
+        quantized: false,
+        method: Method::Fp16,
+    };
+    let ppl_rot = perplexity(&pipe.rt, &rotated, &pipe.bundle.test, 2).unwrap();
+    assert!(
+        (ppl_rot - ppl_orig).abs() / ppl_orig < 0.02,
+        "computational invariance violated: {ppl_orig} vs {ppl_rot}"
+    );
+}
+
+#[test]
+fn ppl_ordering_matches_paper_shape() {
+    let Some(pipe) = pipeline() else { return };
+    let fp = pipe.quantize(&fast_cfg(Method::Fp16)).unwrap().0;
+    let gptq = pipe.quantize(&fast_cfg(Method::GptqOnly)).unwrap().0;
+    let kurtail = pipe.quantize(&fast_cfg(Method::KurTail)).unwrap().0;
+
+    let p_fp = perplexity(&pipe.rt, &fp, &pipe.bundle.test, 4).unwrap();
+    let p_g = perplexity(&pipe.rt, &gptq, &pipe.bundle.test, 4).unwrap();
+    let p_k = perplexity(&pipe.rt, &kurtail, &pipe.bundle.test, 4).unwrap();
+    println!("ppl fp={p_fp:.3} kurtail={p_k:.3} gptq-only={p_g:.3}");
+    assert!(p_fp < p_k, "fp must beat quantized");
+    assert!(p_k < p_g, "rotations must beat no-rotations at W4A4KV4");
+}
+
+#[test]
+fn kurtail_learning_reduces_objective() {
+    let Some(pipe) = pipeline() else { return };
+    let mut params = pipe.fp_params.clone();
+    fold_norms(&mut params);
+    let batches = pipe.bundle.calib_batches(kurtail::calib::CorpusKind::Wiki, 32, 4, 7);
+    let mut calib = kurtail::config::CalibConfig::default();
+    calib.iters = 25;
+    calib.seed = 7;
+    let rep = kurtail::kurtail::learn_rotations(&pipe.rt, &params, &batches, &calib).unwrap();
+    let first = rep.r1_losses.first().unwrap();
+    let last = rep.r1_losses.last().unwrap();
+    assert!(last <= first, "kurtosis loss should not increase: {first} -> {last}");
+    assert!(
+        kurtail::tensor::hadamard::orthogonality_error(&rep.r1) < 1e-3,
+        "R1 must stay orthogonal"
+    );
+    assert_eq!(rep.r2.len(), params.meta.n_layers);
+}
+
+#[test]
+fn spinquant_runs_and_stays_orthogonal() {
+    let Some(pipe) = pipeline() else { return };
+    let mut params = pipe.fp_params.clone();
+    fold_norms(&mut params);
+    let batches = pipe.bundle.calib_batches(kurtail::calib::CorpusKind::Wiki, 8, 4, 7);
+    let rep =
+        kurtail::baselines::spinquant_learn(&pipe.rt, &params, &batches, 5, 1e-3, 7).unwrap();
+    assert_eq!(rep.losses.len(), 5);
+    assert!(rep.losses.iter().all(|l| l.is_finite()));
+    assert!(kurtail::tensor::hadamard::orthogonality_error(&rep.r1) < 1e-3);
+}
+
+#[test]
+fn rtn_weight_quantizer_also_works() {
+    let Some(pipe) = pipeline() else { return };
+    let mut cfg = fast_cfg(Method::QuaRot);
+    cfg.weight_quantizer = WeightQuantizer::Rtn;
+    let pm = pipe.quantize(&cfg).unwrap().0;
+    let ppl = perplexity(&pipe.rt, &pm, &pipe.bundle.test, 2).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0);
+}
+
+#[test]
+fn moe_pipeline_end_to_end() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Arc::new(Runtime::new(dir).expect("runtime"));
+    let pipe = Pipeline::new(rt, "moe", 7, true, false).expect("pipeline");
+    let mut cfg = PipelineConfig::new("moe", Method::KurTail);
+    cfg.seed = 7;
+    cfg.calib.seed = 7;
+    cfg.calib.n_samples = 16;
+    cfg.calib.iters = 8;
+    cfg.weight_quantizer = WeightQuantizer::Rtn;
+    let (pm, _) = pipe.quantize(&cfg).unwrap();
+    let ppl = perplexity(&pipe.rt, &pm, &pipe.bundle.test, 2).unwrap();
+    assert!(ppl.is_finite(), "moe quantized ppl finite");
+}

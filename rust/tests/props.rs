@@ -1,0 +1,170 @@
+//! Property-based coordinator invariants (proptest-style, via the
+//! in-tree `util::proptest` harness). No artifacts needed — these pin
+//! the host-side math that the pipeline trusts.
+
+use kurtail::calib::{corpus, ByteTokenizer, CorpusKind, TokenDataset, World};
+use kurtail::config::QuantScheme;
+use kurtail::quant::{fake_quant_rows, fake_quant_rows_asym, rtn_quantize};
+use kurtail::quant::gptq::{gptq_quantize, hessian_error};
+use kurtail::rotation::blockdiag_heads;
+use kurtail::tensor::hadamard::{fwht_rows, hadamard_matrix, orthogonality_error, random_hadamard};
+use kurtail::tensor::matmul::{gram, matmul, rows_matmul};
+use kurtail::tensor::stats::{kurtail_loss, kurtosis};
+use kurtail::tensor::Tensor;
+use kurtail::util::proptest::{check, prop_assert, prop_close};
+
+#[test]
+fn prop_hadamard_orthogonal_all_sizes() {
+    check(40, |rng| {
+        let n = 1usize << (1 + rng.below(8)); // 2..256
+        let h = random_hadamard(n, rng);
+        prop_assert(orthogonality_error(&h) < 1e-3, "random hadamard orthogonal")
+    });
+}
+
+#[test]
+fn prop_fwht_equals_matrix_product() {
+    check(25, |rng| {
+        let n = 1usize << (2 + rng.below(6));
+        let m = 1 + rng.below(16);
+        let x = Tensor::randn(&[m, n], 1.0, rng);
+        let want = rows_matmul(&x, &hadamard_matrix(n));
+        let mut got = x.clone();
+        fwht_rows(&mut got);
+        prop_close(got.max_abs_diff(&want), 0.0, 1e-3, "fwht == H matmul")
+    });
+}
+
+#[test]
+fn prop_rotation_preserves_row_norms() {
+    check(25, |rng| {
+        let n = 1usize << (3 + rng.below(4));
+        let x = Tensor::randn(&[8, n], 1.0, rng);
+        let r = random_hadamard(n, rng);
+        let y = rows_matmul(&x, &r);
+        for i in 0..8 {
+            let nx: f32 = x.row(i).iter().map(|v| v * v).sum();
+            let ny: f32 = y.row(i).iter().map(|v| v * v).sum();
+            prop_close(nx, ny, 1e-2 * nx.max(1.0), "row norm preserved")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blockdiag_orthogonal() {
+    check(20, |rng| {
+        let dh = 1usize << (2 + rng.below(3));
+        let h = 1 + rng.below(4);
+        let b = blockdiag_heads(&random_hadamard(dh, rng), h);
+        prop_assert(orthogonality_error(&b) < 1e-3, "blockdiag orthogonal")
+    });
+}
+
+#[test]
+fn prop_quantizer_error_bounds() {
+    check(30, |rng| {
+        let s = QuantScheme { bits: 2 + rng.below(5) as u32, symmetric: true, clip_quantile: None };
+        let x = Tensor::randn(&[4, 64], 0.1 + rng.uniform(), rng);
+        let y = fake_quant_rows(&x, &s);
+        for i in 0..4 {
+            let amax = x.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let step = amax.max(1e-8) / s.qmax();
+            for (a, b) in x.row(i).iter().zip(y.row(i)) {
+                prop_assert((a - b).abs() <= step / 2.0 + 1e-6, "sym error ≤ step/2")?;
+            }
+        }
+        let ya = fake_quant_rows_asym(&x, &QuantScheme::kv4());
+        for i in 0..4 {
+            let (lo, hi) = x.row(i).iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+                (l.min(v), h.max(v))
+            });
+            let step = (hi - lo).max(1e-8) / 15.0;
+            for (a, b) in x.row(i).iter().zip(ya.row(i)) {
+                prop_assert((a - b).abs() <= step / 2.0 + 1e-5, "asym error ≤ step/2")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gptq_never_worse_than_rtn_on_hessian_metric() {
+    check(10, |rng| {
+        let k = 8 + rng.below(24);
+        let n = 4 + rng.below(12);
+        let w = Tensor::randn(&[k, n], 0.3, rng);
+        let base = Tensor::randn(&[3 * k, k], 1.0, rng);
+        let mix = Tensor::randn(&[k, k], 0.3, rng).add(&Tensor::eye(k));
+        let h = gram(&matmul(&base, &mix));
+        let s = QuantScheme::weight4();
+        let eg = hessian_error(&w, &gptq_quantize(&w, &h, &s), &h);
+        let er = hessian_error(&w, &rtn_quantize(&w, &s), &h);
+        prop_assert(eg <= er * 1.01, "gptq ≤ rtn on tr(ΔᵀHΔ)")
+    });
+}
+
+#[test]
+fn prop_rotation_reduces_kurtail_loss_on_outlier_rows() {
+    check(15, |rng| {
+        let d = 1usize << (4 + rng.below(3));
+        let mut x = Tensor::zeros(&[256, d]);
+        for v in &mut x.data {
+            *v = rng.laplace(1.0);
+        }
+        let c = rng.below(d);
+        for i in 0..256 {
+            x.data[i * d + c] *= 10.0 + rng.uniform() * 20.0;
+        }
+        let before = kurtail_loss(&x);
+        let after = kurtail_loss(&rows_matmul(&x, &random_hadamard(d, rng)));
+        prop_assert(after < before, "rotation lowers |κ−κ_u| on outlier data")
+    });
+}
+
+#[test]
+fn prop_kurtosis_invariant_to_scale_and_shift() {
+    check(30, |rng| {
+        let xs: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+        let k0 = kurtosis(&xs);
+        let a = 0.5 + rng.uniform() * 4.0;
+        let b = rng.normal() * 3.0;
+        let ys: Vec<f32> = xs.iter().map(|&x| a * x + b).collect();
+        prop_close(k0, kurtosis(&ys), 0.05 * k0, "κ(ax+b) = κ(x)")
+    });
+}
+
+#[test]
+fn prop_tokenizer_batching_roundtrip() {
+    check(25, |rng| {
+        let world = World::generate(rng.next_u64());
+        let text = corpus::training_corpus(&world, 4_000, rng.next_u64());
+        let ds = TokenDataset::from_text(&text, 32);
+        prop_assert(ds.n_sequences() > 0, "non-empty dataset")?;
+        let idx: Vec<usize> = (0..4.min(ds.n_sequences())).collect();
+        let batch = ds.batch(&idx);
+        // batch rows decode back to the original text slices
+        let tok = ByteTokenizer;
+        for (row, &i) in idx.iter().enumerate() {
+            let got = tok.decode(&batch.data[row * 32..(row + 1) * 32]);
+            let want = tok.decode(ds.sequence(i));
+            prop_assert(got == want, "batch row matches sequence")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corpus_kinds_deterministic_and_distinct() {
+    check(10, |rng| {
+        let seed = rng.next_u64();
+        for kind in CorpusKind::all() {
+            let a = corpus::generate(kind, 2_000, seed);
+            let b = corpus::generate(kind, 2_000, seed);
+            prop_assert(a == b, "corpus deterministic")?;
+        }
+        let w = corpus::generate(CorpusKind::Wiki, 2_000, seed);
+        let p = corpus::generate(CorpusKind::Ptb, 2_000, seed);
+        prop_assert(w != p, "kinds differ")
+    });
+}

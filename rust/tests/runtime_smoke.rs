@@ -1,0 +1,182 @@
+//! Integration: the AOT artifacts actually load, compile and execute on
+//! the Rust PJRT CPU client with correct numerics. This is the keystone
+//! test of the three-layer architecture — everything else builds on it.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use kurtail::runtime::{Runtime, Value};
+use kurtail::tensor::{hadamard, stats, IntTensor, Tensor};
+use kurtail::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+/// Random params in manifest order (init semantics match model::init).
+fn random_params(rt: &Runtime, cfg: &str, rng: &mut Rng) -> Vec<Value> {
+    let meta = rt.manifest.config(cfg).unwrap();
+    meta.param_specs
+        .iter()
+        .map(|p| {
+            if p.name.starts_with("ln") {
+                Value::F32(Tensor::ones(&p.shape))
+            } else {
+                let fan_in = if p.shape.len() >= 2 { p.shape[p.shape.len() - 2] } else { 64 };
+                let std = if p.name == "embed" || p.name == "head" {
+                    0.02
+                } else {
+                    1.0 / (fan_in as f32).sqrt()
+                };
+                Value::F32(Tensor::randn(&p.shape, std, rng))
+            }
+        })
+        .collect()
+}
+
+fn random_tokens(vocab: usize, b: usize, t: usize, rng: &mut Rng) -> IntTensor {
+    IntTensor::new((0..b * t).map(|_| rng.below(vocab) as i32).collect(), vec![b, t])
+}
+
+#[test]
+fn fwd_nll_fp_and_quant_execute() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(0);
+    let meta = rt.manifest.config("tiny").unwrap().clone();
+    let params = random_params(&rt, "tiny", &mut rng);
+    let (b, t) = (meta.eval_batch, meta.seq_len);
+    let tokens = random_tokens(meta.vocab, b, t, &mut rng);
+    let mask = Tensor::ones(&[b, t]);
+
+    // fp
+    let art = rt.load("fwd_nll_tiny").expect("load fwd_nll_tiny");
+    let mut inputs = params.clone();
+    inputs.push(tokens.clone().into());
+    inputs.push(mask.clone().into());
+    let out = art.run(&inputs).expect("run fwd_nll_tiny");
+    let nll = out[0].as_f32().unwrap();
+    let cnt = out[1].as_f32().unwrap();
+    assert!(nll.all_finite() && nll.data.iter().all(|&x| x > 0.0));
+    assert_eq!(cnt.data[0], (t - 1) as f32);
+    // random init ⇒ per-token NLL ≈ ln(vocab)
+    let per_tok = nll.data[0] / cnt.data[0];
+    assert!((per_tok - (meta.vocab as f32).ln()).abs() < 1.0, "per_tok={per_tok}");
+
+    // quant (exercises the Pallas quant_matmul path inside the graph)
+    let art_q = rt.load("fwd_nll_quant_tiny").expect("load fwd_nll_quant_tiny");
+    let mut inputs_q = params.clone();
+    inputs_q.push(Tensor::eye(meta.d_head).into());
+    inputs_q.push(Tensor::eye(meta.d_head).into());
+    inputs_q.push(Tensor::eye(meta.d_ff).into());
+    inputs_q.push(tokens.into());
+    inputs_q.push(mask.into());
+    let out_q = art_q.run(&inputs_q).expect("run fwd_nll_quant_tiny");
+    let nll_q = out_q[0].as_f32().unwrap();
+    assert!(nll_q.all_finite());
+    let per_tok_q = nll_q.data[0] / cnt.data[0];
+    assert!((per_tok_q - per_tok).abs() < 1.5, "quant {per_tok_q} vs fp {per_tok}");
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let meta = rt.manifest.config("tiny").unwrap().clone();
+    let mut params = random_params(&rt, "tiny", &mut rng);
+    let n = params.len();
+    let mut m: Vec<Value> = meta.param_specs.iter().map(|p| Tensor::zeros(&p.shape).into()).collect();
+    let mut v = m.clone();
+    // repetitive data is easy to learn fast
+    let (b, t) = (meta.train_batch, meta.seq_len);
+    let tokens = IntTensor::new(
+        (0..b * t).map(|i| if i % 2 == 0 { 3 } else { 7 }).collect(),
+        vec![b, t],
+    );
+
+    let art = rt.load("train_step_tiny").expect("load");
+    let mut losses = Vec::new();
+    for step in 1..=8 {
+        let mut inputs: Vec<Value> = Vec::with_capacity(3 * n + 3);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(tokens.clone().into());
+        inputs.push(Value::from(3e-3f32));
+        inputs.push(Value::from(step as f32));
+        let out = art.run(&inputs).expect("train step");
+        params = out[..n].to_vec();
+        m = out[n..2 * n].to_vec();
+        v = out[2 * n..3 * n].to_vec();
+        losses.push(out[3 * n].scalar_f32().unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.7),
+        "losses: {losses:?}"
+    );
+}
+
+#[test]
+fn kurtail_step_learns_rotation_and_stays_orthogonal() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let d = 64;
+    let rows = rt.manifest.kurtail_rows;
+    let x = Tensor::new((0..rows * d).map(|_| rng.laplace(1.0)).collect(), vec![rows, d]);
+    let art = rt.load("kurtail_step_d64").expect("load");
+
+    let mut r = Tensor::eye(d);
+    let mut m = Tensor::zeros(&[d, d]);
+    let mut v = 0.0f32;
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=40 {
+        let out = art
+            .run(&[
+                r.clone().into(),
+                m.clone().into(),
+                Value::from(v),
+                x.clone().into(),
+                Value::from(0.1f32),
+                Value::from(step as f32),
+            ])
+            .expect("kurtail step");
+        r = out[0].clone().into_f32().unwrap();
+        m = out[1].clone().into_f32().unwrap();
+        v = out[2].scalar_f32().unwrap();
+        last = out[3].scalar_f32().unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    assert!(hadamard::orthogonality_error(&r) < 1e-3);
+
+    // host-side kurtail loss of the rotated data agrees with the artifact's
+    let xr = kurtail::tensor::matmul::matmul(&x, &r);
+    let host = stats::kurtail_loss(&xr);
+    assert!((host - last).abs() < 0.2, "host {host} vs artifact {last}");
+}
+
+#[test]
+fn manifest_abi_is_consistent() {
+    let Some(rt) = runtime() else { return };
+    for (name, sig) in &rt.manifest.artifacts {
+        assert!(rt.dir.join(&sig.file).exists(), "{name}: missing {}", sig.file);
+        assert!(!sig.inputs.is_empty() && !sig.outputs.is_empty(), "{name}");
+    }
+    let meta = rt.manifest.config("tiny").unwrap();
+    assert_eq!(meta.d_model, meta.n_heads * meta.d_head);
+    assert!(meta.param_index("embed").is_some());
+    assert!(meta.param_index("head").is_some());
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.load("kurtail_step_d64").expect("load");
+    let bad = vec![Value::from(Tensor::zeros(&[3, 3]))];
+    assert!(art.run(&bad).is_err());
+}
