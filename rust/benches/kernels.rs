@@ -1,17 +1,125 @@
-//! L1 kernel micro-benchmarks through the PJRT runtime: the standalone
-//! Pallas artifacts (quant_matmul, hadamard, kurtosis) at several sizes,
-//! plus the fused quantized NLL graph. Feeds EXPERIMENTS.md §Perf.
+//! Kernel micro-benchmarks, two tiers:
+//!
+//! 1. **Host kernels** (always runs): the scalar seed kernels vs the
+//!    packed-parallel rewrites at 256/512/1024/2048 dims, written to
+//!    `BENCH_kernels.json` (path override: `KURTAIL_BENCH_JSON`) so
+//!    `scripts/bench.sh` can track the perf trajectory PR-over-PR.
+//! 2. **PJRT artifacts** (needs `make artifacts`): the standalone Pallas
+//!    kernels and the fused quantized NLL graph. Feeds EXPERIMENTS.md §Perf.
 
+use kurtail::config::QuantScheme;
+use kurtail::quant::fakequant::{fake_quant_rows, fake_quant_rows_ref};
 use kurtail::runtime::{Runtime, Value};
+use kurtail::tensor::hadamard::{fwht_rows, fwht_rows_ref};
+use kurtail::tensor::matmul::{gram, gram_ref, matmul, matmul_into_ref};
 use kurtail::tensor::{IntTensor, Tensor};
-use kurtail::util::bench::Bench;
+use kurtail::util::bench::{Bench, Stats};
+use kurtail::util::json::{arr, num, obj, s as js, Json};
+use kurtail::util::par::num_threads;
 use kurtail::util::Rng;
 
+const SIZES: [usize; 4] = [256, 512, 1024, 2048];
+/// Rows of the batched row-kernels (FWHT, fake-quant) at every dim.
+const BATCH_ROWS: usize = 1024;
+
 fn main() {
+    host_kernels();
+    pjrt_kernels();
+}
+
+/// Retune the sampler for the problem size: the 2048-dim scalar
+/// baselines run for seconds per iteration.
+fn tune(b: &mut Bench, d: usize) {
+    let (min_time_s, warmup_s, min_samples) = match d {
+        0..=512 => (0.2, 0.05, 5),
+        513..=1024 => (0.0, 0.0, 3),
+        _ => (0.0, 0.0, 2),
+    };
+    b.min_time_s = min_time_s;
+    b.warmup_s = warmup_s;
+    b.min_samples = min_samples;
+}
+
+fn comparison(kernel: &str, d: usize, shape: String, scalar: Stats, packed: Stats) -> Json {
+    let speedup = scalar.mean_ns / packed.mean_ns.max(1.0);
+    println!("  {kernel}@{d}: packed-parallel is {speedup:.2}x the scalar seed kernel");
+    obj(vec![
+        ("kernel", js(kernel)),
+        ("dim", num(d as f64)),
+        ("shape", js(&shape)),
+        ("scalar_ns", num(scalar.mean_ns)),
+        ("packed_ns", num(packed.mean_ns)),
+        ("speedup", num(speedup)),
+    ])
+}
+
+fn host_kernels() {
+    let mut b = Bench::quick();
+    let mut rng = Rng::new(0);
+    let mut comparisons: Vec<Json> = Vec::new();
+    let scheme = QuantScheme::act4();
+
+    for &d in &SIZES {
+        tune(&mut b, d);
+        let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let w = Tensor::randn(&[d, d], 0.3, &mut rng);
+
+        let scalar = b.run(&format!("host/matmul_ref_{d}x{d}x{d}"), || {
+            let mut c = vec![0.0f32; d * d];
+            matmul_into_ref(&a.data, &w.data, &mut c, d, d, d);
+            c
+        });
+        let packed = b.run(&format!("host/matmul_packed_{d}x{d}x{d}"), || matmul(&a, &w));
+        comparisons.push(comparison("matmul", d, format!("{d}x{d}x{d}"), scalar, packed));
+
+        let scalar = b.run(&format!("host/gram_ref_{d}x{d}"), || gram_ref(&a));
+        let packed = b.run(&format!("host/gram_packed_{d}x{d}"), || gram(&a));
+        comparisons.push(comparison("gram", d, format!("{d}x{d}"), scalar, packed));
+
+        let x = Tensor::randn(&[BATCH_ROWS, d], 1.0, &mut rng);
+        let scalar = b.run(&format!("host/fwht_ref_{BATCH_ROWS}x{d}"), || {
+            let mut y = x.clone();
+            fwht_rows_ref(&mut y);
+            y
+        });
+        let packed = b.run(&format!("host/fwht_parallel_{BATCH_ROWS}x{d}"), || {
+            let mut y = x.clone();
+            fwht_rows(&mut y);
+            y
+        });
+        comparisons.push(comparison("fwht_rows", d, format!("{BATCH_ROWS}x{d}"), scalar, packed));
+
+        let scalar =
+            b.run(&format!("host/fakequant_ref_{BATCH_ROWS}x{d}"), || fake_quant_rows_ref(&x, &scheme));
+        let packed =
+            b.run(&format!("host/fakequant_parallel_{BATCH_ROWS}x{d}"), || fake_quant_rows(&x, &scheme));
+        comparisons.push(comparison("fake_quant_rows", d, format!("{BATCH_ROWS}x{d}"), scalar, packed));
+    }
+
+    let path =
+        std::env::var("KURTAIL_BENCH_JSON").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    b.write_json(
+        &path,
+        vec![
+            ("bench", js("kernels")),
+            ("threads", num(num_threads() as f64)),
+            (
+                "host_parallelism",
+                num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+            ),
+            ("sizes", arr(SIZES.iter().map(|&d| num(d as f64)).collect())),
+            ("comparisons", arr(comparisons)),
+        ],
+    )
+    .expect("write bench json");
+    println!("wrote {path}");
+}
+
+fn pjrt_kernels() {
     let rt = match Runtime::new("artifacts") {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("SKIP kernels bench: {e:#} (run `make artifacts`)");
+            eprintln!("SKIP pjrt kernels bench: {e:#} (run `make artifacts`)");
             return;
         }
     };

@@ -2,13 +2,22 @@
 //! R1 = H_d·diag(±1); R2_l = H_dh·diag(±1) per layer. Zero training cost —
 //! the baseline KurTail must beat on quality while staying cheap.
 
-use crate::tensor::{hadamard::random_hadamard, Tensor};
+use crate::tensor::{hadamard::hadamard_from_signs, Tensor};
 use crate::util::Rng;
 
 /// (R1, per-layer R2) in QuaRot style.
+///
+/// The ±1 sign vectors are drawn first, in the exact order the
+/// all-sequential path consumed the RNG (so rotations are bit-identical
+/// to the seed behavior), then the O(d²) matrix constructions run on the
+/// row-parallel `hadamard_from_signs` kernel.
 pub fn quarot_rotations(d_model: usize, d_head: usize, n_layers: usize, rng: &mut Rng) -> (Tensor, Vec<Tensor>) {
-    let r1 = random_hadamard(d_model, rng);
-    let r2 = (0..n_layers).map(|_| random_hadamard(d_head, rng)).collect();
+    let s1: Vec<f32> = (0..d_model).map(|_| rng.sign()).collect();
+    let s2: Vec<Vec<f32>> = (0..n_layers)
+        .map(|_| (0..d_head).map(|_| rng.sign()).collect())
+        .collect();
+    let r1 = hadamard_from_signs(d_model, &s1);
+    let r2 = s2.iter().map(|s| hadamard_from_signs(d_head, s)).collect();
     (r1, r2)
 }
 

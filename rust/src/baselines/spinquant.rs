@@ -46,16 +46,23 @@ pub fn spinquant_learn(
     let spin_b = meta.spin_batch;
 
     let param_values = params.as_values();
+    // spinquant_step takes spin_batch sequences; pad/slice every calib
+    // batch once up front instead of rebuilding the same token tensor on
+    // each of the `iters` optimizer steps
+    let seq = meta.seq_len;
+    let padded: Vec<IntTensor> = calib_batches
+        .iter()
+        .map(|full| {
+            let rows = full.shape[0].min(spin_b);
+            let mut data = full.data[..rows * seq].to_vec();
+            while data.len() < spin_b * seq {
+                data.extend_from_slice(&full.data[..seq]);
+            }
+            IntTensor::new(data, vec![spin_b, seq])
+        })
+        .collect();
     for t in 1..=iters {
-        let full = &calib_batches[t % calib_batches.len()];
-        // spinquant_step takes spin_batch sequences; slice the calib batch
-        let seq = meta.seq_len;
-        let rows = full.shape[0].min(spin_b);
-        let mut data = full.data[..rows * seq].to_vec();
-        while data.len() < spin_b * seq {
-            data.extend_from_slice(&full.data[..seq]);
-        }
-        let tokens = IntTensor::new(data, vec![spin_b, seq]);
+        let tokens = padded[t % padded.len()].clone();
 
         let mut inputs = param_values.clone();
         inputs.push(Value::F32(r1));

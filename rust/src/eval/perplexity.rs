@@ -18,8 +18,13 @@ pub fn perplexity(
     let meta = &pm.params.meta;
     let batches = data.eval_batches(meta.eval_batch, n_batches);
     let (mut nll_sum, mut cnt_sum) = (0.0f64, 0.0f64);
+    // eval batches share a shape; build the all-ones mask once and only
+    // rebuild if a ragged final batch shows up
+    let mut mask = Tensor::zeros(&[0]);
     for b in &batches {
-        let mask = Tensor::ones(&b.shape);
+        if mask.shape != b.shape {
+            mask = Tensor::ones(&b.shape);
+        }
         let (nll, cnt) = run_nll(rt, pm, b, &mask)?;
         nll_sum += nll.data.iter().map(|&x| x as f64).sum::<f64>();
         cnt_sum += cnt.data.iter().map(|&x| x as f64).sum::<f64>();

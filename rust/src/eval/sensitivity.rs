@@ -4,43 +4,84 @@
 //! size s̃ per row, then measure how much the MSE rises when the step is
 //! perturbed to α·s̃. Distributions closer to uniform are flatter in α —
 //! the paper's evidence that KurTail's rotation beats random Hadamard.
+//!
+//! The `_rotated` entry points run fused: rows are rotated a bounded
+//! chunk at a time (`tensor::fused`) and consumed immediately, so the
+//! sweep never materializes a rotated copy of the activation pool, and
+//! the per-chunk partial curves accumulate in parallel on a fixed chunk
+//! grid (deterministic reduction order at any thread count).
 
 use crate::config::QuantScheme;
 use crate::quant::fakequant::{optimal_step, row_mse_at_step};
+use crate::tensor::fused::{map_rotated_chunks, FUSE_CHUNK_ROWS};
 use crate::tensor::Tensor;
 
 /// One sensitivity curve: mean over rows of MSE(α·s̃) − MSE(s̃).
 pub fn sensitivity_curve(rows: &Tensor, alphas: &[f32], scheme: &QuantScheme) -> Vec<f32> {
-    let (r, c) = rows.as_2d();
-    let mut curve = vec![0.0f64; alphas.len()];
-    for i in 0..r {
-        let row = &rows.data[i * c..(i + 1) * c];
-        let s_opt = optimal_step(row, scheme);
-        let base = row_mse_at_step(row, s_opt, scheme) as f64;
-        for (k, &a) in alphas.iter().enumerate() {
-            let m = row_mse_at_step(row, a * s_opt, scheme) as f64;
-            curve[k] += (m - base).abs();
-        }
-    }
-    curve.iter().map(|&v| (v / r as f64) as f32).collect()
+    sensitivity_curve_rotated(rows, None, alphas, scheme)
+}
+
+/// [`sensitivity_curve`] of `rows·R`, computed without materializing the
+/// rotated tensor (`rot = None` is the vanilla path).
+pub fn sensitivity_curve_rotated(
+    rows: &Tensor,
+    rot: Option<&Tensor>,
+    alphas: &[f32],
+    scheme: &QuantScheme,
+) -> Vec<f32> {
+    curve_rotated(rows, rot, alphas, scheme, false)
 }
 
 /// Normalized sensitivity (relative to the optimal-step MSE) — what the
 /// paper's y-axis effectively shows; robust to overall scale differences
 /// between rotation bases.
 pub fn sensitivity_curve_normalized(rows: &Tensor, alphas: &[f32], scheme: &QuantScheme) -> Vec<f32> {
-    let (r, c) = rows.as_2d();
-    let mut curve = vec![0.0f64; alphas.len()];
-    for i in 0..r {
-        let row = &rows.data[i * c..(i + 1) * c];
-        let s_opt = optimal_step(row, scheme);
-        let base = (row_mse_at_step(row, s_opt, scheme) as f64).max(1e-12);
-        for (k, &a) in alphas.iter().enumerate() {
-            let m = row_mse_at_step(row, a * s_opt, scheme) as f64;
-            curve[k] += ((m - base) / base).abs();
+    sensitivity_curve_normalized_rotated(rows, None, alphas, scheme)
+}
+
+/// [`sensitivity_curve_normalized`] of `rows·R`, fused like
+/// [`sensitivity_curve_rotated`].
+pub fn sensitivity_curve_normalized_rotated(
+    rows: &Tensor,
+    rot: Option<&Tensor>,
+    alphas: &[f32],
+    scheme: &QuantScheme,
+) -> Vec<f32> {
+    curve_rotated(rows, rot, alphas, scheme, true)
+}
+
+fn curve_rotated(
+    rows: &Tensor,
+    rot: Option<&Tensor>,
+    alphas: &[f32],
+    scheme: &QuantScheme,
+    normalized: bool,
+) -> Vec<f32> {
+    let (r, _c) = rows.as_2d();
+    let width = alphas.len();
+    let n_chunks = (r + FUSE_CHUNK_ROWS - 1) / FUSE_CHUNK_ROWS;
+    let mut partials = vec![0.0f64; n_chunks * width];
+    map_rotated_chunks(rows, rot, &mut partials, width, |_r0, data, n_rows, pcurve| {
+        let c = data.len() / n_rows;
+        for i in 0..n_rows {
+            let row = &data[i * c..(i + 1) * c];
+            let s_opt = optimal_step(row, scheme);
+            let base = row_mse_at_step(row, s_opt, scheme) as f64;
+            let denom = if normalized { base.max(1e-12) } else { 1.0 };
+            for (k, &a) in alphas.iter().enumerate() {
+                let m = row_mse_at_step(row, a * s_opt, scheme) as f64;
+                pcurve[k] += ((m - base) / denom).abs();
+            }
+        }
+    });
+    // fixed chunk-order reduction, then the mean over rows
+    let mut curve = vec![0.0f64; width];
+    for chunk in partials.chunks_exact(width) {
+        for (acc, v) in curve.iter_mut().zip(chunk) {
+            *acc += v;
         }
     }
-    curve.iter().map(|&v| (v / r as f64) as f32).collect()
+    curve.iter().map(|&v| (v / (r.max(1)) as f64) as f32).collect()
 }
 
 /// The α grid used by the figure.
@@ -51,6 +92,8 @@ pub fn alpha_grid() -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::hadamard::random_hadamard;
+    use crate::tensor::matmul::rows_matmul;
     use crate::util::Rng;
 
     fn gen_rows(rng: &mut Rng, heavy: bool) -> Tensor {
@@ -87,6 +130,25 @@ mod tests {
         let su: f32 = cu.iter().sum();
         let sl: f32 = cl.iter().sum();
         assert!(su < sl, "uniform {su} !< laplace {sl}");
+    }
+
+    #[test]
+    fn fused_rotated_curve_matches_materialized() {
+        let mut rng = Rng::new(4);
+        let rows = gen_rows(&mut rng, true);
+        let r = random_hadamard(128, &mut rng);
+        let s = QuantScheme::act4();
+        let alphas = [0.6, 0.9, 1.0, 1.2];
+        let fused = sensitivity_curve_rotated(&rows, Some(&r), &alphas, &s);
+        let materialized = sensitivity_curve(&rows_matmul(&rows, &r), &alphas, &s);
+        for (f, m) in fused.iter().zip(&materialized) {
+            assert!((f - m).abs() < 1e-5, "{f} vs {m}");
+        }
+        let fused_n = sensitivity_curve_normalized_rotated(&rows, Some(&r), &alphas, &s);
+        let mat_n = sensitivity_curve_normalized(&rows_matmul(&rows, &r), &alphas, &s);
+        for (f, m) in fused_n.iter().zip(&mat_n) {
+            assert!((f - m).abs() < 1e-4, "norm {f} vs {m}");
+        }
     }
 
     #[test]

@@ -5,18 +5,17 @@
 //! coarser dynamic quantization step ⇒ more error, so driving the max
 //! down is the mechanism by which rotations help (paper §2).
 
-use crate::tensor::{matmul::rows_matmul, stats::row_absmax, Tensor};
+use crate::tensor::{fused::rotate_row_absmax, Tensor};
 
 /// Fraction of rows where `benchmark`-rotated max < `baseline`-rotated max.
 /// `None` rotation = vanilla (identity).
+///
+/// Both absmax series run on the fused rotate→reduce kernel: the rotated
+/// activation tensors are never materialized (the Table-1 sweeps feed
+/// this hundreds of thousands of captured rows per cell).
 pub fn success_rate(rows: &Tensor, baseline: Option<&Tensor>, benchmark: &Tensor) -> f32 {
-    let base_rows = match baseline {
-        Some(r) => rows_matmul(rows, r),
-        None => rows.clone(),
-    };
-    let bench_rows = rows_matmul(rows, benchmark);
-    let base_max = row_absmax(&base_rows);
-    let bench_max = row_absmax(&bench_rows);
+    let base_max = rotate_row_absmax(rows, baseline);
+    let bench_max = rotate_row_absmax(rows, Some(benchmark));
     let wins = base_max.iter().zip(&bench_max).filter(|(b, q)| q < b).count();
     wins as f32 / base_max.len() as f32
 }

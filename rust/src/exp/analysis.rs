@@ -7,7 +7,7 @@ use crate::baselines::quarot_rotations;
 use crate::calib::CorpusKind;
 use crate::config::CalibConfig;
 use crate::eval::outliers::{dist_stats, value_histogram};
-use crate::eval::sensitivity::{alpha_grid, sensitivity_curve};
+use crate::eval::sensitivity::{alpha_grid, sensitivity_curve_rotated};
 use crate::eval::success::success_rate;
 use crate::kurtail::learn_rotations;
 use crate::model::{capture_stream, rmsnorm_rows};
@@ -126,11 +126,8 @@ pub fn fig1(ctx: &ExpCtx) -> Result<()> {
         for (rname, rot) in
             [("vanilla", None), ("hadamard", Some(r_had)), ("kurtail", Some(r_kt))]
         {
-            let xr = match rot {
-                Some(r) => rows_matmul(x, r),
-                None => x.clone(),
-            };
-            let curve = sensitivity_curve(&xr, &alphas, &scheme);
+            // fused sweep: rotates chunk-at-a-time, never materializes x·R
+            let curve = sensitivity_curve_rotated(x, rot, &alphas, &scheme);
             for (k, &v) in curve.iter().enumerate() {
                 rows[k].push(v as f64);
             }

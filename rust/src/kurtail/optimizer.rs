@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use crate::config::CalibConfig;
-use crate::model::{capture_stream, rmsnorm_rows, Params, RowReservoir};
+use crate::model::{capture_stream, Params, RowReservoir};
 use crate::runtime::{Runtime, Value};
 use crate::tensor::{hadamard::orthogonality_error, Tensor};
 use crate::util::{timer, Rng, Stopwatch};
@@ -91,8 +91,10 @@ pub fn learn_rotations(
         (0..meta.n_layers).map(|_| RowReservoir::new(dh, 65_536, rng.next_u64())).collect();
 
     capture_stream(rt, params, calib_batches, |taps| {
-        r1_pool.offer(&rmsnorm_rows(&taps.mhsa_in));
-        r1_pool.offer(&rmsnorm_rows(&taps.ffn_in));
+        // fused norm→offer: no normed activation tensor is materialized,
+        // keeping peak RSS at one layer's taps (the paper's §3 argument)
+        r1_pool.offer_rmsnorm(&taps.mhsa_in);
+        r1_pool.offer_rmsnorm(&taps.ffn_in);
         r2_pools[taps.layer].offer(&taps.v_heads);
         Ok(())
     })?;

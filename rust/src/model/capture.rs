@@ -66,19 +66,35 @@ pub fn capture_stream(
 }
 
 /// Weightless RMSNorm over the last axis — what the quantized linears see
-/// after γ has been folded into the weights.
+/// after γ has been folded into the weights. Row-parallel.
 pub fn rmsnorm_rows(x: &Tensor) -> Tensor {
     let (r, c) = x.as_2d();
     let mut out = x.clone();
-    for i in 0..r {
-        let row = &mut out.data[i * c..(i + 1) * c];
-        let ms = row.iter().map(|v| v * v).sum::<f32>() / c as f32;
-        let inv = 1.0 / (ms + 1e-5).sqrt();
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+    if r == 0 || c == 0 {
+        return out;
     }
+    crate::util::par::par_row_chunks_mut(
+        &mut out.data,
+        c,
+        32,
+        crate::util::par::num_threads(),
+        |_r0, chunk| {
+            for row in chunk.chunks_exact_mut(c) {
+                rmsnorm_row(row);
+            }
+        },
+    );
     out
+}
+
+/// Normalize one row in place (shared by the batch and streaming paths).
+#[inline]
+fn rmsnorm_row(row: &mut [f32]) {
+    let ms = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
 }
 
 /// Reservoir row sampler: keeps a bounded uniform sample of rows from a
@@ -109,16 +125,35 @@ impl RowReservoir {
         let (r, c) = x.as_2d();
         assert_eq!(c, self.dim, "reservoir dim mismatch");
         for i in 0..r {
-            self.seen += 1;
-            let row = &x.data[i * c..(i + 1) * c];
-            if self.len() < self.cap {
-                self.rows.extend_from_slice(row);
-            } else {
-                // classic reservoir sampling
-                let j = (self.rng.next_u64() % self.seen) as usize;
-                if j < self.cap {
-                    self.rows[j * c..(j + 1) * c].copy_from_slice(row);
-                }
+            self.offer_row(&x.data[i * c..(i + 1) * c]);
+        }
+    }
+
+    /// Offer the RMSNorm'd rows of a (…, dim) tensor without
+    /// materializing the normed tensor: one row buffer instead of a full
+    /// activation-sized copy per tap (the kurtail R1 pool feeds on every
+    /// block input of every layer, so this is the peak-RSS hot spot).
+    pub fn offer_rmsnorm(&mut self, x: &Tensor) {
+        let (r, c) = x.as_2d();
+        assert_eq!(c, self.dim, "reservoir dim mismatch");
+        let mut buf = vec![0.0f32; c];
+        for i in 0..r {
+            buf.copy_from_slice(&x.data[i * c..(i + 1) * c]);
+            rmsnorm_row(&mut buf);
+            self.offer_row(&buf);
+        }
+    }
+
+    /// Classic reservoir step for one row.
+    fn offer_row(&mut self, row: &[f32]) {
+        let c = self.dim;
+        self.seen += 1;
+        if self.len() < self.cap {
+            self.rows.extend_from_slice(row);
+        } else {
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.rows[j * c..(j + 1) * c].copy_from_slice(row);
             }
         }
     }
@@ -163,6 +198,17 @@ mod tests {
         let s = res.sample(32);
         assert_eq!(s.shape, vec![32, 8]);
         assert!(s.all_finite());
+    }
+
+    #[test]
+    fn offer_rmsnorm_matches_two_step() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[20, 8], 2.0, &mut rng);
+        let mut two_step = RowReservoir::new(8, 1000, 7);
+        two_step.offer(&rmsnorm_rows(&x));
+        let mut fused = RowReservoir::new(8, 1000, 7);
+        fused.offer_rmsnorm(&x);
+        assert_eq!(two_step.rows, fused.rows);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! activations.
 
 use crate::config::QuantScheme;
+use crate::tensor::matmul::{matmul_packed_chunk, pack_b};
 use crate::tensor::Tensor;
+use crate::util::par::{self, num_threads};
 
 /// Per-row symmetric scale with optional quantile clip (activations).
 pub fn row_scale(row: &[f32], s: &QuantScheme) -> f32 {
@@ -50,7 +52,61 @@ pub fn fq_row_sym(row: &mut [f32], scale: f32, s: &QuantScheme) {
 }
 
 /// Per-token (row) symmetric fake-quant of a (…, d) tensor.
+/// Row-parallel; per-row math identical to [`fake_quant_rows_ref`].
 pub fn fake_quant_rows(x: &Tensor, s: &QuantScheme) -> Tensor {
+    rotate_fake_quant_rows(x, None, s)
+}
+
+/// [`fake_quant_rows`] with an explicit thread budget (tests / tuning).
+pub fn fake_quant_rows_with_threads(x: &Tensor, s: &QuantScheme, threads: usize) -> Tensor {
+    rotate_fake_quant_threads(x, None, s, threads)
+}
+
+/// Fused rotate→fake-quant: `fq(x·R)` without materializing the rotated
+/// intermediate — each thread rotates its row-chunk straight into the
+/// output buffer (packed microkernel) and quantizes it in place. This is
+/// the online-quantization semantic of the paper (rotate activations,
+/// then quantize) and the backing kernel of [`fake_quant_rows`]
+/// (`rot = None` skips the rotation).
+pub fn rotate_fake_quant_rows(x: &Tensor, rot: Option<&Tensor>, s: &QuantScheme) -> Tensor {
+    rotate_fake_quant_threads(x, rot, s, num_threads())
+}
+
+fn rotate_fake_quant_threads(
+    x: &Tensor,
+    rot: Option<&Tensor>,
+    s: &QuantScheme,
+    threads: usize,
+) -> Tensor {
+    let (r, c) = x.as_2d();
+    let mut out = Tensor::zeros(&x.shape);
+    if r == 0 || c == 0 {
+        return out;
+    }
+    if let Some(rm) = rot {
+        assert_eq!(rm.shape, vec![c, c], "rotation must be ({c},{c})");
+    }
+    let packed = rot.map(|rm| pack_b(&rm.data, c, c, threads));
+    par::par_row_chunks_mut(&mut out.data, c, 16, threads, |r0, ochunk| {
+        let rows = ochunk.len() / c;
+        match &packed {
+            Some(p) => {
+                // ochunk is zeroed, so += accumulates a plain product
+                matmul_packed_chunk(&x.data[r0 * c..(r0 + rows) * c], p, ochunk, rows, c, c);
+            }
+            None => ochunk.copy_from_slice(&x.data[r0 * c..(r0 + rows) * c]),
+        }
+        let mut buf = Vec::with_capacity(c);
+        for row in ochunk.chunks_exact_mut(c) {
+            let scale = row_scale_buf(row, s, &mut buf);
+            fq_row_sym(row, scale, s);
+        }
+    });
+    out
+}
+
+/// Scalar reference fake-quant (original sequential loop; bench baseline).
+pub fn fake_quant_rows_ref(x: &Tensor, s: &QuantScheme) -> Tensor {
     let (r, c) = x.as_2d();
     let mut out = x.clone();
     let mut buf = Vec::with_capacity(c);
@@ -62,21 +118,25 @@ pub fn fake_quant_rows(x: &Tensor, s: &QuantScheme) -> Tensor {
     out
 }
 
-/// Per-token asymmetric fake-quant (KV cache semantics).
+/// Per-token asymmetric fake-quant (KV cache semantics), row-parallel.
 pub fn fake_quant_rows_asym(x: &Tensor, s: &QuantScheme) -> Tensor {
     let (r, c) = x.as_2d();
     let levels = s.levels();
     let mut out = x.clone();
-    for i in 0..r {
-        let row = &mut out.data[i * c..(i + 1) * c];
-        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
-        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let scale = ((hi - lo).max(1e-8)) / levels;
-        for v in row.iter_mut() {
-            let q = ((*v - lo) / scale).round().clamp(0.0, levels);
-            *v = q * scale + lo;
-        }
+    if r == 0 || c == 0 {
+        return out;
     }
+    par::par_row_chunks_mut(&mut out.data, c, 16, num_threads(), |_r0, chunk| {
+        for row in chunk.chunks_exact_mut(c) {
+            let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let scale = ((hi - lo).max(1e-8)) / levels;
+            for v in row.iter_mut() {
+                let q = ((*v - lo) / scale).round().clamp(0.0, levels);
+                *v = q * scale + lo;
+            }
+        }
+    });
     out
 }
 
@@ -176,6 +236,33 @@ mod tests {
         assert!(row_mse_at_step(&row, opt, &s) <= row_mse_at_step(&row, naive, &s));
         // for gaussians the optimum is well below absmax/qmax
         assert!(opt < naive);
+    }
+
+    #[test]
+    fn parallel_matches_ref_exactly() {
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&[67, 96], 1.5, &mut rng);
+        let s = act4();
+        let want = fake_quant_rows_ref(&x, &s);
+        for threads in [1usize, 2, 8] {
+            let got = fake_quant_rows_with_threads(&x, &s, threads);
+            assert_eq!(got.data, want.data, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_rotate_fq_matches_two_step() {
+        use crate::tensor::hadamard::random_hadamard;
+        use crate::tensor::matmul::rows_matmul;
+        let mut rng = Rng::new(22);
+        let x = Tensor::randn(&[83, 64], 1.0, &mut rng);
+        let r = random_hadamard(64, &mut rng);
+        let s = act4();
+        let two_step = fake_quant_rows(&rows_matmul(&x, &r), &s);
+        let fused = rotate_fake_quant_rows(&x, Some(&r), &s);
+        // same grids, same rounding — only the rotation's fp summation
+        // order could differ, and it doesn't (same kernel)
+        assert!(fused.max_abs_diff(&two_step) < 1e-5);
     }
 
     #[test]

@@ -58,23 +58,36 @@ pub fn gptq_quantize_with_factor(w: &Tensor, f: &GptqFactor, s: &QuantScheme) ->
     // §Perf: work on Wᵀ (n_out, k_in) so the error propagation over the
     // remaining input dims is a contiguous AXPY against a contiguous row
     // of U — the naive (k, n) layout strides by n and was ~7× slower.
+    //
+    // The error feedback of output channel j only ever touches row j of
+    // Wᵀ (U is read-only), so the channels split across threads with the
+    // per-channel i-recursion untouched: bitwise-identical results at
+    // every thread count.
     let mut wt = w.t(); // (n, k), mutated with error feedback
-    for i in 0..k {
-        let d = u.data[i * k + i].max(1e-10);
-        let u_row = &u.data[i * k + (i + 1)..(i + 1) * k]; // U[i, i+1..]
-        for j in 0..n {
-            let row = &mut wt.data[j * k..(j + 1) * k];
-            let v = row[i];
-            let q = (v / scales[j]).round().clamp(-qmax, qmax) * scales[j];
-            row[i] = q;
-            let err = (v - q) / d;
-            if err != 0.0 {
-                for (dst, &uij) in row[i + 1..].iter_mut().zip(u_row) {
-                    *dst -= err * uij;
+    crate::util::par::par_row_chunks_mut(
+        &mut wt.data,
+        k,
+        4,
+        crate::util::par::num_threads(),
+        |j0, chunk| {
+            for (jr, row) in chunk.chunks_exact_mut(k).enumerate() {
+                let scale = scales[j0 + jr];
+                for i in 0..k {
+                    let d = u.data[i * k + i].max(1e-10);
+                    let u_row = &u.data[i * k + (i + 1)..(i + 1) * k]; // U[i, i+1..]
+                    let v = row[i];
+                    let q = (v / scale).round().clamp(-qmax, qmax) * scale;
+                    row[i] = q;
+                    let err = (v - q) / d;
+                    if err != 0.0 {
+                        for (dst, &uij) in row[i + 1..].iter_mut().zip(u_row) {
+                            *dst -= err * uij;
+                        }
+                    }
                 }
             }
-        }
-    }
+        },
+    );
     wt.t()
 }
 

@@ -6,7 +6,9 @@ pub mod gptq;
 pub mod rtn;
 pub mod weights;
 
-pub use fakequant::{fake_quant_rows, fake_quant_rows_asym, optimal_step, row_mse_at_step};
+pub use fakequant::{
+    fake_quant_rows, fake_quant_rows_asym, optimal_step, rotate_fake_quant_rows, row_mse_at_step,
+};
 pub use gptq::gptq_quantize;
 pub use rtn::rtn_quantize;
 pub use weights::{quantize_weights, HessianSet};

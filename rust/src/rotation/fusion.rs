@@ -7,7 +7,10 @@
 //! the actual artifacts.
 
 use crate::model::Params;
-use crate::tensor::{matmul::matmul, Tensor};
+use crate::tensor::{
+    matmul::{matmul, matmul_into},
+    Tensor,
+};
 
 use super::blockdiag_heads;
 
@@ -31,15 +34,39 @@ fn map_matrices(w: &Tensor, f: impl Fn(&Tensor) -> Tensor) -> Tensor {
     out
 }
 
-/// Left-multiply every matrix of a stack by `m`ᵀ (input-side transform).
+/// Left-multiply every matrix of a stack by `m`ᵀ (input-side transform):
+/// out_i = mᵀ @ w_i, computed straight into the output stack — no
+/// per-matrix sub/result tensors; `m` is transposed once and each slice
+/// product runs on the packed parallel kernel.
 fn left_t(w: &Tensor, m: &Tensor) -> Tensor {
+    let r = w.rank();
+    assert!(r >= 2);
+    let (k, n) = (w.shape[r - 2], w.shape[r - 1]);
+    assert_eq!(m.shape, vec![k, k], "left transform must be ({k},{k})");
     let mt = m.t();
-    map_matrices(w, |sub| matmul(&mt, sub))
+    let mat = k * n;
+    let count = w.numel() / mat;
+    let mut out = Tensor::zeros(&w.shape);
+    for i in 0..count {
+        matmul_into(&mt.data, &w.data[i * mat..(i + 1) * mat], &mut out.data[i * mat..(i + 1) * mat], k, k, n);
+    }
+    out
 }
 
-/// Right-multiply every matrix of a stack by `m` (output-side transform).
+/// Right-multiply every matrix of a stack by `m` (output-side transform):
+/// out_i = w_i @ m, straight into the output stack.
 fn right(w: &Tensor, m: &Tensor) -> Tensor {
-    map_matrices(w, |sub| matmul(sub, m))
+    let r = w.rank();
+    assert!(r >= 2);
+    let (k, n) = (w.shape[r - 2], w.shape[r - 1]);
+    assert_eq!(m.shape, vec![n, n], "right transform must be ({n},{n})");
+    let mat = k * n;
+    let count = w.numel() / mat;
+    let mut out = Tensor::zeros(&w.shape);
+    for i in 0..count {
+        matmul_into(&w.data[i * mat..(i + 1) * mat], &m.data, &mut out.data[i * mat..(i + 1) * mat], k, n, n);
+    }
+    out
 }
 
 /// Fold RMSNorm γ into the adjacent linears; all norms become weightless.

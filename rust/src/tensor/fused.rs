@@ -1,0 +1,138 @@
+//! Fused rotate→consume kernels.
+//!
+//! The analysis/eval paths repeatedly compute `rows_matmul(x, R)` only to
+//! immediately reduce the rotated rows (absmax, quantization MSE, fake
+//! quant) and throw them away — materializing a full rotated copy of a
+//! multi-hundred-MiB activation pool per rotation. The kernels here
+//! rotate a bounded row-chunk at a time into a thread-local panel buffer
+//! (reusing the packed-B layout from `matmul`), consume it in place, and
+//! move on: peak extra memory is `FUSE_CHUNK_ROWS × d` floats per thread
+//! instead of a whole tensor, and the chunks run in parallel.
+
+use super::matmul::{matmul_packed_chunk, pack_b};
+use super::Tensor;
+use crate::util::par::{self, num_threads};
+
+/// Rows rotated per thread-local buffer refill.
+pub(crate) const FUSE_CHUNK_ROWS: usize = 64;
+
+/// Per-row max |x·R| without materializing the rotated tensor.
+/// `rot = None` is the vanilla (identity) path.
+pub fn rotate_row_absmax(x: &Tensor, rot: Option<&Tensor>) -> Vec<f32> {
+    let (r, _c) = x.as_2d();
+    let n_chunks = (r + FUSE_CHUNK_ROWS - 1) / FUSE_CHUNK_ROWS;
+    // one FUSE_CHUNK_ROWS-wide output row per chunk: every chunk except
+    // the ragged tail is full, so the valid values are the prefix [0, r)
+    let mut padded = vec![0.0f32; n_chunks * FUSE_CHUNK_ROWS];
+    map_rotated_chunks(x, rot, &mut padded, FUSE_CHUNK_ROWS, |_r0, data, rows, out| {
+        let c = data.len() / rows;
+        for (i, o) in out[..rows].iter_mut().enumerate() {
+            *o = absmax(&data[i * c..(i + 1) * c]);
+        }
+    });
+    padded.truncate(r);
+    padded
+}
+
+#[inline]
+fn absmax(row: &[f32]) -> f32 {
+    row.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+}
+
+/// Run `consume(first_row, rotated_rows, n_rows)` over fixed-size chunks
+/// of `x·R` (or of `x` itself when `rot` is `None`), in parallel, storing
+/// per-chunk results in `out` (one row of `out_width` elements per input
+/// chunk, chunk b covering input rows `[b·FUSE_CHUNK_ROWS, …)`).
+///
+/// The chunk grid is fixed — independent of the thread count — so any
+/// reduction the caller performs over `out` in chunk order is
+/// deterministic across thread counts.
+pub fn map_rotated_chunks<T, F>(x: &Tensor, rot: Option<&Tensor>, out: &mut [T], out_width: usize, consume: F)
+where
+    T: Send,
+    F: Fn(usize, &[f32], usize, &mut [T]) + Sync,
+{
+    let (r, c) = x.as_2d();
+    let n_chunks = (r + FUSE_CHUNK_ROWS - 1) / FUSE_CHUNK_ROWS;
+    assert_eq!(out.len(), n_chunks * out_width, "out must hold one row per chunk");
+    if r == 0 || c == 0 || out.is_empty() {
+        return;
+    }
+    let threads = num_threads();
+    if let Some(rm) = rot {
+        assert_eq!(rm.shape, vec![c, c], "rotation must be ({c},{c})");
+    }
+    let packed = rot.map(|rm| pack_b(&rm.data, c, c, threads));
+    par::par_row_chunks_mut(out, out_width, 1, threads, |b0, ochunk| {
+        let mut buf = vec![0.0f32; FUSE_CHUNK_ROWS * c];
+        for (bi, orow) in ochunk.chunks_exact_mut(out_width).enumerate() {
+            let r0 = (b0 + bi) * FUSE_CHUNK_ROWS;
+            let rows = FUSE_CHUNK_ROWS.min(r - r0);
+            match &packed {
+                Some(p) => {
+                    let b = &mut buf[..rows * c];
+                    b.fill(0.0);
+                    matmul_packed_chunk(&x.data[r0 * c..(r0 + rows) * c], p, b, rows, c, c);
+                    consume(r0, &buf[..rows * c], rows, orow);
+                }
+                None => consume(r0, &x.data[r0 * c..(r0 + rows) * c], rows, orow),
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::hadamard::random_hadamard;
+    use crate::tensor::matmul::rows_matmul;
+    use crate::tensor::stats::row_absmax;
+    use crate::util::Rng;
+
+    #[test]
+    fn fused_absmax_matches_materialized() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[219, 64], 1.0, &mut rng);
+        let r = random_hadamard(64, &mut rng);
+        let want = row_absmax(&rows_matmul(&x, &r));
+        let got = rotate_row_absmax(&x, Some(&r));
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+        // identity path
+        let got_id = rotate_row_absmax(&x, None);
+        let want_id = row_absmax(&x);
+        assert_eq!(got_id, want_id);
+    }
+
+    #[test]
+    fn map_rotated_chunks_covers_all_rows() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[150, 32], 1.0, &mut rng); // 3 chunks: 64+64+22
+        let n_chunks = (150 + FUSE_CHUNK_ROWS - 1) / FUSE_CHUNK_ROWS;
+        let mut sums = vec![0.0f64; n_chunks];
+        map_rotated_chunks(&x, None, &mut sums, 1, |_r0, rows, _n, out| {
+            out[0] = rows.iter().map(|&v| v as f64).sum();
+        });
+        let total: f64 = sums.iter().sum();
+        let want: f64 = x.data.iter().map(|&v| v as f64).sum();
+        assert!((total - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn map_rotated_chunks_rotates() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[70, 16], 1.0, &mut rng);
+        let r = random_hadamard(16, &mut rng);
+        let xr = rows_matmul(&x, &r);
+        let n_chunks = 2;
+        let mut maxima = vec![0.0f32; n_chunks];
+        map_rotated_chunks(&x, Some(&r), &mut maxima, 1, |_r0, rows, _n, out| {
+            out[0] = rows.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        });
+        let want = xr.max_abs();
+        let got = maxima.iter().fold(0.0f32, |a, &v| a.max(v));
+        assert!((got - want).abs() < 1e-4);
+    }
+}

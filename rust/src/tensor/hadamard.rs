@@ -1,8 +1,14 @@
 //! Hadamard machinery on the coordinator side: explicit matrices for
 //! fusion (R1/R2 candidates, QuaRot baselines) and the in-place FWHT for
 //! metric computations. Mirrors `python/compile/kernels/hadamard.py`.
+//!
+//! `fwht_rows` is batch-parallel: rows are independent, so they partition
+//! across scoped threads with per-row butterflies untouched — results are
+//! bitwise identical at every thread count. The sequential seed kernel
+//! survives as [`fwht_rows_ref`] (bench baseline).
 
 use super::{matmul::matmul, Tensor};
+use crate::util::par::{self, num_threads};
 use crate::util::Rng;
 
 /// Normalized Sylvester Hadamard matrix H/√n (n must be a power of two).
@@ -28,42 +34,77 @@ pub fn hadamard_matrix(n: usize) -> Tensor {
     Tensor::new(h.into_iter().map(|v| v * s).collect(), vec![n, n])
 }
 
-/// QuaRot-style random Hadamard rotation: H·diag(±1).
-pub fn random_hadamard(n: usize, rng: &mut Rng) -> Tensor {
+/// H·diag(signs) from a pre-drawn ±1 vector. Splitting the draw from the
+/// construction lets callers (QuaRot) consume their RNG sequentially —
+/// keeping rotations bit-identical to the all-sequential path — while the
+/// O(n²) column scaling runs row-parallel.
+pub fn hadamard_from_signs(n: usize, signs: &[f32]) -> Tensor {
+    assert_eq!(signs.len(), n, "sign vector length");
     let mut h = hadamard_matrix(n);
-    let signs: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
-    for i in 0..n {
-        for j in 0..n {
-            h.data[i * n + j] *= signs[j];
+    par::par_row_chunks_mut(&mut h.data, n, 16, num_threads(), |_r0, chunk| {
+        for row in chunk.chunks_exact_mut(n) {
+            for (v, s) in row.iter_mut().zip(signs) {
+                *v *= s;
+            }
         }
-    }
+    });
     h
 }
 
+/// QuaRot-style random Hadamard rotation: H·diag(±1).
+pub fn random_hadamard(n: usize, rng: &mut Rng) -> Tensor {
+    let signs: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+    hadamard_from_signs(n, &signs)
+}
+
 /// In-place FWHT along the last axis of each row, normalized by 1/√n.
+/// Rows run in parallel; per-row math is identical to [`fwht_rows_ref`].
 pub fn fwht_rows(x: &mut Tensor) {
+    fwht_rows_with_threads(x, num_threads());
+}
+
+/// [`fwht_rows`] with an explicit thread budget (tests / tuning).
+pub fn fwht_rows_with_threads(x: &mut Tensor, threads: usize) {
+    let (_rows, n) = x.as_2d();
+    assert!(n.is_power_of_two());
+    let norm = 1.0 / (n as f32).sqrt();
+    par::par_row_chunks_mut(&mut x.data, n, 8, threads, |_r0, chunk| {
+        for row in chunk.chunks_exact_mut(n) {
+            fwht_row(row, norm);
+        }
+    });
+}
+
+/// One row's butterfly network + normalization.
+#[inline]
+fn fwht_row(row: &mut [f32], norm: f32) {
+    let n = row.len();
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = row[j];
+                let b = row[j + h];
+                row[j] = a + b;
+                row[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    for v in row.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// Scalar reference FWHT (original sequential kernel; bench baseline).
+pub fn fwht_rows_ref(x: &mut Tensor) {
     let (rows, n) = x.as_2d();
     assert!(n.is_power_of_two());
     let norm = 1.0 / (n as f32).sqrt();
     for r in 0..rows {
-        let row = &mut x.data[r * n..(r + 1) * n];
-        let mut h = 1;
-        while h < n {
-            let mut i = 0;
-            while i < n {
-                for j in i..i + h {
-                    let a = row[j];
-                    let b = row[j + h];
-                    row[j] = a + b;
-                    row[j + h] = a - b;
-                }
-                i += 2 * h;
-            }
-            h *= 2;
-        }
-        for v in row.iter_mut() {
-            *v *= norm;
-        }
+        fwht_row(&mut x.data[r * n..(r + 1) * n], norm);
     }
 }
 
@@ -103,6 +144,18 @@ mod tests {
     }
 
     #[test]
+    fn from_signs_matches_random_hadamard_stream() {
+        // drawing the signs first then constructing must equal the
+        // one-shot constructor on the same RNG stream
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let h1 = random_hadamard(64, &mut a);
+        let signs: Vec<f32> = (0..64).map(|_| b.sign()).collect();
+        let h2 = hadamard_from_signs(64, &signs);
+        assert_eq!(h1.data, h2.data);
+    }
+
+    #[test]
     fn fwht_matches_matrix() {
         let mut rng = Rng::new(1);
         let x = Tensor::randn(&[7, 64], 1.0, &mut rng);
@@ -110,6 +163,19 @@ mod tests {
         let mut got = x.clone();
         fwht_rows(&mut got);
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn fwht_parallel_matches_ref_exactly() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[33, 128], 1.0, &mut rng);
+        let mut want = x.clone();
+        fwht_rows_ref(&mut want);
+        for threads in [1usize, 2, 8] {
+            let mut got = x.clone();
+            fwht_rows_with_threads(&mut got, threads);
+            assert_eq!(got.data, want.data, "t={threads}");
+        }
     }
 
     #[test]

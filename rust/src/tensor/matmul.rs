@@ -1,26 +1,193 @@
-//! Blocked matmul kernels for the offline (coordinator-side) hot paths:
-//! rotation fusion (W ← RᵀW), Hessian accumulation (XᵀX) in GPTQ, and the
-//! sensitivity sweeps. Cache-blocked with an i-k-j inner loop so the
-//! innermost loop is a contiguous AXPY the compiler auto-vectorizes.
+//! Matmul kernels for the offline (coordinator-side) hot paths: rotation
+//! fusion (W ← RᵀW), Hessian accumulation (XᵀX) in GPTQ, and the
+//! sensitivity sweeps.
+//!
+//! Two kernel tiers live here:
+//!
+//! * **Packed-parallel** (the default): B is packed once per call into
+//!   zero-padded column panels of [`NR`] floats, the M dimension is split
+//!   across scoped threads ([`crate::util::par`]), and an [`MR`]×[`NR`]
+//!   register-blocked microkernel accumulates each output tile with a
+//!   fully unrolled inner loop the compiler auto-vectorizes. Per output
+//!   element the k-loop runs ascending with a single accumulator, so
+//!   results are bitwise identical for every thread count.
+//! * **Scalar reference** (`*_ref`): the original single-threaded blocked
+//!   kernels, kept verbatim as the baseline that `benches/kernels.rs`
+//!   compares against (`BENCH_kernels.json`) and as the fallback for
+//!   inputs too small to amortize packing.
+//!
+//! The Gram kernels exploit symmetry (upper triangle + mirror) in both
+//! tiers and parallelize over *output* rows with a fixed row-block
+//! accumulation order, which keeps them deterministic across thread
+//! counts too.
 
 use super::Tensor;
+use crate::util::par::{self, num_threads};
 
+/// Cache block size of the scalar reference kernel.
 const BLOCK: usize = 64;
+/// Column width of a packed B panel (microkernel accumulator lanes).
+const NR: usize = 8;
+/// Rows of A processed per microkernel invocation.
+const MR: usize = 4;
+/// Below this many multiply-adds the packed path's setup cost dominates
+/// and the scalar reference kernel wins; keep tiny problems on it.
+const PACK_MIN_MADDS: usize = 32 * 1024;
+/// A-row block reused across one sweep of Gram output rows (L2 tiling).
+const GRAM_ROW_BLOCK: usize = 64;
+/// Minimum output rows per thread chunk (spawn amortization).
+const MIN_ROWS_PER_CHUNK: usize = 8;
 
 /// C = A @ B for 2-D tensors (m,k) × (k,n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_with_threads(a, b, num_threads())
+}
+
+/// [`matmul`] with an explicit thread budget (tests / tuning).
+pub fn matmul_with_threads(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     assert_eq!(a.rank(), 2, "matmul lhs must be 2-D");
     assert_eq!(b.rank(), 2, "matmul rhs must be 2-D");
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul inner dims: {:?} @ {:?}", a.shape, b.shape);
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_into(&a.data, &b.data, &mut c.data, m, k, n);
+    matmul_into_threads(&a.data, &b.data, &mut c.data, m, k, n, threads);
     c
 }
 
-/// C += A @ B on raw row-major slices.
+/// C **+=** A @ B on raw row-major slices.
+///
+/// Contract: this *accumulates* into `c` — it never zeroes it. Callers
+/// that want `C = A @ B` must pass a zeroed buffer (as [`matmul`] does);
+/// callers that want streamed accumulation pass the running sum. Pinned
+/// by `matmul_into_accumulates` below.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_into_threads(a, b, c, m, k, n, num_threads());
+}
+
+/// [`matmul_into`] with an explicit thread budget.
+pub fn matmul_into_threads(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul_into: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_into: rhs size");
+    assert_eq!(c.len(), m * n, "matmul_into: out size");
+    if m * k * n < PACK_MIN_MADDS {
+        return matmul_into_ref(a, b, c, m, k, n);
+    }
+    let packed = pack_b(b, k, n, threads);
+    par::par_row_chunks_mut(c, n, MIN_ROWS_PER_CHUNK, threads, |i0, cchunk| {
+        let rows = cchunk.len() / n;
+        matmul_packed_chunk(&a[i0 * k..(i0 + rows) * k], &packed, cchunk, rows, k, n);
+    });
+}
+
+/// Pack B (k×n row-major) into `ceil(n/NR)` contiguous column panels of
+/// k×NR, zero-padding the last panel. Panels stream sequentially in the
+/// microkernel's k-loop, so B is read prefetch-friendly exactly once per
+/// MR-row group instead of strided once per scalar.
+pub(crate) fn pack_b(b: &[f32], k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let np = (n + NR - 1) / NR;
+    let mut packed = vec![0.0f32; np * k * NR];
+    par::par_row_chunks_mut(&mut packed, k * NR, 1, threads, |p0, chunk| {
+        for (pi, panel) in chunk.chunks_exact_mut(k * NR).enumerate() {
+            let j0 = (p0 + pi) * NR;
+            let jw = NR.min(n - j0);
+            for kk in 0..k {
+                panel[kk * NR..kk * NR + jw].copy_from_slice(&b[kk * n + j0..kk * n + j0 + jw]);
+            }
+        }
+    });
+    packed
+}
+
+/// One thread's share of the packed matmul: `rows` rows of A (contiguous
+/// in `a`) against every panel of `packed`, accumulated into the matching
+/// rows of `c`. Single-threaded by design so fused kernels can call it
+/// from inside their own parallel regions without oversubscription.
+pub(crate) fn matmul_packed_chunk(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    let np = (n + NR - 1) / NR;
+    debug_assert_eq!(packed.len(), np * k * NR);
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(c.len(), rows * n);
+    let mut i = 0;
+    while i + MR <= rows {
+        let ar: [&[f32]; MR] = [
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        ];
+        for p in 0..np {
+            let panel = &packed[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            microkernel(&ar, panel, &mut acc);
+            let j0 = p * NR;
+            let jw = NR.min(n - j0);
+            for (r, acc_r) in acc.iter().enumerate() {
+                let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + jw];
+                for (cv, av) in crow.iter_mut().zip(&acc_r[..jw]) {
+                    *cv += *av;
+                }
+            }
+        }
+        i += MR;
+    }
+    while i < rows {
+        let arow = &a[i * k..(i + 1) * k];
+        for p in 0..np {
+            let panel = &packed[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0.0f32; NR];
+            for (kk, bk) in panel.chunks_exact(NR).enumerate() {
+                let bk: &[f32; NR] = bk.try_into().unwrap();
+                let av = arow[kk];
+                for j in 0..NR {
+                    acc[j] += av * bk[j];
+                }
+            }
+            let j0 = p * NR;
+            let jw = NR.min(n - j0);
+            for (cv, av) in c[i * n + j0..i * n + j0 + jw].iter_mut().zip(&acc[..jw]) {
+                *cv += *av;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// MR×NR register tile: acc[r][j] += Σ_kk a[r][kk]·panel[kk][j], with the
+/// r/j loops fully unrolled (const bounds) so LLVM keeps the tile in
+/// vector registers and the panel row load is shared across MR rows.
+#[inline(always)]
+fn microkernel(ar: &[&[f32]; MR], panel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (kk, bk) in panel.chunks_exact(NR).enumerate() {
+        let bk: &[f32; NR] = bk.try_into().unwrap();
+        for r in 0..MR {
+            let av = ar[r][kk];
+            for j in 0..NR {
+                acc[r][j] += av * bk[j];
+            }
+        }
+    }
+}
+
+/// Scalar reference: the original cache-blocked i-k-j kernel, single
+/// threaded. Kept as the `BENCH_kernels.json` baseline and the
+/// small-input fallback. Same `C += A @ B` accumulate contract.
+pub fn matmul_into_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     for i0 in (0..m).step_by(BLOCK) {
         let i1 = (i0 + BLOCK).min(m);
         for k0 in (0..k).step_by(BLOCK) {
@@ -44,6 +211,91 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 
 /// C = Aᵀ @ A (Gram / GPTQ Hessian accumulation), exploiting symmetry.
 pub fn gram(a: &Tensor) -> Tensor {
+    gram_with_threads(a, num_threads())
+}
+
+/// [`gram`] with an explicit thread budget.
+pub fn gram_with_threads(a: &Tensor, threads: usize) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let mut c = Tensor::zeros(&[n, n]);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    gram_upper_into(&a.data, m, n, &mut c.data, threads);
+    mirror_lower(&mut c.data, n);
+    c
+}
+
+/// Accumulate Aᵀ@A into an existing (n,n) Hessian (streamed batches).
+///
+/// Contract: `h` must be symmetric on entry (it is whenever it was built
+/// by `gram`/`gram_accumulate` from a zeroed buffer). Only the upper
+/// triangle is accumulated — half the multiply-adds of the full-row
+/// update — and the lower triangle is restored by mirroring at the end.
+pub fn gram_accumulate(h: &mut Tensor, a: &Tensor) {
+    gram_accumulate_with_threads(h, a, num_threads());
+}
+
+/// [`gram_accumulate`] with an explicit thread budget.
+pub fn gram_accumulate_with_threads(h: &mut Tensor, a: &Tensor, threads: usize) {
+    assert_eq!(a.rank(), 2);
+    let n = a.shape[1];
+    assert_eq!(h.shape, vec![n, n]);
+    let m = a.shape[0];
+    if m == 0 || n == 0 {
+        return;
+    }
+    #[cfg(debug_assertions)]
+    {
+        let sym = (0..n).all(|i| (0..i).all(|j| h.data[i * n + j] == h.data[j * n + i]));
+        assert!(sym, "gram_accumulate needs a symmetric accumulator");
+    }
+    gram_upper_into(&a.data, m, n, &mut h.data, threads);
+    mirror_lower(&mut h.data, n);
+}
+
+/// Upper-triangle Gram accumulation, parallel over *output* rows.
+///
+/// Each thread owns a disjoint range of output rows i; for fixed i the
+/// input rows are consumed in ascending order within ascending fixed-size
+/// row blocks, so the accumulation order per element never depends on the
+/// thread partition (determinism), while the row block keeps a hot slab
+/// of A in cache across the chunk's output rows (locality).
+fn gram_upper_into(a: &[f32], m: usize, n: usize, c: &mut [f32], threads: usize) {
+    par::par_row_chunks_mut(c, n, MIN_ROWS_PER_CHUNK, threads, |i0, cchunk| {
+        let ni = cchunk.len() / n;
+        for rb in (0..m).step_by(GRAM_ROW_BLOCK) {
+            let rend = (rb + GRAM_ROW_BLOCK).min(m);
+            for ii in 0..ni {
+                let i = i0 + ii;
+                let crow = &mut cchunk[ii * n + i..(ii + 1) * n];
+                for row in rb..rend {
+                    let ri = a[row * n + i];
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    let arow = &a[row * n + i..(row + 1) * n];
+                    for (cv, av) in crow.iter_mut().zip(arow) {
+                        *cv += ri * av;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Copy the upper triangle onto the lower one.
+fn mirror_lower(c: &mut [f32], n: usize) {
+    for i in 1..n {
+        for j in 0..i {
+            c[i * n + j] = c[j * n + i];
+        }
+    }
+}
+
+/// Scalar reference Gram (original single-threaded kernel; bench baseline).
+pub fn gram_ref(a: &Tensor) -> Tensor {
     assert_eq!(a.rank(), 2);
     let (m, n) = (a.shape[0], a.shape[1]);
     let mut c = Tensor::zeros(&[n, n]);
@@ -60,34 +312,8 @@ pub fn gram(a: &Tensor) -> Tensor {
             }
         }
     }
-    // mirror the upper triangle
-    for i in 0..n {
-        for j in 0..i {
-            c.data[i * n + j] = c.data[j * n + i];
-        }
-    }
+    mirror_lower(&mut c.data, n);
     c
-}
-
-/// Accumulate Aᵀ@A into an existing (n,n) Hessian (streamed batches).
-pub fn gram_accumulate(h: &mut Tensor, a: &Tensor) {
-    assert_eq!(a.rank(), 2);
-    let n = a.shape[1];
-    assert_eq!(h.shape, vec![n, n]);
-    let m = a.shape[0];
-    for row in 0..m {
-        let r = &a.data[row * n..(row + 1) * n];
-        for i in 0..n {
-            let ri = r[i];
-            if ri == 0.0 {
-                continue;
-            }
-            let hrow = &mut h.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                hrow[j] += ri * r[j];
-            }
-        }
-    }
 }
 
 /// y = x @ W for a batch of rows (x: (m,k) flattened leading dims).
@@ -137,12 +363,77 @@ mod tests {
     }
 
     #[test]
+    fn packed_path_matches_naive_at_unaligned_shapes() {
+        // shapes chosen to land above PACK_MIN_MADDS with every remainder
+        // class: odd n (panel padding), m % MR ≠ 0 (row remainder), odd k
+        let mut rng = Rng::new(42);
+        for (m, k, n) in [(37, 41, 43), (130, 65, 33), (41, 129, 67), (129, 31, 129)] {
+            assert!(m * k * n >= PACK_MIN_MADDS, "{m}x{k}x{n} too small to hit packed path");
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            for threads in [1usize, 3, 8] {
+                let got = matmul_with_threads(&a, &b, threads);
+                let want = naive(&a, &b);
+                assert!(got.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        // the documented contract: C += A@B, never C = A@B
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [(5, 6, 7), (40, 40, 40)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let want = naive(&a, &b);
+            let mut c = vec![0.25f32; m * n];
+            matmul_into(&a.data, &b.data, &mut c, m, k, n);
+            for (got, want) in c.iter().zip(&want.data) {
+                assert!((got - (want + 0.25)).abs() < 1e-3, "accumulate contract broken");
+            }
+            // and a second call keeps accumulating
+            matmul_into(&a.data, &b.data, &mut c, m, k, n);
+            for (got, want) in c.iter().zip(&want.data) {
+                assert!((got - (2.0 * want + 0.25)).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn ref_and_packed_agree() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (70, 64, 50);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut c_ref = vec![0.0f32; m * n];
+        matmul_into_ref(&a.data, &b.data, &mut c_ref, m, k, n);
+        let c_packed = matmul_with_threads(&a, &b, 4);
+        let diff = c_ref
+            .iter()
+            .zip(&c_packed.data)
+            .fold(0.0f32, |acc, (x, y)| acc.max((x - y).abs()));
+        assert!(diff < 1e-3, "ref vs packed diff {diff}");
+    }
+
+    #[test]
     fn gram_matches_matmul() {
         let mut rng = Rng::new(1);
         let a = Tensor::randn(&[37, 19], 1.0, &mut rng);
         let got = gram(&a);
         let want = matmul(&a.t(), &a);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn gram_matches_ref_at_scale() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[129, 65], 1.0, &mut rng);
+        let want = gram_ref(&a);
+        for threads in [1usize, 2, 8] {
+            let got = gram_with_threads(&a, threads);
+            assert!(got.max_abs_diff(&want) < 1e-3, "t={threads}");
+        }
     }
 
     #[test]
@@ -157,6 +448,21 @@ mod tests {
             gram_accumulate(&mut h, &chunk);
         }
         assert!(h.max_abs_diff(&full) < 1e-3);
+    }
+
+    #[test]
+    fn gram_accumulate_stays_symmetric() {
+        let mut rng = Rng::new(3);
+        let mut h = Tensor::zeros(&[33, 33]);
+        for _ in 0..3 {
+            let a = Tensor::randn(&[17, 33], 1.0, &mut rng);
+            gram_accumulate(&mut h, &a);
+        }
+        for i in 0..33 {
+            for j in 0..i {
+                assert_eq!(h.data[i * 33 + j], h.data[j * 33 + i], "asymmetric at ({i},{j})");
+            }
+        }
     }
 
     #[test]

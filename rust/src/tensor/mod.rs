@@ -3,8 +3,12 @@
 //! Everything that happens *outside* the PJRT artifacts — rotation fusion,
 //! RTN/GPTQ weight quantization, Hessian accumulation, sensitivity sweeps,
 //! metric computation — runs on this. Row-major, owned storage, no
-//! external BLAS (the hot matmuls are blocked + unrolled in `matmul.rs`).
+//! external BLAS: the hot kernels are packed, register-blocked and
+//! multi-threaded in `matmul.rs`/`hadamard.rs` (scoped threads via
+//! `util::par`, `KURTAIL_THREADS` override), with fused rotate→consume
+//! variants in `fused.rs` that never materialize rotated intermediates.
 
+pub mod fused;
 pub mod hadamard;
 pub mod linalg;
 pub mod matmul;

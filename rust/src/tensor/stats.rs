@@ -3,15 +3,22 @@
 //! pytest goldens pin both sides to the same semantics).
 
 use super::Tensor;
+use crate::util::par::{self, num_threads};
 
 /// Per-row kurtosis κ = m4/m2² over the last axis (κ_uniform = 1.8,
-/// κ_normal = 3, κ_laplace = 6).
+/// κ_normal = 3, κ_laplace = 6). Rows are independent, so the reduction
+/// runs row-parallel (deterministic: per-row math is untouched).
 pub fn kurtosis_rows(x: &Tensor) -> Vec<f32> {
     let (r, c) = x.as_2d();
-    let mut out = Vec::with_capacity(r);
-    for i in 0..r {
-        out.push(kurtosis(&x.data[i * c..(i + 1) * c]));
+    let mut out = vec![0.0f32; r];
+    if r == 0 || c == 0 {
+        return out;
     }
+    par::par_row_chunks_mut(&mut out, 1, 64, num_threads(), |r0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = kurtosis(&x.data[(r0 + i) * c..(r0 + i + 1) * c]);
+        }
+    });
     out
 }
 
@@ -51,12 +58,21 @@ pub fn quantile(xs: &[f32], q: f32) -> f32 {
     v[lo] * (1.0 - frac) + v[hi] * frac
 }
 
-/// Per-row max |x| (the Table-1 per-token max statistic).
+/// Per-row max |x| (the Table-1 per-token max statistic), row-parallel.
 pub fn row_absmax(x: &Tensor) -> Vec<f32> {
     let (r, c) = x.as_2d();
-    (0..r)
-        .map(|i| x.data[i * c..(i + 1) * c].iter().fold(0.0f32, |a, &v| a.max(v.abs())))
-        .collect()
+    let mut out = vec![0.0f32; r];
+    if r == 0 || c == 0 {
+        return out;
+    }
+    par::par_row_chunks_mut(&mut out, 1, 128, num_threads(), |r0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = x.data[(r0 + i) * c..(r0 + i + 1) * c]
+                .iter()
+                .fold(0.0f32, |a, &v| a.max(v.abs()));
+        }
+    });
+    out
 }
 
 pub fn mean_std(xs: &[f32]) -> (f32, f32) {

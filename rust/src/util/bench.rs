@@ -2,14 +2,22 @@
 //!
 //! `cargo bench` targets use this: warmup, adaptive iteration count,
 //! mean/σ/min reporting, and machine-readable lines (`BENCH\t<name>\t<ns>`)
-//! that EXPERIMENTS.md §Perf scrapes.
+//! that EXPERIMENTS.md §Perf scrapes. [`Bench::write_json`] additionally
+//! dumps every recorded stat as JSON — `benches/kernels.rs` uses it to
+//! emit `BENCH_kernels.json`, the scalar-vs-packed perf trajectory that
+//! `scripts/bench.sh` tracks PR-over-PR.
 
 use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
 
 pub struct Bench {
     /// Minimum sampling time per benchmark (seconds).
     pub min_time_s: f64,
     pub warmup_s: f64,
+    /// Minimum number of samples regardless of elapsed time (≥ 2 always
+    /// enforced); lets multi-second kernels cap their iteration count.
+    pub min_samples: usize,
     results: Vec<(String, Stats)>,
 }
 
@@ -23,7 +31,7 @@ pub struct Stats {
 
 impl Default for Bench {
     fn default() -> Self {
-        Self { min_time_s: 1.0, warmup_s: 0.2, results: Vec::new() }
+        Self { min_time_s: 1.0, warmup_s: 0.2, min_samples: 5, results: Vec::new() }
     }
 }
 
@@ -33,7 +41,7 @@ impl Bench {
     }
 
     pub fn quick() -> Self {
-        Self { min_time_s: 0.3, warmup_s: 0.05, results: Vec::new() }
+        Self { min_time_s: 0.3, warmup_s: 0.05, ..Self::default() }
     }
 
     /// Run one benchmark; `f` is invoked repeatedly, timed per call.
@@ -44,9 +52,10 @@ impl Bench {
             std::hint::black_box(f());
         }
         // Sample
+        let min_samples = self.min_samples.max(2);
         let mut samples = Vec::new();
         let t1 = Instant::now();
-        while t1.elapsed().as_secs_f64() < self.min_time_s || samples.len() < 5 {
+        while t1.elapsed().as_secs_f64() < self.min_time_s || samples.len() < min_samples {
             let s = Instant::now();
             std::hint::black_box(f());
             samples.push(s.elapsed().as_nanos() as f64);
@@ -74,6 +83,35 @@ impl Bench {
     pub fn results(&self) -> &[(String, Stats)] {
         &self.results
     }
+
+    /// Look up a recorded stat by exact name.
+    pub fn stat(&self, name: &str) -> Option<Stats> {
+        self.results.iter().find(|(n, _)| n == name).map(|(_, s)| *s)
+    }
+
+    /// All recorded stats as a JSON array (name, mean/σ/min ns, iters).
+    pub fn results_json(&self) -> Json {
+        arr(self
+            .results
+            .iter()
+            .map(|(name, st)| {
+                obj(vec![
+                    ("name", s(name)),
+                    ("mean_ns", num(st.mean_ns)),
+                    ("std_ns", num(st.std_ns)),
+                    ("min_ns", num(st.min_ns)),
+                    ("iters", num(st.iters as f64)),
+                ])
+            })
+            .collect())
+    }
+
+    /// Write `extra` top-level fields + `"results"` to `path` as JSON.
+    pub fn write_json(&self, path: &str, extra: Vec<(&str, Json)>) -> std::io::Result<()> {
+        let mut fields = extra;
+        fields.push(("results", self.results_json()));
+        std::fs::write(path, obj(fields).to_string_pretty())
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -94,7 +132,7 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        let mut b = Bench { min_time_s: 0.02, warmup_s: 0.0, results: vec![] };
+        let mut b = Bench { min_time_s: 0.02, warmup_s: 0.0, ..Bench::new() };
         let st = b.run("spin", || {
             let mut x = 0u64;
             for i in 0..1000 {
@@ -103,5 +141,25 @@ mod tests {
             x
         });
         assert!(st.mean_ns > 0.0 && st.iters >= 5);
+        assert!(b.stat("spin").is_some());
+        assert!(b.stat("nope").is_none());
+    }
+
+    #[test]
+    fn min_samples_caps_iterations() {
+        let mut b = Bench { min_time_s: 0.0, warmup_s: 0.0, min_samples: 2, results: vec![] };
+        let st = b.run("two", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(st.iters, 2);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut b = Bench { min_time_s: 0.0, warmup_s: 0.0, min_samples: 2, results: vec![] };
+        b.run("k", || 1 + 1);
+        let j = b.results_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let first = &parsed.as_arr().unwrap()[0];
+        assert_eq!(first.get("name").unwrap().as_str().unwrap(), "k");
+        assert!(first.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

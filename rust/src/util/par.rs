@@ -1,0 +1,129 @@
+//! Work partitioning for the coordinator's parallel host kernels.
+//!
+//! Every parallel kernel in `tensor/` and `quant/` funnels through
+//! [`par_row_chunks_mut`]: the output (or the in-place operand) is split
+//! into contiguous, disjoint row-chunks and each chunk is processed on a
+//! scoped thread. Two properties matter more than raw speed here:
+//!
+//! * **Determinism across thread counts.** Chunks only partition *which*
+//!   rows a thread owns — never the per-row accumulation order — so every
+//!   kernel built on this module produces bitwise-identical results for
+//!   `KURTAIL_THREADS=1` and `KURTAIL_THREADS=64` (pinned by
+//!   `tests/props.rs::prop_kernels_deterministic_across_threads`).
+//! * **No pool, no globals.** Scoped threads borrow the caller's slices
+//!   directly; there is no runtime state to poison and nothing to shut
+//!   down. Thread spawn costs ~10µs, which is noise for the ms-scale
+//!   kernels that opt into parallelism (tiny inputs take the sequential
+//!   path before ever reaching a spawn).
+//!
+//! The thread budget comes from `KURTAIL_THREADS` when set (≥ 1), else
+//! from `std::thread::available_parallelism()`.
+
+/// Thread budget for parallel kernels: `KURTAIL_THREADS` env override
+/// (any integer ≥ 1), falling back to the host's available parallelism.
+/// Read per call so tests and operators can retune without restarting.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("KURTAIL_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `data` (a dense row-major block of rows of `width` elements)
+/// into at most `threads` contiguous chunks of at least `min_rows` rows
+/// and run `f(first_row_index, chunk)` on each, in parallel.
+///
+/// The chunks are mutually disjoint `&mut` slices, so `f` may freely
+/// write its chunk; anything else it touches is captured by shared
+/// reference and must be read-only. With one chunk (or `threads == 1`)
+/// no thread is spawned and `f` runs on the caller's stack.
+pub fn par_row_chunks_mut<T, F>(data: &mut [T], width: usize, min_rows: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(width > 0, "par_row_chunks_mut: zero row width");
+    assert_eq!(data.len() % width, 0, "par_row_chunks_mut: ragged rows");
+    let rows = data.len() / width;
+    if rows == 0 {
+        return;
+    }
+    let n_chunks = threads.max(1).min((rows / min_rows.max(1)).max(1));
+    if n_chunks == 1 {
+        f(0, data);
+        return;
+    }
+    let rows_per = (rows + n_chunks - 1) / n_chunks;
+    let (first, mut rest) = data.split_at_mut(rows_per.min(rows) * width);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut row0 = rows_per.min(rows);
+        while !rest.is_empty() {
+            let take = rows_per.min(rest.len() / width);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * width);
+            rest = tail;
+            let r0 = row0;
+            row0 += take;
+            scope.spawn(move || f(r0, head));
+        }
+        // the first chunk runs on the calling thread while the rest work
+        f(0, first);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_budget_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn chunks_cover_every_row_exactly_once() {
+        for rows in [0usize, 1, 7, 16, 17, 1000] {
+            for threads in [1usize, 2, 3, 8] {
+                let mut data = vec![0u32; rows * 4];
+                par_row_chunks_mut(&mut data, 4, 1, threads, |r0, chunk| {
+                    for (i, row) in chunk.chunks_exact_mut(4).enumerate() {
+                        for v in row.iter_mut() {
+                            *v += (r0 + i) as u32 + 1; // +1 so row 0 counts
+                        }
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, (i / 4) as u32 + 1, "row {} touched wrong", i / 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_rows_limits_chunk_count() {
+        // 10 rows with min 8 → a single chunk even with many threads
+        let mut data = vec![0u8; 10];
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        par_row_chunks_mut(&mut data, 1, 8, 16, |_, _| {
+            hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn first_row_indices_are_consistent() {
+        let mut data: Vec<usize> = vec![0; 103];
+        par_row_chunks_mut(&mut data, 1, 1, 8, |r0, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = r0 + i;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+}

@@ -4,14 +4,118 @@
 
 use kurtail::calib::{corpus, ByteTokenizer, CorpusKind, TokenDataset, World};
 use kurtail::config::QuantScheme;
+use kurtail::quant::fakequant::fake_quant_rows_with_threads;
 use kurtail::quant::{fake_quant_rows, fake_quant_rows_asym, rtn_quantize};
 use kurtail::quant::gptq::{gptq_quantize, hessian_error};
 use kurtail::rotation::blockdiag_heads;
-use kurtail::tensor::hadamard::{fwht_rows, hadamard_matrix, orthogonality_error, random_hadamard};
-use kurtail::tensor::matmul::{gram, matmul, rows_matmul};
+use kurtail::tensor::hadamard::{
+    fwht_rows, fwht_rows_with_threads, hadamard_matrix, orthogonality_error, random_hadamard,
+};
+use kurtail::tensor::matmul::{
+    gram, gram_accumulate_with_threads, gram_with_threads, matmul, matmul_with_threads, rows_matmul,
+};
 use kurtail::tensor::stats::{kurtail_loss, kurtosis};
 use kurtail::tensor::Tensor;
 use kurtail::util::proptest::{check, prop_assert, prop_close};
+
+/// Naive triple-loop matmul — the ground truth the packed kernels are
+/// checked against at awkward (odd, non-block-aligned) shapes.
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += a.data[i * k + kk] * b.data[kk * n + j];
+            }
+            c.data[i * n + j] = s;
+        }
+    }
+    c
+}
+
+#[test]
+fn prop_packed_matmul_matches_naive_at_odd_shapes() {
+    check(15, |rng| {
+        // odd sizes straddling the panel (NR=8), microkernel (MR=4) and
+        // thread-chunk boundaries; 33³ > the packed-path threshold
+        // (PACK_MIN_MADDS = 32·1024), so every draw hits the packed kernel
+        let m = 33 + 2 * rng.below(60); // 33..151, odd
+        let k = 33 + 2 * rng.below(60);
+        let n = 33 + 2 * rng.below(60);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let want = naive_matmul(&a, &b);
+        for threads in [1usize, 3, 8] {
+            let got = matmul_with_threads(&a, &b, threads);
+            prop_assert(
+                got.max_abs_diff(&want) < 1e-3,
+                &format!("packed matmul {m}x{k}x{n} (t={threads}) within 1e-3 of naive"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_gram_matches_naive_at_odd_shapes() {
+    check(15, |rng| {
+        let m = 21 + 2 * rng.below(60);
+        let n = 13 + 2 * rng.below(50);
+        let a = Tensor::randn(&[m, n], 1.0, rng);
+        let want = naive_matmul(&a.t(), &a);
+        for threads in [1usize, 2, 8] {
+            let got = gram_with_threads(&a, threads);
+            prop_assert(
+                got.max_abs_diff(&want) < 1e-3,
+                &format!("gram {m}x{n} (t={threads}) within 1e-3 of naive"),
+            )?;
+        }
+        // streamed accumulation over odd-sized chunks agrees too
+        let mut h = Tensor::zeros(&[n, n]);
+        let split = 1 + rng.below(m - 1);
+        for (r0, r1) in [(0, split), (split, m)] {
+            let chunk = Tensor::new(a.data[r0 * n..r1 * n].to_vec(), vec![r1 - r0, n]);
+            gram_accumulate_with_threads(&mut h, &chunk, 1 + rng.below(8));
+        }
+        prop_assert(h.max_abs_diff(&want) < 1e-3, "streamed gram_accumulate matches naive")
+    });
+}
+
+#[test]
+fn prop_kernels_deterministic_across_threads() {
+    // bitwise — the parallel partition must never change the per-element
+    // accumulation order (KURTAIL_THREADS=1 vs 8 yield identical bits)
+    check(10, |rng| {
+        let m = 33 + rng.below(64);
+        let k = 33 + rng.below(64);
+        let n = 33 + rng.below(64);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let c1 = matmul_with_threads(&a, &b, 1);
+        let c8 = matmul_with_threads(&a, &b, 8);
+        prop_assert(c1.data == c8.data, "matmul bitwise deterministic across threads")?;
+
+        let g1 = gram_with_threads(&a, 1);
+        let g8 = gram_with_threads(&a, 8);
+        prop_assert(g1.data == g8.data, "gram bitwise deterministic across threads")?;
+
+        let d = 1usize << (4 + rng.below(4));
+        let x = Tensor::randn(&[m, d], 1.0, rng);
+        let mut f1 = x.clone();
+        fwht_rows_with_threads(&mut f1, 1);
+        let mut f8 = x.clone();
+        fwht_rows_with_threads(&mut f8, 8);
+        prop_assert(f1.data == f8.data, "fwht bitwise deterministic across threads")?;
+
+        let s = QuantScheme::act4();
+        let q1 = fake_quant_rows_with_threads(&x, &s, 1);
+        let q8 = fake_quant_rows_with_threads(&x, &s, 8);
+        prop_assert(q1.data == q8.data, "fake-quant bitwise deterministic across threads")
+    });
+}
 
 #[test]
 fn prop_hadamard_orthogonal_all_sizes() {

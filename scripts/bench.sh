@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Build release, run the kernel benchmarks, and drop BENCH_kernels.json
+# at the repo root so the scalar-vs-packed perf trajectory is tracked
+# PR-over-PR (see rust/README.md for the schema).
+#
+# Usage:  scripts/bench.sh            # full run
+#         KURTAIL_THREADS=8 scripts/bench.sh
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+export KURTAIL_BENCH_JSON="${KURTAIL_BENCH_JSON:-$repo_root/BENCH_kernels.json}"
+
+cd "$repo_root/rust"
+cargo build --release
+cargo bench --bench kernels
+
+echo "--- BENCH_kernels.json summary ---"
+# speedup lines for a quick human read; the JSON is the artifact
+grep -o '"kernel": "[^"]*"\|"dim": [0-9]*\|"speedup": [0-9.]*' "$KURTAIL_BENCH_JSON" \
+  | paste - - - || true
+echo "wrote $KURTAIL_BENCH_JSON"
