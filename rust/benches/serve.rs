@@ -1,0 +1,187 @@
+//! Serving-engine benchmark: continuous-batching INT4 decode vs the
+//! dense-f32 single-lane path, on a synthetic llama config sized so the
+//! weight traversal dominates (d_head 64 → the 4-bit KV layout shows its
+//! full ≥6× memory win). No artifacts needed — the engine is native.
+//!
+//! Writes `BENCH_serve.json` (path override: `KURTAIL_BENCH_SERVE_JSON`)
+//! with tokens/sec at 1/4/16 concurrent sequences and KV bytes/token for
+//! the paged 4-bit pool vs the dense f32 cache. `scripts/bench.sh`
+//! drops it at the repo root, next to `BENCH_kernels.json`.
+
+use std::time::Instant;
+
+use kurtail::config::{KvQuant, QuantScheme};
+use kurtail::model::Params;
+use kurtail::runtime::{ConfigMeta, ParamSpec};
+use kurtail::serve::{Engine, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::tensor::hadamard::random_hadamard;
+use kurtail::util::json::{arr, num, obj, s as js, Json};
+use kurtail::util::par::num_threads;
+use kurtail::util::Rng;
+
+const LANES: [usize; 3] = [1, 4, 16];
+const REQUESTS: usize = 16;
+const PROMPT_TOKENS: usize = 8;
+const NEW_TOKENS: usize = 48;
+
+/// Synthetic serving config: llama arch, d=256, 4 heads × d_head 64.
+fn bench_meta() -> ConfigMeta {
+    let (l, d, ff, v, h) = (4usize, 256usize, 512usize, 256usize, 4usize);
+    let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape };
+    ConfigMeta {
+        name: "servebench".into(),
+        vocab: v,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_head: d / h,
+        d_ff: ff,
+        seq_len: 128,
+        arch: "llama".into(),
+        n_experts: 1,
+        top_k: 1,
+        train_batch: 1,
+        eval_batch: 1,
+        cap_batch: 1,
+        decode_batch: 1,
+        spin_batch: 1,
+        param_specs: vec![
+            spec("embed", vec![v, d]),
+            spec("ln1", vec![l, d]),
+            spec("wq", vec![l, d, d]),
+            spec("wk", vec![l, d, d]),
+            spec("wv", vec![l, d, d]),
+            spec("wo", vec![l, d, d]),
+            spec("ln2", vec![l, d]),
+            spec("wg", vec![l, d, ff]),
+            spec("wu", vec![l, d, ff]),
+            spec("wd", vec![l, ff, d]),
+            spec("lnf", vec![d]),
+            spec("head", vec![v, d]),
+        ],
+    }
+}
+
+fn submit_all(eng: &mut Engine, requests: usize) {
+    for i in 0..requests {
+        let prompt: Vec<i32> = (0..PROMPT_TOKENS).map(|t| ((i * 31 + t * 7) % 256) as i32).collect();
+        eng.submit_tokens(prompt, NEW_TOKENS, 0.0, 0xC0FFEE + i as u64).expect("submit");
+    }
+}
+
+/// One timed engine run; returns (wall seconds, total tokens processed).
+fn timed_run(model: &ServeModel, kv: KvQuant, lanes: usize, requests: usize) -> (f64, usize, Engine) {
+    let cfg = ServeConfig { max_lanes: lanes, kv_quant: kv, ..ServeConfig::default() };
+    let mut eng = Engine::new(model.clone(), &cfg).expect("engine");
+    submit_all(&mut eng, requests);
+    let t0 = Instant::now();
+    let done = eng.run().expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+    (wall, tokens, eng)
+}
+
+fn main() {
+    let meta = bench_meta();
+    let mut rng = Rng::new(0);
+    let params = Params::init(&meta, &mut rng);
+    let spec = ServeQuantSpec {
+        weight: QuantScheme::weight4_grouped(64),
+        ..ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, &mut rng),
+            random_hadamard(meta.d_head, &mut rng),
+            random_hadamard(meta.d_ff, &mut rng),
+        )
+    };
+    let int4 = ServeModel::from_params(&params, Some(spec)).expect("int4 model");
+    let dense = ServeModel::from_params(&params, None).expect("fp model");
+
+    // warmup (page in weights, spin up the allocator)
+    let _ = timed_run(&int4, KvQuant::Asym4, 4, 4);
+
+    // dense f32 sequential baseline (fp weights, fp KV, one lane)
+    let (fp_wall, fp_tokens, fp_eng) = timed_run(&dense, KvQuant::Fp, 1, REQUESTS);
+    let fp_tok_s = fp_tokens as f64 / fp_wall;
+    println!("dense-f32 lane1: {fp_tok_s:.1} tok/s ({fp_tokens} tokens in {fp_wall:.2}s)");
+
+    let mut runs: Vec<Json> = Vec::new();
+    let mut lane1_tok_s = 0.0f64;
+    let mut last_eng = None;
+    for &lanes in &LANES {
+        let (wall, tokens, eng) = timed_run(&int4, KvQuant::Asym4, lanes, REQUESTS);
+        let tok_s = tokens as f64 / wall;
+        if lanes == 1 {
+            lane1_tok_s = tok_s;
+        }
+        let speedup = tok_s / lane1_tok_s.max(1e-9);
+        println!(
+            "int4 lanes={lanes:<2}: {tok_s:.1} tok/s ({tokens} tokens in {wall:.2}s, {speedup:.2}x vs 1 lane)"
+        );
+        runs.push(obj(vec![
+            ("lanes", num(lanes as f64)),
+            ("requests", num(REQUESTS as f64)),
+            ("tokens", num(tokens as f64)),
+            ("wall_s", num(wall)),
+            ("tok_s", num(tok_s)),
+            ("speedup_vs_lane1", num(speedup)),
+            ("speedup_vs_dense_fp", num(tok_s / fp_tok_s.max(1e-9))),
+        ]));
+        last_eng = Some(eng);
+    }
+
+    let eng = last_eng.expect("at least one run");
+    let kv_int4 = eng.kv_bytes_per_token() as f64;
+    let kv_dense = fp_eng.dense_kv_bytes_per_token() as f64;
+    println!(
+        "kv bytes/token: paged-int4 {kv_int4} vs dense f32 {kv_dense} ({:.1}x reduction)",
+        kv_dense / kv_int4
+    );
+
+    let path = std::env::var("KURTAIL_BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let json = obj(vec![
+        ("bench", js("serve")),
+        ("threads", num(num_threads() as f64)),
+        (
+            "model",
+            obj(vec![
+                ("arch", js(&meta.arch)),
+                ("d_model", num(meta.d_model as f64)),
+                ("n_layers", num(meta.n_layers as f64)),
+                ("n_heads", num(meta.n_heads as f64)),
+                ("d_head", num(meta.d_head as f64)),
+                ("d_ff", num(meta.d_ff as f64)),
+            ]),
+        ),
+        ("prompt_tokens", num(PROMPT_TOKENS as f64)),
+        ("new_tokens", num(NEW_TOKENS as f64)),
+        (
+            "kv",
+            obj(vec![
+                ("paged_int4_bytes_per_token", num(kv_int4)),
+                ("dense_f32_bytes_per_token", num(kv_dense)),
+                ("reduction", num(kv_dense / kv_int4)),
+                ("block_tokens", num(eng.pool().block_tokens as f64)),
+            ]),
+        ),
+        (
+            "weights",
+            obj(vec![
+                ("packed_bytes", num(eng.model().weight_bytes() as f64)),
+                ("dense_bytes", num(eng.model().dense_weight_bytes() as f64)),
+                (
+                    "reduction",
+                    num(eng.model().dense_weight_bytes() as f64
+                        / eng.model().weight_bytes() as f64),
+                ),
+            ]),
+        ),
+        (
+            "baseline_dense_fp32",
+            obj(vec![("lanes", num(1.0)), ("tok_s", num(fp_tok_s)), ("wall_s", num(fp_wall))]),
+        ),
+        ("runs", arr(runs)),
+    ]);
+    std::fs::write(&path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

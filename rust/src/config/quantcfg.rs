@@ -28,22 +28,32 @@ pub struct QuantScheme {
     pub symmetric: bool,
     /// Dynamic-range clip quantile (activations: 0.98; weights: none).
     pub clip_quantile: Option<f32>,
+    /// Scale-group size along the input (row) axis for packed weight
+    /// storage: `None` = one scale per output channel (the classic RTN
+    /// grid), `Some(g)` = a scale per `g` consecutive input rows.
+    pub group: Option<usize>,
 }
 
 impl QuantScheme {
     /// Paper default for activations: 4-bit symmetric per-token, 0.98 clip.
     pub fn act4() -> Self {
-        Self { bits: 4, symmetric: true, clip_quantile: Some(0.98) }
+        Self { bits: 4, symmetric: true, clip_quantile: Some(0.98), group: None }
     }
 
     /// Paper default for weights: 4-bit symmetric per-channel.
     pub fn weight4() -> Self {
-        Self { bits: 4, symmetric: true, clip_quantile: None }
+        Self { bits: 4, symmetric: true, clip_quantile: None, group: None }
+    }
+
+    /// 4-bit symmetric weights with per-`g`-row scale groups (the serving
+    /// engine's packed-storage grid; `serve::Int4Weight`).
+    pub fn weight4_grouped(g: usize) -> Self {
+        Self { group: Some(g), ..Self::weight4() }
     }
 
     /// Paper default for KV cache: 4-bit asymmetric per-token.
     pub fn kv4() -> Self {
-        Self { bits: 4, symmetric: false, clip_quantile: None }
+        Self { bits: 4, symmetric: false, clip_quantile: None, group: None }
     }
 
     /// Half of the symmetric integer grid: 2^(b-1) − 1.
@@ -72,7 +82,15 @@ mod tests {
     fn grids() {
         assert_eq!(QuantScheme::act4().qmax(), 7.0);
         assert_eq!(QuantScheme::kv4().levels(), 15.0);
-        let s8 = QuantScheme { bits: 8, symmetric: true, clip_quantile: None };
+        let s8 = QuantScheme { bits: 8, symmetric: true, clip_quantile: None, group: None };
         assert_eq!(s8.qmax(), 127.0);
+    }
+
+    #[test]
+    fn grouped_scheme() {
+        let g = QuantScheme::weight4_grouped(64);
+        assert_eq!(g.group, Some(64));
+        assert_eq!(g.bits, 4);
+        assert_eq!(QuantScheme::weight4().group, None);
     }
 }

@@ -6,7 +6,9 @@
 //!   corpora, tokenizer, trainer driver, layer-wise activation capture,
 //!   rotation learning (Cayley-Adam over kurtosis loss), rotation fusion,
 //!   RTN/GPTQ weight quantization, baselines (QuaRot, SpinQuant-lite), the
-//!   evaluation harness, and one experiment runner per paper table/figure.
+//!   evaluation harness, one experiment runner per paper table/figure, and
+//!   the native INT4 serving engine ([`serve`]: packed 4-bit weights,
+//!   paged 4-bit KV cache, continuous-batching decode).
 //! * **L2/L1 (python/compile, build-time only)** — JAX model graphs and
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed here
 //!   through PJRT ([`runtime`]).
@@ -24,5 +26,6 @@ pub mod pipeline;
 pub mod quant;
 pub mod rotation;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

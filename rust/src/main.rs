@@ -5,6 +5,7 @@
 //! kurtail train <model>      pretrain a tiny model and report the loss curve
 //! kurtail quantize <model>   run the full PTQ pipeline for one method
 //! kurtail generate <model>   sample text through the (quantized) decode path
+//! kurtail serve <model>      continuous-batching INT4 serving over N requests
 //! kurtail list               show artifacts + model configs
 //! ```
 //!
@@ -18,6 +19,7 @@ use kurtail::eval::evaluate;
 use kurtail::exp::{self, ExpCtx};
 use kurtail::model::generate::Generator;
 use kurtail::runtime::Runtime;
+use kurtail::serve::ServeConfig;
 
 struct Args {
     cmd: String,
@@ -29,6 +31,8 @@ struct Args {
     weights: WeightQuantizer,
     prompt: String,
     tokens: usize,
+    lanes: usize,
+    requests: usize,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -42,6 +46,8 @@ fn parse_args() -> Result<Args, String> {
         weights: WeightQuantizer::Gptq,
         prompt: "the author of ".into(),
         tokens: 48,
+        lanes: 4,
+        requests: 8,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -74,6 +80,12 @@ fn parse_args() -> Result<Args, String> {
             "--tokens" => {
                 a.tokens = take("--tokens")?.parse().map_err(|e| format!("--tokens: {e}"))?
             }
+            "--lanes" => {
+                a.lanes = take("--lanes")?.parse().map_err(|e| format!("--lanes: {e}"))?
+            }
+            "--requests" => {
+                a.requests = take("--requests")?.parse().map_err(|e| format!("--requests: {e}"))?
+            }
             flag if flag.starts_with("--") => return Err(format!("unknown flag '{flag}'")),
             pos => {
                 if a.cmd.is_empty() {
@@ -95,6 +107,7 @@ fn usage() {
          \x20 train <model>                    pretrain (tiny|small|base|phi|moe)\n\
          \x20 quantize <model> [--method M] [--weights W]   full PTQ pipeline + eval\n\
          \x20 generate <model> [--method M] [--prompt P] [--tokens N]\n\
+         \x20 serve <model> [--method M] [--lanes N] [--requests N] [--prompt P] [--tokens N]\n\
          \x20 list                             artifacts + configs"
     );
 }
@@ -170,6 +183,10 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
             let pipe = ctx.pipeline(model)?;
             let mut pcfg = PipelineConfig::new(model, args.method);
+            // generation is served natively (INT4-packed weights); RTN
+            // grids round-trip the pack exactly, whereas GPTQ's
+            // Hessian-optimized rounding would be silently re-gridded
+            pcfg.weight_quantizer = WeightQuantizer::Rtn;
             pcfg.seed = args.seed;
             pcfg.calib.seed = args.seed;
             if args.fast {
@@ -184,6 +201,50 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             {
                 println!("[{i}] {text}");
             }
+            Ok(())
+        }
+        "serve" => {
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("small");
+            let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
+            let pipe = ctx.pipeline(model)?;
+            let mut pcfg = PipelineConfig::new(model, args.method);
+            // the serve engine packs real INT4 itself — keep the fused
+            // weights un-fake-quantized and let the pack be the grid
+            pcfg.weight_quantizer = WeightQuantizer::None;
+            pcfg.seed = args.seed;
+            pcfg.calib.seed = args.seed;
+            if args.fast {
+                pcfg.calib.n_samples = 64;
+                pcfg.calib.iters = 30;
+            }
+            let (pm, _) = pipe.quantize(&pcfg)?;
+            let scfg = ServeConfig { max_lanes: args.lanes, ..ServeConfig::default() };
+            let mut eng = pipe.serve_engine(&pm, &scfg)?;
+            for i in 0..args.requests {
+                eng.submit(&args.prompt, args.tokens, 0.8, args.seed.wrapping_add(i as u64))?;
+            }
+            let t0 = std::time::Instant::now();
+            let done = eng.run()?;
+            let wall = t0.elapsed().as_secs_f64();
+            for c in &done {
+                println!("[{}] {}", c.id, c.text);
+            }
+            let total_tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+            println!("\nmethod         : {}", args.method.label());
+            println!("requests       : {} × {} new tokens, {} lanes", done.len(), args.tokens, args.lanes);
+            println!("throughput     : {:.1} tok/s ({total_tokens} tokens in {wall:.2}s)", total_tokens as f64 / wall);
+            println!(
+                "kv bytes/token : {} (dense f32 cache: {}, {:.1}x)",
+                eng.kv_bytes_per_token(),
+                eng.dense_kv_bytes_per_token(),
+                eng.dense_kv_bytes_per_token() as f64 / eng.kv_bytes_per_token() as f64
+            );
+            println!(
+                "weight bytes   : {} (dense f32: {}, {:.1}x)",
+                eng.model().weight_bytes(),
+                eng.model().dense_weight_bytes(),
+                eng.model().dense_weight_bytes() as f64 / eng.model().weight_bytes() as f64
+            );
             Ok(())
         }
         "list" => {

@@ -1,12 +1,17 @@
-//! Autoregressive generation through the `decode_step_{cfg}` artifacts —
-//! the serving-flavoured path that exercises 4-bit KV-cache quantization
-//! token by token (what the paper's generation-stage analysis is about).
+//! Autoregressive generation. [`Generator::generate`] is a thin client
+//! of the native serving engine ([`crate::serve`]): packed INT4 weights,
+//! paged 4-bit KV cache, batched prefill. The original artifact-driven
+//! decode loop survives as [`Generator::generate_artifact`] — it
+//! exercises the AOT `decode_step_{cfg}` graphs (dense f32 caches) and
+//! anchors the serve engine's parity test.
 
 use anyhow::Result;
 
 use super::Params;
 use crate::calib::ByteTokenizer;
+use crate::config::KvQuant;
 use crate::runtime::{Runtime, Value};
+use crate::serve::{sample_token, Engine, ServeConfig, ServeModel, ServeQuantSpec};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::Rng;
 
@@ -45,9 +50,44 @@ impl Generator {
         })
     }
 
-    /// Greedy-or-sampled continuation of `prompt` for all batch lanes.
-    /// Returns decoded strings (including the prompt).
+    /// Greedy-or-sampled continuation of `prompt` for all batch lanes,
+    /// served natively (INT4 weights + paged 4-bit KV + batched prefill).
+    /// Returns decoded strings (including the prompt). Lanes sample from
+    /// independent per-request streams seeded off `seed`. Unsupported
+    /// archs (moe) fall back to the artifact decode loop.
+    ///
+    /// Weight caveat: the quant path packs `params` onto the serve RTN
+    /// grid. RTN-quantized (or unquantized) weights round-trip exactly;
+    /// GPTQ-prepared weights get re-gridded (≤ half-step movement) —
+    /// use [`Self::generate_artifact`] to decode a GPTQ model verbatim.
     pub fn generate(&self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<Vec<String>> {
+        if !matches!(self.params.meta.arch.as_str(), "llama" | "phi") {
+            return self.generate_artifact(prompt, n_tokens, temp, seed);
+        }
+        if n_tokens == 0 {
+            return Ok(vec![prompt.to_string(); self.batch.max(1)]);
+        }
+        let (spec, kv) = if self.quant {
+            let (r3, r4, r5) =
+                self.rots.clone().expect("quant decode needs online rotations");
+            (Some(ServeQuantSpec::paper_default(r3, r4, r5)), KvQuant::Asym4)
+        } else {
+            (None, KvQuant::Fp)
+        };
+        let model = ServeModel::from_params(&self.params, spec)?;
+        let cfg = ServeConfig { max_lanes: self.batch.max(1), kv_quant: kv, ..ServeConfig::default() };
+        let mut eng = Engine::new(model, &cfg)?;
+        for lane in 0..self.batch.max(1) {
+            eng.submit(prompt, n_tokens, temp, seed.wrapping_add(lane as u64))?;
+        }
+        Ok(eng.run()?.into_iter().map(|c| c.text).collect())
+    }
+
+    /// The original decode path through the `decode_step_{cfg}` artifact
+    /// (dense f32 KV caches). Parameter values and the online rotations
+    /// are built **once** and reused across the token loop — only the
+    /// cache/token/pos slots change per step.
+    pub fn generate_artifact(&self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<Vec<String>> {
         let meta = &self.params.meta;
         let tok = ByteTokenizer;
         let prompt_ids = tok.encode(prompt);
@@ -59,33 +99,36 @@ impl Generator {
         );
         let (l, b, h, dh) = (meta.n_layers, self.batch, meta.n_heads, meta.d_head);
         let cache_shape = vec![l, b, self.tmax, h, dh];
-        let mut kc = Tensor::zeros(&cache_shape);
-        let mut vc = Tensor::zeros(&cache_shape);
         let mut rng = Rng::new(seed);
 
         let mut seqs: Vec<Vec<i32>> = vec![prompt_ids.clone(); b];
-        let mut logits = Tensor::zeros(&[b, meta.vocab]);
-        // prefill token by token (decode-path prefill; fine at these sizes)
+        // static inputs hoisted out of the token loop: weights (+ online
+        // rotations for the quant graph) are cloned exactly once per call
+        let mut inputs = self.params.as_values();
+        if self.quant {
+            let (r3, r4, r5) = self.rots.as_ref().unwrap();
+            inputs.push(Value::F32(r3.clone()));
+            inputs.push(Value::F32(r4.clone()));
+            inputs.push(Value::F32(r5.clone()));
+        }
+        let base = inputs.len();
+        inputs.push(Value::F32(Tensor::zeros(&cache_shape))); // k cache
+        inputs.push(Value::F32(Tensor::zeros(&cache_shape))); // v cache
+        inputs.push(Value::I32(IntTensor::zeros(&[b]))); // token slot
+        inputs.push(Value::from(0i32)); // pos slot
+
         for pos in 0..prompt_ids.len() + n_tokens - 1 {
             let token: Vec<i32> = seqs
                 .iter()
                 .map(|s| *s.get(pos).unwrap_or(s.last().unwrap()))
                 .collect();
-            let mut inputs = self.params.as_values();
-            if self.quant {
-                let (r3, r4, r5) = self.rots.as_ref().unwrap();
-                inputs.push(Value::F32(r3.clone()));
-                inputs.push(Value::F32(r4.clone()));
-                inputs.push(Value::F32(r5.clone()));
-            }
-            inputs.push(Value::F32(kc));
-            inputs.push(Value::F32(vc));
-            inputs.push(Value::I32(IntTensor::new(token, vec![b])));
-            inputs.push(Value::from(pos as i32));
+            inputs[base + 2] = Value::I32(IntTensor::new(token, vec![b]));
+            inputs[base + 3] = Value::from(pos as i32);
             let mut out = self.art.run(&inputs)?;
-            vc = out.remove(2).into_f32()?;
-            kc = out.remove(1).into_f32()?;
-            logits = out.remove(0).into_f32()?;
+            // thread the updated caches straight back into the input slots
+            inputs[base + 1] = out.remove(2);
+            inputs[base] = out.remove(1);
+            let logits = out.remove(0).into_f32()?;
             if pos + 1 >= prompt_ids.len() {
                 for lane in 0..b {
                     let next = sample_token(logits.row(lane), temp, &mut rng);
@@ -93,35 +136,14 @@ impl Generator {
                 }
             }
         }
-        let _ = logits;
         Ok(seqs.iter().map(|s| tok.decode(s)).collect())
     }
 }
 
-fn sample_token(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
-    if temp <= 0.0 {
-        return argmax(logits) as i32;
-    }
-    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = logits.iter().map(|&l| ((l - max) / temp).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    let mut u = rng.uniform() * sum;
-    for (i, e) in exps.iter().enumerate() {
-        u -= e;
-        if u <= 0.0 {
-            return i as i32;
-        }
-    }
-    (exps.len() - 1) as i32
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
-}
-
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::serve::{argmax, sample_token};
+    use crate::util::Rng;
 
     #[test]
     fn argmax_and_greedy() {

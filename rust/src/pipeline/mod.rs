@@ -185,4 +185,34 @@ impl Pipeline {
         }
         Ok((PreparedModel { params, rots, quantized: true, method: pcfg.method }, cost))
     }
+
+    /// Build the native serving engine for a prepared model (the `serve`
+    /// pipeline entry): quantized methods get INT4-packed weights, 4-bit
+    /// paged KV and the method's online rotations; fp stays dense.
+    ///
+    /// The pack is itself an RTN weight quantizer, so prepare the model
+    /// with `WeightQuantizer::None` to make the serve grid the sole
+    /// weight quantizer (RTN-prepared weights are a fixpoint; GPTQ
+    /// weights get re-gridded with ≤ half-step movement).
+    pub fn serve_engine(
+        &self,
+        pm: &PreparedModel,
+        scfg: &crate::serve::ServeConfig,
+    ) -> Result<crate::serve::Engine> {
+        let mut scfg = scfg.clone();
+        let spec = if pm.quantized {
+            Some(crate::serve::ServeQuantSpec::paper_default(
+                pm.rots.r3.clone(),
+                pm.rots.r4.clone(),
+                pm.rots.r5.clone(),
+            ))
+        } else {
+            // fp baseline: serve it as a real fp baseline — a 4-bit KV
+            // cache without R3 shaping would silently degrade it
+            scfg.kv_quant = crate::config::KvQuant::Fp;
+            None
+        };
+        let model = crate::serve::ServeModel::from_params(&pm.params, spec)?;
+        crate::serve::Engine::new(model, &scfg)
+    }
 }

@@ -9,9 +9,9 @@
 use anyhow::Result;
 
 use crate::config::{QuantScheme, WeightQuantizer};
-use crate::model::{rmsnorm_rows, LayerTaps, Params};
+use crate::model::{LayerTaps, Params};
 use crate::rotation::{blockdiag_heads, RotationSet};
-use crate::tensor::matmul::{gram_accumulate, matmul};
+use crate::tensor::matmul::{gram_accumulate, gram_accumulate_rmsnorm, matmul};
 use crate::tensor::Tensor;
 
 use super::gptq::{gptq_quantize_with_factor, GptqFactor};
@@ -39,19 +39,17 @@ impl HessianSet {
         }
     }
 
-    /// Accumulate one batch's taps for one layer.
+    /// Accumulate one batch's taps for one layer. The norm→gram path is
+    /// fused (`gram_accumulate_rmsnorm`): no full normed activation copy
+    /// is materialized, and the result is bitwise identical to the
+    /// two-step version this replaced.
     pub fn accumulate(&mut self, taps: &LayerTaps) {
         let l = taps.layer;
-        gram_accumulate(&mut self.g_attn_in[l], &flat2(&rmsnorm_rows(&taps.mhsa_in)));
-        gram_accumulate(&mut self.g_ffn_in[l], &flat2(&rmsnorm_rows(&taps.ffn_in)));
-        gram_accumulate(&mut self.g_attn_out[l], &flat2(&taps.attn_out));
-        gram_accumulate(&mut self.g_ffn_mid[l], &flat2(&taps.ffn_mid));
+        gram_accumulate_rmsnorm(&mut self.g_attn_in[l], &taps.mhsa_in);
+        gram_accumulate_rmsnorm(&mut self.g_ffn_in[l], &taps.ffn_in);
+        gram_accumulate(&mut self.g_attn_out[l], &taps.attn_out);
+        gram_accumulate(&mut self.g_ffn_mid[l], &taps.ffn_mid);
     }
-}
-
-fn flat2(x: &Tensor) -> Tensor {
-    let (r, c) = x.as_2d();
-    x.clone().reshape(&[r, c])
 }
 
 /// G → MᵀGM (input-rotation transform of a Gram matrix).
@@ -234,6 +232,21 @@ mod tests {
         for name in ["wq", "wo", "wd"] {
             assert!(p.get(name).all_finite(), "{name}");
         }
+    }
+
+    #[test]
+    fn accumulate_fuses_norm_gram_bitwise() {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(5);
+        let taps = fake_taps(&meta, 0, &mut rng);
+        let mut hs = HessianSet::new(meta.n_layers, meta.d_model, meta.d_ff);
+        hs.accumulate(&taps);
+        let mut want = Tensor::zeros(&[meta.d_model, meta.d_model]);
+        gram_accumulate(&mut want, &crate::model::rmsnorm_rows(&taps.mhsa_in));
+        assert_eq!(hs.g_attn_in[0].data, want.data);
+        let mut want_out = Tensor::zeros(&[meta.d_model, meta.d_model]);
+        gram_accumulate(&mut want_out, &taps.attn_out);
+        assert_eq!(hs.g_attn_out[0].data, want_out.data);
     }
 
     #[test]

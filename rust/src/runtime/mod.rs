@@ -10,5 +10,5 @@ pub mod manifest;
 pub mod value;
 
 pub use artifact::{Artifact, Runtime};
-pub use manifest::{ArtifactSig, ConfigMeta, Manifest, TensorSig};
+pub use manifest::{ArtifactSig, ConfigMeta, Manifest, ParamSpec, TensorSig};
 pub use value::Value;

@@ -1,0 +1,891 @@
+//! The native INT4 serving engine: continuous-batching autoregressive
+//! decode over packed INT4 weights ([`Int4Weight`]) and the paged 4-bit
+//! KV pool ([`KvPool`]), entirely on the host kernel layer — no PJRT
+//! artifacts at request time.
+//!
+//! The per-token math mirrors `python/compile/model.py::decode_step`
+//! (same op order: norm → act-fake-quant → QKV → RoPE → R3 →
+//! KV-quantize-on-append → fused attention → R4 → Wo → FFN with R5),
+//! so with 4-bit KV the dequantized cache holds exactly what the quant
+//! decode artifact's dense cache holds, and at `temp = 0` the engine
+//! reproduces the artifact `Generator` greedy stream modulo f32
+//! summation order (pinned by the artifact-parity integration test).
+//!
+//! **Batching model.** Each decode iteration stacks every live lane's
+//! current token into one `(N, d)` activation block so the weight
+//! matrices are traversed once per *iteration*, not once per lane —
+//! that's the continuous-batching win the serve bench measures. Prompt
+//! prefill runs the same forward with one row per prompt position
+//! (closing the ROADMAP prefill-batching item). All row-level kernels
+//! (norm, fake-quant, GEMM, attention) are per-row independent with
+//! fixed accumulation order, so **a lane's token stream is bitwise
+//! independent of which other lanes happen to share its batch** — a
+//! 1-lane engine and a 16-lane engine produce identical completions
+//! (pinned by tests) — and independent of `KURTAIL_THREADS`.
+
+use anyhow::Result;
+
+use crate::calib::ByteTokenizer;
+use crate::config::{KvQuant, QuantScheme};
+use crate::model::Params;
+use crate::quant::fakequant::{fq_row_sym, row_scale_buf};
+use crate::runtime::ConfigMeta;
+use crate::tensor::matmul::matmul_into_threads;
+use crate::tensor::Tensor;
+use crate::util::par::{self, num_threads};
+use crate::util::Rng;
+
+use super::int4::Int4Weight;
+use super::kvcache::{KvPool, SeqKv};
+use super::scheduler::{QueuedRequest, Scheduler};
+
+/// RoPE base shared by every preset (`ModelConfig.rope_base`); the
+/// manifest does not carry it because no config overrides it.
+const ROPE_BASE: f32 = 10000.0;
+
+// ------------------------------------------------------------- model
+
+/// Online quantization spec for a quantized serving model: the weight
+/// grid used at pack time, the activation fake-quant scheme, and the
+/// online rotations (R3/R4/R5) the quant decode graph applies.
+#[derive(Clone)]
+pub struct ServeQuantSpec {
+    pub weight: QuantScheme,
+    pub act: QuantScheme,
+    pub r3: Tensor,
+    pub r4: Tensor,
+    pub r5: Tensor,
+}
+
+impl ServeQuantSpec {
+    /// Paper-default W4/A4 spec with the given online rotations.
+    pub fn paper_default(r3: Tensor, r4: Tensor, r5: Tensor) -> Self {
+        Self { weight: QuantScheme::weight4(), act: QuantScheme::act4(), r3, r4, r5 }
+    }
+}
+
+/// One linear's serving-time storage.
+#[derive(Clone)]
+enum LinW {
+    F32(Tensor),
+    Int4(Int4Weight),
+}
+
+impl LinW {
+    fn bytes(&self) -> usize {
+        match self {
+            LinW::F32(t) => t.numel() * 4,
+            LinW::Int4(w) => w.bytes(),
+        }
+    }
+
+    fn dense_bytes(&self) -> usize {
+        match self {
+            LinW::F32(t) => t.numel() * 4,
+            LinW::Int4(w) => w.dense_bytes(),
+        }
+    }
+
+    /// `out = x @ W` (overwrites `out`).
+    fn matmul_into(&self, x: &[f32], m: usize, out: &mut [f32], threads: usize) {
+        match self {
+            LinW::F32(t) => {
+                out.fill(0.0);
+                matmul_into_threads(x, &t.data, out, m, t.shape[0], t.shape[1], threads);
+            }
+            LinW::Int4(w) => w.matmul_into(x, m, out, threads),
+        }
+    }
+}
+
+#[derive(Clone)]
+struct LayerW {
+    ln1: Vec<f32>,
+    ln2: Vec<f32>,
+    wq: LinW,
+    wk: LinW,
+    wv: LinW,
+    wo: LinW,
+    /// `None` for the phi arch (single-branch FFN).
+    wg: Option<LinW>,
+    wu: LinW,
+    wd: LinW,
+}
+
+/// A model prepared for serving: embedding/head in f32, transformer
+/// linears packed INT4 (quant) or dense f32 (fp), RoPE tables
+/// precomputed to `max_pos`.
+#[derive(Clone)]
+pub struct ServeModel {
+    pub meta: ConfigMeta,
+    embed: Tensor,
+    head_t: Tensor,
+    lnf: Vec<f32>,
+    layers: Vec<LayerW>,
+    quant: Option<ServeQuantSpec>,
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+    /// Maximum cache position + 1 a request may reach.
+    pub max_pos: usize,
+}
+
+impl ServeModel {
+    /// Build a serving model from a parameter store. `quant = Some(_)`
+    /// packs every transformer linear to INT4 on the spec's weight grid
+    /// (this *is* the serving-side weight quantizer — hand it the fused,
+    /// un-fake-quantized weights; RTN-quantized weights are a fixpoint).
+    /// Embedding and head stay f32 (standard practice).
+    pub fn from_params(params: &Params, quant: Option<ServeQuantSpec>) -> Result<Self> {
+        let meta = params.meta.clone();
+        anyhow::ensure!(
+            matches!(meta.arch.as_str(), "llama" | "phi"),
+            "serve engine supports llama/phi archs, not '{}'",
+            meta.arch
+        );
+        let (d, h, dh) = (meta.d_model, meta.n_heads, meta.d_head);
+        anyhow::ensure!(d == h * dh, "d_model {d} != n_heads*d_head");
+        anyhow::ensure!(dh % 2 == 0, "RoPE needs an even d_head, got {dh}");
+        if let Some(q) = &quant {
+            anyhow::ensure!(q.r3.shape == vec![dh, dh], "r3 must be ({dh},{dh})");
+            anyhow::ensure!(q.r4.shape == vec![dh, dh], "r4 must be ({dh},{dh})");
+            anyhow::ensure!(
+                q.r5.shape == vec![meta.d_ff, meta.d_ff],
+                "r5 must be ({0},{0})",
+                meta.d_ff
+            );
+        }
+        let pack = |w: Tensor| -> LinW {
+            match &quant {
+                Some(q) => LinW::Int4(Int4Weight::pack(&w, &q.weight)),
+                None => LinW::F32(w),
+            }
+        };
+        let mut layers = Vec::with_capacity(meta.n_layers);
+        for l in 0..meta.n_layers {
+            layers.push(LayerW {
+                ln1: params.get("ln1").index_axis0(l).data,
+                ln2: params.get("ln2").index_axis0(l).data,
+                wq: pack(params.get("wq").index_axis0(l)),
+                wk: pack(params.get("wk").index_axis0(l)),
+                wv: pack(params.get("wv").index_axis0(l)),
+                wo: pack(params.get("wo").index_axis0(l)),
+                wg: if params.has("wg") { Some(pack(params.get("wg").index_axis0(l))) } else { None },
+                wu: pack(params.get("wu").index_axis0(l)),
+                wd: pack(params.get("wd").index_axis0(l)),
+            });
+        }
+        let max_pos = meta.seq_len;
+        // rope_tables(): inv_i = base^(-2i/dh), ang = pos · inv
+        let dh2 = dh / 2;
+        let mut rope_cos = vec![0.0f32; max_pos * dh2];
+        let mut rope_sin = vec![0.0f32; max_pos * dh2];
+        for p in 0..max_pos {
+            for i2 in 0..dh2 {
+                let inv = ROPE_BASE.powf(-((2 * i2) as f32) / dh as f32);
+                let ang = p as f32 * inv;
+                rope_cos[p * dh2 + i2] = ang.cos();
+                rope_sin[p * dh2 + i2] = ang.sin();
+            }
+        }
+        Ok(Self {
+            embed: params.get("embed").clone(),
+            head_t: params.get("head").t(),
+            lnf: params.get("lnf").data.clone(),
+            meta,
+            layers,
+            quant,
+            rope_cos,
+            rope_sin,
+            max_pos,
+        })
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// Serving-time bytes of the transformer linears (packed or dense).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(layer_bytes).sum()
+    }
+
+    /// Dense-f32 bytes of the same linears (the compression baseline).
+    pub fn dense_weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                [Some(&l.wq), Some(&l.wk), Some(&l.wv), Some(&l.wo), l.wg.as_ref(), Some(&l.wu), Some(&l.wd)]
+                    .into_iter()
+                    .flatten()
+                    .map(|w| w.dense_bytes())
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+fn layer_bytes(l: &LayerW) -> usize {
+    [Some(&l.wq), Some(&l.wk), Some(&l.wv), Some(&l.wo), l.wg.as_ref(), Some(&l.wu), Some(&l.wd)]
+        .into_iter()
+        .flatten()
+        .map(|w| w.bytes())
+        .sum()
+}
+
+// ------------------------------------------------------------- engine
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Maximum concurrently decoding sequences.
+    pub max_lanes: usize,
+    /// Tokens per KV block.
+    pub block_tokens: usize,
+    /// KV pool capacity in blocks; `0` sizes the pool so `max_lanes`
+    /// full-length sequences always fit.
+    pub max_blocks: usize,
+    pub kv_quant: KvQuant,
+    /// Thread budget override (`None` = `KURTAIL_THREADS` / host cores).
+    pub threads: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_lanes: 4, block_tokens: 16, max_blocks: 0, kv_quant: KvQuant::Asym4, threads: None }
+    }
+}
+
+/// A finished request: the full token stream (prompt included) and its
+/// byte-decoded text.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub text: String,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub steps: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub admitted: u64,
+    pub retired: u64,
+    pub peak_lanes: usize,
+}
+
+struct Lane {
+    id: usize,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    n_new: usize,
+    produced: usize,
+    temp: f32,
+    rng: Rng,
+    seq: SeqKv,
+    /// Tokens already written to the KV cache.
+    pos: usize,
+    reserved_blocks: usize,
+}
+
+/// The continuous-batching serving engine.
+pub struct Engine {
+    model: ServeModel,
+    pool: KvPool,
+    sched: Scheduler,
+    lanes: Vec<Option<Lane>>,
+    done: Vec<Completion>,
+    next_id: usize,
+    committed_blocks: usize,
+    threads: usize,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(model: ServeModel, cfg: &ServeConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.max_lanes >= 1, "need at least one lane");
+        let meta = &model.meta;
+        let threads = cfg.threads.unwrap_or_else(num_threads).max(1);
+        let per_seq = meta.n_layers
+            * 2
+            * ((model.max_pos + cfg.block_tokens - 1) / cfg.block_tokens);
+        let max_blocks = if cfg.max_blocks > 0 { cfg.max_blocks } else { cfg.max_lanes * per_seq };
+        let pool = KvPool::new(cfg.kv_quant, meta.n_heads, meta.d_head, cfg.block_tokens, max_blocks);
+        Ok(Self {
+            lanes: (0..cfg.max_lanes).map(|_| None).collect(),
+            model,
+            pool,
+            sched: Scheduler::new(),
+            done: Vec::new(),
+            next_id: 0,
+            committed_blocks: 0,
+            threads,
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Queue a text prompt (byte-tokenized). Returns the request id.
+    pub fn submit(&mut self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<usize> {
+        self.submit_tokens(ByteTokenizer.encode(prompt), n_tokens, temp, seed)
+    }
+
+    /// Queue a pre-tokenized prompt. Returns the request id.
+    pub fn submit_tokens(&mut self, tokens: Vec<i32>, n_tokens: usize, temp: f32, seed: u64) -> Result<usize> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(n_tokens >= 1, "need at least one generated token");
+        let vocab = self.model.meta.vocab as i32;
+        anyhow::ensure!(
+            tokens.iter().all(|&t| t >= 0 && t < vocab),
+            "prompt token out of vocab range 0..{vocab}"
+        );
+        let total = tokens.len() + n_tokens;
+        anyhow::ensure!(
+            total <= self.model.max_pos,
+            "prompt+generation ({total}) exceeds cache size {}",
+            self.model.max_pos
+        );
+        let needed = self.pool.blocks_needed(self.model.meta.n_layers, total);
+        anyhow::ensure!(
+            needed <= self.pool.max_blocks,
+            "request needs {needed} KV blocks but the pool only has {}",
+            self.pool.max_blocks
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sched.push(QueuedRequest { id, tokens, n_new: n_tokens, temp, seed });
+        Ok(id)
+    }
+
+    /// Blocks the pool can still promise to new admissions.
+    fn uncommitted_blocks(&self) -> usize {
+        self.pool.max_blocks - self.committed_blocks
+    }
+
+    /// One engine iteration: retire finished lanes, admit + prefill
+    /// queued requests into free lanes, then decode one token on every
+    /// other live lane. Returns `false` once no work remains.
+    pub fn step(&mut self) -> Result<bool> {
+        self.retire_finished();
+
+        // admit into free lanes (FCFS, reservation-checked); freshly
+        // admitted lanes already produce their first token via prefill,
+        // so they sit out this iteration's decode batch
+        let mut admitted_now: Vec<usize> = Vec::new();
+        for slot in 0..self.lanes.len() {
+            if self.lanes[slot].is_some() {
+                continue;
+            }
+            let budget = self.uncommitted_blocks();
+            let (pool, meta) = (&self.pool, &self.model.meta);
+            let Some(req) = self
+                .sched
+                .pop_if(|r| pool.blocks_needed(meta.n_layers, r.total_tokens()) <= budget)
+            else {
+                break;
+            };
+            let reserved = self.pool.blocks_needed(self.model.meta.n_layers, req.total_tokens());
+            self.committed_blocks += reserved;
+            let lane = Lane {
+                id: req.id,
+                prompt_len: req.tokens.len(),
+                n_new: req.n_new,
+                produced: 0,
+                temp: req.temp,
+                rng: req.rng(),
+                seq: SeqKv::new(self.model.meta.n_layers),
+                pos: 0,
+                reserved_blocks: reserved,
+                tokens: req.tokens,
+            };
+            self.lanes[slot] = Some(lane);
+            self.prefill(slot)?;
+            admitted_now.push(slot);
+            self.stats.admitted += 1;
+        }
+
+        // one decode token for every live lane not admitted this step
+        let decode_slots: Vec<usize> = (0..self.lanes.len())
+            .filter(|&s| {
+                self.lanes[s].as_ref().map_or(false, |l| l.produced < l.n_new)
+                    && !admitted_now.contains(&s)
+            })
+            .collect();
+        if !decode_slots.is_empty() {
+            self.decode_batch(&decode_slots)?;
+        }
+
+        let live = self.lanes.iter().filter(|l| l.is_some()).count();
+        self.stats.peak_lanes = self.stats.peak_lanes.max(live);
+        self.stats.steps += 1;
+        self.retire_finished();
+        Ok(self.lanes.iter().any(|l| l.is_some()) || !self.sched.is_empty())
+    }
+
+    /// Run to completion; completions are returned in submission order.
+    pub fn run(&mut self) -> Result<Vec<Completion>> {
+        while self.step()? {}
+        let mut out = std::mem::take(&mut self.done);
+        out.sort_by_key(|c| c.id);
+        Ok(out)
+    }
+
+    fn retire_finished(&mut self) {
+        for slot in 0..self.lanes.len() {
+            let finished = self.lanes[slot].as_ref().map_or(false, |l| l.produced >= l.n_new);
+            if !finished {
+                continue;
+            }
+            let mut lane = self.lanes[slot].take().unwrap();
+            self.pool.release(&mut lane.seq);
+            self.committed_blocks -= lane.reserved_blocks;
+            self.stats.retired += 1;
+            self.done.push(Completion {
+                id: lane.id,
+                prompt_len: lane.prompt_len,
+                text: ByteTokenizer.decode(&lane.tokens),
+                tokens: lane.tokens,
+            });
+        }
+    }
+
+    /// Batched prompt prefill for one freshly admitted lane: all prompt
+    /// positions run through the forward as one `(T, d)` block, then the
+    /// last position's logits seed the first generated token.
+    fn prefill(&mut self, slot: usize) -> Result<()> {
+        let (rows, x) = {
+            let lane = self.lanes[slot].as_ref().unwrap();
+            let p = lane.prompt_len;
+            let rows: Vec<(usize, usize)> = (0..p).map(|t| (slot, t)).collect();
+            (rows, self.embed_rows(&lane.tokens[..p]))
+        };
+        let n = rows.len();
+        let logits = self.forward(&rows, x)?;
+        let vocab = self.model.meta.vocab;
+        let lane = self.lanes[slot].as_mut().unwrap();
+        lane.pos = lane.prompt_len;
+        let next = sample_token(&logits[(n - 1) * vocab..n * vocab], lane.temp, &mut lane.rng);
+        lane.tokens.push(next);
+        lane.produced = 1;
+        self.stats.prefill_tokens += n as u64;
+        self.stats.decode_tokens += 1;
+        Ok(())
+    }
+
+    /// One decode token for every slot in `slots`, batched `(N, d)`.
+    fn decode_batch(&mut self, slots: &[usize]) -> Result<()> {
+        let mut rows = Vec::with_capacity(slots.len());
+        let mut toks = Vec::with_capacity(slots.len());
+        for &s in slots {
+            let lane = self.lanes[s].as_ref().unwrap();
+            rows.push((s, lane.pos));
+            toks.push(lane.tokens[lane.pos]);
+        }
+        let x = self.embed_rows(&toks);
+        let logits = self.forward(&rows, x)?;
+        let vocab = self.model.meta.vocab;
+        for (i, &s) in slots.iter().enumerate() {
+            let lane = self.lanes[s].as_mut().unwrap();
+            let next = sample_token(&logits[i * vocab..(i + 1) * vocab], lane.temp, &mut lane.rng);
+            lane.pos += 1;
+            lane.tokens.push(next);
+            lane.produced += 1;
+            self.stats.decode_tokens += 1;
+        }
+        Ok(())
+    }
+
+    fn embed_rows(&self, tokens: &[i32]) -> Vec<f32> {
+        let d = self.model.meta.d_model;
+        let mut x = Vec::with_capacity(tokens.len() * d);
+        for &t in tokens {
+            x.extend_from_slice(self.model.embed.row(t as usize));
+        }
+        x
+    }
+
+    /// The batched transformer forward for `rows` = `(lane_slot, pos)`
+    /// pairs with activations `x` (`N × d`, row i belongs to `rows[i]`).
+    /// Appends this token's K/V to each row's paged cache and returns
+    /// logits (`N × vocab`). Mirrors `decode_step` op-for-op.
+    fn forward(&mut self, rows: &[(usize, usize)], mut x: Vec<f32>) -> Result<Vec<f32>> {
+        let model = &self.model;
+        let pool = &mut self.pool;
+        let lanes = &mut self.lanes;
+        let threads = self.threads;
+        let meta = &model.meta;
+        let (d, h, dh, ff) = (meta.d_model, meta.n_heads, meta.d_head, meta.d_ff);
+        let dh2 = dh / 2;
+        let n = rows.len();
+        assert_eq!(x.len(), n * d);
+        let quant = model.quant.as_ref();
+
+        let mut z = vec![0.0f32; n * d];
+        let mut qx = vec![0.0f32; n * d];
+        let mut kx = vec![0.0f32; n * d];
+        let mut vx = vec![0.0f32; n * d];
+        let mut attn = vec![0.0f32; n * d];
+        let mut rot = vec![0.0f32; n * d];
+        let mut mid = vec![0.0f32; n * ff];
+        let mut gate = vec![0.0f32; n * ff];
+
+        for (l, lw) in model.layers.iter().enumerate() {
+            // z = act_fq(rmsnorm(x, ln1)) — shared by wq/wk/wv
+            rmsnorm_gamma_rows(&x, &lw.ln1, &mut z, d, threads);
+            if let Some(q) = quant {
+                fq_rows(&mut z, d, &q.act, threads);
+            }
+            lw.wq.matmul_into(&z, n, &mut qx, threads);
+            lw.wk.matmul_into(&z, n, &mut kx, threads);
+            lw.wv.matmul_into(&z, n, &mut vx, threads);
+
+            // RoPE at each row's position, per head
+            for (i, &(_, pos)) in rows.iter().enumerate() {
+                let (cos, sin) =
+                    (&model.rope_cos[pos * dh2..(pos + 1) * dh2], &model.rope_sin[pos * dh2..(pos + 1) * dh2]);
+                for head in 0..h {
+                    let o = i * d + head * dh;
+                    apply_rope_row(&mut qx[o..o + dh], cos, sin);
+                    apply_rope_row(&mut kx[o..o + dh], cos, sin);
+                }
+            }
+            // online R3 (cancels in QᵀK, shapes the K cache distribution)
+            if let Some(q) = quant {
+                head_rotate(&mut qx, &mut rot, &q.r3, n * h, dh, threads);
+                head_rotate(&mut kx, &mut rot, &q.r3, n * h, dh, threads);
+            }
+            // append-quantize this token's K/V into the paged pool
+            for (i, &(slot, pos)) in rows.iter().enumerate() {
+                let lane = lanes[slot].as_mut().unwrap();
+                pool.append(&mut lane.seq, l, pos, &kx[i * d..(i + 1) * d], &vx[i * d..(i + 1) * d])?;
+            }
+            // Q activation quant happens after R3 (decode_step order)
+            if let Some(q) = quant {
+                fq_rows(&mut qx, dh, &q.act, threads);
+            }
+            // fused dequant-attention per row (rows own disjoint caches
+            // or, within a prefill, disjoint causal prefixes)
+            {
+                let pool_ref: &KvPool = pool;
+                let lanes_ref: &Vec<Option<Lane>> = lanes;
+                par::par_row_chunks_mut(&mut attn, d, 1, threads, |r0, chunk| {
+                    let mut scores = Vec::new();
+                    for (i, orow) in chunk.chunks_exact_mut(d).enumerate() {
+                        let (slot, pos) = rows[r0 + i];
+                        let seq = &lanes_ref[slot].as_ref().unwrap().seq;
+                        pool_ref.attend(seq, l, pos + 1, &qx[(r0 + i) * d..(r0 + i + 1) * d], orow, &mut scores);
+                    }
+                });
+            }
+            if let Some(q) = quant {
+                head_rotate(&mut attn, &mut rot, &q.r4, n * h, dh, threads);
+                fq_rows(&mut attn, d, &q.act, threads);
+            }
+            lw.wo.matmul_into(&attn, n, &mut z, threads);
+            add_assign(&mut x, &z);
+
+            // FFN
+            rmsnorm_gamma_rows(&x, &lw.ln2, &mut z, d, threads);
+            if let Some(q) = quant {
+                fq_rows(&mut z, d, &q.act, threads);
+            }
+            match &lw.wg {
+                Some(wg) => {
+                    // llama: silu(z·Wg) ⊙ (z·Wu)
+                    wg.matmul_into(&z, n, &mut gate, threads);
+                    lw.wu.matmul_into(&z, n, &mut mid, threads);
+                    for (m, &gv) in mid.iter_mut().zip(&gate) {
+                        *m = silu(gv) * *m;
+                    }
+                }
+                None => {
+                    // phi: gelu(z·Wu)
+                    lw.wu.matmul_into(&z, n, &mut mid, threads);
+                    for m in mid.iter_mut() {
+                        *m = gelu(*m);
+                    }
+                }
+            }
+            if let Some(q) = quant {
+                matmul_into_buf(&mid, &q.r5.data, &mut rot, n, ff, threads);
+                mid[..n * ff].copy_from_slice(&rot[..n * ff]);
+                fq_rows(&mut mid, ff, &q.act, threads);
+            }
+            lw.wd.matmul_into(&mid, n, &mut z, threads);
+            add_assign(&mut x, &z);
+        }
+
+        // final norm + fp head
+        rmsnorm_gamma_rows(&x, &model.lnf, &mut z, d, threads);
+        let vocab = meta.vocab;
+        let mut logits = vec![0.0f32; n * vocab];
+        matmul_into_threads(&z, &model.head_t.data, &mut logits, n, d, vocab, threads);
+        Ok(logits)
+    }
+
+    /// Pool bytes per stored token across all layers (K+V, scales
+    /// included) — the serve-side KV memory/token number.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.model.meta.n_layers * self.pool.bytes_per_token_layer()
+    }
+
+    /// Dense f32 cache bytes per stored token (`2·L·h·dh·4`) — what the
+    /// artifact decode path keeps per token.
+    pub fn dense_kv_bytes_per_token(&self) -> usize {
+        let m = &self.model.meta;
+        2 * m.n_layers * m.n_heads * m.d_head * 4
+    }
+
+    pub fn model(&self) -> &ServeModel {
+        &self.model
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn queued(&self) -> usize {
+        self.sched.len()
+    }
+}
+
+// ---------------------------------------------------------- primitives
+
+/// Greedy (temp ≤ 0) or temperature sampling over one logit row.
+pub fn sample_token(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+    if temp <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| ((l - max) / temp).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    let mut u = rng.uniform() * sum;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    (exps.len() - 1) as i32
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}
+
+/// `out = rmsnorm(x) · γ` per `width`-row (eps 1e-5, matching both
+/// `model.py::rmsnorm` and the host `rmsnorm_rows`).
+fn rmsnorm_gamma_rows(x: &[f32], gamma: &[f32], out: &mut [f32], width: usize, threads: usize) {
+    assert_eq!(gamma.len(), width);
+    assert_eq!(x.len(), out.len());
+    par::par_row_chunks_mut(out, width, 16, threads, |r0, chunk| {
+        for (i, orow) in chunk.chunks_exact_mut(width).enumerate() {
+            let row = &x[(r0 + i) * width..(r0 + i + 1) * width];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / width as f32;
+            let inv = 1.0 / (ms + 1e-5).sqrt();
+            for ((o, &v), &g) in orow.iter_mut().zip(row).zip(gamma) {
+                *o = v * inv * g;
+            }
+        }
+    });
+}
+
+/// RoPE on one head row at a fixed position: each even/odd pair
+/// `(x[2i], x[2i+1])` rotates by angle `pos·base^(-2i/dh)` — the exact
+/// interleaving of `model.py::apply_rope`.
+#[inline]
+fn apply_rope_row(row: &mut [f32], cos: &[f32], sin: &[f32]) {
+    debug_assert_eq!(row.len(), 2 * cos.len());
+    for i2 in 0..cos.len() {
+        let (c, s) = (cos[i2], sin[i2]);
+        let x1 = row[2 * i2];
+        let x2 = row[2 * i2 + 1];
+        row[2 * i2] = x1 * c - x2 * s;
+        row[2 * i2 + 1] = x1 * s + x2 * c;
+    }
+}
+
+/// In-place per-row symmetric fake-quant (`fake_quant_rows` math).
+fn fq_rows(data: &mut [f32], width: usize, s: &QuantScheme, threads: usize) {
+    par::par_row_chunks_mut(data, width, 16, threads, |_r0, chunk| {
+        let mut buf = Vec::with_capacity(width);
+        for row in chunk.chunks_exact_mut(width) {
+            let scale = row_scale_buf(row, s, &mut buf);
+            fq_row_sym(row, scale, s);
+        }
+    });
+}
+
+/// Rotate `rows` rows of `dh` in place: `x ← x · R` (via scratch).
+fn head_rotate(x: &mut Vec<f32>, scratch: &mut Vec<f32>, r: &Tensor, rows: usize, dh: usize, threads: usize) {
+    matmul_into_buf(&x[..rows * dh], &r.data, scratch, rows, dh, threads);
+    x[..rows * dh].copy_from_slice(&scratch[..rows * dh]);
+}
+
+/// `scratch[..m*k] = x @ R` for a square `k×k` rotation (overwrites).
+fn matmul_into_buf(x: &[f32], r: &[f32], scratch: &mut Vec<f32>, m: usize, k: usize, threads: usize) {
+    if scratch.len() < m * k {
+        scratch.resize(m * k, 0.0);
+    }
+    scratch[..m * k].fill(0.0);
+    matmul_into_threads(x, r, &mut scratch[..m * k], m, k, k, threads);
+}
+
+fn add_assign(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+#[inline]
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+#[inline]
+fn gelu(v: f32) -> f32 {
+    // tanh approximation, matching model.py::_gelu
+    0.5 * v * (1.0 + (0.7978845608 * (v + 0.044715 * v * v * v)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::fake_llama_meta;
+    use crate::tensor::hadamard::random_hadamard;
+
+    fn fp_model() -> ServeModel {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(0);
+        let params = Params::init(&meta, &mut rng);
+        ServeModel::from_params(&params, None).unwrap()
+    }
+
+    fn quant_model() -> ServeModel {
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(0);
+        let params = Params::init(&meta, &mut rng);
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, &mut rng),
+            random_hadamard(meta.d_head, &mut rng),
+            random_hadamard(meta.d_ff, &mut rng),
+        );
+        ServeModel::from_params(&params, Some(spec)).unwrap()
+    }
+
+    fn requests() -> Vec<(Vec<i32>, usize)> {
+        vec![
+            (vec![1, 2, 3], 4),
+            (vec![7], 5),
+            (vec![4, 5], 3),
+            (vec![9, 1, 0, 2], 2),
+        ]
+    }
+
+    fn run_with(model: &ServeModel, kv: KvQuant, lanes: usize, threads: usize) -> Vec<Completion> {
+        let cfg = ServeConfig {
+            max_lanes: lanes,
+            block_tokens: 4,
+            kv_quant: kv,
+            threads: Some(threads),
+            ..ServeConfig::default()
+        };
+        let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+        for (toks, n) in requests() {
+            eng.submit_tokens(toks, n, 0.0, 7).unwrap();
+        }
+        eng.run().unwrap()
+    }
+
+    #[test]
+    fn fp_engine_completes_all_requests() {
+        let model = fp_model();
+        let done = run_with(&model, KvQuant::Fp, 2, 2);
+        assert_eq!(done.len(), 4);
+        for (c, (toks, n)) in done.iter().zip(requests()) {
+            assert_eq!(c.prompt_len, toks.len());
+            assert_eq!(c.tokens.len(), toks.len() + n);
+            assert_eq!(&c.tokens[..toks.len()], &toks[..]);
+            let vocab = model.meta.vocab as i32;
+            assert!(c.tokens.iter().all(|&t| t >= 0 && t < vocab));
+        }
+    }
+
+    #[test]
+    fn streams_invariant_to_lanes_and_threads() {
+        for model in [fp_model(), quant_model()] {
+            let kv = if model.is_quantized() { KvQuant::Asym4 } else { KvQuant::Fp };
+            let base = run_with(&model, kv, 1, 1);
+            for (lanes, threads) in [(2usize, 1usize), (4, 4), (3, 8)] {
+                let got = run_with(&model, kv, lanes, threads);
+                for (a, b) in base.iter().zip(&got) {
+                    assert_eq!(a.tokens, b.tokens, "lanes={lanes} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn continuous_batching_admits_and_retires_without_draining() {
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(2),
+            ..ServeConfig::default()
+        };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        for (toks, n) in requests() {
+            eng.submit_tokens(toks, n, 0.0, 7).unwrap();
+        }
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 4);
+        assert_eq!(eng.stats.admitted, 4);
+        assert_eq!(eng.stats.retired, 4);
+        assert_eq!(eng.stats.peak_lanes, 2, "both lanes should have been busy");
+        // every block returned to the pool
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+        // prefill was batched: prompt tokens processed without decode steps
+        assert_eq!(eng.stats.prefill_tokens, 3 + 1 + 2 + 4);
+        assert_eq!(eng.stats.decode_tokens, 4 + 5 + 3 + 2);
+    }
+
+    #[test]
+    fn sampling_with_temperature_stays_in_vocab() {
+        let model = fp_model();
+        let cfg = ServeConfig { threads: Some(1), kv_quant: KvQuant::Fp, ..ServeConfig::default() };
+        let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+        eng.submit_tokens(vec![3, 4], 5, 0.9, 11).unwrap();
+        let done = eng.run().unwrap();
+        assert_eq!(done[0].tokens.len(), 7);
+        assert!(done[0].tokens.iter().all(|&t| (t as usize) < model.meta.vocab));
+    }
+
+    #[test]
+    fn submit_validation() {
+        let model = fp_model();
+        let mut eng = Engine::new(model, &ServeConfig::default()).unwrap();
+        assert!(eng.submit_tokens(vec![], 2, 0.0, 0).is_err(), "empty prompt");
+        assert!(eng.submit_tokens(vec![1], 0, 0.0, 0).is_err(), "zero tokens");
+        assert!(eng.submit_tokens(vec![99], 2, 0.0, 0).is_err(), "token out of vocab");
+        assert!(eng.submit_tokens(vec![1; 7], 4, 0.0, 0).is_err(), "exceeds cache");
+        assert!(eng.submit_tokens(vec![1, 2], 3, 0.0, 0).is_ok());
+    }
+
+    #[test]
+    fn quant_model_packs_weights() {
+        let (fp, q) = (fp_model(), quant_model());
+        assert!(q.weight_bytes() * 4 < fp.weight_bytes(), "{} vs {}", q.weight_bytes(), fp.weight_bytes());
+        assert_eq!(fp.weight_bytes(), fp.dense_weight_bytes());
+        assert_eq!(q.dense_weight_bytes(), fp.dense_weight_bytes());
+    }
+
+    #[test]
+    fn greedy_sampling_helpers() {
+        let logits = vec![0.0, 3.0, 1.0];
+        assert_eq!(argmax(&logits), 1);
+        let mut rng = Rng::new(0);
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+}

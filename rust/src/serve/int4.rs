@@ -1,0 +1,301 @@
+//! Packed INT4 weight storage + fused dequant-GEMV/GEMM.
+//!
+//! A weight matrix is stored `(k_in, n_out)` like everywhere else in the
+//! coordinator, but here the 4-bit codes are *materialized*: two codes
+//! per byte, column-major (one output channel's `⌈k/2⌉` bytes are
+//! contiguous), with one f32 scale per `(column, row-group)`. With
+//! `group = None` in the [`QuantScheme`] the grid is exactly the RTN
+//! per-output-channel grid of [`crate::quant::rtn::rtn_quantize`] —
+//! `pack → unpack` reproduces its output bitwise (pinned by tests and
+//! `tests/props.rs`).
+//!
+//! The matmul kernel never materializes the dequantized matrix: each
+//! thread owns a contiguous range of output *columns*
+//! ([`crate::util::par::par_row_chunks_mut`] over the transposed output),
+//! unpacks one column's codes into a small i8 buffer, and accumulates
+//! `Σ_g scale_g · Σ_{i∈g} x_i·q_i` per lane. Per output element the
+//! accumulation order is fixed (ascending rows within ascending groups),
+//! so results are bitwise identical across thread counts *and* across
+//! batch sizes (lane `i` of a 16-lane GEMM equals the 1-lane GEMV on the
+//! same row) — the same determinism contract as the PR-1 kernels.
+
+use crate::config::QuantScheme;
+use crate::tensor::Tensor;
+use crate::util::par::{self, num_threads};
+
+/// Nibble-packed INT4 weight `(k, n)` with per-(column, group) scales.
+#[derive(Clone, Debug)]
+pub struct Int4Weight {
+    pub k: usize,
+    pub n: usize,
+    /// Input rows per scale group (== `k` when the scheme has no groups).
+    pub group: usize,
+    /// `⌈k / group⌉` scale groups per column.
+    pub n_groups: usize,
+    /// `n × ⌈k/2⌉` bytes, column-major; even row = low nibble. A code
+    /// nibble is the signed level plus 8 (levels live in [-7, 7]).
+    packed: Vec<u8>,
+    /// `n × n_groups` scales, column-major (`scales[j·n_groups + g]`).
+    scales: Vec<f32>,
+}
+
+impl Int4Weight {
+    /// Quantize + pack a 2-D `(k, n)` weight on the scheme's grid. This
+    /// *is* the RTN weight quantizer (absmax grid, round-to-nearest) —
+    /// packing already-RTN-quantized weights is a fixpoint.
+    pub fn pack(w: &Tensor, s: &QuantScheme) -> Int4Weight {
+        assert_eq!(w.rank(), 2, "Int4Weight::pack needs a 2-D weight");
+        assert_eq!(s.bits, 4, "Int4Weight stores 4-bit codes");
+        assert!(s.symmetric, "Int4Weight uses the symmetric grid");
+        let (k, n) = (w.shape[0], w.shape[1]);
+        assert!(k > 0 && n > 0, "empty weight");
+        let group = s.group.unwrap_or(k).max(1).min(k);
+        let n_groups = (k + group - 1) / group;
+        let bpc = (k + 1) / 2;
+        let qmax = s.qmax();
+        // pass 1: per-(column, group) absmax scales, parallel over columns
+        let mut scales = vec![0.0f32; n * n_groups];
+        par::par_row_chunks_mut(&mut scales, n_groups, 16, num_threads(), |j0, chunk| {
+            for (jj, srow) in chunk.chunks_exact_mut(n_groups).enumerate() {
+                let j = j0 + jj;
+                for (g, sc) in srow.iter_mut().enumerate() {
+                    let i0 = g * group;
+                    let i1 = (i0 + group).min(k);
+                    let mut amax = 0.0f32;
+                    for i in i0..i1 {
+                        amax = amax.max(w.data[i * n + j].abs());
+                    }
+                    *sc = amax.max(1e-8) / qmax;
+                }
+            }
+        });
+        // pass 2: quantize + pack on those grids, parallel over columns
+        let mut packed = vec![0u8; n * bpc];
+        par::par_row_chunks_mut(&mut packed, bpc, 8, num_threads(), |j0, chunk| {
+            for (jj, col) in chunk.chunks_exact_mut(bpc).enumerate() {
+                let j = j0 + jj;
+                for g in 0..n_groups {
+                    let scale = scales[j * n_groups + g];
+                    let i0 = g * group;
+                    let i1 = (i0 + group).min(k);
+                    for i in i0..i1 {
+                        let q = (w.data[i * n + j] / scale).round().clamp(-qmax, qmax);
+                        let nib = (q as i32 + 8) as u8;
+                        if i % 2 == 0 {
+                            col[i / 2] = (col[i / 2] & 0xF0) | nib;
+                        } else {
+                            col[i / 2] = (col[i / 2] & 0x0F) | (nib << 4);
+                        }
+                    }
+                }
+            }
+        });
+        Int4Weight { k, n, group, n_groups, packed, scales }
+    }
+
+    /// Signed level of element `(i, j)`.
+    #[inline]
+    fn code(&self, i: usize, j: usize) -> i32 {
+        let b = self.packed[j * ((self.k + 1) / 2) + i / 2];
+        let nib = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+        nib as i32 - 8
+    }
+
+    /// Dequantize back to a dense `(k, n)` tensor (tests / fallbacks).
+    pub fn unpack(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.k, self.n]);
+        for j in 0..self.n {
+            for i in 0..self.k {
+                let scale = self.scales[j * self.n_groups + i / self.group];
+                out.data[i * self.n + j] = self.code(i, j) as f32 * scale;
+            }
+        }
+        out
+    }
+
+    /// Packed storage footprint (codes + scales), in bytes.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+
+    /// Dense f32 footprint of the same matrix, in bytes.
+    pub fn dense_bytes(&self) -> usize {
+        self.k * self.n * 4
+    }
+
+    /// Fused dequant-GEMM: `out = x @ W̃` for `x` of `m` rows of `k`
+    /// f32s. **Overwrites** `out` (`m × n`) — unlike
+    /// [`crate::tensor::matmul::matmul_into`], which accumulates.
+    pub fn matmul_into(&self, x: &[f32], m: usize, out: &mut [f32], threads: usize) {
+        assert_eq!(x.len(), m * self.k, "int4 matmul: lhs size");
+        assert_eq!(out.len(), m * self.n, "int4 matmul: out size");
+        if m == 0 {
+            return;
+        }
+        let (k, n, group, ng) = (self.k, self.n, self.group, self.n_groups);
+        let bpc = (k + 1) / 2;
+        if m == 1 {
+            // GEMV: the output row *is* the column axis — no transpose
+            par::par_row_chunks_mut(out, 1, 32, threads, |j0, chunk| {
+                let mut qbuf = vec![0i8; k];
+                for (jj, o) in chunk.iter_mut().enumerate() {
+                    let j = j0 + jj;
+                    unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
+                    *o = dot_col(x, &qbuf, &self.scales[j * ng..(j + 1) * ng], group);
+                }
+            });
+            return;
+        }
+        // GEMM: compute transposed (n × m), parallel over columns, then
+        // flip into the row-major output. Per (lane, column) the math is
+        // identical to the GEMV path above.
+        let mut out_t = vec![0.0f32; n * m];
+        par::par_row_chunks_mut(&mut out_t, m, 8, threads, |j0, chunk| {
+            let mut qbuf = vec![0i8; k];
+            for (jj, orow) in chunk.chunks_exact_mut(m).enumerate() {
+                let j = j0 + jj;
+                unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
+                let scales = &self.scales[j * ng..(j + 1) * ng];
+                for (lane, o) in orow.iter_mut().enumerate() {
+                    *o = dot_col(&x[lane * k..(lane + 1) * k], &qbuf, scales, group);
+                }
+            }
+        });
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] = out_t[j * m + i];
+            }
+        }
+    }
+
+    /// Tensor wrapper over [`Self::matmul_into`] (keeps leading shape).
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        self.matmul_with_threads(x, num_threads())
+    }
+
+    /// [`Self::matmul`] with an explicit thread budget (tests / engine).
+    pub fn matmul_with_threads(&self, x: &Tensor, threads: usize) -> Tensor {
+        let (m, kx) = x.as_2d();
+        assert_eq!(kx, self.k, "int4 matmul inner dim: {kx} vs {}", self.k);
+        let mut out = Tensor::zeros(&[m, self.n]);
+        self.matmul_into(&x.data, m, &mut out.data, threads);
+        let mut shape = x.shape.clone();
+        *shape.last_mut().unwrap() = self.n;
+        out.reshape(&shape)
+    }
+}
+
+/// Unpack one column's nibbles into signed levels.
+#[inline]
+fn unpack_col(col: &[u8], k: usize, qbuf: &mut [i8]) {
+    for i in 0..k {
+        let b = col[i / 2];
+        let nib = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+        qbuf[i] = nib as i8 - 8;
+    }
+}
+
+/// `Σ_g scale_g · Σ_{i∈g} x_i·q_i` with a fixed ascending order.
+#[inline]
+fn dot_col(x: &[f32], qbuf: &[i8], scales: &[f32], group: usize) -> f32 {
+    let k = x.len();
+    let mut acc = 0.0f32;
+    for (g, &scale) in scales.iter().enumerate() {
+        let i0 = g * group;
+        let i1 = (i0 + group).min(k);
+        let mut part = 0.0f32;
+        for i in i0..i1 {
+            part += x[i] * qbuf[i] as f32;
+        }
+        acc += scale * part;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::rtn_quantize;
+    use crate::tensor::matmul::rows_matmul;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_matches_rtn_bitwise() {
+        let mut rng = Rng::new(0);
+        for (k, n) in [(7, 3), (16, 5), (33, 4), (1, 1), (64, 48)] {
+            let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+            let s = QuantScheme::weight4();
+            let got = Int4Weight::pack(&w, &s).unpack();
+            let want = rtn_quantize(&w, &s);
+            assert_eq!(got.data, want.data, "{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn grouped_error_bounded_per_group() {
+        let mut rng = Rng::new(1);
+        let (k, n, g) = (33, 6, 8);
+        let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(g));
+        assert_eq!(iw.n_groups, 5); // ceil(33/8)
+        let deq = iw.unpack();
+        for j in 0..n {
+            for gi in 0..iw.n_groups {
+                let i0 = gi * g;
+                let i1 = (i0 + g).min(k);
+                let amax =
+                    (i0..i1).fold(0.0f32, |a, i| a.max(w.data[i * n + j].abs()));
+                let step = amax.max(1e-8) / 7.0;
+                for i in i0..i1 {
+                    let e = (deq.data[i * n + j] - w.data[i * n + j]).abs();
+                    assert!(e <= step / 2.0 + 1e-6, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_matches_dense_on_unpacked() {
+        let mut rng = Rng::new(2);
+        for (m, k, n, g) in [(1, 33, 7, Some(8)), (5, 16, 9, None), (16, 40, 12, Some(16))] {
+            let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+            let s = QuantScheme { group: g, ..QuantScheme::weight4() };
+            let iw = Int4Weight::pack(&w, &s);
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let got = iw.matmul(&x);
+            let want = rows_matmul(&x, &iw.unpack());
+            assert!(got.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_bitwise_across_threads_and_batch() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[33, 17], 0.3, &mut rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(8));
+        let x = Tensor::randn(&[9, 33], 1.0, &mut rng);
+        let batched = iw.matmul_with_threads(&x, 1);
+        for threads in [2usize, 8] {
+            assert_eq!(iw.matmul_with_threads(&x, threads).data, batched.data, "t={threads}");
+        }
+        // lane i of the batch == the single-row GEMV on the same row
+        for i in 0..9 {
+            let row = Tensor::new(x.row(i).to_vec(), vec![1, 33]);
+            let one = iw.matmul_with_threads(&row, 4);
+            assert_eq!(one.data, batched.row(i), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[64, 32], 0.3, &mut rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4());
+        assert_eq!(iw.bytes(), 32 * 32 + 32 * 4); // nibbles + 1 scale/col
+        assert_eq!(iw.dense_bytes(), 64 * 32 * 4);
+        // odd k pads the last nibble
+        let w2 = Tensor::randn(&[7, 2], 0.3, &mut rng);
+        let iw2 = Int4Weight::pack(&w2, &QuantScheme::weight4());
+        assert_eq!(iw2.bytes(), 2 * 4 + 2 * 4);
+    }
+}

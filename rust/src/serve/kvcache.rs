@@ -1,0 +1,379 @@
+//! Paged 4-bit KV cache: a block-pool allocator over fixed-size token
+//! blocks, replacing the dense `[l, b, tmax, h, dh]` f32 caches of the
+//! artifact decode path on the serving side.
+//!
+//! * **Blocks.** The pool owns `max_blocks` fixed-size blocks of
+//!   `block_tokens` tokens × `h` heads. A sequence holds one block list
+//!   per (layer, K|V); blocks are claimed on first write into a fresh
+//!   token slot and returned wholesale on retirement, so concurrent
+//!   sequences of different lengths share the pool with no copying.
+//! * **Scales.** Quantization is per-token per-head asymmetric — one
+//!   `(lo, step)` f32 pair per written `dh`-row, the exact semantics of
+//!   [`crate::quant::fakequant::fake_quant_rows_asym`] (and of the
+//!   `kv_fake_quant` the AOT decode graphs simulate): `step = (hi −
+//!   lo).max(1e-8)/15`, codes in `[0, 15]`, dequant `q·step + lo`. The
+//!   pool's dequantized reads therefore reproduce bit-for-bit what the
+//!   quant decode artifact keeps in its dense f32 cache.
+//! * **Append-quantize / fused read.** [`KvPool::append`] quantizes on
+//!   write; [`KvPool::attend`] runs the whole attention read
+//!   (scores → softmax → weighted V sum) against the packed bytes,
+//!   dequantizing on the fly — the dense K/V for a sequence never
+//!   exists in memory. Per (head, element) the accumulation order is
+//!   fixed ascending over cache positions, so reads are bitwise
+//!   deterministic regardless of thread count or lane batching.
+//! * **Fp mode.** [`KvQuant::Fp`] stores raw f32 rows in the same block
+//!   structure — the apples-to-apples baseline for `BENCH_serve.json`'s
+//!   bytes/token comparison and the exactness mode of the serve engine.
+
+use anyhow::Result;
+
+use crate::config::KvQuant;
+
+/// 4-bit asymmetric grid size (2^4 − 1 levels).
+const LEVELS: f32 = 15.0;
+
+/// One sequence's handle into the pool: per-layer block lists for K and
+/// V plus the per-layer append cursor (all layers advance in lockstep
+/// during a decode step, so the cursors only differ transiently).
+#[derive(Clone, Debug, Default)]
+pub struct SeqKv {
+    k_blocks: Vec<Vec<u32>>,
+    v_blocks: Vec<Vec<u32>>,
+    appended: Vec<usize>,
+}
+
+impl SeqKv {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            k_blocks: vec![Vec::new(); n_layers],
+            v_blocks: vec![Vec::new(); n_layers],
+            appended: vec![0; n_layers],
+        }
+    }
+
+    /// Tokens appended at `layer` so far.
+    pub fn len(&self, layer: usize) -> usize {
+        self.appended[layer]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.appended.iter().all(|&n| n == 0)
+    }
+
+    /// Blocks currently held across all layers (K + V).
+    pub fn blocks_held(&self) -> usize {
+        self.k_blocks.iter().chain(&self.v_blocks).map(|b| b.len()).sum()
+    }
+}
+
+/// The shared block pool. One pool serves every layer of every live
+/// sequence; block ids index fixed strides into the backing buffers.
+pub struct KvPool {
+    pub mode: KvQuant,
+    pub h: usize,
+    pub dh: usize,
+    pub block_tokens: usize,
+    pub max_blocks: usize,
+    /// bytes per packed (token, head) row: ⌈dh/2⌉ (4-bit mode).
+    bpr: usize,
+    /// packed codes, `max_blocks × block_tokens·h·bpr` (4-bit mode).
+    data: Vec<u8>,
+    /// `(lo, step)` per (block, token, head) (4-bit mode).
+    scales: Vec<f32>,
+    /// raw rows, `max_blocks × block_tokens·h·dh` (fp mode).
+    fdata: Vec<f32>,
+    free: Vec<u32>,
+}
+
+impl KvPool {
+    pub fn new(mode: KvQuant, h: usize, dh: usize, block_tokens: usize, max_blocks: usize) -> Self {
+        assert!(h > 0 && dh > 0 && block_tokens > 0 && max_blocks > 0);
+        let bpr = (dh + 1) / 2;
+        let (data, scales, fdata) = match mode {
+            KvQuant::Asym4 => (
+                vec![0u8; max_blocks * block_tokens * h * bpr],
+                vec![0.0f32; max_blocks * block_tokens * h * 2],
+                Vec::new(),
+            ),
+            KvQuant::Fp => (Vec::new(), Vec::new(), vec![0.0f32; max_blocks * block_tokens * h * dh]),
+        };
+        let free = (0..max_blocks as u32).rev().collect();
+        Self { mode, h, dh, block_tokens, max_blocks, bpr, data, scales, fdata, free }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks a sequence of `total_tokens` will claim across `n_layers`
+    /// (K and V) — the scheduler's admission currency.
+    pub fn blocks_needed(&self, n_layers: usize, total_tokens: usize) -> usize {
+        n_layers * 2 * ((total_tokens + self.block_tokens - 1) / self.block_tokens)
+    }
+
+    /// Pool bytes consumed per stored token per layer (K + V, including
+    /// scale metadata).
+    pub fn bytes_per_token_layer(&self) -> usize {
+        match self.mode {
+            KvQuant::Asym4 => 2 * (self.h * self.bpr + self.h * 2 * 4),
+            KvQuant::Fp => 2 * self.h * self.dh * 4,
+        }
+    }
+
+    fn alloc(&mut self) -> Result<u32> {
+        self.free.pop().ok_or_else(|| anyhow::anyhow!("kv pool exhausted ({} blocks)", self.max_blocks))
+    }
+
+    /// Append-quantize one token's K and V rows (`h·dh` f32s each) for
+    /// `layer` at position `pos`. Positions must be appended in order.
+    pub fn append(&mut self, seq: &mut SeqKv, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        assert_eq!(k_row.len(), self.h * self.dh);
+        assert_eq!(v_row.len(), self.h * self.dh);
+        anyhow::ensure!(pos == seq.appended[layer], "kv append out of order: pos {pos} != cursor {}", seq.appended[layer]);
+        if pos % self.block_tokens == 0 {
+            // claim the K/V pair atomically so a failure leaks nothing
+            anyhow::ensure!(self.free.len() >= 2, "kv pool exhausted ({} blocks)", self.max_blocks);
+            let kb = self.alloc()?;
+            let vb = self.alloc()?;
+            seq.k_blocks[layer].push(kb);
+            seq.v_blocks[layer].push(vb);
+        }
+        let kb = seq.k_blocks[layer][pos / self.block_tokens];
+        let vb = seq.v_blocks[layer][pos / self.block_tokens];
+        let tb = pos % self.block_tokens;
+        self.write_token(kb, tb, k_row);
+        self.write_token(vb, tb, v_row);
+        seq.appended[layer] = pos + 1;
+        Ok(())
+    }
+
+    fn write_token(&mut self, blk: u32, tb: usize, row_heads: &[f32]) {
+        let blk = blk as usize;
+        match self.mode {
+            KvQuant::Fp => {
+                let base = (blk * self.block_tokens + tb) * self.h * self.dh;
+                self.fdata[base..base + self.h * self.dh].copy_from_slice(row_heads);
+            }
+            KvQuant::Asym4 => {
+                for head in 0..self.h {
+                    let row = &row_heads[head * self.dh..(head + 1) * self.dh];
+                    // exactly fake_quant_rows_asym's per-row grid
+                    let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let step = (hi - lo).max(1e-8) / LEVELS;
+                    let sbase = (blk * self.block_tokens + tb) * self.h * 2 + head * 2;
+                    self.scales[sbase] = lo;
+                    self.scales[sbase + 1] = step;
+                    let base = ((blk * self.block_tokens + tb) * self.h + head) * self.bpr;
+                    for (e, &v) in row.iter().enumerate() {
+                        let q = (((v - lo) / step).round().clamp(0.0, LEVELS)) as u8;
+                        let byte = &mut self.data[base + e / 2];
+                        if e % 2 == 0 {
+                            *byte = (*byte & 0xF0) | q;
+                        } else {
+                            *byte = (*byte & 0x0F) | (q << 4);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dequantized element `e` of head `head` at cache position `t`.
+    #[inline]
+    fn read(&self, blocks: &[u32], t: usize, head: usize, e: usize) -> f32 {
+        let blk = blocks[t / self.block_tokens] as usize;
+        let tb = t % self.block_tokens;
+        match self.mode {
+            KvQuant::Fp => self.fdata[((blk * self.block_tokens + tb) * self.h + head) * self.dh + e],
+            KvQuant::Asym4 => {
+                let b = self.data[((blk * self.block_tokens + tb) * self.h + head) * self.bpr + e / 2];
+                let q = if e % 2 == 0 { b & 0x0F } else { b >> 4 };
+                let sbase = (blk * self.block_tokens + tb) * self.h * 2 + head * 2;
+                q as f32 * self.scales[sbase + 1] + self.scales[sbase]
+            }
+        }
+    }
+
+    /// One (token, head) row dequantized (tests / debugging).
+    pub fn read_k_row(&self, seq: &SeqKv, layer: usize, t: usize, head: usize) -> Vec<f32> {
+        (0..self.dh).map(|e| self.read(&seq.k_blocks[layer], t, head, e)).collect()
+    }
+
+    pub fn read_v_row(&self, seq: &SeqKv, layer: usize, t: usize, head: usize) -> Vec<f32> {
+        (0..self.dh).map(|e| self.read(&seq.v_blocks[layer], t, head, e)).collect()
+    }
+
+    /// Fused dequant-attention over the first `len` cached positions of
+    /// `layer`: `out[h·dh] = softmax(q·Kᵀ/√dh)·V`, reading K and V
+    /// straight from the packed blocks. `scores` is a caller scratch
+    /// buffer (resized to `len`).
+    pub fn attend(&self, seq: &SeqKv, layer: usize, len: usize, q: &[f32], out: &mut [f32], scores: &mut Vec<f32>) {
+        assert_eq!(q.len(), self.h * self.dh);
+        assert_eq!(out.len(), self.h * self.dh);
+        assert!(len >= 1 && len <= seq.appended[layer], "attend len {len} vs cached {}", seq.appended[layer]);
+        let inv_sqrt = 1.0 / (self.dh as f32).sqrt();
+        let kb = &seq.k_blocks[layer];
+        let vb = &seq.v_blocks[layer];
+        scores.resize(len, 0.0);
+        for head in 0..self.h {
+            let qh = &q[head * self.dh..(head + 1) * self.dh];
+            for (t, s) in scores.iter_mut().enumerate() {
+                let mut dot = 0.0f32;
+                for (e, &qv) in qh.iter().enumerate() {
+                    dot += qv * self.read(kb, t, head, e);
+                }
+                *s = dot * inv_sqrt;
+            }
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut total = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                total += *s;
+            }
+            for s in scores.iter_mut() {
+                *s /= total;
+            }
+            let oh = &mut out[head * self.dh..(head + 1) * self.dh];
+            oh.fill(0.0);
+            for (t, &p) in scores.iter().enumerate() {
+                for (e, o) in oh.iter_mut().enumerate() {
+                    *o += p * self.read(vb, t, head, e);
+                }
+            }
+        }
+    }
+
+    /// Return every block a sequence holds to the free list.
+    pub fn release(&mut self, seq: &mut SeqKv) {
+        for list in seq.k_blocks.iter_mut().chain(seq.v_blocks.iter_mut()) {
+            self.free.extend(list.drain(..));
+        }
+        for a in &mut seq.appended {
+            *a = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantScheme;
+    use crate::quant::fakequant::fake_quant_rows_asym;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn fill_seq(pool: &mut KvPool, seq: &mut SeqKv, layer: usize, rows: &[(Vec<f32>, Vec<f32>)]) {
+        for (t, (k, v)) in rows.iter().enumerate() {
+            pool.append(seq, layer, t, k, v).unwrap();
+        }
+    }
+
+    fn rand_rows(n: usize, w: usize, rng: &mut Rng) -> Vec<(Vec<f32>, Vec<f32>)> {
+        (0..n)
+            .map(|_| {
+                (
+                    (0..w).map(|_| rng.normal()).collect(),
+                    (0..w).map(|_| rng.normal()).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_matches_fake_quant_asym() {
+        let mut rng = Rng::new(0);
+        let (h, dh, bt) = (2, 5, 3); // odd dh pads nibbles; bt=3 hits boundaries
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 16);
+        let mut seq = SeqKv::new(1);
+        let rows = rand_rows(8, h * dh, &mut rng);
+        fill_seq(&mut pool, &mut seq, 0, &rows);
+        assert_eq!(seq.len(0), 8);
+        for (t, (k, _)) in rows.iter().enumerate() {
+            let want = fake_quant_rows_asym(
+                &Tensor::new(k.clone(), vec![h, dh]),
+                &QuantScheme::kv4(),
+            );
+            for head in 0..h {
+                assert_eq!(pool.read_k_row(&seq, 0, t, head), want.row(head), "t={t} h={head}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_mode_is_exact() {
+        let mut rng = Rng::new(1);
+        let (h, dh, bt) = (2, 4, 4);
+        let mut pool = KvPool::new(KvQuant::Fp, h, dh, bt, 8);
+        let mut seq = SeqKv::new(1);
+        let rows = rand_rows(6, h * dh, &mut rng);
+        fill_seq(&mut pool, &mut seq, 0, &rows);
+        for (t, (_, v)) in rows.iter().enumerate() {
+            for head in 0..h {
+                assert_eq!(pool.read_v_row(&seq, 0, t, head), v[head * dh..(head + 1) * dh]);
+            }
+        }
+    }
+
+    #[test]
+    fn attend_matches_naive_on_dequantized_cache() {
+        let mut rng = Rng::new(2);
+        let (h, dh, bt) = (2, 6, 3);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 16);
+        let mut seq = SeqKv::new(1);
+        let rows = rand_rows(7, h * dh, &mut rng);
+        fill_seq(&mut pool, &mut seq, 0, &rows);
+        let q: Vec<f32> = (0..h * dh).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; h * dh];
+        let mut scratch = Vec::new();
+        pool.attend(&seq, 0, 7, &q, &mut out, &mut scratch);
+        for head in 0..h {
+            let qh = &q[head * dh..(head + 1) * dh];
+            let scores: Vec<f32> = (0..7)
+                .map(|t| {
+                    let kr = pool.read_k_row(&seq, 0, t, head);
+                    qh.iter().zip(&kr).map(|(a, b)| a * b).sum::<f32>() / (dh as f32).sqrt()
+                })
+                .collect();
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - max).exp()).collect();
+            let total: f32 = exps.iter().sum();
+            for e in 0..dh {
+                let want: f32 = (0..7)
+                    .map(|t| exps[t] / total * pool.read_v_row(&seq, 0, t, head)[e])
+                    .sum();
+                assert!((out[head * dh + e] - want).abs() < 1e-4, "h={head} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_allocates_and_releases() {
+        let (h, dh, bt) = (1, 4, 2);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 6);
+        assert_eq!(pool.blocks_needed(1, 5), 2 * 3); // K+V × ceil(5/2)
+        let mut seq = SeqKv::new(1);
+        let row = vec![0.5f32; h * dh];
+        for t in 0..6 {
+            pool.append(&mut seq, 0, t, &row, &row).unwrap();
+        }
+        assert_eq!(seq.blocks_held(), 6);
+        assert_eq!(pool.free_blocks(), 0);
+        // exhausted: a 7th token needs a fresh block pair
+        assert!(pool.append(&mut seq, 0, 6, &row, &row).is_err());
+        pool.release(&mut seq);
+        assert_eq!(pool.free_blocks(), 6);
+        assert_eq!(seq.blocks_held(), 0);
+        assert!(seq.is_empty());
+    }
+
+    #[test]
+    fn bytes_per_token_accounting() {
+        let pool4 = KvPool::new(KvQuant::Asym4, 8, 64, 16, 4);
+        let poolf = KvPool::new(KvQuant::Fp, 8, 64, 16, 4);
+        assert_eq!(pool4.bytes_per_token_layer(), 2 * (8 * 32 + 8 * 8));
+        assert_eq!(poolf.bytes_per_token_layer(), 2 * 8 * 64 * 4);
+        let ratio = poolf.bytes_per_token_layer() as f64 / pool4.bytes_per_token_layer() as f64;
+        assert!(ratio >= 6.0, "dh=64 must give ≥6x reduction, got {ratio}");
+    }
+}

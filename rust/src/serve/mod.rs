@@ -1,0 +1,29 @@
+//! Native INT4 serving subsystem: packed 4-bit weight storage, a paged
+//! 4-bit KV-cache block pool, and a continuous-batching decode engine.
+//!
+//! Three pillars (see `rust/README.md` §Serving engine for the full
+//! design, scale layouts and scheduler policy):
+//!
+//! * [`Int4Weight`] — nibble-packed weights on the RTN grid with
+//!   per-(channel, group) scales and a fused dequant-GEMV/GEMM.
+//! * [`KvPool`] / [`SeqKv`] — a block-pool allocator storing K/V as
+//!   4-bit codes with per-token per-head asymmetric scales,
+//!   append-quantize on write and fused dequant-attention on read.
+//! * [`Engine`] + [`Scheduler`] — admit N concurrent sequences against
+//!   the shared pool, batch prompt prefill, step every live lane per
+//!   decode iteration, and retire/admit without draining the batch.
+//!
+//! Everything here runs on the host kernel layer (`util::par`
+//! row-chunking) with the repo-wide determinism contract: results are
+//! bitwise identical across `KURTAIL_THREADS` settings, and a lane's
+//! token stream does not depend on which other lanes share its batch.
+
+pub mod engine;
+pub mod int4;
+pub mod kvcache;
+pub mod scheduler;
+
+pub use engine::{argmax, sample_token, Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
+pub use int4::Int4Weight;
+pub use kvcache::{KvPool, SeqKv};
+pub use scheduler::{QueuedRequest, Scheduler};

@@ -237,12 +237,11 @@ pub fn gram_accumulate(h: &mut Tensor, a: &Tensor) {
     gram_accumulate_with_threads(h, a, num_threads());
 }
 
-/// [`gram_accumulate`] with an explicit thread budget.
+/// [`gram_accumulate`] with an explicit thread budget. Accepts any
+/// `(…, n)` tensor — leading axes are flattened into rows.
 pub fn gram_accumulate_with_threads(h: &mut Tensor, a: &Tensor, threads: usize) {
-    assert_eq!(a.rank(), 2);
-    let n = a.shape[1];
+    let (m, n) = a.as_2d();
     assert_eq!(h.shape, vec![n, n]);
-    let m = a.shape[0];
     if m == 0 || n == 0 {
         return;
     }
@@ -252,6 +251,76 @@ pub fn gram_accumulate_with_threads(h: &mut Tensor, a: &Tensor, threads: usize) 
         assert!(sym, "gram_accumulate needs a symmetric accumulator");
     }
     gram_upper_into(&a.data, m, n, &mut h.data, threads);
+    mirror_lower(&mut h.data, n);
+}
+
+/// Accumulate `gram(rmsnorm(x))` into `h` without materializing the
+/// normed activation copy — the fused form of
+/// `gram_accumulate(h, rmsnorm_rows(x))` that `HessianSet::accumulate`
+/// runs on every captured batch (the last hot path that still built a
+/// full normed tensor).
+///
+/// Per-row inverse-RMS factors are computed once (same expression as
+/// `model::capture::rmsnorm_row`: `1/√(mean(x²)+1e-5)`, weightless),
+/// then each thread norms one [`GRAM_ROW_BLOCK`]-row slab into a local
+/// buffer and runs the standard upper-triangle update from it. The
+/// normed values and their accumulation order are identical to the
+/// two-step path, so the result is **bitwise equal** to it at every
+/// thread count; peak extra memory is `GRAM_ROW_BLOCK × n` floats per
+/// thread instead of a whole `(m, n)` tensor.
+pub fn gram_accumulate_rmsnorm(h: &mut Tensor, x: &Tensor) {
+    gram_accumulate_rmsnorm_with_threads(h, x, num_threads());
+}
+
+/// [`gram_accumulate_rmsnorm`] with an explicit thread budget.
+pub fn gram_accumulate_rmsnorm_with_threads(h: &mut Tensor, x: &Tensor, threads: usize) {
+    let (m, n) = x.as_2d();
+    assert_eq!(h.shape, vec![n, n]);
+    if m == 0 || n == 0 {
+        return;
+    }
+    #[cfg(debug_assertions)]
+    {
+        let sym = (0..n).all(|i| (0..i).all(|j| h.data[i * n + j] == h.data[j * n + i]));
+        assert!(sym, "gram_accumulate_rmsnorm needs a symmetric accumulator");
+    }
+    let mut inv = vec![0.0f32; m];
+    par::par_row_chunks_mut(&mut inv, 1, 256, threads, |r0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let row = &x.data[(r0 + i) * n..(r0 + i + 1) * n];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / n as f32;
+            *o = 1.0 / (ms + 1e-5).sqrt();
+        }
+    });
+    par::par_row_chunks_mut(&mut h.data, n, MIN_ROWS_PER_CHUNK, threads, |i0, cchunk| {
+        let ni = cchunk.len() / n;
+        let mut nb = vec![0.0f32; GRAM_ROW_BLOCK.min(m) * n];
+        for rb in (0..m).step_by(GRAM_ROW_BLOCK) {
+            let rend = (rb + GRAM_ROW_BLOCK).min(m);
+            for (bi, row) in (rb..rend).enumerate() {
+                let s = inv[row];
+                for (o, &v) in
+                    nb[bi * n..(bi + 1) * n].iter_mut().zip(&x.data[row * n..(row + 1) * n])
+                {
+                    *o = v * s;
+                }
+            }
+            for ii in 0..ni {
+                let i = i0 + ii;
+                let crow = &mut cchunk[ii * n + i..(ii + 1) * n];
+                for bi in 0..rend - rb {
+                    let ri = nb[bi * n + i];
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    let arow = &nb[bi * n + i..(bi + 1) * n];
+                    for (cv, av) in crow.iter_mut().zip(arow) {
+                        *cv += ri * av;
+                    }
+                }
+            }
+        }
+    });
     mirror_lower(&mut h.data, n);
 }
 
@@ -463,6 +532,42 @@ mod tests {
                 assert_eq!(h.data[i * 33 + j], h.data[j * 33 + i], "asymmetric at ({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn gram_accumulate_rmsnorm_matches_two_step_bitwise() {
+        use crate::model::rmsnorm_rows;
+        let mut rng = Rng::new(9);
+        // odd shapes straddle GRAM_ROW_BLOCK and the thread chunking
+        for (m, n) in [(9usize, 5usize), (64, 16), (130, 33), (1, 6)] {
+            let x = Tensor::randn(&[m, n], 2.0, &mut rng);
+            let mut want = Tensor::zeros(&[n, n]);
+            gram_accumulate_with_threads(&mut want, &rmsnorm_rows(&x), 1);
+            for threads in [1usize, 2, 8] {
+                let mut got = Tensor::zeros(&[n, n]);
+                gram_accumulate_rmsnorm_with_threads(&mut got, &x, threads);
+                assert_eq!(got.data, want.data, "{m}x{n} t={threads}");
+            }
+            // streamed accumulation on top of prior content agrees too
+            let mut got = Tensor::zeros(&[n, n]);
+            gram_accumulate_rmsnorm_with_threads(&mut got, &x, 4);
+            gram_accumulate_rmsnorm_with_threads(&mut got, &x, 4);
+            let mut want2 = want.clone();
+            gram_accumulate_with_threads(&mut want2, &rmsnorm_rows(&x), 1);
+            assert_eq!(got.data, want2.data, "streamed {m}x{n}");
+        }
+    }
+
+    #[test]
+    fn gram_accumulate_flattens_leading_axes() {
+        let mut rng = Rng::new(10);
+        let x3 = Tensor::randn(&[2, 5, 8], 1.0, &mut rng);
+        let x2 = x3.clone().reshape(&[10, 8]);
+        let mut a = Tensor::zeros(&[8, 8]);
+        let mut b = Tensor::zeros(&[8, 8]);
+        gram_accumulate(&mut a, &x3);
+        gram_accumulate(&mut b, &x2);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

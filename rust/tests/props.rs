@@ -14,6 +14,10 @@ use kurtail::tensor::hadamard::{
 use kurtail::tensor::matmul::{
     gram, gram_accumulate_with_threads, gram_with_threads, matmul, matmul_with_threads, rows_matmul,
 };
+use kurtail::config::KvQuant;
+use kurtail::model::Params;
+use kurtail::runtime::{ConfigMeta, ParamSpec};
+use kurtail::serve::{Engine, Int4Weight, KvPool, SeqKv, ServeConfig, ServeModel, ServeQuantSpec};
 use kurtail::tensor::stats::{kurtail_loss, kurtosis};
 use kurtail::tensor::Tensor;
 use kurtail::util::proptest::{check, prop_assert, prop_close};
@@ -168,7 +172,12 @@ fn prop_blockdiag_orthogonal() {
 #[test]
 fn prop_quantizer_error_bounds() {
     check(30, |rng| {
-        let s = QuantScheme { bits: 2 + rng.below(5) as u32, symmetric: true, clip_quantile: None };
+        let s = QuantScheme {
+            bits: 2 + rng.below(5) as u32,
+            symmetric: true,
+            clip_quantile: None,
+            group: None,
+        };
         let x = Tensor::randn(&[4, 64], 0.1 + rng.uniform(), rng);
         let y = fake_quant_rows(&x, &s);
         for i in 0..4 {
@@ -235,6 +244,202 @@ fn prop_kurtosis_invariant_to_scale_and_shift() {
         let b = rng.normal() * 3.0;
         let ys: Vec<f32> = xs.iter().map(|&x| a * x + b).collect();
         prop_close(k0, kurtosis(&ys), 0.05 * k0, "κ(ax+b) = κ(x)")
+    });
+}
+
+#[test]
+fn prop_int4_pack_roundtrips_rtn_exactly() {
+    // per-channel grids (group = None) must reproduce the RTN fake-quant
+    // output bitwise at odd widths and heights
+    check(25, |rng| {
+        let k = 1 + rng.below(70); // covers odd k (nibble padding)
+        let n = 1 + rng.below(20);
+        let w = Tensor::randn(&[k, n], 0.1 + rng.uniform(), rng);
+        let s = QuantScheme::weight4();
+        let packed = Int4Weight::pack(&w, &s);
+        let want = rtn_quantize(&w, &s);
+        prop_assert(packed.unpack().data == want.data, "int4 roundtrip == rtn bitwise")
+    });
+}
+
+#[test]
+fn prop_int4_grouped_roundtrip_error_bounded() {
+    // group-boundary shapes: group sizes that do and don't divide k
+    check(20, |rng| {
+        let k = 4 + rng.below(60);
+        let n = 1 + rng.below(12);
+        let g = 1 + rng.below(k);
+        let w = Tensor::randn(&[k, n], 0.3, rng);
+        let s = QuantScheme::weight4_grouped(g);
+        let iw = Int4Weight::pack(&w, &s);
+        prop_assert(iw.n_groups == (k + g - 1) / g, "group count")?;
+        let deq = iw.unpack();
+        for j in 0..n {
+            for gi in 0..iw.n_groups {
+                let i0 = gi * g;
+                let i1 = (i0 + g).min(k);
+                let amax = (i0..i1).fold(0.0f32, |a, i| a.max(w.data[i * n + j].abs()));
+                let step = amax.max(1e-8) / 7.0;
+                for i in i0..i1 {
+                    prop_assert(
+                        (deq.data[i * n + j] - w.data[i * n + j]).abs() <= step / 2.0 + 1e-6,
+                        "grouped error ≤ half step",
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int4_matmul_deterministic_and_batch_invariant() {
+    check(15, |rng| {
+        let k = 8 + rng.below(48);
+        let n = 1 + rng.below(24);
+        let m = 1 + rng.below(12);
+        let g = 1 + rng.below(k);
+        let w = Tensor::randn(&[k, n], 0.3, rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(g));
+        let x = Tensor::randn(&[m, k], 1.0, rng);
+        let base = iw.matmul_with_threads(&x, 1);
+        for threads in [2usize, 8] {
+            prop_assert(
+                iw.matmul_with_threads(&x, threads).data == base.data,
+                "int4 matmul bitwise across threads",
+            )?;
+        }
+        // each lane of the batch equals the standalone GEMV on its row
+        for i in 0..m {
+            let row = Tensor::new(x.row(i).to_vec(), vec![1, k]);
+            prop_assert(
+                iw.matmul_with_threads(&row, 4).data == base.row(i),
+                "int4 GEMV == batched lane",
+            )?;
+        }
+        // and stays within dequantized-reference tolerance
+        let want = rows_matmul(&x, &iw.unpack());
+        prop_assert(base.max_abs_diff(&want) < 1e-3, "int4 matmul ≈ dense on deq")
+    });
+}
+
+#[test]
+fn prop_kv_pool_roundtrip_matches_fake_quant_asym() {
+    check(15, |rng| {
+        let h = 1 + rng.below(4);
+        let dh = 2 + rng.below(9); // odd dh exercises nibble padding
+        let bt = 1 + rng.below(6);
+        let toks = 1 + rng.below(12);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 2 * (toks / bt + 1) + 2);
+        let mut seq = SeqKv::new(1);
+        let mut rows = Vec::new();
+        for t in 0..toks {
+            let k: Vec<f32> = (0..h * dh).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..h * dh).map(|_| rng.normal()).collect();
+            pool.append(&mut seq, 0, t, &k, &v).unwrap();
+            rows.push((k, v));
+        }
+        for (t, (k, v)) in rows.iter().enumerate() {
+            let want_k =
+                fake_quant_rows_asym(&Tensor::new(k.clone(), vec![h, dh]), &QuantScheme::kv4());
+            let want_v =
+                fake_quant_rows_asym(&Tensor::new(v.clone(), vec![h, dh]), &QuantScheme::kv4());
+            for head in 0..h {
+                prop_assert(
+                    pool.read_k_row(&seq, 0, t, head) == want_k.row(head),
+                    "K roundtrip == fake_quant_asym bitwise",
+                )?;
+                prop_assert(
+                    pool.read_v_row(&seq, 0, t, head) == want_v.row(head),
+                    "V roundtrip == fake_quant_asym bitwise",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tiny llama meta for serve-engine properties (no artifacts involved).
+fn serve_test_meta() -> ConfigMeta {
+    let (l, d, ff, v, h) = (2usize, 8usize, 16usize, 16usize, 2usize);
+    let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape };
+    ConfigMeta {
+        name: "servetest".into(),
+        vocab: v,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_head: d / h,
+        d_ff: ff,
+        seq_len: 16,
+        arch: "llama".into(),
+        n_experts: 1,
+        top_k: 1,
+        train_batch: 1,
+        eval_batch: 1,
+        cap_batch: 1,
+        decode_batch: 1,
+        spin_batch: 1,
+        param_specs: vec![
+            spec("embed", vec![v, d]),
+            spec("ln1", vec![l, d]),
+            spec("wq", vec![l, d, d]),
+            spec("wk", vec![l, d, d]),
+            spec("wv", vec![l, d, d]),
+            spec("wo", vec![l, d, d]),
+            spec("ln2", vec![l, d]),
+            spec("wg", vec![l, d, ff]),
+            spec("wu", vec![l, d, ff]),
+            spec("wd", vec![l, ff, d]),
+            spec("lnf", vec![d]),
+            spec("head", vec![v, d]),
+        ],
+    }
+}
+
+#[test]
+fn prop_serve_engine_bitwise_across_threads_and_lanes() {
+    // the KV-block append/read path and every serve kernel must be
+    // bitwise deterministic across KURTAIL_THREADS-style budgets and
+    // independent of lane batching
+    let meta = serve_test_meta();
+    check(6, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..3)
+            .map(|_| {
+                let p = 1 + rng.below(4);
+                let toks = (0..p).map(|_| rng.below(meta.vocab) as i32).collect();
+                (toks, 1 + rng.below(5))
+            })
+            .collect();
+        let run = |lanes: usize, threads: usize| -> Vec<Vec<i32>> {
+            let cfg = ServeConfig {
+                max_lanes: lanes,
+                block_tokens: 2,
+                kv_quant: KvQuant::Asym4,
+                threads: Some(threads),
+                ..ServeConfig::default()
+            };
+            let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+            for (toks, n) in &reqs {
+                eng.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+            }
+            eng.run().unwrap().into_iter().map(|c| c.tokens).collect()
+        };
+        let base = run(1, 1);
+        for (lanes, threads) in [(1usize, 8usize), (3, 1), (3, 8)] {
+            prop_assert(
+                run(lanes, threads) == base,
+                &format!("serve streams bitwise at lanes={lanes} threads={threads}"),
+            )?;
+        }
+        Ok(())
     });
 }
 

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# Build release, run the kernel benchmarks, and drop BENCH_kernels.json
-# at the repo root so the scalar-vs-packed perf trajectory is tracked
-# PR-over-PR (see rust/README.md for the schema).
+# Build release, run the kernel + serve benchmarks, and drop
+# BENCH_kernels.json / BENCH_serve.json at the repo root so the perf
+# trajectories are tracked PR-over-PR (see rust/README.md for schemas).
 #
 # Usage:  scripts/bench.sh            # full run
 #         KURTAIL_THREADS=8 scripts/bench.sh
@@ -9,13 +9,20 @@ set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 export KURTAIL_BENCH_JSON="${KURTAIL_BENCH_JSON:-$repo_root/BENCH_kernels.json}"
+export KURTAIL_BENCH_SERVE_JSON="${KURTAIL_BENCH_SERVE_JSON:-$repo_root/BENCH_serve.json}"
 
 cd "$repo_root/rust"
 cargo build --release
 cargo bench --bench kernels
+cargo bench --bench serve
 
 echo "--- BENCH_kernels.json summary ---"
 # speedup lines for a quick human read; the JSON is the artifact
 grep -o '"kernel": "[^"]*"\|"dim": [0-9]*\|"speedup": [0-9.]*' "$KURTAIL_BENCH_JSON" \
   | paste - - - || true
 echo "wrote $KURTAIL_BENCH_JSON"
+
+echo "--- BENCH_serve.json summary ---"
+grep -o '"lanes": [0-9]*\|"tok_s": [0-9.]*\|"speedup_vs_lane1": [0-9.]*\|"reduction": [0-9.]*' \
+  "$KURTAIL_BENCH_SERVE_JSON" | paste - - - || true
+echo "wrote $KURTAIL_BENCH_SERVE_JSON"
