@@ -10,6 +10,7 @@
 use kurtail::config::QuantScheme;
 use kurtail::quant::fakequant::{fake_quant_rows, fake_quant_rows_ref};
 use kurtail::runtime::{Runtime, Value};
+use kurtail::serve::Int4Weight;
 use kurtail::tensor::hadamard::{fwht_rows, fwht_rows_ref};
 use kurtail::tensor::matmul::{gram, gram_ref, matmul, matmul_into_ref};
 use kurtail::tensor::{IntTensor, Tensor};
@@ -21,6 +22,10 @@ use kurtail::util::Rng;
 const SIZES: [usize; 4] = [256, 512, 1024, 2048];
 /// Rows of the batched row-kernels (FWHT, fake-quant) at every dim.
 const BATCH_ROWS: usize = 1024;
+/// Activation lanes of the serving-GEMM comparison (the decode batch).
+const GEMM_LANES: usize = 16;
+/// Weight scale-group rows of the serving-GEMM comparison.
+const GEMM_GROUP: usize = 64;
 
 fn main() {
     host_kernels();
@@ -40,15 +45,18 @@ fn tune(b: &mut Bench, d: usize) {
     b.min_samples = min_samples;
 }
 
-fn comparison(kernel: &str, d: usize, shape: String, scalar: Stats, packed: Stats) -> Json {
-    let speedup = scalar.mean_ns / packed.mean_ns.max(1.0);
-    println!("  {kernel}@{d}: packed-parallel is {speedup:.2}x the scalar seed kernel");
+/// One (kernel, dim) comparison entry: `baseline` is the reference
+/// implementation (scalar seed kernel for the PR-1 rewrites, the f32
+/// dequant GEMM for `int4_gemm`), `new` the current fast path.
+fn comparison(kernel: &str, d: usize, shape: String, baseline: Stats, new: Stats) -> Json {
+    let speedup = baseline.mean_ns / new.mean_ns.max(1.0);
+    println!("  {kernel}@{d}: new path is {speedup:.2}x the baseline kernel");
     obj(vec![
         ("kernel", js(kernel)),
         ("dim", num(d as f64)),
         ("shape", js(&shape)),
-        ("scalar_ns", num(scalar.mean_ns)),
-        ("packed_ns", num(packed.mean_ns)),
+        ("baseline_ns", num(baseline.mean_ns)),
+        ("new_ns", num(new.mean_ns)),
         ("speedup", num(speedup)),
     ])
 }
@@ -94,6 +102,24 @@ fn host_kernels() {
         let packed =
             b.run(&format!("host/fakequant_parallel_{BATCH_ROWS}x{d}"), || fake_quant_rows(&x, &scheme));
         comparisons.push(comparison("fake_quant_rows", d, format!("{BATCH_ROWS}x{d}"), scalar, packed));
+
+        // serving GEMM: f32 dequant (fake-quant acts, then dequant dot)
+        // vs the int8×int4 i32-accumulator path, at the decode batch
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(GEMM_GROUP));
+        let lanes = Tensor::randn(&[GEMM_LANES, d], 1.0, &mut rng);
+        let f32_path = b.run(&format!("host/int4_gemm_f32_{GEMM_LANES}x{d}x{d}"), || {
+            iw.matmul(&fake_quant_rows(&lanes, &scheme))
+        });
+        let int_path = b.run(&format!("host/int4_gemm_i32_{GEMM_LANES}x{d}x{d}"), || {
+            iw.quant_matmul(&lanes, &scheme)
+        });
+        comparisons.push(comparison(
+            "int4_gemm",
+            d,
+            format!("{GEMM_LANES}x{d}x{d}"),
+            f32_path,
+            int_path,
+        ));
     }
 
     let path =

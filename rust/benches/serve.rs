@@ -3,6 +3,12 @@
 //! weight traversal dominates (d_head 64 → the 4-bit KV layout shows its
 //! full ≥6× memory win). No artifacts needed — the engine is native.
 //!
+//! Every lane count runs the quantized engine twice: on the
+//! integer-accumulator GEMM (`ServeConfig::int_gemm = Some(true)`, the
+//! default serving path) and on the f32 dequant GEMM (`Some(false)`,
+//! the pre-PR-3 path) — `int_gemm_speedup` per run is the INT4×INT4
+//! headline (`scripts/check_bench.sh` gates it).
+//!
 //! Writes `BENCH_serve.json` (path override: `KURTAIL_BENCH_SERVE_JSON`)
 //! with tokens/sec at 1/4/16 concurrent sequences and KV bytes/token for
 //! the paged 4-bit pool vs the dense f32 cache. `scripts/bench.sh`
@@ -70,8 +76,14 @@ fn submit_all(eng: &mut Engine, requests: usize) {
 }
 
 /// One timed engine run; returns (wall seconds, total tokens processed).
-fn timed_run(model: &ServeModel, kv: KvQuant, lanes: usize, requests: usize) -> (f64, usize, Engine) {
-    let cfg = ServeConfig { max_lanes: lanes, kv_quant: kv, ..ServeConfig::default() };
+fn timed_run(
+    model: &ServeModel,
+    kv: KvQuant,
+    lanes: usize,
+    requests: usize,
+    int_gemm: Option<bool>,
+) -> (f64, usize, Engine) {
+    let cfg = ServeConfig { max_lanes: lanes, kv_quant: kv, int_gemm, ..ServeConfig::default() };
     let mut eng = Engine::new(model.clone(), &cfg).expect("engine");
     submit_all(&mut eng, requests);
     let t0 = Instant::now();
@@ -97,10 +109,10 @@ fn main() {
     let dense = ServeModel::from_params(&params, None).expect("fp model");
 
     // warmup (page in weights, spin up the allocator)
-    let _ = timed_run(&int4, KvQuant::Asym4, 4, 4);
+    let _ = timed_run(&int4, KvQuant::Asym4, 4, 4, None);
 
     // dense f32 sequential baseline (fp weights, fp KV, one lane)
-    let (fp_wall, fp_tokens, fp_eng) = timed_run(&dense, KvQuant::Fp, 1, REQUESTS);
+    let (fp_wall, fp_tokens, fp_eng) = timed_run(&dense, KvQuant::Fp, 1, REQUESTS, None);
     let fp_tok_s = fp_tokens as f64 / fp_wall;
     println!("dense-f32 lane1: {fp_tok_s:.1} tok/s ({fp_tokens} tokens in {fp_wall:.2}s)");
 
@@ -108,14 +120,21 @@ fn main() {
     let mut lane1_tok_s = 0.0f64;
     let mut last_eng = None;
     for &lanes in &LANES {
-        let (wall, tokens, eng) = timed_run(&int4, KvQuant::Asym4, lanes, REQUESTS);
+        // f32 dequant GEMM (the simulated-quantization serving path)
+        let (f32_wall, f32_tokens, _) =
+            timed_run(&int4, KvQuant::Asym4, lanes, REQUESTS, Some(false));
+        let f32_tok_s = f32_tokens as f64 / f32_wall;
+        // integer-accumulator GEMM (the default quantized serving path)
+        let (wall, tokens, eng) = timed_run(&int4, KvQuant::Asym4, lanes, REQUESTS, Some(true));
         let tok_s = tokens as f64 / wall;
         if lanes == 1 {
             lane1_tok_s = tok_s;
         }
         let speedup = tok_s / lane1_tok_s.max(1e-9);
+        let int_speedup = tok_s / f32_tok_s.max(1e-9);
         println!(
-            "int4 lanes={lanes:<2}: {tok_s:.1} tok/s ({tokens} tokens in {wall:.2}s, {speedup:.2}x vs 1 lane)"
+            "int4 lanes={lanes:<2}: {tok_s:.1} tok/s ({tokens} tokens in {wall:.2}s, \
+             {speedup:.2}x vs 1 lane, {int_speedup:.2}x vs f32-dequant {f32_tok_s:.1} tok/s)"
         );
         runs.push(obj(vec![
             ("lanes", num(lanes as f64)),
@@ -125,6 +144,8 @@ fn main() {
             ("tok_s", num(tok_s)),
             ("speedup_vs_lane1", num(speedup)),
             ("speedup_vs_dense_fp", num(tok_s / fp_tok_s.max(1e-9))),
+            ("f32_dequant_tok_s", num(f32_tok_s)),
+            ("int_gemm_speedup", num(int_speedup)),
         ]));
         last_eng = Some(eng);
     }

@@ -22,6 +22,16 @@
 //! independent of which other lanes happen to share its batch** — a
 //! 1-lane engine and a 16-lane engine produce identical completions
 //! (pinned by tests) — and independent of `KURTAIL_THREADS`.
+//!
+//! **Integer GEMM path.** For quantized models the activation
+//! fake-quant before each packed GEMM produces int8 *codes* + per-row
+//! scales (`serve/qact.rs`) instead of fake-quantized f32 values, and
+//! the GEMM accumulates in i32 (`Int4Weight::matmul_i8_into`), folding
+//! `act_scale · weight_group_scale` once per (row, group). Codes are
+//! identical to the fake-quant grid, so only in-group f32 summation
+//! order distinguishes the paths; both keep the batching/threading
+//! invariants above. `KURTAIL_INT_GEMM=0` (or
+//! `ServeConfig::int_gemm = Some(false)`) restores the f32 dequant GEMM.
 
 use anyhow::Result;
 
@@ -37,6 +47,7 @@ use crate::util::Rng;
 
 use super::int4::Int4Weight;
 use super::kvcache::{KvPool, SeqKv};
+use super::qact::{int_gemm_enabled, quantize_rows_into, scheme_fits_i8};
 use super::scheduler::{QueuedRequest, Scheduler};
 
 /// RoPE base shared by every preset (`ModelConfig.rope_base`); the
@@ -95,6 +106,58 @@ impl LinW {
             }
             LinW::Int4(w) => w.matmul_into(x, m, out, threads),
         }
+    }
+
+    /// Integer-accumulator GEMM on pre-quantized activation codes
+    /// (overwrites `out`). Only the quantized (packed) serving path
+    /// takes this; fp models never quantize activations.
+    fn matmul_i8_into(&self, codes: &[i8], scales: &[f32], m: usize, out: &mut [f32], threads: usize) {
+        match self {
+            LinW::Int4(w) => w.matmul_i8_into(codes, scales, m, out, threads),
+            LinW::F32(_) => unreachable!("integer GEMM requires packed int4 weights"),
+        }
+    }
+}
+
+/// One serving projection: the integer path consumes the block's shared
+/// int8 codes + per-row scales; the f32 path the (already fake-quantized)
+/// dense activations. Split out so every GEMM site in `forward` stays a
+/// one-liner per weight.
+fn project(
+    w: &LinW,
+    use_int: bool,
+    z: &[f32],
+    codes: &[i8],
+    scales: &[f32],
+    m: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    if use_int {
+        w.matmul_i8_into(codes, scales, m, out, threads);
+    } else {
+        w.matmul_into(z, m, out, threads);
+    }
+}
+
+/// Activation quantization for one GEMM site: the integer path reads
+/// `data` into int8 codes + per-row scales (leaving `data` untouched),
+/// the f32 path fake-quantizes `data` in place — the single spot where
+/// the two paths' pre-GEMM step lives, so every site in `forward` stays
+/// in lockstep.
+fn quantize_site(
+    data: &mut [f32],
+    width: usize,
+    act: &QuantScheme,
+    use_int: bool,
+    codes: &mut [i8],
+    scales: &mut [f32],
+    threads: usize,
+) {
+    if use_int {
+        quantize_rows_into(data, width, act, codes, scales, threads);
+    } else {
+        fq_rows(data, width, act, threads);
     }
 }
 
@@ -177,12 +240,13 @@ impl ServeModel {
         let max_pos = meta.seq_len;
         // rope_tables(): inv_i = base^(-2i/dh), ang = pos · inv
         let dh2 = dh / 2;
+        let inv: Vec<f32> =
+            (0..dh2).map(|i2| ROPE_BASE.powf(-((2 * i2) as f32) / dh as f32)).collect();
         let mut rope_cos = vec![0.0f32; max_pos * dh2];
         let mut rope_sin = vec![0.0f32; max_pos * dh2];
         for p in 0..max_pos {
-            for i2 in 0..dh2 {
-                let inv = ROPE_BASE.powf(-((2 * i2) as f32) / dh as f32);
-                let ang = p as f32 * inv;
+            for (i2, &iv) in inv.iter().enumerate() {
+                let ang = p as f32 * iv;
                 rope_cos[p * dh2 + i2] = ang.cos();
                 rope_sin[p * dh2 + i2] = ang.sin();
             }
@@ -247,11 +311,25 @@ pub struct ServeConfig {
     pub kv_quant: KvQuant,
     /// Thread budget override (`None` = `KURTAIL_THREADS` / host cores).
     pub threads: Option<usize>,
+    /// Integer-accumulator GEMM for quantized models: `None` follows the
+    /// `KURTAIL_INT_GEMM` env escape hatch (on unless set to `0`),
+    /// `Some(_)` pins it (benches A/B the two paths this way). Ignored
+    /// for fp models (which never quantize activations) and for act
+    /// schemes whose codes don't fit i8 (asymmetric or > 8 bits — those
+    /// fall back to the f32 dequant GEMM).
+    pub int_gemm: Option<bool>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_lanes: 4, block_tokens: 16, max_blocks: 0, kv_quant: KvQuant::Asym4, threads: None }
+        Self {
+            max_lanes: 4,
+            block_tokens: 16,
+            max_blocks: 0,
+            kv_quant: KvQuant::Asym4,
+            threads: None,
+            int_gemm: None,
+        }
     }
 }
 
@@ -299,6 +377,7 @@ pub struct Engine {
     next_id: usize,
     committed_blocks: usize,
     threads: usize,
+    int_gemm: bool,
     pub stats: EngineStats,
 }
 
@@ -312,6 +391,12 @@ impl Engine {
             * ((model.max_pos + cfg.block_tokens - 1) / cfg.block_tokens);
         let max_blocks = if cfg.max_blocks > 0 { cfg.max_blocks } else { cfg.max_lanes * per_seq };
         let pool = KvPool::new(cfg.kv_quant, meta.n_heads, meta.d_head, cfg.block_tokens, max_blocks);
+        // the integer path needs i8-representable activation codes
+        // (symmetric, ≤ 8 bits); anything else — reachable through the
+        // public ServeQuantSpec fields — silently keeps the f32 dequant
+        // GEMM, which every spec supports
+        let int_gemm = cfg.int_gemm.unwrap_or_else(int_gemm_enabled)
+            && model.quant.as_ref().is_none_or(|q| scheme_fits_i8(&q.act));
         Ok(Self {
             lanes: (0..cfg.max_lanes).map(|_| None).collect(),
             model,
@@ -321,8 +406,15 @@ impl Engine {
             next_id: 0,
             committed_blocks: 0,
             threads,
+            int_gemm,
             stats: EngineStats::default(),
         })
+    }
+
+    /// Whether quantized GEMMs run on the integer-accumulator path
+    /// (`ServeConfig::int_gemm`, falling back to `KURTAIL_INT_GEMM`).
+    pub fn int_gemm(&self) -> bool {
+        self.int_gemm
     }
 
     /// Queue a text prompt (byte-tokenized). Returns the request id.
@@ -519,6 +611,17 @@ impl Engine {
         let n = rows.len();
         assert_eq!(x.len(), n * d);
         let quant = model.quant.as_ref();
+        // integer GEMM path: quantize each activation block to int8
+        // codes once and feed every consuming linear; the f32 path
+        // fake-quantizes in place instead. Both sit on the same grid
+        // (identical codes), so the paths differ only in f32 summation
+        // order inside a scale group (see serve/qact.rs).
+        let use_int = self.int_gemm && quant.is_some();
+        let (mut qcodes, mut qscales) = if use_int {
+            (vec![0i8; n * d.max(ff)], vec![0.0f32; n])
+        } else {
+            (Vec::new(), Vec::new())
+        };
 
         let mut z = vec![0.0f32; n * d];
         let mut qx = vec![0.0f32; n * d];
@@ -533,11 +636,11 @@ impl Engine {
             // z = act_fq(rmsnorm(x, ln1)) — shared by wq/wk/wv
             rmsnorm_gamma_rows(&x, &lw.ln1, &mut z, d, threads);
             if let Some(q) = quant {
-                fq_rows(&mut z, d, &q.act, threads);
+                quantize_site(&mut z, d, &q.act, use_int, &mut qcodes, &mut qscales, threads);
             }
-            lw.wq.matmul_into(&z, n, &mut qx, threads);
-            lw.wk.matmul_into(&z, n, &mut kx, threads);
-            lw.wv.matmul_into(&z, n, &mut vx, threads);
+            project(&lw.wq, use_int, &z, &qcodes, &qscales, n, &mut qx, threads);
+            project(&lw.wk, use_int, &z, &qcodes, &qscales, n, &mut kx, threads);
+            project(&lw.wv, use_int, &z, &qcodes, &qscales, n, &mut vx, threads);
 
             // RoPE at each row's position, per head
             for (i, &(_, pos)) in rows.iter().enumerate() {
@@ -579,28 +682,28 @@ impl Engine {
             }
             if let Some(q) = quant {
                 head_rotate(&mut attn, &mut rot, &q.r4, n * h, dh, threads);
-                fq_rows(&mut attn, d, &q.act, threads);
+                quantize_site(&mut attn, d, &q.act, use_int, &mut qcodes, &mut qscales, threads);
             }
-            lw.wo.matmul_into(&attn, n, &mut z, threads);
+            project(&lw.wo, use_int, &attn, &qcodes, &qscales, n, &mut z, threads);
             add_assign(&mut x, &z);
 
             // FFN
             rmsnorm_gamma_rows(&x, &lw.ln2, &mut z, d, threads);
             if let Some(q) = quant {
-                fq_rows(&mut z, d, &q.act, threads);
+                quantize_site(&mut z, d, &q.act, use_int, &mut qcodes, &mut qscales, threads);
             }
             match &lw.wg {
                 Some(wg) => {
                     // llama: silu(z·Wg) ⊙ (z·Wu)
-                    wg.matmul_into(&z, n, &mut gate, threads);
-                    lw.wu.matmul_into(&z, n, &mut mid, threads);
+                    project(wg, use_int, &z, &qcodes, &qscales, n, &mut gate, threads);
+                    project(&lw.wu, use_int, &z, &qcodes, &qscales, n, &mut mid, threads);
                     for (m, &gv) in mid.iter_mut().zip(&gate) {
                         *m = silu(gv) * *m;
                     }
                 }
                 None => {
                     // phi: gelu(z·Wu)
-                    lw.wu.matmul_into(&z, n, &mut mid, threads);
+                    project(&lw.wu, use_int, &z, &qcodes, &qscales, n, &mut mid, threads);
                     for m in mid.iter_mut() {
                         *m = gelu(*m);
                     }
@@ -609,9 +712,9 @@ impl Engine {
             if let Some(q) = quant {
                 matmul_into_buf(&mid, &q.r5.data, &mut rot, n, ff, threads);
                 mid[..n * ff].copy_from_slice(&rot[..n * ff]);
-                fq_rows(&mut mid, ff, &q.act, threads);
+                quantize_site(&mut mid, ff, &q.act, use_int, &mut qcodes, &mut qscales, threads);
             }
-            lw.wd.matmul_into(&mid, n, &mut z, threads);
+            project(&lw.wd, use_int, &mid, &qcodes, &qscales, n, &mut z, threads);
             add_assign(&mut x, &z);
         }
 
@@ -783,11 +886,22 @@ mod tests {
     }
 
     fn run_with(model: &ServeModel, kv: KvQuant, lanes: usize, threads: usize) -> Vec<Completion> {
+        run_with_int(model, kv, lanes, threads, None)
+    }
+
+    fn run_with_int(
+        model: &ServeModel,
+        kv: KvQuant,
+        lanes: usize,
+        threads: usize,
+        int_gemm: Option<bool>,
+    ) -> Vec<Completion> {
         let cfg = ServeConfig {
             max_lanes: lanes,
             block_tokens: 4,
             kv_quant: kv,
             threads: Some(threads),
+            int_gemm,
             ..ServeConfig::default()
         };
         let mut eng = Engine::new(model.clone(), &cfg).unwrap();
@@ -815,13 +929,40 @@ mod tests {
     fn streams_invariant_to_lanes_and_threads() {
         for model in [fp_model(), quant_model()] {
             let kv = if model.is_quantized() { KvQuant::Asym4 } else { KvQuant::Fp };
-            let base = run_with(&model, kv, 1, 1);
-            for (lanes, threads) in [(2usize, 1usize), (4, 4), (3, 8)] {
-                let got = run_with(&model, kv, lanes, threads);
-                for (a, b) in base.iter().zip(&got) {
-                    assert_eq!(a.tokens, b.tokens, "lanes={lanes} t={threads}");
+            // both GEMM paths must hold the invariance independently
+            for int_gemm in [Some(true), Some(false)] {
+                let base = run_with_int(&model, kv, 1, 1, int_gemm);
+                for (lanes, threads) in [(2usize, 1usize), (4, 4), (3, 8)] {
+                    let got = run_with_int(&model, kv, lanes, threads, int_gemm);
+                    for (a, b) in base.iter().zip(&got) {
+                        assert_eq!(a.tokens, b.tokens, "lanes={lanes} t={threads} int={int_gemm:?}");
+                    }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn int_gemm_escape_hatch_serves_both_paths() {
+        let model = quant_model();
+        let int = run_with_int(&model, KvQuant::Asym4, 2, 2, Some(true));
+        let f32_path = run_with_int(&model, KvQuant::Asym4, 2, 2, Some(false));
+        assert_eq!(int.len(), 4);
+        assert_eq!(f32_path.len(), 4);
+        for (a, b) in int.iter().zip(&f32_path) {
+            // same requests, same prompt echo, same lengths; the token
+            // tails may diverge (documented f32-summation-order delta)
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.tokens.len(), b.tokens.len());
+            assert_eq!(a.tokens[..a.prompt_len], b.tokens[..b.prompt_len]);
+        }
+        // fp models ignore the flag entirely: identical streams
+        let fp = fp_model();
+        let fp_int = run_with_int(&fp, KvQuant::Fp, 2, 2, Some(true));
+        let fp_f32 = run_with_int(&fp, KvQuant::Fp, 2, 2, Some(false));
+        for (a, b) in fp_int.iter().zip(&fp_f32) {
+            assert_eq!(a.tokens, b.tokens, "fp path must not depend on int_gemm");
         }
     }
 
@@ -849,6 +990,30 @@ mod tests {
         // prefill was batched: prompt tokens processed without decode steps
         assert_eq!(eng.stats.prefill_tokens, 3 + 1 + 2 + 4);
         assert_eq!(eng.stats.decode_tokens, 4 + 5 + 3 + 2);
+    }
+
+    #[test]
+    fn incompatible_act_scheme_falls_back_to_f32_path() {
+        // reachable through the public ServeQuantSpec fields: an act
+        // grid whose codes don't fit i8 (asymmetric here) must not
+        // panic mid-decode — the engine keeps the f32 dequant GEMM
+        let meta = fake_llama_meta();
+        let mut rng = Rng::new(0);
+        let params = Params::init(&meta, &mut rng);
+        let spec = ServeQuantSpec {
+            act: QuantScheme::kv4(),
+            ..ServeQuantSpec::paper_default(
+                random_hadamard(meta.d_head, &mut rng),
+                random_hadamard(meta.d_head, &mut rng),
+                random_hadamard(meta.d_ff, &mut rng),
+            )
+        };
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let cfg = ServeConfig { int_gemm: Some(true), threads: Some(2), ..ServeConfig::default() };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        assert!(!eng.int_gemm(), "asymmetric act grid must fall back to the f32 GEMM");
+        eng.submit_tokens(vec![1, 2], 3, 0.0, 7).unwrap();
+        assert_eq!(eng.run().unwrap().len(), 1);
     }
 
     #[test]

@@ -20,8 +20,11 @@
 //! same row) — the same determinism contract as the PR-1 kernels.
 
 use crate::config::QuantScheme;
+use crate::tensor::matmul::dot_i8_grouped;
 use crate::tensor::Tensor;
 use crate::util::par::{self, num_threads};
+
+use super::qact::{quantize_rows_into, QuantActs};
 
 /// Nibble-packed INT4 weight `(k, n)` with per-(column, group) scales.
 #[derive(Clone, Debug)]
@@ -168,6 +171,114 @@ impl Int4Weight {
         }
     }
 
+    /// Integer-accumulator GEMM: `out = deq(codes) @ W̃` for `m` rows of
+    /// int8 activation codes with per-row scales (the
+    /// [`QuantActs`] layout). **Overwrites** `out` (`m × n`).
+    ///
+    /// Per output element the work is
+    /// `Σ_g (act_scale·wscale_g) · Σ_{i∈g} xq_i·wq_i` — the inner sums
+    /// run exactly in i32 ([`dot_i8_grouped`]), the scale product folds
+    /// once per (row, group), and groups accumulate ascending in f32.
+    /// Same parallel shape as [`Self::matmul_into`] (threads own output
+    /// columns, one nibble unpack per column amortized over all lanes),
+    /// so results are bitwise identical across thread counts and batch
+    /// sizes. Versus the f32 dequant path the quantized codes are
+    /// identical and only the in-group f32 summation order differs
+    /// (bounded; pinned by `tests/props.rs`).
+    pub fn matmul_i8_into(
+        &self,
+        codes: &[i8],
+        act_scales: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        assert!(codes.len() >= m * self.k, "int gemm: codes size");
+        assert!(act_scales.len() >= m, "int gemm: scales size");
+        assert_eq!(out.len(), m * self.n, "int gemm: out size");
+        if m == 0 {
+            return;
+        }
+        let (k, n, group, ng) = (self.k, self.n, self.group, self.n_groups);
+        let bpc = (k + 1) / 2;
+        if m == 1 {
+            let a_s = act_scales[0];
+            let xq = &codes[..k];
+            par::par_row_chunks_mut(out, 1, 32, threads, |j0, chunk| {
+                let mut qbuf = vec![0i8; k];
+                for (jj, o) in chunk.iter_mut().enumerate() {
+                    let j = j0 + jj;
+                    unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
+                    *o = dot_i8_grouped(xq, &qbuf, &self.scales[j * ng..(j + 1) * ng], group, a_s);
+                }
+            });
+            return;
+        }
+        // transposed (n × m) like the f32 GEMM: one unpack per column,
+        // all lanes consume the i8 tile while it is hot
+        let mut out_t = vec![0.0f32; n * m];
+        par::par_row_chunks_mut(&mut out_t, m, 8, threads, |j0, chunk| {
+            let mut qbuf = vec![0i8; k];
+            for (jj, orow) in chunk.chunks_exact_mut(m).enumerate() {
+                let j = j0 + jj;
+                unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
+                let wscales = &self.scales[j * ng..(j + 1) * ng];
+                for (lane, o) in orow.iter_mut().enumerate() {
+                    let xq = &codes[lane * k..(lane + 1) * k];
+                    *o = dot_i8_grouped(xq, &qbuf, wscales, group, act_scales[lane]);
+                }
+            }
+        });
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] = out_t[j * m + i];
+            }
+        }
+    }
+
+    /// Fused quantize → integer GEMM → fold: quantizes `m` rows of `x`
+    /// to int8 codes on the `act` grid (`serve::qact`) and runs
+    /// [`Self::matmul_i8_into`]. **Overwrites** `out`.
+    pub fn quant_matmul_into(
+        &self,
+        x: &[f32],
+        m: usize,
+        act: &QuantScheme,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        assert_eq!(x.len(), m * self.k, "quant matmul: lhs size");
+        let mut codes = vec![0i8; m * self.k];
+        let mut scales = vec![0.0f32; m];
+        quantize_rows_into(x, self.k, act, &mut codes, &mut scales, threads);
+        self.matmul_i8_into(&codes, &scales, m, out, threads);
+    }
+
+    /// Tensor wrapper over [`Self::quant_matmul_into`] (keeps leading
+    /// shape) — the int-path equivalent of `fake_quant_rows(x) @ W̃`.
+    pub fn quant_matmul(&self, x: &Tensor, act: &QuantScheme) -> Tensor {
+        self.quant_matmul_with_threads(x, act, num_threads())
+    }
+
+    /// [`Self::quant_matmul`] with an explicit thread budget.
+    pub fn quant_matmul_with_threads(&self, x: &Tensor, act: &QuantScheme, threads: usize) -> Tensor {
+        let (m, kx) = x.as_2d();
+        assert_eq!(kx, self.k, "quant matmul inner dim: {kx} vs {}", self.k);
+        let mut out = Tensor::zeros(&[m, self.n]);
+        self.quant_matmul_into(&x.data, m, act, &mut out.data, threads);
+        let mut shape = x.shape.clone();
+        *shape.last_mut().unwrap() = self.n;
+        out.reshape(&shape)
+    }
+
+    /// Integer GEMM on a pre-quantized activation block.
+    pub fn matmul_quant_acts(&self, qa: &QuantActs, threads: usize) -> Tensor {
+        assert_eq!(qa.k, self.k, "quant acts inner dim: {} vs {}", qa.k, self.k);
+        let mut out = Tensor::zeros(&[qa.m, self.n]);
+        self.matmul_i8_into(&qa.codes, &qa.scales, qa.m, &mut out.data, threads);
+        out
+    }
+
     /// Tensor wrapper over [`Self::matmul_into`] (keeps leading shape).
     pub fn matmul(&self, x: &Tensor) -> Tensor {
         self.matmul_with_threads(x, num_threads())
@@ -284,6 +395,59 @@ mod tests {
             let one = iw.matmul_with_threads(&row, 4);
             assert_eq!(one.data, batched.row(i), "lane {i}");
         }
+    }
+
+    #[test]
+    fn int_gemm_close_to_f32_dequant_path() {
+        // identical quantized codes; only the in-group f32 summation
+        // order differs between the two paths, so outputs stay within
+        // a few ulps of each other at these magnitudes
+        let mut rng = Rng::new(5);
+        let act = QuantScheme::act4();
+        for (m, k, n, g) in [(1usize, 33, 7, Some(8)), (5, 16, 9, None), (16, 64, 12, Some(16))] {
+            let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+            let s = QuantScheme { group: g, ..QuantScheme::weight4() };
+            let iw = Int4Weight::pack(&w, &s);
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let int = iw.quant_matmul(&x, &act);
+            let f32_path = iw.matmul(&crate::quant::fakequant::fake_quant_rows(&x, &act));
+            assert!(int.max_abs_diff(&f32_path) < 1e-4, "{m}x{k}x{n}: int vs f32 path");
+            assert_eq!(int.shape, f32_path.shape);
+        }
+    }
+
+    #[test]
+    fn int_gemm_bitwise_across_threads_and_batch() {
+        let mut rng = Rng::new(6);
+        let act = QuantScheme::act4();
+        let w = Tensor::randn(&[33, 17], 0.3, &mut rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(8));
+        let x = Tensor::randn(&[9, 33], 1.0, &mut rng);
+        let batched = iw.quant_matmul_with_threads(&x, &act, 1);
+        for threads in [2usize, 8] {
+            let got = iw.quant_matmul_with_threads(&x, &act, threads);
+            assert_eq!(got.data, batched.data, "t={threads}");
+        }
+        // lane i of the batch == the single-row integer GEMV on its row
+        for i in 0..9 {
+            let row = Tensor::new(x.row(i).to_vec(), vec![1, 33]);
+            let one = iw.quant_matmul_with_threads(&row, &act, 4);
+            assert_eq!(one.data, batched.row(i), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn int_gemm_consumes_prequantized_acts() {
+        use super::super::qact::QuantActs;
+        let mut rng = Rng::new(7);
+        let act = QuantScheme::act4();
+        let w = Tensor::randn(&[40, 11], 0.3, &mut rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(16));
+        let x = Tensor::randn(&[6, 40], 1.0, &mut rng);
+        let qa = QuantActs::quantize_with_threads(&x, &act, 2);
+        let via_acts = iw.matmul_quant_acts(&qa, 4);
+        let fused = iw.quant_matmul_with_threads(&x, &act, 4);
+        assert_eq!(via_acts.data, fused.data, "shared quantized acts == fused path");
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! * [`Engine`] + [`Scheduler`] — admit N concurrent sequences against
 //!   the shared pool, batch prompt prefill, step every live lane per
 //!   decode iteration, and retire/admit without draining the batch.
+//! * [`QuantActs`] (`serve/qact.rs`) — activations quantized to int8
+//!   codes + per-row scales on the exact `fake_quant_rows` grid, feeding
+//!   the i32-accumulator GEMM (`Int4Weight::matmul_i8_into`) so the
+//!   quantized decode path runs on integers end to end
+//!   (`KURTAIL_INT_GEMM=0` routes back through the f32 dequant GEMM).
 //!
 //! Everything here runs on the host kernel layer (`util::par`
 //! row-chunking) with the repo-wide determinism contract: results are
@@ -21,9 +26,11 @@
 pub mod engine;
 pub mod int4;
 pub mod kvcache;
+pub mod qact;
 pub mod scheduler;
 
 pub use engine::{argmax, sample_token, Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
 pub use int4::Int4Weight;
 pub use kvcache::{KvPool, SeqKv};
+pub use qact::{int_gemm_enabled, QuantActs};
 pub use scheduler::{QueuedRequest, Scheduler};

@@ -1,0 +1,201 @@
+//! Activation quantization for the integer serving GEMM: int8 codes on
+//! the **exact** `fake_quant_rows` grid.
+//!
+//! The serve forward fake-quantizes every activation block before its
+//! packed-weight GEMM. The f32 path materializes the fake-quantized
+//! *values* (`code · scale` per element) and dots them against
+//! dequantized weights; this module materializes the *codes* instead —
+//! one `i8` per element plus one f32 scale per row — so the GEMM can run
+//! on integers and fold the scales once per (row, group).
+//!
+//! The grid is shared with [`crate::quant::fakequant`]: the scale is
+//! [`row_scale_buf`] (absmax or clip-quantile over the row, divided by
+//! `qmax`) and the code is `round(v / scale)` clamped to `±qmax` — the
+//! same two expressions `fq_row_sym` evaluates. Therefore
+//! `code as f32 * scale` reproduces the fake-quant output **bitwise**
+//! (pinned by `tests/props.rs::prop_qact_codes_match_fake_quant_grid`),
+//! which is what keeps the integer GEMM explainable against the
+//! simulated-quantization path.
+//!
+//! Codes fit i8 for every scheme with `bits ≤ 8`; the serving default is
+//! 4-bit (`qmax = 7`), leaving |code·wcode| ≤ 7·8 — small enough that an
+//! i32 accumulator is exact for any realistic row width (see
+//! [`crate::tensor::matmul::dot_i8_i32`]).
+
+use crate::config::QuantScheme;
+use crate::quant::fakequant::row_scale_buf;
+use crate::tensor::Tensor;
+use crate::util::par::{self, num_threads};
+
+/// `KURTAIL_INT_GEMM` escape hatch: the integer-accumulator serving GEMM
+/// is on by default; set `KURTAIL_INT_GEMM=0` to route quantized serving
+/// through the f32 dequant GEMM instead (A/B debugging, perf bisection).
+/// Read per call so tests and operators can flip it without restarting.
+pub fn int_gemm_enabled() -> bool {
+    int_gemm_flag(std::env::var("KURTAIL_INT_GEMM").ok().as_deref())
+}
+
+/// Parse rule behind [`int_gemm_enabled`]: unset → on, `0` → off,
+/// anything else → on. Split out so the rule itself is testable.
+fn int_gemm_flag(var: Option<&str>) -> bool {
+    var.map(|v| v.trim() != "0").unwrap_or(true)
+}
+
+/// Whether a scheme's codes fit the int8 activation path: the per-row
+/// grid must be symmetric (codes are signed levels) and ≤ 8 bits. The
+/// engine falls back to the f32 dequant GEMM for anything else.
+pub fn scheme_fits_i8(s: &QuantScheme) -> bool {
+    s.symmetric && s.bits <= 8
+}
+
+/// A block of activation rows quantized to int8 codes, one scale per
+/// row. `codes[r·k + i] as f32 * scales[r]` is bitwise the fake-quant
+/// value of element `(r, i)`.
+#[derive(Clone, Debug)]
+pub struct QuantActs {
+    pub m: usize,
+    pub k: usize,
+    /// `m × k` signed levels, row-major, each in `[-qmax, qmax]`.
+    pub codes: Vec<i8>,
+    /// One symmetric scale per row (the `row_scale_buf` grid).
+    pub scales: Vec<f32>,
+}
+
+impl QuantActs {
+    /// Quantize a `(…, k)` tensor row-wise on scheme `s`.
+    pub fn quantize(x: &Tensor, s: &QuantScheme) -> QuantActs {
+        Self::quantize_with_threads(x, s, num_threads())
+    }
+
+    /// [`Self::quantize`] with an explicit thread budget.
+    pub fn quantize_with_threads(x: &Tensor, s: &QuantScheme, threads: usize) -> QuantActs {
+        let (m, k) = x.as_2d();
+        let mut codes = vec![0i8; m * k];
+        let mut scales = vec![0.0f32; m];
+        quantize_rows_into(&x.data, k, s, &mut codes, &mut scales, threads);
+        QuantActs { m, k, codes, scales }
+    }
+
+    /// Dequantize back to the fake-quant tensor (tests / debugging):
+    /// bitwise equal to `fake_quant_rows(x, s)` on the source rows.
+    pub fn dequant(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.m, self.k]);
+        for r in 0..self.m {
+            let s = self.scales[r];
+            for i in 0..self.k {
+                out.data[r * self.k + i] = self.codes[r * self.k + i] as f32 * s;
+            }
+        }
+        out
+    }
+}
+
+/// Quantize `m = x.len()/width` rows of `width` f32s into caller-owned
+/// `codes` (`m × width`) and `scales` (`m`) buffers. Two row-parallel
+/// passes (scales, then codes), mirroring `Int4Weight::pack`; per-row
+/// math is exactly the `row_scale_buf` → `round(v/scale).clamp(±qmax)`
+/// pair of `fq_row_sym`, so the codes sit on the fake-quant grid.
+pub fn quantize_rows_into(
+    x: &[f32],
+    width: usize,
+    s: &QuantScheme,
+    codes: &mut [i8],
+    scales: &mut [f32],
+    threads: usize,
+) {
+    assert!(width > 0, "qact: zero row width");
+    assert_eq!(x.len() % width, 0, "qact: ragged rows");
+    let m = x.len() / width;
+    assert!(codes.len() >= m * width, "qact: codes buffer too small");
+    assert!(scales.len() >= m, "qact: scales buffer too small");
+    assert!(s.bits <= 8, "qact codes are i8 (bits ≤ 8), got {}", s.bits);
+    assert!(s.symmetric, "qact uses the symmetric per-row grid");
+    if m == 0 {
+        return;
+    }
+    par::par_row_chunks_mut(&mut scales[..m], 1, 64, threads, |r0, chunk| {
+        let mut buf = Vec::with_capacity(width);
+        for (i, sc) in chunk.iter_mut().enumerate() {
+            let row = &x[(r0 + i) * width..(r0 + i + 1) * width];
+            *sc = row_scale_buf(row, s, &mut buf);
+        }
+    });
+    let qmax = s.qmax();
+    let scales_ref: &[f32] = &scales[..m];
+    par::par_row_chunks_mut(&mut codes[..m * width], width, 16, threads, |r0, chunk| {
+        for (i, crow) in chunk.chunks_exact_mut(width).enumerate() {
+            let scale = scales_ref[r0 + i];
+            let row = &x[(r0 + i) * width..(r0 + i + 1) * width];
+            for (c, &v) in crow.iter_mut().zip(row) {
+                *c = (v / scale).round().clamp(-qmax, qmax) as i8;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fakequant::{fake_quant_rows, row_scale};
+    use crate::util::Rng;
+
+    #[test]
+    fn codes_reproduce_fake_quant_bitwise() {
+        let mut rng = Rng::new(0);
+        for (m, k) in [(1usize, 7usize), (5, 33), (16, 64), (3, 1)] {
+            let x = Tensor::randn(&[m, k], 1.2, &mut rng);
+            for s in [QuantScheme::act4(), QuantScheme { clip_quantile: None, ..QuantScheme::act4() }] {
+                let qa = QuantActs::quantize_with_threads(&x, &s, 3);
+                let want = fake_quant_rows(&x, &s);
+                assert_eq!(qa.dequant().data, want.data, "{m}x{k}");
+                for r in 0..m {
+                    assert_eq!(qa.scales[r], row_scale(x.row(r), &s), "scale row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_stay_on_the_integer_grid() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[9, 41], 2.0, &mut rng);
+        let s = QuantScheme::act4();
+        let qa = QuantActs::quantize(&x, &s);
+        let qmax = s.qmax() as i32;
+        assert!(qa.codes.iter().all(|&c| (c as i32).abs() <= qmax));
+        // clip quantile means some codes saturate at ±qmax on wide rows
+        assert!(qa.codes.iter().any(|&c| (c as i32).abs() == qmax));
+    }
+
+    #[test]
+    fn bitwise_across_thread_budgets() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[67, 96], 1.0, &mut rng);
+        let s = QuantScheme::act4();
+        let base = QuantActs::quantize_with_threads(&x, &s, 1);
+        for threads in [2usize, 8] {
+            let got = QuantActs::quantize_with_threads(&x, &s, threads);
+            assert_eq!(got.codes, base.codes, "t={threads}");
+            assert_eq!(got.scales, base.scales, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn int_gemm_flag_parse_rule() {
+        // the escape hatch: unset defaults ON, exactly "0" turns it off
+        assert!(int_gemm_flag(None), "unset must default to the int path");
+        assert!(!int_gemm_flag(Some("0")));
+        assert!(!int_gemm_flag(Some(" 0 ")));
+        assert!(int_gemm_flag(Some("1")));
+        assert!(int_gemm_flag(Some("")));
+        assert!(int_gemm_flag(Some("false")), "only literal 0 disables");
+    }
+
+    #[test]
+    fn scheme_i8_compatibility() {
+        assert!(scheme_fits_i8(&QuantScheme::act4()));
+        assert!(!scheme_fits_i8(&QuantScheme::kv4()), "asymmetric grids need the f32 path");
+        let s16 = QuantScheme { bits: 16, ..QuantScheme::act4() };
+        assert!(!scheme_fits_i8(&s16), ">8-bit codes don't fit i8");
+    }
+}

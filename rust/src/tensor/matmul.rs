@@ -184,6 +184,57 @@ fn microkernel(ar: &[&[f32]; MR], panel: &[f32], acc: &mut [[f32; NR]; MR]) {
     }
 }
 
+/// Integer dot with an i32 accumulator — the inner microkernel of the
+/// INT4×INT4 serving GEMM (`serve::Int4Weight::matmul_i8_into`).
+///
+/// Both operands are signed levels (activation codes on the per-row
+/// fake-quant grid, weight codes unpacked from nibbles), so the sum is
+/// **exact**: no rounding happens until the caller folds the f32 scales.
+/// Integer addition is associative, which is what lets LLVM vectorize
+/// this reduction — the f32 dequant dot must keep a single serial fadd
+/// chain for bitwise determinism and stays scalar. Overflow-safe for
+/// any realistic width: |a·b| ≤ 127·127 < 2¹⁴, so i32 is exact up to
+/// 2¹⁷ elements per call (serving rows are ≤ 2¹³).
+#[inline]
+pub fn dot_i8_i32(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&x, &w) in a.iter().zip(b) {
+        acc += x as i32 * w as i32;
+    }
+    acc
+}
+
+/// Grouped integer dot with the scale fold: per scale group `g`,
+/// `Σ_{i∈g} xq_i·wq_i` accumulates exactly in i32 via [`dot_i8_i32`],
+/// then folds `act_scale · wscale_g` **once** per group:
+///
+/// `out = Σ_g (act_scale · wscale_g) · (Σ_{i∈g} xq_i · wq_i)`
+///
+/// Groups run ascending with a single f32 accumulator, so the result is
+/// a pure function of the codes and scales — bitwise identical across
+/// thread counts and batch sizes. Versus the f32 dequant path
+/// (`Σ_g wscale_g · Σ_{i∈g} (xq_i·act_scale)·wq_i` in f32) the only
+/// delta is f32 summation order inside a group; the quantized codes are
+/// identical (pinned by `tests/props.rs`).
+#[inline]
+pub fn dot_i8_grouped(xq: &[i8], wq: &[i8], wscales: &[f32], group: usize, act_scale: f32) -> f32 {
+    let k = xq.len();
+    debug_assert_eq!(wq.len(), k);
+    debug_assert!(group * wscales.len() >= k, "scale groups must cover the row");
+    let mut acc = 0.0f32;
+    for (g, &ws) in wscales.iter().enumerate() {
+        let i0 = g * group;
+        if i0 >= k {
+            break;
+        }
+        let i1 = (i0 + group).min(k);
+        let part = dot_i8_i32(&xq[i0..i1], &wq[i0..i1]);
+        acc += (act_scale * ws) * part as f32;
+    }
+    acc
+}
+
 /// Scalar reference: the original cache-blocked i-k-j kernel, single
 /// threaded. Kept as the `BENCH_kernels.json` baseline and the
 /// small-input fallback. Same `C += A @ B` accumulate contract.
@@ -568,6 +619,39 @@ mod tests {
         gram_accumulate(&mut a, &x3);
         gram_accumulate(&mut b, &x2);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn dot_i8_i32_is_exact() {
+        let mut rng = Rng::new(5);
+        for k in [0usize, 1, 7, 64, 333] {
+            let a: Vec<i8> = (0..k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
+            let b: Vec<i8> = (0..k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
+            let want: i64 = a.iter().zip(&b).map(|(&x, &w)| x as i64 * w as i64).sum();
+            assert_eq!(dot_i8_i32(&a, &b) as i64, want, "k={k}");
+        }
+        // extremes don't overflow the per-element product
+        assert_eq!(dot_i8_i32(&[-128; 4], &[127; 4]), -128 * 127 * 4);
+    }
+
+    #[test]
+    fn dot_i8_grouped_folds_scales_per_group() {
+        let mut rng = Rng::new(6);
+        // odd k with a group that doesn't divide it (ragged last group)
+        let (k, group) = (13usize, 5usize);
+        let xq: Vec<i8> = (0..k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
+        let wq: Vec<i8> = (0..k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
+        let wscales = [0.25f32, 0.5, 0.125];
+        let act = 0.75f32;
+        let got = dot_i8_grouped(&xq, &wq, &wscales, group, act);
+        let mut want = 0.0f32;
+        for g in 0..3 {
+            let i0 = g * group;
+            let i1 = (i0 + group).min(k);
+            let part: i32 = (i0..i1).map(|i| xq[i] as i32 * wq[i] as i32).sum();
+            want += (act * wscales[g]) * part as f32;
+        }
+        assert_eq!(got, want, "fold must match the documented expression bitwise");
     }
 
     #[test]

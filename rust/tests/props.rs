@@ -4,7 +4,7 @@
 
 use kurtail::calib::{corpus, ByteTokenizer, CorpusKind, TokenDataset, World};
 use kurtail::config::QuantScheme;
-use kurtail::quant::fakequant::fake_quant_rows_with_threads;
+use kurtail::quant::fakequant::{fake_quant_rows_with_threads, row_scale};
 use kurtail::quant::{fake_quant_rows, fake_quant_rows_asym, rtn_quantize};
 use kurtail::quant::gptq::{gptq_quantize, hessian_error};
 use kurtail::rotation::blockdiag_heads;
@@ -17,7 +17,9 @@ use kurtail::tensor::matmul::{
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
 use kurtail::runtime::{ConfigMeta, ParamSpec};
-use kurtail::serve::{Engine, Int4Weight, KvPool, SeqKv, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::serve::{
+    Engine, Int4Weight, KvPool, QuantActs, SeqKv, ServeConfig, ServeModel, ServeQuantSpec,
+};
 use kurtail::tensor::stats::{kurtail_loss, kurtosis};
 use kurtail::tensor::Tensor;
 use kurtail::util::proptest::{check, prop_assert, prop_close};
@@ -320,6 +322,77 @@ fn prop_int4_matmul_deterministic_and_batch_invariant() {
         // and stays within dequantized-reference tolerance
         let want = rows_matmul(&x, &iw.unpack());
         prop_assert(base.max_abs_diff(&want) < 1e-3, "int4 matmul ≈ dense on deq")
+    });
+}
+
+#[test]
+fn prop_qact_codes_match_fake_quant_grid() {
+    // the integer GEMM's activation codes must sit on the *exact*
+    // fake_quant_rows grid: code·scale reproduces the fake-quant value
+    // bitwise at odd widths, with and without the clip quantile
+    check(25, |rng| {
+        let m = 1 + rng.below(12);
+        let k = 1 + rng.below(90); // odd widths included
+        let x = Tensor::randn(&[m, k], 0.2 + rng.uniform() * 2.0, rng);
+        for s in [QuantScheme::act4(), QuantScheme { clip_quantile: None, ..QuantScheme::act4() }] {
+            let qa = QuantActs::quantize_with_threads(&x, &s, 1 + rng.below(8));
+            let want = fake_quant_rows(&x, &s);
+            prop_assert(qa.dequant().data == want.data, "code·scale == fake_quant bitwise")?;
+            let qmax = s.qmax() as i32;
+            prop_assert(
+                qa.codes.iter().all(|&c| (c as i32).abs() <= qmax),
+                "codes within ±qmax",
+            )?;
+            for r in 0..m {
+                prop_assert(qa.scales[r] == row_scale(x.row(r), &s), "per-row scale on grid")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int_gemm_bitwise_invariant_and_bounded_vs_f32_path() {
+    // the i32-accumulator GEMM must be bitwise deterministic across
+    // thread budgets and batch sizes (the serving invariants), and its
+    // delta to the f32 dequant GEMM — same codes, different f32
+    // summation order inside a scale group — must stay bounded
+    check(15, |rng| {
+        let k = 8 + rng.below(56);
+        let n = 1 + rng.below(24);
+        let m = 1 + rng.below(16);
+        let g = 1 + rng.below(k); // group boundaries that straddle k
+        let act = QuantScheme::act4();
+        let w = Tensor::randn(&[k, n], 0.3, rng);
+        let iw = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(g));
+        let x = Tensor::randn(&[m, k], 1.0, rng);
+        let base = iw.quant_matmul_with_threads(&x, &act, 1);
+        for threads in [2usize, 8] {
+            prop_assert(
+                iw.quant_matmul_with_threads(&x, &act, threads).data == base.data,
+                "int GEMM bitwise across threads",
+            )?;
+        }
+        // lane i of the batched GEMM == the standalone integer GEMV
+        for i in 0..m {
+            let row = Tensor::new(x.row(i).to_vec(), vec![1, k]);
+            prop_assert(
+                iw.quant_matmul_with_threads(&row, &act, 4).data == base.row(i),
+                "int GEMV == batched lane",
+            )?;
+        }
+        // pre-quantized acts and the fused entry agree bitwise
+        let qa = QuantActs::quantize_with_threads(&x, &act, 3);
+        prop_assert(
+            iw.matmul_quant_acts(&qa, 2).data == base.data,
+            "shared quantized acts == fused quantize→GEMM",
+        )?;
+        // bounded relation to the f32 dequant path on identical codes
+        let f32_path = iw.matmul(&fake_quant_rows(&x, &act));
+        prop_assert(
+            base.max_abs_diff(&f32_path) < 1e-4,
+            "int vs f32 path delta bounded (summation order only)",
+        )
     });
 }
 

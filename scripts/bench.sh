@@ -2,6 +2,8 @@
 # Build release, run the kernel + serve benchmarks, and drop
 # BENCH_kernels.json / BENCH_serve.json at the repo root so the perf
 # trajectories are tracked PR-over-PR (see rust/README.md for schemas).
+# This is the single bench driver: CI's bench-gate job runs it and then
+# gates the output with scripts/check_bench.sh against BENCH_baseline/.
 #
 # Usage:  scripts/bench.sh            # full run
 #         KURTAIL_THREADS=8 scripts/bench.sh
@@ -23,6 +25,6 @@ grep -o '"kernel": "[^"]*"\|"dim": [0-9]*\|"speedup": [0-9.]*' "$KURTAIL_BENCH_J
 echo "wrote $KURTAIL_BENCH_JSON"
 
 echo "--- BENCH_serve.json summary ---"
-grep -o '"lanes": [0-9]*\|"tok_s": [0-9.]*\|"speedup_vs_lane1": [0-9.]*\|"reduction": [0-9.]*' \
-  "$KURTAIL_BENCH_SERVE_JSON" | paste - - - || true
+grep -o '"lanes": [0-9]*\|"tok_s": [0-9.]*\|"speedup_vs_lane1": [0-9.]*\|"int_gemm_speedup": [0-9.]*\|"reduction": [0-9.]*' \
+  "$KURTAIL_BENCH_SERVE_JSON" | paste - - - - || true
 echo "wrote $KURTAIL_BENCH_SERVE_JSON"

@@ -1,0 +1,106 @@
+#!/usr/bin/env bash
+# Bench-regression gate: compare the current BENCH_kernels.json /
+# BENCH_serve.json (written by scripts/bench.sh) against the committed
+# snapshots in BENCH_baseline/ and fail when a tracked headline metric
+# regresses by 10% or more (ROADMAP: "regressions ≥ 10% should block").
+#
+# Tracked metrics (all dimensionless ratios, so they transfer across
+# hosts better than raw ns):
+#   * kernels: matmul@1024 speedup, gram@1024 speedup
+#     (packed-parallel vs the scalar seed kernel)
+#   * serve:   runs[lanes=16].speedup_vs_lane1   (continuous batching)
+#              runs[lanes=16].int_gemm_speedup   (int vs f32-dequant GEMM)
+#
+# Usage:  scripts/check_bench.sh            # gate current vs baseline
+#         scripts/check_bench.sh --update   # refresh BENCH_baseline/
+#                                           # from the current files
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+kernels="${KURTAIL_BENCH_JSON:-$repo_root/BENCH_kernels.json}"
+serve="${KURTAIL_BENCH_SERVE_JSON:-$repo_root/BENCH_serve.json}"
+baseline_dir="$repo_root/BENCH_baseline"
+
+for f in "$kernels" "$serve"; do
+  if [[ ! -f "$f" ]]; then
+    echo "check_bench: missing $f — run scripts/bench.sh first" >&2
+    exit 2
+  fi
+done
+
+if [[ "${1:-}" == "--update" ]]; then
+  mkdir -p "$baseline_dir"
+  cp "$kernels" "$baseline_dir/BENCH_kernels.json"
+  cp "$serve" "$baseline_dir/BENCH_serve.json"
+  echo "check_bench: baselines refreshed in $baseline_dir/"
+  exit 0
+fi
+
+python3 - "$kernels" "$serve" "$baseline_dir" <<'PY'
+import json, sys
+
+kernels_path, serve_path, baseline_dir = sys.argv[1:4]
+TOLERANCE = 0.10  # fail at >= 10% regression
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def kernel_speedup(doc, kernel, dim):
+    for c in doc.get("comparisons", []):
+        if c.get("kernel") == kernel and c.get("dim") == dim:
+            return float(c["speedup"])
+    raise KeyError(f"no comparison entry for {kernel}@{dim}")
+
+
+def serve_run_metric(doc, lanes, field):
+    for r in doc.get("runs", []):
+        if r.get("lanes") == lanes:
+            return float(r[field])
+    raise KeyError(f"no serve run with lanes={lanes}")
+
+
+cur_k, cur_s = load(kernels_path), load(serve_path)
+base_k = load(f"{baseline_dir}/BENCH_kernels.json")
+base_s = load(f"{baseline_dir}/BENCH_serve.json")
+
+metrics = [
+    ("kernels: matmul@1024 speedup", kernel_speedup, (cur_k, "matmul", 1024), (base_k, "matmul", 1024)),
+    ("kernels: gram@1024 speedup", kernel_speedup, (cur_k, "gram", 1024), (base_k, "gram", 1024)),
+    ("serve: lanes=16 speedup_vs_lane1", serve_run_metric, (cur_s, 16, "speedup_vs_lane1"), (base_s, 16, "speedup_vs_lane1")),
+    ("serve: lanes=16 int_gemm_speedup", serve_run_metric, (cur_s, 16, "int_gemm_speedup"), (base_s, 16, "int_gemm_speedup")),
+]
+
+failures = []
+for name, fn, cur_args, base_args in metrics:
+    try:
+        base = fn(*base_args)
+    except KeyError as e:
+        # a metric absent from the baseline is not yet gated (lets the
+        # baseline trail new bench fields by one refresh)
+        print(f"  SKIP {name}: baseline has no value ({e})")
+        continue
+    try:
+        cur = fn(*cur_args)
+    except KeyError as e:
+        # a gated metric the current bench no longer emits is itself a
+        # regression (the headline disappeared), not a crash
+        print(f"  REGRESSION  {name}: missing from current bench output ({e})")
+        failures.append(f"{name} (missing from current output)")
+        continue
+    floor = base * (1.0 - TOLERANCE)
+    status = "ok" if cur >= floor else "REGRESSION"
+    print(f"  {status:>10}  {name}: current {cur:.3f} vs baseline {base:.3f} (floor {floor:.3f})")
+    if cur < floor:
+        failures.append(name)
+
+if failures:
+    print(f"check_bench: {len(failures)} metric(s) regressed >= {TOLERANCE:.0%}:", file=sys.stderr)
+    for name in failures:
+        print(f"  - {name}", file=sys.stderr)
+    print("if intentional, refresh with scripts/check_bench.sh --update", file=sys.stderr)
+    sys.exit(1)
+print("check_bench: all tracked metrics within tolerance")
+PY
