@@ -120,6 +120,24 @@ fn host_kernels() {
             f32_path,
             int_path,
         ));
+
+        // i8 panel cache A/B on the integer GEMM: per-call nibble
+        // unpack (baseline) vs cached contiguous i8 panels (new)
+        let mut iw_hot = iw.clone();
+        iw_hot.build_panels();
+        let cold = b.run(&format!("host/int4_gemm_unpack_{GEMM_LANES}x{d}x{d}"), || {
+            iw.quant_matmul(&lanes, &scheme)
+        });
+        let hot = b.run(&format!("host/int4_gemm_panel_{GEMM_LANES}x{d}x{d}"), || {
+            iw_hot.quant_matmul(&lanes, &scheme)
+        });
+        comparisons.push(comparison(
+            "int4_gemm_panel",
+            d,
+            format!("{GEMM_LANES}x{d}x{d}"),
+            cold,
+            hot,
+        ));
     }
 
     let path =

@@ -32,6 +32,18 @@
 //! order distinguishes the paths; both keep the batching/threading
 //! invariants above. `KURTAIL_INT_GEMM=0` (or
 //! `ServeConfig::int_gemm = Some(false)`) restores the f32 dequant GEMM.
+//!
+//! **Zero-allocation hot path.** Every per-iteration buffer lives in the
+//! engine-owned [`DecodeScratch`] arena (`serve/scratch.rs`), rotation
+//! matrices and the logits head are pre-packed at model build
+//! ([`crate::tensor::matmul::PackedB`]), packed weights optionally carry
+//! a cached i8 panel (`Int4Weight::build_panels`, budgeted by
+//! `ServeConfig::panel_cache` / `KURTAIL_PANEL_CACHE`), and lane/KV
+//! bookkeeping reserves its admission-time worst case — so a
+//! steady-state decode `step()` performs zero heap allocations (pinned
+//! by `tests/serve_scratch.rs`). All of it is bitwise invisible:
+//! `KURTAIL_ARENA=0` re-allocates everything per iteration (the PR-3
+//! profile) and produces identical token streams.
 
 use anyhow::Result;
 
@@ -40,15 +52,16 @@ use crate::config::{KvQuant, QuantScheme};
 use crate::model::Params;
 use crate::quant::fakequant::{fq_row_sym, row_scale_buf};
 use crate::runtime::ConfigMeta;
-use crate::tensor::matmul::matmul_into_threads;
+use crate::tensor::matmul::{matmul_into_threads, PackedB};
 use crate::tensor::Tensor;
 use crate::util::par::{self, num_threads};
 use crate::util::Rng;
 
-use super::int4::Int4Weight;
+use super::int4::{panel_cache_budget, GemmScratch, Int4Weight};
 use super::kvcache::{KvPool, SeqKv};
-use super::qact::{int_gemm_enabled, quantize_rows_into, scheme_fits_i8};
+use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch, scheme_fits_i8};
 use super::scheduler::{QueuedRequest, Scheduler};
+use super::scratch::{arena_enabled, DecodeScratch};
 
 /// RoPE base shared by every preset (`ModelConfig.rope_base`); the
 /// manifest does not carry it because no config overrides it.
@@ -75,46 +88,30 @@ impl ServeQuantSpec {
     }
 }
 
-/// One linear's serving-time storage.
+/// One linear's serving-time storage. Dense f32 weights can carry a
+/// pre-packed B-panel copy ([`PackedB`]) so the arena path never
+/// re-packs (or allocates) inside the decode loop. The copy is 2× the
+/// fp weight memory, so it is built lazily by
+/// [`ServeModel::prepack`] — only when an engine that will
+/// actually read it (arena mode) is constructed.
 #[derive(Clone)]
 enum LinW {
-    F32(Tensor),
+    F32 { t: Tensor, packed: Option<PackedB> },
     Int4(Int4Weight),
 }
 
 impl LinW {
     fn bytes(&self) -> usize {
         match self {
-            LinW::F32(t) => t.numel() * 4,
+            LinW::F32 { t, .. } => t.numel() * 4,
             LinW::Int4(w) => w.bytes(),
         }
     }
 
     fn dense_bytes(&self) -> usize {
         match self {
-            LinW::F32(t) => t.numel() * 4,
+            LinW::F32 { t, .. } => t.numel() * 4,
             LinW::Int4(w) => w.dense_bytes(),
-        }
-    }
-
-    /// `out = x @ W` (overwrites `out`).
-    fn matmul_into(&self, x: &[f32], m: usize, out: &mut [f32], threads: usize) {
-        match self {
-            LinW::F32(t) => {
-                out.fill(0.0);
-                matmul_into_threads(x, &t.data, out, m, t.shape[0], t.shape[1], threads);
-            }
-            LinW::Int4(w) => w.matmul_into(x, m, out, threads),
-        }
-    }
-
-    /// Integer-accumulator GEMM on pre-quantized activation codes
-    /// (overwrites `out`). Only the quantized (packed) serving path
-    /// takes this; fp models never quantize activations.
-    fn matmul_i8_into(&self, codes: &[i8], scales: &[f32], m: usize, out: &mut [f32], threads: usize) {
-        match self {
-            LinW::Int4(w) => w.matmul_i8_into(codes, scales, m, out, threads),
-            LinW::F32(_) => unreachable!("integer GEMM requires packed int4 weights"),
         }
     }
 }
@@ -122,21 +119,52 @@ impl LinW {
 /// One serving projection: the integer path consumes the block's shared
 /// int8 codes + per-row scales; the f32 path the (already fake-quantized)
 /// dense activations. Split out so every GEMM site in `forward` stays a
-/// one-liner per weight.
+/// one-liner per weight. Overwrites `out`. `arena = false` reproduces
+/// the PR-3 per-call allocation profile (bench A/B + equality tests);
+/// results are bitwise identical either way.
+#[allow(clippy::too_many_arguments)]
 fn project(
     w: &LinW,
     use_int: bool,
+    arena: bool,
     z: &[f32],
     codes: &[i8],
     scales: &[f32],
     m: usize,
     out: &mut [f32],
     threads: usize,
+    gemm: &mut GemmScratch,
 ) {
-    if use_int {
-        w.matmul_i8_into(codes, scales, m, out, threads);
-    } else {
-        w.matmul_into(z, m, out, threads);
+    match w {
+        LinW::Int4(w) => {
+            if use_int {
+                if arena {
+                    w.matmul_i8_scratch(codes, scales, m, out, threads, gemm);
+                } else {
+                    w.matmul_i8_into(codes, scales, m, out, threads);
+                }
+            } else if arena {
+                w.matmul_into_scratch(z, m, out, threads, gemm);
+            } else {
+                w.matmul_into(z, m, out, threads);
+            }
+        }
+        LinW::F32 { t, packed } => {
+            // fp models never quantize activations, so the integer path
+            // cannot reach a dense weight. Hard assert (all builds): on
+            // the int path `z` holds *unquantized* activations, so
+            // falling through here would silently compute off-grid.
+            assert!(!use_int, "integer GEMM requires packed int4 weights");
+            match packed {
+                // arena engines pre-pack at construction; the fallback
+                // (pack per call) is bitwise identical either way
+                Some(p) if arena => p.matmul_overwrite(z, &t.data, out, m, threads),
+                _ => {
+                    out.fill(0.0);
+                    matmul_into_threads(z, &t.data, out, m, t.shape[0], t.shape[1], threads);
+                }
+            }
+        }
     }
 }
 
@@ -144,18 +172,28 @@ fn project(
 /// `data` into int8 codes + per-row scales (leaving `data` untouched),
 /// the f32 path fake-quantizes `data` in place — the single spot where
 /// the two paths' pre-GEMM step lives, so every site in `forward` stays
-/// in lockstep.
+/// in lockstep. The arena path lends per-chunk selection scratch from
+/// `bufs`; the legacy path allocates per call (PR-3 profile).
+#[allow(clippy::too_many_arguments)]
 fn quantize_site(
     data: &mut [f32],
     width: usize,
     act: &QuantScheme,
     use_int: bool,
+    arena: bool,
     codes: &mut [i8],
     scales: &mut [f32],
     threads: usize,
+    bufs: &mut [Vec<f32>],
 ) {
     if use_int {
-        quantize_rows_into(data, width, act, codes, scales, threads);
+        if arena {
+            quantize_rows_scratch(data, width, act, codes, scales, threads, bufs);
+        } else {
+            quantize_rows_into(data, width, act, codes, scales, threads);
+        }
+    } else if arena {
+        fq_rows_scratch(data, width, act, threads, bufs);
     } else {
         fq_rows(data, width, act, threads);
     }
@@ -175,17 +213,50 @@ struct LayerW {
     wd: LinW,
 }
 
+impl LayerW {
+    /// Every linear of the layer in canonical order
+    /// (wq, wk, wv, wo, wg?, wu, wd) — the single definition the byte
+    /// accounting and the panel-cache budget walk share.
+    fn linears(&self) -> impl Iterator<Item = &LinW> {
+        [Some(&self.wq), Some(&self.wk), Some(&self.wv), Some(&self.wo), self.wg.as_ref(), Some(&self.wu), Some(&self.wd)]
+            .into_iter()
+            .flatten()
+    }
+
+    /// [`Self::linears`], mutably (same order).
+    fn linears_mut(&mut self) -> impl Iterator<Item = &mut LinW> {
+        [&mut self.wq, &mut self.wk, &mut self.wv, &mut self.wo]
+            .into_iter()
+            .chain(self.wg.as_mut())
+            .chain([&mut self.wu, &mut self.wd])
+    }
+}
+
+/// Pre-packed online rotations (arena path: no per-call B re-pack).
+#[derive(Clone)]
+struct RotsPacked {
+    r3: PackedB,
+    r4: PackedB,
+    r5: PackedB,
+}
+
 /// A model prepared for serving: embedding/head in f32, transformer
 /// linears packed INT4 (quant) or dense f32 (fp), RoPE tables
-/// precomputed to `max_pos`.
+/// precomputed to `max_pos`. The logits head, the online rotations and
+/// any dense-f32 linears can additionally carry a [`PackedB`] copy —
+/// built lazily by [`Self::prepack`] (arena-mode `Engine::new` calls
+/// it) so only engines whose decode loop reads the panels pay the
+/// extra memory.
 #[derive(Clone)]
 pub struct ServeModel {
     pub meta: ConfigMeta,
     embed: Tensor,
     head_t: Tensor,
+    head_packed: Option<PackedB>,
     lnf: Vec<f32>,
     layers: Vec<LayerW>,
     quant: Option<ServeQuantSpec>,
+    rots_packed: Option<RotsPacked>,
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
     /// Maximum cache position + 1 a request may reach.
@@ -220,7 +291,9 @@ impl ServeModel {
         let pack = |w: Tensor| -> LinW {
             match &quant {
                 Some(q) => LinW::Int4(Int4Weight::pack(&w, &q.weight)),
-                None => LinW::F32(w),
+                // the PackedB copy is deferred to prepack (2× fp
+                // memory — only arena engines pay it)
+                None => LinW::F32 { t: w, packed: None },
             }
         };
         let mut layers = Vec::with_capacity(meta.n_layers);
@@ -254,14 +327,87 @@ impl ServeModel {
         Ok(Self {
             embed: params.get("embed").clone(),
             head_t: params.get("head").t(),
+            head_packed: None,
             lnf: params.get("lnf").data.clone(),
             meta,
             layers,
             quant,
+            rots_packed: None,
             rope_cos,
             rope_sin,
             max_pos,
         })
+    }
+
+    /// Build i8 panel caches over the packed linears, greedy-fit in
+    /// layer order (wq, wk, wv, wo, wg, wu, wd per layer): each weight
+    /// is cached iff its panel still fits the remaining budget, so a
+    /// smaller later weight may be cached after a larger one was
+    /// rejected. The budget is a hard cap: panels a previous
+    /// (larger-budget) build left on this model are dropped when they
+    /// no longer fit, so re-entry with any budget converges to the same
+    /// greedy-fit result. Returns the bytes cached. Idempotent at a
+    /// fixed budget; no-op for fp models.
+    pub fn build_panel_cache(&mut self, budget: usize) -> usize {
+        let mut used = 0usize;
+        for w in self.layers.iter_mut().flat_map(LayerW::linears_mut) {
+            if let LinW::Int4(iw) = w {
+                let pb = iw.panel_bytes();
+                if used.saturating_add(pb) <= budget {
+                    iw.build_panels(); // no-op when already cached
+                    used += pb;
+                } else {
+                    iw.drop_panels(); // enforce the cap on warm models
+                }
+            }
+        }
+        used
+    }
+
+    /// Bytes currently held by built i8 panels across all linears.
+    pub fn panel_cache_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(LayerW::linears)
+            .map(|w| match w {
+                LinW::Int4(iw) if iw.has_panels() => iw.panel_bytes(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Build the [`PackedB`] copy of every constant GEMM operand the
+    /// arena decode path multiplies against — the logits head, the
+    /// online rotations (quant models), and any dense-f32 linears —
+    /// so that path never re-packs B per call. Idempotent; returns the
+    /// packed bytes held afterwards. Arena-mode `Engine::new` invokes
+    /// this; legacy-mode engines (`KURTAIL_ARENA=0`) skip it and pay
+    /// the per-call re-pack instead, keeping their resident memory at
+    /// the PR-3 profile.
+    pub fn prepack(&mut self) -> usize {
+        let d = self.meta.d_model;
+        let head = self
+            .head_packed
+            .get_or_insert_with(|| PackedB::pack(&self.head_t.data, d, self.meta.vocab));
+        let mut bytes = head.bytes();
+        if let Some(q) = &self.quant {
+            let dh = self.meta.d_head;
+            let ff = self.meta.d_ff;
+            let rots = self.rots_packed.get_or_insert_with(|| RotsPacked {
+                r3: PackedB::pack(&q.r3.data, dh, dh),
+                r4: PackedB::pack(&q.r4.data, dh, dh),
+                r5: PackedB::pack(&q.r5.data, ff, ff),
+            });
+            bytes += rots.r3.bytes() + rots.r4.bytes() + rots.r5.bytes();
+        }
+        for w in self.layers.iter_mut().flat_map(LayerW::linears_mut) {
+            if let LinW::F32 { t, packed } = w {
+                let p = packed
+                    .get_or_insert_with(|| PackedB::pack(&t.data, t.shape[0], t.shape[1]));
+                bytes += p.bytes();
+            }
+        }
+        bytes
     }
 
     pub fn is_quantized(&self) -> bool {
@@ -275,25 +421,12 @@ impl ServeModel {
 
     /// Dense-f32 bytes of the same linears (the compression baseline).
     pub fn dense_weight_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| {
-                [Some(&l.wq), Some(&l.wk), Some(&l.wv), Some(&l.wo), l.wg.as_ref(), Some(&l.wu), Some(&l.wd)]
-                    .into_iter()
-                    .flatten()
-                    .map(|w| w.dense_bytes())
-                    .sum::<usize>()
-            })
-            .sum()
+        self.layers.iter().flat_map(LayerW::linears).map(LinW::dense_bytes).sum()
     }
 }
 
 fn layer_bytes(l: &LayerW) -> usize {
-    [Some(&l.wq), Some(&l.wk), Some(&l.wv), Some(&l.wo), l.wg.as_ref(), Some(&l.wu), Some(&l.wd)]
-        .into_iter()
-        .flatten()
-        .map(|w| w.bytes())
-        .sum()
+    l.linears().map(LinW::bytes).sum()
 }
 
 // ------------------------------------------------------------- engine
@@ -318,6 +451,17 @@ pub struct ServeConfig {
     /// schemes whose codes don't fit i8 (asymmetric or > 8 bits — those
     /// fall back to the f32 dequant GEMM).
     pub int_gemm: Option<bool>,
+    /// i8 panel-cache byte budget for the packed weights: `None`
+    /// follows `KURTAIL_PANEL_CACHE` (unset → unbounded), `Some(0)`
+    /// disables the cache, `Some(bytes)` caps it. Panels cost 2× the
+    /// packed codes per cached weight and are bitwise transparent.
+    pub panel_cache: Option<usize>,
+    /// Persistent decode scratch arena: `None` follows `KURTAIL_ARENA`
+    /// (unset → on). `Some(false)` re-allocates every per-iteration
+    /// buffer — the PR-3 allocation profile, kept for bench A/B and the
+    /// fresh-alloc-vs-arena equality tests. Token streams are bitwise
+    /// identical either way.
+    pub arena: Option<bool>,
 }
 
 impl Default for ServeConfig {
@@ -329,6 +473,8 @@ impl Default for ServeConfig {
             kv_quant: KvQuant::Asym4,
             threads: None,
             int_gemm: None,
+            panel_cache: None,
+            arena: None,
         }
     }
 }
@@ -350,6 +496,8 @@ pub struct EngineStats {
     pub decode_tokens: u64,
     pub admitted: u64,
     pub retired: u64,
+    /// Lanes retired early by their stop token (subset of `retired`).
+    pub eos_retired: u64,
     pub peak_lanes: usize,
 }
 
@@ -361,6 +509,10 @@ struct Lane {
     produced: usize,
     temp: f32,
     rng: Rng,
+    /// EOS-style stop token (see `QueuedRequest::stop`).
+    stop: Option<i32>,
+    /// The stop token fired — retire at the next sweep.
+    stopped: bool,
     seq: SeqKv,
     /// Tokens already written to the KV cache.
     pos: usize,
@@ -378,11 +530,14 @@ pub struct Engine {
     committed_blocks: usize,
     threads: usize,
     int_gemm: bool,
+    /// Persistent-arena mode (`ServeConfig::arena` / `KURTAIL_ARENA`).
+    arena: bool,
+    scratch: DecodeScratch,
     pub stats: EngineStats,
 }
 
 impl Engine {
-    pub fn new(model: ServeModel, cfg: &ServeConfig) -> Result<Self> {
+    pub fn new(mut model: ServeModel, cfg: &ServeConfig) -> Result<Self> {
         anyhow::ensure!(cfg.max_lanes >= 1, "need at least one lane");
         let meta = &model.meta;
         let threads = cfg.threads.unwrap_or_else(num_threads).max(1);
@@ -397,6 +552,29 @@ impl Engine {
         // GEMM, which every spec supports
         let int_gemm = cfg.int_gemm.unwrap_or_else(int_gemm_enabled)
             && model.quant.as_ref().is_none_or(|q| scheme_fits_i8(&q.act));
+        let arena = cfg.arena.unwrap_or_else(arena_enabled);
+        // i8 panel cache, budgeted; bitwise transparent to the GEMMs.
+        // The budget is enforced as a hard cap even on a model warmed by
+        // an earlier (larger-budget) engine build — excess panels drop.
+        let budget = cfg.panel_cache.unwrap_or_else(panel_cache_budget);
+        model.build_panel_cache(budget);
+        // arena engines read pre-packed B panels (head, rotations,
+        // dense linears); legacy-mode engines re-pack per call, so the
+        // extra copies are skipped entirely on that profile
+        if arena {
+            model.prepack();
+        }
+        // size the arena once for the admission-time peak (max_lanes
+        // decode rows); a longer prompt prefill grows it once and the
+        // grown buffers stay for the rest of the engine's life
+        let mut scratch = DecodeScratch::new(threads);
+        {
+            let m = &model.meta;
+            scratch.ensure(cfg.max_lanes, m.d_model, m.d_ff, m.vocab, model.max_pos);
+        }
+        // the decode slot list is mem::taken around each decode batch,
+        // so it must carry its full capacity itself (ensure() skips it)
+        scratch.slots.reserve(cfg.max_lanes);
         Ok(Self {
             lanes: (0..cfg.max_lanes).map(|_| None).collect(),
             model,
@@ -407,6 +585,8 @@ impl Engine {
             committed_blocks: 0,
             threads,
             int_gemm,
+            arena,
+            scratch,
             stats: EngineStats::default(),
         })
     }
@@ -417,6 +597,19 @@ impl Engine {
         self.int_gemm
     }
 
+    /// Whether the persistent scratch arena is active
+    /// (`ServeConfig::arena`, falling back to `KURTAIL_ARENA`).
+    pub fn arena(&self) -> bool {
+        self.arena
+    }
+
+    /// Bytes held by the i8 weight panel cache (0 = cache off).
+    /// Delegates to the model's live accounting so it always reflects
+    /// the panels the GEMMs actually read.
+    pub fn panel_cache_bytes(&self) -> usize {
+        self.model.panel_cache_bytes()
+    }
+
     /// Queue a text prompt (byte-tokenized). Returns the request id.
     pub fn submit(&mut self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<usize> {
         self.submit_tokens(ByteTokenizer.encode(prompt), n_tokens, temp, seed)
@@ -424,6 +617,22 @@ impl Engine {
 
     /// Queue a pre-tokenized prompt. Returns the request id.
     pub fn submit_tokens(&mut self, tokens: Vec<i32>, n_tokens: usize, temp: f32, seed: u64) -> Result<usize> {
+        self.submit_tokens_stop(tokens, n_tokens, temp, seed, None)
+    }
+
+    /// [`Self::submit_tokens`] with an EOS-style stop token: the lane
+    /// retires as soon as it emits `stop` (the stop token is included
+    /// in the completion), immediately releasing its **whole** block
+    /// reservation — unclaimed blocks included — so queued requests can
+    /// admit mid-batch without waiting out `n_tokens`.
+    pub fn submit_tokens_stop(
+        &mut self,
+        tokens: Vec<i32>,
+        n_tokens: usize,
+        temp: f32,
+        seed: u64,
+        stop: Option<i32>,
+    ) -> Result<usize> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         anyhow::ensure!(n_tokens >= 1, "need at least one generated token");
         let vocab = self.model.meta.vocab as i32;
@@ -445,7 +654,7 @@ impl Engine {
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.sched.push(QueuedRequest { id, tokens, n_new: n_tokens, temp, seed });
+        self.sched.push(QueuedRequest { id, tokens, n_new: n_tokens, temp, seed, stop });
         Ok(id)
     }
 
@@ -458,6 +667,16 @@ impl Engine {
     /// queued requests into free lanes, then decode one token on every
     /// other live lane. Returns `false` once no work remains.
     pub fn step(&mut self) -> Result<bool> {
+        self.step_with(|_, _| {})
+    }
+
+    /// [`Self::step`] with a per-token streaming callback:
+    /// `on_token(request_id, token)` fires for every token produced
+    /// this iteration, in deterministic order — freshly admitted lanes
+    /// first (their prefill-seeded token, in admission slot order),
+    /// then the decode batch in slot-ascending order. This is the
+    /// SSE-style serving hook; `step()` is this with a no-op callback.
+    pub fn step_with(&mut self, mut on_token: impl FnMut(usize, i32)) -> Result<bool> {
         self.retire_finished();
 
         // admit into free lanes (FCFS, reservation-checked); freshly
@@ -476,36 +695,53 @@ impl Engine {
             else {
                 break;
             };
-            let reserved = self.pool.blocks_needed(self.model.meta.n_layers, req.total_tokens());
+            let total = req.total_tokens();
+            let reserved = self.pool.blocks_needed(self.model.meta.n_layers, total);
             self.committed_blocks += reserved;
+            let rng = req.rng();
+            // reserve the worst-case token and block capacity up front
+            // so the per-step pushes below never reallocate mid-decode
+            let mut tokens = req.tokens;
+            tokens.reserve(req.n_new);
+            let per_list = (total + self.pool.block_tokens - 1) / self.pool.block_tokens;
             let lane = Lane {
                 id: req.id,
-                prompt_len: req.tokens.len(),
+                prompt_len: tokens.len(),
                 n_new: req.n_new,
                 produced: 0,
                 temp: req.temp,
-                rng: req.rng(),
-                seq: SeqKv::new(self.model.meta.n_layers),
+                rng,
+                stop: req.stop,
+                stopped: false,
+                seq: SeqKv::with_capacity(self.model.meta.n_layers, per_list),
                 pos: 0,
                 reserved_blocks: reserved,
-                tokens: req.tokens,
+                tokens,
             };
             self.lanes[slot] = Some(lane);
-            self.prefill(slot)?;
+            self.prefill(slot, &mut on_token)?;
             admitted_now.push(slot);
             self.stats.admitted += 1;
         }
 
-        // one decode token for every live lane not admitted this step
-        let decode_slots: Vec<usize> = (0..self.lanes.len())
-            .filter(|&s| {
-                self.lanes[s].as_ref().map_or(false, |l| l.produced < l.n_new)
-                    && !admitted_now.contains(&s)
-            })
-            .collect();
-        if !decode_slots.is_empty() {
-            self.decode_batch(&decode_slots)?;
-        }
+        // one decode token for every live lane not admitted this step;
+        // the slot list lives in the arena so steady state allocates
+        // nothing here
+        let mut slots = std::mem::take(&mut self.scratch.slots);
+        slots.clear();
+        slots.extend((0..self.lanes.len()).filter(|&s| {
+            self.lanes[s]
+                .as_ref()
+                .map_or(false, |l| l.produced < l.n_new && !l.stopped)
+                && !admitted_now.contains(&s)
+        }));
+        let step_res = if slots.is_empty() {
+            Ok(())
+        } else {
+            self.decode_batch(&slots, &mut on_token)
+        };
+        self.scratch.slots = slots;
+        step_res?;
 
         let live = self.lanes.iter().filter(|l| l.is_some()).count();
         self.stats.peak_lanes = self.stats.peak_lanes.max(live);
@@ -524,14 +760,24 @@ impl Engine {
 
     fn retire_finished(&mut self) {
         for slot in 0..self.lanes.len() {
-            let finished = self.lanes[slot].as_ref().map_or(false, |l| l.produced >= l.n_new);
+            let finished = self.lanes[slot]
+                .as_ref()
+                .map_or(false, |l| l.produced >= l.n_new || l.stopped);
             if !finished {
                 continue;
             }
             let mut lane = self.lanes[slot].take().unwrap();
             self.pool.release(&mut lane.seq);
+            // the whole reservation returns — blocks an early-stopped
+            // lane never claimed included — so queued requests can
+            // admit on the very next step
             self.committed_blocks -= lane.reserved_blocks;
             self.stats.retired += 1;
+            // "early" means the stop token fired before the n_new
+            // budget ran out — a stop on the final token isn't early
+            if lane.stopped && lane.produced < lane.n_new {
+                self.stats.eos_retired += 1;
+            }
             self.done.push(Completion {
                 id: lane.id,
                 prompt_len: lane.prompt_len,
@@ -541,106 +787,159 @@ impl Engine {
         }
     }
 
+    /// Grow (or, with the arena disabled, freshly re-allocate) the
+    /// scratch to cover an `n`-row forward.
+    fn prep_scratch(&mut self, n: usize) {
+        if !self.arena {
+            self.scratch.reset_buffers();
+        }
+        let m = &self.model.meta;
+        self.scratch.ensure(n, m.d_model, m.d_ff, m.vocab, self.model.max_pos);
+    }
+
     /// Batched prompt prefill for one freshly admitted lane: all prompt
     /// positions run through the forward as one `(T, d)` block, then the
     /// last position's logits seed the first generated token.
-    fn prefill(&mut self, slot: usize) -> Result<()> {
-        let (rows, x) = {
-            let lane = self.lanes[slot].as_ref().unwrap();
-            let p = lane.prompt_len;
-            let rows: Vec<(usize, usize)> = (0..p).map(|t| (slot, t)).collect();
-            (rows, self.embed_rows(&lane.tokens[..p]))
-        };
-        let n = rows.len();
-        let logits = self.forward(&rows, x)?;
+    fn prefill(&mut self, slot: usize, on_token: &mut impl FnMut(usize, i32)) -> Result<()> {
+        let p = self.lanes[slot].as_ref().unwrap().prompt_len;
+        self.prep_scratch(p);
+        {
+            let Self { lanes, scratch, model, .. } = self;
+            let lane = lanes[slot].as_ref().unwrap();
+            scratch.rows.clear();
+            scratch.rows.extend((0..p).map(|t| (slot, t)));
+            embed_rows_into(&model.embed, &lane.tokens[..p], model.meta.d_model, &mut scratch.x);
+        }
+        self.forward(p)?;
         let vocab = self.model.meta.vocab;
-        let lane = self.lanes[slot].as_mut().unwrap();
+        let Self { lanes, scratch, stats, .. } = self;
+        let DecodeScratch { logits, exps, .. } = scratch;
+        let lane = lanes[slot].as_mut().unwrap();
         lane.pos = lane.prompt_len;
-        let next = sample_token(&logits[(n - 1) * vocab..n * vocab], lane.temp, &mut lane.rng);
+        let next =
+            sample_token_buf(&logits[(p - 1) * vocab..p * vocab], lane.temp, &mut lane.rng, exps);
         lane.tokens.push(next);
         lane.produced = 1;
-        self.stats.prefill_tokens += n as u64;
-        self.stats.decode_tokens += 1;
+        if lane.stop == Some(next) {
+            lane.stopped = true;
+        }
+        on_token(lane.id, next);
+        stats.prefill_tokens += p as u64;
+        stats.decode_tokens += 1;
         Ok(())
     }
 
     /// One decode token for every slot in `slots`, batched `(N, d)`.
-    fn decode_batch(&mut self, slots: &[usize]) -> Result<()> {
-        let mut rows = Vec::with_capacity(slots.len());
-        let mut toks = Vec::with_capacity(slots.len());
-        for &s in slots {
-            let lane = self.lanes[s].as_ref().unwrap();
-            rows.push((s, lane.pos));
-            toks.push(lane.tokens[lane.pos]);
+    fn decode_batch(&mut self, slots: &[usize], on_token: &mut impl FnMut(usize, i32)) -> Result<()> {
+        let n = slots.len();
+        self.prep_scratch(n);
+        {
+            let Self { lanes, scratch, model, .. } = self;
+            scratch.rows.clear();
+            scratch.toks.clear();
+            for &s in slots {
+                let lane = lanes[s].as_ref().unwrap();
+                scratch.rows.push((s, lane.pos));
+                scratch.toks.push(lane.tokens[lane.pos]);
+            }
+            let DecodeScratch { toks, x, .. } = scratch;
+            embed_rows_into(&model.embed, toks, model.meta.d_model, x);
         }
-        let x = self.embed_rows(&toks);
-        let logits = self.forward(&rows, x)?;
+        self.forward(n)?;
         let vocab = self.model.meta.vocab;
+        let Self { lanes, scratch, stats, .. } = self;
+        let DecodeScratch { logits, exps, .. } = scratch;
         for (i, &s) in slots.iter().enumerate() {
-            let lane = self.lanes[s].as_mut().unwrap();
-            let next = sample_token(&logits[i * vocab..(i + 1) * vocab], lane.temp, &mut lane.rng);
+            let lane = lanes[s].as_mut().unwrap();
+            let next = sample_token_buf(
+                &logits[i * vocab..(i + 1) * vocab],
+                lane.temp,
+                &mut lane.rng,
+                exps,
+            );
             lane.pos += 1;
             lane.tokens.push(next);
             lane.produced += 1;
-            self.stats.decode_tokens += 1;
+            if lane.stop == Some(next) {
+                lane.stopped = true;
+            }
+            on_token(lane.id, next);
+            stats.decode_tokens += 1;
         }
         Ok(())
     }
 
-    fn embed_rows(&self, tokens: &[i32]) -> Vec<f32> {
-        let d = self.model.meta.d_model;
-        let mut x = Vec::with_capacity(tokens.len() * d);
-        for &t in tokens {
-            x.extend_from_slice(self.model.embed.row(t as usize));
-        }
-        x
-    }
-
-    /// The batched transformer forward for `rows` = `(lane_slot, pos)`
-    /// pairs with activations `x` (`N × d`, row i belongs to `rows[i]`).
-    /// Appends this token's K/V to each row's paged cache and returns
-    /// logits (`N × vocab`). Mirrors `decode_step` op-for-op.
-    fn forward(&mut self, rows: &[(usize, usize)], mut x: Vec<f32>) -> Result<Vec<f32>> {
-        let model = &self.model;
-        let pool = &mut self.pool;
-        let lanes = &mut self.lanes;
+    /// The batched transformer forward for the `scratch.rows` row
+    /// descriptors (`(lane_slot, pos)` pairs, `n` of them) with
+    /// activations already embedded in `scratch.x` (`n × d`, row i
+    /// belongs to `rows[i]`). Appends this token's K/V to each row's
+    /// paged cache and leaves logits (`n × vocab`) in `scratch.logits`.
+    /// Mirrors `decode_step` op-for-op. With the arena warm, a call
+    /// performs **zero heap allocations** (pinned by
+    /// `tests/serve_scratch.rs` under the counting allocator).
+    fn forward(&mut self, n: usize) -> Result<()> {
         let threads = self.threads;
-        let meta = &model.meta;
-        let (d, h, dh, ff) = (meta.d_model, meta.n_heads, meta.d_head, meta.d_ff);
-        let dh2 = dh / 2;
-        let n = rows.len();
-        assert_eq!(x.len(), n * d);
-        let quant = model.quant.as_ref();
+        let arena = self.arena;
         // integer GEMM path: quantize each activation block to int8
         // codes once and feed every consuming linear; the f32 path
         // fake-quantizes in place instead. Both sit on the same grid
         // (identical codes), so the paths differ only in f32 summation
         // order inside a scale group (see serve/qact.rs).
-        let use_int = self.int_gemm && quant.is_some();
-        let (mut qcodes, mut qscales) = if use_int {
-            (vec![0i8; n * d.max(ff)], vec![0.0f32; n])
-        } else {
-            (Vec::new(), Vec::new())
-        };
+        let use_int = self.int_gemm && self.model.quant.is_some();
+        let model = &self.model;
+        let pool = &mut self.pool;
+        let lanes = &mut self.lanes;
+        let meta = &model.meta;
+        let (d, h, dh, ff) = (meta.d_model, meta.n_heads, meta.d_head, meta.d_ff);
+        let dh2 = dh / 2;
+        let quant = model.quant.as_ref();
 
-        let mut z = vec![0.0f32; n * d];
-        let mut qx = vec![0.0f32; n * d];
-        let mut kx = vec![0.0f32; n * d];
-        let mut vx = vec![0.0f32; n * d];
-        let mut attn = vec![0.0f32; n * d];
-        let mut rot = vec![0.0f32; n * d];
-        let mut mid = vec![0.0f32; n * ff];
-        let mut gate = vec![0.0f32; n * ff];
+        // every per-iteration buffer is re-lent from the arena; exact
+        // slices keep the kernels' size assertions as tight as before
+        let DecodeScratch {
+            x,
+            z,
+            qx,
+            kx,
+            vx,
+            attn,
+            rot,
+            mid,
+            gate,
+            logits,
+            qcodes,
+            qscales,
+            gemm,
+            fq_bufs,
+            scores,
+            rows,
+            ..
+        } = &mut self.scratch;
+        let rows: &[(usize, usize)] = &rows[..];
+        assert_eq!(rows.len(), n, "forward: row descriptors not staged");
+        let x = &mut x[..n * d];
+        let z = &mut z[..n * d];
+        let qx = &mut qx[..n * d];
+        let kx = &mut kx[..n * d];
+        let vx = &mut vx[..n * d];
+        let attn = &mut attn[..n * d];
+        let mid = &mut mid[..n * ff];
+        let gate = &mut gate[..n * ff];
+        let logits = &mut logits[..n * meta.vocab];
+        let qcodes = &mut qcodes[..n * d.max(ff)];
+        let qscales = &mut qscales[..n];
+        let fq_bufs = &mut fq_bufs[..];
+        let rp = model.rots_packed.as_ref();
 
         for (l, lw) in model.layers.iter().enumerate() {
             // z = act_fq(rmsnorm(x, ln1)) — shared by wq/wk/wv
-            rmsnorm_gamma_rows(&x, &lw.ln1, &mut z, d, threads);
+            rmsnorm_gamma_rows(x, &lw.ln1, z, d, threads);
             if let Some(q) = quant {
-                quantize_site(&mut z, d, &q.act, use_int, &mut qcodes, &mut qscales, threads);
+                quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
             }
-            project(&lw.wq, use_int, &z, &qcodes, &qscales, n, &mut qx, threads);
-            project(&lw.wk, use_int, &z, &qcodes, &qscales, n, &mut kx, threads);
-            project(&lw.wv, use_int, &z, &qcodes, &qscales, n, &mut vx, threads);
+            project(&lw.wq, use_int, arena, z, qcodes, qscales, n, qx, threads, gemm);
+            project(&lw.wk, use_int, arena, z, qcodes, qscales, n, kx, threads, gemm);
+            project(&lw.wv, use_int, arena, z, qcodes, qscales, n, vx, threads, gemm);
 
             // RoPE at each row's position, per head
             for (i, &(_, pos)) in rows.iter().enumerate() {
@@ -654,8 +953,8 @@ impl Engine {
             }
             // online R3 (cancels in QᵀK, shapes the K cache distribution)
             if let Some(q) = quant {
-                head_rotate(&mut qx, &mut rot, &q.r3, n * h, dh, threads);
-                head_rotate(&mut kx, &mut rot, &q.r3, n * h, dh, threads);
+                rotate_rows(qx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, arena);
+                rotate_rows(kx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, arena);
             }
             // append-quantize this token's K/V into the paged pool
             for (i, &(slot, pos)) in rows.iter().enumerate() {
@@ -664,66 +963,75 @@ impl Engine {
             }
             // Q activation quant happens after R3 (decode_step order)
             if let Some(q) = quant {
-                fq_rows(&mut qx, dh, &q.act, threads);
+                if arena {
+                    fq_rows_scratch(qx, dh, &q.act, threads, fq_bufs);
+                } else {
+                    fq_rows(qx, dh, &q.act, threads);
+                }
             }
             // fused dequant-attention per row (rows own disjoint caches
-            // or, within a prefill, disjoint causal prefixes)
+            // or, within a prefill, disjoint causal prefixes); score
+            // rows come from the arena, one per chunk
             {
                 let pool_ref: &KvPool = pool;
                 let lanes_ref: &Vec<Option<Lane>> = lanes;
-                par::par_row_chunks_mut(&mut attn, d, 1, threads, |r0, chunk| {
-                    let mut scores = Vec::new();
+                let qx_ref: &[f32] = qx;
+                par::par_row_chunks_scratch_mut(attn, d, 1, threads, scores, |r0, chunk, sc| {
                     for (i, orow) in chunk.chunks_exact_mut(d).enumerate() {
                         let (slot, pos) = rows[r0 + i];
                         let seq = &lanes_ref[slot].as_ref().unwrap().seq;
-                        pool_ref.attend(seq, l, pos + 1, &qx[(r0 + i) * d..(r0 + i + 1) * d], orow, &mut scores);
+                        pool_ref.attend(seq, l, pos + 1, &qx_ref[(r0 + i) * d..(r0 + i + 1) * d], orow, sc);
                     }
                 });
             }
             if let Some(q) = quant {
-                head_rotate(&mut attn, &mut rot, &q.r4, n * h, dh, threads);
-                quantize_site(&mut attn, d, &q.act, use_int, &mut qcodes, &mut qscales, threads);
+                rotate_rows(attn, rot, rp.map(|r| &r.r4), &q.r4, n * h, dh, threads, arena);
+                quantize_site(attn, d, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
             }
-            project(&lw.wo, use_int, &attn, &qcodes, &qscales, n, &mut z, threads);
-            add_assign(&mut x, &z);
+            project(&lw.wo, use_int, arena, attn, qcodes, qscales, n, z, threads, gemm);
+            add_assign(x, z);
 
             // FFN
-            rmsnorm_gamma_rows(&x, &lw.ln2, &mut z, d, threads);
+            rmsnorm_gamma_rows(x, &lw.ln2, z, d, threads);
             if let Some(q) = quant {
-                quantize_site(&mut z, d, &q.act, use_int, &mut qcodes, &mut qscales, threads);
+                quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
             }
             match &lw.wg {
                 Some(wg) => {
                     // llama: silu(z·Wg) ⊙ (z·Wu)
-                    project(wg, use_int, &z, &qcodes, &qscales, n, &mut gate, threads);
-                    project(&lw.wu, use_int, &z, &qcodes, &qscales, n, &mut mid, threads);
-                    for (m, &gv) in mid.iter_mut().zip(&gate) {
-                        *m = silu(gv) * *m;
+                    project(wg, use_int, arena, z, qcodes, qscales, n, gate, threads, gemm);
+                    project(&lw.wu, use_int, arena, z, qcodes, qscales, n, mid, threads, gemm);
+                    for (mv, &gv) in mid.iter_mut().zip(gate.iter()) {
+                        *mv = silu(gv) * *mv;
                     }
                 }
                 None => {
                     // phi: gelu(z·Wu)
-                    project(&lw.wu, use_int, &z, &qcodes, &qscales, n, &mut mid, threads);
-                    for m in mid.iter_mut() {
-                        *m = gelu(*m);
+                    project(&lw.wu, use_int, arena, z, qcodes, qscales, n, mid, threads, gemm);
+                    for mv in mid.iter_mut() {
+                        *mv = gelu(*mv);
                     }
                 }
             }
             if let Some(q) = quant {
-                matmul_into_buf(&mid, &q.r5.data, &mut rot, n, ff, threads);
-                mid[..n * ff].copy_from_slice(&rot[..n * ff]);
-                quantize_site(&mut mid, ff, &q.act, use_int, &mut qcodes, &mut qscales, threads);
+                rotate_rows(mid, rot, rp.map(|r| &r.r5), &q.r5, n, ff, threads, arena);
+                quantize_site(mid, ff, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
             }
-            project(&lw.wd, use_int, &mid, &qcodes, &qscales, n, &mut z, threads);
-            add_assign(&mut x, &z);
+            project(&lw.wd, use_int, arena, mid, qcodes, qscales, n, z, threads, gemm);
+            add_assign(x, z);
         }
 
-        // final norm + fp head
-        rmsnorm_gamma_rows(&x, &model.lnf, &mut z, d, threads);
-        let vocab = meta.vocab;
-        let mut logits = vec![0.0f32; n * vocab];
-        matmul_into_threads(&z, &model.head_t.data, &mut logits, n, d, vocab, threads);
-        Ok(logits)
+        // final norm + fp head (pre-packed on arena engines; overwrite
+        // store — see PackedB::matmul_overwrite for bitwise equality)
+        rmsnorm_gamma_rows(x, &model.lnf, z, d, threads);
+        match (&model.head_packed, arena) {
+            (Some(p), true) => p.matmul_overwrite(z, &model.head_t.data, logits, n, threads),
+            _ => {
+                logits.fill(0.0);
+                matmul_into_threads(z, &model.head_t.data, logits, n, d, meta.vocab, threads);
+            }
+        }
+        Ok(())
     }
 
     /// Pool bytes per stored token across all layers (K+V, scales
@@ -756,11 +1064,19 @@ impl Engine {
 
 /// Greedy (temp ≤ 0) or temperature sampling over one logit row.
 pub fn sample_token(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+    sample_token_buf(logits, temp, rng, &mut Vec::new())
+}
+
+/// [`sample_token`] with a caller-owned softmax scratch buffer (the
+/// engine lends its arena `exps`, so temperature sampling allocates
+/// nothing in steady state). Greedy sampling never touches `exps`.
+pub fn sample_token_buf(logits: &[f32], temp: f32, rng: &mut Rng, exps: &mut Vec<f32>) -> i32 {
     if temp <= 0.0 {
         return argmax(logits) as i32;
     }
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = logits.iter().map(|&l| ((l - max) / temp).exp()).collect();
+    exps.clear();
+    exps.extend(logits.iter().map(|&l| ((l - max) / temp).exp()));
     let sum: f32 = exps.iter().sum();
     let mut u = rng.uniform() * sum;
     for (i, e) in exps.iter().enumerate() {
@@ -770,6 +1086,14 @@ pub fn sample_token(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
         }
     }
     (exps.len() - 1) as i32
+}
+
+/// Embed `tokens` into the first `tokens.len() · d` floats of `x`.
+fn embed_rows_into(embed: &Tensor, tokens: &[i32], d: usize, x: &mut [f32]) {
+    assert!(x.len() >= tokens.len() * d, "embed: x buffer too small");
+    for (i, &t) in tokens.iter().enumerate() {
+        x[i * d..(i + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -808,7 +1132,9 @@ fn apply_rope_row(row: &mut [f32], cos: &[f32], sin: &[f32]) {
     }
 }
 
-/// In-place per-row symmetric fake-quant (`fake_quant_rows` math).
+/// In-place per-row symmetric fake-quant (`fake_quant_rows` math),
+/// allocating its selection scratch per chunk — the PR-3 call shape,
+/// kept for the `KURTAIL_ARENA=0` path.
 fn fq_rows(data: &mut [f32], width: usize, s: &QuantScheme, threads: usize) {
     par::par_row_chunks_mut(data, width, 16, threads, |_r0, chunk| {
         let mut buf = Vec::with_capacity(width);
@@ -819,19 +1145,62 @@ fn fq_rows(data: &mut [f32], width: usize, s: &QuantScheme, threads: usize) {
     });
 }
 
-/// Rotate `rows` rows of `dh` in place: `x ← x · R` (via scratch).
-fn head_rotate(x: &mut Vec<f32>, scratch: &mut Vec<f32>, r: &Tensor, rows: usize, dh: usize, threads: usize) {
-    matmul_into_buf(&x[..rows * dh], &r.data, scratch, rows, dh, threads);
-    x[..rows * dh].copy_from_slice(&scratch[..rows * dh]);
+/// [`fq_rows`] with caller-owned per-chunk selection scratch (the arena
+/// path: zero allocations; identical math, so identical bits).
+fn fq_rows_scratch(
+    data: &mut [f32],
+    width: usize,
+    s: &QuantScheme,
+    threads: usize,
+    bufs: &mut [Vec<f32>],
+) {
+    par::par_row_chunks_scratch_mut(data, width, 16, threads, bufs, |_r0, chunk, buf| {
+        for row in chunk.chunks_exact_mut(width) {
+            let scale = row_scale_buf(row, s, buf);
+            fq_row_sym(row, scale, s);
+        }
+    });
 }
 
-/// `scratch[..m*k] = x @ R` for a square `k×k` rotation (overwrites).
-fn matmul_into_buf(x: &[f32], r: &[f32], scratch: &mut Vec<f32>, m: usize, k: usize, threads: usize) {
-    if scratch.len() < m * k {
-        scratch.resize(m * k, 0.0);
+/// Rotate `rows` rows of `width` in place: `x ← x · R` via `scratch`.
+///
+/// The arena path multiplies against the pre-packed rotation with an
+/// **overwriting** store — the packed kernel writes every output
+/// element exactly once, which is where the old `matmul_into_buf`
+/// helper's redundant `scratch.fill(0.0)` went (it only existed to feed
+/// the accumulate-contract kernel a zeroed buffer). The legacy path
+/// (arena off) keeps the PR-3 call shape — grow, zero-fill, re-pack,
+/// accumulate — byte-for-byte; both produce identical results (see
+/// `PackedB::matmul_overwrite`).
+#[allow(clippy::too_many_arguments)]
+fn rotate_rows(
+    x: &mut [f32],
+    scratch: &mut Vec<f32>,
+    packed: Option<&PackedB>,
+    dense: &Tensor,
+    rows: usize,
+    width: usize,
+    threads: usize,
+    arena: bool,
+) {
+    let len = rows * width;
+    match packed {
+        // arena engines pre-pack the rotations at construction
+        Some(p) if arena => {
+            // scratch was pre-sized by DecodeScratch::ensure
+            let buf = &mut scratch[..len];
+            p.matmul_overwrite(&x[..len], &dense.data, buf, rows, threads);
+            x[..len].copy_from_slice(buf);
+        }
+        _ => {
+            if scratch.len() < len {
+                scratch.resize(len, 0.0);
+            }
+            scratch[..len].fill(0.0);
+            matmul_into_threads(&x[..len], &dense.data, &mut scratch[..len], rows, width, width, threads);
+            x[..len].copy_from_slice(&scratch[..len]);
+        }
     }
-    scratch[..m * k].fill(0.0);
-    matmul_into_threads(x, r, &mut scratch[..m * k], m, k, k, threads);
 }
 
 fn add_assign(x: &mut [f32], y: &[f32]) {
@@ -896,12 +1265,26 @@ mod tests {
         threads: usize,
         int_gemm: Option<bool>,
     ) -> Vec<Completion> {
+        run_full(model, kv, lanes, threads, int_gemm, None, None)
+    }
+
+    fn run_full(
+        model: &ServeModel,
+        kv: KvQuant,
+        lanes: usize,
+        threads: usize,
+        int_gemm: Option<bool>,
+        arena: Option<bool>,
+        panel_cache: Option<usize>,
+    ) -> Vec<Completion> {
         let cfg = ServeConfig {
             max_lanes: lanes,
             block_tokens: 4,
             kv_quant: kv,
             threads: Some(threads),
             int_gemm,
+            arena,
+            panel_cache,
             ..ServeConfig::default()
         };
         let mut eng = Engine::new(model.clone(), &cfg).unwrap();
@@ -1014,6 +1397,152 @@ mod tests {
         assert!(!eng.int_gemm(), "asymmetric act grid must fall back to the f32 GEMM");
         eng.submit_tokens(vec![1, 2], 3, 0.0, 7).unwrap();
         assert_eq!(eng.run().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn arena_and_panel_cache_are_bitwise_transparent() {
+        // the PR-3 fresh-alloc profile (arena off, panels off) is the
+        // reference; every (arena, panel) combination must reproduce its
+        // token streams bitwise at every lane/thread pairing
+        for model in [fp_model(), quant_model()] {
+            let kv = if model.is_quantized() { KvQuant::Asym4 } else { KvQuant::Fp };
+            let base = run_full(&model, kv, 1, 1, Some(true), Some(false), Some(0));
+            for (arena, panel) in
+                [(Some(true), Some(0)), (Some(true), None), (Some(false), None)]
+            {
+                for (lanes, threads) in [(1usize, 1usize), (4, 4)] {
+                    let got =
+                        run_full(&model, kv, lanes, threads, Some(true), arena, panel);
+                    for (a, b) in base.iter().zip(&got) {
+                        assert_eq!(
+                            a.tokens, b.tokens,
+                            "arena={arena:?} panel={panel:?} lanes={lanes} t={threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_cache_budget_is_greedy_and_reported() {
+        let model = quant_model();
+        // fake_llama_meta: 2 layers × (4 d·d + wg/wu/wd at d=8, ff=16)
+        // → per layer 4·64 + 3·128 = 640 panel bytes, 1280 total
+        // explicit budgets keep the test independent of KURTAIL_PANEL_CACHE
+        let full = Engine::new(
+            model.clone(),
+            &ServeConfig { panel_cache: Some(usize::MAX), ..ServeConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(full.panel_cache_bytes(), 1280, "unbounded budget caches every linear");
+        let off = Engine::new(
+            model.clone(),
+            &ServeConfig { panel_cache: Some(0), ..ServeConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(off.panel_cache_bytes(), 0);
+        // 700 bytes: all of layer 0 (640) fits, nothing of layer 1 does
+        let partial = Engine::new(
+            model.clone(),
+            &ServeConfig { panel_cache: Some(700), ..ServeConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(partial.panel_cache_bytes(), 640, "greedy fill in layer order");
+        // the budget is a hard cap even on a pre-warmed model: a
+        // smaller engine budget shrinks the cache, zero clears it — the
+        // engine reports (and uses) exactly what is resident
+        let mut warm = model.clone();
+        warm.build_panel_cache(usize::MAX);
+        assert_eq!(warm.panel_cache_bytes(), 1280);
+        let shrunk = Engine::new(
+            warm.clone(),
+            &ServeConfig { panel_cache: Some(700), ..ServeConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(shrunk.panel_cache_bytes(), 640, "warm cache shrinks to the cap");
+        let cleared = Engine::new(
+            warm,
+            &ServeConfig { panel_cache: Some(0), ..ServeConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(cleared.panel_cache_bytes(), 0, "Some(0) clears a warm cache");
+        // fp models have nothing to cache
+        let fp = Engine::new(fp_model(), &ServeConfig::default()).unwrap();
+        assert_eq!(fp.panel_cache_bytes(), 0);
+    }
+
+    #[test]
+    fn eos_early_retirement_frees_capacity_mid_batch() {
+        let model = quant_model();
+        // pool sized for exactly one in-flight reservation: total = 2+5
+        // = 7 tokens → ceil(7/4) = 2 blocks × 2 layers × (K+V) = 8
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            max_blocks: 8,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(2),
+            ..ServeConfig::default()
+        };
+        // probe run: learn the deterministic first generated token
+        let mut probe = Engine::new(model.clone(), &cfg).unwrap();
+        probe.submit_tokens(vec![1, 2], 5, 0.0, 7).unwrap();
+        let full = probe.run().unwrap();
+        assert_eq!(full[0].tokens.len(), 7);
+        let first = full[0].tokens[2];
+
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        eng.submit_tokens_stop(vec![1, 2], 5, 0.0, 7, Some(first)).unwrap();
+        eng.submit_tokens(vec![1, 2], 5, 0.0, 7).unwrap();
+        // step 1: only request 0's reservation fits; its stop token
+        // fires on the prefill-seeded token, so it retires same-step
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.admitted, 1, "pool admits a single reservation");
+        // step 2: the freed reservation admits the waiting request
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.admitted, 2, "freed blocks admit mid-batch");
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].tokens.len(), 3, "stopped after its first generated token");
+        assert_eq!(*done[0].tokens.last().unwrap(), first, "stop token is included");
+        assert_eq!(done[1].tokens.len(), 7, "no stop token → full n_new");
+        assert_eq!(eng.stats.eos_retired, 1);
+        assert_eq!(eng.stats.retired, 2);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn step_with_streams_every_token_in_order() {
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            threads: Some(2),
+            ..ServeConfig::default()
+        };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        for (toks, n) in requests() {
+            eng.submit_tokens(toks, n, 0.0, 7).unwrap();
+        }
+        let mut streamed: Vec<Vec<i32>> = vec![Vec::new(); 4];
+        while eng.step_with(|id, tok| streamed[id].push(tok)).unwrap() {}
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 4);
+        for c in &done {
+            assert_eq!(
+                &c.tokens[c.prompt_len..],
+                &streamed[c.id][..],
+                "per-token stream equals the completion tail for id {}",
+                c.id
+            );
+        }
+        // and step() is literally step_with with a no-op callback: same
+        // streams as the plain engine run
+        let plain = run_with(&quant_model(), KvQuant::Asym4, 2, 2);
+        for (a, b) in done.iter().zip(&plain) {
+            assert_eq!(a.tokens, b.tokens);
+        }
     }
 
     #[test]

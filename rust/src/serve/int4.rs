@@ -12,12 +12,29 @@
 //! The matmul kernel never materializes the dequantized matrix: each
 //! thread owns a contiguous range of output *columns*
 //! ([`crate::util::par::par_row_chunks_mut`] over the transposed output),
-//! unpacks one column's codes into a small i8 buffer, and accumulates
+//! reads one column's codes as a contiguous i8 tile — from the optional
+//! **panel cache** when built, otherwise unpacked from nibbles into a
+//! small scratch buffer — and accumulates
 //! `Σ_g scale_g · Σ_{i∈g} x_i·q_i` per lane. Per output element the
 //! accumulation order is fixed (ascending rows within ascending groups),
 //! so results are bitwise identical across thread counts *and* across
 //! batch sizes (lane `i` of a 16-lane GEMM equals the 1-lane GEMV on the
 //! same row) — the same determinism contract as the PR-1 kernels.
+//!
+//! **Panel cache.** [`Int4Weight::build_panels`] unpacks every column's
+//! nibbles *once* into a column-major i8 panel (`n × k` bytes, i.e. 2×
+//! the packed codes), so steady-state GEMMs stream contiguous i8
+//! instead of re-unpacking per call. The panel holds exactly the codes
+//! [`unpack_col`] produces, so cached and uncached results are bitwise
+//! identical. The serve engine bounds total panel bytes with a budget
+//! (`ServeConfig::panel_cache`, falling back to the
+//! [`panel_cache_budget`] env rule for `KURTAIL_PANEL_CACHE`).
+//!
+//! **Scratch-fed GEMMs.** The `*_scratch` entry points take a
+//! caller-owned [`GemmScratch`] (transposed-output buffer + one
+//! nibble-unpack tile per thread chunk) so the decode hot loop performs
+//! zero heap allocations; the original entry points remain as
+//! convenience wrappers that allocate a fresh scratch per call.
 
 use crate::config::QuantScheme;
 use crate::tensor::matmul::dot_i8_grouped;
@@ -25,6 +42,83 @@ use crate::tensor::Tensor;
 use crate::util::par::{self, num_threads};
 
 use super::qact::{quantize_rows_into, QuantActs};
+
+/// `KURTAIL_PANEL_CACHE` budget rule: unset or empty → unbounded cache
+/// (`usize::MAX`), `0` → cache off, any other integer → that many bytes
+/// of i8 panels. An unparseable value (e.g. `512M` — suffixes are not
+/// supported) disables the cache: the variable exists to cap memory, so
+/// a garbled cap must fail *closed*, not open. Read per engine build,
+/// like `KURTAIL_INT_GEMM`.
+pub fn panel_cache_budget() -> usize {
+    panel_budget_flag(std::env::var("KURTAIL_PANEL_CACHE").ok().as_deref())
+}
+
+/// Parse rule behind [`panel_cache_budget`], split out for tests.
+fn panel_budget_flag(var: Option<&str>) -> usize {
+    match var {
+        None => usize::MAX,
+        Some(v) => {
+            let t = v.trim();
+            if t.is_empty() {
+                usize::MAX
+            } else {
+                t.parse::<usize>().unwrap_or(0)
+            }
+        }
+    }
+}
+
+/// Caller-owned scratch for the packed GEMMs: the transposed-output
+/// staging buffer plus one nibble-unpack tile per parallel chunk. Reused
+/// across calls (the serve arena owns one), capacities only ever grow —
+/// contents never influence results.
+#[derive(Clone, Debug, Default)]
+pub struct GemmScratch {
+    /// `(n × m)` transposed output staging (GEMM path, `m > 1`).
+    pub out_t: Vec<f32>,
+    /// Per-chunk i8 column tiles (unused when the panel cache is built).
+    pub qbufs: Vec<Vec<i8>>,
+}
+
+impl GemmScratch {
+    /// Scratch with one unpack tile per potential thread chunk.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { out_t: Vec::new(), qbufs: (0..threads.max(1)).map(|_| Vec::new()).collect() }
+    }
+
+    /// Pre-reserve every buffer so subsequent GEMMs up to `max_out`
+    /// staged floats and `max_k` input rows never allocate.
+    pub fn reserve(&mut self, max_out: usize, max_k: usize) {
+        self.out_t.reserve(max_out.saturating_sub(self.out_t.len()));
+        for q in &mut self.qbufs {
+            q.reserve(max_k.saturating_sub(q.len()));
+        }
+    }
+}
+
+/// One column's signed levels: the cached panel slice when built, else
+/// a fresh unpack into the chunk's scratch tile. Implicit reborrow of
+/// `qbuf` keeps the returned slice scoped to one loop iteration.
+#[inline]
+fn col_codes<'a>(
+    panels: Option<&'a [i8]>,
+    packed: &[u8],
+    j: usize,
+    k: usize,
+    bpc: usize,
+    qbuf: &'a mut Vec<i8>,
+) -> &'a [i8] {
+    match panels {
+        Some(p) => &p[j * k..(j + 1) * k],
+        None => {
+            if qbuf.len() < k {
+                qbuf.resize(k, 0);
+            }
+            unpack_col(&packed[j * bpc..(j + 1) * bpc], k, &mut qbuf[..k]);
+            &qbuf[..k]
+        }
+    }
+}
 
 /// Nibble-packed INT4 weight `(k, n)` with per-(column, group) scales.
 #[derive(Clone, Debug)]
@@ -40,6 +134,10 @@ pub struct Int4Weight {
     packed: Vec<u8>,
     /// `n × n_groups` scales, column-major (`scales[j·n_groups + g]`).
     scales: Vec<f32>,
+    /// Optional i8 panel cache: `n × k` signed levels, column-major —
+    /// exactly what [`unpack_col`] yields per column, materialized once
+    /// by [`Self::build_panels`] so GEMMs skip the per-call unpack.
+    panels: Option<Vec<i8>>,
 }
 
 impl Int4Weight {
@@ -93,7 +191,41 @@ impl Int4Weight {
                 }
             }
         });
-        Int4Weight { k, n, group, n_groups, packed, scales }
+        Int4Weight { k, n, group, n_groups, packed, scales, panels: None }
+    }
+
+    /// Materialize the i8 panel cache (idempotent): every column's
+    /// nibbles unpacked once into a contiguous `n × k` column-major
+    /// panel. Costs [`Self::panel_bytes`] of memory — 2× the packed
+    /// codes — and makes every subsequent GEMM read contiguous i8.
+    pub fn build_panels(&mut self) {
+        if self.panels.is_some() {
+            return;
+        }
+        let (k, n) = (self.k, self.n);
+        let bpc = (k + 1) / 2;
+        let mut panels = vec![0i8; n * k];
+        let packed = &self.packed;
+        par::par_row_chunks_mut(&mut panels, k, 8, num_threads(), |j0, chunk| {
+            for (jj, col) in chunk.chunks_exact_mut(k).enumerate() {
+                unpack_col(&packed[(j0 + jj) * bpc..(j0 + jj + 1) * bpc], k, col);
+            }
+        });
+        self.panels = Some(panels);
+    }
+
+    /// Drop the panel cache, returning to per-call nibble unpack.
+    pub fn drop_panels(&mut self) {
+        self.panels = None;
+    }
+
+    pub fn has_panels(&self) -> bool {
+        self.panels.is_some()
+    }
+
+    /// Bytes a built panel cache costs for this weight (`k · n` i8s).
+    pub fn panel_bytes(&self) -> usize {
+        self.k * self.n
     }
 
     /// Signed level of element `(i, j)`.
@@ -116,7 +248,12 @@ impl Int4Weight {
         out
     }
 
-    /// Packed storage footprint (codes + scales), in bytes.
+    /// Packed storage footprint (codes + scales), in bytes. This is the
+    /// *format* size — the compression-ratio numerator — and deliberately
+    /// excludes the optional i8 panel cache, which is derived runtime
+    /// state reported separately ([`Self::panel_bytes`] when
+    /// [`Self::has_panels`]; `weights.panel_cache_bytes` in
+    /// `BENCH_serve.json`).
     pub fn bytes(&self) -> usize {
         self.packed.len() + self.scales.len() * 4
     }
@@ -129,7 +266,24 @@ impl Int4Weight {
     /// Fused dequant-GEMM: `out = x @ W̃` for `x` of `m` rows of `k`
     /// f32s. **Overwrites** `out` (`m × n`) — unlike
     /// [`crate::tensor::matmul::matmul_into`], which accumulates.
+    /// Allocates a fresh [`GemmScratch`] per call; the serve hot loop
+    /// uses [`Self::matmul_into_scratch`] instead.
     pub fn matmul_into(&self, x: &[f32], m: usize, out: &mut [f32], threads: usize) {
+        let mut scratch = GemmScratch::with_threads(threads);
+        self.matmul_into_scratch(x, m, out, threads, &mut scratch);
+    }
+
+    /// [`Self::matmul_into`] on caller-owned scratch: zero allocations
+    /// once `scratch` has warmed to this problem size. Bitwise identical
+    /// to the allocating entry (scratch contents never affect results).
+    pub fn matmul_into_scratch(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
         assert_eq!(x.len(), m * self.k, "int4 matmul: lhs size");
         assert_eq!(out.len(), m * self.n, "int4 matmul: out size");
         if m == 0 {
@@ -137,14 +291,15 @@ impl Int4Weight {
         }
         let (k, n, group, ng) = (self.k, self.n, self.group, self.n_groups);
         let bpc = (k + 1) / 2;
+        let panels = self.panels.as_deref();
+        let GemmScratch { out_t, qbufs } = scratch;
         if m == 1 {
             // GEMV: the output row *is* the column axis — no transpose
-            par::par_row_chunks_mut(out, 1, 32, threads, |j0, chunk| {
-                let mut qbuf = vec![0i8; k];
+            par::par_row_chunks_scratch_mut(out, 1, 32, threads, qbufs, |j0, chunk, qbuf| {
                 for (jj, o) in chunk.iter_mut().enumerate() {
                     let j = j0 + jj;
-                    unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
-                    *o = dot_col(x, &qbuf, &self.scales[j * ng..(j + 1) * ng], group);
+                    let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
+                    *o = dot_col(x, col, &self.scales[j * ng..(j + 1) * ng], group);
                 }
             });
             return;
@@ -152,15 +307,17 @@ impl Int4Weight {
         // GEMM: compute transposed (n × m), parallel over columns, then
         // flip into the row-major output. Per (lane, column) the math is
         // identical to the GEMV path above.
-        let mut out_t = vec![0.0f32; n * m];
-        par::par_row_chunks_mut(&mut out_t, m, 8, threads, |j0, chunk| {
-            let mut qbuf = vec![0i8; k];
+        if out_t.len() < n * m {
+            out_t.resize(n * m, 0.0);
+        }
+        let out_t = &mut out_t[..n * m];
+        par::par_row_chunks_scratch_mut(out_t, m, 8, threads, qbufs, |j0, chunk, qbuf| {
             for (jj, orow) in chunk.chunks_exact_mut(m).enumerate() {
                 let j = j0 + jj;
-                unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
+                let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
                 let scales = &self.scales[j * ng..(j + 1) * ng];
                 for (lane, o) in orow.iter_mut().enumerate() {
-                    *o = dot_col(&x[lane * k..(lane + 1) * k], &qbuf, scales, group);
+                    *o = dot_col(&x[lane * k..(lane + 1) * k], col, scales, group);
                 }
             }
         });
@@ -193,6 +350,22 @@ impl Int4Weight {
         out: &mut [f32],
         threads: usize,
     ) {
+        let mut scratch = GemmScratch::with_threads(threads);
+        self.matmul_i8_scratch(codes, act_scales, m, out, threads, &mut scratch);
+    }
+
+    /// [`Self::matmul_i8_into`] on caller-owned scratch: zero
+    /// allocations once `scratch` has warmed to this problem size.
+    /// Bitwise identical to the allocating entry.
+    pub fn matmul_i8_scratch(
+        &self,
+        codes: &[i8],
+        act_scales: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
         assert!(codes.len() >= m * self.k, "int gemm: codes size");
         assert!(act_scales.len() >= m, "int gemm: scales size");
         assert_eq!(out.len(), m * self.n, "int gemm: out size");
@@ -201,31 +374,34 @@ impl Int4Weight {
         }
         let (k, n, group, ng) = (self.k, self.n, self.group, self.n_groups);
         let bpc = (k + 1) / 2;
+        let panels = self.panels.as_deref();
+        let GemmScratch { out_t, qbufs } = scratch;
         if m == 1 {
             let a_s = act_scales[0];
             let xq = &codes[..k];
-            par::par_row_chunks_mut(out, 1, 32, threads, |j0, chunk| {
-                let mut qbuf = vec![0i8; k];
+            par::par_row_chunks_scratch_mut(out, 1, 32, threads, qbufs, |j0, chunk, qbuf| {
                 for (jj, o) in chunk.iter_mut().enumerate() {
                     let j = j0 + jj;
-                    unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
-                    *o = dot_i8_grouped(xq, &qbuf, &self.scales[j * ng..(j + 1) * ng], group, a_s);
+                    let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
+                    *o = dot_i8_grouped(xq, col, &self.scales[j * ng..(j + 1) * ng], group, a_s);
                 }
             });
             return;
         }
-        // transposed (n × m) like the f32 GEMM: one unpack per column,
-        // all lanes consume the i8 tile while it is hot
-        let mut out_t = vec![0.0f32; n * m];
-        par::par_row_chunks_mut(&mut out_t, m, 8, threads, |j0, chunk| {
-            let mut qbuf = vec![0i8; k];
+        // transposed (n × m) like the f32 GEMM: one i8 column tile
+        // (cached panel or fresh unpack), all lanes consume it while hot
+        if out_t.len() < n * m {
+            out_t.resize(n * m, 0.0);
+        }
+        let out_t = &mut out_t[..n * m];
+        par::par_row_chunks_scratch_mut(out_t, m, 8, threads, qbufs, |j0, chunk, qbuf| {
             for (jj, orow) in chunk.chunks_exact_mut(m).enumerate() {
                 let j = j0 + jj;
-                unpack_col(&self.packed[j * bpc..(j + 1) * bpc], k, &mut qbuf);
+                let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
                 let wscales = &self.scales[j * ng..(j + 1) * ng];
                 for (lane, o) in orow.iter_mut().enumerate() {
                     let xq = &codes[lane * k..(lane + 1) * k];
-                    *o = dot_i8_grouped(xq, &qbuf, wscales, group, act_scales[lane]);
+                    *o = dot_i8_grouped(xq, col, wscales, group, act_scales[lane]);
                 }
             }
         });
@@ -448,6 +624,61 @@ mod tests {
         let via_acts = iw.matmul_quant_acts(&qa, 4);
         let fused = iw.quant_matmul_with_threads(&x, &act, 4);
         assert_eq!(via_acts.data, fused.data, "shared quantized acts == fused path");
+    }
+
+    #[test]
+    fn panel_cache_is_bitwise_transparent() {
+        // cached panels hold exactly the unpack_col codes, so every GEMM
+        // entry (f32 dequant + integer, GEMV + batched, via scratch or
+        // allocating wrapper) must be bitwise unchanged by the cache
+        let mut rng = Rng::new(8);
+        let act = QuantScheme::act4();
+        for (m, k, n, g) in [(1usize, 33, 7, Some(8)), (6, 40, 11, Some(16)), (5, 16, 9, None)] {
+            let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+            let s = QuantScheme { group: g, ..QuantScheme::weight4() };
+            let cold = Int4Weight::pack(&w, &s);
+            let mut hot = cold.clone();
+            hot.build_panels();
+            assert!(hot.has_panels() && !cold.has_panels());
+            assert_eq!(hot.panel_bytes(), k * n);
+            assert_eq!(hot.unpack().data, cold.unpack().data);
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            for threads in [1usize, 4] {
+                assert_eq!(
+                    hot.matmul_with_threads(&x, threads).data,
+                    cold.matmul_with_threads(&x, threads).data,
+                    "f32 path {m}x{k}x{n} t={threads}"
+                );
+                assert_eq!(
+                    hot.quant_matmul_with_threads(&x, &act, threads).data,
+                    cold.quant_matmul_with_threads(&x, &act, threads).data,
+                    "int path {m}x{k}x{n} t={threads}"
+                );
+            }
+            // scratch reuse across differently-sized calls stays correct
+            let mut scratch = GemmScratch::with_threads(4);
+            let mut a = vec![0.0f32; m * n];
+            let mut b = vec![0.0f32; m * n];
+            hot.matmul_into_scratch(&x.data, m, &mut a, 4, &mut scratch);
+            hot.matmul_into_scratch(&x.data, m, &mut b, 4, &mut scratch);
+            assert_eq!(a, b, "warm scratch must not drift");
+            hot.drop_panels();
+            assert!(!hot.has_panels());
+            let mut c = vec![0.0f32; m * n];
+            hot.matmul_into_scratch(&x.data, m, &mut c, 4, &mut scratch);
+            assert_eq!(a, c, "dropping panels must not change results");
+        }
+    }
+
+    #[test]
+    fn panel_budget_flag_parse_rule() {
+        assert_eq!(panel_budget_flag(None), usize::MAX, "unset defaults to unbounded");
+        assert_eq!(panel_budget_flag(Some("0")), 0, "literal 0 disables");
+        assert_eq!(panel_budget_flag(Some(" 4096 ")), 4096);
+        assert_eq!(panel_budget_flag(Some("")), usize::MAX);
+        // a memory *cap* must fail closed on garbage, not open
+        assert_eq!(panel_budget_flag(Some("512M")), 0, "unparseable cap disables the cache");
+        assert_eq!(panel_budget_flag(Some("lots")), 0);
     }
 
     #[test]

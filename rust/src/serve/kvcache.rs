@@ -51,6 +51,21 @@ impl SeqKv {
         }
     }
 
+    /// [`Self::new`] with every per-(layer, side) block list
+    /// pre-reserved for `blocks_per_list` entries, so appends up to that
+    /// many blocks never reallocate. The engine reserves the
+    /// admission-time worst case here, which keeps block-boundary
+    /// crossings inside steady-state decode allocation-free.
+    pub fn with_capacity(n_layers: usize, blocks_per_list: usize) -> Self {
+        // `vec![Vec::with_capacity(..); n]` would clone away the
+        // capacity — build each list explicitly
+        Self {
+            k_blocks: (0..n_layers).map(|_| Vec::with_capacity(blocks_per_list)).collect(),
+            v_blocks: (0..n_layers).map(|_| Vec::with_capacity(blocks_per_list)).collect(),
+            appended: vec![0; n_layers],
+        }
+    }
+
     /// Tokens appended at `layer` so far.
     pub fn len(&self, layer: usize) -> usize {
         self.appended[layer]

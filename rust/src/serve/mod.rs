@@ -17,6 +17,11 @@
 //!   the i32-accumulator GEMM (`Int4Weight::matmul_i8_into`) so the
 //!   quantized decode path runs on integers end to end
 //!   (`KURTAIL_INT_GEMM=0` routes back through the f32 dequant GEMM).
+//! * [`DecodeScratch`] (`serve/scratch.rs`) — the engine-owned arena
+//!   holding every per-iteration buffer, plus the i8 weight panel cache
+//!   on [`Int4Weight`]: steady-state decode performs zero heap
+//!   allocations and is bitwise identical to the fresh-alloc path
+//!   (`KURTAIL_ARENA=0` / `KURTAIL_PANEL_CACHE=0` restore it).
 //!
 //! Everything here runs on the host kernel layer (`util::par`
 //! row-chunking) with the repo-wide determinism contract: results are
@@ -28,9 +33,14 @@ pub mod int4;
 pub mod kvcache;
 pub mod qact;
 pub mod scheduler;
+pub mod scratch;
 
-pub use engine::{argmax, sample_token, Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
-pub use int4::Int4Weight;
+pub use engine::{
+    argmax, sample_token, sample_token_buf, Completion, Engine, EngineStats, ServeConfig,
+    ServeModel, ServeQuantSpec,
+};
+pub use int4::{panel_cache_budget, GemmScratch, Int4Weight};
 pub use kvcache::{KvPool, SeqKv};
 pub use qact::{int_gemm_enabled, QuantActs};
 pub use scheduler::{QueuedRequest, Scheduler};
+pub use scratch::{arena_enabled, DecodeScratch};

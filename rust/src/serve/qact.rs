@@ -103,6 +103,25 @@ pub fn quantize_rows_into(
     scales: &mut [f32],
     threads: usize,
 ) {
+    let mut bufs: Vec<Vec<f32>> = (0..threads.max(1)).map(|_| Vec::new()).collect();
+    quantize_rows_scratch(x, width, s, codes, scales, threads, &mut bufs);
+}
+
+/// [`quantize_rows_into`] with caller-owned per-chunk selection scratch
+/// (the `row_scale_buf` clip-quantile workspace): the serve arena lends
+/// one warm buffer per thread chunk so steady-state decode quantization
+/// performs zero heap allocations. `bufs` needs at least as many slots
+/// as the row partition produces chunks (`threads` always suffices);
+/// contents never affect results.
+pub fn quantize_rows_scratch(
+    x: &[f32],
+    width: usize,
+    s: &QuantScheme,
+    codes: &mut [i8],
+    scales: &mut [f32],
+    threads: usize,
+    bufs: &mut [Vec<f32>],
+) {
     assert!(width > 0, "qact: zero row width");
     assert_eq!(x.len() % width, 0, "qact: ragged rows");
     let m = x.len() / width;
@@ -113,11 +132,10 @@ pub fn quantize_rows_into(
     if m == 0 {
         return;
     }
-    par::par_row_chunks_mut(&mut scales[..m], 1, 64, threads, |r0, chunk| {
-        let mut buf = Vec::with_capacity(width);
+    par::par_row_chunks_scratch_mut(&mut scales[..m], 1, 64, threads, bufs, |r0, chunk, buf| {
         for (i, sc) in chunk.iter_mut().enumerate() {
             let row = &x[(r0 + i) * width..(r0 + i + 1) * width];
-            *sc = row_scale_buf(row, s, &mut buf);
+            *sc = row_scale_buf(row, s, buf);
         }
     });
     let qmax = s.qmax();

@@ -23,6 +23,10 @@ pub struct QueuedRequest {
     pub n_new: usize,
     pub temp: f32,
     pub seed: u64,
+    /// EOS-style stop token: the lane retires as soon as it emits this
+    /// token (included in the completion), releasing its whole block
+    /// reservation for queued admissions. `None` always runs `n_new`.
+    pub stop: Option<i32>,
 }
 
 impl QueuedRequest {
@@ -78,7 +82,7 @@ mod tests {
     use super::*;
 
     fn req(id: usize, len: usize) -> QueuedRequest {
-        QueuedRequest { id, tokens: vec![1; len], n_new: 4, temp: 0.0, seed: 0 }
+        QueuedRequest { id, tokens: vec![1; len], n_new: 4, temp: 0.0, seed: 0, stop: None }
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! The engine-owned decode scratch arena.
+//!
+//! PR-3's `Engine::forward` re-allocated ~35 buffers per decode
+//! iteration: the eight activation blocks, the integer-path code/scale
+//! buffers, a transposed-output staging buffer plus a nibble-unpack
+//! tile per packed GEMM, per-chunk fake-quant selection scratch, the
+//! attention score rows, the softmax scratch of temperature sampling,
+//! and the logits block. [`DecodeScratch`] owns all of them: sized once
+//! at engine build for the admission-time peak (`max_lanes` decode
+//! rows; a longer prompt prefill grows the arena once and it stays
+//! grown), then re-lent to the kernels on every `step()`. In steady
+//! state — live lanes decoding, no admission or retirement in flight —
+//! a decode iteration performs **zero heap allocations** (pinned by
+//! `tests/serve_scratch.rs` under the counting allocator in
+//! `util::alloc`; the assertion runs at `threads = 1` because scoped
+//! thread *spawns* allocate by design — the kernels themselves never
+//! do).
+//!
+//! Buffer contents never carry information between iterations: every
+//! slice is fully overwritten before it is read (the GEMMs overwrite,
+//! the norms overwrite, the attention read overwrites), so arena reuse
+//! is bitwise invisible. `KURTAIL_ARENA=0` (or
+//! `ServeConfig::arena = Some(false)`) drops and re-allocates the whole
+//! arena every forward — the PR-3 allocation profile — which is what
+//! `benches/serve.rs` measures `arena_speedup` against and what the
+//! fresh-alloc-vs-arena equality tests pin bitwise.
+
+use super::int4::GemmScratch;
+
+/// `KURTAIL_ARENA` escape hatch: the persistent scratch arena is on by
+/// default; set `KURTAIL_ARENA=0` to re-allocate every per-iteration
+/// buffer (A/B debugging, the bench baseline). Read per engine build,
+/// like `KURTAIL_INT_GEMM`.
+pub fn arena_enabled() -> bool {
+    arena_flag(std::env::var("KURTAIL_ARENA").ok().as_deref())
+}
+
+/// Parse rule behind [`arena_enabled`]: unset → on, `0` → off,
+/// anything else → on. Split out so the rule itself is testable.
+fn arena_flag(var: Option<&str>) -> bool {
+    var.map(|v| v.trim() != "0").unwrap_or(true)
+}
+
+/// Every per-iteration buffer of the serving forward, owned by the
+/// engine and reused across `step()` calls. Capacities only grow
+/// ([`Self::ensure`]); kernels slice the exact lengths they need.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeScratch {
+    /// Residual stream (`n × d`), filled by token embedding.
+    pub x: Vec<f32>,
+    /// Post-norm / GEMM-output block (`n × d`).
+    pub z: Vec<f32>,
+    /// Q projections (`n × d`).
+    pub qx: Vec<f32>,
+    /// K projections (`n × d`).
+    pub kx: Vec<f32>,
+    /// V projections (`n × d`).
+    pub vx: Vec<f32>,
+    /// Attention output (`n × d`).
+    pub attn: Vec<f32>,
+    /// Rotation staging (`n × max(d, ff)` — R3/R4 use `n·d`, R5 `n·ff`).
+    pub rot: Vec<f32>,
+    /// FFN mid block (`n × ff`).
+    pub mid: Vec<f32>,
+    /// FFN gate block (`n × ff`, llama arch).
+    pub gate: Vec<f32>,
+    /// Output logits (`n × vocab`).
+    pub logits: Vec<f32>,
+    /// Integer-path activation codes (`n × max(d, ff)`).
+    pub qcodes: Vec<i8>,
+    /// Integer-path per-row activation scales (`n`).
+    pub qscales: Vec<f32>,
+    /// Temperature-sampling softmax scratch (`vocab` capacity).
+    pub exps: Vec<f32>,
+    /// Packed-GEMM staging: transposed output + per-chunk unpack tiles.
+    pub gemm: GemmScratch,
+    /// Per-chunk `row_scale_buf` clip-quantile selection scratch.
+    pub fq_bufs: Vec<Vec<f32>>,
+    /// Per-chunk attention score rows (`max_pos` capacity each).
+    pub scores: Vec<Vec<f32>>,
+    /// Row descriptors `(lane_slot, pos)` of the current forward.
+    pub rows: Vec<(usize, usize)>,
+    /// Current tokens of the decode batch.
+    pub toks: Vec<i32>,
+    /// Decode slot list of the current step.
+    pub slots: Vec<usize>,
+}
+
+fn grow_f32(v: &mut Vec<f32>, need: usize) {
+    if v.len() < need {
+        v.resize(need, 0.0);
+    }
+}
+
+impl DecodeScratch {
+    /// Empty arena with one per-chunk scratch slot per thread.
+    pub fn new(threads: usize) -> Self {
+        let t = threads.max(1);
+        Self {
+            gemm: GemmScratch::with_threads(t),
+            fq_bufs: (0..t).map(|_| Vec::new()).collect(),
+            scores: (0..t).map(|_| Vec::new()).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Grow every buffer to cover an `n`-row forward of a
+    /// `(d, ff, vocab)` model whose caches reach `max_pos` tokens.
+    /// Idempotent and never shrinks; after the first call at the peak
+    /// row count, subsequent calls allocate nothing.
+    pub fn ensure(&mut self, n: usize, d: usize, ff: usize, vocab: usize, max_pos: usize) {
+        let wide = d.max(ff);
+        grow_f32(&mut self.x, n * d);
+        grow_f32(&mut self.z, n * d);
+        grow_f32(&mut self.qx, n * d);
+        grow_f32(&mut self.kx, n * d);
+        grow_f32(&mut self.vx, n * d);
+        grow_f32(&mut self.attn, n * d);
+        grow_f32(&mut self.rot, n * wide);
+        grow_f32(&mut self.mid, n * ff);
+        grow_f32(&mut self.gate, n * ff);
+        grow_f32(&mut self.logits, n * vocab);
+        grow_f32(&mut self.qscales, n);
+        if self.qcodes.len() < n * wide {
+            self.qcodes.resize(n * wide, 0);
+        }
+        self.exps.reserve(vocab.saturating_sub(self.exps.len()));
+        self.gemm.reserve(n * wide, wide);
+        for buf in &mut self.fq_bufs {
+            buf.reserve(wide.saturating_sub(buf.len()));
+        }
+        for sc in &mut self.scores {
+            sc.reserve(max_pos.saturating_sub(sc.len()));
+        }
+        self.rows.reserve(n.saturating_sub(self.rows.len()));
+        self.toks.reserve(n.saturating_sub(self.toks.len()));
+        // NOTE: `slots` is deliberately NOT reserved here. The step loop
+        // mem::takes it before decode (leaving an empty placeholder) and
+        // `ensure` runs while it is taken — reserving the placeholder
+        // would allocate fresh capacity every step only to discard it on
+        // restore. The engine reserves the real vector once at build.
+    }
+
+    /// Drop every buffer (keeping the tiny row-descriptor vectors) so
+    /// the next [`Self::ensure`] re-allocates from scratch — the PR-3
+    /// per-iteration allocation profile, kept behind `KURTAIL_ARENA=0`
+    /// for bench A/B and the fresh-alloc-vs-arena equality tests.
+    pub fn reset_buffers(&mut self) {
+        let threads = self.fq_bufs.len().max(1);
+        let rows = std::mem::take(&mut self.rows);
+        let toks = std::mem::take(&mut self.toks);
+        let slots = std::mem::take(&mut self.slots);
+        *self = Self::new(threads);
+        self.rows = rows;
+        self.toks = toks;
+        self.slots = slots;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_flag_parse_rule() {
+        assert!(arena_flag(None), "unset must default to the arena");
+        assert!(!arena_flag(Some("0")));
+        assert!(!arena_flag(Some(" 0 ")));
+        assert!(arena_flag(Some("1")));
+        assert!(arena_flag(Some("")));
+        assert!(arena_flag(Some("off")), "only literal 0 disables");
+    }
+
+    #[test]
+    fn ensure_grows_once_and_never_shrinks() {
+        let mut s = DecodeScratch::new(4);
+        s.ensure(4, 8, 16, 32, 64);
+        assert_eq!(s.x.len(), 32);
+        assert_eq!(s.rot.len(), 4 * 16, "rot covers the wider of d/ff");
+        assert_eq!(s.qcodes.len(), 4 * 16);
+        assert!(s.exps.capacity() >= 32);
+        assert!(s.scores.iter().all(|sc| sc.capacity() >= 64));
+        // a wider call grows…
+        s.ensure(9, 8, 16, 32, 64);
+        assert_eq!(s.x.len(), 72);
+        // …a narrower one is a no-op (slicing handles smaller batches)
+        let cap = s.x.capacity();
+        s.ensure(1, 8, 16, 32, 64);
+        assert_eq!(s.x.len(), 72);
+        assert_eq!(s.x.capacity(), cap);
+    }
+
+    #[test]
+    fn reset_drops_buffers_but_keeps_descriptor_vecs() {
+        let mut s = DecodeScratch::new(2);
+        s.ensure(4, 8, 16, 32, 64);
+        s.rows.push((0, 0));
+        s.reset_buffers();
+        assert!(s.x.is_empty() && s.logits.is_empty() && s.gemm.out_t.is_empty());
+        assert_eq!(s.fq_bufs.len(), 2, "per-chunk slot count survives");
+        assert_eq!(s.rows.len(), 1, "descriptor inputs survive a reset");
+    }
+}

@@ -119,6 +119,26 @@ pub(crate) fn matmul_packed_chunk(
     k: usize,
     n: usize,
 ) {
+    matmul_packed_chunk_impl::<true>(a, packed, c, rows, k, n);
+}
+
+/// Packed-chunk body, parameterized on the output contract: `ACC = true`
+/// accumulates (`C += A@B`, the historical behavior), `ACC = false`
+/// overwrites (`C = A@B`). Each output element is touched exactly once
+/// per call (one panel, one row group), and the register tile starts at
+/// `+0.0` — IEEE `+0.0 + x` reproduces `x` bitwise and a `+0.0`-seeded
+/// sum can never round to `-0.0` — so overwriting a zeroed buffer and
+/// accumulating into it are bitwise identical. That equivalence is what
+/// lets [`PackedB::matmul_overwrite`] drop the pre-fill without
+/// perturbing any decode stream (pinned by `overwrite_matches_zeroed_accumulate`).
+fn matmul_packed_chunk_impl<const ACC: bool>(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
     let np = (n + NR - 1) / NR;
     debug_assert_eq!(packed.len(), np * k * NR);
     debug_assert_eq!(a.len(), rows * k);
@@ -140,7 +160,11 @@ pub(crate) fn matmul_packed_chunk(
             for (r, acc_r) in acc.iter().enumerate() {
                 let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + jw];
                 for (cv, av) in crow.iter_mut().zip(&acc_r[..jw]) {
-                    *cv += *av;
+                    if ACC {
+                        *cv += *av;
+                    } else {
+                        *cv = *av;
+                    }
                 }
             }
         }
@@ -161,10 +185,84 @@ pub(crate) fn matmul_packed_chunk(
             let j0 = p * NR;
             let jw = NR.min(n - j0);
             for (cv, av) in c[i * n + j0..i * n + j0 + jw].iter_mut().zip(&acc[..jw]) {
-                *cv += *av;
+                if ACC {
+                    *cv += *av;
+                } else {
+                    *cv = *av;
+                }
             }
         }
         i += 1;
+    }
+}
+
+/// A `(k, n)` matrix pre-packed into [`pack_b`] column panels, for GEMM
+/// sites that multiply against the *same* B every call (the serve
+/// engine's online rotations, the logits head, dense-f32 serving
+/// weights). [`matmul_into_threads`] re-packs B on every invocation —
+/// one `k×n`-float allocation plus a full copy per call — which is pure
+/// overhead once B is a fixture; packing once at model build removes
+/// both from the decode hot loop.
+///
+/// [`Self::matmul_overwrite`] keeps the exact routing of
+/// [`matmul_into_threads`]: problems under [`PACK_MIN_MADDS`] run the
+/// scalar reference kernel on the caller's dense copy of B (zero-filled
+/// first, matching the historical `fill(0) → accumulate` call shape),
+/// larger ones hit the packed microkernel with an overwriting store.
+/// Both produce bitwise-identical output to `fill(0)` +
+/// `matmul_into_threads` at every thread count (see
+/// [`matmul_packed_chunk_impl`] for why the overwrite store is safe).
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    packed: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a dense row-major `(k, n)` matrix once.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(b.len(), k * n, "PackedB::pack: matrix size");
+        assert!(k > 0 && n > 0, "PackedB::pack: empty matrix");
+        Self { k, n, packed: pack_b(b, k, n, num_threads()) }
+    }
+
+    /// Panel-cache bytes held by the packed copy.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() * 4
+    }
+
+    /// `c = a @ B` (overwrites `c`). `b_dense` must be the same matrix
+    /// handed to [`Self::pack`] — the small-problem path reads it so the
+    /// reference-kernel routing of [`matmul_into_threads`] is preserved
+    /// bit-for-bit; callers always have it (it's the weight they packed).
+    pub fn matmul_overwrite(
+        &self,
+        a: &[f32],
+        b_dense: &[f32],
+        c: &mut [f32],
+        m: usize,
+        threads: usize,
+    ) {
+        let (k, n) = (self.k, self.n);
+        assert_eq!(a.len(), m * k, "PackedB matmul: lhs size");
+        assert_eq!(b_dense.len(), k * n, "PackedB matmul: dense B size");
+        assert_eq!(c.len(), m * n, "PackedB matmul: out size");
+        if m * k * n < PACK_MIN_MADDS {
+            c.fill(0.0);
+            return matmul_into_ref(a, b_dense, c, m, k, n);
+        }
+        par::par_row_chunks_mut(c, n, MIN_ROWS_PER_CHUNK, threads, |i0, cchunk| {
+            let rows = cchunk.len() / n;
+            matmul_packed_chunk_impl::<false>(
+                &a[i0 * k..(i0 + rows) * k],
+                &self.packed,
+                cchunk,
+                rows,
+                k,
+                n,
+            );
+        });
     }
 }
 
@@ -184,23 +282,53 @@ fn microkernel(ar: &[&[f32]; MR], panel: &[f32], acc: &mut [[f32; NR]; MR]) {
     }
 }
 
+/// Width of one [`dot_i8_i32`] tile: 16 code pairs per iteration.
+const I8_TILE: usize = 16;
+/// Independent i32 accumulator lanes inside a tile (4 codes each).
+const I8_LANES: usize = 4;
+
 /// Integer dot with an i32 accumulator — the inner microkernel of the
 /// INT4×INT4 serving GEMM (`serve::Int4Weight::matmul_i8_into`).
 ///
 /// Both operands are signed levels (activation codes on the per-row
-/// fake-quant grid, weight codes unpacked from nibbles), so the sum is
-/// **exact**: no rounding happens until the caller folds the f32 scales.
-/// Integer addition is associative, which is what lets LLVM vectorize
-/// this reduction — the f32 dequant dot must keep a single serial fadd
-/// chain for bitwise determinism and stays scalar. Overflow-safe for
-/// any realistic width: |a·b| ≤ 127·127 < 2¹⁴, so i32 is exact up to
-/// 2¹⁷ elements per call (serving rows are ≤ 2¹³).
+/// fake-quant grid, weight codes unpacked from nibbles or read from the
+/// cached i8 panel), so the sum is **exact**: no rounding happens until
+/// the caller folds the f32 scales. Integer addition is associative, so
+/// the reduction runs as an explicit fixed-width tile — [`I8_TILE`]
+/// elements per step, split across [`I8_LANES`] independent i32
+/// accumulator lanes with fully unrolled (const-bound) inner loops —
+/// the shape LLVM reliably lowers to widening-multiply SIMD
+/// (`pmaddwd`/`sdot`-style) instead of a serial add chain. The f32
+/// dequant dot cannot do this: it must keep one serial fadd chain for
+/// bitwise determinism and stays scalar. Any lane/tile split yields the
+/// same exact integer, so results are unchanged from the scalar loop.
+/// Overflow-safe for any realistic width: |a·b| ≤ 127·127 < 2¹⁴, so i32
+/// is exact up to 2¹⁷ elements per call (serving rows are ≤ 2¹³).
 #[inline]
 pub fn dot_i8_i32(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
+    const SUB: usize = I8_TILE / I8_LANES;
+    let mut lanes = [0i32; I8_LANES];
+    let mut ach = a.chunks_exact(I8_TILE);
+    let mut bch = b.chunks_exact(I8_TILE);
+    for (ca, cb) in ach.by_ref().zip(bch.by_ref()) {
+        let ca: &[i8; I8_TILE] = ca.try_into().unwrap();
+        let cb: &[i8; I8_TILE] = cb.try_into().unwrap();
+        for l in 0..I8_LANES {
+            let mut s = 0i32;
+            for e in 0..SUB {
+                let i = l * SUB + e;
+                s += ca[i] as i32 * cb[i] as i32;
+            }
+            lanes[l] += s;
+        }
+    }
     let mut acc = 0i32;
-    for (&x, &w) in a.iter().zip(b) {
+    for (&x, &w) in ach.remainder().iter().zip(bch.remainder()) {
         acc += x as i32 * w as i32;
+    }
+    for l in lanes {
+        acc += l;
     }
     acc
 }
@@ -534,6 +662,40 @@ mod tests {
             .zip(&c_packed.data)
             .fold(0.0f32, |acc, (x, y)| acc.max((x - y).abs()));
         assert!(diff < 1e-3, "ref vs packed diff {diff}");
+    }
+
+    #[test]
+    fn overwrite_matches_zeroed_accumulate() {
+        // PackedB::matmul_overwrite must be bitwise equal to the
+        // historical fill(0) → matmul_into_threads call shape on both
+        // sides of the PACK_MIN_MADDS routing threshold
+        let mut rng = Rng::new(13);
+        for (m, k, n) in [(3usize, 10, 7), (5, 64, 64), (37, 41, 43), (16, 256, 129)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let pb = PackedB::pack(&b.data, k, n);
+            for threads in [1usize, 4] {
+                let mut want = vec![0.0f32; m * n];
+                matmul_into_threads(&a.data, &b.data, &mut want, m, k, n, threads);
+                let mut got = vec![0.7f32; m * n]; // stale garbage must vanish
+                pb.matmul_overwrite(&a.data, &b.data, &mut got, m, threads);
+                assert_eq!(got, want, "{m}x{k}x{n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_i8_tile_matches_scalar_reduction() {
+        // the fixed-width tile is an exact integer reduction: every
+        // length class (full tiles, lane remainders, empty) agrees with
+        // the naive scalar loop
+        let mut rng = Rng::new(21);
+        for k in [0usize, 1, 3, 15, 16, 17, 31, 32, 64, 100, 333] {
+            let a: Vec<i8> = (0..k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want: i32 = a.iter().zip(&b).map(|(&x, &w)| x as i32 * w as i32).sum();
+            assert_eq!(dot_i8_i32(&a, &b), want, "k={k}");
+        }
     }
 
     #[test]

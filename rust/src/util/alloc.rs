@@ -1,0 +1,62 @@
+//! Debug counting allocator: a [`GlobalAlloc`] wrapper over the system
+//! allocator that counts allocation events, so tests can assert that a
+//! code region performs **zero heap allocations**.
+//!
+//! Install it per test binary:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: kurtail::util::alloc::CountingAlloc =
+//!     kurtail::util::alloc::CountingAlloc::new();
+//! ```
+//!
+//! then snapshot [`CountingAlloc::allocations`] around the region under
+//! test (`tests/serve_scratch.rs` pins the serve engine's steady-state
+//! decode this way). `alloc`, `alloc_zeroed`, and `realloc` each count
+//! as one event — a `Vec` growing in place via `realloc` is still a
+//! heap round-trip the hot path must not take. `dealloc` is not
+//! counted: dropping is fine to observe, acquiring is not.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Allocation-counting wrapper over [`System`].
+#[derive(Default)]
+pub struct CountingAlloc {
+    events: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        Self { events: AtomicU64::new(0) }
+    }
+
+    /// Allocation events (alloc + alloc_zeroed + realloc) so far.
+    pub fn allocations(&self) -> u64 {
+        self.events.load(Ordering::SeqCst)
+    }
+}
+
+// SAFETY: delegates every operation to `System` unchanged; the only
+// addition is a relaxed-enough atomic counter bump, which allocates
+// nothing and is reentrancy-safe.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.events.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.events.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.events.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

@@ -1,6 +1,7 @@
 //! Small shared utilities: deterministic RNG, timing, JSON, bench harness,
 //! property-testing helpers. All dependency-free (offline build).
 
+pub mod alloc;
 pub mod bench;
 pub mod json;
 pub mod par;

@@ -46,6 +46,38 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    // unit scratch: a Vec of ZSTs never touches the heap
+    let mut units = vec![(); threads.max(1)];
+    par_row_chunks_scratch_mut(data, width, min_rows, threads, &mut units, |r0, chunk, _| {
+        f(r0, chunk)
+    });
+}
+
+/// [`par_row_chunks_mut`] with one caller-owned scratch slot handed to
+/// each chunk: chunk `i` (in partition order) gets exclusive `&mut`
+/// access to `scratch[i]` for the duration of its callback.
+///
+/// This is how the serving hot loop keeps per-thread work buffers
+/// (fake-quant selection scratch, attention score rows, nibble-unpack
+/// tiles) out of the steady-state allocation count: the buffers live in
+/// an engine-owned arena and are *re-lent* to the kernels on every call
+/// instead of being reallocated inside each chunk closure. `scratch`
+/// must provide at least as many slots as the partition produces chunks
+/// (`threads` slots always suffice). Scratch contents must never affect
+/// results — only capacity is reused — so the determinism contract of
+/// [`par_row_chunks_mut`] carries over unchanged.
+pub fn par_row_chunks_scratch_mut<T, S, F>(
+    data: &mut [T],
+    width: usize,
+    min_rows: usize,
+    threads: usize,
+    scratch: &mut [S],
+    f: F,
+) where
+    T: Send,
+    S: Send,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
     assert!(width > 0, "par_row_chunks_mut: zero row width");
     assert_eq!(data.len() % width, 0, "par_row_chunks_mut: ragged rows");
     let rows = data.len() / width;
@@ -53,12 +85,18 @@ where
         return;
     }
     let n_chunks = threads.max(1).min((rows / min_rows.max(1)).max(1));
+    assert!(
+        scratch.len() >= n_chunks,
+        "par_row_chunks_scratch_mut: {} scratch slots for {n_chunks} chunks",
+        scratch.len()
+    );
     if n_chunks == 1 {
-        f(0, data);
+        f(0, data, &mut scratch[0]);
         return;
     }
     let rows_per = (rows + n_chunks - 1) / n_chunks;
     let (first, mut rest) = data.split_at_mut(rows_per.min(rows) * width);
+    let (s_first, mut s_rest) = scratch.split_first_mut().expect("scratch slot for chunk 0");
     std::thread::scope(|scope| {
         let f = &f;
         let mut row0 = rows_per.min(rows);
@@ -66,12 +104,15 @@ where
             let take = rows_per.min(rest.len() / width);
             let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * width);
             rest = tail;
+            let (slot, s_tail) =
+                std::mem::take(&mut s_rest).split_first_mut().expect("scratch slot for chunk");
+            s_rest = s_tail;
             let r0 = row0;
             row0 += take;
-            scope.spawn(move || f(r0, head));
+            scope.spawn(move || f(r0, head, slot));
         }
         // the first chunk runs on the calling thread while the rest work
-        f(0, first);
+        f(0, first, s_first);
     });
 }
 
@@ -112,6 +153,39 @@ mod tests {
             hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         });
         assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scratch_slots_are_per_chunk_and_reused() {
+        // every chunk sees exactly one scratch slot; slot contents from a
+        // prior call survive (capacity reuse is the whole point)
+        let mut data = vec![0u32; 64];
+        let mut bufs: Vec<Vec<u32>> = (0..4).map(|_| Vec::with_capacity(8)).collect();
+        for pass in 0..2u32 {
+            par_row_chunks_scratch_mut(&mut data, 4, 1, 4, &mut bufs, |r0, chunk, buf| {
+                buf.push(pass);
+                for (i, row) in chunk.chunks_exact_mut(4).enumerate() {
+                    row.fill((r0 + i) as u32 + pass);
+                }
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, (i / 4) as u32 + 1);
+        }
+        // each used slot accumulated one entry per pass, untouched between
+        let used: Vec<_> = bufs.iter().filter(|b| !b.is_empty()).collect();
+        assert!(!used.is_empty());
+        for b in used {
+            assert_eq!(b.as_slice(), &[0, 1]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scratch slots")]
+    fn scratch_shortfall_panics() {
+        let mut data = vec![0u8; 32];
+        let mut bufs = [0u8; 1];
+        par_row_chunks_scratch_mut(&mut data, 1, 1, 8, &mut bufs, |_, _, _| {});
     }
 
     #[test]

@@ -1,0 +1,46 @@
+//! Shared fixtures for the integration-test binaries (`tests/common/`
+//! is the cargo convention for a non-test helper module).
+
+use kurtail::runtime::{ConfigMeta, ParamSpec};
+
+/// Tiny llama meta for serve-engine tests (no artifacts involved):
+/// 2 layers, d=8, 2 heads, ff=16, vocab=16, seq_len 16. One definition
+/// shared by `tests/props.rs` (bitwise-transparency properties) and
+/// `tests/serve_scratch.rs` (zero-allocation pin) so both measure the
+/// same model shape.
+pub fn serve_test_meta() -> ConfigMeta {
+    let (l, d, ff, v, h) = (2usize, 8usize, 16usize, 16usize, 2usize);
+    let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape };
+    ConfigMeta {
+        name: "servetest".into(),
+        vocab: v,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_head: d / h,
+        d_ff: ff,
+        seq_len: 16,
+        arch: "llama".into(),
+        n_experts: 1,
+        top_k: 1,
+        train_batch: 1,
+        eval_batch: 1,
+        cap_batch: 1,
+        decode_batch: 1,
+        spin_batch: 1,
+        param_specs: vec![
+            spec("embed", vec![v, d]),
+            spec("ln1", vec![l, d]),
+            spec("wq", vec![l, d, d]),
+            spec("wk", vec![l, d, d]),
+            spec("wv", vec![l, d, d]),
+            spec("wo", vec![l, d, d]),
+            spec("ln2", vec![l, d]),
+            spec("wg", vec![l, d, ff]),
+            spec("wu", vec![l, d, ff]),
+            spec("wd", vec![l, ff, d]),
+            spec("lnf", vec![d]),
+            spec("head", vec![v, d]),
+        ],
+    }
+}

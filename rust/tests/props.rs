@@ -2,6 +2,9 @@
 //! in-tree `util::proptest` harness). No artifacts needed — these pin
 //! the host-side math that the pipeline trusts.
 
+mod common;
+use common::serve_test_meta;
+
 use kurtail::calib::{corpus, ByteTokenizer, CorpusKind, TokenDataset, World};
 use kurtail::config::QuantScheme;
 use kurtail::quant::fakequant::{fake_quant_rows_with_threads, row_scale};
@@ -16,7 +19,6 @@ use kurtail::tensor::matmul::{
 };
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
-use kurtail::runtime::{ConfigMeta, ParamSpec};
 use kurtail::serve::{
     Engine, Int4Weight, KvPool, QuantActs, SeqKv, ServeConfig, ServeModel, ServeQuantSpec,
 };
@@ -432,44 +434,6 @@ fn prop_kv_pool_roundtrip_matches_fake_quant_asym() {
     });
 }
 
-/// Tiny llama meta for serve-engine properties (no artifacts involved).
-fn serve_test_meta() -> ConfigMeta {
-    let (l, d, ff, v, h) = (2usize, 8usize, 16usize, 16usize, 2usize);
-    let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape };
-    ConfigMeta {
-        name: "servetest".into(),
-        vocab: v,
-        d_model: d,
-        n_layers: l,
-        n_heads: h,
-        d_head: d / h,
-        d_ff: ff,
-        seq_len: 16,
-        arch: "llama".into(),
-        n_experts: 1,
-        top_k: 1,
-        train_batch: 1,
-        eval_batch: 1,
-        cap_batch: 1,
-        decode_batch: 1,
-        spin_batch: 1,
-        param_specs: vec![
-            spec("embed", vec![v, d]),
-            spec("ln1", vec![l, d]),
-            spec("wq", vec![l, d, d]),
-            spec("wk", vec![l, d, d]),
-            spec("wv", vec![l, d, d]),
-            spec("wo", vec![l, d, d]),
-            spec("ln2", vec![l, d]),
-            spec("wg", vec![l, d, ff]),
-            spec("wu", vec![l, d, ff]),
-            spec("wd", vec![l, ff, d]),
-            spec("lnf", vec![d]),
-            spec("head", vec![v, d]),
-        ],
-    }
-}
-
 #[test]
 fn prop_serve_engine_bitwise_across_threads_and_lanes() {
     // the KV-block append/read path and every serve kernel must be
@@ -511,6 +475,96 @@ fn prop_serve_engine_bitwise_across_threads_and_lanes() {
                 run(lanes, threads) == base,
                 &format!("serve streams bitwise at lanes={lanes} threads={threads}"),
             )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_panel_cache_bitwise_transparent() {
+    // the i8 panel cache is a layout change only: every GEMM entry
+    // (f32 dequant + integer, GEMV + batched) must produce identical
+    // bits with the cache built and without, at every thread budget
+    check(15, |rng| {
+        let k = 4 + rng.below(60);
+        let n = 1 + rng.below(20);
+        let m = 1 + rng.below(12);
+        let g = 1 + rng.below(k);
+        let act = QuantScheme::act4();
+        let w = Tensor::randn(&[k, n], 0.3, rng);
+        let cold = Int4Weight::pack(&w, &QuantScheme::weight4_grouped(g));
+        let mut hot = cold.clone();
+        hot.build_panels();
+        let x = Tensor::randn(&[m, k], 1.0, rng);
+        for threads in [1usize, 4] {
+            prop_assert(
+                hot.matmul_with_threads(&x, threads).data
+                    == cold.matmul_with_threads(&x, threads).data,
+                "panel cache transparent on the f32 dequant GEMM",
+            )?;
+            prop_assert(
+                hot.quant_matmul_with_threads(&x, &act, threads).data
+                    == cold.quant_matmul_with_threads(&x, &act, threads).data,
+                "panel cache transparent on the integer GEMM",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serve_arena_and_panel_streams_bitwise() {
+    // the scratch arena and the panel cache must be bitwise invisible:
+    // decode streams with (fresh-alloc, no panels) — the PR-3 profile —
+    // equal every (arena, panel) combination across KURTAIL_THREADS-style
+    // budgets {1, 4} and lanes {1, 16}, on both GEMM paths
+    let meta = serve_test_meta();
+    check(4, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..3)
+            .map(|_| {
+                let p = 1 + rng.below(4);
+                let toks = (0..p).map(|_| rng.below(meta.vocab) as i32).collect();
+                (toks, 1 + rng.below(5))
+            })
+            .collect();
+        for int_gemm in [true, false] {
+            let run = |lanes: usize, threads: usize, arena: bool, panel: usize| -> Vec<Vec<i32>> {
+                let cfg = ServeConfig {
+                    max_lanes: lanes,
+                    block_tokens: 2,
+                    kv_quant: KvQuant::Asym4,
+                    threads: Some(threads),
+                    int_gemm: Some(int_gemm),
+                    arena: Some(arena),
+                    panel_cache: Some(panel),
+                    ..ServeConfig::default()
+                };
+                let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+                for (toks, n) in &reqs {
+                    eng.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+                }
+                eng.run().unwrap().into_iter().map(|c| c.tokens).collect()
+            };
+            // PR-3 profile: fresh allocations, no panel cache
+            let base = run(1, 1, false, 0);
+            for (lanes, threads) in [(1usize, 4usize), (16, 1), (16, 4)] {
+                for (arena, panel) in [(true, 0), (true, usize::MAX), (false, usize::MAX)] {
+                    prop_assert(
+                        run(lanes, threads, arena, panel) == base,
+                        &format!(
+                            "serve streams bitwise at lanes={lanes} threads={threads} \
+                             arena={arena} panel={panel} int={int_gemm}"
+                        ),
+                    )?;
+                }
+            }
         }
         Ok(())
     });

@@ -1,0 +1,88 @@
+//! Steady-state zero-allocation pin for the serve decode hot path.
+//!
+//! The engine-owned scratch arena (`serve/scratch.rs`), the pre-packed
+//! rotation/head matrices, the i8 weight panel cache, and the
+//! capacity-reserving lane/KV bookkeeping together make a steady-state
+//! `Engine::step()` — live lanes decoding, nothing admitted or retired
+//! — perform **zero heap allocations**. This binary installs the
+//! counting allocator (`util::alloc::CountingAlloc`) as the global
+//! allocator and asserts exactly that.
+//!
+//! Deliberately a single `#[test]`: the allocation counter is global to
+//! the process, so a concurrently running sibling test would pollute
+//! the measurement window. The assertion runs at `threads = 1` because
+//! scoped thread *spawns* allocate by design (stacks, join state) — the
+//! kernels themselves never do, which the bitwise-equality properties in
+//! `tests/props.rs` cover across thread counts.
+
+mod common;
+use common::serve_test_meta;
+
+use kurtail::config::KvQuant;
+use kurtail::model::Params;
+use kurtail::serve::{Engine, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::tensor::hadamard::random_hadamard;
+use kurtail::util::alloc::CountingAlloc;
+use kurtail::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn steady_state_decode_is_allocation_free() {
+    let meta = serve_test_meta();
+    let mut rng = Rng::new(0);
+    let params = Params::init(&meta, &mut rng);
+    let spec = ServeQuantSpec::paper_default(
+        random_hadamard(meta.d_head, &mut rng),
+        random_hadamard(meta.d_head, &mut rng),
+        random_hadamard(meta.d_ff, &mut rng),
+    );
+    let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+    // block_tokens = 2 makes the measurement window cross block
+    // boundaries, exercising the pre-reserved SeqKv block lists
+    let cfg = ServeConfig {
+        max_lanes: 2,
+        block_tokens: 2,
+        kv_quant: KvQuant::Asym4,
+        threads: Some(1),
+        int_gemm: Some(true),
+        arena: Some(true),
+        // explicit unbounded budget (None would follow the
+        // KURTAIL_PANEL_CACHE env var and break under `=0`)
+        panel_cache: Some(usize::MAX),
+        ..ServeConfig::default()
+    };
+    let mut eng = Engine::new(model, &cfg).unwrap();
+    assert!(eng.arena());
+    assert!(eng.panel_cache_bytes() > 0, "panel cache should be built");
+    eng.submit_tokens(vec![1, 2], 12, 0.0, 7).unwrap();
+    eng.submit_tokens(vec![3], 12, 0.0, 7).unwrap();
+
+    // step 1 admits + prefills both lanes (allocates: lane setup, KV
+    // block lists); two more decode steps warm every arena buffer
+    assert!(eng.step().unwrap());
+    assert!(eng.step().unwrap());
+    assert!(eng.step().unwrap());
+    assert_eq!(eng.stats.admitted, 2);
+    let tokens_before = eng.stats.decode_tokens;
+
+    let snapshot = ALLOC.allocations();
+    for i in 0..6 {
+        assert!(eng.step().unwrap(), "lanes must stay live through window step {i}");
+    }
+    let delta = ALLOC.allocations() - snapshot;
+    assert_eq!(
+        delta, 0,
+        "steady-state decode must not touch the heap ({delta} allocation events in 6 steps)"
+    );
+    assert_eq!(eng.stats.decode_tokens - tokens_before, 12, "6 steps × 2 live lanes");
+
+    // and the engine still finishes cleanly afterwards
+    let done = eng.run().unwrap();
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.tokens.len(), c.prompt_len + 12);
+    }
+    assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+}

@@ -10,6 +10,8 @@
 #     (packed-parallel vs the scalar seed kernel)
 #   * serve:   runs[lanes=16].speedup_vs_lane1   (continuous batching)
 #              runs[lanes=16].int_gemm_speedup   (int vs f32-dequant GEMM)
+#              runs[lanes=16].arena_speedup      (arena+panel vs the PR-3
+#                                                 fresh-alloc decode path)
 #
 # Usage:  scripts/check_bench.sh            # gate current vs baseline
 #         scripts/check_bench.sh --update   # refresh BENCH_baseline/
@@ -71,6 +73,7 @@ metrics = [
     ("kernels: gram@1024 speedup", kernel_speedup, (cur_k, "gram", 1024), (base_k, "gram", 1024)),
     ("serve: lanes=16 speedup_vs_lane1", serve_run_metric, (cur_s, 16, "speedup_vs_lane1"), (base_s, 16, "speedup_vs_lane1")),
     ("serve: lanes=16 int_gemm_speedup", serve_run_metric, (cur_s, 16, "int_gemm_speedup"), (base_s, 16, "int_gemm_speedup")),
+    ("serve: lanes=16 arena_speedup", serve_run_metric, (cur_s, 16, "arena_speedup"), (base_s, 16, "arena_speedup")),
 ]
 
 failures = []
