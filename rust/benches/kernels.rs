@@ -9,6 +9,7 @@
 
 use kurtail::config::QuantScheme;
 use kurtail::quant::fakequant::{fake_quant_rows, fake_quant_rows_ref};
+use kurtail::quant::gptq::{gptq_quantize_with_factor, GptqFactor};
 use kurtail::runtime::{Runtime, Value};
 use kurtail::serve::Int4Weight;
 use kurtail::tensor::hadamard::{fwht_rows, fwht_rows_ref};
@@ -138,6 +139,43 @@ fn host_kernels() {
             cold,
             hot,
         ));
+    }
+
+    // work-stealing vs static row-chunking on a *skewed* GPTQ workload:
+    // 7/8 of the output channels are all-zero, so their per-step error
+    // feedback short-circuits and nearly all the work concentrates in
+    // the dense tail — the static chunker strands it on one thread,
+    // the steal backend's finer fixed grid rebalances it. The entry's
+    // `speedup` field is the steal-vs-static ratio
+    // (`gptq_skewed_steal`), tracked like every other comparison.
+    {
+        let (gk, gn) = (512usize, 512usize);
+        tune(&mut b, gk);
+        let mut wdata = vec![0.0f32; gk * gn];
+        let dense_cols = gn / 8;
+        let dense = Tensor::randn(&[gk, dense_cols], 0.3, &mut rng);
+        for i in 0..gk {
+            for jj in 0..dense_cols {
+                wdata[i * gn + (gn - dense_cols + jj)] = dense.data[i * dense_cols + jj];
+            }
+        }
+        let w = Tensor::new(wdata, vec![gk, gn]);
+        // correlated activations → non-diagonal Hessian (damped SPD in prepare)
+        let h = kurtail::tensor::matmul::gram(&Tensor::randn(&[256, gk], 1.0, &mut rng));
+        let factor = GptqFactor::prepare(&h);
+        let wscheme = QuantScheme::weight4();
+        let prior = std::env::var("KURTAIL_PAR").ok();
+        std::env::set_var("KURTAIL_PAR", "static");
+        let static_stats =
+            b.run(&format!("host/gptq_skewed_static_{gk}x{gn}"), || gptq_quantize_with_factor(&w, &factor, &wscheme));
+        std::env::set_var("KURTAIL_PAR", "steal");
+        let steal_stats =
+            b.run(&format!("host/gptq_skewed_steal_{gk}x{gn}"), || gptq_quantize_with_factor(&w, &factor, &wscheme));
+        match prior {
+            Some(v) => std::env::set_var("KURTAIL_PAR", v),
+            None => std::env::remove_var("KURTAIL_PAR"),
+        }
+        comparisons.push(comparison("gptq_skewed_steal", gk, format!("{gk}x{gn}"), static_stats, steal_stats));
     }
 
     let path =

@@ -3,10 +3,21 @@
 //! weight traversal dominates (d_head 64 → the 4-bit KV layout shows its
 //! full ≥6× memory win). No artifacts needed — the engine is native.
 //!
-//! Every lane count runs the quantized engine three ways:
+//! Every lane count runs the quantized engine five ways:
 //!
-//! * integer-accumulator GEMM, arena + panel cache on (`tok_s` — the
-//!   default serving path),
+//! * integer-accumulator GEMM, arena + panel cache + fused column-major
+//!   epilogues + work-stealing runtime (`tok_s` — the default serving
+//!   path),
+//! * the same arena profile with the PR-4 **serial-flip** epilogue
+//!   (`ServeConfig::fused_epilogue = Some(false)`):
+//!   `serial_epilogue_tok_s`, and `epilogue_fused_speedup = tok_s /
+//!   serial_epilogue_tok_s` isolates the fused-epilogue win (gated by
+//!   `scripts/check_bench.sh` at lanes = 16),
+//! * the same arena+fused profile on the **static** scoped-thread
+//!   runtime (`ServeConfig::par_backend = Some(Static)`):
+//!   `static_par_tok_s`, and `steal_speedup = tok_s / static_par_tok_s`
+//!   isolates the work-stealing win on the mixed serving batch (the
+//!   skewed-kernel steal case lives in `benches/kernels.rs`),
 //! * integer GEMM on the PR-3 fresh-alloc profile
 //!   (`ServeConfig::arena = Some(false)`, `panel_cache = Some(0)`):
 //!   `legacy_alloc_tok_s`, and `arena_speedup = tok_s /
@@ -15,9 +26,9 @@
 //!   `int_gemm_speedup = legacy_alloc_tok_s / f32_dequant_tok_s` keeps
 //!   the PR-3 definition of the INT4×INT4 headline — both of its sides
 //!   on the fresh-alloc path — so the committed baseline floor stays
-//!   comparable (`scripts/check_bench.sh` gates both speedups; the
-//!   arena/panel win is deliberately kept out of `int_gemm_speedup` so
-//!   one knob's gain can't mask or fake the other's regression).
+//!   comparable (`scripts/check_bench.sh` gates the speedups; each A/B
+//!   isolates one knob so one knob's gain can't mask or fake another's
+//!   regression).
 //!
 //! Writes `BENCH_serve.json` (path override: `KURTAIL_BENCH_SERVE_JSON`)
 //! with tokens/sec at 1/4/16 concurrent sequences and KV bytes/token for
@@ -29,7 +40,7 @@ use std::time::Instant;
 use kurtail::config::{KvQuant, QuantScheme};
 use kurtail::model::Params;
 use kurtail::runtime::{ConfigMeta, ParamSpec};
-use kurtail::serve::{Engine, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::serve::{Engine, ParBackend, ServeConfig, ServeModel, ServeQuantSpec};
 use kurtail::tensor::hadamard::random_hadamard;
 use kurtail::util::json::{arr, num, obj, s as js, Json};
 use kurtail::util::par::num_threads;
@@ -88,7 +99,8 @@ fn submit_all(eng: &mut Engine, requests: usize) {
 /// One timed engine run; returns (wall seconds, total tokens processed).
 /// Engine construction (weight packing, panel build, arena sizing) sits
 /// outside the timed region — it is per-deployment, not per-request.
-fn timed_run(
+#[allow(clippy::too_many_arguments)]
+fn timed_run_cfg(
     model: &ServeModel,
     kv: KvQuant,
     lanes: usize,
@@ -96,6 +108,8 @@ fn timed_run(
     int_gemm: Option<bool>,
     arena: Option<bool>,
     panel_cache: Option<usize>,
+    fused_epilogue: Option<bool>,
+    par_backend: Option<ParBackend>,
 ) -> (f64, usize, Engine) {
     let cfg = ServeConfig {
         max_lanes: lanes,
@@ -103,6 +117,8 @@ fn timed_run(
         int_gemm,
         arena,
         panel_cache,
+        fused_epilogue,
+        par_backend,
         ..ServeConfig::default()
     };
     let mut eng = Engine::new(model.clone(), &cfg).expect("engine");
@@ -112,6 +128,18 @@ fn timed_run(
     let wall = t0.elapsed().as_secs_f64();
     let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
     (wall, tokens, eng)
+}
+
+fn timed_run(
+    model: &ServeModel,
+    kv: KvQuant,
+    lanes: usize,
+    requests: usize,
+    int_gemm: Option<bool>,
+    arena: Option<bool>,
+    panel_cache: Option<usize>,
+) -> (f64, usize, Engine) {
+    timed_run_cfg(model, kv, lanes, requests, int_gemm, arena, panel_cache, None, None)
 }
 
 fn main() {
@@ -152,9 +180,47 @@ fn main() {
         let (legacy_wall, legacy_tokens, _) =
             timed_run(&int4, KvQuant::Asym4, lanes, REQUESTS, Some(true), Some(false), Some(0));
         let legacy_tok_s = legacy_tokens as f64 / legacy_wall;
-        // integer GEMM + arena + panel cache (the default serving path)
-        let (wall, tokens, eng) =
-            timed_run(&int4, KvQuant::Asym4, lanes, REQUESTS, Some(true), Some(true), None);
+        // arena profile with the PR-4 serial-flip epilogue (one side of
+        // the fused-epilogue A/B: only the epilogue differs)
+        let (serial_wall, serial_tokens, _) = timed_run_cfg(
+            &int4,
+            KvQuant::Asym4,
+            lanes,
+            REQUESTS,
+            Some(true),
+            Some(true),
+            None,
+            Some(false),
+            Some(ParBackend::Steal),
+        );
+        let serial_tok_s = serial_tokens as f64 / serial_wall;
+        // arena + fused profile on the static runtime (one side of the
+        // work-stealing A/B: only the backend differs)
+        let (static_wall, static_tokens, _) = timed_run_cfg(
+            &int4,
+            KvQuant::Asym4,
+            lanes,
+            REQUESTS,
+            Some(true),
+            Some(true),
+            None,
+            Some(true),
+            Some(ParBackend::Static),
+        );
+        let static_tok_s = static_tokens as f64 / static_wall;
+        // integer GEMM + arena + panel cache + fused epilogues +
+        // work-stealing runtime (the default serving path)
+        let (wall, tokens, eng) = timed_run_cfg(
+            &int4,
+            KvQuant::Asym4,
+            lanes,
+            REQUESTS,
+            Some(true),
+            Some(true),
+            None,
+            Some(true),
+            Some(ParBackend::Steal),
+        );
         let tok_s = tokens as f64 / wall;
         if lanes == 1 {
             lane1_tok_s = tok_s;
@@ -162,9 +228,13 @@ fn main() {
         let speedup = tok_s / lane1_tok_s.max(1e-9);
         let int_speedup = legacy_tok_s / f32_tok_s.max(1e-9);
         let arena_speedup = tok_s / legacy_tok_s.max(1e-9);
+        let epilogue_speedup = tok_s / serial_tok_s.max(1e-9);
+        let steal_speedup = tok_s / static_tok_s.max(1e-9);
         println!(
             "int4 lanes={lanes:<2}: {tok_s:.1} tok/s ({tokens} tokens in {wall:.2}s, \
-             {speedup:.2}x vs 1 lane, {arena_speedup:.2}x vs alloc path {legacy_tok_s:.1} tok/s; \
+             {speedup:.2}x vs 1 lane, {arena_speedup:.2}x vs alloc path {legacy_tok_s:.1} tok/s, \
+             {epilogue_speedup:.2}x vs serial epilogue {serial_tok_s:.1} tok/s, \
+             {steal_speedup:.2}x vs static runtime {static_tok_s:.1} tok/s; \
              int-vs-f32 on the alloc profile: {int_speedup:.2}x over {f32_tok_s:.1} tok/s)"
         );
         runs.push(obj(vec![
@@ -179,6 +249,10 @@ fn main() {
             ("int_gemm_speedup", num(int_speedup)),
             ("legacy_alloc_tok_s", num(legacy_tok_s)),
             ("arena_speedup", num(arena_speedup)),
+            ("serial_epilogue_tok_s", num(serial_tok_s)),
+            ("epilogue_fused_speedup", num(epilogue_speedup)),
+            ("static_par_tok_s", num(static_tok_s)),
+            ("steal_speedup", num(steal_speedup)),
         ]));
         last_eng = Some(eng);
     }

@@ -19,7 +19,7 @@ use kurtail::eval::evaluate;
 use kurtail::exp::{self, ExpCtx};
 use kurtail::model::generate::Generator;
 use kurtail::runtime::Runtime;
-use kurtail::serve::ServeConfig;
+use kurtail::serve::{ParBackend, ServeConfig};
 
 struct Args {
     cmd: String,
@@ -33,6 +33,11 @@ struct Args {
     tokens: usize,
     lanes: usize,
     requests: usize,
+    /// `serve`: parallel-runtime backend (None follows `KURTAIL_PAR`).
+    par_backend: Option<ParBackend>,
+    /// `serve`: arena decay idle-step count (None follows
+    /// `KURTAIL_SCRATCH_DECAY`; 0 disables).
+    scratch_decay: Option<usize>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -48,6 +53,8 @@ fn parse_args() -> Result<Args, String> {
         tokens: 48,
         lanes: 4,
         requests: 8,
+        par_backend: None,
+        scratch_decay: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -86,6 +93,17 @@ fn parse_args() -> Result<Args, String> {
             "--requests" => {
                 a.requests = take("--requests")?.parse().map_err(|e| format!("--requests: {e}"))?
             }
+            "--par-backend" => {
+                a.par_backend = Some(match take("--par-backend")?.to_ascii_lowercase().as_str() {
+                    "static" => ParBackend::Static,
+                    "steal" => ParBackend::Steal,
+                    b => return Err(format!("unknown parallel backend '{b}' (static|steal)")),
+                })
+            }
+            "--scratch-decay" => {
+                a.scratch_decay =
+                    Some(take("--scratch-decay")?.parse().map_err(|e| format!("--scratch-decay: {e}"))?)
+            }
             flag if flag.starts_with("--") => return Err(format!("unknown flag '{flag}'")),
             pos => {
                 if a.cmd.is_empty() {
@@ -108,6 +126,7 @@ fn usage() {
          \x20 quantize <model> [--method M] [--weights W]   full PTQ pipeline + eval\n\
          \x20 generate <model> [--method M] [--prompt P] [--tokens N]\n\
          \x20 serve <model> [--method M] [--lanes N] [--requests N] [--prompt P] [--tokens N]\n\
+         \x20       [--par-backend static|steal] [--scratch-decay N]\n\
          \x20 list                             artifacts + configs"
     );
 }
@@ -218,7 +237,13 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 pcfg.calib.iters = 30;
             }
             let (pm, _) = pipe.quantize(&pcfg)?;
-            let scfg = ServeConfig { max_lanes: args.lanes, ..ServeConfig::default() };
+            // A/B knobs surfaced as flags so runs don't need env vars
+            let scfg = ServeConfig {
+                max_lanes: args.lanes,
+                par_backend: args.par_backend,
+                scratch_decay: args.scratch_decay,
+                ..ServeConfig::default()
+            };
             let mut eng = pipe.serve_engine(&pm, &scfg)?;
             for i in 0..args.requests {
                 eng.submit(&args.prompt, args.tokens, 0.8, args.seed.wrapping_add(i as u64))?;

@@ -63,6 +63,14 @@ pub fn gptq_quantize_with_factor(w: &Tensor, f: &GptqFactor, s: &QuantScheme) ->
     // Wᵀ (U is read-only), so the channels split across threads with the
     // per-channel i-recursion untouched: bitwise-identical results at
     // every thread count.
+    //
+    // Per-channel cost is heavily *skewed* — a channel whose rounding
+    // errors are zero (already-on-grid weights, pruned channels) skips
+    // the O(k) AXPY at every step — which is exactly the case the
+    // work-stealing `util::par` backend rebalances: the fixed channel
+    // grid is finer than the worker count and idle workers pick up the
+    // expensive chunks (`benches/kernels.rs` measures this as
+    // `gptq_skewed_steal`). Chunk partition never affects results.
     let mut wt = w.t(); // (n, k), mutated with error feedback
     crate::util::par::par_row_chunks_mut(
         &mut wt.data,

@@ -43,7 +43,36 @@
 //! steady-state decode `step()` performs zero heap allocations (pinned
 //! by `tests/serve_scratch.rs`). All of it is bitwise invisible:
 //! `KURTAIL_ARENA=0` re-allocates everything per iteration (the PR-3
-//! profile) and produces identical token streams.
+//! profile) and produces identical token streams. The arena also decays
+//! back to the live-lane peak after an idle window
+//! (`ServeConfig::scratch_decay` / `KURTAIL_SCRATCH_DECAY`), so a
+//! one-off long prompt no longer pins peak scratch forever.
+//!
+//! **Fused GEMM epilogues.** The packed GEMMs compute column-major
+//! `(n × m)` natively; PR-4 flipped every output into row-major with a
+//! single-threaded scalar loop — at 16 lanes × d_ff the longest serial
+//! stretch of the decode iteration. The arena path now routes each GEMM
+//! by what consumes it: wo/wd feed the **fused column-major residual
+//! add**, wg/wu stay column-major through the (elementwise, hence
+//! layout-agnostic) silu-gate and cross to row-major with one
+//! **parallel blocked transpose** right where the R5 rotation (or wd's
+//! lhs) genuinely needs rows, the logits head emits column-major and is
+//! consumed by **column-aware argmax/sampling**, and only wq/wk/wv —
+//! whose consumers (RoPE, KV append, attention) are inherently
+//! row-major — pay a transpose at all, now the parallel blocked one.
+//! Every epilogue writes bitwise-identical values per element, so
+//! `ServeConfig::fused_epilogue = Some(false)` (or
+//! `KURTAIL_FUSED_EPILOGUE=0`), which restores the PR-4 serial-flip
+//! path for A/B (`epilogue_fused_speedup` in `BENCH_serve.json`),
+//! produces identical token streams.
+//!
+//! **Parallel runtime.** Every kernel call below pins the
+//! `util::par` backend from `ServeConfig::par_backend` (falling back to
+//! `KURTAIL_PAR`): the work-stealing default rebalances skewed batches
+//! (mixed prefill/decode rows, panel-cached vs uncached layers), the
+//! static scoped-thread chunker stays available for A/B. Chunk grids
+//! are fixed per backend and kernels are row-independent, so token
+//! streams are bitwise identical across backends too.
 
 use anyhow::Result;
 
@@ -52,16 +81,31 @@ use crate::config::{KvQuant, QuantScheme};
 use crate::model::Params;
 use crate::quant::fakequant::{fq_row_sym, row_scale_buf};
 use crate::runtime::ConfigMeta;
-use crate::tensor::matmul::{matmul_into_threads, PackedB};
+use crate::tensor::matmul::{matmul_into_threads, transpose_into_on, PackedB};
 use crate::tensor::Tensor;
-use crate::util::par::{self, num_threads};
+use crate::util::par::{self, num_threads, ParBackend};
 use crate::util::Rng;
 
 use super::int4::{panel_cache_budget, GemmScratch, Int4Weight};
 use super::kvcache::{KvPool, SeqKv};
-use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch, scheme_fits_i8};
+use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch_on, scheme_fits_i8};
 use super::scheduler::{QueuedRequest, Scheduler};
-use super::scratch::{arena_enabled, DecodeScratch};
+use super::scratch::{arena_enabled, scratch_decay_default, DecodeScratch};
+
+/// `KURTAIL_FUSED_EPILOGUE` escape hatch: the fused column-major /
+/// parallel-transpose GEMM epilogues are on by default (arena mode);
+/// set `KURTAIL_FUSED_EPILOGUE=0` to restore the PR-4 serial-flip
+/// epilogue (A/B debugging, the `epilogue_fused_speedup` bench
+/// baseline). Read per engine build, like `KURTAIL_ARENA`.
+pub fn fused_epilogue_enabled() -> bool {
+    fused_flag(std::env::var("KURTAIL_FUSED_EPILOGUE").ok().as_deref())
+}
+
+/// Parse rule behind [`fused_epilogue_enabled`]: unset → on, `0` → off,
+/// anything else → on. Split out so the rule itself is testable.
+fn fused_flag(var: Option<&str>) -> bool {
+    var.map(|v| v.trim() != "0").unwrap_or(true)
+}
 
 /// RoPE base shared by every preset (`ModelConfig.rope_base`); the
 /// manifest does not carry it because no config overrides it.
@@ -116,37 +160,62 @@ impl LinW {
     }
 }
 
+/// How one projection's output leaves the GEMM (see the module docs and
+/// `rust/README.md` §Output layouts).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Epilogue {
+    /// `(n × m)` column-major, no flip — the next op is column-aware.
+    ColMajor,
+    /// Row-major via the parallel blocked transpose — the next op
+    /// (RoPE, KV append) genuinely needs rows.
+    RowMajor,
+    /// Row-major via the PR-4 single-threaded scalar flip — the
+    /// `fused_epilogue = false` A/B baseline.
+    SerialFlip,
+}
+
 /// One serving projection: the integer path consumes the block's shared
 /// int8 codes + per-row scales; the f32 path the (already fake-quantized)
 /// dense activations. Split out so every GEMM site in `forward` stays a
-/// one-liner per weight. Overwrites `out`. `arena = false` reproduces
-/// the PR-3 per-call allocation profile (bench A/B + equality tests);
-/// results are bitwise identical either way.
+/// one-liner per weight. Overwrites `out` in the layout `epi` names.
+/// `arena = false` reproduces the PR-3 per-call allocation profile
+/// (bench A/B + equality tests; always the serial flip, like PR-3/PR-4);
+/// results are bitwise identical for every combination.
 #[allow(clippy::too_many_arguments)]
 fn project(
     w: &LinW,
     use_int: bool,
     arena: bool,
+    epi: Epilogue,
     z: &[f32],
     codes: &[i8],
     scales: &[f32],
     m: usize,
     out: &mut [f32],
     threads: usize,
+    backend: ParBackend,
     gemm: &mut GemmScratch,
 ) {
     match w {
         LinW::Int4(w) => {
             if use_int {
-                if arena {
-                    w.matmul_i8_scratch(codes, scales, m, out, threads, gemm);
-                } else {
-                    w.matmul_i8_into(codes, scales, m, out, threads);
+                match (arena, epi) {
+                    (true, Epilogue::ColMajor) => {
+                        w.matmul_i8_colmajor_scratch(codes, scales, m, out, threads, backend, gemm)
+                    }
+                    (true, Epilogue::RowMajor) => w.matmul_i8_scratch_on(codes, scales, m, out, threads, backend, gemm),
+                    (true, Epilogue::SerialFlip) => {
+                        w.matmul_i8_scratch_serial(codes, scales, m, out, threads, backend, gemm)
+                    }
+                    (false, _) => w.matmul_i8_into(codes, scales, m, out, threads),
                 }
-            } else if arena {
-                w.matmul_into_scratch(z, m, out, threads, gemm);
             } else {
-                w.matmul_into(z, m, out, threads);
+                match (arena, epi) {
+                    (true, Epilogue::ColMajor) => w.matmul_colmajor_scratch(z, m, out, threads, backend, gemm),
+                    (true, Epilogue::RowMajor) => w.matmul_into_scratch_on(z, m, out, threads, backend, gemm),
+                    (true, Epilogue::SerialFlip) => w.matmul_into_scratch_serial(z, m, out, threads, backend, gemm),
+                    (false, _) => w.matmul_into(z, m, out, threads),
+                }
             }
         }
         LinW::F32 { t, packed } => {
@@ -158,8 +227,14 @@ fn project(
             match packed {
                 // arena engines pre-pack at construction; the fallback
                 // (pack per call) is bitwise identical either way
-                Some(p) if arena => p.matmul_overwrite(z, &t.data, out, m, threads),
+                Some(p) if arena => match epi {
+                    Epilogue::ColMajor => p.matmul_colmajor_on(backend, z, &t.data, out, m, threads),
+                    _ => p.matmul_overwrite_on(backend, z, &t.data, out, m, threads),
+                },
                 _ => {
+                    // legacy (non-arena) engines never request a
+                    // column-major output; the consumer would misread it
+                    assert!(epi != Epilogue::ColMajor, "column-major output needs a pre-packed weight");
                     out.fill(0.0);
                     matmul_into_threads(z, &t.data, out, m, t.shape[0], t.shape[1], threads);
                 }
@@ -184,16 +259,17 @@ fn quantize_site(
     codes: &mut [i8],
     scales: &mut [f32],
     threads: usize,
+    backend: ParBackend,
     bufs: &mut [Vec<f32>],
 ) {
     if use_int {
         if arena {
-            quantize_rows_scratch(data, width, act, codes, scales, threads, bufs);
+            quantize_rows_scratch_on(backend, data, width, act, codes, scales, threads, bufs);
         } else {
             quantize_rows_into(data, width, act, codes, scales, threads);
         }
     } else if arena {
-        fq_rows_scratch(data, width, act, threads, bufs);
+        fq_rows_scratch(data, width, act, threads, backend, bufs);
     } else {
         fq_rows(data, width, act, threads);
     }
@@ -462,6 +538,20 @@ pub struct ServeConfig {
     /// fresh-alloc-vs-arena equality tests. Token streams are bitwise
     /// identical either way.
     pub arena: Option<bool>,
+    /// Parallel-runtime backend for every kernel the engine invokes:
+    /// `None` follows `KURTAIL_PAR` (work-stealing unless `static`).
+    /// Token streams are bitwise identical across backends.
+    pub par_backend: Option<ParBackend>,
+    /// Fused column-major / parallel-transpose GEMM epilogues (arena
+    /// mode only): `None` follows `KURTAIL_FUSED_EPILOGUE` (unset → on),
+    /// `Some(false)` restores the PR-4 serial-flip epilogue — the
+    /// `epilogue_fused_speedup` bench baseline. Bitwise identical
+    /// streams either way.
+    pub fused_epilogue: Option<bool>,
+    /// Scratch-arena high-water decay: idle forwards before the arena
+    /// shrinks to the live-lane peak. `None` follows
+    /// `KURTAIL_SCRATCH_DECAY` (unset → 64), `Some(0)` disables decay.
+    pub scratch_decay: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -475,6 +565,9 @@ impl Default for ServeConfig {
             int_gemm: None,
             panel_cache: None,
             arena: None,
+            par_backend: None,
+            fused_epilogue: None,
+            scratch_decay: None,
         }
     }
 }
@@ -532,6 +625,11 @@ pub struct Engine {
     int_gemm: bool,
     /// Persistent-arena mode (`ServeConfig::arena` / `KURTAIL_ARENA`).
     arena: bool,
+    /// Parallel backend every engine kernel call pins.
+    backend: ParBackend,
+    /// Fused GEMM epilogues (`ServeConfig::fused_epilogue`); implies
+    /// `arena` — the legacy profile keeps its PR-4 shape.
+    fused: bool,
     scratch: DecodeScratch,
     pub stats: EngineStats,
 }
@@ -553,6 +651,10 @@ impl Engine {
         let int_gemm = cfg.int_gemm.unwrap_or_else(int_gemm_enabled)
             && model.quant.as_ref().is_none_or(|q| scheme_fits_i8(&q.act));
         let arena = cfg.arena.unwrap_or_else(arena_enabled);
+        let backend = cfg.par_backend.unwrap_or_else(par::backend);
+        // fused epilogues ride on the arena's colmajor staging and
+        // pre-packed weights; the legacy profile keeps its PR-4 shape
+        let fused = arena && cfg.fused_epilogue.unwrap_or_else(fused_epilogue_enabled);
         // i8 panel cache, budgeted; bitwise transparent to the GEMMs.
         // The budget is enforced as a hard cap even on a model warmed by
         // an earlier (larger-budget) engine build — excess panels drop.
@@ -565,12 +667,16 @@ impl Engine {
             model.prepack();
         }
         // size the arena once for the admission-time peak (max_lanes
-        // decode rows); a longer prompt prefill grows it once and the
-        // grown buffers stay for the rest of the engine's life
+        // decode rows); a longer prompt prefill grows it once, and the
+        // high-water decay (arena mode) hands the excess back after an
+        // idle window
         let mut scratch = DecodeScratch::new(threads);
         {
             let m = &model.meta;
             scratch.ensure(cfg.max_lanes, m.d_model, m.d_ff, m.vocab, model.max_pos);
+        }
+        if arena {
+            scratch.set_decay(cfg.scratch_decay.unwrap_or_else(scratch_decay_default));
         }
         // the decode slot list is mem::taken around each decode batch,
         // so it must carry its full capacity itself (ensure() skips it)
@@ -586,6 +692,8 @@ impl Engine {
             threads,
             int_gemm,
             arena,
+            backend,
+            fused,
             scratch,
             stats: EngineStats::default(),
         })
@@ -601,6 +709,25 @@ impl Engine {
     /// (`ServeConfig::arena`, falling back to `KURTAIL_ARENA`).
     pub fn arena(&self) -> bool {
         self.arena
+    }
+
+    /// The parallel backend every engine kernel call pins
+    /// (`ServeConfig::par_backend`, falling back to `KURTAIL_PAR`).
+    pub fn par_backend(&self) -> ParBackend {
+        self.backend
+    }
+
+    /// Whether the fused column-major / parallel-transpose GEMM
+    /// epilogues are active (`ServeConfig::fused_epilogue`, falling
+    /// back to `KURTAIL_FUSED_EPILOGUE`; requires the arena).
+    pub fn fused_epilogue(&self) -> bool {
+        self.fused
+    }
+
+    /// Rows the decode scratch arena currently holds capacity for — the
+    /// observable of the high-water decay (tests, ops dashboards).
+    pub fn scratch_rows(&self) -> usize {
+        self.scratch.sized_rows()
     }
 
     /// Bytes held by the i8 weight panel cache (0 = cache off).
@@ -788,12 +915,15 @@ impl Engine {
     }
 
     /// Grow (or, with the arena disabled, freshly re-allocate) the
-    /// scratch to cover an `n`-row forward.
+    /// scratch to cover an `n`-row forward, running the high-water
+    /// decay bookkeeping first (arena mode).
     fn prep_scratch(&mut self, n: usize) {
-        if !self.arena {
+        let m = &self.model.meta;
+        if self.arena {
+            self.scratch.maybe_decay(n, m.d_model, m.d_ff, m.vocab);
+        } else {
             self.scratch.reset_buffers();
         }
-        let m = &self.model.meta;
         self.scratch.ensure(n, m.d_model, m.d_ff, m.vocab, self.model.max_pos);
     }
 
@@ -812,12 +942,21 @@ impl Engine {
         }
         self.forward(p)?;
         let vocab = self.model.meta.vocab;
+        let fused = self.fused;
         let Self { lanes, scratch, stats, .. } = self;
-        let DecodeScratch { logits, exps, .. } = scratch;
+        let DecodeScratch { logits, exps, lrow, .. } = scratch;
         let lane = lanes[slot].as_mut().unwrap();
         lane.pos = lane.prompt_len;
-        let next =
-            sample_token_buf(&logits[(p - 1) * vocab..p * vocab], lane.temp, &mut lane.rng, exps);
+        // fused epilogue: logits are (vocab × p) column-major — gather
+        // the last position's column (same values, same order, so the
+        // sample is bitwise the row-major one)
+        let row: &[f32] = if fused && p > 1 {
+            gather_col(logits, p, vocab, p - 1, lrow);
+            &lrow[..vocab]
+        } else {
+            &logits[(p - 1) * vocab..p * vocab]
+        };
+        let next = sample_token_buf(row, lane.temp, &mut lane.rng, exps);
         lane.tokens.push(next);
         lane.produced = 1;
         if lane.stop == Some(next) {
@@ -847,16 +986,28 @@ impl Engine {
         }
         self.forward(n)?;
         let vocab = self.model.meta.vocab;
+        let fused = self.fused;
         let Self { lanes, scratch, stats, .. } = self;
-        let DecodeScratch { logits, exps, .. } = scratch;
+        let DecodeScratch { logits, exps, lrow, arg_best, arg_idx, .. } = scratch;
+        let any_greedy = slots.iter().any(|&s| lanes[s].as_ref().unwrap().temp <= 0.0);
+        if fused && n > 1 && any_greedy {
+            // one sequential pass over the column-major logits computes
+            // every greedy lane's argmax (the common serving case);
+            // temperature lanes gather their column below
+            argmax_cols(logits, n, vocab, arg_best, arg_idx);
+        }
         for (i, &s) in slots.iter().enumerate() {
             let lane = lanes[s].as_mut().unwrap();
-            let next = sample_token_buf(
-                &logits[i * vocab..(i + 1) * vocab],
-                lane.temp,
-                &mut lane.rng,
-                exps,
-            );
+            let next = if fused && n > 1 {
+                if lane.temp <= 0.0 {
+                    arg_idx[i]
+                } else {
+                    gather_col(logits, n, vocab, i, lrow);
+                    sample_token_buf(&lrow[..vocab], lane.temp, &mut lane.rng, exps)
+                }
+            } else {
+                sample_token_buf(&logits[i * vocab..(i + 1) * vocab], lane.temp, &mut lane.rng, exps)
+            };
             lane.pos += 1;
             lane.tokens.push(next);
             lane.produced += 1;
@@ -880,6 +1031,14 @@ impl Engine {
     fn forward(&mut self, n: usize) -> Result<()> {
         let threads = self.threads;
         let arena = self.arena;
+        let backend = self.backend;
+        let fused = self.fused;
+        // per-site epilogues (see the module docs): QKV genuinely needs
+        // row-major (RoPE/KV-append) so it pays the parallel blocked
+        // transpose; wo/wg/wu/wd and the head go column-major into
+        // fused consumers; the non-fused path keeps the PR-4 serial flip
+        let row_epi = if fused { Epilogue::RowMajor } else { Epilogue::SerialFlip };
+        let col_epi = if fused { Epilogue::ColMajor } else { Epilogue::SerialFlip };
         // integer GEMM path: quantize each activation block to int8
         // codes once and feed every consuming linear; the f32 path
         // fake-quantizes in place instead. Both sit on the same grid
@@ -933,13 +1092,13 @@ impl Engine {
 
         for (l, lw) in model.layers.iter().enumerate() {
             // z = act_fq(rmsnorm(x, ln1)) — shared by wq/wk/wv
-            rmsnorm_gamma_rows(x, &lw.ln1, z, d, threads);
+            rmsnorm_gamma_rows(x, &lw.ln1, z, d, threads, backend);
             if let Some(q) = quant {
-                quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
+                quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
-            project(&lw.wq, use_int, arena, z, qcodes, qscales, n, qx, threads, gemm);
-            project(&lw.wk, use_int, arena, z, qcodes, qscales, n, kx, threads, gemm);
-            project(&lw.wv, use_int, arena, z, qcodes, qscales, n, vx, threads, gemm);
+            project(&lw.wq, use_int, arena, row_epi, z, qcodes, qscales, n, qx, threads, backend, gemm);
+            project(&lw.wk, use_int, arena, row_epi, z, qcodes, qscales, n, kx, threads, backend, gemm);
+            project(&lw.wv, use_int, arena, row_epi, z, qcodes, qscales, n, vx, threads, backend, gemm);
 
             // RoPE at each row's position, per head
             for (i, &(_, pos)) in rows.iter().enumerate() {
@@ -953,8 +1112,8 @@ impl Engine {
             }
             // online R3 (cancels in QᵀK, shapes the K cache distribution)
             if let Some(q) = quant {
-                rotate_rows(qx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, arena);
-                rotate_rows(kx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, arena);
+                rotate_rows(qx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, backend, arena);
+                rotate_rows(kx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, backend, arena);
             }
             // append-quantize this token's K/V into the paged pool
             for (i, &(slot, pos)) in rows.iter().enumerate() {
@@ -964,19 +1123,19 @@ impl Engine {
             // Q activation quant happens after R3 (decode_step order)
             if let Some(q) = quant {
                 if arena {
-                    fq_rows_scratch(qx, dh, &q.act, threads, fq_bufs);
+                    fq_rows_scratch(qx, dh, &q.act, threads, backend, fq_bufs);
                 } else {
                     fq_rows(qx, dh, &q.act, threads);
                 }
             }
             // fused dequant-attention per row (rows own disjoint caches
             // or, within a prefill, disjoint causal prefixes); score
-            // rows come from the arena, one per chunk
+            // rows come from the arena, one per worker
             {
                 let pool_ref: &KvPool = pool;
                 let lanes_ref: &Vec<Option<Lane>> = lanes;
                 let qx_ref: &[f32] = qx;
-                par::par_row_chunks_scratch_mut(attn, d, 1, threads, scores, |r0, chunk, sc| {
+                par::par_row_chunks_scratch_mut_on(backend, attn, d, 1, threads, scores, |r0, chunk, sc| {
                     for (i, orow) in chunk.chunks_exact_mut(d).enumerate() {
                         let (slot, pos) = rows[r0 + i];
                         let seq = &lanes_ref[slot].as_ref().unwrap().seq;
@@ -985,47 +1144,78 @@ impl Engine {
                 });
             }
             if let Some(q) = quant {
-                rotate_rows(attn, rot, rp.map(|r| &r.r4), &q.r4, n * h, dh, threads, arena);
-                quantize_site(attn, d, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
+                rotate_rows(attn, rot, rp.map(|r| &r.r4), &q.r4, n * h, dh, threads, backend, arena);
+                quantize_site(attn, d, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
-            project(&lw.wo, use_int, arena, attn, qcodes, qscales, n, z, threads, gemm);
-            add_assign(x, z);
+            // wo: column-major straight into the fused residual add —
+            // the transpose disappears into x's row-major traversal
+            project(&lw.wo, use_int, arena, col_epi, attn, qcodes, qscales, n, z, threads, backend, gemm);
+            if fused {
+                add_assign_colmajor(x, z, n, d);
+            } else {
+                add_assign(x, z);
+            }
 
             // FFN
-            rmsnorm_gamma_rows(x, &lw.ln2, z, d, threads);
+            rmsnorm_gamma_rows(x, &lw.ln2, z, d, threads, backend);
             if let Some(q) = quant {
-                quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
+                quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
             match &lw.wg {
                 Some(wg) => {
-                    // llama: silu(z·Wg) ⊙ (z·Wu)
-                    project(wg, use_int, arena, z, qcodes, qscales, n, gate, threads, gemm);
-                    project(&lw.wu, use_int, arena, z, qcodes, qscales, n, mid, threads, gemm);
+                    // llama: silu(z·Wg) ⊙ (z·Wu) — elementwise, so the
+                    // fused path runs it directly on the column-major
+                    // blocks (same (lane, channel) pairs either way)
+                    project(wg, use_int, arena, col_epi, z, qcodes, qscales, n, gate, threads, backend, gemm);
+                    project(&lw.wu, use_int, arena, col_epi, z, qcodes, qscales, n, mid, threads, backend, gemm);
                     for (mv, &gv) in mid.iter_mut().zip(gate.iter()) {
                         *mv = silu(gv) * *mv;
                     }
                 }
                 None => {
                     // phi: gelu(z·Wu)
-                    project(&lw.wu, use_int, arena, z, qcodes, qscales, n, mid, threads, gemm);
+                    project(&lw.wu, use_int, arena, col_epi, z, qcodes, qscales, n, mid, threads, backend, gemm);
                     for mv in mid.iter_mut() {
                         *mv = gelu(*mv);
                     }
                 }
             }
-            if let Some(q) = quant {
-                rotate_rows(mid, rot, rp.map(|r| &r.r5), &q.r5, n, ff, threads, arena);
-                quantize_site(mid, ff, &q.act, use_int, arena, qcodes, qscales, threads, fq_bufs);
+            if fused && n > 1 {
+                // the R5 rotation (and wd's lhs) needs row-major rows:
+                // one parallel blocked transpose crosses layouts, and
+                // the rotation then writes `mid` directly (the legacy
+                // path's extra copy-back folds away)
+                transpose_into_on(backend, &mid[..n * ff], ff, n, &mut rot[..n * ff], threads);
+                if let Some(q) = quant {
+                    let r = rp.expect("fused epilogue implies prepacked rotations");
+                    r.r5.matmul_overwrite_on(backend, &rot[..n * ff], &q.r5.data, &mut mid[..n * ff], n, threads);
+                } else {
+                    mid[..n * ff].copy_from_slice(&rot[..n * ff]);
+                }
+            } else if let Some(q) = quant {
+                rotate_rows(mid, rot, rp.map(|r| &r.r5), &q.r5, n, ff, threads, backend, arena);
             }
-            project(&lw.wd, use_int, arena, mid, qcodes, qscales, n, z, threads, gemm);
-            add_assign(x, z);
+            if let Some(q) = quant {
+                quantize_site(mid, ff, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
+            }
+            // wd: column-major into the second fused residual add
+            project(&lw.wd, use_int, arena, col_epi, mid, qcodes, qscales, n, z, threads, backend, gemm);
+            if fused {
+                add_assign_colmajor(x, z, n, d);
+            } else {
+                add_assign(x, z);
+            }
         }
 
         // final norm + fp head (pre-packed on arena engines; overwrite
-        // store — see PackedB::matmul_overwrite for bitwise equality)
-        rmsnorm_gamma_rows(x, &model.lnf, z, d, threads);
+        // store — see PackedB::matmul_overwrite for bitwise equality).
+        // The fused path emits the logits column-major — at decode batch
+        // sizes the head's n (vocab) side is the only one wide enough to
+        // parallelize over, and argmax/sampling are column-aware.
+        rmsnorm_gamma_rows(x, &model.lnf, z, d, threads, backend);
         match (&model.head_packed, arena) {
-            (Some(p), true) => p.matmul_overwrite(z, &model.head_t.data, logits, n, threads),
+            (Some(p), true) if fused && n > 1 => p.matmul_colmajor_on(backend, z, &model.head_t.data, logits, n, threads),
+            (Some(p), true) => p.matmul_overwrite_on(backend, z, &model.head_t.data, logits, n, threads),
             _ => {
                 logits.fill(0.0);
                 matmul_into_threads(z, &model.head_t.data, logits, n, d, meta.vocab, threads);
@@ -1102,10 +1292,10 @@ pub fn argmax(xs: &[f32]) -> usize {
 
 /// `out = rmsnorm(x) · γ` per `width`-row (eps 1e-5, matching both
 /// `model.py::rmsnorm` and the host `rmsnorm_rows`).
-fn rmsnorm_gamma_rows(x: &[f32], gamma: &[f32], out: &mut [f32], width: usize, threads: usize) {
+fn rmsnorm_gamma_rows(x: &[f32], gamma: &[f32], out: &mut [f32], width: usize, threads: usize, backend: ParBackend) {
     assert_eq!(gamma.len(), width);
     assert_eq!(x.len(), out.len());
-    par::par_row_chunks_mut(out, width, 16, threads, |r0, chunk| {
+    par::par_row_chunks_mut_on(backend, out, width, 16, threads, |r0, chunk| {
         for (i, orow) in chunk.chunks_exact_mut(width).enumerate() {
             let row = &x[(r0 + i) * width..(r0 + i + 1) * width];
             let ms = row.iter().map(|v| v * v).sum::<f32>() / width as f32;
@@ -1145,16 +1335,17 @@ fn fq_rows(data: &mut [f32], width: usize, s: &QuantScheme, threads: usize) {
     });
 }
 
-/// [`fq_rows`] with caller-owned per-chunk selection scratch (the arena
-/// path: zero allocations; identical math, so identical bits).
+/// [`fq_rows`] with caller-owned per-worker selection scratch (the
+/// arena path: zero allocations; identical math, so identical bits).
 fn fq_rows_scratch(
     data: &mut [f32],
     width: usize,
     s: &QuantScheme,
     threads: usize,
+    backend: ParBackend,
     bufs: &mut [Vec<f32>],
 ) {
-    par::par_row_chunks_scratch_mut(data, width, 16, threads, bufs, |_r0, chunk, buf| {
+    par::par_row_chunks_scratch_mut_on(backend, data, width, 16, threads, bufs, |_r0, chunk, buf| {
         for row in chunk.chunks_exact_mut(width) {
             let scale = row_scale_buf(row, s, buf);
             fq_row_sym(row, scale, s);
@@ -1181,6 +1372,7 @@ fn rotate_rows(
     rows: usize,
     width: usize,
     threads: usize,
+    backend: ParBackend,
     arena: bool,
 ) {
     let len = rows * width;
@@ -1189,7 +1381,7 @@ fn rotate_rows(
         Some(p) if arena => {
             // scratch was pre-sized by DecodeScratch::ensure
             let buf = &mut scratch[..len];
-            p.matmul_overwrite(&x[..len], &dense.data, buf, rows, threads);
+            p.matmul_overwrite_on(backend, &x[..len], &dense.data, buf, rows, threads);
             x[..len].copy_from_slice(buf);
         }
         _ => {
@@ -1207,6 +1399,58 @@ fn add_assign(x: &mut [f32], y: &[f32]) {
     for (a, b) in x.iter_mut().zip(y) {
         *a += b;
     }
+}
+
+/// Fused residual add over a column-major addend: `x` (`m × n`
+/// row-major) `+=` `zt` (`n × m` column-major, a `*_colmajor` GEMM
+/// output). The transpose disappears into the add's own traversal —
+/// per element one `+=` of the exact value the row-major path adds, so
+/// bitwise identical to `add_assign(x, flip(zt))` with no flip run.
+/// Column-blocked so the strided `zt` tile stays cache-resident
+/// (`m ≤` lanes, so a 64-column block is ≤ 4 KiB at 16 lanes).
+fn add_assign_colmajor(x: &mut [f32], zt: &[f32], m: usize, n: usize) {
+    debug_assert!(x.len() >= m * n && zt.len() >= m * n);
+    const JB: usize = 64;
+    for jb in (0..n).step_by(JB) {
+        let je = (jb + JB).min(n);
+        for i in 0..m {
+            let xrow = &mut x[i * n..(i + 1) * n];
+            for j in jb..je {
+                xrow[j] += zt[j * m + i];
+            }
+        }
+    }
+}
+
+/// Column-aware greedy argmax over a column-major logits block
+/// (`vocab × n`): one sequential pass computes every lane's argmax —
+/// `idx[i]` / `best[i]` for lane `i` — reading each cache line once
+/// instead of striding per lane. Tie-breaking keeps [`argmax`]'s
+/// last-max semantics (`>=`), so results match the row-major path
+/// exactly.
+fn argmax_cols(logits_t: &[f32], n: usize, vocab: usize, best: &mut [f32], idx: &mut [i32]) {
+    debug_assert!(logits_t.len() >= n * vocab && best.len() >= n && idx.len() >= n);
+    best[..n].copy_from_slice(&logits_t[..n]);
+    idx[..n].fill(0);
+    for j in 1..vocab {
+        let row = &logits_t[j * n..(j + 1) * n];
+        for i in 0..n {
+            if row[i] >= best[i] {
+                best[i] = row[i];
+                idx[i] = j as i32;
+            }
+        }
+    }
+}
+
+/// Gather lane `i`'s logits column from a column-major block into a
+/// contiguous scratch row (temperature sampling on the fused path: the
+/// gathered values and their order equal the row-major row, so the
+/// sample is bitwise unchanged).
+fn gather_col(logits_t: &[f32], n: usize, vocab: usize, lane: usize, out: &mut Vec<f32>) {
+    debug_assert!(logits_t.len() >= n * vocab && lane < n);
+    out.clear();
+    out.extend((0..vocab).map(|j| logits_t[j * n + lane]));
 }
 
 #[inline]
@@ -1292,6 +1536,143 @@ mod tests {
             eng.submit_tokens(toks, n, 0.0, 7).unwrap();
         }
         eng.run().unwrap()
+    }
+
+    fn run_cfg(model: &ServeModel, cfg: &ServeConfig) -> Vec<Completion> {
+        let mut eng = Engine::new(model.clone(), cfg).unwrap();
+        for (toks, n) in requests() {
+            eng.submit_tokens(toks, n, 0.0, 7).unwrap();
+        }
+        eng.run().unwrap()
+    }
+
+    #[test]
+    fn fused_flag_parse_rule() {
+        assert!(fused_flag(None), "unset must default to the fused epilogues");
+        assert!(!fused_flag(Some("0")));
+        assert!(!fused_flag(Some(" 0 ")));
+        assert!(fused_flag(Some("1")));
+        assert!(fused_flag(Some("")));
+        assert!(fused_flag(Some("off")), "only literal 0 disables");
+    }
+
+    #[test]
+    fn fused_epilogue_and_par_backend_are_bitwise_transparent() {
+        // the PR-4 serial-flip path on the static backend is the
+        // reference; every (fused, backend) combination — and the
+        // fp/quant models, both GEMM paths — must reproduce its token
+        // streams bitwise at every lane/thread pairing
+        for model in [fp_model(), quant_model()] {
+            let kv = if model.is_quantized() { KvQuant::Asym4 } else { KvQuant::Fp };
+            for int_gemm in [Some(true), Some(false)] {
+                let base_cfg = ServeConfig {
+                    max_lanes: 1,
+                    block_tokens: 4,
+                    kv_quant: kv,
+                    threads: Some(1),
+                    int_gemm,
+                    fused_epilogue: Some(false),
+                    par_backend: Some(ParBackend::Static),
+                    ..ServeConfig::default()
+                };
+                let base = run_cfg(&model, &base_cfg);
+                for fused in [Some(true), Some(false)] {
+                    for backend in [ParBackend::Static, ParBackend::Steal] {
+                        for (lanes, threads) in [(1usize, 4usize), (4, 1), (4, 8)] {
+                            let cfg = ServeConfig {
+                                max_lanes: lanes,
+                                threads: Some(threads),
+                                fused_epilogue: fused,
+                                par_backend: Some(backend),
+                                ..base_cfg.clone()
+                            };
+                            let got = run_cfg(&model, &cfg);
+                            for (a, b) in base.iter().zip(&got) {
+                                assert_eq!(
+                                    a.tokens, b.tokens,
+                                    "fused={fused:?} {backend:?} lanes={lanes} t={threads} int={int_gemm:?}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_requires_arena() {
+        let model = quant_model();
+        let cfg = ServeConfig { arena: Some(false), fused_epilogue: Some(true), ..ServeConfig::default() };
+        let eng = Engine::new(model.clone(), &cfg).unwrap();
+        assert!(!eng.fused_epilogue(), "legacy profile keeps the PR-4 epilogue");
+        let on_cfg = ServeConfig { arena: Some(true), fused_epilogue: Some(true), ..ServeConfig::default() };
+        let on = Engine::new(model, &on_cfg).unwrap();
+        assert!(on.arena() && on.fused_epilogue());
+    }
+
+    #[test]
+    fn temperature_sampling_matches_across_epilogues() {
+        // the fused path samples from a gathered logits column — the
+        // stream must equal the row-major path's bitwise, rng included
+        let model = quant_model();
+        let mk = |fused: bool| {
+            let cfg = ServeConfig {
+                max_lanes: 3,
+                block_tokens: 4,
+                threads: Some(2),
+                fused_epilogue: Some(fused),
+                ..ServeConfig::default()
+            };
+            let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+            for (i, (toks, n)) in requests().into_iter().enumerate() {
+                eng.submit_tokens(toks, n, 0.8, 11 + i as u64).unwrap();
+            }
+            eng.run().unwrap()
+        };
+        let (a, b) = (mk(true), mk(false));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "temperature stream differs across epilogues");
+        }
+    }
+
+    #[test]
+    fn scratch_decays_to_live_lane_peak() {
+        // fake_llama_meta caps prompt+generation at seq_len = 8, so the
+        // "long prompt" is 5 tokens against a 2-row steady decode batch
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            threads: Some(1),
+            scratch_decay: Some(2),
+            ..ServeConfig::default()
+        };
+        let submit = |eng: &mut Engine| {
+            eng.submit_tokens(vec![1; 5], 3, 0.0, 7).unwrap();
+            eng.submit_tokens(vec![2], 3, 0.0, 7).unwrap();
+        };
+        let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+        assert_eq!(eng.scratch_rows(), 2, "built at the admission-time peak (max_lanes)");
+        submit(&mut eng);
+        // step 1 prefills both lanes: the 5-token prompt pins the mark…
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.scratch_rows(), 5, "prefill grew the arena to the prompt length");
+        // …and the second below-peak forward (decode at 2 live lanes,
+        // after the 1-token prefill) trips the 2-step decay window
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.scratch_rows(), 2, "arena decayed to the live-lane peak");
+        // streams are unaffected: the decayed engine finishes and matches
+        // a no-decay run bitwise
+        let done = eng.run().unwrap();
+        let mut plain =
+            Engine::new(model, &ServeConfig { scratch_decay: Some(0), ..cfg.clone() }).unwrap();
+        submit(&mut plain);
+        let want = plain.run().unwrap();
+        assert_eq!(plain.scratch_rows(), 5, "decay off keeps the peak");
+        for (a, b) in done.iter().zip(&want) {
+            assert_eq!(a.tokens, b.tokens, "decay must be bitwise invisible");
+        }
     }
 
     #[test]

@@ -32,14 +32,34 @@
 //!
 //! **Scratch-fed GEMMs.** The `*_scratch` entry points take a
 //! caller-owned [`GemmScratch`] (transposed-output buffer + one
-//! nibble-unpack tile per thread chunk) so the decode hot loop performs
-//! zero heap allocations; the original entry points remain as
+//! nibble-unpack tile per parallel worker) so the decode hot loop
+//! performs zero heap allocations; the original entry points remain as
 //! convenience wrappers that allocate a fresh scratch per call.
+//!
+//! **Output layouts & epilogues.** Both GEMMs compute natively
+//! **column-major** — threads own output columns, so the staging buffer
+//! is the `(n × m)` transpose of the row-major result. Three epilogues
+//! expose it (see `rust/README.md` §Output layouts):
+//!
+//! * `*_colmajor_scratch` — hand the `(n × m)` block to the caller
+//!   as-is; the serve engine's fused consumers (residual add, silu-mul,
+//!   logits argmax/sampling) traverse it without any transpose.
+//! * `*_scratch` / `*_scratch_on` — flip into row-major with the
+//!   **parallel blocked transpose** ([`transpose_into_on`]) for
+//!   consumers that need row layout (RoPE, KV append, rotation lhs).
+//! * `*_scratch_serial` / the allocating wrappers — the PR-4
+//!   single-threaded scalar flip, kept verbatim as the bench A/B
+//!   baseline (`epilogue_fused_speedup`) and the legacy
+//!   (`KURTAIL_ARENA=0`) profile.
+//!
+//! All three write bitwise-identical values per element (the core is
+//! shared; epilogues only move bytes), pinned by unit tests here and
+//! the engine-level layout-invariance tests.
 
 use crate::config::QuantScheme;
-use crate::tensor::matmul::dot_i8_grouped;
+use crate::tensor::matmul::{dot_i8_grouped, transpose_into_on};
 use crate::tensor::Tensor;
-use crate::util::par::{self, num_threads};
+use crate::util::par::{self, num_threads, ParBackend};
 
 use super::qact::{quantize_rows_into, QuantActs};
 
@@ -69,30 +89,64 @@ fn panel_budget_flag(var: Option<&str>) -> usize {
 }
 
 /// Caller-owned scratch for the packed GEMMs: the transposed-output
-/// staging buffer plus one nibble-unpack tile per parallel chunk. Reused
-/// across calls (the serve arena owns one), capacities only ever grow —
-/// contents never influence results.
+/// staging buffer plus one nibble-unpack tile per parallel worker.
+/// Reused across calls (the serve arena owns one), capacities only ever
+/// grow — contents never influence results.
 #[derive(Clone, Debug, Default)]
 pub struct GemmScratch {
-    /// `(n × m)` transposed output staging (GEMM path, `m > 1`).
+    /// `(n × m)` transposed output staging (row-major epilogues, `m > 1`).
     pub out_t: Vec<f32>,
-    /// Per-chunk i8 column tiles (unused when the panel cache is built).
+    /// Per-worker i8 column tiles (unused when the panel cache is built).
     pub qbufs: Vec<Vec<i8>>,
 }
 
 impl GemmScratch {
-    /// Scratch with one unpack tile per potential thread chunk.
+    /// Scratch with one unpack tile per potential parallel worker.
     pub fn with_threads(threads: usize) -> Self {
         Self { out_t: Vec::new(), qbufs: (0..threads.max(1)).map(|_| Vec::new()).collect() }
     }
 
-    /// Pre-reserve every buffer so subsequent GEMMs up to `max_out`
-    /// staged floats and `max_k` input rows never allocate.
+    /// Pre-size every buffer so subsequent GEMMs up to `max_out` staged
+    /// floats and `max_k` input rows never allocate *and never fill*:
+    /// `out_t` is brought to its full length here, once, off the decode
+    /// loop — PR-4 instead `Vec::resize`d it inside the GEMM, zeroing
+    /// memory the epilogue was about to fully overwrite anyway. The
+    /// in-GEMM growth branch ([`grow_for_overwrite`]) survives only for
+    /// cold callers that skipped this (allocating wrappers, bare
+    /// scratch), where one fill is noise next to the fresh allocation.
     pub fn reserve(&mut self, max_out: usize, max_k: usize) {
-        self.out_t.reserve(max_out.saturating_sub(self.out_t.len()));
+        if self.out_t.len() < max_out {
+            self.out_t.resize(max_out, 0.0);
+        }
         for q in &mut self.qbufs {
             q.reserve(max_k.saturating_sub(q.len()));
         }
+    }
+
+    /// Shrink the staging buffer to `max_out` floats, releasing the
+    /// excess to the allocator (the `DecodeScratch` high-water decay).
+    pub fn shrink(&mut self, max_out: usize) {
+        if self.out_t.len() > max_out {
+            self.out_t.truncate(max_out);
+            self.out_t.shrink_to_fit();
+        }
+    }
+}
+
+/// Grow `v` to `len` elements ahead of a full overwrite.
+///
+/// Invariant this relies on: every GEMM epilogue writes each element of
+/// the slice it takes — the column loops cover `[0, n·m)` exactly once
+/// per call — before anything reads it, so the zero-fill below is pure
+/// insurance (Vec's initialization invariant must hold for the safe
+/// `len`, so an uninitialized fast path would be unsound — it was
+/// rejected in review). The serving hot loop never reaches this branch:
+/// [`GemmScratch::reserve`] (called by `DecodeScratch::ensure` at
+/// engine build / admission) pre-sizes `out_t` to the peak, which is
+/// where the PR-4 per-growth fill actually moved.
+fn grow_for_overwrite(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
     }
 }
 
@@ -263,55 +317,25 @@ impl Int4Weight {
         self.k * self.n * 4
     }
 
-    /// Fused dequant-GEMM: `out = x @ W̃` for `x` of `m` rows of `k`
-    /// f32s. **Overwrites** `out` (`m × n`) — unlike
-    /// [`crate::tensor::matmul::matmul_into`], which accumulates.
-    /// Allocates a fresh [`GemmScratch`] per call; the serve hot loop
-    /// uses [`Self::matmul_into_scratch`] instead.
-    pub fn matmul_into(&self, x: &[f32], m: usize, out: &mut [f32], threads: usize) {
-        let mut scratch = GemmScratch::with_threads(threads);
-        self.matmul_into_scratch(x, m, out, threads, &mut scratch);
-    }
-
-    /// [`Self::matmul_into`] on caller-owned scratch: zero allocations
-    /// once `scratch` has warmed to this problem size. Bitwise identical
-    /// to the allocating entry (scratch contents never affect results).
-    pub fn matmul_into_scratch(
+    /// Column-major core of the f32 dequant GEMM: output columns split
+    /// across workers, one i8 column tile (cached panel or fresh unpack)
+    /// consumed by every lane while hot. `m == 1` (GEMV) and `m > 1`
+    /// share this — a single row is the same byte sequence in either
+    /// layout.
+    fn gemm_colmajor_core(
         &self,
         x: &[f32],
         m: usize,
-        out: &mut [f32],
+        out_t: &mut [f32],
         threads: usize,
-        scratch: &mut GemmScratch,
+        backend: ParBackend,
+        qbufs: &mut [Vec<i8>],
     ) {
-        assert_eq!(x.len(), m * self.k, "int4 matmul: lhs size");
-        assert_eq!(out.len(), m * self.n, "int4 matmul: out size");
-        if m == 0 {
-            return;
-        }
-        let (k, n, group, ng) = (self.k, self.n, self.group, self.n_groups);
+        let (k, group, ng) = (self.k, self.group, self.n_groups);
         let bpc = (k + 1) / 2;
         let panels = self.panels.as_deref();
-        let GemmScratch { out_t, qbufs } = scratch;
-        if m == 1 {
-            // GEMV: the output row *is* the column axis — no transpose
-            par::par_row_chunks_scratch_mut(out, 1, 32, threads, qbufs, |j0, chunk, qbuf| {
-                for (jj, o) in chunk.iter_mut().enumerate() {
-                    let j = j0 + jj;
-                    let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
-                    *o = dot_col(x, col, &self.scales[j * ng..(j + 1) * ng], group);
-                }
-            });
-            return;
-        }
-        // GEMM: compute transposed (n × m), parallel over columns, then
-        // flip into the row-major output. Per (lane, column) the math is
-        // identical to the GEMV path above.
-        if out_t.len() < n * m {
-            out_t.resize(n * m, 0.0);
-        }
-        let out_t = &mut out_t[..n * m];
-        par::par_row_chunks_scratch_mut(out_t, m, 8, threads, qbufs, |j0, chunk, qbuf| {
+        let min_rows = if m == 1 { 32 } else { 8 };
+        par::par_row_chunks_scratch_mut_on(backend, out_t, m, min_rows, threads, qbufs, |j0, chunk, qbuf| {
             for (jj, orow) in chunk.chunks_exact_mut(m).enumerate() {
                 let j = j0 + jj;
                 let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
@@ -321,6 +345,117 @@ impl Int4Weight {
                 }
             }
         });
+    }
+
+    /// Fused dequant-GEMM: `out = x @ W̃` for `x` of `m` rows of `k`
+    /// f32s. **Overwrites** `out` (`m × n`) — unlike
+    /// [`crate::tensor::matmul::matmul_into`], which accumulates.
+    /// Allocates a fresh [`GemmScratch`] per call and keeps the PR-4
+    /// serial-flip epilogue — this is the legacy (`KURTAIL_ARENA=0`)
+    /// profile the serve bench A/Bs against; the serve hot loop uses
+    /// [`Self::matmul_into_scratch`] / [`Self::matmul_colmajor_scratch`].
+    pub fn matmul_into(&self, x: &[f32], m: usize, out: &mut [f32], threads: usize) {
+        let mut scratch = GemmScratch::with_threads(threads);
+        self.matmul_into_scratch_serial(x, m, out, threads, par::backend(), &mut scratch);
+    }
+
+    /// `out_t = (x @ W̃)ᵀ` (`n × m` column-major, **overwrites**): the
+    /// no-flip epilogue for fused consumers. Bitwise: `out_t[j·m + i]`
+    /// equals `out[i·n + j]` of [`Self::matmul_into`] — same core, no
+    /// epilogue arithmetic at all.
+    pub fn matmul_colmajor_scratch(
+        &self,
+        x: &[f32],
+        m: usize,
+        out_t: &mut [f32],
+        threads: usize,
+        backend: ParBackend,
+        scratch: &mut GemmScratch,
+    ) {
+        assert_eq!(x.len(), m * self.k, "int4 matmul: lhs size");
+        assert_eq!(out_t.len(), m * self.n, "int4 matmul: out size");
+        if m == 0 {
+            return;
+        }
+        self.gemm_colmajor_core(x, m, out_t, threads, backend, &mut scratch.qbufs);
+    }
+
+    /// Allocating wrapper over [`Self::matmul_colmajor_scratch`].
+    pub fn matmul_colmajor_into(&self, x: &[f32], m: usize, out_t: &mut [f32], threads: usize) {
+        let mut scratch = GemmScratch::with_threads(threads);
+        self.matmul_colmajor_scratch(x, m, out_t, threads, par::backend(), &mut scratch);
+    }
+
+    /// [`Self::matmul_into`] on caller-owned scratch: zero allocations
+    /// once `scratch` has warmed to this problem size, row-major output
+    /// via the **parallel blocked transpose** epilogue. Bitwise
+    /// identical to the allocating entry (scratch contents never affect
+    /// results; the flip moves the same bytes).
+    pub fn matmul_into_scratch(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
+        self.matmul_into_scratch_on(x, m, out, threads, par::backend(), scratch);
+    }
+
+    /// [`Self::matmul_into_scratch`] on an explicit parallel backend.
+    pub fn matmul_into_scratch_on(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        backend: ParBackend,
+        scratch: &mut GemmScratch,
+    ) {
+        assert_eq!(x.len(), m * self.k, "int4 matmul: lhs size");
+        assert_eq!(out.len(), m * self.n, "int4 matmul: out size");
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            // GEMV: the output row *is* the column axis — no transpose
+            return self.gemm_colmajor_core(x, 1, out, threads, backend, &mut scratch.qbufs);
+        }
+        let n = self.n;
+        let GemmScratch { out_t, qbufs } = scratch;
+        grow_for_overwrite(out_t, n * m);
+        let out_t = &mut out_t[..n * m];
+        self.gemm_colmajor_core(x, m, out_t, threads, backend, qbufs);
+        transpose_into_on(backend, out_t, n, m, out, threads);
+    }
+
+    /// [`Self::matmul_into_scratch`] with the PR-4 **serial** scalar
+    /// flip epilogue, kept verbatim so `benches/serve.rs` can isolate
+    /// the fused/parallel epilogue win (`epilogue_fused_speedup`) and so
+    /// `ServeConfig::fused_epilogue = Some(false)` reproduces the PR-4
+    /// decode profile exactly.
+    pub fn matmul_into_scratch_serial(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        backend: ParBackend,
+        scratch: &mut GemmScratch,
+    ) {
+        assert_eq!(x.len(), m * self.k, "int4 matmul: lhs size");
+        assert_eq!(out.len(), m * self.n, "int4 matmul: out size");
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            return self.gemm_colmajor_core(x, 1, out, threads, backend, &mut scratch.qbufs);
+        }
+        let n = self.n;
+        let GemmScratch { out_t, qbufs } = scratch;
+        grow_for_overwrite(out_t, n * m);
+        let out_t = &mut out_t[..n * m];
+        self.gemm_colmajor_core(x, m, out_t, threads, backend, qbufs);
         for i in 0..m {
             for j in 0..n {
                 out[i * n + j] = out_t[j * m + i];
@@ -351,50 +486,27 @@ impl Int4Weight {
         threads: usize,
     ) {
         let mut scratch = GemmScratch::with_threads(threads);
-        self.matmul_i8_scratch(codes, act_scales, m, out, threads, &mut scratch);
+        self.matmul_i8_scratch_serial(codes, act_scales, m, out, threads, par::backend(), &mut scratch);
     }
 
-    /// [`Self::matmul_i8_into`] on caller-owned scratch: zero
-    /// allocations once `scratch` has warmed to this problem size.
-    /// Bitwise identical to the allocating entry.
-    pub fn matmul_i8_scratch(
+    /// Column-major core of the integer GEMM (see
+    /// [`Self::gemm_colmajor_core`] for the parallel shape; the math is
+    /// [`dot_i8_grouped`] per (lane, column)).
+    fn gemm_i8_colmajor_core(
         &self,
         codes: &[i8],
         act_scales: &[f32],
         m: usize,
-        out: &mut [f32],
+        out_t: &mut [f32],
         threads: usize,
-        scratch: &mut GemmScratch,
+        backend: ParBackend,
+        qbufs: &mut [Vec<i8>],
     ) {
-        assert!(codes.len() >= m * self.k, "int gemm: codes size");
-        assert!(act_scales.len() >= m, "int gemm: scales size");
-        assert_eq!(out.len(), m * self.n, "int gemm: out size");
-        if m == 0 {
-            return;
-        }
-        let (k, n, group, ng) = (self.k, self.n, self.group, self.n_groups);
+        let (k, group, ng) = (self.k, self.group, self.n_groups);
         let bpc = (k + 1) / 2;
         let panels = self.panels.as_deref();
-        let GemmScratch { out_t, qbufs } = scratch;
-        if m == 1 {
-            let a_s = act_scales[0];
-            let xq = &codes[..k];
-            par::par_row_chunks_scratch_mut(out, 1, 32, threads, qbufs, |j0, chunk, qbuf| {
-                for (jj, o) in chunk.iter_mut().enumerate() {
-                    let j = j0 + jj;
-                    let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
-                    *o = dot_i8_grouped(xq, col, &self.scales[j * ng..(j + 1) * ng], group, a_s);
-                }
-            });
-            return;
-        }
-        // transposed (n × m) like the f32 GEMM: one i8 column tile
-        // (cached panel or fresh unpack), all lanes consume it while hot
-        if out_t.len() < n * m {
-            out_t.resize(n * m, 0.0);
-        }
-        let out_t = &mut out_t[..n * m];
-        par::par_row_chunks_scratch_mut(out_t, m, 8, threads, qbufs, |j0, chunk, qbuf| {
+        let min_rows = if m == 1 { 32 } else { 8 };
+        par::par_row_chunks_scratch_mut_on(backend, out_t, m, min_rows, threads, qbufs, |j0, chunk, qbuf| {
             for (jj, orow) in chunk.chunks_exact_mut(m).enumerate() {
                 let j = j0 + jj;
                 let col = col_codes(panels, &self.packed, j, k, bpc, qbuf);
@@ -405,6 +517,100 @@ impl Int4Weight {
                 }
             }
         });
+    }
+
+    /// `out_t = (deq(codes) @ W̃)ᵀ` (`n × m` column-major,
+    /// **overwrites**): the no-flip integer-GEMM epilogue for fused
+    /// consumers.
+    pub fn matmul_i8_colmajor_scratch(
+        &self,
+        codes: &[i8],
+        act_scales: &[f32],
+        m: usize,
+        out_t: &mut [f32],
+        threads: usize,
+        backend: ParBackend,
+        scratch: &mut GemmScratch,
+    ) {
+        assert!(codes.len() >= m * self.k, "int gemm: codes size");
+        assert!(act_scales.len() >= m, "int gemm: scales size");
+        assert_eq!(out_t.len(), m * self.n, "int gemm: out size");
+        if m == 0 {
+            return;
+        }
+        self.gemm_i8_colmajor_core(codes, act_scales, m, out_t, threads, backend, &mut scratch.qbufs);
+    }
+
+    /// [`Self::matmul_i8_into`] on caller-owned scratch: zero
+    /// allocations once `scratch` has warmed to this problem size,
+    /// row-major output via the parallel blocked transpose. Bitwise
+    /// identical to the allocating entry.
+    pub fn matmul_i8_scratch(
+        &self,
+        codes: &[i8],
+        act_scales: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
+        self.matmul_i8_scratch_on(codes, act_scales, m, out, threads, par::backend(), scratch);
+    }
+
+    /// [`Self::matmul_i8_scratch`] on an explicit parallel backend.
+    pub fn matmul_i8_scratch_on(
+        &self,
+        codes: &[i8],
+        act_scales: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        backend: ParBackend,
+        scratch: &mut GemmScratch,
+    ) {
+        assert!(codes.len() >= m * self.k, "int gemm: codes size");
+        assert!(act_scales.len() >= m, "int gemm: scales size");
+        assert_eq!(out.len(), m * self.n, "int gemm: out size");
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            return self.gemm_i8_colmajor_core(codes, act_scales, 1, out, threads, backend, &mut scratch.qbufs);
+        }
+        let n = self.n;
+        let GemmScratch { out_t, qbufs } = scratch;
+        grow_for_overwrite(out_t, n * m);
+        let out_t = &mut out_t[..n * m];
+        self.gemm_i8_colmajor_core(codes, act_scales, m, out_t, threads, backend, qbufs);
+        transpose_into_on(backend, out_t, n, m, out, threads);
+    }
+
+    /// [`Self::matmul_i8_scratch`] with the PR-4 serial flip epilogue
+    /// (see [`Self::matmul_into_scratch_serial`]).
+    pub fn matmul_i8_scratch_serial(
+        &self,
+        codes: &[i8],
+        act_scales: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: usize,
+        backend: ParBackend,
+        scratch: &mut GemmScratch,
+    ) {
+        assert!(codes.len() >= m * self.k, "int gemm: codes size");
+        assert!(act_scales.len() >= m, "int gemm: scales size");
+        assert_eq!(out.len(), m * self.n, "int gemm: out size");
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            return self.gemm_i8_colmajor_core(codes, act_scales, 1, out, threads, backend, &mut scratch.qbufs);
+        }
+        let n = self.n;
+        let GemmScratch { out_t, qbufs } = scratch;
+        grow_for_overwrite(out_t, n * m);
+        let out_t = &mut out_t[..n * m];
+        self.gemm_i8_colmajor_core(codes, act_scales, m, out_t, threads, backend, qbufs);
         for i in 0..m {
             for j in 0..n {
                 out[i * n + j] = out_t[j * m + i];
@@ -428,6 +634,25 @@ impl Int4Weight {
         let mut scales = vec![0.0f32; m];
         quantize_rows_into(x, self.k, act, &mut codes, &mut scales, threads);
         self.matmul_i8_into(&codes, &scales, m, out, threads);
+    }
+
+    /// Column-major twin of [`Self::quant_matmul_into`]: quantize `m`
+    /// rows of `x` to int8 codes and leave `(deq(codes) @ W̃)ᵀ` in
+    /// `out_t` (`n × m`, **overwrites**) — no flip anywhere.
+    pub fn quant_matmul_colmajor_into(
+        &self,
+        x: &[f32],
+        m: usize,
+        act: &QuantScheme,
+        out_t: &mut [f32],
+        threads: usize,
+    ) {
+        assert_eq!(x.len(), m * self.k, "quant matmul: lhs size");
+        let mut codes = vec![0i8; m * self.k];
+        let mut scales = vec![0.0f32; m];
+        quantize_rows_into(x, self.k, act, &mut codes, &mut scales, threads);
+        let mut scratch = GemmScratch::with_threads(threads);
+        self.matmul_i8_colmajor_scratch(&codes, &scales, m, out_t, threads, par::backend(), &mut scratch);
     }
 
     /// Tensor wrapper over [`Self::quant_matmul_into`] (keeps leading
@@ -667,6 +892,66 @@ mod tests {
             let mut c = vec![0.0f32; m * n];
             hot.matmul_into_scratch(&x.data, m, &mut c, 4, &mut scratch);
             assert_eq!(a, c, "dropping panels must not change results");
+        }
+    }
+
+    #[test]
+    fn epilogues_agree_bitwise() {
+        // the three epilogues (colmajor, parallel transpose, PR-4 serial
+        // flip) share one core: per element they must produce identical
+        // bits on both GEMM paths, with and without the panel cache, at
+        // every thread budget and parallel backend, m == 1 included
+        let mut rng = Rng::new(31);
+        let act = QuantScheme::act4();
+        for (m, k, n, g) in [(1usize, 33, 7, Some(8)), (6, 40, 11, Some(16)), (16, 64, 12, None)] {
+            let w = Tensor::randn(&[k, n], 0.3, &mut rng);
+            let s = QuantScheme { group: g, ..QuantScheme::weight4() };
+            let mut iw = Int4Weight::pack(&w, &s);
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let qa = super::super::qact::QuantActs::quantize_with_threads(&x, &act, 2);
+            for panels in [false, true] {
+                if panels {
+                    iw.build_panels();
+                }
+                for threads in [1usize, 4] {
+                    for backend in [ParBackend::Static, ParBackend::Steal] {
+                        let mut scratch = GemmScratch::with_threads(threads);
+                        // f32 dequant path
+                        let mut row = vec![0.0f32; m * n];
+                        iw.matmul_into(&x.data, m, &mut row, threads);
+                        let mut par_row = vec![0.0f32; m * n];
+                        iw.matmul_into_scratch_on(&x.data, m, &mut par_row, threads, backend, &mut scratch);
+                        assert_eq!(par_row, row, "f32 parallel-flip {m}x{k}x{n} t={threads} {backend:?}");
+                        let mut ser_row = vec![0.0f32; m * n];
+                        iw.matmul_into_scratch_serial(&x.data, m, &mut ser_row, threads, backend, &mut scratch);
+                        assert_eq!(ser_row, row, "f32 serial {m}x{k}x{n} t={threads} {backend:?}");
+                        let mut col = vec![f32::NAN; m * n];
+                        iw.matmul_colmajor_scratch(&x.data, m, &mut col, threads, backend, &mut scratch);
+                        for i in 0..m {
+                            for j in 0..n {
+                                assert_eq!(col[j * m + i], row[i * n + j], "f32 colmajor ({i},{j})");
+                            }
+                        }
+                        // integer path
+                        let mut irow = vec![0.0f32; m * n];
+                        iw.matmul_i8_into(&qa.codes, &qa.scales, m, &mut irow, threads);
+                        let mut ipar = vec![0.0f32; m * n];
+                        iw.matmul_i8_scratch_on(&qa.codes, &qa.scales, m, &mut ipar, threads, backend, &mut scratch);
+                        assert_eq!(ipar, irow, "i8 parallel-flip {m}x{k}x{n} t={threads} {backend:?}");
+                        let mut icol = vec![f32::NAN; m * n];
+                        iw.matmul_i8_colmajor_scratch(&qa.codes, &qa.scales, m, &mut icol, threads, backend, &mut scratch);
+                        for i in 0..m {
+                            for j in 0..n {
+                                assert_eq!(icol[j * m + i], irow[i * n + j], "i8 colmajor ({i},{j})");
+                            }
+                        }
+                        // fused quantize→colmajor wrapper
+                        let mut qcol = vec![f32::NAN; m * n];
+                        iw.quant_matmul_colmajor_into(&x.data, m, &act, &mut qcol, threads);
+                        assert_eq!(qcol, icol, "quant_matmul_colmajor {m}x{k}x{n}");
+                    }
+                }
+            }
         }
     }
 

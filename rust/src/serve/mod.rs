@@ -24,9 +24,12 @@
 //!   (`KURTAIL_ARENA=0` / `KURTAIL_PANEL_CACHE=0` restore it).
 //!
 //! Everything here runs on the host kernel layer (`util::par`
-//! row-chunking) with the repo-wide determinism contract: results are
-//! bitwise identical across `KURTAIL_THREADS` settings, and a lane's
-//! token stream does not depend on which other lanes share its batch.
+//! row-chunking, work-stealing by default with `KURTAIL_PAR=static` /
+//! `ServeConfig::par_backend` for A/B) with the repo-wide determinism
+//! contract: results are bitwise identical across `KURTAIL_THREADS`
+//! settings, parallel backends and GEMM output layouts
+//! (`ServeConfig::fused_epilogue`), and a lane's token stream does not
+//! depend on which other lanes share its batch.
 
 pub mod engine;
 pub mod int4;
@@ -36,11 +39,13 @@ pub mod scheduler;
 pub mod scratch;
 
 pub use engine::{
-    argmax, sample_token, sample_token_buf, Completion, Engine, EngineStats, ServeConfig,
-    ServeModel, ServeQuantSpec,
+    argmax, fused_epilogue_enabled, sample_token, sample_token_buf, Completion, Engine, EngineStats,
+    ServeConfig, ServeModel, ServeQuantSpec,
 };
 pub use int4::{panel_cache_budget, GemmScratch, Int4Weight};
 pub use kvcache::{KvPool, SeqKv};
 pub use qact::{int_gemm_enabled, QuantActs};
 pub use scheduler::{QueuedRequest, Scheduler};
-pub use scratch::{arena_enabled, DecodeScratch};
+pub use scratch::{arena_enabled, scratch_decay_default, DecodeScratch, DEFAULT_DECAY_STEPS};
+
+pub use crate::util::par::ParBackend;

@@ -25,7 +25,7 @@
 use crate::config::QuantScheme;
 use crate::quant::fakequant::row_scale_buf;
 use crate::tensor::Tensor;
-use crate::util::par::{self, num_threads};
+use crate::util::par::{self, num_threads, ParBackend};
 
 /// `KURTAIL_INT_GEMM` escape hatch: the integer-accumulator serving GEMM
 /// is on by default; set `KURTAIL_INT_GEMM=0` to route quantized serving
@@ -122,6 +122,22 @@ pub fn quantize_rows_scratch(
     threads: usize,
     bufs: &mut [Vec<f32>],
 ) {
+    quantize_rows_scratch_on(par::backend(), x, width, s, codes, scales, threads, bufs);
+}
+
+/// [`quantize_rows_scratch`] on an explicit parallel backend (the serve
+/// engine pins one per `ServeConfig::par_backend`).
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_rows_scratch_on(
+    backend: ParBackend,
+    x: &[f32],
+    width: usize,
+    s: &QuantScheme,
+    codes: &mut [i8],
+    scales: &mut [f32],
+    threads: usize,
+    bufs: &mut [Vec<f32>],
+) {
     assert!(width > 0, "qact: zero row width");
     assert_eq!(x.len() % width, 0, "qact: ragged rows");
     let m = x.len() / width;
@@ -132,7 +148,7 @@ pub fn quantize_rows_scratch(
     if m == 0 {
         return;
     }
-    par::par_row_chunks_scratch_mut(&mut scales[..m], 1, 64, threads, bufs, |r0, chunk, buf| {
+    par::par_row_chunks_scratch_mut_on(backend, &mut scales[..m], 1, 64, threads, bufs, |r0, chunk, buf| {
         for (i, sc) in chunk.iter_mut().enumerate() {
             let row = &x[(r0 + i) * width..(r0 + i + 1) * width];
             *sc = row_scale_buf(row, s, buf);
@@ -140,7 +156,7 @@ pub fn quantize_rows_scratch(
     });
     let qmax = s.qmax();
     let scales_ref: &[f32] = &scales[..m];
-    par::par_row_chunks_mut(&mut codes[..m * width], width, 16, threads, |r0, chunk| {
+    par::par_row_chunks_mut_on(backend, &mut codes[..m * width], width, 16, threads, |r0, chunk| {
         for (i, crow) in chunk.chunks_exact_mut(width).enumerate() {
             let scale = scales_ref[r0 + i];
             let row = &x[(r0 + i) * width..(r0 + i + 1) * width];

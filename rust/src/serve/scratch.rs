@@ -3,18 +3,31 @@
 //! PR-3's `Engine::forward` re-allocated ~35 buffers per decode
 //! iteration: the eight activation blocks, the integer-path code/scale
 //! buffers, a transposed-output staging buffer plus a nibble-unpack
-//! tile per packed GEMM, per-chunk fake-quant selection scratch, the
+//! tile per packed GEMM, per-worker fake-quant selection scratch, the
 //! attention score rows, the softmax scratch of temperature sampling,
 //! and the logits block. [`DecodeScratch`] owns all of them: sized once
 //! at engine build for the admission-time peak (`max_lanes` decode
-//! rows; a longer prompt prefill grows the arena once and it stays
-//! grown), then re-lent to the kernels on every `step()`. In steady
-//! state — live lanes decoding, no admission or retirement in flight —
-//! a decode iteration performs **zero heap allocations** (pinned by
+//! rows; a longer prompt prefill grows the arena once), then re-lent to
+//! the kernels on every `step()`. In steady state — live lanes
+//! decoding, no admission or retirement in flight — a decode iteration
+//! performs **zero heap allocations** (pinned by
 //! `tests/serve_scratch.rs` under the counting allocator in
-//! `util::alloc`; the assertion runs at `threads = 1` because scoped
-//! thread *spawns* allocate by design — the kernels themselves never
-//! do).
+//! `util::alloc`; the assertion runs at `threads = 1` because thread
+//! *spawns* (scoped) and pool job injection (work-stealing) allocate by
+//! design — the kernels themselves never do, on either backend).
+//!
+//! **High-water-mark decay.** Grown-only sizing meant a single
+//! long-prompt prefill pinned its peak forever. The arena now tracks
+//! the rows each forward actually uses: after
+//! [`DecodeScratch::set_decay`]`(n)` consecutive forwards that needed
+//! fewer rows than the buffers hold (default
+//! [`DEFAULT_DECAY_STEPS`], `KURTAIL_SCRATCH_DECAY` /
+//! `ServeConfig::scratch_decay` override, `0` disables), the buffers
+//! shrink to the **live-lane peak** of that idle window and the freed
+//! bytes return to the allocator. Decay never fires while the peak is
+//! in use, so steady-state decode at a constant lane count stays
+//! allocation-free; after a decay, the next larger forward simply grows
+//! the arena again (one allocation burst, off the steady-state path).
 //!
 //! Buffer contents never carry information between iterations: every
 //! slice is fully overwritten before it is read (the GEMMs overwrite,
@@ -41,14 +54,45 @@ fn arena_flag(var: Option<&str>) -> bool {
     var.map(|v| v.trim() != "0").unwrap_or(true)
 }
 
+/// Default idle-forward count before the arena decays to its live-lane
+/// peak (`KURTAIL_SCRATCH_DECAY` / `ServeConfig::scratch_decay`
+/// override; `0` disables decay).
+pub const DEFAULT_DECAY_STEPS: usize = 64;
+
+/// `KURTAIL_SCRATCH_DECAY` rule: unset or empty → [`DEFAULT_DECAY_STEPS`],
+/// `0` → decay off, any other integer → that many idle forwards.
+/// An unparseable value falls back to the default (decay is a memory
+/// *bound*, so garbage must not silently disable it).
+pub fn scratch_decay_default() -> usize {
+    decay_flag(std::env::var("KURTAIL_SCRATCH_DECAY").ok().as_deref())
+}
+
+/// Parse rule behind [`scratch_decay_default`], split out for tests.
+fn decay_flag(var: Option<&str>) -> usize {
+    match var {
+        None => DEFAULT_DECAY_STEPS,
+        Some(v) => {
+            let t = v.trim();
+            if t.is_empty() {
+                DEFAULT_DECAY_STEPS
+            } else {
+                t.parse::<usize>().unwrap_or(DEFAULT_DECAY_STEPS)
+            }
+        }
+    }
+}
+
 /// Every per-iteration buffer of the serving forward, owned by the
-/// engine and reused across `step()` calls. Capacities only grow
-/// ([`Self::ensure`]); kernels slice the exact lengths they need.
+/// engine and reused across `step()` calls. Capacities grow on demand
+/// ([`Self::ensure`]) and shrink only through the high-water-mark decay
+/// ([`Self::maybe_decay`]); kernels slice the exact lengths they need.
 #[derive(Clone, Debug, Default)]
 pub struct DecodeScratch {
     /// Residual stream (`n × d`), filled by token embedding.
     pub x: Vec<f32>,
-    /// Post-norm / GEMM-output block (`n × d`).
+    /// Post-norm / GEMM-output block (`n × d`; column-major `(d × n)`
+    /// when the fused epilogue routes a GEMM straight into a fused
+    /// consumer — the length is the same either way).
     pub z: Vec<f32>,
     /// Q projections (`n × d`).
     pub qx: Vec<f32>,
@@ -58,13 +102,16 @@ pub struct DecodeScratch {
     pub vx: Vec<f32>,
     /// Attention output (`n × d`).
     pub attn: Vec<f32>,
-    /// Rotation staging (`n × max(d, ff)` — R3/R4 use `n·d`, R5 `n·ff`).
+    /// Rotation / transpose staging (`n × max(d, ff)` — R3/R4 use `n·d`,
+    /// R5 and the fused-epilogue FFN transpose use `n·ff`).
     pub rot: Vec<f32>,
-    /// FFN mid block (`n × ff`).
+    /// FFN mid block (`n × ff`; `(ff × n)` column-major under the fused
+    /// epilogue until the pre-R5 transpose).
     pub mid: Vec<f32>,
-    /// FFN gate block (`n × ff`, llama arch).
+    /// FFN gate block (`n × ff`, llama arch; column-major like `mid`).
     pub gate: Vec<f32>,
-    /// Output logits (`n × vocab`).
+    /// Output logits (`n × vocab`; `(vocab × n)` column-major under the
+    /// fused epilogue).
     pub logits: Vec<f32>,
     /// Integer-path activation codes (`n × max(d, ff)`).
     pub qcodes: Vec<i8>,
@@ -72,11 +119,18 @@ pub struct DecodeScratch {
     pub qscales: Vec<f32>,
     /// Temperature-sampling softmax scratch (`vocab` capacity).
     pub exps: Vec<f32>,
-    /// Packed-GEMM staging: transposed output + per-chunk unpack tiles.
+    /// One gathered logits column (`vocab` floats) for sampling from a
+    /// column-major logits block.
+    pub lrow: Vec<f32>,
+    /// Per-lane running argmax values over a column-major logits block.
+    pub arg_best: Vec<f32>,
+    /// Per-lane argmax indices (`n`).
+    pub arg_idx: Vec<i32>,
+    /// Packed-GEMM staging: transposed output + per-worker unpack tiles.
     pub gemm: GemmScratch,
-    /// Per-chunk `row_scale_buf` clip-quantile selection scratch.
+    /// Per-worker `row_scale_buf` clip-quantile selection scratch.
     pub fq_bufs: Vec<Vec<f32>>,
-    /// Per-chunk attention score rows (`max_pos` capacity each).
+    /// Per-worker attention score rows (`max_pos` capacity each).
     pub scores: Vec<Vec<f32>>,
     /// Row descriptors `(lane_slot, pos)` of the current forward.
     pub rows: Vec<(usize, usize)>,
@@ -84,6 +138,14 @@ pub struct DecodeScratch {
     pub toks: Vec<i32>,
     /// Decode slot list of the current step.
     pub slots: Vec<usize>,
+    /// Rows the f32 blocks are currently sized for (the high-water mark).
+    sized_rows: usize,
+    /// Idle forwards before decay (0 = decay off).
+    decay_after: usize,
+    /// Consecutive forwards that needed fewer rows than `sized_rows`.
+    idle_steps: usize,
+    /// Largest row count seen inside the current idle window.
+    window_rows: usize,
 }
 
 fn grow_f32(v: &mut Vec<f32>, need: usize) {
@@ -92,8 +154,15 @@ fn grow_f32(v: &mut Vec<f32>, need: usize) {
     }
 }
 
+fn shrink_f32(v: &mut Vec<f32>, keep: usize) {
+    if v.len() > keep {
+        v.truncate(keep);
+        v.shrink_to_fit();
+    }
+}
+
 impl DecodeScratch {
-    /// Empty arena with one per-chunk scratch slot per thread.
+    /// Empty arena with one per-worker scratch slot per thread.
     pub fn new(threads: usize) -> Self {
         let t = threads.max(1);
         Self {
@@ -104,12 +173,25 @@ impl DecodeScratch {
         }
     }
 
+    /// Arm (or disarm, with `0`) the high-water-mark decay.
+    pub fn set_decay(&mut self, idle_forwards: usize) {
+        self.decay_after = idle_forwards;
+        self.idle_steps = 0;
+        self.window_rows = 0;
+    }
+
+    /// Rows the f32 blocks currently hold capacity for (tests, stats).
+    pub fn sized_rows(&self) -> usize {
+        self.sized_rows
+    }
+
     /// Grow every buffer to cover an `n`-row forward of a
     /// `(d, ff, vocab)` model whose caches reach `max_pos` tokens.
-    /// Idempotent and never shrinks; after the first call at the peak
-    /// row count, subsequent calls allocate nothing.
+    /// Idempotent; after a call at the peak row count, subsequent calls
+    /// at or below it allocate nothing.
     pub fn ensure(&mut self, n: usize, d: usize, ff: usize, vocab: usize, max_pos: usize) {
         let wide = d.max(ff);
+        self.sized_rows = self.sized_rows.max(n);
         grow_f32(&mut self.x, n * d);
         grow_f32(&mut self.z, n * d);
         grow_f32(&mut self.qx, n * d);
@@ -121,10 +203,15 @@ impl DecodeScratch {
         grow_f32(&mut self.gate, n * ff);
         grow_f32(&mut self.logits, n * vocab);
         grow_f32(&mut self.qscales, n);
+        grow_f32(&mut self.arg_best, n);
+        if self.arg_idx.len() < n {
+            self.arg_idx.resize(n, 0);
+        }
         if self.qcodes.len() < n * wide {
             self.qcodes.resize(n * wide, 0);
         }
         self.exps.reserve(vocab.saturating_sub(self.exps.len()));
+        self.lrow.reserve(vocab.saturating_sub(self.lrow.len()));
         self.gemm.reserve(n * wide, wide);
         for buf in &mut self.fq_bufs {
             buf.reserve(wide.saturating_sub(buf.len()));
@@ -141,6 +228,55 @@ impl DecodeScratch {
         // restore. The engine reserves the real vector once at build.
     }
 
+    /// High-water-mark decay bookkeeping, called once per forward with
+    /// the rows that forward needs (before [`Self::ensure`]). A forward
+    /// at the current peak resets the idle window; after `decay_after`
+    /// consecutive below-peak forwards the row-proportional buffers
+    /// shrink to the window's live-lane peak and release the excess.
+    /// Purely a capacity change — every buffer is fully overwritten
+    /// before use, so decode streams are bitwise unaffected.
+    pub fn maybe_decay(&mut self, rows_needed: usize, d: usize, ff: usize, vocab: usize) {
+        if self.decay_after == 0 {
+            return;
+        }
+        if rows_needed >= self.sized_rows {
+            self.idle_steps = 0;
+            self.window_rows = 0;
+            return;
+        }
+        self.window_rows = self.window_rows.max(rows_needed);
+        self.idle_steps += 1;
+        if self.idle_steps < self.decay_after {
+            return;
+        }
+        let keep = self.window_rows.max(1);
+        let wide = d.max(ff);
+        shrink_f32(&mut self.x, keep * d);
+        shrink_f32(&mut self.z, keep * d);
+        shrink_f32(&mut self.qx, keep * d);
+        shrink_f32(&mut self.kx, keep * d);
+        shrink_f32(&mut self.vx, keep * d);
+        shrink_f32(&mut self.attn, keep * d);
+        shrink_f32(&mut self.rot, keep * wide);
+        shrink_f32(&mut self.mid, keep * ff);
+        shrink_f32(&mut self.gate, keep * ff);
+        shrink_f32(&mut self.logits, keep * vocab);
+        shrink_f32(&mut self.qscales, keep);
+        shrink_f32(&mut self.arg_best, keep);
+        if self.arg_idx.len() > keep {
+            self.arg_idx.truncate(keep);
+            self.arg_idx.shrink_to_fit();
+        }
+        if self.qcodes.len() > keep * wide {
+            self.qcodes.truncate(keep * wide);
+            self.qcodes.shrink_to_fit();
+        }
+        self.gemm.shrink(keep * wide);
+        self.sized_rows = keep;
+        self.idle_steps = 0;
+        self.window_rows = 0;
+    }
+
     /// Drop every buffer (keeping the tiny row-descriptor vectors) so
     /// the next [`Self::ensure`] re-allocates from scratch — the PR-3
     /// per-iteration allocation profile, kept behind `KURTAIL_ARENA=0`
@@ -150,10 +286,12 @@ impl DecodeScratch {
         let rows = std::mem::take(&mut self.rows);
         let toks = std::mem::take(&mut self.toks);
         let slots = std::mem::take(&mut self.slots);
+        let decay = self.decay_after;
         *self = Self::new(threads);
         self.rows = rows;
         self.toks = toks;
         self.slots = slots;
+        self.decay_after = decay;
     }
 }
 
@@ -172,7 +310,17 @@ mod tests {
     }
 
     #[test]
-    fn ensure_grows_once_and_never_shrinks() {
+    fn decay_flag_parse_rule() {
+        assert_eq!(decay_flag(None), DEFAULT_DECAY_STEPS, "unset defaults on");
+        assert_eq!(decay_flag(Some("0")), 0, "literal 0 disables");
+        assert_eq!(decay_flag(Some(" 8 ")), 8);
+        assert_eq!(decay_flag(Some("")), DEFAULT_DECAY_STEPS);
+        // a memory *bound* must not silently vanish on garbage
+        assert_eq!(decay_flag(Some("lots")), DEFAULT_DECAY_STEPS);
+    }
+
+    #[test]
+    fn ensure_grows_once_and_never_shrinks_without_decay() {
         let mut s = DecodeScratch::new(4);
         s.ensure(4, 8, 16, 32, 64);
         assert_eq!(s.x.len(), 32);
@@ -180,24 +328,65 @@ mod tests {
         assert_eq!(s.qcodes.len(), 4 * 16);
         assert!(s.exps.capacity() >= 32);
         assert!(s.scores.iter().all(|sc| sc.capacity() >= 64));
+        assert_eq!(s.sized_rows(), 4);
         // a wider call grows…
         s.ensure(9, 8, 16, 32, 64);
         assert_eq!(s.x.len(), 72);
+        assert_eq!(s.sized_rows(), 9);
         // …a narrower one is a no-op (slicing handles smaller batches)
         let cap = s.x.capacity();
         s.ensure(1, 8, 16, 32, 64);
         assert_eq!(s.x.len(), 72);
         assert_eq!(s.x.capacity(), cap);
+        // decay disarmed by default: idle forwards never shrink
+        for _ in 0..200 {
+            s.maybe_decay(1, 8, 16, 32);
+        }
+        assert_eq!(s.x.len(), 72);
+    }
+
+    #[test]
+    fn decay_shrinks_to_live_lane_peak_after_idle_window() {
+        let (d, ff, v) = (8usize, 16usize, 32usize);
+        let mut s = DecodeScratch::new(2);
+        s.set_decay(3);
+        // a long-prompt burst pins the peak…
+        s.ensure(40, d, ff, v, 64);
+        assert_eq!(s.sized_rows(), 40);
+        assert_eq!(s.logits.len(), 40 * v);
+        // …steady decode at 2–3 live lanes decays it after 3 idle steps
+        for rows in [2usize, 3, 2] {
+            s.maybe_decay(rows, d, ff, v);
+            s.ensure(rows, d, ff, v, 64);
+        }
+        assert_eq!(s.sized_rows(), 3, "shrunk to the idle window's live-lane peak");
+        assert_eq!(s.x.len(), 3 * d);
+        assert_eq!(s.logits.len(), 3 * v);
+        assert!(s.x.capacity() < 40 * d, "excess capacity released");
+        // a peak-sized forward resets the window instead of decaying
+        s.ensure(5, d, ff, v, 64);
+        for _ in 0..2 {
+            s.maybe_decay(2, d, ff, v);
+        }
+        s.maybe_decay(5, d, ff, v); // at peak → window resets
+        for _ in 0..2 {
+            s.maybe_decay(2, d, ff, v);
+        }
+        assert_eq!(s.sized_rows(), 5, "window reset by a peak forward");
+        s.maybe_decay(2, d, ff, v);
+        assert_eq!(s.sized_rows(), 2, "third consecutive idle forward decays");
     }
 
     #[test]
     fn reset_drops_buffers_but_keeps_descriptor_vecs() {
         let mut s = DecodeScratch::new(2);
+        s.set_decay(7);
         s.ensure(4, 8, 16, 32, 64);
         s.rows.push((0, 0));
         s.reset_buffers();
         assert!(s.x.is_empty() && s.logits.is_empty() && s.gemm.out_t.is_empty());
-        assert_eq!(s.fq_bufs.len(), 2, "per-chunk slot count survives");
+        assert_eq!(s.fq_bufs.len(), 2, "per-worker slot count survives");
         assert_eq!(s.rows.len(), 1, "descriptor inputs survive a reset");
+        assert_eq!(s.decay_after, 7, "decay config survives a reset");
     }
 }

@@ -63,8 +63,14 @@ where
         assert_eq!(rm.shape, vec![c, c], "rotation must be ({c},{c})");
     }
     let packed = rot.map(|rm| pack_b(&rm.data, c, c, threads));
-    par::par_row_chunks_mut(out, out_width, 1, threads, |b0, ochunk| {
-        let mut buf = vec![0.0f32; FUSE_CHUNK_ROWS * c];
+    // one rotate buffer per *worker* (not per par chunk): under the
+    // work-stealing backend a worker sweeps many fine chunks, and the
+    // buffer rides along instead of being re-allocated per chunk
+    let mut bufs: Vec<Vec<f32>> = (0..threads.max(1)).map(|_| Vec::new()).collect();
+    par::par_row_chunks_scratch_mut(out, out_width, 1, threads, &mut bufs, |b0, ochunk, buf| {
+        if packed.is_some() && buf.len() < FUSE_CHUNK_ROWS * c {
+            buf.resize(FUSE_CHUNK_ROWS * c, 0.0);
+        }
         for (bi, orow) in ochunk.chunks_exact_mut(out_width).enumerate() {
             let r0 = (b0 + bi) * FUSE_CHUNK_ROWS;
             let rows = FUSE_CHUNK_ROWS.min(r - r0);

@@ -22,7 +22,7 @@
 //! counts too.
 
 use super::Tensor;
-use crate::util::par::{self, num_threads};
+use crate::util::par::{self, num_threads, ParBackend};
 
 /// Cache block size of the scalar reference kernel.
 const BLOCK: usize = 64;
@@ -37,6 +37,9 @@ const PACK_MIN_MADDS: usize = 32 * 1024;
 const GRAM_ROW_BLOCK: usize = 64;
 /// Minimum output rows per thread chunk (spawn amortization).
 const MIN_ROWS_PER_CHUNK: usize = 8;
+/// Square tile edge of the blocked transpose (32×32 f32 = 4 KiB: two
+/// tiles — source + destination — sit comfortably in L1).
+const TRANSPOSE_BLOCK: usize = 32;
 
 /// C = A @ B for 2-D tensors (m,k) × (k,n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -86,6 +89,173 @@ pub fn matmul_into_threads(
         let rows = cchunk.len() / n;
         matmul_packed_chunk(&a[i0 * k..(i0 + rows) * k], &packed, cchunk, rows, k, n);
     });
+}
+
+/// Parallel blocked transpose: `dst` (cols × rows) ← `src` (rows ×
+/// cols). This is the epilogue for GEMM consumers that genuinely need a
+/// row-major tensor from a column-major ([`matmul_into_colmajor`]-style)
+/// output — RoPE/KV-append over the QKV projections, the GEMM lhs of
+/// the R5 rotation — replacing the serial scalar flip the serving GEMMs
+/// used to run. Work splits over destination rows; within a chunk the
+/// copy walks [`TRANSPOSE_BLOCK`]² tiles so both sides stay
+/// cache-resident. A pure data movement: bitwise exact by construction.
+pub fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32], threads: usize) {
+    transpose_into_on(par::backend(), src, rows, cols, dst, threads);
+}
+
+/// [`transpose_into`] on an explicit parallel backend.
+pub fn transpose_into_on(backend: ParBackend, src: &[f32], rows: usize, cols: usize, dst: &mut [f32], threads: usize) {
+    assert_eq!(src.len(), rows * cols, "transpose_into: src size");
+    assert_eq!(dst.len(), rows * cols, "transpose_into: dst size");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if rows == 1 || cols == 1 {
+        // a single row/column is the same sequence in either layout
+        dst.copy_from_slice(src);
+        return;
+    }
+    const TB: usize = TRANSPOSE_BLOCK;
+    par::par_row_chunks_mut_on(backend, dst, rows, 1, threads, |j0, chunk| {
+        let jn = chunk.len() / rows;
+        for ib in (0..rows).step_by(TB) {
+            let ie = (ib + TB).min(rows);
+            for jb in (0..jn).step_by(TB) {
+                let je = (jb + TB).min(jn);
+                for j in jb..je {
+                    let drow = &mut chunk[j * rows..(j + 1) * rows];
+                    for i in ib..ie {
+                        drow[i] = src[i * cols + j0 + j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// C_T **+=** (A @ B)ᵀ on raw slices: the column-major twin of
+/// [`matmul_into`]. `c_t` is `(n × m)` — output column `j` of the
+/// product occupies the contiguous run `c_t[j·m .. (j+1)·m]` — so a
+/// consumer that traverses the product column-wise (or element-wise)
+/// ingests it with no transpose at all. Per output element the k-loop
+/// and accumulation order are identical to [`matmul_into`], so
+/// `c_t[j·m + i]` is bitwise the row-major `c[i·n + j]` (routing
+/// threshold included); pinned by `colmajor_matches_rowmajor_bitwise`.
+pub fn matmul_into_colmajor(a: &[f32], b: &[f32], c_t: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_into_colmajor_threads(a, b, c_t, m, k, n, num_threads());
+}
+
+/// [`matmul_into_colmajor`] with an explicit thread budget.
+pub fn matmul_into_colmajor_threads(a: &[f32], b: &[f32], c_t: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    assert_eq!(a.len(), m * k, "matmul_into_colmajor: lhs size");
+    assert_eq!(b.len(), k * n, "matmul_into_colmajor: rhs size");
+    assert_eq!(c_t.len(), m * n, "matmul_into_colmajor: out size");
+    if m * k * n < PACK_MIN_MADDS {
+        return matmul_into_colmajor_ref(a, b, c_t, m, k, n);
+    }
+    let packed = pack_b(b, k, n, threads);
+    par::par_row_chunks_mut(c_t, m, NR, threads, |j0, chunk| {
+        matmul_packed_colmajor_span::<true>(a, &packed, chunk, j0, m, k, n);
+    });
+}
+
+/// Scalar reference for the column-major output: the exact loop nest of
+/// [`matmul_into_ref`] (same blocking, same zero-skip, same per-element
+/// k order) with the store transposed. Small-problem fallback.
+fn matmul_into_colmajor_ref(a: &[f32], b: &[f32], c_t: &mut [f32], m: usize, k: usize, n: usize) {
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                for kk in k0..k1 {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (j, bv) in brow.iter().enumerate() {
+                        c_t[j * m + i] += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One chunk of the packed column-major GEMM: output columns
+/// `[j0, j0 + chunk.len()/m)` of `(A@B)ᵀ`, written into `chunk` (column
+/// `j` at `chunk[(j-j0)·m ..]`). Runs the exact [`microkernel`] tiles of
+/// the row-major path and scatters the register tile transposed, so per
+/// element the arithmetic is bit-identical; panels straddling a chunk
+/// boundary are (cheaply) recomputed by both neighbors — each element is
+/// still *stored* by exactly one chunk, with the same value.
+fn matmul_packed_colmajor_span<const ACC: bool>(
+    a: &[f32],
+    packed: &[f32],
+    chunk: &mut [f32],
+    j0: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let jn = chunk.len() / m;
+    let p0 = j0 / NR;
+    let p1 = (j0 + jn + NR - 1) / NR;
+    debug_assert!(p1 * k * NR <= packed.len());
+    let mut i = 0;
+    while i + MR <= m {
+        let ar: [&[f32]; MR] = [
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        ];
+        for p in p0..p1 {
+            let panel = &packed[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            microkernel(&ar, panel, &mut acc);
+            let jlo = (p * NR).max(j0);
+            let jhi = (p * NR + NR).min(n).min(j0 + jn);
+            for j in jlo..jhi {
+                let col = j - p * NR;
+                for (r, acc_r) in acc.iter().enumerate() {
+                    let cv = &mut chunk[(j - j0) * m + i + r];
+                    if ACC {
+                        *cv += acc_r[col];
+                    } else {
+                        *cv = acc_r[col];
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        for p in p0..p1 {
+            let panel = &packed[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0.0f32; NR];
+            for (kk, bk) in panel.chunks_exact(NR).enumerate() {
+                let bk: &[f32; NR] = bk.try_into().unwrap();
+                let av = arow[kk];
+                for j in 0..NR {
+                    acc[j] += av * bk[j];
+                }
+            }
+            let jlo = (p * NR).max(j0);
+            let jhi = (p * NR + NR).min(n).min(j0 + jn);
+            for j in jlo..jhi {
+                let cv = &mut chunk[(j - j0) * m + i];
+                if ACC {
+                    *cv += acc[j - p * NR];
+                } else {
+                    *cv = acc[j - p * NR];
+                }
+            }
+        }
+        i += 1;
+    }
 }
 
 /// Pack B (k×n row-major) into `ceil(n/NR)` contiguous column panels of
@@ -244,6 +414,20 @@ impl PackedB {
         m: usize,
         threads: usize,
     ) {
+        self.matmul_overwrite_on(par::backend(), a, b_dense, c, m, threads);
+    }
+
+    /// [`Self::matmul_overwrite`] on an explicit parallel backend (the
+    /// serve engine pins one per `ServeConfig::par_backend`).
+    pub fn matmul_overwrite_on(
+        &self,
+        backend: ParBackend,
+        a: &[f32],
+        b_dense: &[f32],
+        c: &mut [f32],
+        m: usize,
+        threads: usize,
+    ) {
         let (k, n) = (self.k, self.n);
         assert_eq!(a.len(), m * k, "PackedB matmul: lhs size");
         assert_eq!(b_dense.len(), k * n, "PackedB matmul: dense B size");
@@ -252,7 +436,7 @@ impl PackedB {
             c.fill(0.0);
             return matmul_into_ref(a, b_dense, c, m, k, n);
         }
-        par::par_row_chunks_mut(c, n, MIN_ROWS_PER_CHUNK, threads, |i0, cchunk| {
+        par::par_row_chunks_mut_on(backend, c, n, MIN_ROWS_PER_CHUNK, threads, |i0, cchunk| {
             let rows = cchunk.len() / n;
             matmul_packed_chunk_impl::<false>(
                 &a[i0 * k..(i0 + rows) * k],
@@ -262,6 +446,45 @@ impl PackedB {
                 k,
                 n,
             );
+        });
+    }
+
+    /// `c_t = (a @ B)ᵀ` (overwrites `c_t`, `n × m` column-major output).
+    ///
+    /// The row-major [`Self::matmul_overwrite`] splits work over the `m`
+    /// output *rows* — at decode batch sizes (m ≤ 16 lanes) that caps
+    /// parallelism at m chunks and makes every chunk stream the whole
+    /// packed B. This variant splits over the `n` output *columns*
+    /// instead: each packed panel is read by exactly one chunk, B
+    /// traffic drops from `threads × k·n` to `k·n`, and the serving
+    /// consumer (logits argmax/sampling) ingests the column-major block
+    /// directly. Per element it runs the same [`microkernel`] tiles in
+    /// the same k order, so `c_t[j·m + i]` is bitwise the row-major
+    /// `c[i·n + j]` on both sides of the routing threshold.
+    pub fn matmul_colmajor(&self, a: &[f32], b_dense: &[f32], c_t: &mut [f32], m: usize, threads: usize) {
+        self.matmul_colmajor_on(par::backend(), a, b_dense, c_t, m, threads);
+    }
+
+    /// [`Self::matmul_colmajor`] on an explicit parallel backend.
+    pub fn matmul_colmajor_on(
+        &self,
+        backend: ParBackend,
+        a: &[f32],
+        b_dense: &[f32],
+        c_t: &mut [f32],
+        m: usize,
+        threads: usize,
+    ) {
+        let (k, n) = (self.k, self.n);
+        assert_eq!(a.len(), m * k, "PackedB matmul: lhs size");
+        assert_eq!(b_dense.len(), k * n, "PackedB matmul: dense B size");
+        assert_eq!(c_t.len(), m * n, "PackedB matmul: out size");
+        if m * k * n < PACK_MIN_MADDS {
+            c_t.fill(0.0);
+            return matmul_into_colmajor_ref(a, b_dense, c_t, m, k, n);
+        }
+        par::par_row_chunks_mut_on(backend, c_t, m, NR, threads, |j0, chunk| {
+            matmul_packed_colmajor_span::<false>(a, &self.packed, chunk, j0, m, k, n);
         });
     }
 }
@@ -680,6 +903,81 @@ mod tests {
                 let mut got = vec![0.7f32; m * n]; // stale garbage must vanish
                 pb.matmul_overwrite(&a.data, &b.data, &mut got, m, threads);
                 assert_eq!(got, want, "{m}x{k}x{n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_into_matches_naive() {
+        let mut rng = Rng::new(17);
+        for (r, c) in [(1usize, 1usize), (1, 9), (9, 1), (3, 5), (16, 33), (65, 64), (129, 7)] {
+            let src = Tensor::randn(&[r, c], 1.0, &mut rng);
+            for threads in [1usize, 4] {
+                for backend in [crate::util::par::ParBackend::Static, crate::util::par::ParBackend::Steal] {
+                    let mut dst = vec![f32::NAN; r * c]; // stale garbage must vanish
+                    transpose_into_on(backend, &src.data, r, c, &mut dst, threads);
+                    for i in 0..r {
+                        for j in 0..c {
+                            assert_eq!(dst[j * r + i], src.data[i * c + j], "{r}x{c} t={threads} ({i},{j})");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn colmajor_matches_rowmajor_bitwise() {
+        // matmul_into_colmajor must be the exact transpose of matmul_into
+        // on both sides of the PACK_MIN_MADDS routing threshold (the
+        // same per-element kernel runs, only the store index changes)
+        let mut rng = Rng::new(19);
+        for (m, k, n) in [(3usize, 10, 7), (5, 64, 64), (37, 41, 43), (16, 256, 129), (1, 40, 9)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            for threads in [1usize, 4] {
+                let mut want = vec![0.1f32; m * n];
+                matmul_into_threads(&a.data, &b.data, &mut want, m, k, n, threads);
+                let mut got_t = vec![0.0f32; m * n];
+                // seed with the transposed prior content so the
+                // accumulate contract is exercised too
+                for i in 0..m {
+                    for j in 0..n {
+                        got_t[j * m + i] = 0.1;
+                    }
+                }
+                matmul_into_colmajor_threads(&a.data, &b.data, &mut got_t, m, k, n, threads);
+                for i in 0..m {
+                    for j in 0..n {
+                        assert_eq!(got_t[j * m + i], want[i * n + j], "{m}x{k}x{n} t={threads} ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_colmajor_matches_overwrite_bitwise() {
+        // PackedB::matmul_colmajor must be the exact transpose of
+        // matmul_overwrite at every thread count and backend, on both
+        // routing classes
+        let mut rng = Rng::new(23);
+        for (m, k, n) in [(3usize, 10, 7), (16, 64, 64), (16, 256, 129), (1, 31, 17)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let pb = PackedB::pack(&b.data, k, n);
+            let mut want = vec![0.7f32; m * n];
+            pb.matmul_overwrite(&a.data, &b.data, &mut want, m, 1);
+            for threads in [1usize, 4] {
+                for backend in [crate::util::par::ParBackend::Static, crate::util::par::ParBackend::Steal] {
+                    let mut got_t = vec![0.7f32; m * n]; // stale garbage must vanish
+                    pb.matmul_colmajor_on(backend, &a.data, &b.data, &mut got_t, m, threads);
+                    for i in 0..m {
+                        for j in 0..n {
+                            assert_eq!(got_t[j * m + i], want[i * n + j], "{m}x{k}x{n} t={threads} ({i},{j})");
+                        }
+                    }
+                }
             }
         }
     }

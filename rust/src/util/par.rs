@@ -1,23 +1,60 @@
 //! Work partitioning for the coordinator's parallel host kernels.
 //!
-//! Every parallel kernel in `tensor/` and `quant/` funnels through
-//! [`par_row_chunks_mut`]: the output (or the in-place operand) is split
-//! into contiguous, disjoint row-chunks and each chunk is processed on a
-//! scoped thread. Two properties matter more than raw speed here:
+//! Every parallel kernel in `tensor/`, `quant/` and `serve/` funnels
+//! through [`par_row_chunks_mut`] (or its scratch-slot sibling): the
+//! output (or the in-place operand) is split into contiguous, disjoint
+//! row-chunks and each chunk is processed by one worker. Two properties
+//! matter more than raw speed here:
 //!
-//! * **Determinism across thread counts.** Chunks only partition *which*
-//!   rows a thread owns — never the per-row accumulation order — so every
-//!   kernel built on this module produces bitwise-identical results for
-//!   `KURTAIL_THREADS=1` and `KURTAIL_THREADS=64` (pinned by
-//!   `tests/props.rs::prop_kernels_deterministic_across_threads`).
-//! * **No pool, no globals.** Scoped threads borrow the caller's slices
-//!   directly; there is no runtime state to poison and nothing to shut
-//!   down. Thread spawn costs ~10µs, which is noise for the ms-scale
-//!   kernels that opt into parallelism (tiny inputs take the sequential
-//!   path before ever reaching a spawn).
+//! * **Determinism across thread counts, backends and partitions.**
+//!   Chunks only partition *which* rows a worker owns — never the
+//!   per-row accumulation order — and every kernel built on this module
+//!   computes each row as a pure function of `(first_row_index, input)`.
+//!   So results are bitwise identical for `KURTAIL_THREADS=1` and
+//!   `KURTAIL_THREADS=64`, and for `KURTAIL_PAR=static` vs the
+//!   work-stealing default, even though the two backends produce
+//!   different (both fixed, both contiguous) chunk grids. Pinned by
+//!   `tests/props.rs::prop_kernels_deterministic_across_threads` and the
+//!   backend-invariance properties.
+//! * **Bounded, caller-owned scratch.** Per-worker work buffers are
+//!   handed out from a caller-provided slot pool
+//!   ([`par_row_chunks_scratch_mut`]) so the serving hot loop reuses
+//!   engine-owned arenas instead of allocating inside chunk closures.
+//!
+//! ## Backends (`KURTAIL_PAR`)
+//!
+//! * **`steal` (default).** The row range is pre-partitioned into a
+//!   *fixed* grid of up to [`STEAL_OVERSUB`]`×threads` chunks; `threads`
+//!   worker tasks (spread over a rayon join-tree so idle pool threads
+//!   steal them) claim grid chunks from a shared atomic counter. Skewed
+//!   per-chunk cost — GPTQ channels with many zero errors, mixed
+//!   prefill/decode rows — no longer leaves workers idle: whoever
+//!   finishes early claims the next chunk. Only the *assignment* of
+//!   chunks to workers is dynamic; the grid itself, and therefore every
+//!   `(first_row, rows)` pair a callback observes, is a pure function of
+//!   `(rows, min_rows, threads)`.
+//! * **`static` (`KURTAIL_PAR=static`).** The original scoped-thread
+//!   backend: at most `threads` equal row-count chunks, one scoped
+//!   thread each, no pool and no runtime state. Kept for A/B runs and as
+//!   the zero-dependency fallback.
+//!
+//! ## Scratch slots are worker-keyed, not chunk-keyed
+//!
+//! [`par_row_chunks_scratch_mut`] hands each **worker** (not each chunk)
+//! exclusive `&mut` access to one slot for the duration of the call; a
+//! worker that processes several chunks reuses its slot across them.
+//! `threads` slots therefore always suffice for both backends (the
+//! steal backend runs at most `threads` workers no matter how fine its
+//! chunk grid is). Slot *contents* must never affect results — only
+//! capacity is reused — so slot→chunk assignment being nondeterministic
+//! under stealing is invisible in the output.
 //!
 //! The thread budget comes from `KURTAIL_THREADS` when set (≥ 1), else
-//! from `std::thread::available_parallelism()`.
+//! from `std::thread::available_parallelism()`. The steal backend runs
+//! on rayon's global pool but bounds its own concurrency at `threads`
+//! worker tasks, so the budget caps CPU use on either backend.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Thread budget for parallel kernels: `KURTAIL_THREADS` env override
 /// (any integer ≥ 1), falling back to the host's available parallelism.
@@ -33,40 +70,101 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Parallel execution backend (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParBackend {
+    /// Scoped threads, one equal-rows chunk per thread (the PR-1 chunker).
+    Static,
+    /// Fixed oversubscribed chunk grid + atomic claiming by `threads`
+    /// worker tasks on the rayon pool (the default).
+    Steal,
+}
+
+/// Backend selection: `KURTAIL_PAR=static` restores the scoped-thread
+/// chunker; unset or anything else runs the work-stealing backend. Read
+/// per call so A/B runs can flip it without restarting.
+pub fn backend() -> ParBackend {
+    backend_flag(std::env::var("KURTAIL_PAR").ok().as_deref())
+}
+
+/// Parse rule behind [`backend`], split out so it is testable: only the
+/// literal `static` (case-insensitive, trimmed) opts out of stealing.
+fn backend_flag(var: Option<&str>) -> ParBackend {
+    match var {
+        Some(v) if v.trim().eq_ignore_ascii_case("static") => ParBackend::Static,
+        _ => ParBackend::Steal,
+    }
+}
+
+/// Steal-backend chunk grid granularity: up to this many chunks per
+/// worker. Finer chunks → better rebalancing under skew, more claim
+/// traffic; 4 keeps claim overhead ≪ 1% for the ms-scale kernels that
+/// opt into parallelism.
+const STEAL_OVERSUB: usize = 4;
+
 /// Split `data` (a dense row-major block of rows of `width` elements)
-/// into at most `threads` contiguous chunks of at least `min_rows` rows
-/// and run `f(first_row_index, chunk)` on each, in parallel.
+/// into contiguous chunks of at least `min_rows` rows and run
+/// `f(first_row_index, chunk)` on each, in parallel on the env-selected
+/// backend ([`backend`]).
 ///
 /// The chunks are mutually disjoint `&mut` slices, so `f` may freely
 /// write its chunk; anything else it touches is captured by shared
 /// reference and must be read-only. With one chunk (or `threads == 1`)
-/// no thread is spawned and `f` runs on the caller's stack.
+/// no worker is spawned and `f` runs on the caller's stack. `f` must not
+/// re-enter this module (kernel chunk bodies are leaf computations).
 pub fn par_row_chunks_mut<T, F>(data: &mut [T], width: usize, min_rows: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_row_chunks_mut_on(backend(), data, width, min_rows, threads, f);
+}
+
+/// [`par_row_chunks_mut`] on an explicit backend (engine-pinned runs,
+/// A/B tests).
+pub fn par_row_chunks_mut_on<T, F>(backend: ParBackend, data: &mut [T], width: usize, min_rows: usize, threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     // unit scratch: a Vec of ZSTs never touches the heap
     let mut units = vec![(); threads.max(1)];
-    par_row_chunks_scratch_mut(data, width, min_rows, threads, &mut units, |r0, chunk, _| {
-        f(r0, chunk)
-    });
+    par_row_chunks_scratch_mut_on(backend, data, width, min_rows, threads, &mut units, |r0, chunk, _| f(r0, chunk));
 }
 
-/// [`par_row_chunks_mut`] with one caller-owned scratch slot handed to
-/// each chunk: chunk `i` (in partition order) gets exclusive `&mut`
-/// access to `scratch[i]` for the duration of its callback.
+/// [`par_row_chunks_mut`] with caller-owned scratch slots: each worker
+/// gets exclusive `&mut` access to one slot of `scratch` for the whole
+/// call and reuses it across every chunk it claims.
 ///
-/// This is how the serving hot loop keeps per-thread work buffers
+/// This is how the serving hot loop keeps per-worker work buffers
 /// (fake-quant selection scratch, attention score rows, nibble-unpack
 /// tiles) out of the steady-state allocation count: the buffers live in
 /// an engine-owned arena and are *re-lent* to the kernels on every call
 /// instead of being reallocated inside each chunk closure. `scratch`
-/// must provide at least as many slots as the partition produces chunks
-/// (`threads` slots always suffice). Scratch contents must never affect
-/// results — only capacity is reused — so the determinism contract of
-/// [`par_row_chunks_mut`] carries over unchanged.
+/// must provide at least as many slots as the call runs workers —
+/// `threads` slots always suffice on both backends. Scratch contents
+/// must never affect results — only capacity is reused — so the
+/// determinism contract of [`par_row_chunks_mut`] carries over
+/// unchanged even though slot→chunk assignment is nondeterministic
+/// under stealing.
 pub fn par_row_chunks_scratch_mut<T, S, F>(
+    data: &mut [T],
+    width: usize,
+    min_rows: usize,
+    threads: usize,
+    scratch: &mut [S],
+    f: F,
+) where
+    T: Send,
+    S: Send,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
+    par_row_chunks_scratch_mut_on(backend(), data, width, min_rows, threads, scratch, f);
+}
+
+/// [`par_row_chunks_scratch_mut`] on an explicit backend.
+pub fn par_row_chunks_scratch_mut_on<T, S, F>(
+    backend: ParBackend,
     data: &mut [T],
     width: usize,
     min_rows: usize,
@@ -84,28 +182,59 @@ pub fn par_row_chunks_scratch_mut<T, S, F>(
     if rows == 0 {
         return;
     }
-    let n_chunks = threads.max(1).min((rows / min_rows.max(1)).max(1));
-    assert!(
-        scratch.len() >= n_chunks,
-        "par_row_chunks_scratch_mut: {} scratch slots for {n_chunks} chunks",
-        scratch.len()
-    );
-    if n_chunks == 1 {
-        f(0, data, &mut scratch[0]);
-        return;
+    let max_chunks = (rows / min_rows.max(1)).max(1);
+    match backend {
+        ParBackend::Static => {
+            let n_chunks = threads.max(1).min(max_chunks);
+            assert!(
+                scratch.len() >= n_chunks,
+                "par_row_chunks_scratch_mut: {} scratch slots for {n_chunks} chunks",
+                scratch.len()
+            );
+            if n_chunks == 1 {
+                f(0, data, &mut scratch[0]);
+                return;
+            }
+            static_exec(data, width, rows, n_chunks, scratch, &f);
+        }
+        ParBackend::Steal => {
+            // threads == 1 never touches the pool: the whole range runs
+            // inline (this is what keeps the zero-allocation decode pin
+            // valid on the steal backend too)
+            let n_chunks = if threads <= 1 { 1 } else { (threads * STEAL_OVERSUB).min(max_chunks) };
+            let workers = threads.max(1).min(n_chunks);
+            assert!(
+                scratch.len() >= workers,
+                "par_row_chunks_scratch_mut: {} scratch slots for {workers} workers",
+                scratch.len()
+            );
+            if n_chunks == 1 {
+                f(0, data, &mut scratch[0]);
+                return;
+            }
+            steal_exec(data, width, rows, n_chunks, &mut scratch[..workers], &f);
+        }
     }
+}
+
+/// Static backend: equal row-count chunks on scoped threads (chunk `i`
+/// gets `scratch[i]`; the first chunk runs on the calling thread).
+fn static_exec<T, S, F>(data: &mut [T], width: usize, rows: usize, n_chunks: usize, scratch: &mut [S], f: &F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
     let rows_per = (rows + n_chunks - 1) / n_chunks;
     let (first, mut rest) = data.split_at_mut(rows_per.min(rows) * width);
     let (s_first, mut s_rest) = scratch.split_first_mut().expect("scratch slot for chunk 0");
     std::thread::scope(|scope| {
-        let f = &f;
         let mut row0 = rows_per.min(rows);
         while !rest.is_empty() {
             let take = rows_per.min(rest.len() / width);
             let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * width);
             rest = tail;
-            let (slot, s_tail) =
-                std::mem::take(&mut s_rest).split_first_mut().expect("scratch slot for chunk");
+            let (slot, s_tail) = std::mem::take(&mut s_rest).split_first_mut().expect("scratch slot for chunk");
             s_rest = s_tail;
             let r0 = row0;
             row0 += take;
@@ -116,9 +245,74 @@ pub fn par_row_chunks_scratch_mut<T, S, F>(
     });
 }
 
+/// Shared view of the fixed chunk grid for the steal backend. Chunk `c`
+/// covers rows `[c·rows_per, min((c+1)·rows_per, rows))`; handing each
+/// index out exactly once (the atomic counter in [`steal_exec`]) makes
+/// the produced `&mut` chunk slices disjoint.
+struct ChunkGrid<T> {
+    data: *mut T,
+    width: usize,
+    rows: usize,
+    rows_per: usize,
+}
+
+// SAFETY: the grid is only a sized pointer; disjointness of the chunks
+// produced from it is guaranteed by unique chunk-index claims, and the
+// row payload crosses threads, hence T: Send.
+unsafe impl<T: Send> Sync for ChunkGrid<T> {}
+
+/// Steal backend: `slots.len()` worker tasks spread over a rayon
+/// join-tree (so idle pool threads steal whole workers), each claiming
+/// grid chunks from a shared counter until the grid is drained. Each
+/// worker keeps its one scratch slot across every chunk it runs.
+fn steal_exec<T, S, F>(data: &mut [T], width: usize, rows: usize, n_chunks: usize, slots: &mut [S], f: &F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
+    let rows_per = (rows + n_chunks - 1) / n_chunks;
+    let grid = ChunkGrid { data: data.as_mut_ptr(), width, rows, rows_per };
+    let next = AtomicUsize::new(0);
+    let grid = &grid;
+    let next = &next;
+    let run = move |slot: &mut S| loop {
+        let c = next.fetch_add(1, Ordering::Relaxed);
+        let r0 = c * grid.rows_per;
+        if r0 >= grid.rows {
+            break;
+        }
+        let r1 = (r0 + grid.rows_per).min(grid.rows);
+        // SAFETY: `fetch_add` hands each chunk index to exactly one
+        // worker, chunk row ranges are disjoint by construction, and the
+        // borrow of `data` is held for the whole call — so this slice is
+        // the only live reference to its rows.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(grid.data.add(r0 * grid.width), (r1 - r0) * grid.width) };
+        f(r0, chunk, slot);
+    };
+    join_slots(slots, &run);
+}
+
+/// Recursively split the worker slots across `rayon::join` so each leaf
+/// owns exactly one `&mut` slot. join is stack-allocated in rayon, so a
+/// steady-state call adds no per-chunk heap traffic of its own.
+fn join_slots<S: Send>(slots: &mut [S], run: &(impl Fn(&mut S) + Sync)) {
+    match slots {
+        [] => {}
+        [one] => run(one),
+        many => {
+            let mid = many.len() / 2;
+            let (l, r) = many.split_at_mut(mid);
+            rayon::join(|| join_slots(l, run), || join_slots(r, run));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const BACKENDS: [ParBackend; 2] = [ParBackend::Static, ParBackend::Steal];
 
     #[test]
     fn thread_budget_is_positive() {
@@ -126,20 +320,57 @@ mod tests {
     }
 
     #[test]
+    fn backend_flag_parse_rule() {
+        assert_eq!(backend_flag(None), ParBackend::Steal, "unset defaults to stealing");
+        assert_eq!(backend_flag(Some("static")), ParBackend::Static);
+        assert_eq!(backend_flag(Some(" STATIC ")), ParBackend::Static);
+        assert_eq!(backend_flag(Some("steal")), ParBackend::Steal);
+        assert_eq!(backend_flag(Some("")), ParBackend::Steal);
+        assert_eq!(backend_flag(Some("nonsense")), ParBackend::Steal, "only literal 'static' opts out");
+    }
+
+    #[test]
     fn chunks_cover_every_row_exactly_once() {
-        for rows in [0usize, 1, 7, 16, 17, 1000] {
-            for threads in [1usize, 2, 3, 8] {
-                let mut data = vec![0u32; rows * 4];
-                par_row_chunks_mut(&mut data, 4, 1, threads, |r0, chunk| {
-                    for (i, row) in chunk.chunks_exact_mut(4).enumerate() {
-                        for v in row.iter_mut() {
-                            *v += (r0 + i) as u32 + 1; // +1 so row 0 counts
+        for backend in BACKENDS {
+            for rows in [0usize, 1, 7, 16, 17, 1000] {
+                for threads in [1usize, 2, 3, 8] {
+                    let mut data = vec![0u32; rows * 4];
+                    par_row_chunks_mut_on(backend, &mut data, 4, 1, threads, |r0, chunk| {
+                        for (i, row) in chunk.chunks_exact_mut(4).enumerate() {
+                            for v in row.iter_mut() {
+                                *v += (r0 + i) as u32 + 1; // +1 so row 0 counts
+                            }
                         }
+                    });
+                    for (i, v) in data.iter().enumerate() {
+                        assert_eq!(*v, (i / 4) as u32 + 1, "{backend:?} row {} touched wrong", i / 4);
                     }
-                });
-                for (i, v) in data.iter().enumerate() {
-                    assert_eq!(*v, (i / 4) as u32 + 1, "row {} touched wrong", i / 4);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn backends_produce_identical_results() {
+        // a row kernel that is a pure function of (row index, input)
+        // must agree bitwise across backends and thread budgets even
+        // though their chunk grids differ
+        let run = |backend: ParBackend, threads: usize| -> Vec<f32> {
+            let mut data: Vec<f32> = vec![0.0; 103 * 3];
+            par_row_chunks_mut_on(backend, &mut data, 3, 1, threads, |r0, chunk| {
+                for (i, row) in chunk.chunks_exact_mut(3).enumerate() {
+                    let r = (r0 + i) as f32;
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = (r * 1.7 + j as f32).sin();
+                    }
+                }
+            });
+            data
+        };
+        let want = run(ParBackend::Static, 1);
+        for backend in BACKENDS {
+            for threads in [1usize, 2, 4, 8] {
+                assert_eq!(run(backend, threads), want, "{backend:?} t={threads}");
             }
         }
     }
@@ -147,22 +378,25 @@ mod tests {
     #[test]
     fn min_rows_limits_chunk_count() {
         // 10 rows with min 8 → a single chunk even with many threads
-        let mut data = vec![0u8; 10];
-        let hits = std::sync::atomic::AtomicUsize::new(0);
-        par_row_chunks_mut(&mut data, 1, 8, 16, |_, _| {
-            hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        });
-        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+        for backend in BACKENDS {
+            let mut data = vec![0u8; 10];
+            let hits = std::sync::atomic::AtomicUsize::new(0);
+            par_row_chunks_mut_on(backend, &mut data, 1, 8, 16, |_, _| {
+                hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1, "{backend:?}");
+        }
     }
 
     #[test]
-    fn scratch_slots_are_per_chunk_and_reused() {
-        // every chunk sees exactly one scratch slot; slot contents from a
-        // prior call survive (capacity reuse is the whole point)
+    fn static_scratch_slots_are_per_chunk_and_reused() {
+        // static backend: every chunk sees exactly one scratch slot;
+        // slot contents from a prior call survive (capacity reuse is the
+        // whole point)
         let mut data = vec![0u32; 64];
         let mut bufs: Vec<Vec<u32>> = (0..4).map(|_| Vec::with_capacity(8)).collect();
         for pass in 0..2u32 {
-            par_row_chunks_scratch_mut(&mut data, 4, 1, 4, &mut bufs, |r0, chunk, buf| {
+            par_row_chunks_scratch_mut_on(ParBackend::Static, &mut data, 4, 1, 4, &mut bufs, |r0, chunk, buf| {
                 buf.push(pass);
                 for (i, row) in chunk.chunks_exact_mut(4).enumerate() {
                     row.fill((r0 + i) as u32 + pass);
@@ -181,23 +415,55 @@ mod tests {
     }
 
     #[test]
+    fn steal_slots_are_worker_keyed() {
+        // the steal grid is finer than the worker count, so a worker
+        // reuses its slot across the chunks it claims: the per-slot chunk
+        // tallies must sum to the grid size, nothing may run on a slot
+        // index ≥ threads, and every row is still touched exactly once
+        let (rows, threads) = (64usize, 4usize);
+        let mut data = vec![0u32; rows];
+        let mut tallies = vec![0usize; threads];
+        par_row_chunks_scratch_mut_on(ParBackend::Steal, &mut data, 1, 1, threads, &mut tallies, |r0, chunk, tally| {
+            *tally += 1;
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += (r0 + i) as u32 + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1, "row {i} touched wrong");
+        }
+        let total: usize = tallies.iter().sum();
+        assert_eq!(total, threads * STEAL_OVERSUB, "every grid chunk claimed exactly once");
+    }
+
+    #[test]
     #[should_panic(expected = "scratch slots")]
     fn scratch_shortfall_panics() {
         let mut data = vec![0u8; 32];
         let mut bufs = [0u8; 1];
-        par_row_chunks_scratch_mut(&mut data, 1, 1, 8, &mut bufs, |_, _, _| {});
+        par_row_chunks_scratch_mut_on(ParBackend::Steal, &mut data, 1, 1, 8, &mut bufs, |_, _, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "scratch slots")]
+    fn static_scratch_shortfall_panics() {
+        let mut data = vec![0u8; 32];
+        let mut bufs = [0u8; 1];
+        par_row_chunks_scratch_mut_on(ParBackend::Static, &mut data, 1, 1, 8, &mut bufs, |_, _, _| {});
     }
 
     #[test]
     fn first_row_indices_are_consistent() {
-        let mut data: Vec<usize> = vec![0; 103];
-        par_row_chunks_mut(&mut data, 1, 1, 8, |r0, chunk| {
-            for (i, v) in chunk.iter_mut().enumerate() {
-                *v = r0 + i;
+        for backend in BACKENDS {
+            let mut data: Vec<usize> = vec![0; 103];
+            par_row_chunks_mut_on(backend, &mut data, 1, 1, 8, |r0, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = r0 + i;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i, "{backend:?}");
             }
-        });
-        for (i, v) in data.iter().enumerate() {
-            assert_eq!(*v, i);
         }
     }
 }

@@ -20,7 +20,7 @@ use kurtail::tensor::matmul::{
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
 use kurtail::serve::{
-    Engine, Int4Weight, KvPool, QuantActs, SeqKv, ServeConfig, ServeModel, ServeQuantSpec,
+    Engine, Int4Weight, KvPool, ParBackend, QuantActs, SeqKv, ServeConfig, ServeModel, ServeQuantSpec,
 };
 use kurtail::tensor::stats::{kurtail_loss, kurtosis};
 use kurtail::tensor::Tensor;
@@ -563,6 +563,67 @@ fn prop_serve_arena_and_panel_streams_bitwise() {
                              arena={arena} panel={panel} int={int_gemm}"
                         ),
                     )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serve_streams_bitwise_across_backends_and_layouts() {
+    // the work-stealing runtime and the fused column-major epilogues
+    // are performance knobs only: streams with the static backend and
+    // the PR-4 serial-flip epilogue — at one lane, one thread — must
+    // equal every {backend} × {epilogue} × {threads 1,4,8} × {lanes
+    // 1,16} combination, on both GEMM paths
+    let meta = serve_test_meta();
+    check(3, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..3)
+            .map(|_| {
+                let p = 1 + rng.below(4);
+                let toks = (0..p).map(|_| rng.below(meta.vocab) as i32).collect();
+                (toks, 1 + rng.below(5))
+            })
+            .collect();
+        for int_gemm in [true, false] {
+            let run = |lanes: usize, threads: usize, backend: ParBackend, fused: bool| -> Vec<Vec<i32>> {
+                let cfg = ServeConfig {
+                    max_lanes: lanes,
+                    block_tokens: 2,
+                    kv_quant: KvQuant::Asym4,
+                    threads: Some(threads),
+                    int_gemm: Some(int_gemm),
+                    arena: Some(true),
+                    par_backend: Some(backend),
+                    fused_epilogue: Some(fused),
+                    ..ServeConfig::default()
+                };
+                let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+                for (toks, n) in &reqs {
+                    eng.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+                }
+                eng.run().unwrap().into_iter().map(|c| c.tokens).collect()
+            };
+            let base = run(1, 1, ParBackend::Static, false);
+            for backend in [ParBackend::Static, ParBackend::Steal] {
+                for fused in [false, true] {
+                    for (lanes, threads) in [(1usize, 4usize), (16, 1), (16, 8)] {
+                        prop_assert(
+                            run(lanes, threads, backend, fused) == base,
+                            &format!(
+                                "serve streams bitwise at lanes={lanes} threads={threads} \
+                                 {backend:?} fused={fused} int={int_gemm}"
+                            ),
+                        )?;
+                    }
                 }
             }
         }

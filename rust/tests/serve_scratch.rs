@@ -11,22 +11,69 @@
 //! Deliberately a single `#[test]`: the allocation counter is global to
 //! the process, so a concurrently running sibling test would pollute
 //! the measurement window. The assertion runs at `threads = 1` because
-//! scoped thread *spawns* allocate by design (stacks, join state) — the
-//! kernels themselves never do, which the bitwise-equality properties in
-//! `tests/props.rs` cover across thread counts.
+//! parallel dispatch allocates by design above that — scoped thread
+//! *spawns* on the static backend (stacks, join state), pool job
+//! injection on the work-stealing backend — while the kernels
+//! themselves never do (at `threads = 1` the steal backend runs the
+//! whole row range inline and never touches the rayon pool). The
+//! bitwise-equality properties in `tests/props.rs` cover thread counts
+//! and backends.
+//!
+//! Both epilogue/backend profiles are measured: the work-stealing +
+//! fused-column-major default, and the static + PR-4 serial-flip A/B
+//! baseline. The scratch decay stays armed at its default — steady
+//! state at a constant lane count never dips below the arena's
+//! high-water mark, so decay must not fire (and must not allocate).
 
 mod common;
 use common::serve_test_meta;
 
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
-use kurtail::serve::{Engine, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::serve::{Engine, ParBackend, ServeConfig, ServeModel, ServeQuantSpec};
 use kurtail::tensor::hadamard::random_hadamard;
 use kurtail::util::alloc::CountingAlloc;
 use kurtail::util::Rng;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Warm an engine to steady state and assert a 6-step decode window
+/// performs zero heap allocations, then drain it clean.
+fn assert_zero_alloc_window(model: &ServeModel, cfg: &ServeConfig, label: &str) {
+    let mut eng = Engine::new(model.clone(), cfg).unwrap();
+    assert!(eng.arena());
+    assert!(eng.panel_cache_bytes() > 0, "panel cache should be built");
+    eng.submit_tokens(vec![1, 2], 12, 0.0, 7).unwrap();
+    eng.submit_tokens(vec![3], 12, 0.0, 7).unwrap();
+
+    // step 1 admits + prefills both lanes (allocates: lane setup, KV
+    // block lists); two more decode steps warm every arena buffer
+    assert!(eng.step().unwrap());
+    assert!(eng.step().unwrap());
+    assert!(eng.step().unwrap());
+    assert_eq!(eng.stats.admitted, 2);
+    let tokens_before = eng.stats.decode_tokens;
+
+    let snapshot = ALLOC.allocations();
+    for i in 0..6 {
+        assert!(eng.step().unwrap(), "{label}: lanes must stay live through window step {i}");
+    }
+    let delta = ALLOC.allocations() - snapshot;
+    assert_eq!(
+        delta, 0,
+        "{label}: steady-state decode must not touch the heap ({delta} allocation events in 6 steps)"
+    );
+    assert_eq!(eng.stats.decode_tokens - tokens_before, 12, "6 steps × 2 live lanes");
+
+    // and the engine still finishes cleanly afterwards
+    let done = eng.run().unwrap();
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.tokens.len(), c.prompt_len + 12);
+    }
+    assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+}
 
 #[test]
 fn steady_state_decode_is_allocation_free() {
@@ -53,36 +100,18 @@ fn steady_state_decode_is_allocation_free() {
         panel_cache: Some(usize::MAX),
         ..ServeConfig::default()
     };
-    let mut eng = Engine::new(model, &cfg).unwrap();
-    assert!(eng.arena());
-    assert!(eng.panel_cache_bytes() > 0, "panel cache should be built");
-    eng.submit_tokens(vec![1, 2], 12, 0.0, 7).unwrap();
-    eng.submit_tokens(vec![3], 12, 0.0, 7).unwrap();
-
-    // step 1 admits + prefills both lanes (allocates: lane setup, KV
-    // block lists); two more decode steps warm every arena buffer
-    assert!(eng.step().unwrap());
-    assert!(eng.step().unwrap());
-    assert!(eng.step().unwrap());
-    assert_eq!(eng.stats.admitted, 2);
-    let tokens_before = eng.stats.decode_tokens;
-
-    let snapshot = ALLOC.allocations();
-    for i in 0..6 {
-        assert!(eng.step().unwrap(), "lanes must stay live through window step {i}");
-    }
-    let delta = ALLOC.allocations() - snapshot;
-    assert_eq!(
-        delta, 0,
-        "steady-state decode must not touch the heap ({delta} allocation events in 6 steps)"
-    );
-    assert_eq!(eng.stats.decode_tokens - tokens_before, 12, "6 steps × 2 live lanes");
-
-    // and the engine still finishes cleanly afterwards
-    let done = eng.run().unwrap();
-    assert_eq!(done.len(), 2);
-    for c in &done {
-        assert_eq!(c.tokens.len(), c.prompt_len + 12);
-    }
-    assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    // the serving default: work-stealing runtime + fused epilogues
+    let steal = ServeConfig {
+        par_backend: Some(ParBackend::Steal),
+        fused_epilogue: Some(true),
+        ..cfg.clone()
+    };
+    assert_zero_alloc_window(&model, &steal, "steal+fused");
+    // the A/B baseline: static runtime + PR-4 serial-flip epilogue
+    let legacy = ServeConfig {
+        par_backend: Some(ParBackend::Static),
+        fused_epilogue: Some(false),
+        ..cfg
+    };
+    assert_zero_alloc_window(&model, &legacy, "static+serial");
 }

@@ -25,6 +25,6 @@ grep -o '"kernel": "[^"]*"\|"dim": [0-9]*\|"speedup": [0-9.]*' "$KURTAIL_BENCH_J
 echo "wrote $KURTAIL_BENCH_JSON"
 
 echo "--- BENCH_serve.json summary ---"
-grep -o '"lanes": [0-9]*\|"tok_s": [0-9.]*\|"speedup_vs_lane1": [0-9.]*\|"int_gemm_speedup": [0-9.]*\|"arena_speedup": [0-9.]*\|"reduction": [0-9.]*' \
-  "$KURTAIL_BENCH_SERVE_JSON" | paste - - - - - || true
+grep -o '"lanes": [0-9]*\|"tok_s": [0-9.]*\|"speedup_vs_lane1": [0-9.]*\|"int_gemm_speedup": [0-9.]*\|"arena_speedup": [0-9.]*\|"epilogue_fused_speedup": [0-9.]*\|"steal_speedup": [0-9.]*\|"reduction": [0-9.]*' \
+  "$KURTAIL_BENCH_SERVE_JSON" | paste - - - - - - - || true
 echo "wrote $KURTAIL_BENCH_SERVE_JSON"

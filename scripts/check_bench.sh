@@ -12,6 +12,10 @@
 #              runs[lanes=16].int_gemm_speedup   (int vs f32-dequant GEMM)
 #              runs[lanes=16].arena_speedup      (arena+panel vs the PR-3
 #                                                 fresh-alloc decode path)
+#              runs[lanes=16].epilogue_fused_speedup
+#                                                (fused column-major GEMM
+#                                                 epilogues vs the PR-4
+#                                                 serial-flip path)
 #
 # Usage:  scripts/check_bench.sh            # gate current vs baseline
 #         scripts/check_bench.sh --update   # refresh BENCH_baseline/
@@ -74,6 +78,7 @@ metrics = [
     ("serve: lanes=16 speedup_vs_lane1", serve_run_metric, (cur_s, 16, "speedup_vs_lane1"), (base_s, 16, "speedup_vs_lane1")),
     ("serve: lanes=16 int_gemm_speedup", serve_run_metric, (cur_s, 16, "int_gemm_speedup"), (base_s, 16, "int_gemm_speedup")),
     ("serve: lanes=16 arena_speedup", serve_run_metric, (cur_s, 16, "arena_speedup"), (base_s, 16, "arena_speedup")),
+    ("serve: lanes=16 epilogue_fused_speedup", serve_run_metric, (cur_s, 16, "epilogue_fused_speedup"), (base_s, 16, "epilogue_fused_speedup")),
 ]
 
 failures = []
