@@ -30,16 +30,30 @@
 //!   isolates one knob so one knob's gain can't mask or fake another's
 //!   regression).
 //!
+//! Each lane count then runs an **open-loop Poisson load** through the
+//! daemon host (`spawn_host`, no socket in the path): seeded
+//! exponential interarrivals at ~1.5× the measured closed-loop
+//! capacity, one waiter thread per request, a bounded admission queue
+//! (`queue_cap = 2 × lanes`) shedding the overload. Recorded per lane
+//! count: `offered_req_s`, `sustained_req_s`, `p50_ttft_ms` /
+//! `p99_ttft_ms` (time from submit to first streamed token) and
+//! `shed_rate` (`scripts/check_bench.sh` gates `p99_ttft_ms` at
+//! lanes = 16 as a *ceiling* — latency regressions fail, lower is
+//! better).
+//!
 //! Writes `BENCH_serve.json` (path override: `KURTAIL_BENCH_SERVE_JSON`)
 //! with tokens/sec at 1/4/16 concurrent sequences and KV bytes/token for
 //! the paged 4-bit pool vs the dense f32 cache. `scripts/bench.sh`
 //! drops it at the repo root, next to `BENCH_kernels.json`.
 
-use std::time::Instant;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use kurtail::config::{KvQuant, QuantScheme};
 use kurtail::model::Params;
 use kurtail::runtime::{ConfigMeta, ParamSpec};
+use kurtail::serve::daemon::{spawn_host, Event, HostConfig, SubmitReq};
 use kurtail::serve::{Engine, ParBackend, ServeConfig, ServeModel, ServeQuantSpec};
 use kurtail::tensor::hadamard::random_hadamard;
 use kurtail::util::json::{arr, num, obj, s as js, Json};
@@ -142,6 +156,106 @@ fn timed_run(
     timed_run_cfg(model, kv, lanes, requests, int_gemm, arena, panel_cache, None, None)
 }
 
+/// Open-loop Poisson load through the daemon host at ~1.5× the measured
+/// closed-loop capacity. Returns the serving-latency metrics merged
+/// into the lane's run row.
+fn poisson_load(model: &ServeModel, lanes: usize, tok_s: f64) -> Vec<(&'static str, Json)> {
+    const N_REQUESTS: usize = 48;
+    let cfg = ServeConfig {
+        max_lanes: lanes,
+        kv_quant: KvQuant::Asym4,
+        int_gemm: Some(true),
+        arena: Some(true),
+        fused_epilogue: Some(true),
+        par_backend: Some(ParBackend::Steal),
+        queue_cap: 2 * lanes,
+        ..ServeConfig::default()
+    };
+    let eng = Engine::new(model.clone(), &cfg).expect("engine");
+    let (host, handle) = spawn_host(eng, HostConfig::default());
+    // a request is PROMPT+NEW tokens of work, so closed-loop capacity in
+    // req/s is tok_s over that; offer 1.5× to force queueing + shedding
+    let capacity_req_s = tok_s / (PROMPT_TOKENS + NEW_TOKENS) as f64;
+    let offered_req_s = 1.5 * capacity_req_s;
+    let mut gaps = Rng::new(0xA11CE);
+    let t_start = Instant::now();
+    let mut workers = Vec::with_capacity(N_REQUESTS);
+    for i in 0..N_REQUESTS {
+        // exponential interarrival: -ln(1-u)/λ, u ∈ [0,1)
+        let gap = -(1.0 - gaps.uniform() as f64).ln() / offered_req_s;
+        thread::sleep(Duration::from_secs_f64(gap));
+        let host = host.clone();
+        workers.push(thread::spawn(move || {
+            let prompt: Vec<i32> =
+                (0..PROMPT_TOKENS).map(|t| ((i * 31 + t * 7) % 256) as i32).collect();
+            let (tx, rx) = mpsc::channel();
+            let t0 = Instant::now();
+            let req = SubmitReq {
+                tokens: prompt,
+                n_tokens: NEW_TOKENS,
+                temp: 0.0,
+                seed: 0xC0FFEE + i as u64,
+                stop: None,
+                tenant: "bench".into(),
+                deadline: None,
+                events: tx,
+            };
+            if host.submit(req).is_err() {
+                return (None, false); // shed at admission
+            }
+            let mut ttft = None;
+            loop {
+                match rx.recv() {
+                    Ok(Event::Token(_)) => {
+                        if ttft.is_none() {
+                            ttft = Some(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                    }
+                    Ok(Event::Done(_)) => return (ttft, true),
+                    Ok(Event::Failed(_)) | Err(_) => return (ttft, false),
+                }
+            }
+        }));
+    }
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut completed = 0usize;
+    for w in workers {
+        let (ttft, ok) = w.join().expect("load worker");
+        if let Some(t) = ttft {
+            ttfts.push(t);
+        }
+        if ok {
+            completed += 1;
+        }
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+    host.drain();
+    handle.join().expect("engine thread");
+    ttfts.sort_by(f64::total_cmp);
+    let pct = |p: f64| -> f64 {
+        if ttfts.is_empty() {
+            return 0.0;
+        }
+        ttfts[((ttfts.len() - 1) as f64 * p).round() as usize]
+    };
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let shed_rate = (N_REQUESTS - completed) as f64 / N_REQUESTS as f64;
+    let sustained_req_s = completed as f64 / wall;
+    println!(
+        "poisson lanes={lanes:<2}: offered {offered_req_s:.1} req/s, sustained {sustained_req_s:.1} req/s, \
+         ttft p50 {p50:.0} ms p99 {p99:.0} ms, shed {:.0}% ({completed}/{N_REQUESTS} completed)",
+        shed_rate * 100.0
+    );
+    vec![
+        ("offered_req_s", num(offered_req_s)),
+        ("sustained_req_s", num(sustained_req_s)),
+        ("completed", num(completed as f64)),
+        ("p50_ttft_ms", num(p50)),
+        ("p99_ttft_ms", num(p99)),
+        ("shed_rate", num(shed_rate)),
+    ]
+}
+
 fn main() {
     let meta = bench_meta();
     let mut rng = Rng::new(0);
@@ -237,7 +351,7 @@ fn main() {
              {steal_speedup:.2}x vs static runtime {static_tok_s:.1} tok/s; \
              int-vs-f32 on the alloc profile: {int_speedup:.2}x over {f32_tok_s:.1} tok/s)"
         );
-        runs.push(obj(vec![
+        let mut row = vec![
             ("lanes", num(lanes as f64)),
             ("requests", num(REQUESTS as f64)),
             ("tokens", num(tokens as f64)),
@@ -253,7 +367,9 @@ fn main() {
             ("epilogue_fused_speedup", num(epilogue_speedup)),
             ("static_par_tok_s", num(static_tok_s)),
             ("steal_speedup", num(steal_speedup)),
-        ]));
+        ];
+        row.extend(poisson_load(&int4, lanes, tok_s));
+        runs.push(obj(row));
         last_eng = Some(eng);
     }
 

@@ -6,6 +6,7 @@
 //! kurtail quantize <model>   run the full PTQ pipeline for one method
 //! kurtail generate <model>   sample text through the (quantized) decode path
 //! kurtail serve <model>      continuous-batching INT4 serving over N requests
+//! kurtail daemon [<model>]   long-running HTTP serving daemon (drains on SIGTERM)
 //! kurtail list               show artifacts + model configs
 //! ```
 //!
@@ -19,7 +20,8 @@ use kurtail::eval::evaluate;
 use kurtail::exp::{self, ExpCtx};
 use kurtail::model::generate::Generator;
 use kurtail::runtime::Runtime;
-use kurtail::serve::{ParBackend, ServeConfig};
+use kurtail::serve::daemon::{fault::FaultSpec, signal, synthetic_model};
+use kurtail::serve::{Daemon, DaemonConfig, ParBackend, ServeConfig};
 
 struct Args {
     cmd: String,
@@ -38,6 +40,17 @@ struct Args {
     /// `serve`: arena decay idle-step count (None follows
     /// `KURTAIL_SCRATCH_DECAY`; 0 disables).
     scratch_decay: Option<usize>,
+    /// `daemon`: bind address.
+    addr: String,
+    /// `daemon`: serve a self-contained random-init model (no
+    /// artifacts, no calibration) — smoke tests and load generators.
+    synthetic: bool,
+    /// `daemon`: admission-queue bound (0 = unbounded).
+    queue_cap: usize,
+    /// `daemon`: per-tenant in-flight cap (0 = unbounded).
+    tenant_cap: usize,
+    /// `daemon`: default request deadline in ms (0 = none).
+    deadline_ms: u64,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -55,6 +68,11 @@ fn parse_args() -> Result<Args, String> {
         requests: 8,
         par_backend: None,
         scratch_decay: None,
+        addr: "127.0.0.1:8080".into(),
+        synthetic: false,
+        queue_cap: 64,
+        tenant_cap: 0,
+        deadline_ms: 0,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -104,6 +122,17 @@ fn parse_args() -> Result<Args, String> {
                 a.scratch_decay =
                     Some(take("--scratch-decay")?.parse().map_err(|e| format!("--scratch-decay: {e}"))?)
             }
+            "--addr" => a.addr = take("--addr")?,
+            "--synthetic" => a.synthetic = true,
+            "--queue-cap" => {
+                a.queue_cap = take("--queue-cap")?.parse().map_err(|e| format!("--queue-cap: {e}"))?
+            }
+            "--tenant-cap" => {
+                a.tenant_cap = take("--tenant-cap")?.parse().map_err(|e| format!("--tenant-cap: {e}"))?
+            }
+            "--deadline-ms" => {
+                a.deadline_ms = take("--deadline-ms")?.parse().map_err(|e| format!("--deadline-ms: {e}"))?
+            }
             flag if flag.starts_with("--") => return Err(format!("unknown flag '{flag}'")),
             pos => {
                 if a.cmd.is_empty() {
@@ -127,6 +156,8 @@ fn usage() {
          \x20 generate <model> [--method M] [--prompt P] [--tokens N]\n\
          \x20 serve <model> [--method M] [--lanes N] [--requests N] [--prompt P] [--tokens N]\n\
          \x20       [--par-backend static|steal] [--scratch-decay N]\n\
+         \x20 daemon [<model>|--synthetic] [--addr HOST:PORT] [--lanes N] [--queue-cap N]\n\
+         \x20       [--tenant-cap N] [--deadline-ms N]   (KURTAIL_FAULT arms fault injection)\n\
          \x20 list                             artifacts + configs"
     );
 }
@@ -270,6 +301,54 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 eng.model().dense_weight_bytes(),
                 eng.model().dense_weight_bytes() as f64 / eng.model().weight_bytes() as f64
             );
+            Ok(())
+        }
+        "daemon" => {
+            let fault = FaultSpec::from_env().map_err(|e| anyhow::anyhow!("KURTAIL_FAULT: {e}"))?;
+            let mut scfg = ServeConfig {
+                max_lanes: args.lanes,
+                par_backend: args.par_backend,
+                scratch_decay: args.scratch_decay,
+                ..ServeConfig::default()
+            };
+            let model = if args.synthetic {
+                synthetic_model(args.seed)?
+            } else {
+                let model = args.positional.first().map(|s| s.as_str()).unwrap_or("small");
+                let ctx = ExpCtx::new(&args.artifacts, args.fast, args.seed)?;
+                let pipe = ctx.pipeline(model)?;
+                let mut pcfg = PipelineConfig::new(model, args.method);
+                // same pack policy as `serve`: the engine's INT4 pack is
+                // the weight grid
+                pcfg.weight_quantizer = WeightQuantizer::None;
+                pcfg.seed = args.seed;
+                pcfg.calib.seed = args.seed;
+                if args.fast {
+                    pcfg.calib.n_samples = 64;
+                    pcfg.calib.iters = 30;
+                }
+                let (pm, _) = pipe.quantize(&pcfg)?;
+                pipe.serve_model(&pm, &mut scfg)?
+            };
+            let dcfg = DaemonConfig {
+                addr: args.addr.clone(),
+                queue_cap: args.queue_cap,
+                per_tenant_cap: args.tenant_cap,
+                default_deadline_ms: args.deadline_ms,
+                serve: scfg,
+                fault,
+            };
+            // install before spawn so a SIGTERM racing startup still
+            // lands a drain instead of the default kill
+            let stop = signal::install();
+            let daemon = Daemon::spawn(model, &dcfg)?;
+            println!("kurtail daemon listening on http://{}", daemon.addr());
+            println!("  POST /v1/generate | GET /stats | GET /healthz | POST /admin/drain");
+            if !dcfg.fault.is_none() {
+                println!("  fault injection armed: {:?}", dcfg.fault);
+            }
+            daemon.run_until(stop)?;
+            println!("drained clean");
             Ok(())
         }
         "list" => {

@@ -200,6 +200,19 @@ impl Pipeline {
         scfg: &crate::serve::ServeConfig,
     ) -> Result<crate::serve::Engine> {
         let mut scfg = scfg.clone();
+        let model = self.serve_model(pm, &mut scfg)?;
+        crate::serve::Engine::new(model, &scfg)
+    }
+
+    /// The model half of [`Self::serve_engine`], for callers that build
+    /// their own engine wrapper (the serving daemon): packs the weights
+    /// and — for the fp baseline — rewrites `scfg.kv_quant` to an fp KV
+    /// cache, so pass the same `scfg` on to the engine constructor.
+    pub fn serve_model(
+        &self,
+        pm: &PreparedModel,
+        scfg: &mut crate::serve::ServeConfig,
+    ) -> Result<crate::serve::ServeModel> {
         let spec = if pm.quantized {
             Some(crate::serve::ServeQuantSpec::paper_default(
                 pm.rots.r3.clone(),
@@ -212,7 +225,6 @@ impl Pipeline {
             scfg.kv_quant = crate::config::KvQuant::Fp;
             None
         };
-        let model = crate::serve::ServeModel::from_params(&pm.params, spec)?;
-        crate::serve::Engine::new(model, &scfg)
+        crate::serve::ServeModel::from_params(&pm.params, spec)
     }
 }

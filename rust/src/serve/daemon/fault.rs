@@ -1,0 +1,175 @@
+//! Deterministic, seeded fault injection for the serving daemon.
+//!
+//! `KURTAIL_FAULT=pool_exhaust=0.3,slow_step=10,drop_conn=0.5` (any
+//! subset, comma-separated) with `KURTAIL_FAULT_SEED=<u64>` arms three
+//! failure modes; unset means no faults. Every decision is a pure
+//! function of the seed (plus the per-request id or the per-step rng
+//! stream), so a fault run replays exactly — the foundation of the
+//! fault-suite assertion that completed streams stay bitwise identical
+//! to the in-process engine.
+//!
+//! * `pool_exhaust=P` — each engine step, with probability `P`, the
+//!   whole KV block budget is withheld from *admission* for that step
+//!   (`Engine::set_withheld_blocks`). Queued requests starve and shed;
+//!   live lanes keep their reservations, so the engine's
+//!   no-mid-flight-exhaustion invariant survives the fault. `P = 1`
+//!   blocks admission permanently — use `P < 1` so progress resumes.
+//! * `slow_step=MS` — every engine step sleeps `MS` milliseconds first
+//!   (latency fault: deadlines fire, queues back up, TTFT degrades).
+//! * `drop_conn=P` — with probability `P` per streaming request, the
+//!   daemon severs the client socket after a few tokens, exercising the
+//!   disconnect → cancel → block-reclaim path.
+
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Parsed fault configuration (see the module docs). `Default` = no
+/// faults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub pool_exhaust: f32,
+    pub slow_step_ms: u64,
+    pub drop_conn: f32,
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.pool_exhaust <= 0.0 && self.slow_step_ms == 0 && self.drop_conn <= 0.0
+    }
+
+    /// Parse a `KURTAIL_FAULT`-style spec string.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self, String> {
+        let mut out = Self { seed, ..Self::default() };
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| format!("fault '{part}': expected key=value"))?;
+            match key.trim() {
+                "pool_exhaust" => {
+                    out.pool_exhaust = val.trim().parse().map_err(|e| format!("pool_exhaust: {e}"))?
+                }
+                "slow_step" => out.slow_step_ms = val.trim().parse().map_err(|e| format!("slow_step: {e}"))?,
+                "drop_conn" => out.drop_conn = val.trim().parse().map_err(|e| format!("drop_conn: {e}"))?,
+                other => return Err(format!("unknown fault '{other}' (pool_exhaust/slow_step/drop_conn)")),
+            }
+        }
+        if !(0.0..=1.0).contains(&out.pool_exhaust) || !(0.0..=1.0).contains(&out.drop_conn) {
+            return Err("fault probabilities must be in [0, 1]".into());
+        }
+        Ok(out)
+    }
+
+    /// Read `KURTAIL_FAULT` / `KURTAIL_FAULT_SEED`; unset → no faults.
+    /// A malformed spec is a startup error, not a silent no-op.
+    pub fn from_env() -> Result<Self, String> {
+        match std::env::var("KURTAIL_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                let seed = std::env::var("KURTAIL_FAULT_SEED")
+                    .ok()
+                    .and_then(|s| s.trim().parse().ok())
+                    .unwrap_or(0);
+                Self::parse(&spec, seed)
+            }
+            _ => Ok(Self::none()),
+        }
+    }
+
+    /// `drop_conn` decision for one request: `Some(k)` severs the
+    /// stream after `k` tokens. A pure function of `(seed, id)`, so a
+    /// replay drops the same requests at the same points.
+    pub fn drop_after(&self, id: usize) -> Option<usize> {
+        if self.drop_conn <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(self.seed ^ 0xD809_C0FF ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if rng.uniform() < self.drop_conn {
+            Some(1 + rng.below(4))
+        } else {
+            None
+        }
+    }
+}
+
+/// The engine-thread side: one seeded rng stream drives the per-step
+/// decisions, so a given seed yields one reproducible fault timeline.
+pub struct FaultClock {
+    spec: FaultSpec,
+    rng: Rng,
+}
+
+impl FaultClock {
+    pub fn new(spec: FaultSpec) -> Self {
+        let rng = Rng::new(spec.seed ^ 0xFA_u64.wrapping_mul(0x9E3779B97F4A7C15));
+        Self { spec, rng }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Blocks to withhold from admission this step (`pool_exhaust`).
+    pub fn withhold_blocks(&mut self, max_blocks: usize) -> usize {
+        if self.spec.pool_exhaust > 0.0 && self.rng.uniform() < self.spec.pool_exhaust {
+            max_blocks
+        } else {
+            0
+        }
+    }
+
+    /// Injected latency per engine step (`slow_step`).
+    pub fn step_delay(&self) -> Option<Duration> {
+        (self.spec.slow_step_ms > 0).then(|| Duration::from_millis(self.spec.slow_step_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_and_partial_specs() {
+        let f = FaultSpec::parse("pool_exhaust=0.25, slow_step=10, drop_conn=0.5", 7).unwrap();
+        assert_eq!(f, FaultSpec { pool_exhaust: 0.25, slow_step_ms: 10, drop_conn: 0.5, seed: 7 });
+        let f = FaultSpec::parse("slow_step=3", 0).unwrap();
+        assert_eq!(f.slow_step_ms, 3);
+        assert!(f.pool_exhaust == 0.0 && f.drop_conn == 0.0);
+        assert!(FaultSpec::parse("", 0).unwrap().is_none());
+        assert!(FaultSpec::parse("bogus=1", 0).is_err());
+        assert!(FaultSpec::parse("drop_conn", 0).is_err());
+        assert!(FaultSpec::parse("pool_exhaust=1.5", 0).is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_in_the_seed() {
+        let f = FaultSpec { drop_conn: 0.7, seed: 42, ..FaultSpec::none() };
+        let per_id: Vec<Option<usize>> = (0..32).map(|id| f.drop_after(id)).collect();
+        assert_eq!(per_id, (0..32).map(|id| f.drop_after(id)).collect::<Vec<_>>());
+        assert!(per_id.iter().any(Option::is_some), "p=0.7 over 32 ids must drop some");
+        assert!(per_id.iter().any(Option::is_none), "…and keep some");
+        let g = FaultSpec { seed: 43, ..f.clone() };
+        assert_ne!(per_id, (0..32).map(|id| g.drop_after(id)).collect::<Vec<_>>(), "seed moves the timeline");
+
+        let spec = FaultSpec { pool_exhaust: 0.5, seed: 9, ..FaultSpec::none() };
+        let run = |spec: &FaultSpec| {
+            let mut c = FaultClock::new(spec.clone());
+            (0..64).map(|_| c.withhold_blocks(8)).collect::<Vec<_>>()
+        };
+        let a = run(&spec);
+        assert_eq!(a, run(&spec), "per-step withholding replays exactly");
+        assert!(a.iter().any(|&w| w == 8) && a.iter().any(|&w| w == 0));
+    }
+
+    #[test]
+    fn no_faults_by_default() {
+        let f = FaultSpec::none();
+        assert!(f.is_none());
+        assert_eq!(f.drop_after(3), None);
+        let mut c = FaultClock::new(f);
+        assert_eq!(c.withhold_blocks(100), 0);
+        assert_eq!(c.step_delay(), None);
+    }
+}

@@ -1,0 +1,218 @@
+//! Hand-rolled HTTP/1.1 plumbing for the daemon (the offline build has
+//! no HTTP crates). Scope: exactly what the daemon's API needs — a
+//! request parser (method + path + headers + `Content-Length` body,
+//! with size caps), plain responses, and `Transfer-Encoding: chunked`
+//! writers for per-token streaming. Connections are one-shot
+//! (`Connection: close`), which keeps the server loop trivial and the
+//! drain contract obvious: no idle keep-alive sockets to reap.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+use super::super::error::ServeError;
+
+/// Caps: a request line + headers beyond 16 KiB or a body beyond 1 MiB
+/// is rejected (the daemon serves token requests, not uploads).
+const MAX_HEAD: usize = 16 * 1024;
+const MAX_BODY: usize = 1024 * 1024;
+
+/// One parsed request.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Lower-cased names, trimmed values, in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn invalid(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Read and parse one request from the stream (blocking; honours the
+/// stream's read timeout).
+pub fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 1024];
+    let head_end = loop {
+        if let Some(p) = find_blank_line(&buf) {
+            break p;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err(invalid("request head too large"));
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed mid-request"));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| invalid("non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or_else(|| invalid("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| invalid("missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| invalid("missing path"))?.to_string();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        return Err(invalid("request body too large"));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed mid-body"));
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, headers, body })
+}
+
+/// `(status, reason, retryable)` for a [`ServeError`] — the daemon's
+/// single error→wire mapping. Retryable errors carry `Retry-After`.
+pub fn status_for(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::QueueFull { .. } => (429, "Too Many Requests"),
+        ServeError::PoolExhausted { .. } => (503, "Service Unavailable"),
+        ServeError::Draining => (503, "Service Unavailable"),
+        ServeError::RequestTooLarge { .. } => (413, "Payload Too Large"),
+        ServeError::Invalid(_) => (400, "Bad Request"),
+        ServeError::Deadline => (504, "Gateway Timeout"),
+        ServeError::Canceled => (499, "Client Closed Request"),
+        ServeError::Internal(_) => (500, "Internal Server Error"),
+    }
+}
+
+/// Write a complete response and flush. `extra` headers are emitted
+/// verbatim after the standard set.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Map a [`ServeError`] onto the wire: status from [`status_for`], a
+/// JSON body with the error kind/message, and `Retry-After: 1` on the
+/// retryable (backpressure) class.
+pub fn write_error(stream: &mut TcpStream, e: &ServeError) -> io::Result<()> {
+    let (status, reason) = status_for(e);
+    let retry: Vec<(&str, String)> =
+        if e.retryable() { vec![("Retry-After", "1".to_string())] } else { Vec::new() };
+    let body = format!("{{\"error\": \"{}\", \"message\": \"{}\"}}", e.kind(), e.to_string().replace('"', "'"));
+    write_response(stream, status, reason, "application/json", &retry, body.as_bytes())
+}
+
+/// Start a chunked (streaming) response.
+pub fn write_chunked_head(stream: &mut TcpStream, content_type: &str) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+/// One chunk (flushed: per-token streaming wants every token on the
+/// wire immediately, not sitting in a buffer).
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> io::Result<()> {
+    write!(stream, "{:x}\r\n", data.len())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// Terminate a chunked response.
+pub fn finish_chunks(stream: &mut TcpStream) -> io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn roundtrip(raw: &[u8]) -> io::Result<Request> {
+        // loop a real socket through the parser (TcpStream has no
+        // in-memory stand-in); the writer side closes after the payload
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let t = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(&raw).unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_request(&mut s);
+        t.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let req = roundtrip(b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"a\": 1}!").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("content-length"), Some("9"));
+        assert_eq!(req.body, b"{\"a\": 1}!");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = roundtrip(b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/stats");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_truncated_requests() {
+        assert!(roundtrip(b"GET /stats HTTP/1.1\r\nHost: x\r\n").is_err(), "no blank line");
+        assert!(roundtrip(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").is_err(), "short body");
+    }
+
+    #[test]
+    fn error_mapping_covers_backpressure_semantics() {
+        assert_eq!(status_for(&ServeError::QueueFull { cap: 1 }).0, 429);
+        assert_eq!(status_for(&ServeError::Draining).0, 503);
+        assert_eq!(status_for(&ServeError::RequestTooLarge { needed_blocks: 9, pool_blocks: 8 }).0, 413);
+        assert_eq!(status_for(&ServeError::Deadline).0, 504);
+        assert_eq!(status_for(&ServeError::Invalid("x".into())).0, 400);
+    }
+}

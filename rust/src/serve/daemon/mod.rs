@@ -1,0 +1,873 @@
+//! Long-running fault-tolerant serving front-end over [`Engine`].
+//!
+//! Layering (one engine thread, N connection threads):
+//!
+//! * [`Host`] — a clone-able handle to the engine thread. The engine is
+//!   owned by exactly one thread ([`run_host`]); every interaction is a
+//!   [`Cmd`] over an mpsc channel, and every accepted request streams
+//!   its tokens back over its own [`Event`] channel. Submits are a
+//!   rendezvous: the caller blocks until the engine accepted or shed
+//!   the request, so backpressure ([`ServeError::QueueFull`] and
+//!   friends) reaches the client synchronously.
+//! * [`Daemon`] — the TCP front-end: an accept loop that spawns one
+//!   detached thread per connection, a hand-rolled HTTP/1.1 layer
+//!   (`http.rs`), deterministic fault injection (`fault.rs`) and
+//!   SIGTERM-driven graceful drain (`signal.rs`).
+//!
+//! The daemon adds *no* model math of its own — completed token streams
+//! are bitwise identical to an in-process [`Engine::run`] over the same
+//! accepted submissions, faults or not (faults only move *admission*
+//! timing and client visibility, never sampling).
+//!
+//! Shutdown contract: [`Daemon::begin_drain`] (or SIGTERM via
+//! [`Daemon::run_until`], or `POST /admin/drain`) sheds the queue,
+//! rejects every new submit with [`ServeError::Draining`] (HTTP 503 +
+//! `Retry-After`), flips `/healthz` to 503, and lets live lanes run to
+//! completion. `/stats` stays reachable *during* the drain so an
+//! orchestrator can watch it converge; [`Daemon::join`] returns once
+//! the last lane retired and every thread exited. The engine thread
+//! breaks its loop only when draining *and* idle, so a drain never
+//! abandons a live stream.
+
+pub mod fault;
+pub mod http;
+pub mod signal;
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::calib::ByteTokenizer;
+use crate::model::Params;
+use crate::runtime::manifest::{ConfigMeta, ParamSpec};
+use crate::tensor::hadamard::random_hadamard;
+use crate::util::json::{self, Json};
+use crate::util::Rng;
+
+use super::engine::{Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
+use super::error::ServeError;
+use fault::{FaultClock, FaultSpec};
+use http::Request;
+
+// ---------------------------------------------------------------- host
+
+/// Per-request notifications from the engine thread to the connection
+/// that owns the request.
+#[derive(Debug)]
+pub enum Event {
+    /// One generated token (prefill's first sample included), in order.
+    Token(i32),
+    /// The request finished normally; carries the full completion
+    /// (prompt + generated tokens, decoded text).
+    Done(Completion),
+    /// The request ended without a completion (cancel, deadline, drain,
+    /// engine failure). Terminal.
+    Failed(ServeError),
+}
+
+/// An admission request handed to the engine thread.
+pub struct SubmitReq {
+    pub tokens: Vec<i32>,
+    pub n_tokens: usize,
+    pub temp: f32,
+    pub seed: u64,
+    pub stop: Option<i32>,
+    /// Admission-quota bucket (`HostConfig::per_tenant_cap`).
+    pub tenant: String,
+    /// Absolute deadline; the engine thread cancels the request (queued
+    /// or live) once it passes and emits [`Event::Failed`] `(Deadline)`.
+    pub deadline: Option<Instant>,
+    /// Where this request's [`Event`]s go.
+    pub events: Sender<Event>,
+}
+
+enum Cmd {
+    Submit(SubmitReq, SyncSender<Result<usize, ServeError>>),
+    Cancel(usize),
+    Drain,
+    Stats(SyncSender<StatsSnapshot>),
+}
+
+/// Engine-thread configuration (the non-HTTP half of [`DaemonConfig`]).
+#[derive(Clone, Debug, Default)]
+pub struct HostConfig {
+    /// Max in-flight (queued + live) requests per tenant; `0` = no
+    /// per-tenant bound. Rejections count as shed and surface as
+    /// [`ServeError::QueueFull`].
+    pub per_tenant_cap: usize,
+    /// Deterministic fault injection (`KURTAIL_FAULT`).
+    pub fault: FaultSpec,
+}
+
+/// Clone-able handle to the engine thread.
+#[derive(Clone)]
+pub struct Host {
+    tx: Sender<Cmd>,
+}
+
+impl Host {
+    /// Submit a request; blocks until the engine thread accepted or
+    /// shed it. After the engine thread exits (post-drain) every submit
+    /// reports [`ServeError::Draining`].
+    pub fn submit(&self, req: SubmitReq) -> Result<usize, ServeError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        if self.tx.send(Cmd::Submit(req, reply)).is_err() {
+            return Err(ServeError::Draining);
+        }
+        rx.recv().unwrap_or(Err(ServeError::Draining))
+    }
+
+    /// Cancel a request wherever it is; its owner sees
+    /// [`Event::Failed`] `(Canceled)` if it was still in flight.
+    pub fn cancel(&self, id: usize) {
+        let _ = self.tx.send(Cmd::Cancel(id));
+    }
+
+    /// Start a drain (shed queue, reject new submits, finish live
+    /// lanes).
+    pub fn drain(&self) {
+        let _ = self.tx.send(Cmd::Drain);
+    }
+
+    /// Snapshot the engine counters; [`ServeError::Draining`] once the
+    /// engine thread has exited.
+    pub fn stats(&self) -> Result<StatsSnapshot, ServeError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        if self.tx.send(Cmd::Stats(reply)).is_err() {
+            return Err(ServeError::Draining);
+        }
+        rx.recv().map_err(|_| ServeError::Draining)
+    }
+}
+
+/// One `/stats` observation of the engine thread.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub engine: EngineStats,
+    pub queued: usize,
+    pub live: usize,
+    pub free_blocks: usize,
+    pub max_blocks: usize,
+    pub committed_blocks: usize,
+    pub withheld_blocks: usize,
+    pub scratch_rows: usize,
+    pub panel_cache_bytes: usize,
+    pub draining: bool,
+    pub uptime_s: f64,
+    pub tok_s: f64,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let e = &self.engine;
+        let n = |v: u64| json::num(v as f64);
+        let u = |v: usize| json::num(v as f64);
+        json::obj(vec![
+            (
+                "engine",
+                json::obj(vec![
+                    ("steps", n(e.steps)),
+                    ("prefill_tokens", n(e.prefill_tokens)),
+                    ("decode_tokens", n(e.decode_tokens)),
+                    ("admitted", n(e.admitted)),
+                    ("retired", n(e.retired)),
+                    ("eos_retired", n(e.eos_retired)),
+                    ("shed", n(e.shed)),
+                    ("canceled", n(e.canceled)),
+                    ("peak_lanes", u(e.peak_lanes)),
+                ]),
+            ),
+            ("queued", u(self.queued)),
+            ("live", u(self.live)),
+            ("free_blocks", u(self.free_blocks)),
+            ("max_blocks", u(self.max_blocks)),
+            ("committed_blocks", u(self.committed_blocks)),
+            ("withheld_blocks", u(self.withheld_blocks)),
+            ("scratch_rows", u(self.scratch_rows)),
+            ("panel_cache_bytes", u(self.panel_cache_bytes)),
+            ("draining", Json::Bool(self.draining)),
+            ("uptime_s", json::num(self.uptime_s)),
+            ("tok_s", json::num(self.tok_s)),
+        ])
+    }
+}
+
+fn snapshot(engine: &Engine, started: Instant) -> StatsSnapshot {
+    let stats = engine.stats;
+    let uptime = started.elapsed().as_secs_f64();
+    let toks = (stats.prefill_tokens + stats.decode_tokens) as f64;
+    StatsSnapshot {
+        engine: stats,
+        queued: engine.queued(),
+        live: engine.live_lanes(),
+        free_blocks: engine.pool().free_blocks(),
+        max_blocks: engine.pool().max_blocks,
+        committed_blocks: engine.committed_blocks(),
+        withheld_blocks: engine.withheld_blocks(),
+        scratch_rows: engine.scratch_rows(),
+        panel_cache_bytes: engine.panel_cache_bytes(),
+        draining: engine.draining(),
+        uptime_s: uptime,
+        tok_s: if uptime > 0.0 { toks / uptime } else { 0.0 },
+    }
+}
+
+/// Spawn the engine thread and return its [`Host`] handle (public so
+/// the serve bench can drive the host without a socket in the path).
+pub fn spawn_host(engine: Engine, cfg: HostConfig) -> (Host, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let started = Instant::now();
+    let handle = thread::Builder::new()
+        .name("kurtail-engine".into())
+        .spawn(move || run_host(engine, cfg, rx, started))
+        .expect("spawn engine thread");
+    (Host { tx }, handle)
+}
+
+struct Tracked {
+    events: Sender<Event>,
+    tenant: String,
+    deadline: Option<Instant>,
+}
+
+fn finish(tracked: &mut HashMap<usize, Tracked>, tenants: &mut HashMap<String, usize>, id: usize, ev: Event) {
+    if let Some(t) = tracked.remove(&id) {
+        if let Some(n) = tenants.get_mut(&t.tenant) {
+            *n = n.saturating_sub(1);
+        }
+        // the owner may have hung up already; that's its problem
+        let _ = t.events.send(ev);
+    }
+}
+
+/// The engine thread: single owner of the [`Engine`], processing
+/// commands between steps. Exits when draining and idle (the clean
+/// path) or when every [`Host`] is gone and no work remains.
+fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Instant) {
+    let mut clock = FaultClock::new(cfg.fault.clone());
+    let max_blocks = engine.pool().max_blocks;
+    let mut tracked: HashMap<usize, Tracked> = HashMap::new();
+    let mut tenants: HashMap<String, usize> = HashMap::new();
+    let mut disconnects: Vec<usize> = Vec::new();
+    loop {
+        let idle = engine.queued() == 0 && engine.live_lanes() == 0;
+        if idle && engine.draining() {
+            break;
+        }
+        // gather commands: park briefly when idle, never block when
+        // lanes are live (steps must keep flowing)
+        let mut cmds: Vec<Cmd> = Vec::new();
+        if idle {
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(c) => cmds.push(c),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        while let Ok(c) = rx.try_recv() {
+            cmds.push(c);
+        }
+        for c in cmds {
+            match c {
+                Cmd::Submit(req, reply) => {
+                    let SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events } = req;
+                    let cap = cfg.per_tenant_cap;
+                    let res = if cap > 0 && tenants.get(&tenant).copied().unwrap_or(0) >= cap {
+                        engine.stats.shed += 1;
+                        Err(ServeError::QueueFull { cap })
+                    } else {
+                        engine.submit_tokens_stop(tokens, n_tokens, temp, seed, stop)
+                    };
+                    if let Ok(id) = &res {
+                        *tenants.entry(tenant.clone()).or_insert(0) += 1;
+                        tracked.insert(*id, Tracked { events, tenant, deadline });
+                    }
+                    let _ = reply.send(res);
+                }
+                Cmd::Cancel(id) => {
+                    if engine.cancel(id) {
+                        finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Canceled));
+                    }
+                }
+                Cmd::Drain => {
+                    for id in engine.begin_drain() {
+                        finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Draining));
+                    }
+                }
+                Cmd::Stats(reply) => {
+                    let _ = reply.send(snapshot(&engine, started));
+                }
+            }
+        }
+        // deadline sweep: cancel overdue requests wherever they are
+        let now = Instant::now();
+        let overdue: Vec<usize> = tracked
+            .iter()
+            .filter(|(_, t)| t.deadline.is_some_and(|d| now >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in overdue {
+            engine.cancel(id);
+            finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Deadline));
+        }
+        if engine.queued() == 0 && engine.live_lanes() == 0 {
+            continue;
+        }
+        // fault injection is a per-step decision so a given seed yields
+        // one reproducible timeline
+        if !clock.spec().is_none() {
+            engine.set_withheld_blocks(clock.withhold_blocks(max_blocks));
+            if let Some(d) = clock.step_delay() {
+                thread::sleep(d);
+            }
+        }
+        let step = engine.step_with(|id, tok| {
+            if let Some(t) = tracked.get(&id) {
+                if t.events.send(Event::Token(tok)).is_err() {
+                    disconnects.push(id);
+                }
+            }
+        });
+        if let Err(e) = step {
+            // the engine is poisoned — fail every in-flight request and
+            // exit; the daemon's accept side then reports Draining
+            let msg = format!("engine step failed: {e:#}");
+            for (_, t) in tracked.drain() {
+                let _ = t.events.send(Event::Failed(ServeError::Internal(msg.clone())));
+            }
+            return;
+        }
+        for c in engine.take_completions() {
+            let id = c.id;
+            finish(&mut tracked, &mut tenants, id, Event::Done(c));
+        }
+        // a dead Event receiver means the client hung up: reclaim the
+        // lane's blocks now instead of decoding into the void
+        for id in std::mem::take(&mut disconnects) {
+            engine.cancel(id);
+            finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Canceled));
+        }
+    }
+    for (_, t) in tracked.drain() {
+        let _ = t.events.send(Event::Failed(ServeError::Draining));
+    }
+}
+
+// -------------------------------------------------------------- daemon
+
+/// Daemon configuration: the HTTP front-end plus the engine knobs.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address; port `0` picks a free port (see [`Daemon::addr`]).
+    pub addr: String,
+    /// Engine admission-queue bound (routed into
+    /// [`ServeConfig::queue_cap`]; the backpressure signal).
+    pub queue_cap: usize,
+    /// Per-tenant in-flight cap ([`HostConfig::per_tenant_cap`]).
+    pub per_tenant_cap: usize,
+    /// Default request deadline in ms when the body carries none
+    /// (`0` = no deadline).
+    pub default_deadline_ms: u64,
+    pub serve: ServeConfig,
+    pub fault: FaultSpec,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            queue_cap: 64,
+            per_tenant_cap: 0,
+            default_deadline_ms: 0,
+            serve: ServeConfig::default(),
+            fault: FaultSpec::none(),
+        }
+    }
+}
+
+/// The running daemon: engine thread + accept thread.
+pub struct Daemon {
+    addr: SocketAddr,
+    host: Host,
+    draining: Arc<AtomicBool>,
+    stopped: Arc<AtomicBool>,
+    engine_thread: JoinHandle<()>,
+    accept_thread: JoinHandle<()>,
+}
+
+impl Daemon {
+    pub fn spawn(model: ServeModel, cfg: &DaemonConfig) -> Result<Self> {
+        let mut scfg = cfg.serve.clone();
+        scfg.queue_cap = cfg.queue_cap;
+        let engine = Engine::new(model, &scfg)?;
+        let (host, engine_thread) =
+            spawn_host(engine, HostConfig { per_tenant_cap: cfg.per_tenant_cap, fault: cfg.fault.clone() });
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        // non-blocking accept so the loop can observe the stop flag
+        listener.set_nonblocking(true)?;
+        let draining = Arc::new(AtomicBool::new(false));
+        let stopped = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let host = host.clone();
+            let draining = Arc::clone(&draining);
+            let stopped = Arc::clone(&stopped);
+            let fault = cfg.fault.clone();
+            let deadline_ms = cfg.default_deadline_ms;
+            thread::Builder::new().name("kurtail-accept".into()).spawn(move || {
+                while !stopped.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let host = host.clone();
+                            let draining = Arc::clone(&draining);
+                            let fault = fault.clone();
+                            // detached: a slow client must not block
+                            // accept, and drain never waits on sockets
+                            let _ = thread::Builder::new().name("kurtail-conn".into()).spawn(move || {
+                                handle_conn(stream, host, draining, fault, deadline_ms);
+                            });
+                        }
+                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })?
+        };
+        Ok(Self { addr, host, draining, stopped, engine_thread, accept_thread })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct handle to the engine thread (tests and benches).
+    pub fn host(&self) -> &Host {
+        &self.host
+    }
+
+    /// Stop admissions and shed the queue; live lanes keep running.
+    /// `/healthz` flips to 503, `/stats` stays up. Idempotent.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        self.host.drain();
+    }
+
+    /// Drain (idempotent) and block until the last live lane finished
+    /// and both threads exited.
+    pub fn join(self) -> Result<()> {
+        self.begin_drain();
+        self.engine_thread.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?;
+        // only now tear down the front-end: /stats and /healthz stayed
+        // reachable for the whole drain
+        self.stopped.store(true, Ordering::SeqCst);
+        self.accept_thread.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        Ok(())
+    }
+
+    /// Serve until `stop` flips (SIGTERM/SIGINT via [`signal::install`])
+    /// or something else started a drain (`POST /admin/drain`), then
+    /// drain and join.
+    pub fn run_until(self, stop: &AtomicBool) -> Result<()> {
+        while !stop.load(Ordering::SeqCst) && !self.draining.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(50));
+        }
+        self.join()
+    }
+}
+
+// --------------------------------------------------------- connections
+
+fn handle_conn(mut stream: TcpStream, host: Host, draining: Arc<AtomicBool>, fault: FaultSpec, deadline_ms: u64) {
+    // accepted sockets inherit non-blocking from the listener on some
+    // platforms; request handling wants plain blocking reads
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => return, // hung-up or garbage client; nothing to answer
+    };
+    let _ = route(&mut stream, &req, &host, &draining, &fault, deadline_ms);
+}
+
+fn route(
+    stream: &mut TcpStream,
+    req: &Request,
+    host: &Host,
+    draining: &AtomicBool,
+    fault: &FaultSpec,
+    deadline_ms: u64,
+) -> io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if draining.load(Ordering::SeqCst) {
+                http::write_response(stream, 503, "Service Unavailable", "text/plain", &[], b"draining")
+            } else {
+                http::write_response(stream, 200, "OK", "text/plain", &[], b"ok")
+            }
+        }
+        ("GET", "/stats") => match host.stats() {
+            Ok(s) => {
+                let body = s.to_json().to_string_pretty();
+                http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes())
+            }
+            Err(e) => http::write_error(stream, &e),
+        },
+        ("POST", "/admin/drain") => {
+            draining.store(true, Ordering::SeqCst);
+            host.drain();
+            http::write_response(stream, 200, "OK", "application/json", &[], b"{\"draining\": true}")
+        }
+        ("POST", "/v1/generate") => handle_generate(stream, req, host, fault, deadline_ms),
+        _ => http::write_response(stream, 404, "Not Found", "text/plain", &[], b"not found"),
+    }
+}
+
+/// Parse the generate body. Accepts either `"tokens": [..]` (exact
+/// control; required when the model's vocab is smaller than the byte
+/// tokenizer's 256) or `"prompt": "..."` (byte-tokenized).
+fn parse_generate(
+    body: &[u8],
+    deadline_default_ms: u64,
+    events: Sender<Event>,
+) -> Result<(SubmitReq, bool), ServeError> {
+    let text = std::str::from_utf8(body).map_err(|_| ServeError::Invalid("body must be utf-8".into()))?;
+    let j = Json::parse(text).map_err(|e| ServeError::Invalid(format!("bad json: {e:#}")))?;
+    let tokens: Vec<i32> = if let Some(t) = j.opt("tokens") {
+        let arr = t.as_arr().map_err(|_| ServeError::Invalid("'tokens' must be an array".into()))?;
+        arr.iter()
+            .map(|v| v.as_f64().map(|f| f as i32))
+            .collect::<anyhow::Result<_>>()
+            .map_err(|_| ServeError::Invalid("'tokens' must be numbers".into()))?
+    } else if let Some(p) = j.opt("prompt") {
+        let p = p.as_str().map_err(|_| ServeError::Invalid("'prompt' must be a string".into()))?;
+        ByteTokenizer.encode(p)
+    } else {
+        return Err(ServeError::Invalid("need 'prompt' or 'tokens'".into()));
+    };
+    let n_tokens = j.opt("max_tokens").and_then(|v| v.as_usize().ok()).unwrap_or(16);
+    let temp = j.opt("temp").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as f32;
+    let seed = j.opt("seed").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+    let stop = j.opt("stop").and_then(|v| v.as_f64().ok()).map(|v| v as i32);
+    let stream_mode = matches!(j.opt("stream"), Some(Json::Bool(true)));
+    let ms = j.opt("deadline_ms").and_then(|v| v.as_f64().ok()).map(|v| v as u64).unwrap_or(deadline_default_ms);
+    let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
+    let tenant = j
+        .opt("tenant")
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("default")
+        .to_string();
+    Ok((SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events }, stream_mode))
+}
+
+fn handle_generate(
+    stream: &mut TcpStream,
+    req: &Request,
+    host: &Host,
+    fault: &FaultSpec,
+    deadline_ms: u64,
+) -> io::Result<()> {
+    let (events, rx) = mpsc::channel();
+    let (sub, stream_mode) = match parse_generate(&req.body, deadline_ms, events) {
+        Ok(v) => v,
+        Err(e) => return http::write_error(stream, &e),
+    };
+    let id = match host.submit(sub) {
+        Ok(id) => id,
+        Err(e) => return http::write_error(stream, &e),
+    };
+    if stream_mode {
+        stream_tokens(stream, host, id, rx, fault)
+    } else {
+        wait_completion(stream, host, id, rx)
+    }
+}
+
+fn completion_json(c: &Completion) -> Json {
+    json::obj(vec![
+        ("id", json::num(c.id as f64)),
+        ("prompt_len", json::num(c.prompt_len as f64)),
+        ("tokens", json::arr(c.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+        ("text", json::s(&c.text)),
+    ])
+}
+
+fn wait_completion(stream: &mut TcpStream, host: &Host, id: usize, events: Receiver<Event>) -> io::Result<()> {
+    loop {
+        match events.recv() {
+            Ok(Event::Token(_)) => {} // the completion carries them all
+            Ok(Event::Done(c)) => {
+                let body = completion_json(&c).to_string_pretty();
+                return http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes());
+            }
+            Ok(Event::Failed(e)) => return http::write_error(stream, &e),
+            Err(_) => {
+                host.cancel(id);
+                return http::write_error(stream, &ServeError::Internal("engine exited".into()));
+            }
+        }
+    }
+}
+
+/// Chunked ndjson stream: one `{"token": t}` line per token, then a
+/// `{"done": true, ...}` line carrying the completion. A mid-stream
+/// failure becomes an `{"error": ...}` line — the transfer still
+/// terminates cleanly so clients can tell "failed" from "cut off".
+fn stream_tokens(
+    stream: &mut TcpStream,
+    host: &Host,
+    id: usize,
+    events: Receiver<Event>,
+    fault: &FaultSpec,
+) -> io::Result<()> {
+    http::write_chunked_head(stream, "application/x-ndjson")?;
+    let drop_after = fault.drop_after(id);
+    let mut sent = 0usize;
+    loop {
+        match events.recv() {
+            Ok(Event::Token(t)) => {
+                let line = format!("{{\"token\": {t}}}\n");
+                if http::write_chunk(stream, line.as_bytes()).is_err() {
+                    // client hung up mid-stream: hand the blocks back
+                    host.cancel(id);
+                    return Ok(());
+                }
+                sent += 1;
+                if drop_after.is_some_and(|k| sent >= k) {
+                    // injected drop_conn fault: sever the socket the
+                    // way a dying client would, then reclaim
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                    host.cancel(id);
+                    return Ok(());
+                }
+            }
+            Ok(Event::Done(c)) => {
+                let done = json::obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("id", json::num(c.id as f64)),
+                    ("prompt_len", json::num(c.prompt_len as f64)),
+                    ("n_tokens", json::num((c.tokens.len() - c.prompt_len) as f64)),
+                    ("text", json::s(&c.text)),
+                ]);
+                let line = format!("{}\n", done.to_string_compact());
+                let _ = http::write_chunk(stream, line.as_bytes());
+                return http::finish_chunks(stream);
+            }
+            Ok(Event::Failed(e)) => {
+                let line = format!("{{\"error\": \"{}\"}}\n", e.kind());
+                let _ = http::write_chunk(stream, line.as_bytes());
+                return http::finish_chunks(stream);
+            }
+            Err(_) => {
+                host.cancel(id);
+                let _ = http::write_chunk(stream, b"{\"error\": \"internal\"}\n");
+                return http::finish_chunks(stream);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- synthetic model
+
+/// A small self-contained quantized model (`kurtail daemon
+/// --synthetic`): random-init weights on a 2-layer llama config, W4/A4
+/// with random-Hadamard online rotations. Deterministic in `seed` —
+/// smoke tests and the load generator get reproducible streams without
+/// artifacts on disk.
+pub fn synthetic_model(seed: u64) -> Result<ServeModel> {
+    let (l, d, h, ff, v) = (2usize, 64usize, 2usize, 128usize, 256usize);
+    let dh = d / h;
+    let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape };
+    let meta = ConfigMeta {
+        name: "synthetic-daemon".into(),
+        vocab: v,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_head: dh,
+        d_ff: ff,
+        seq_len: 64,
+        arch: "llama".into(),
+        n_experts: 1,
+        top_k: 1,
+        train_batch: 1,
+        eval_batch: 1,
+        cap_batch: 1,
+        decode_batch: 1,
+        spin_batch: 1,
+        param_specs: vec![
+            spec("embed", vec![v, d]),
+            spec("ln1", vec![l, d]),
+            spec("wq", vec![l, d, d]),
+            spec("wk", vec![l, d, d]),
+            spec("wv", vec![l, d, d]),
+            spec("wo", vec![l, d, d]),
+            spec("ln2", vec![l, d]),
+            spec("wg", vec![l, d, ff]),
+            spec("wu", vec![l, d, ff]),
+            spec("wd", vec![l, ff, d]),
+            spec("lnf", vec![d]),
+            spec("head", vec![v, d]),
+        ],
+    };
+    let mut rng = Rng::new(seed);
+    let params = Params::init(&meta, &mut rng);
+    let quant = ServeQuantSpec::paper_default(
+        random_hadamard(dh, &mut rng),
+        random_hadamard(dh, &mut rng),
+        random_hadamard(ff, &mut rng),
+    );
+    ServeModel::from_params(&params, Some(quant))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests_support::fake_llama_meta;
+
+    fn test_engine(cfg: &ServeConfig) -> Engine {
+        let mut rng = Rng::new(11);
+        let params = Params::init(&fake_llama_meta(), &mut rng);
+        let quant = ServeQuantSpec::paper_default(
+            random_hadamard(4, &mut rng),
+            random_hadamard(4, &mut rng),
+            random_hadamard(16, &mut rng),
+        );
+        let model = ServeModel::from_params(&params, Some(quant)).unwrap();
+        Engine::new(model, cfg).unwrap()
+    }
+
+    fn collect(rx: &Receiver<Event>) -> (Vec<i32>, Option<Completion>, Option<ServeError>) {
+        let mut toks = Vec::new();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(20)).expect("engine thread answers") {
+                Event::Token(t) => toks.push(t),
+                Event::Done(c) => return (toks, Some(c), None),
+                Event::Failed(e) => return (toks, None, Some(e)),
+            }
+        }
+    }
+
+    #[test]
+    fn host_streams_match_in_process_engine() {
+        // reference: the same submissions run in-process
+        let cfg = ServeConfig { max_lanes: 2, ..ServeConfig::default() };
+        let mut reference = test_engine(&cfg);
+        reference.submit_tokens(vec![1, 2, 3], 4, 0.0, 7).unwrap();
+        reference.submit_tokens(vec![4, 5], 3, 0.8, 9).unwrap();
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        let (host, handle) = spawn_host(test_engine(&cfg), HostConfig::default());
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        let mk = |tokens: Vec<i32>, n: usize, temp: f32, seed: u64, tx: Sender<Event>| SubmitReq {
+            tokens,
+            n_tokens: n,
+            temp,
+            seed,
+            stop: None,
+            tenant: "t".into(),
+            deadline: None,
+            events: tx,
+        };
+        let a = host.submit(mk(vec![1, 2, 3], 4, 0.0, 7, tx_a)).unwrap();
+        let b = host.submit(mk(vec![4, 5], 3, 0.8, 9, tx_b)).unwrap();
+        assert_eq!((a, b), (0, 1), "ids follow submission order");
+        let (toks_a, done_a, _) = collect(&rx_a);
+        let (toks_b, done_b, _) = collect(&rx_b);
+        let (done_a, done_b) = (done_a.unwrap(), done_b.unwrap());
+        assert_eq!(done_a.tokens, want[0].tokens, "bitwise identical to in-process run");
+        assert_eq!(done_b.tokens, want[1].tokens);
+        assert_eq!(toks_a, want[0].tokens[want[0].prompt_len..], "streamed = completed");
+        assert_eq!(toks_b, want[1].tokens[want[1].prompt_len..]);
+
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.engine.admitted, 2);
+        assert_eq!(stats.free_blocks, stats.max_blocks, "all KV blocks returned");
+        host.drain();
+        handle.join().unwrap();
+        assert!(matches!(host.stats(), Err(ServeError::Draining)), "post-drain host reports draining");
+    }
+
+    #[test]
+    fn host_enforces_deadlines() {
+        let (host, handle) = spawn_host(test_engine(&ServeConfig::default()), HostConfig::default());
+        let (tx, rx) = mpsc::channel();
+        host.submit(SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: 4,
+            temp: 0.0,
+            seed: 1,
+            stop: None,
+            tenant: "t".into(),
+            deadline: Some(Instant::now()), // already overdue
+            events: tx,
+        })
+        .unwrap();
+        let (_, done, err) = collect(&rx);
+        assert!(done.is_none());
+        assert_eq!(err, Some(ServeError::Deadline));
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.engine.canceled, 1);
+        assert_eq!(stats.free_blocks, stats.max_blocks, "deadline cancel returned every block");
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn host_tenant_cap_sheds_excess() {
+        // slow steps keep the first request in flight while the second
+        // and third arrive
+        let cfg = HostConfig {
+            per_tenant_cap: 1,
+            fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() },
+        };
+        let (host, handle) = spawn_host(test_engine(&ServeConfig::default()), cfg);
+        let mk = |tenant: &str, tx: Sender<Event>| SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: 6,
+            temp: 0.0,
+            seed: 1,
+            stop: None,
+            tenant: tenant.into(),
+            deadline: None,
+            events: tx,
+        };
+        let (tx_a, rx_a) = mpsc::channel();
+        host.submit(mk("alice", tx_a)).unwrap();
+        let (tx_b, _rx_b) = mpsc::channel();
+        let err = host.submit(mk("alice", tx_b)).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { cap: 1 }, "tenant over cap sheds");
+        let (tx_c, rx_c) = mpsc::channel();
+        host.submit(mk("bob", tx_c)).unwrap();
+        let (_, done_a, _) = collect(&rx_a);
+        let (_, done_c, _) = collect(&rx_c);
+        assert!(done_a.is_some() && done_c.is_some(), "other tenants unaffected");
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.engine.shed, 1);
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn synthetic_model_is_deterministic() {
+        let m = synthetic_model(3).unwrap();
+        assert_eq!(m.meta.vocab, 256, "covers the whole byte tokenizer range");
+        let run = |model: ServeModel| {
+            let mut eng = Engine::new(model, &ServeConfig::default()).unwrap();
+            eng.submit("hi", 4, 0.0, 5).unwrap();
+            eng.run().unwrap().remove(0).tokens
+        };
+        assert_eq!(run(m), run(synthetic_model(3).unwrap()), "same seed, same stream");
+    }
+}

@@ -86,10 +86,11 @@ use crate::tensor::Tensor;
 use crate::util::par::{self, num_threads, ParBackend};
 use crate::util::Rng;
 
+use super::error::ServeError;
 use super::int4::{panel_cache_budget, GemmScratch, Int4Weight};
 use super::kvcache::{KvPool, SeqKv};
 use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch_on, scheme_fits_i8};
-use super::scheduler::{QueuedRequest, Scheduler};
+use super::scheduler::{QueuedRequest, Scheduler, DEFAULT_HEAD_SKIPS};
 use super::scratch::{arena_enabled, scratch_decay_default, DecodeScratch};
 
 /// `KURTAIL_FUSED_EPILOGUE` escape hatch: the fused column-major /
@@ -552,6 +553,16 @@ pub struct ServeConfig {
     /// shrinks to the live-lane peak. `None` follows
     /// `KURTAIL_SCRATCH_DECAY` (unset → 64), `Some(0)` disables decay.
     pub scratch_decay: Option<usize>,
+    /// Admission-queue bound: submits past `queue_cap` waiting requests
+    /// shed with [`ServeError::QueueFull`] (the daemon's backpressure
+    /// signal). `0` = unbounded — the in-process/library default, where
+    /// the caller owns its own submission loop.
+    pub queue_cap: usize,
+    /// Head-of-line bypass budget: a queued head whose KV reservation
+    /// doesn't fit may be bypassed by smaller requests at most this
+    /// many times before admission pauses for it (starvation bound —
+    /// see `scheduler.rs`).
+    pub max_head_skips: usize,
 }
 
 impl Default for ServeConfig {
@@ -568,6 +579,8 @@ impl Default for ServeConfig {
             par_backend: None,
             fused_epilogue: None,
             scratch_decay: None,
+            queue_cap: 0,
+            max_head_skips: DEFAULT_HEAD_SKIPS,
         }
     }
 }
@@ -588,9 +601,17 @@ pub struct EngineStats {
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub admitted: u64,
+    /// Lanes taken out of flight for any reason — completion, EOS stop,
+    /// or cancellation (each one returned its whole block reservation).
     pub retired: u64,
     /// Lanes retired early by their stop token (subset of `retired`).
     pub eos_retired: u64,
+    /// Requests rejected by load shedding: queue at capacity, an
+    /// impossible-to-fit reservation, or a drain (never admitted).
+    pub shed: u64,
+    /// Requests canceled after acceptance — client disconnect, explicit
+    /// cancel, or deadline expiry (queued or live).
+    pub canceled: u64,
     pub peak_lanes: usize,
 }
 
@@ -621,6 +642,13 @@ pub struct Engine {
     done: Vec<Completion>,
     next_id: usize,
     committed_blocks: usize,
+    /// Blocks temporarily hidden from the admission budget
+    /// ([`Self::set_withheld_blocks`] — the deterministic pool-exhaust
+    /// fault injection). Never touches live reservations, so the
+    /// conservative no-mid-flight-exhaustion invariant holds under it.
+    withheld_blocks: usize,
+    /// Draining: every submit is rejected; live lanes run to completion.
+    draining: bool,
     threads: usize,
     int_gemm: bool,
     /// Persistent-arena mode (`ServeConfig::arena` / `KURTAIL_ARENA`).
@@ -685,10 +713,12 @@ impl Engine {
             lanes: (0..cfg.max_lanes).map(|_| None).collect(),
             model,
             pool,
-            sched: Scheduler::new(),
+            sched: Scheduler::bounded(cfg.queue_cap, cfg.max_head_skips),
             done: Vec::new(),
             next_id: 0,
             committed_blocks: 0,
+            withheld_blocks: 0,
+            draining: false,
             threads,
             int_gemm,
             arena,
@@ -738,12 +768,18 @@ impl Engine {
     }
 
     /// Queue a text prompt (byte-tokenized). Returns the request id.
-    pub fn submit(&mut self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<usize> {
+    pub fn submit(&mut self, prompt: &str, n_tokens: usize, temp: f32, seed: u64) -> Result<usize, ServeError> {
         self.submit_tokens(ByteTokenizer.encode(prompt), n_tokens, temp, seed)
     }
 
     /// Queue a pre-tokenized prompt. Returns the request id.
-    pub fn submit_tokens(&mut self, tokens: Vec<i32>, n_tokens: usize, temp: f32, seed: u64) -> Result<usize> {
+    pub fn submit_tokens(
+        &mut self,
+        tokens: Vec<i32>,
+        n_tokens: usize,
+        temp: f32,
+        seed: u64,
+    ) -> Result<usize, ServeError> {
         self.submit_tokens_stop(tokens, n_tokens, temp, seed, None)
     }
 
@@ -752,6 +788,11 @@ impl Engine {
     /// in the completion), immediately releasing its **whole** block
     /// reservation — unclaimed blocks included — so queued requests can
     /// admit mid-batch without waiting out `n_tokens`.
+    ///
+    /// Every rejection is a typed, recoverable [`ServeError`] that
+    /// leaves the engine untouched — `committed_blocks`, the pool and
+    /// the id counter are exactly as before the call, so callers can
+    /// shed, retry or report without poisoning later admissions.
     pub fn submit_tokens_stop(
         &mut self,
         tokens: Vec<i32>,
@@ -759,35 +800,123 @@ impl Engine {
         temp: f32,
         seed: u64,
         stop: Option<i32>,
-    ) -> Result<usize> {
-        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
-        anyhow::ensure!(n_tokens >= 1, "need at least one generated token");
+    ) -> Result<usize, ServeError> {
+        if self.draining {
+            self.stats.shed += 1;
+            return Err(ServeError::Draining);
+        }
+        if tokens.is_empty() {
+            return Err(ServeError::Invalid("empty prompt".into()));
+        }
+        if n_tokens < 1 {
+            return Err(ServeError::Invalid("need at least one generated token".into()));
+        }
         let vocab = self.model.meta.vocab as i32;
-        anyhow::ensure!(
-            tokens.iter().all(|&t| t >= 0 && t < vocab),
-            "prompt token out of vocab range 0..{vocab}"
-        );
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t >= vocab) {
+            return Err(ServeError::Invalid(format!("prompt token {t} out of vocab range 0..{vocab}")));
+        }
         let total = tokens.len() + n_tokens;
-        anyhow::ensure!(
-            total <= self.model.max_pos,
-            "prompt+generation ({total}) exceeds cache size {}",
-            self.model.max_pos
-        );
+        if total > self.model.max_pos {
+            return Err(ServeError::Invalid(format!(
+                "prompt+generation ({total}) exceeds cache size {}",
+                self.model.max_pos
+            )));
+        }
         let needed = self.pool.blocks_needed(self.model.meta.n_layers, total);
-        anyhow::ensure!(
-            needed <= self.pool.max_blocks,
-            "request needs {needed} KV blocks but the pool only has {}",
-            self.pool.max_blocks
-        );
+        if needed > self.pool.max_blocks {
+            // the PR-2..5 admission-time hard failure, now recoverable:
+            // this request can never fit, but the engine carries on
+            self.stats.shed += 1;
+            return Err(ServeError::RequestTooLarge { needed_blocks: needed, pool_blocks: self.pool.max_blocks });
+        }
         let id = self.next_id;
-        self.next_id += 1;
-        self.sched.push(QueuedRequest { id, tokens, n_new: n_tokens, temp, seed, stop });
-        Ok(id)
+        match self.sched.push(QueuedRequest { id, tokens, n_new: n_tokens, temp, seed, stop }) {
+            Ok(()) => {
+                // ids advance only on acceptance, so a replay of the
+                // accepted submissions reproduces the same id sequence
+                // (and therefore the same per-request rng streams)
+                self.next_id += 1;
+                Ok(id)
+            }
+            Err(e) => {
+                self.stats.shed += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Cancel a request by id, wherever it is: still queued (removed
+    /// before admission) or live (the lane is torn down and its whole
+    /// block reservation returns to the pool immediately, mid-prefill
+    /// or mid-decode). Returns `false` when the id is unknown — already
+    /// completed, never accepted, or bogus. Canceled requests emit no
+    /// [`Completion`].
+    pub fn cancel(&mut self, id: usize) -> bool {
+        if self.sched.cancel(id).is_some() {
+            self.stats.canceled += 1;
+            return true;
+        }
+        for slot in 0..self.lanes.len() {
+            if self.lanes[slot].as_ref().is_some_and(|l| l.id == id) {
+                let mut lane = self.lanes[slot].take().unwrap();
+                self.pool.release(&mut lane.seq);
+                self.committed_blocks -= lane.reserved_blocks;
+                self.stats.retired += 1;
+                self.stats.canceled += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Enter drain: every queued request is shed (their ids are
+    /// returned so the caller can notify owners), and every subsequent
+    /// submit is rejected with [`ServeError::Draining`]. Live lanes are
+    /// untouched — keep stepping until [`Self::step`] returns `false`
+    /// for a clean exit.
+    pub fn begin_drain(&mut self) -> Vec<usize> {
+        self.draining = true;
+        let shed = self.sched.drain();
+        self.stats.shed += shed.len() as u64;
+        shed.into_iter().map(|r| r.id).collect()
+    }
+
+    /// Whether [`Self::begin_drain`] was called.
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Hide `blocks` from the admission budget (deterministic
+    /// pool-exhaustion fault injection: admission starves and sheds,
+    /// while live reservations — and the no-mid-flight-exhaustion
+    /// invariant — are untouched). `0` restores the full budget.
+    pub fn set_withheld_blocks(&mut self, blocks: usize) {
+        self.withheld_blocks = blocks;
+    }
+
+    pub fn withheld_blocks(&self) -> usize {
+        self.withheld_blocks
+    }
+
+    /// Blocks currently reserved by live lanes.
+    pub fn committed_blocks(&self) -> usize {
+        self.committed_blocks
+    }
+
+    /// Lanes currently decoding.
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Take every completion finished since the last call (streaming
+    /// consumers; [`Self::run`] drains the same buffer at the end).
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
     }
 
     /// Blocks the pool can still promise to new admissions.
     fn uncommitted_blocks(&self) -> usize {
-        self.pool.max_blocks - self.committed_blocks
+        (self.pool.max_blocks - self.committed_blocks).saturating_sub(self.withheld_blocks)
     }
 
     /// One engine iteration: retire finished lanes, admit + prefill
@@ -1941,11 +2070,170 @@ mod tests {
     fn submit_validation() {
         let model = fp_model();
         let mut eng = Engine::new(model, &ServeConfig::default()).unwrap();
-        assert!(eng.submit_tokens(vec![], 2, 0.0, 0).is_err(), "empty prompt");
-        assert!(eng.submit_tokens(vec![1], 0, 0.0, 0).is_err(), "zero tokens");
-        assert!(eng.submit_tokens(vec![99], 2, 0.0, 0).is_err(), "token out of vocab");
-        assert!(eng.submit_tokens(vec![1; 7], 4, 0.0, 0).is_err(), "exceeds cache");
+        assert!(matches!(eng.submit_tokens(vec![], 2, 0.0, 0), Err(ServeError::Invalid(_))), "empty prompt");
+        assert!(matches!(eng.submit_tokens(vec![1], 0, 0.0, 0), Err(ServeError::Invalid(_))), "zero tokens");
+        assert!(matches!(eng.submit_tokens(vec![99], 2, 0.0, 0), Err(ServeError::Invalid(_))), "out of vocab");
+        assert!(matches!(eng.submit_tokens(vec![1; 7], 4, 0.0, 0), Err(ServeError::Invalid(_))), "exceeds cache");
         assert!(eng.submit_tokens(vec![1, 2], 3, 0.0, 0).is_ok());
+    }
+
+    #[test]
+    fn rejected_submit_leaves_pool_and_ids_untouched() {
+        // the PR-2..5 admission assert (oversized reservation), now a
+        // typed recoverable error: pool accounting, committed blocks and
+        // the id counter must be exactly as before the rejection
+        let model = quant_model();
+        // pool of 4 blocks: total=7 tokens needs 2·2·ceil(7/4)=8 > 4
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            max_blocks: 4,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            ..ServeConfig::default()
+        };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        let err = eng.submit_tokens(vec![1, 2], 5, 0.0, 7).unwrap_err();
+        assert_eq!(err, ServeError::RequestTooLarge { needed_blocks: 8, pool_blocks: 4 });
+        assert_eq!(eng.committed_blocks(), 0);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+        assert_eq!(eng.queued(), 0);
+        assert_eq!(eng.stats.shed, 1);
+        // a small request still fits (1 block pair per layer = 4) and,
+        // because rejections don't consume ids, gets id 0 — the same
+        // stream a never-rejected engine would produce
+        let id = eng.submit_tokens(vec![1], 1, 0.0, 7).unwrap();
+        assert_eq!(id, 0, "rejected submits must not consume ids");
+        assert_eq!(eng.run().unwrap().len(), 1);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_queue_full() {
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 1,
+            block_tokens: 4,
+            threads: Some(1),
+            queue_cap: 2,
+            ..ServeConfig::default()
+        };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        eng.submit_tokens(vec![1], 2, 0.0, 7).unwrap();
+        eng.submit_tokens(vec![2], 2, 0.0, 7).unwrap();
+        let err = eng.submit_tokens(vec![3], 2, 0.0, 7).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { cap: 2 });
+        assert_eq!(eng.stats.shed, 1);
+        assert_eq!(eng.queued(), 2);
+        // the shed request is gone, the accepted ones complete
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn cancel_returns_blocks_and_is_invisible_to_other_lanes() {
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            ..ServeConfig::default()
+        };
+        // reference: id 1's stream with id 0 running to completion
+        let mut plain = Engine::new(model.clone(), &cfg).unwrap();
+        plain.submit_tokens(vec![1, 2, 3], 4, 0.0, 7).unwrap();
+        plain.submit_tokens(vec![4, 5], 5, 0.0, 7).unwrap();
+        let want = plain.run().unwrap();
+
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        let a = eng.submit_tokens(vec![1, 2, 3], 4, 0.0, 7).unwrap();
+        let b = eng.submit_tokens(vec![4, 5], 5, 0.0, 7).unwrap();
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.live_lanes(), 2, "both lanes admitted");
+        let committed_before = eng.committed_blocks();
+        assert!(eng.cancel(a), "live lane cancels");
+        assert!(committed_before > eng.committed_blocks(), "reservation returned mid-decode");
+        assert!(!eng.cancel(a), "second cancel is a no-op");
+        assert!(!eng.cancel(99), "unknown id is a no-op");
+        let done = eng.run().unwrap();
+        // no completion for the canceled lane; the survivor's stream is
+        // bitwise the two-lane reference (cancel is stream-invisible)
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, b);
+        assert_eq!(done[0].tokens, want[1].tokens);
+        assert_eq!(eng.stats.canceled, 1);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+        assert_eq!(eng.committed_blocks(), 0);
+    }
+
+    #[test]
+    fn drain_sheds_queue_and_finishes_live_lanes() {
+        let model = quant_model();
+        let cfg = ServeConfig { max_lanes: 1, block_tokens: 4, threads: Some(1), ..ServeConfig::default() };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        let a = eng.submit_tokens(vec![1, 2], 4, 0.0, 7).unwrap();
+        let b = eng.submit_tokens(vec![3], 2, 0.0, 7).unwrap();
+        assert!(eng.step().unwrap()); // admits a; b still queued
+        let shed = eng.begin_drain();
+        assert_eq!(shed, vec![b], "queued requests shed on drain");
+        assert!(eng.draining());
+        assert_eq!(eng.submit_tokens(vec![4], 1, 0.0, 7), Err(ServeError::Draining));
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 1, "live lane ran to completion");
+        assert_eq!(done[0].id, a);
+        assert_eq!(eng.stats.shed, 2, "one drain shed + one draining reject");
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn withheld_blocks_starve_admission_without_touching_live_lanes() {
+        let model = quant_model();
+        let cfg = ServeConfig { max_lanes: 2, block_tokens: 4, threads: Some(1), ..ServeConfig::default() };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        eng.submit_tokens(vec![1, 2], 3, 0.0, 7).unwrap();
+        eng.set_withheld_blocks(eng.pool().max_blocks);
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.admitted, 0, "withheld budget blocks admission");
+        assert_eq!(eng.queued(), 1);
+        eng.set_withheld_blocks(0);
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.admitted, 1, "restored budget admits");
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn large_request_is_not_starved_by_small_stream() {
+        // satellite: pool sized for exactly one large reservation. The
+        // large request sits behind a small one; more smalls than the
+        // bypass budget wait behind it. Aged bypass admits smalls while
+        // the budget lasts, then holds the pool for the large one —
+        // everything completes, nothing leaks.
+        let model = quant_model();
+        // large: 3+5=8 tokens → 2 blocks × 2 layers × 2 = 8 = whole pool
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            max_blocks: 8,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            max_head_skips: 2,
+            ..ServeConfig::default()
+        };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        eng.submit_tokens(vec![9], 2, 0.0, 7).unwrap(); // small head
+        let large = eng.submit_tokens(vec![1, 2, 3], 5, 0.0, 7).unwrap();
+        for i in 0..6 {
+            eng.submit_tokens(vec![4 + i], 2, 0.0, 7).unwrap(); // smalls
+        }
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 8, "aged bypass starves nobody");
+        assert!(done.iter().any(|c| c.id == large && c.tokens.len() == 8));
+        assert_eq!(eng.stats.admitted, 8);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Typed, recoverable serving errors.
+//!
+//! The PR-2..5 engine treated every edge as fatal: oversized requests
+//! hit `ensure!`/panics and pool pressure was unrepresentable. The
+//! daemon needs to *react* — shed with retry-after, reject with a
+//! client error, time out, drain — so every recoverable condition in
+//! `engine.rs` / `scheduler.rs` / `kvcache.rs` now surfaces as a
+//! [`ServeError`] variant instead of dying. `ServeError` implements
+//! `std::error::Error`, so existing `?`-into-`anyhow` call sites keep
+//! compiling unchanged; new callers (the daemon's HTTP layer, the
+//! admission path) match on the variant to pick a response.
+
+use std::fmt;
+
+/// A recoverable serving-layer failure. Every variant maps to a
+/// distinct client-visible outcome (HTTP status, retry hint) in
+/// `serve::daemon::http`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The KV block pool cannot supply a claim right now. With the
+    /// engine's conservative admission reservation this is unreachable
+    /// mid-flight; it survives as the pool's own failure mode (direct
+    /// pool users, future optimistic schedulers).
+    PoolExhausted { needed: usize, free: usize },
+    /// The bounded admission queue is at capacity — shed the request
+    /// and tell the client to retry later (backpressure).
+    QueueFull { cap: usize },
+    /// The request's worst-case KV reservation exceeds the whole pool:
+    /// it can never be admitted, no matter how idle the engine is.
+    RequestTooLarge { needed_blocks: usize, pool_blocks: usize },
+    /// Malformed request (empty prompt, out-of-vocab token, zero
+    /// generation budget, over-long sequence, bad JSON field).
+    Invalid(String),
+    /// The request's deadline expired while queued or mid-stream.
+    Deadline,
+    /// The request was canceled (client disconnect or explicit cancel).
+    Canceled,
+    /// The daemon is draining: no new admissions, live lanes finish.
+    Draining,
+    /// An engine-internal invariant broke (out-of-order KV append,
+    /// forward failure). Not client-correctable.
+    Internal(String),
+}
+
+impl ServeError {
+    /// Whether retrying the *same* request later can succeed — the
+    /// load-shedding/backpressure class (`Retry-After` on the wire).
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            ServeError::PoolExhausted { .. } | ServeError::QueueFull { .. } | ServeError::Draining
+        )
+    }
+
+    /// Short stable identifier for logs, `/stats` and JSON error bodies.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::PoolExhausted { .. } => "pool_exhausted",
+            ServeError::QueueFull { .. } => "queue_full",
+            ServeError::RequestTooLarge { .. } => "request_too_large",
+            ServeError::Invalid(_) => "invalid",
+            ServeError::Deadline => "deadline",
+            ServeError::Canceled => "canceled",
+            ServeError::Draining => "draining",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::PoolExhausted { needed, free } => {
+                write!(f, "kv pool exhausted: need {needed} blocks, {free} free")
+            }
+            ServeError::QueueFull { cap } => write!(f, "admission queue full ({cap} requests)"),
+            ServeError::RequestTooLarge { needed_blocks, pool_blocks } => {
+                write!(f, "request needs {needed_blocks} KV blocks but the pool only has {pool_blocks}")
+            }
+            ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::Deadline => write!(f, "deadline exceeded"),
+            ServeError::Canceled => write!(f, "request canceled"),
+            ServeError::Draining => write!(f, "daemon is draining; not accepting work"),
+            ServeError::Internal(msg) => write!(f, "internal serving error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_classes() {
+        assert!(ServeError::QueueFull { cap: 4 }.retryable());
+        assert!(ServeError::PoolExhausted { needed: 2, free: 0 }.retryable());
+        assert!(ServeError::Draining.retryable());
+        assert!(!ServeError::RequestTooLarge { needed_blocks: 9, pool_blocks: 8 }.retryable());
+        assert!(!ServeError::Invalid("x".into()).retryable());
+        assert!(!ServeError::Deadline.retryable());
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        // the blanket std::error::Error impl keeps `?`-to-anyhow sites
+        // compiling; the message must survive the conversion
+        let e: anyhow::Error = ServeError::QueueFull { cap: 7 }.into();
+        assert!(e.to_string().contains("queue full (7"), "{e}");
+        let d: Option<&ServeError> = e.downcast_ref();
+        assert_eq!(d, Some(&ServeError::QueueFull { cap: 7 }));
+    }
+}

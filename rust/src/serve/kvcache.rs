@@ -25,9 +25,9 @@
 //!   structure — the apples-to-apples baseline for `BENCH_serve.json`'s
 //!   bytes/token comparison and the exactness mode of the serve engine.
 
-use anyhow::Result;
-
 use crate::config::KvQuant;
+
+use super::error::ServeError;
 
 /// 4-bit asymmetric grid size (2^4 − 1 levels).
 const LEVELS: f32 = 15.0;
@@ -135,19 +135,37 @@ impl KvPool {
         }
     }
 
-    fn alloc(&mut self) -> Result<u32> {
-        self.free.pop().ok_or_else(|| anyhow::anyhow!("kv pool exhausted ({} blocks)", self.max_blocks))
+    fn alloc(&mut self) -> Result<u32, ServeError> {
+        let free = self.free.len();
+        self.free.pop().ok_or(ServeError::PoolExhausted { needed: 1, free })
     }
 
     /// Append-quantize one token's K and V rows (`h·dh` f32s each) for
     /// `layer` at position `pos`. Positions must be appended in order.
-    pub fn append(&mut self, seq: &mut SeqKv, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+    /// Failures are typed and leak-free: [`ServeError::PoolExhausted`]
+    /// claims nothing (the K/V block pair is checked before either
+    /// allocates), so the caller can release the sequence and retry.
+    pub fn append(
+        &mut self,
+        seq: &mut SeqKv,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), ServeError> {
         assert_eq!(k_row.len(), self.h * self.dh);
         assert_eq!(v_row.len(), self.h * self.dh);
-        anyhow::ensure!(pos == seq.appended[layer], "kv append out of order: pos {pos} != cursor {}", seq.appended[layer]);
+        if pos != seq.appended[layer] {
+            return Err(ServeError::Internal(format!(
+                "kv append out of order: pos {pos} != cursor {}",
+                seq.appended[layer]
+            )));
+        }
         if pos % self.block_tokens == 0 {
             // claim the K/V pair atomically so a failure leaks nothing
-            anyhow::ensure!(self.free.len() >= 2, "kv pool exhausted ({} blocks)", self.max_blocks);
+            if self.free.len() < 2 {
+                return Err(ServeError::PoolExhausted { needed: 2, free: self.free.len() });
+            }
             let kb = self.alloc()?;
             let vb = self.alloc()?;
             seq.k_blocks[layer].push(kb);
@@ -374,8 +392,11 @@ mod tests {
         }
         assert_eq!(seq.blocks_held(), 6);
         assert_eq!(pool.free_blocks(), 0);
-        // exhausted: a 7th token needs a fresh block pair
-        assert!(pool.append(&mut seq, 0, 6, &row, &row).is_err());
+        // exhausted: a 7th token needs a fresh block pair — the typed
+        // error claims nothing, so release still returns exactly 6
+        let err = pool.append(&mut seq, 0, 6, &row, &row).unwrap_err();
+        assert_eq!(err, ServeError::PoolExhausted { needed: 2, free: 0 });
+        assert_eq!(seq.blocks_held(), 6, "failed append must not claim blocks");
         pool.release(&mut seq);
         assert_eq!(pool.free_blocks(), 6);
         assert_eq!(seq.blocks_held(), 0);

@@ -22,6 +22,14 @@
 //!   on [`Int4Weight`]: steady-state decode performs zero heap
 //!   allocations and is bitwise identical to the fresh-alloc path
 //!   (`KURTAIL_ARENA=0` / `KURTAIL_PANEL_CACHE=0` restore it).
+//! * [`Daemon`] (`serve/daemon/`) — the long-running fault-tolerant
+//!   HTTP front-end: every recoverable failure is a typed
+//!   [`ServeError`] (`serve/error.rs`), admission is bounded with
+//!   explicit load shedding, requests carry deadlines and can be
+//!   canceled mid-flight with full KV-block reclaim, SIGTERM drains
+//!   gracefully, and a seeded fault-injection layer (`KURTAIL_FAULT`)
+//!   makes the failure paths testable (`rust/README.md` §Serving
+//!   daemon).
 //!
 //! Everything here runs on the host kernel layer (`util::par`
 //! row-chunking, work-stealing by default with `KURTAIL_PAR=static` /
@@ -31,17 +39,21 @@
 //! (`ServeConfig::fused_epilogue`), and a lane's token stream does not
 //! depend on which other lanes share its batch.
 
+pub mod daemon;
 pub mod engine;
+pub mod error;
 pub mod int4;
 pub mod kvcache;
 pub mod qact;
 pub mod scheduler;
 pub mod scratch;
 
+pub use daemon::{Daemon, DaemonConfig, Host, HostConfig};
 pub use engine::{
     argmax, fused_epilogue_enabled, sample_token, sample_token_buf, Completion, Engine, EngineStats,
     ServeConfig, ServeModel, ServeQuantSpec,
 };
+pub use error::ServeError;
 pub use int4::{panel_cache_budget, GemmScratch, Int4Weight};
 pub use kvcache::{KvPool, SeqKv};
 pub use qact::{int_gemm_enabled, QuantActs};

@@ -1,19 +1,42 @@
 //! Admission scheduling for the continuous-batching engine.
 //!
-//! Policy: **FCFS with conservative reservation**. A request is admitted
-//! only when (a) a lane slot is free and (b) the KV pool can cover the
-//! request's *worst-case* block footprint (`prompt + max_new` tokens
-//! across every layer, K and V) on top of what already-admitted lanes
-//! may still claim. Admitted sequences therefore never hit pool
-//! exhaustion mid-flight, at the cost of admitting slightly fewer lanes
-//! than an optimistic scheduler would. The queue never skips the head
-//! (no head-of-line bypass): completions retire in bounded time and
-//! admission order is deterministic, which the engine's batch-invariance
-//! guarantee builds on.
+//! Policy: **bounded FCFS with conservative reservation and aged
+//! head-of-line bypass**. A request is admitted only when (a) a lane
+//! slot is free and (b) the KV pool can cover the request's
+//! *worst-case* block footprint (`prompt + max_new` tokens across every
+//! layer, K and V) on top of what already-admitted lanes may still
+//! claim. Admitted sequences therefore never hit pool exhaustion
+//! mid-flight, at the cost of admitting slightly fewer lanes than an
+//! optimistic scheduler would.
+//!
+//! Two robustness amendments over the PR-2 pure-FCFS queue:
+//!
+//! * **Bounded queue.** `cap > 0` rejects pushes past `cap` requests
+//!   with [`ServeError::QueueFull`] — the daemon's backpressure signal
+//!   (shed + retry-after) instead of unbounded memory growth under
+//!   overload.
+//! * **Aged bypass.** Pure FCFS never skips the head, so one large
+//!   request whose KV reservation doesn't fit blocks every small
+//!   request behind it (head-of-line blocking). Pure bypass has the
+//!   dual failure: a continuous stream of small requests keeps the pool
+//!   fragmented and starves the large head forever. The compromise: a
+//!   blocked head may be bypassed at most `max_skips` times; after
+//!   that, admission pauses until the head itself fits (live lanes
+//!   retire and return their blocks in bounded time, so the head
+//!   admits in bounded time). Admission order remains deterministic —
+//!   it depends only on the queue contents and the fits-predicate
+//!   sequence, never on wall-clock time — which the engine's
+//!   batch-invariance guarantee builds on.
 
 use std::collections::VecDeque;
 
 use crate::util::Rng;
+
+use super::error::ServeError;
+
+/// Default bypass budget before a blocked head pauses admissions
+/// (`ServeConfig::max_head_skips`).
+pub const DEFAULT_HEAD_SKIPS: usize = 4;
 
 /// A queued generation request (tokenized, ready to admit).
 #[derive(Clone, Debug)]
@@ -42,10 +65,22 @@ impl QueuedRequest {
     }
 }
 
-/// FCFS admission queue.
-#[derive(Default)]
+/// Bounded FCFS admission queue with aged head-of-line bypass.
 pub struct Scheduler {
     queue: VecDeque<QueuedRequest>,
+    /// Queue bound; `0` = unbounded (the in-process/library default).
+    cap: usize,
+    /// Bypass budget for a blocked head (see the module docs).
+    max_skips: usize,
+    /// Times the *current* head has been bypassed; resets whenever the
+    /// head changes (pop, cancel of the head, or drain).
+    head_skips: usize,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::bounded(0, DEFAULT_HEAD_SKIPS)
+    }
 }
 
 impl Scheduler {
@@ -53,8 +88,19 @@ impl Scheduler {
         Self::default()
     }
 
-    pub fn push(&mut self, r: QueuedRequest) {
+    /// Queue bounded at `cap` requests (`0` = unbounded) with a
+    /// `max_skips` head-of-line bypass budget.
+    pub fn bounded(cap: usize, max_skips: usize) -> Self {
+        Self { queue: VecDeque::new(), cap, max_skips, head_skips: 0 }
+    }
+
+    /// Enqueue, or shed with [`ServeError::QueueFull`] at the bound.
+    pub fn push(&mut self, r: QueuedRequest) -> Result<(), ServeError> {
+        if self.cap > 0 && self.queue.len() >= self.cap {
+            return Err(ServeError::QueueFull { cap: self.cap });
+        }
         self.queue.push_back(r);
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -65,15 +111,43 @@ impl Scheduler {
         self.queue.is_empty()
     }
 
-    /// Pop the head of the queue iff `fits` accepts it. FCFS: when the
-    /// head does not fit, nothing is admitted this round even if a later
-    /// request would fit.
-    pub fn pop_if(&mut self, fits: impl FnOnce(&QueuedRequest) -> bool) -> Option<QueuedRequest> {
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Pop the next admissible request: the head if `fits` accepts it;
+    /// otherwise — while the head's bypass budget lasts — the first
+    /// later request that fits (each such bypass spends one unit of the
+    /// budget). A head past its budget pauses admission entirely until
+    /// it fits, which bounds its wait by the live lanes' retirement.
+    pub fn pop_if(&mut self, fits: impl Fn(&QueuedRequest) -> bool) -> Option<QueuedRequest> {
         if fits(self.queue.front()?) {
-            self.queue.pop_front()
-        } else {
-            None
+            self.head_skips = 0;
+            return self.queue.pop_front();
         }
+        if self.head_skips >= self.max_skips {
+            return None;
+        }
+        let idx = 1 + self.queue.iter().skip(1).position(fits)?;
+        self.head_skips += 1;
+        self.queue.remove(idx)
+    }
+
+    /// Remove a queued request by id (cancellation before admission).
+    pub fn cancel(&mut self, id: usize) -> Option<QueuedRequest> {
+        let idx = self.queue.iter().position(|r| r.id == id)?;
+        if idx == 0 {
+            // a new head gets a fresh bypass budget
+            self.head_skips = 0;
+        }
+        self.queue.remove(idx)
+    }
+
+    /// Shed every queued request (graceful drain): the caller notifies
+    /// their owners; live lanes are unaffected.
+    pub fn drain(&mut self) -> Vec<QueuedRequest> {
+        self.head_skips = 0;
+        self.queue.drain(..).collect()
     }
 }
 
@@ -86,17 +160,105 @@ mod tests {
     }
 
     #[test]
-    fn fcfs_never_skips_the_head() {
-        let mut s = Scheduler::new();
-        s.push(req(0, 100));
-        s.push(req(1, 1));
-        // head too big → nothing admitted, even though req 1 would fit
-        assert!(s.pop_if(|r| r.total_tokens() <= 10).is_none());
+    fn blocked_head_is_bypassed_within_budget() {
+        let mut s = Scheduler::bounded(0, 2);
+        s.push(req(0, 100)).unwrap();
+        s.push(req(1, 1)).unwrap();
+        s.push(req(2, 1)).unwrap();
+        s.push(req(3, 1)).unwrap();
+        let small = |r: &QueuedRequest| r.total_tokens() <= 10;
+        // two bypasses spend the head's budget…
+        assert_eq!(s.pop_if(small).unwrap().id, 1);
+        assert_eq!(s.pop_if(small).unwrap().id, 2);
+        // …then admission pauses even though req 3 fits
+        assert!(s.pop_if(small).is_none());
         assert_eq!(s.len(), 2);
+        // once the head fits it pops (and the budget resets)
         let got = s.pop_if(|r| r.total_tokens() <= 200).unwrap();
         assert_eq!(got.id, 0);
-        assert_eq!(s.pop_if(|_| true).unwrap().id, 1);
+        assert_eq!(s.pop_if(small).unwrap().id, 3);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn large_head_admits_under_endless_small_stream() {
+        // the satellite scenario: a pool sized for exactly one large
+        // reservation, a large request stuck behind one small one, and
+        // an endless supply of small requests arriving behind it. The
+        // fits-predicate models the engine's budget check: capacity 8
+        // blocks, each live small holds 2 until it retires.
+        const CAPACITY: usize = 8;
+        let blocks = |r: &QueuedRequest| 2 * r.total_tokens().div_ceil(8);
+        let mut s = Scheduler::bounded(0, DEFAULT_HEAD_SKIPS);
+        s.push(req(0, 1)).unwrap(); // small (2 blocks)
+        s.push(req(1, 28)).unwrap(); // large (8 blocks — the whole pool)
+        let mut next_id = 2;
+        let mut live: Vec<(usize, usize)> = Vec::new(); // (blocks, steps left)
+        let mut large_admitted_at = None;
+        for step in 0..64 {
+            // an endless stream of small arrivals
+            s.push(req(next_id, 1)).unwrap();
+            next_id += 1;
+            let used: usize = live.iter().map(|&(b, _)| b).sum();
+            // one admission attempt per step (single free lane)
+            if let Some(r) = s.pop_if(|r| blocks(r) <= CAPACITY - used) {
+                if r.id == 1 {
+                    large_admitted_at = Some(step);
+                }
+                live.push((blocks(&r), 3));
+            }
+            live.retain_mut(|(_, t)| {
+                *t -= 1;
+                *t > 0
+            });
+            if large_admitted_at.is_some() {
+                break;
+            }
+        }
+        let at = large_admitted_at.expect("aged bypass must admit the large request");
+        assert!(at <= 3 * (DEFAULT_HEAD_SKIPS + 2), "admitted late: step {at}");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_cap() {
+        let mut s = Scheduler::bounded(2, DEFAULT_HEAD_SKIPS);
+        s.push(req(0, 1)).unwrap();
+        s.push(req(1, 1)).unwrap();
+        assert_eq!(s.push(req(2, 1)), Err(ServeError::QueueFull { cap: 2 }));
+        assert_eq!(s.len(), 2);
+        // popping frees capacity again
+        assert_eq!(s.pop_if(|_| true).unwrap().id, 0);
+        s.push(req(2, 1)).unwrap();
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn cancel_removes_by_id_and_resets_head_budget() {
+        let mut s = Scheduler::bounded(0, 1);
+        s.push(req(0, 100)).unwrap();
+        s.push(req(1, 1)).unwrap();
+        s.push(req(2, 1)).unwrap();
+        let small = |r: &QueuedRequest| r.total_tokens() <= 10;
+        assert_eq!(s.pop_if(small).unwrap().id, 1); // spends head 0's budget
+        assert!(s.pop_if(small).is_none());
+        assert!(s.cancel(7).is_none());
+        assert_eq!(s.cancel(0).unwrap().id, 0);
+        // head 2 starts with a fresh budget and fits anyway
+        assert_eq!(s.pop_if(small).unwrap().id, 2);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn drain_sheds_everything() {
+        let mut s = Scheduler::bounded(4, DEFAULT_HEAD_SKIPS);
+        for i in 0..3 {
+            s.push(req(i, 1)).unwrap();
+        }
+        let shed = s.drain();
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(s.is_empty());
+        s.push(req(9, 1)).unwrap(); // queue is reusable after a drain
+        assert_eq!(s.pop_if(|_| true).unwrap().id, 9);
     }
 
     #[test]

@@ -96,6 +96,42 @@ impl Json {
         s
     }
 
+    /// Single-line form (ndjson stream lines, log records).
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    x.write_compact(out);
+                }
+                out.push(']');
+            }
+            // scalars never contain newlines (write_escaped covers Str)
+            leaf => leaf.write(out, 0),
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -344,6 +380,9 @@ mod tests {
         assert_eq!(j.get("c").unwrap().get("d").unwrap().as_f64().unwrap(), -2000.0);
         let re = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(j, re);
+        let compact = j.to_string_compact();
+        assert!(!compact.contains('\n'), "compact form is one line: {compact}");
+        assert_eq!(Json::parse(&compact).unwrap(), j);
     }
 
     #[test]

@@ -5,6 +5,8 @@
 mod common;
 use common::serve_test_meta;
 
+use std::collections::HashSet;
+
 use kurtail::calib::{corpus, ByteTokenizer, CorpusKind, TokenDataset, World};
 use kurtail::config::QuantScheme;
 use kurtail::quant::fakequant::{fake_quant_rows_with_threads, row_scale};
@@ -20,7 +22,8 @@ use kurtail::tensor::matmul::{
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
 use kurtail::serve::{
-    Engine, Int4Weight, KvPool, ParBackend, QuantActs, SeqKv, ServeConfig, ServeModel, ServeQuantSpec,
+    Engine, Int4Weight, KvPool, ParBackend, QuantActs, SeqKv, ServeConfig, ServeError, ServeModel,
+    ServeQuantSpec,
 };
 use kurtail::tensor::stats::{kurtail_loss, kurtosis};
 use kurtail::tensor::Tensor;
@@ -626,6 +629,135 @@ fn prop_serve_streams_bitwise_across_backends_and_layouts() {
                     }
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cancel_interleavings_leak_free_and_replayable() {
+    // the daemon's fault-tolerance invariant: after ANY interleaving of
+    // admit / mid-flight cancel / EOS retire / drain, (a) the pool is
+    // whole (free == max, committed == 0), (b) every surviving stream
+    // is bitwise identical to an undisturbed run of the same
+    // submissions, and (c) when no drain fired, resubmitting the
+    // identical workload on the SAME engine replays bitwise — the
+    // interleaving did not poison later admissions
+    let meta = serve_test_meta();
+    check(6, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            ..ServeConfig::default()
+        };
+        // temp 0 everywhere: argmax sampling is id-independent, so the
+        // same workload replays bitwise even at fresh request ids
+        let reqs: Vec<(Vec<i32>, usize)> = (0..4)
+            .map(|_| {
+                let p = 1 + rng.below(3);
+                let toks = (0..p).map(|_| rng.below(meta.vocab) as i32).collect();
+                (toks, 1 + rng.below(4))
+            })
+            .collect();
+        // probe (no stop) to learn the streams, then give one request a
+        // stop token that provably fires (its first generated token) so
+        // the interleaving includes an EOS retire
+        let mut probe = Engine::new(model.clone(), &cfg).unwrap();
+        for (toks, n) in &reqs {
+            probe.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+        }
+        let mut probed = probe.run().unwrap();
+        probed.sort_by_key(|c| c.id);
+        let eos_req = rng.below(reqs.len());
+        let stop_of = |i: usize| -> Option<i32> {
+            if i == eos_req {
+                Some(probed[i].tokens[probed[i].prompt_len])
+            } else {
+                None
+            }
+        };
+
+        // undisturbed reference with the stop in place
+        let mut reference = Engine::new(model.clone(), &cfg).unwrap();
+        for (i, (toks, n)) in reqs.iter().enumerate() {
+            reference.submit_tokens_stop(toks.clone(), *n, 0.0, 3, stop_of(i)).unwrap();
+        }
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        // interleaved run: random cancel schedule, maybe a drain
+        let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+        let ids: Vec<usize> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, (toks, n))| eng.submit_tokens_stop(toks.clone(), *n, 0.0, 3, stop_of(i)).unwrap())
+            .collect();
+        let cancel_at: Vec<Option<usize>> =
+            ids.iter().map(|_| (rng.below(3) == 0).then(|| rng.below(6))).collect();
+        let drain_at = (rng.below(3) == 0).then(|| rng.below(4));
+        let mut gone: HashSet<usize> = HashSet::new();
+        let mut step_n = 0usize;
+        loop {
+            for (i, id) in ids.iter().enumerate() {
+                if cancel_at[i] == Some(step_n) && eng.cancel(*id) {
+                    gone.insert(*id);
+                }
+            }
+            if drain_at == Some(step_n) {
+                for id in eng.begin_drain() {
+                    gone.insert(id);
+                }
+            }
+            if !eng.step().unwrap() {
+                break;
+            }
+            step_n += 1;
+        }
+        let done = eng.take_completions();
+
+        // (a) leak-freedom, whatever the interleaving did
+        prop_assert(
+            eng.pool().free_blocks() == eng.pool().max_blocks && eng.committed_blocks() == 0,
+            &format!("pool whole after interleaving (cancels={cancel_at:?} drain={drain_at:?})"),
+        )?;
+        // (b) survivors are exactly the un-gone requests, bitwise equal
+        prop_assert(done.len() == ids.len() - gone.len(), "survivors = submissions - cancels - shed")?;
+        for c in &done {
+            prop_assert(!gone.contains(&c.id), "a canceled/shed request must not complete")?;
+            prop_assert(
+                c.tokens == want[c.id].tokens,
+                &format!("surviving stream {} bitwise equal to undisturbed run", c.id),
+            )?;
+        }
+        if drain_at.is_some() {
+            prop_assert(
+                matches!(eng.submit_tokens(vec![1], 1, 0.0, 1), Err(ServeError::Draining)),
+                "post-drain submits shed with Draining",
+            )?;
+        } else {
+            // (c) identical round 2 on the SAME engine replays bitwise
+            for (i, (toks, n)) in reqs.iter().enumerate() {
+                eng.submit_tokens_stop(toks.clone(), *n, 0.0, 3, stop_of(i)).unwrap();
+            }
+            let mut done2 = eng.run().unwrap();
+            done2.sort_by_key(|c| c.id);
+            prop_assert(done2.len() == reqs.len(), "round 2 completes everything")?;
+            for (k, c) in done2.iter().enumerate() {
+                prop_assert(c.tokens == want[k].tokens, &format!("round-2 stream {k} replays bitwise"))?;
+            }
+            prop_assert(
+                eng.pool().free_blocks() == eng.pool().max_blocks,
+                "pool whole again after round 2",
+            )?;
         }
         Ok(())
     });

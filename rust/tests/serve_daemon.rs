@@ -1,0 +1,448 @@
+//! End-to-end daemon tests over real sockets: a raw HTTP/1.1 client
+//! (no client crates either) drives `Daemon` through the full
+//! request/stream/backpressure/deadline/disconnect/drain surface and
+//! checks the two load-bearing invariants at every exit path:
+//!
+//! * completed token streams are bitwise identical to an in-process
+//!   [`Engine::run`] over the same submissions — faults or not;
+//! * whatever happens to a request (completion, shed, deadline, client
+//!   disconnect, injected disconnect, drain), every KV block returns to
+//!   the pool (`free_blocks == max_blocks` via `/stats`).
+//!
+//! The model is `common::serve_test_meta()` (vocab 16 < the byte
+//! tokenizer's 256), so requests use `"tokens"` arrays, not `"prompt"`
+//! strings.
+
+mod common;
+use common::serve_test_meta;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use kurtail::model::Params;
+use kurtail::serve::daemon::fault::FaultSpec;
+use kurtail::serve::{Daemon, DaemonConfig, Engine, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::tensor::hadamard::random_hadamard;
+use kurtail::util::json::Json;
+use kurtail::util::Rng;
+
+fn test_model() -> ServeModel {
+    let meta = serve_test_meta();
+    let mut rng = Rng::new(11);
+    let params = Params::init(&meta, &mut rng);
+    let quant = ServeQuantSpec::paper_default(
+        random_hadamard(meta.d_head, &mut rng),
+        random_hadamard(meta.d_head, &mut rng),
+        random_hadamard(meta.d_ff, &mut rng),
+    );
+    ServeModel::from_params(&params, Some(quant)).unwrap()
+}
+
+// ------------------------------------------------- raw http client
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(&self.body).unwrap_or_else(|e| panic!("bad json body: {e:#}\n{}", self.body))
+    }
+}
+
+/// Open a connection and send one request (the daemon is one-shot per
+/// connection, so the response is everything until EOF).
+fn send_raw(addr: SocketAddr, method: &str, path: &str, body: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("connect to daemon");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    s
+}
+
+/// Read until EOF; a severed socket (the `drop_conn` fault) yields the
+/// bytes that made it onto the wire instead of a panic.
+fn read_lenient(s: &mut TcpStream) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        match s.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(_) => break,
+        }
+    }
+    buf
+}
+
+/// Lenient chunked-transfer decoder: stops at the terminator, a
+/// malformed size line, or a truncated chunk (severed streams).
+fn unchunk(mut rest: &str) -> String {
+    let mut out = String::new();
+    loop {
+        let nl = match rest.find("\r\n") {
+            Some(p) => p,
+            None => break,
+        };
+        let len = match usize::from_str_radix(rest[..nl].trim(), 16) {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if len == 0 {
+            break;
+        }
+        let start = nl + 2;
+        if rest.len() < start + len {
+            out.push_str(&rest[start.min(rest.len())..]);
+            break;
+        }
+        out.push_str(&rest[start..start + len]);
+        rest = &rest[start + len..];
+        rest = rest.strip_prefix("\r\n").unwrap_or(rest);
+    }
+    out
+}
+
+fn parse_response(raw: &[u8]) -> Response {
+    let text = String::from_utf8_lossy(raw).into_owned();
+    let split = text.find("\r\n\r\n").expect("response head");
+    let (head, rest) = (&text[..split], &text[split + 4..]);
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let chunked = headers.iter().any(|(k, v)| k == "transfer-encoding" && v == "chunked");
+    let body = if chunked { unchunk(rest) } else { rest.to_string() };
+    Response { status, headers, body }
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> Response {
+    let mut s = send_raw(addr, method, path, body);
+    let raw = read_lenient(&mut s);
+    parse_response(&raw)
+}
+
+/// Read from an open stream until the first `"token"` line arrived —
+/// proof the request is *live* (admitted and prefilled), not queued.
+fn read_until_first_token(s: &mut TcpStream, got: &mut Vec<u8>) {
+    let mut tmp = [0u8; 1024];
+    while !String::from_utf8_lossy(got.as_slice()).contains("\"token\"") {
+        let n = s.read(&mut tmp).expect("stream read");
+        assert!(n > 0, "stream ended before the first token: {}", String::from_utf8_lossy(got));
+        got.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Poll `/stats` until the engine shows ≥ 1 cancel with every KV block
+/// back in the pool (the disconnect-reclaim invariant).
+fn wait_for_reclaim(addr: SocketAddr, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = request(addr, "GET", "/stats", "").json();
+        let canceled = stats.get("engine").unwrap().get("canceled").unwrap().as_usize().unwrap();
+        let free = stats.get("free_blocks").unwrap().as_usize().unwrap();
+        let max = stats.get("max_blocks").unwrap().as_usize().unwrap();
+        if canceled >= 1 && free == max {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what}: canceled={canceled} free={free}/{max} never converged"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// ------------------------------------------------------------ tests
+
+#[test]
+fn daemon_matches_in_process_engine_with_and_without_faults() {
+    let model = test_model();
+    let cfg = ServeConfig { max_lanes: 2, block_tokens: 4, ..ServeConfig::default() };
+
+    // reference: the same three submissions run in-process
+    let mut reference = Engine::new(model.clone(), &cfg).unwrap();
+    reference.submit_tokens(vec![1, 2, 3], 4, 0.0, 7).unwrap();
+    reference.submit_tokens(vec![4, 5], 3, 0.8, 9).unwrap();
+    reference.submit_tokens(vec![6], 5, 0.0, 3).unwrap();
+    let mut want = reference.run().unwrap();
+    want.sort_by_key(|c| c.id);
+
+    // faults shift admission timing and client visibility, never the
+    // sampled tokens — completed streams stay bitwise identical
+    for fault in [
+        FaultSpec::none(),
+        FaultSpec { pool_exhaust: 0.4, slow_step_ms: 1, seed: 42, ..FaultSpec::none() },
+    ] {
+        let dcfg = DaemonConfig { serve: cfg.clone(), fault: fault.clone(), ..DaemonConfig::default() };
+        let daemon = Daemon::spawn(model.clone(), &dcfg).unwrap();
+        let addr = daemon.addr();
+
+        // sequential posts keep request ids aligned with the reference
+        let r0 =
+            request(addr, "POST", "/v1/generate", r#"{"tokens": [1, 2, 3], "max_tokens": 4, "seed": 7}"#);
+        assert_eq!(r0.status, 200, "fault={fault:?}: {}", r0.body);
+        let toks0: Vec<i32> = r0
+            .json()
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(toks0, want[0].tokens, "completion bitwise identical (fault={fault:?})");
+
+        let r1 = request(
+            addr,
+            "POST",
+            "/v1/generate",
+            r#"{"tokens": [4, 5], "max_tokens": 3, "temp": 0.8, "seed": 9}"#,
+        );
+        assert_eq!(r1.status, 200, "fault={fault:?}: {}", r1.body);
+        let toks1: Vec<i32> = r1
+            .json()
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(toks1, want[1].tokens, "sampled (temp>0) stream replays too (fault={fault:?})");
+
+        // third request streams: per-token lines, then a done marker
+        let r2 = request(
+            addr,
+            "POST",
+            "/v1/generate",
+            r#"{"tokens": [6], "max_tokens": 5, "seed": 3, "stream": true}"#,
+        );
+        assert_eq!(r2.status, 200, "fault={fault:?}");
+        let streamed: Vec<i32> = r2
+            .body
+            .lines()
+            .filter_map(|l| Json::parse(l).ok())
+            .filter_map(|j| j.opt("token").and_then(|t| t.as_f64().ok()).map(|f| f as i32))
+            .collect();
+        assert_eq!(
+            streamed,
+            want[2].tokens[want[2].prompt_len..].to_vec(),
+            "streamed tokens == generated suffix (fault={fault:?})"
+        );
+        let done = Json::parse(r2.body.lines().last().unwrap()).unwrap();
+        assert!(matches!(done.opt("done"), Some(Json::Bool(true))), "stream terminates with done");
+        assert_eq!(
+            done.get("n_tokens").unwrap().as_usize().unwrap(),
+            want[2].tokens.len() - want[2].prompt_len
+        );
+
+        let stats = request(addr, "GET", "/stats", "").json();
+        assert_eq!(stats.get("engine").unwrap().get("admitted").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            stats.get("free_blocks").unwrap().as_usize().unwrap(),
+            stats.get("max_blocks").unwrap().as_usize().unwrap(),
+            "every KV block back after 3 completions (fault={fault:?})"
+        );
+        daemon.join().unwrap();
+    }
+}
+
+#[test]
+fn daemon_backpressure_sheds_with_retry_after() {
+    // one lane, a one-deep queue and slow steps: 6 concurrent posts
+    // must shed at least one request with 429 + Retry-After while at
+    // least one completes
+    let dcfg = DaemonConfig {
+        queue_cap: 1,
+        serve: ServeConfig { max_lanes: 1, block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { slow_step_ms: 10, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            thread::spawn(move || request(addr, "POST", "/v1/generate", r#"{"tokens": [1, 2], "max_tokens": 4}"#))
+        })
+        .collect();
+    let responses: Vec<Response> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let ok = responses.iter().filter(|r| r.status == 200).count();
+    let shed: Vec<&Response> = responses.iter().filter(|r| r.status == 429).collect();
+    assert!(ok >= 1, "someone completes under load");
+    assert!(!shed.is_empty(), "queue_cap=1 with 6 concurrent posts must shed");
+    for r in &shed {
+        assert_eq!(r.header("retry-after"), Some("1"), "backpressure carries Retry-After");
+        assert_eq!(r.json().get("error").unwrap().as_str().unwrap(), "queue_full");
+    }
+
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert!(stats.get("engine").unwrap().get("shed").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(
+        stats.get("free_blocks").unwrap().as_usize().unwrap(),
+        stats.get("max_blocks").unwrap().as_usize().unwrap(),
+        "shed requests never touch the pool"
+    );
+    daemon.join().unwrap();
+}
+
+#[test]
+fn daemon_deadline_maps_to_504_and_returns_blocks() {
+    // 30 ms steps against a 1 ms deadline: the sweep cancels the
+    // request long before its 8 tokens could finish
+    let dcfg = DaemonConfig {
+        serve: ServeConfig { block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { slow_step_ms: 30, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    let r = request(addr, "POST", "/v1/generate", r#"{"tokens": [1, 2], "max_tokens": 8, "deadline_ms": 1}"#);
+    assert_eq!(r.status, 504, "{}", r.body);
+    assert_eq!(r.json().get("error").unwrap().as_str().unwrap(), "deadline");
+
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert!(stats.get("engine").unwrap().get("canceled").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(
+        stats.get("free_blocks").unwrap().as_usize().unwrap(),
+        stats.get("max_blocks").unwrap().as_usize().unwrap(),
+        "deadline cancel returned every block"
+    );
+    daemon.join().unwrap();
+}
+
+#[test]
+fn client_disconnect_mid_stream_reclaims_blocks() {
+    let dcfg = DaemonConfig {
+        serve: ServeConfig { block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { slow_step_ms: 10, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+    {
+        let mut s =
+            send_raw(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 12, "stream": true}"#);
+        let mut got = Vec::new();
+        read_until_first_token(&mut s, &mut got);
+    } // drop: the client hangs up mid-stream
+    wait_for_reclaim(addr, "client disconnect");
+    daemon.join().unwrap();
+}
+
+#[test]
+fn injected_drop_conn_severs_stream_and_reclaims() {
+    // drop_conn=1.0 severs every stream after 1..=4 tokens, exercising
+    // the disconnect path from the daemon side; the lenient client
+    // parser sees a truncated body, never a done marker
+    let dcfg = DaemonConfig {
+        serve: ServeConfig { block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { drop_conn: 1.0, seed: 5, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    let r = request(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 12, "stream": true}"#);
+    assert_eq!(r.status, 200, "the head went out before the sever");
+    let toks = r.body.lines().filter(|l| l.contains("\"token\"")).count();
+    assert!((1..=4).contains(&toks), "severed after a few tokens, got {toks}");
+    assert!(!r.body.contains("\"done\""), "a severed stream must not complete: {}", r.body);
+
+    wait_for_reclaim(addr, "injected drop_conn");
+    daemon.join().unwrap();
+}
+
+#[test]
+fn drain_rejects_new_work_and_finishes_live_streams() {
+    let dcfg = DaemonConfig {
+        serve: ServeConfig { block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+    let health = request(addr, "GET", "/healthz", "");
+    assert_eq!((health.status, health.body.as_str()), (200, "ok"));
+
+    // open a stream and wait for its first token: the lane is live, so
+    // the drain must let it finish
+    let mut s = send_raw(addr, "POST", "/v1/generate", r#"{"tokens": [2], "max_tokens": 10, "stream": true}"#);
+    let mut got = Vec::new();
+    read_until_first_token(&mut s, &mut got);
+
+    let r = request(addr, "POST", "/admin/drain", "");
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(request(addr, "GET", "/healthz", "").status, 503, "draining flips healthz");
+
+    let rejected = request(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 2}"#);
+    assert_eq!(rejected.status, 503, "new work sheds during drain: {}", rejected.body);
+    assert_eq!(rejected.header("retry-after"), Some("1"));
+    assert_eq!(rejected.json().get("error").unwrap().as_str().unwrap(), "draining");
+
+    // /stats stays reachable while draining (503 only once the engine
+    // thread has already retired the last lane and exited)
+    let stats = request(addr, "GET", "/stats", "");
+    if stats.status == 200 {
+        assert!(matches!(stats.json().get("draining"), Ok(Json::Bool(true))));
+    } else {
+        assert_eq!(stats.status, 503, "{}", stats.body);
+    }
+
+    // the live stream runs to completion across the drain
+    got.extend_from_slice(&read_lenient(&mut s));
+    let resp = parse_response(&got);
+    assert!(resp.body.contains("\"done\": true"), "live stream finished: {}", resp.body);
+
+    daemon.join().unwrap();
+}
+
+#[test]
+fn daemon_rejects_malformed_requests() {
+    let daemon = Daemon::spawn(test_model(), &DaemonConfig::default()).unwrap();
+    let addr = daemon.addr();
+
+    let bad = request(addr, "POST", "/v1/generate", "this is not json");
+    assert_eq!(bad.status, 400);
+    assert_eq!(bad.json().get("error").unwrap().as_str().unwrap(), "invalid");
+    assert_eq!(bad.header("retry-after"), None, "client errors are not retryable");
+
+    // vocab is 16: out-of-range prompt tokens are a 400, not a panic
+    let oov = request(addr, "POST", "/v1/generate", r#"{"tokens": [99], "max_tokens": 2}"#);
+    assert_eq!(oov.status, 400, "{}", oov.body);
+
+    // prompt + generation beyond the KV capacity is recoverable too
+    let huge = request(addr, "POST", "/v1/generate", r#"{"tokens": [1, 2, 3], "max_tokens": 200}"#);
+    assert_eq!(huge.status, 400, "{}", huge.body);
+
+    assert_eq!(request(addr, "GET", "/nope", "").status, 404);
+
+    // rejects left the engine untouched
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert_eq!(stats.get("engine").unwrap().get("admitted").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(
+        stats.get("free_blocks").unwrap().as_usize().unwrap(),
+        stats.get("max_blocks").unwrap().as_usize().unwrap()
+    );
+    daemon.join().unwrap();
+}

@@ -16,6 +16,10 @@
 #                                                (fused column-major GEMM
 #                                                 epilogues vs the PR-4
 #                                                 serial-flip path)
+#              runs[lanes=16].p99_ttft_ms        (open-loop Poisson load
+#                                                 through the daemon host;
+#                                                 LOWER is better — gated
+#                                                 as a ceiling, not a floor)
 #
 # Usage:  scripts/check_bench.sh            # gate current vs baseline
 #         scripts/check_bench.sh --update   # refresh BENCH_baseline/
@@ -72,17 +76,20 @@ cur_k, cur_s = load(kernels_path), load(serve_path)
 base_k = load(f"{baseline_dir}/BENCH_kernels.json")
 base_s = load(f"{baseline_dir}/BENCH_serve.json")
 
+# (name, extractor, current args, baseline args, direction): "higher"
+# gates a floor at base*(1-TOL), "lower" a ceiling at base*(1+TOL)
 metrics = [
-    ("kernels: matmul@1024 speedup", kernel_speedup, (cur_k, "matmul", 1024), (base_k, "matmul", 1024)),
-    ("kernels: gram@1024 speedup", kernel_speedup, (cur_k, "gram", 1024), (base_k, "gram", 1024)),
-    ("serve: lanes=16 speedup_vs_lane1", serve_run_metric, (cur_s, 16, "speedup_vs_lane1"), (base_s, 16, "speedup_vs_lane1")),
-    ("serve: lanes=16 int_gemm_speedup", serve_run_metric, (cur_s, 16, "int_gemm_speedup"), (base_s, 16, "int_gemm_speedup")),
-    ("serve: lanes=16 arena_speedup", serve_run_metric, (cur_s, 16, "arena_speedup"), (base_s, 16, "arena_speedup")),
-    ("serve: lanes=16 epilogue_fused_speedup", serve_run_metric, (cur_s, 16, "epilogue_fused_speedup"), (base_s, 16, "epilogue_fused_speedup")),
+    ("kernels: matmul@1024 speedup", kernel_speedup, (cur_k, "matmul", 1024), (base_k, "matmul", 1024), "higher"),
+    ("kernels: gram@1024 speedup", kernel_speedup, (cur_k, "gram", 1024), (base_k, "gram", 1024), "higher"),
+    ("serve: lanes=16 speedup_vs_lane1", serve_run_metric, (cur_s, 16, "speedup_vs_lane1"), (base_s, 16, "speedup_vs_lane1"), "higher"),
+    ("serve: lanes=16 int_gemm_speedup", serve_run_metric, (cur_s, 16, "int_gemm_speedup"), (base_s, 16, "int_gemm_speedup"), "higher"),
+    ("serve: lanes=16 arena_speedup", serve_run_metric, (cur_s, 16, "arena_speedup"), (base_s, 16, "arena_speedup"), "higher"),
+    ("serve: lanes=16 epilogue_fused_speedup", serve_run_metric, (cur_s, 16, "epilogue_fused_speedup"), (base_s, 16, "epilogue_fused_speedup"), "higher"),
+    ("serve: lanes=16 p99_ttft_ms", serve_run_metric, (cur_s, 16, "p99_ttft_ms"), (base_s, 16, "p99_ttft_ms"), "lower"),
 ]
 
 failures = []
-for name, fn, cur_args, base_args in metrics:
+for name, fn, cur_args, base_args, direction in metrics:
     try:
         base = fn(*base_args)
     except KeyError as e:
@@ -98,10 +105,17 @@ for name, fn, cur_args, base_args in metrics:
         print(f"  REGRESSION  {name}: missing from current bench output ({e})")
         failures.append(f"{name} (missing from current output)")
         continue
-    floor = base * (1.0 - TOLERANCE)
-    status = "ok" if cur >= floor else "REGRESSION"
-    print(f"  {status:>10}  {name}: current {cur:.3f} vs baseline {base:.3f} (floor {floor:.3f})")
-    if cur < floor:
+    if direction == "higher":
+        bound = base * (1.0 - TOLERANCE)
+        ok = cur >= bound
+        kind = "floor"
+    else:
+        bound = base * (1.0 + TOLERANCE)
+        ok = cur <= bound
+        kind = "ceiling"
+    status = "ok" if ok else "REGRESSION"
+    print(f"  {status:>10}  {name}: current {cur:.3f} vs baseline {base:.3f} ({kind} {bound:.3f})")
+    if not ok:
         failures.append(name)
 
 if failures:
