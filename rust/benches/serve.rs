@@ -28,7 +28,12 @@
 //!   on the fresh-alloc path — so the committed baseline floor stays
 //!   comparable (`scripts/check_bench.sh` gates the speedups; each A/B
 //!   isolates one knob so one knob's gain can't mask or fake another's
-//!   regression).
+//!   regression),
+//! * the default profile with observability disabled
+//!   (`ServeConfig::obs = Some(false)`): `obs_off_tok_s`, and
+//!   `obs_overhead = obs_off_tok_s / tok_s − 1` measures what the
+//!   telemetry layer (clock reads + relaxed atomic records) costs;
+//!   `scripts/check_bench.sh` caps it at 2% at lanes = 16.
 //!
 //! Each lane count then runs an **open-loop Poisson load** through the
 //! daemon host (`spawn_host`, no socket in the path): seeded
@@ -124,6 +129,7 @@ fn timed_run_cfg(
     panel_cache: Option<usize>,
     fused_epilogue: Option<bool>,
     par_backend: Option<ParBackend>,
+    obs: Option<bool>,
 ) -> (f64, usize, Engine) {
     let cfg = ServeConfig {
         max_lanes: lanes,
@@ -133,6 +139,7 @@ fn timed_run_cfg(
         panel_cache,
         fused_epilogue,
         par_backend,
+        obs,
         ..ServeConfig::default()
     };
     let mut eng = Engine::new(model.clone(), &cfg).expect("engine");
@@ -153,7 +160,7 @@ fn timed_run(
     arena: Option<bool>,
     panel_cache: Option<usize>,
 ) -> (f64, usize, Engine) {
-    timed_run_cfg(model, kv, lanes, requests, int_gemm, arena, panel_cache, None, None)
+    timed_run_cfg(model, kv, lanes, requests, int_gemm, arena, panel_cache, None, None, None)
 }
 
 /// Open-loop Poisson load through the daemon host at ~1.5× the measured
@@ -257,6 +264,10 @@ fn poisson_load(model: &ServeModel, lanes: usize, tok_s: f64) -> Vec<(&'static s
 }
 
 fn main() {
+    // the Poisson host would otherwise print one lifecycle log line per
+    // request into the bench output (format is latched on first use, so
+    // set it before anything logs)
+    std::env::set_var("KURTAIL_LOG", "off");
     let meta = bench_meta();
     let mut rng = Rng::new(0);
     let params = Params::init(&meta, &mut rng);
@@ -306,6 +317,7 @@ fn main() {
             None,
             Some(false),
             Some(ParBackend::Steal),
+            Some(true),
         );
         let serial_tok_s = serial_tokens as f64 / serial_wall;
         // arena + fused profile on the static runtime (one side of the
@@ -320,10 +332,27 @@ fn main() {
             None,
             Some(true),
             Some(ParBackend::Static),
+            Some(true),
         );
         let static_tok_s = static_tokens as f64 / static_wall;
+        // default profile with observability off (one side of the obs
+        // A/B: only the instrumentation differs — clock reads + atomic
+        // records; check_bench.sh caps the gap at 2% at lanes = 16)
+        let (ooff_wall, ooff_tokens, _) = timed_run_cfg(
+            &int4,
+            KvQuant::Asym4,
+            lanes,
+            REQUESTS,
+            Some(true),
+            Some(true),
+            None,
+            Some(true),
+            Some(ParBackend::Steal),
+            Some(false),
+        );
+        let obs_off_tok_s = ooff_tokens as f64 / ooff_wall;
         // integer GEMM + arena + panel cache + fused epilogues +
-        // work-stealing runtime (the default serving path)
+        // work-stealing runtime (the default serving path, obs on)
         let (wall, tokens, eng) = timed_run_cfg(
             &int4,
             KvQuant::Asym4,
@@ -334,6 +363,7 @@ fn main() {
             None,
             Some(true),
             Some(ParBackend::Steal),
+            Some(true),
         );
         let tok_s = tokens as f64 / wall;
         if lanes == 1 {
@@ -344,12 +374,15 @@ fn main() {
         let arena_speedup = tok_s / legacy_tok_s.max(1e-9);
         let epilogue_speedup = tok_s / serial_tok_s.max(1e-9);
         let steal_speedup = tok_s / static_tok_s.max(1e-9);
+        let obs_overhead = obs_off_tok_s / tok_s.max(1e-9) - 1.0;
         println!(
             "int4 lanes={lanes:<2}: {tok_s:.1} tok/s ({tokens} tokens in {wall:.2}s, \
              {speedup:.2}x vs 1 lane, {arena_speedup:.2}x vs alloc path {legacy_tok_s:.1} tok/s, \
              {epilogue_speedup:.2}x vs serial epilogue {serial_tok_s:.1} tok/s, \
              {steal_speedup:.2}x vs static runtime {static_tok_s:.1} tok/s; \
-             int-vs-f32 on the alloc profile: {int_speedup:.2}x over {f32_tok_s:.1} tok/s)"
+             int-vs-f32 on the alloc profile: {int_speedup:.2}x over {f32_tok_s:.1} tok/s; \
+             obs overhead {:.1}% vs {obs_off_tok_s:.1} tok/s off)",
+            obs_overhead * 100.0
         );
         let mut row = vec![
             ("lanes", num(lanes as f64)),
@@ -367,6 +400,8 @@ fn main() {
             ("epilogue_fused_speedup", num(epilogue_speedup)),
             ("static_par_tok_s", num(static_tok_s)),
             ("steal_speedup", num(steal_speedup)),
+            ("obs_off_tok_s", num(obs_off_tok_s)),
+            ("obs_overhead", num(obs_overhead)),
         ];
         row.extend(poisson_load(&int4, lanes, tok_s));
         runs.push(obj(row));

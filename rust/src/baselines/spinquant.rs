@@ -13,7 +13,8 @@ use anyhow::Result;
 use crate::model::Params;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::{hadamard::{orthogonality_error, random_hadamard}, IntTensor, Tensor};
-use crate::util::{timer, Rng, Stopwatch};
+use crate::obs::StageTimer;
+use crate::util::{timer, Rng};
 
 pub struct SpinQuantReport {
     pub r1: Tensor,
@@ -35,7 +36,7 @@ pub fn spinquant_learn(
     let meta = params.meta.clone();
     let d = meta.d_model;
     let art = rt.load(&format!("spinquant_step_{}", meta.name))?;
-    let sw = Stopwatch::start("spinquant");
+    let sw = StageTimer::start("spinquant");
     let mut rng = Rng::new(seed ^ 0x5917);
 
     // SpinQuant initializes from a random Hadamard rotation.
@@ -82,7 +83,7 @@ pub fn spinquant_learn(
     Ok(SpinQuantReport {
         r1,
         losses,
-        wall_s: sw.elapsed_s(),
+        wall_s: sw.stop(),
         peak_rss_mib: timer::peak_rss_mib(),
     })
 }

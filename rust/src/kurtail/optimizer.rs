@@ -6,7 +6,8 @@ use crate::config::CalibConfig;
 use crate::model::{capture_stream, Params, RowReservoir};
 use crate::runtime::{Runtime, Value};
 use crate::tensor::{hadamard::orthogonality_error, Tensor};
-use crate::util::{timer, Rng, Stopwatch};
+use crate::obs::StageTimer;
+use crate::util::{timer, Rng};
 
 /// Result of one Cayley-Adam run.
 pub struct CayleyOutcome {
@@ -81,7 +82,7 @@ pub fn learn_rotations(
     let mut rng = Rng::new(calib.seed ^ 0x6A11);
 
     // --- capture phase (layer-wise; bounded memory) ---------------------
-    let sw = Stopwatch::start("capture");
+    let sw = StageTimer::start("capture");
     // R1 pool: MHSA+FFN block inputs of ALL layers, normed, shuffled —
     // "we shuffle the stored input data from all transformer layers and
     //  both blocks" (paper §3).
@@ -98,10 +99,10 @@ pub fn learn_rotations(
         r2_pools[taps.layer].offer(&taps.v_heads);
         Ok(())
     })?;
-    let capture_s = sw.elapsed_s();
+    let capture_s = sw.stop();
 
     // --- optimization phase ---------------------------------------------
-    let sw = Stopwatch::start("optimize");
+    let sw = StageTimer::start("optimize");
     let r1_run = cayley_run(rt, d, &mut r1_pool, calib.iters, calib.lr)?;
     let mut r2 = Vec::with_capacity(meta.n_layers);
     let mut r2_final_losses = Vec::with_capacity(meta.n_layers);
@@ -111,7 +112,7 @@ pub fn learn_rotations(
         r2_final_losses.push(*run.losses.last().unwrap());
         r2.push(run.rotation);
     }
-    let optimize_s = sw.elapsed_s();
+    let optimize_s = sw.stop();
 
     Ok(KurtailReport {
         r1: r1_run.rotation,

@@ -8,7 +8,8 @@
 //!   RTN/GPTQ weight quantization, baselines (QuaRot, SpinQuant-lite), the
 //!   evaluation harness, one experiment runner per paper table/figure, and
 //!   the native INT4 serving engine ([`serve`]: packed 4-bit weights,
-//!   paged 4-bit KV cache, continuous-batching decode).
+//!   paged 4-bit KV cache, continuous-batching decode) with its
+//!   telemetry layer ([`obs`]: histograms, spans, Prometheus exposition).
 //! * **L2/L1 (python/compile, build-time only)** — JAX model graphs and
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed here
 //!   through PJRT ([`runtime`]).
@@ -22,6 +23,7 @@ pub mod eval;
 pub mod exp;
 pub mod kurtail;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod quant;
 pub mod rotation;

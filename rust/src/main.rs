@@ -343,7 +343,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             let stop = signal::install();
             let daemon = Daemon::spawn(model, &dcfg)?;
             println!("kurtail daemon listening on http://{}", daemon.addr());
-            println!("  POST /v1/generate | GET /stats | GET /healthz | POST /admin/drain");
+            println!("  POST /v1/generate | GET /stats | GET /metrics | GET /healthz | POST /admin/drain");
             if !dcfg.fault.is_none() {
                 println!("  fault injection armed: {:?}", dcfg.fault);
             }

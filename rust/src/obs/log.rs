@@ -1,0 +1,196 @@
+//! Structured, leveled log lines for request lifecycle events.
+//!
+//! One line per event on stderr, formatted per `KURTAIL_LOG`:
+//!
+//! * `text` (default) — `ts=1754640000.123 level=info event=request_done
+//!   id=3 tenant="alice" ...` (logfmt-style, greppable)
+//! * `json` — the same fields as one JSON object per line, for log
+//!   shippers
+//! * `off` — suppress everything
+//!
+//! The format is resolved once per process and cached. Logging happens
+//! only at request lifecycle boundaries (accept / shed / done / failed)
+//! and daemon lifecycle events — never on the per-step decode hot path —
+//! so the allocation it does is irrelevant to the zero-alloc contract.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogFormat {
+    Text,
+    Json,
+    Off,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogLevel {
+    Info,
+    Warn,
+    Error,
+}
+
+impl LogLevel {
+    fn as_str(self) -> &'static str {
+        match self {
+            LogLevel::Info => "info",
+            LogLevel::Warn => "warn",
+            LogLevel::Error => "error",
+        }
+    }
+}
+
+/// A borrowed field value — callers build `&[(&str, LogValue)]` on the
+/// stack; nothing is allocated until a line is actually emitted.
+#[derive(Clone, Copy, Debug)]
+pub enum LogValue<'a> {
+    U64(u64),
+    F64(f64),
+    Str(&'a str),
+    Bool(bool),
+}
+
+/// Parse rule for `KURTAIL_LOG`: unset/`text` → text, `json` → json,
+/// `off`/`0` → off; anything unrecognized falls back to text.
+fn log_format_flag(var: Option<&str>) -> LogFormat {
+    match var.map(str::trim) {
+        Some("json") => LogFormat::Json,
+        Some("off") | Some("0") => LogFormat::Off,
+        _ => LogFormat::Text,
+    }
+}
+
+/// The process's log format (resolved from `KURTAIL_LOG` once).
+pub fn log_format() -> LogFormat {
+    static FORMAT: OnceLock<LogFormat> = OnceLock::new();
+    *FORMAT.get_or_init(|| log_format_flag(std::env::var("KURTAIL_LOG").ok().as_deref()))
+}
+
+/// Emit one structured log line to stderr (format per `KURTAIL_LOG`).
+pub fn log_event(level: LogLevel, event: &str, fields: &[(&str, LogValue)]) {
+    let fmt = log_format();
+    if fmt == LogFormat::Off {
+        return;
+    }
+    let ts = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let line = match fmt {
+        LogFormat::Json => render_json(ts, level, event, fields),
+        _ => render_text(ts, level, event, fields),
+    };
+    // single write so concurrent threads' lines never interleave
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
+}
+
+pub fn info(event: &str, fields: &[(&str, LogValue)]) {
+    log_event(LogLevel::Info, event, fields);
+}
+
+pub fn warn(event: &str, fields: &[(&str, LogValue)]) {
+    log_event(LogLevel::Warn, event, fields);
+}
+
+pub fn error(event: &str, fields: &[(&str, LogValue)]) {
+    log_event(LogLevel::Error, event, fields);
+}
+
+fn render_text(ts: f64, level: LogLevel, event: &str, fields: &[(&str, LogValue)]) -> String {
+    let mut s = format!("ts={ts:.3} level={} event={event}", level.as_str());
+    for (k, v) in fields {
+        match v {
+            LogValue::U64(n) => s.push_str(&format!(" {k}={n}")),
+            LogValue::F64(x) => s.push_str(&format!(" {k}={x:.3}")),
+            LogValue::Bool(b) => s.push_str(&format!(" {k}={b}")),
+            LogValue::Str(t) => s.push_str(&format!(" {k}={}", quote_json(t))),
+        }
+    }
+    s
+}
+
+fn render_json(ts: f64, level: LogLevel, event: &str, fields: &[(&str, LogValue)]) -> String {
+    let mut s = format!(
+        "{{\"ts\": {ts:.3}, \"level\": {}, \"event\": {}",
+        quote_json(level.as_str()),
+        quote_json(event)
+    );
+    for (k, v) in fields {
+        s.push_str(&format!(", {}: ", quote_json(k)));
+        match v {
+            LogValue::U64(n) => s.push_str(&n.to_string()),
+            LogValue::F64(x) => s.push_str(&format!("{x:.3}")),
+            LogValue::Bool(b) => s.push_str(&b.to_string()),
+            LogValue::Str(t) => s.push_str(&quote_json(t)),
+        }
+    }
+    s.push('}');
+    s
+}
+
+fn quote_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_format_parse_rule() {
+        assert_eq!(log_format_flag(None), LogFormat::Text);
+        assert_eq!(log_format_flag(Some("text")), LogFormat::Text);
+        assert_eq!(log_format_flag(Some("json")), LogFormat::Json);
+        assert_eq!(log_format_flag(Some(" json ")), LogFormat::Json);
+        assert_eq!(log_format_flag(Some("off")), LogFormat::Off);
+        assert_eq!(log_format_flag(Some("0")), LogFormat::Off);
+        assert_eq!(log_format_flag(Some("verbose")), LogFormat::Text);
+    }
+
+    #[test]
+    fn json_lines_are_valid_json() {
+        let line = render_json(
+            1.5,
+            LogLevel::Warn,
+            "request_shed",
+            &[
+                ("id", LogValue::U64(7)),
+                ("tenant", LogValue::Str("a\"b")),
+                ("retryable", LogValue::Bool(true)),
+                ("wait_ms", LogValue::F64(12.25)),
+            ],
+        );
+        let parsed = crate::util::Json::parse(&line).expect("line parses");
+        assert_eq!(parsed.get("event").unwrap().as_str().unwrap(), "request_shed");
+        assert_eq!(parsed.get("tenant").unwrap().as_str().unwrap(), "a\"b");
+        assert_eq!(parsed.get("id").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn text_lines_are_single_line() {
+        let line = render_text(
+            1.0,
+            LogLevel::Info,
+            "e",
+            &[("msg", LogValue::Str("two\nlines"))],
+        );
+        assert!(!line.contains('\n'), "newline escaped: {line}");
+        assert!(line.starts_with("ts=1.000 level=info event=e"));
+    }
+}

@@ -1,0 +1,579 @@
+//! Metrics core: lock-free counters/gauges, fixed-log2-bucket latency
+//! histograms, and a registry that renders Prometheus text exposition.
+//!
+//! Everything on the record path is a handful of relaxed atomic RMWs on
+//! pre-registered `Arc`s — no locks, no allocation — so the serving
+//! engine can record from the decode hot path without violating the
+//! zero-alloc steady-state contract (`tests/serve_scratch.rs`).
+//!
+//! ## Histogram layout
+//!
+//! Durations are recorded in nanoseconds into power-of-two buckets:
+//! bucket 0 holds the value 0, bucket `i` (1 ≤ i < 43) holds
+//! `[2^(i-1), 2^i - 1]`, and the last bucket is the `+Inf` overflow for
+//! anything ≥ 2^42 ns (~73 min). A quantile estimate returns the upper
+//! bound of the bucket containing the requested rank, so it is always
+//! ≥ the true order statistic and < 2× it — a bound the property tests
+//! in `tests/props.rs` hold against a sorted reference.
+//!
+//! Snapshots are plain `u64` arrays: mergeable (element-wise add, hence
+//! associative), serializable, and safe to ship across threads.
+//!
+//! ## Registry scope
+//!
+//! `Registry::new()` makes an isolated registry; each `serve::Engine`
+//! owns one so parallel tests (and future multi-engine processes) never
+//! cross-contaminate. [`global()`] is the process-wide default used by
+//! offline pipeline stage timers ([`StageTimer`]); the daemon's
+//! `GET /metrics` serves its engine's registry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Number of histogram buckets, including the value-0 bucket and the
+/// trailing `+Inf` overflow bucket.
+pub const HIST_BUCKETS: usize = 44;
+
+/// Monotonic counter (`_total` series).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (occupancy, lane counts, queue depth).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket index for a nanosecond value: 0 for 0, else `64 - lz`,
+/// clamped into the overflow bucket.
+#[inline]
+fn bucket_idx(ns: u64) -> usize {
+    let idx = (64 - ns.leading_zeros()) as usize;
+    idx.min(HIST_BUCKETS - 1)
+}
+
+/// Upper bound (ns) of bucket `i`; the overflow bucket reports its lower
+/// bound (there is no finite upper bound to return).
+#[inline]
+fn bucket_upper_ns(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        i if i < HIST_BUCKETS - 1 => (1u64 << i) - 1,
+        _ => 1u64 << (HIST_BUCKETS - 2),
+    }
+}
+
+/// Lock-free log2-bucket latency histogram. Record with [`record_ns`]
+/// (3 relaxed `fetch_add`s); read with [`snapshot`].
+///
+/// [`record_ns`]: Histogram::record_ns
+/// [`snapshot`]: Histogram::snapshot
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_idx(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]: mergeable and quantile-able.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { buckets: [0; HIST_BUCKETS], count: 0, sum_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Element-wise accumulate `other` into `self` (associative and
+    /// commutative, so shard merges are order-independent).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    /// Estimated `q`-quantile in ns: the upper bound of the bucket that
+    /// contains rank `ceil(q * count)`. Always ≥ the true order
+    /// statistic and < 2× it. `None` when empty.
+    pub fn quantile_ns(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(bucket_upper_ns(i));
+            }
+        }
+        Some(bucket_upper_ns(HIST_BUCKETS - 1))
+    }
+
+    /// Mean observed value in ns (`None` when empty).
+    pub fn mean_ns(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum_ns as f64 / self.count as f64)
+    }
+}
+
+/// A registered metric: the shared handle plus exposition metadata.
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    labels: Vec<(&'static str, String)>,
+    metric: Metric,
+}
+
+/// Metric registry: registration is idempotent on `(name, labels)` — a
+/// second registration returns the existing handle — so callers may
+/// re-derive handles freely. Registration takes a lock; recording never
+/// does.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { entries: Mutex::new(Vec::new()) }
+    }
+
+    fn register<T>(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+        make: impl FnOnce() -> Metric,
+        pick: impl Fn(&Metric) -> Option<Arc<T>>,
+    ) -> Arc<T> {
+        let labels: Vec<(&'static str, String)> =
+            labels.iter().map(|&(k, v)| (k, v.to_string())).collect();
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            return pick(&e.metric).unwrap_or_else(|| {
+                panic!("metric {name} re-registered as a different kind ({})", e.metric.kind())
+            });
+        }
+        let metric = make();
+        let handle = pick(&metric).expect("freshly made metric matches its own kind");
+        entries.push(Entry { name, help, labels, metric });
+        handle
+    }
+
+    pub fn counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Counter> {
+        self.register(name, help, labels, || Metric::Counter(Arc::new(Counter::new())), |m| {
+            match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            }
+        })
+    }
+
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Gauge> {
+        self.register(name, help, labels, || Metric::Gauge(Arc::new(Gauge::new())), |m| match m {
+            Metric::Gauge(g) => Some(g.clone()),
+            _ => None,
+        })
+    }
+
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Histogram> {
+        self.register(
+            name,
+            help,
+            labels,
+            || Metric::Histogram(Arc::new(Histogram::new())),
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Render every registered series as Prometheus text exposition
+    /// (format 0.0.4): one `# HELP`/`# TYPE` pair per metric name,
+    /// cumulative `le` buckets in seconds, deterministic ordering.
+    pub fn render_prometheus(&self) -> String {
+        let mut entries: Vec<Entry> = self.entries.lock().unwrap().clone();
+        entries.sort_by(|a, b| (a.name, &a.labels).cmp(&(b.name, &b.labels)));
+        let mut out = String::with_capacity(1024);
+        let mut last_name = "";
+        for e in &entries {
+            if e.name != last_name {
+                out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+                out.push_str(&format!("# TYPE {} {}\n", e.name, e.metric.kind()));
+                last_name = e.name;
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        e.name,
+                        label_block(&e.labels, None),
+                        c.get()
+                    ));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        e.name,
+                        label_block(&e.labels, None),
+                        g.get()
+                    ));
+                }
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    let mut cum = 0u64;
+                    for (i, &c) in snap.buckets.iter().enumerate() {
+                        cum += c;
+                        // keep the exposition compact: only bounds with
+                        // observations, plus the mandatory +Inf
+                        if i == HIST_BUCKETS - 1 {
+                            out.push_str(&format!(
+                                "{}_bucket{} {}\n",
+                                e.name,
+                                label_block(&e.labels, Some("+Inf")),
+                                cum
+                            ));
+                        } else if c > 0 {
+                            let le = format!("{:e}", bucket_upper_ns(i) as f64 * 1e-9);
+                            out.push_str(&format!(
+                                "{}_bucket{} {}\n",
+                                e.name,
+                                label_block(&e.labels, Some(&le)),
+                                cum
+                            ));
+                        }
+                    }
+                    // seconds, matching the `le` bounds
+                    out.push_str(&format!(
+                        "{}_sum{} {:e}\n",
+                        e.name,
+                        label_block(&e.labels, None),
+                        snap.sum_ns as f64 * 1e-9
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        e.name,
+                        label_block(&e.labels, None),
+                        snap.count
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` with exposition-format escaping; empty string when
+/// there are no labels. `le` is appended last when given.
+fn label_block(labels: &[(&'static str, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Process-global registry (offline pipeline stage timers; anything not
+/// owned by a specific engine).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Wall-clock stage timer: the successor to the retired
+/// `util::timer::Stopwatch` label printer. `stop()` records the elapsed
+/// time into the `kurtail_stage_seconds{stage=...}` histogram in the
+/// global registry and returns the elapsed seconds.
+pub struct StageTimer {
+    start: Instant,
+    hist: Arc<Histogram>,
+}
+
+impl StageTimer {
+    pub fn start(stage: &'static str) -> Self {
+        let hist = global().histogram(
+            "kurtail_stage_seconds",
+            "Wall-clock of coarse offline pipeline stages",
+            &[("stage", stage)],
+        );
+        Self { start: Instant::now(), hist }
+    }
+
+    /// Seconds since `start()` without recording (for mid-stage peeks).
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record the stage duration into the histogram; returns seconds.
+    pub fn stop(self) -> f64 {
+        let d = self.start.elapsed();
+        self.hist.record_duration(d);
+        d.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_idx_covers_powers_of_two() {
+        assert_eq!(bucket_idx(0), 0);
+        assert_eq!(bucket_idx(1), 1);
+        assert_eq!(bucket_idx(2), 2);
+        assert_eq!(bucket_idx(3), 2);
+        assert_eq!(bucket_idx(4), 3);
+        assert_eq!(bucket_idx(7), 3);
+        assert_eq!(bucket_idx(8), 4);
+        assert_eq!(bucket_idx(u64::MAX), HIST_BUCKETS - 1);
+        // every value sits at or below its bucket's upper bound
+        for v in [0u64, 1, 2, 3, 5, 100, 1_000_000, 123_456_789_000] {
+            let i = bucket_idx(v);
+            assert!(v <= bucket_upper_ns(i), "v={v} bucket={i}");
+            if i > 0 && i < HIST_BUCKETS - 1 {
+                assert!(bucket_upper_ns(i) < 2 * v.max(1), "bound within 2x: v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_and_mean() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot().quantile_ns(0.5), None);
+        for ns in [100u64, 200, 400, 800, 1600] {
+            h.record_ns(ns);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_ns, 3100);
+        let p50 = s.quantile_ns(0.5).unwrap();
+        assert!((400..800).contains(&p50), "p50 {p50}");
+        let p99 = s.quantile_ns(0.99).unwrap();
+        assert!((1600..3200).contains(&p99), "p99 {p99}");
+        assert!((s.mean_ns().unwrap() - 620.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_merge_accumulates() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        a.record_ns(10);
+        a.record_ns(20);
+        b.record_ns(1000);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.sum_ns, 1030);
+        assert_eq!(m.quantile_ns(1.0), b.snapshot().quantile_ns(1.0));
+    }
+
+    #[test]
+    fn registry_registration_is_idempotent() {
+        let reg = Registry::new();
+        let a = reg.counter("t_total", "t", &[("k", "v")]);
+        let b = reg.counter("t_total", "t", &[("k", "v")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same (name, labels) shares one counter");
+        let other = reg.counter("t_total", "t", &[("k", "w")]);
+        other.inc();
+        assert_eq!(other.get(), 1, "distinct labels are a distinct series");
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn registry_rejects_kind_clash() {
+        let reg = Registry::new();
+        let _ = reg.counter("clash", "t", &[]);
+        let _ = reg.gauge("clash", "t", &[]);
+    }
+
+    /// Exposition-format conformance: parse back every rendered line,
+    /// assert no duplicate series, cumulative bucket monotonicity, and
+    /// +Inf == _count.
+    #[test]
+    fn prometheus_exposition_parses_back() {
+        let reg = Registry::new();
+        reg.counter("kurtail_req_total", "requests", &[("tenant", "a\"b")]).add(3);
+        reg.gauge("kurtail_depth", "queue depth", &[]).set(7);
+        let h = reg.histogram("kurtail_lat_seconds", "latency", &[("phase", "gemm")]);
+        for ns in [50u64, 900, 900, 15_000, 2_000_000] {
+            h.record_ns(ns);
+        }
+        let text = reg.render_prometheus();
+
+        let mut seen = std::collections::HashSet::new();
+        let mut hist_cum: Vec<(f64, f64)> = Vec::new(); // (le, cum)
+        let (mut hist_sum, mut hist_count) = (None, None);
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "bad comment line: {line}"
+                );
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("name value");
+            let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line}"));
+            assert!(seen.insert(series.to_string()), "duplicate series {series}");
+            if let Some(rest) = series.strip_prefix("kurtail_lat_seconds_bucket") {
+                let le = rest.split("le=\"").nth(1).unwrap().trim_end_matches("\"}");
+                let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+                hist_cum.push((le, value));
+            } else if series.starts_with("kurtail_lat_seconds_sum") {
+                hist_sum = Some(value);
+            } else if series.starts_with("kurtail_lat_seconds_count") {
+                hist_count = Some(value);
+            }
+        }
+        assert!(seen.iter().any(|s| s.contains("tenant=\"a\\\"b\"")), "label escaping");
+        for w in hist_cum.windows(2) {
+            assert!(w[0].0 < w[1].0, "le bounds ascending");
+            assert!(w[0].1 <= w[1].1, "cumulative counts nondecreasing");
+        }
+        let inf = hist_cum.last().expect("+Inf bucket present");
+        assert!(inf.0.is_infinite());
+        assert_eq!(inf.1, hist_count.expect("_count emitted"));
+        assert_eq!(hist_count, Some(5.0));
+        let want_sum = (50.0 + 900.0 + 900.0 + 15_000.0 + 2_000_000.0) * 1e-9;
+        assert!((hist_sum.expect("_sum emitted") - want_sum).abs() < 1e-12);
+        // every bucket's cumulative count is consistent with the raw data
+        for &(le, cum) in &hist_cum {
+            let truth = [50u64, 900, 900, 15_000, 2_000_000]
+                .iter()
+                .filter(|&&ns| (ns as f64 * 1e-9) <= le)
+                .count() as f64;
+            assert!(cum >= truth, "le={le}: cum {cum} >= {truth} (upper-bound buckets)");
+        }
+    }
+
+    #[test]
+    fn stage_timer_records_into_global_registry() {
+        let sw = StageTimer::start("unit_test_stage");
+        let s = sw.stop();
+        assert!(s >= 0.0);
+        let text = global().render_prometheus();
+        assert!(
+            text.contains("kurtail_stage_seconds_count{stage=\"unit_test_stage\"} 1"),
+            "stage series rendered:\n{text}"
+        );
+    }
+}

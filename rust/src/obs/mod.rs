@@ -1,0 +1,221 @@
+//! Observability: zero-dependency telemetry for the serving stack.
+//!
+//! Three pieces, threaded through engine → scheduler → KV pool → daemon:
+//!
+//! * [`metrics`] — lock-free counters/gauges, log2-bucket latency
+//!   histograms (mergeable, snapshot-able, p50/p90/p99 derivable), and a
+//!   registry that renders Prometheus text exposition for `GET /metrics`.
+//! * [`log`] — structured, leveled log lines (`KURTAIL_LOG=json|text|off`),
+//!   one per request lifecycle event, emitted by the daemon.
+//! * [`EngineObs`] / [`RequestSpan`] — the engine's metric bundle and the
+//!   per-request trace span (queue-wait / prefill / decode) attached to
+//!   every completion.
+//!
+//! ## Knobs
+//!
+//! * `KURTAIL_OBS` — unset or any value but `0` → instrumentation on
+//!   (default); `0` → the engine skips all timing and recording, for A/B
+//!   overhead measurement (`benches/serve.rs` gates the difference ≤ 2%).
+//!   `ServeConfig::obs` overrides the env per engine.
+//! * `KURTAIL_LOG` — log line format (`text` default, `json`, `off`).
+//!
+//! ## Hot-path contract
+//!
+//! Recording is `Instant::now()` reads plus relaxed atomic adds on
+//! pre-registered handles — no locks, no allocation — so the zero-alloc
+//! steady-state decode test holds with observability enabled, and no
+//! instrumentation touches the math: token streams are bitwise identical
+//! with `KURTAIL_OBS=0` and `=1`.
+
+pub mod log;
+pub mod metrics;
+
+use std::sync::Arc;
+
+pub use log::{log_event, LogFormat, LogLevel, LogValue};
+pub use metrics::{
+    global, Counter, Gauge, HistSnapshot, Histogram, Registry, StageTimer, HIST_BUCKETS,
+};
+
+/// Decode phase indices into [`EngineObs::phases`] (histogram per phase,
+/// labeled `phase="..."` on the `kurtail_decode_phase_seconds` family).
+pub const PHASE_ACT_QUANT: usize = 0;
+pub const PHASE_GEMM: usize = 1;
+pub const PHASE_ATTENTION: usize = 2;
+pub const PHASE_EPILOGUE: usize = 3;
+pub const PHASE_SAMPLING: usize = 4;
+pub const N_PHASES: usize = 5;
+
+/// Phase label values, indexed by the `PHASE_*` constants.
+pub const PHASE_NAMES: [&str; N_PHASES] =
+    ["act_quant", "gemm", "attention", "epilogue", "sampling"];
+
+/// Parse rule for `KURTAIL_OBS`: unset → on, `0` → off, anything else →
+/// on (same rule as the engine's other feature flags).
+fn obs_flag(var: Option<&str>) -> bool {
+    var.map(|v| v.trim() != "0").unwrap_or(true)
+}
+
+/// Whether instrumentation is enabled for this process (`KURTAIL_OBS`).
+pub fn obs_enabled() -> bool {
+    obs_flag(std::env::var("KURTAIL_OBS").ok().as_deref())
+}
+
+/// Per-request trace span: where a request spent its life, in ns.
+/// Filled by the engine at retirement and carried on every `Completion`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Submit → admission (time spent queued).
+    pub queue_wait_ns: u64,
+    /// Prefill forward + first sampled token.
+    pub prefill_ns: u64,
+    /// Admission → retirement, minus prefill (decode steps + co-batching
+    /// waits).
+    pub decode_ns: u64,
+    /// Tokens generated (including the prefill-sampled first token).
+    pub new_tokens: u64,
+}
+
+/// The serving engine's metric bundle: every series the engine records,
+/// registered once at construction against the engine's own registry.
+///
+/// Each engine owns a fresh [`Registry`] (parallel engines/tests must
+/// not share series); the daemon exposes its engine's registry on
+/// `GET /metrics`. All fields are `Arc`s, so the bundle is `Clone` and
+/// handles can be read from other threads while the engine records.
+#[derive(Clone)]
+pub struct EngineObs {
+    /// Master switch (`KURTAIL_OBS` / `ServeConfig::obs`): when false the
+    /// engine skips every clock read and record call.
+    pub enabled: bool,
+    pub registry: Arc<Registry>,
+    /// Submit → admission wait (also drives the daemon's `Retry-After`).
+    pub queue_wait: Arc<Histogram>,
+    /// Submit → first token.
+    pub ttft: Arc<Histogram>,
+    /// Prefill duration per admitted request.
+    pub prefill: Arc<Histogram>,
+    /// One batched decode step (all lanes), including sampling.
+    pub decode_step: Arc<Histogram>,
+    /// Per-phase time per forward pass, indexed by `PHASE_*`.
+    pub phases: [Arc<Histogram>; N_PHASES],
+    pub kv_free_blocks: Arc<Gauge>,
+    pub kv_used_blocks: Arc<Gauge>,
+    pub kv_withheld_blocks: Arc<Gauge>,
+    pub live_lanes: Arc<Gauge>,
+    pub queued_requests: Arc<Gauge>,
+    pub prefill_tokens: Arc<Counter>,
+    pub decode_tokens: Arc<Counter>,
+    pub requests_admitted: Arc<Counter>,
+    pub requests_retired: Arc<Counter>,
+    pub requests_shed: Arc<Counter>,
+    pub requests_canceled: Arc<Counter>,
+}
+
+impl EngineObs {
+    /// Build the bundle against a fresh registry.
+    pub fn new(enabled: bool) -> Self {
+        Self::with_registry(enabled, Arc::new(Registry::new()))
+    }
+
+    pub fn with_registry(enabled: bool, registry: Arc<Registry>) -> Self {
+        let r = &registry;
+        let phases = PHASE_NAMES.map(|p| {
+            r.histogram(
+                "kurtail_decode_phase_seconds",
+                "Per-phase wall-clock of one forward pass",
+                &[("phase", p)],
+            )
+        });
+        Self {
+            enabled,
+            queue_wait: r.histogram(
+                "kurtail_queue_wait_seconds",
+                "Request wait from submit to admission",
+                &[],
+            ),
+            ttft: r.histogram(
+                "kurtail_ttft_seconds",
+                "Time from submit to first generated token",
+                &[],
+            ),
+            prefill: r.histogram(
+                "kurtail_prefill_seconds",
+                "Prefill duration per admitted request",
+                &[],
+            ),
+            decode_step: r.histogram(
+                "kurtail_decode_step_seconds",
+                "One batched decode step across all live lanes",
+                &[],
+            ),
+            phases,
+            kv_free_blocks: r.gauge("kurtail_kv_free_blocks", "KV pool blocks on the free list", &[]),
+            kv_used_blocks: r.gauge("kurtail_kv_used_blocks", "KV pool blocks held by lanes", &[]),
+            kv_withheld_blocks: r.gauge(
+                "kurtail_kv_withheld_blocks",
+                "KV pool blocks withheld by fault injection",
+                &[],
+            ),
+            live_lanes: r.gauge("kurtail_live_lanes", "Lanes currently decoding", &[]),
+            queued_requests: r.gauge("kurtail_queued_requests", "Requests waiting for admission", &[]),
+            prefill_tokens: r.counter("kurtail_prefill_tokens_total", "Prompt tokens prefilled", &[]),
+            decode_tokens: r.counter("kurtail_decode_tokens_total", "Tokens generated", &[]),
+            requests_admitted: r.counter("kurtail_requests_admitted_total", "Requests admitted to a lane", &[]),
+            requests_retired: r.counter("kurtail_requests_retired_total", "Requests retired (completed)", &[]),
+            requests_shed: r.counter("kurtail_requests_shed_total", "Requests shed (queue full, too large, draining)", &[]),
+            requests_canceled: r.counter("kurtail_requests_canceled_total", "Requests canceled (client or deadline)", &[]),
+            registry,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_flag_parse_rule() {
+        assert!(obs_flag(None));
+        assert!(obs_flag(Some("1")));
+        assert!(obs_flag(Some("yes")));
+        assert!(!obs_flag(Some("0")));
+        assert!(!obs_flag(Some(" 0 ")));
+    }
+
+    #[test]
+    fn engine_obs_registers_every_series_once() {
+        let obs = EngineObs::new(true);
+        obs.requests_admitted.inc();
+        obs.queue_wait.record_ns(1_000);
+        obs.phases[PHASE_GEMM].record_ns(500);
+        let text = obs.registry.render_prometheus();
+        for name in [
+            "kurtail_queue_wait_seconds",
+            "kurtail_ttft_seconds",
+            "kurtail_prefill_seconds",
+            "kurtail_decode_step_seconds",
+            "kurtail_decode_phase_seconds",
+            "kurtail_kv_free_blocks",
+            "kurtail_kv_used_blocks",
+            "kurtail_kv_withheld_blocks",
+            "kurtail_live_lanes",
+            "kurtail_queued_requests",
+            "kurtail_prefill_tokens_total",
+            "kurtail_decode_tokens_total",
+            "kurtail_requests_admitted_total",
+            "kurtail_requests_retired_total",
+            "kurtail_requests_shed_total",
+            "kurtail_requests_canceled_total",
+        ] {
+            assert!(text.contains(name), "{name} missing from exposition:\n{text}");
+            let type_lines =
+                text.lines().filter(|l| l.starts_with(&format!("# TYPE {name} "))).count();
+            assert_eq!(type_lines, 1, "{name}: exactly one TYPE line");
+        }
+        for p in PHASE_NAMES {
+            assert!(text.contains(&format!("phase=\"{p}\"")), "phase {p} series");
+        }
+        assert!(text.contains("kurtail_requests_admitted_total 1"));
+    }
+}

@@ -16,7 +16,8 @@ use crate::model::{capture_stream, train_or_load, Params, TrainConfig};
 use crate::quant::{quantize_weights, HessianSet};
 use crate::rotation::{fold_norms, fuse_r1, fuse_r2, fuse_r4_inverse, fuse_r5_inverse, RotationSet};
 use crate::runtime::Runtime;
-use crate::util::{timer, Rng, Stopwatch};
+use crate::obs::StageTimer;
+use crate::util::{timer, Rng};
 
 /// A model ready for evaluation: fused + quantized params and the online
 /// rotations the quantized graph needs.
@@ -75,7 +76,7 @@ impl Pipeline {
         let rt = &self.rt;
         let meta = self.fp_params.meta.clone();
         let mut cost = MethodCost::default();
-        let sw_total = Stopwatch::start("method");
+        let sw_total = StageTimer::start("method");
 
         if pcfg.method == Method::Fp16 {
             return Ok((
@@ -179,7 +180,7 @@ impl Pipeline {
             &rots,
         )?;
 
-        cost.total_s = sw_total.elapsed_s();
+        cost.total_s = sw_total.stop();
         if cost.peak_rss_mib == 0.0 {
             cost.peak_rss_mib = timer::peak_rss_mib();
         }

@@ -129,12 +129,14 @@ pub fn write_response(
 }
 
 /// Map a [`ServeError`] onto the wire: status from [`status_for`], a
-/// JSON body with the error kind/message, and `Retry-After: 1` on the
-/// retryable (backpressure) class.
-pub fn write_error(stream: &mut TcpStream, e: &ServeError) -> io::Result<()> {
+/// JSON body with the error kind/message, and `Retry-After: {retry_s}`
+/// on the retryable (backpressure) class. The daemon derives `retry_s`
+/// from the observed queue-wait distribution (p50 drain estimate,
+/// clamped to `[1, 60]`); callers without telemetry pass `1`.
+pub fn write_error(stream: &mut TcpStream, e: &ServeError, retry_s: u64) -> io::Result<()> {
     let (status, reason) = status_for(e);
     let retry: Vec<(&str, String)> =
-        if e.retryable() { vec![("Retry-After", "1".to_string())] } else { Vec::new() };
+        if e.retryable() { vec![("Retry-After", retry_s.to_string())] } else { Vec::new() };
     let body = format!("{{\"error\": \"{}\", \"message\": \"{}\"}}", e.kind(), e.to_string().replace('"', "'"));
     write_response(stream, status, reason, "application/json", &retry, body.as_bytes())
 }

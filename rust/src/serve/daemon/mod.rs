@@ -28,6 +28,14 @@
 //! the last lane retired and every thread exited. The engine thread
 //! breaks its loop only when draining *and* idle, so a drain never
 //! abandons a live stream.
+//!
+//! Telemetry ([`crate::obs`]): the daemon renders the engine's metric
+//! registry as Prometheus text on `GET /metrics` (engine histograms and
+//! counters plus the per-tenant `kurtail_tenant_*_total` series owned
+//! here), folds latency quantiles into `/stats`, emits one structured
+//! log line per request lifecycle event (`KURTAIL_LOG=json|text|off`),
+//! and derives `Retry-After` on backpressure responses from the
+//! observed queue-wait p50 instead of a constant.
 
 pub mod fault;
 pub mod http;
@@ -46,9 +54,11 @@ use anyhow::Result;
 
 use crate::calib::ByteTokenizer;
 use crate::model::Params;
+use crate::obs::{self, Counter, EngineObs, HistSnapshot, LogValue, Registry};
 use crate::runtime::manifest::{ConfigMeta, ParamSpec};
 use crate::tensor::hadamard::random_hadamard;
 use crate::util::json::{self, Json};
+use crate::util::par::ParBackend;
 use crate::util::Rng;
 
 use super::engine::{Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
@@ -162,6 +172,43 @@ pub struct StatsSnapshot {
     pub draining: bool,
     pub uptime_s: f64,
     pub tok_s: f64,
+    pub latency: LatencySnapshot,
+}
+
+/// Histogram snapshots folded into `/stats` (quantiles are derived at
+/// render time; the engine thread only copies atomics here).
+#[derive(Clone, Debug, Default)]
+pub struct LatencySnapshot {
+    pub queue_wait: HistSnapshot,
+    pub ttft: HistSnapshot,
+    pub prefill: HistSnapshot,
+    pub decode_step: HistSnapshot,
+    pub phases: [HistSnapshot; obs::N_PHASES],
+}
+
+impl LatencySnapshot {
+    fn of(eobs: &EngineObs) -> Self {
+        Self {
+            queue_wait: eobs.queue_wait.snapshot(),
+            ttft: eobs.ttft.snapshot(),
+            prefill: eobs.prefill.snapshot(),
+            decode_step: eobs.decode_step.snapshot(),
+            phases: std::array::from_fn(|i| eobs.phases[i].snapshot()),
+        }
+    }
+}
+
+/// `{count, mean_ms, p50_ms, p90_ms, p99_ms}` for one histogram.
+/// Quantiles are bucket upper bounds (within 2× of the true value).
+fn hist_ms_json(s: &HistSnapshot) -> Json {
+    let q = |p: f64| s.quantile_ns(p).map(|ns| ns as f64 / 1e6).unwrap_or(0.0);
+    json::obj(vec![
+        ("count", json::num(s.count as f64)),
+        ("mean_ms", json::num(s.mean_ns().unwrap_or(0.0) / 1e6)),
+        ("p50_ms", json::num(q(0.5))),
+        ("p90_ms", json::num(q(0.9))),
+        ("p99_ms", json::num(q(0.99))),
+    ])
 }
 
 impl StatsSnapshot {
@@ -169,6 +216,7 @@ impl StatsSnapshot {
         let e = &self.engine;
         let n = |v: u64| json::num(v as f64);
         let u = |v: usize| json::num(v as f64);
+        let l = &self.latency;
         json::obj(vec![
             (
                 "engine",
@@ -195,6 +243,25 @@ impl StatsSnapshot {
             ("draining", Json::Bool(self.draining)),
             ("uptime_s", json::num(self.uptime_s)),
             ("tok_s", json::num(self.tok_s)),
+            (
+                "latency",
+                json::obj(vec![
+                    ("queue_wait", hist_ms_json(&l.queue_wait)),
+                    ("ttft", hist_ms_json(&l.ttft)),
+                    ("prefill", hist_ms_json(&l.prefill)),
+                    ("decode_step", hist_ms_json(&l.decode_step)),
+                    (
+                        "decode_phase",
+                        json::obj(
+                            obs::PHASE_NAMES
+                                .iter()
+                                .zip(l.phases.iter())
+                                .map(|(name, s)| (*name, hist_ms_json(s)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -216,6 +283,18 @@ fn snapshot(engine: &Engine, started: Instant) -> StatsSnapshot {
         draining: engine.draining(),
         uptime_s: uptime,
         tok_s: if uptime > 0.0 { toks / uptime } else { 0.0 },
+        latency: LatencySnapshot::of(engine.obs()),
+    }
+}
+
+/// Satellite: `Retry-After` from the observed queue drain rate — the
+/// p50 queue wait rounded up to whole seconds, clamped to `[1, 60]`.
+/// An empty histogram (cold start, obs off) falls back to `1`, the
+/// previous constant.
+fn retry_after_s(eobs: &EngineObs) -> u64 {
+    match eobs.queue_wait.snapshot().quantile_ns(0.5) {
+        Some(ns) => ((ns as f64 / 1e9).ceil() as u64).clamp(1, 60),
+        None => 1,
     }
 }
 
@@ -237,11 +316,126 @@ struct Tracked {
     deadline: Option<Instant>,
 }
 
-fn finish(tracked: &mut HashMap<usize, Tracked>, tenants: &mut HashMap<String, usize>, id: usize, ev: Event) {
+/// The three per-tenant series (`kurtail_tenant_*_total{tenant=...}`).
+struct TenantCounters {
+    requests: Arc<Counter>,
+    shed: Arc<Counter>,
+    canceled: Arc<Counter>,
+}
+
+/// Daemon-side telemetry, owned by the engine thread: per-tenant
+/// counters registered against the *engine's* registry (so `/metrics`
+/// carries them alongside the engine series) and one structured log
+/// line per request lifecycle event. Counter updates honour the
+/// engine's obs switch; logging is governed by `KURTAIL_LOG` alone.
+struct DaemonObs {
+    enabled: bool,
+    registry: Arc<Registry>,
+    tenants: HashMap<String, TenantCounters>,
+}
+
+impl DaemonObs {
+    fn new(eobs: &EngineObs) -> Self {
+        Self { enabled: eobs.enabled, registry: Arc::clone(&eobs.registry), tenants: HashMap::new() }
+    }
+
+    fn tenant(&mut self, tenant: &str) -> &TenantCounters {
+        if !self.tenants.contains_key(tenant) {
+            let c = TenantCounters {
+                requests: self.registry.counter(
+                    "kurtail_tenant_requests_total",
+                    "Requests received per tenant (accepted and rejected)",
+                    &[("tenant", tenant)],
+                ),
+                shed: self.registry.counter(
+                    "kurtail_tenant_shed_total",
+                    "Requests shed per tenant (queue full, tenant cap, pool, drain, too large)",
+                    &[("tenant", tenant)],
+                ),
+                canceled: self.registry.counter(
+                    "kurtail_tenant_canceled_total",
+                    "Requests canceled per tenant (client cancel or deadline)",
+                    &[("tenant", tenant)],
+                ),
+            };
+            self.tenants.insert(tenant.to_string(), c);
+        }
+        &self.tenants[tenant]
+    }
+
+    fn accepted(&mut self, id: usize, tenant: &str) {
+        if self.enabled {
+            self.tenant(tenant).requests.inc();
+        }
+        obs::log::info(
+            "request_accepted",
+            &[("id", LogValue::U64(id as u64)), ("tenant", LogValue::Str(tenant))],
+        );
+    }
+
+    fn rejected(&mut self, tenant: &str, e: &ServeError) {
+        // `Invalid` is a client error, not load shedding
+        let is_shed = !matches!(e, ServeError::Invalid(_));
+        if self.enabled {
+            let t = self.tenant(tenant);
+            t.requests.inc();
+            if is_shed {
+                t.shed.inc();
+            }
+        }
+        obs::log::warn(
+            if is_shed { "request_shed" } else { "request_rejected" },
+            &[("tenant", LogValue::Str(tenant)), ("outcome", LogValue::Str(e.kind()))],
+        );
+    }
+
+    fn finished(&mut self, id: usize, tenant: &str, ev: &Event) {
+        match ev {
+            Event::Done(c) => {
+                let s = &c.span;
+                obs::log::info(
+                    "request_done",
+                    &[
+                        ("id", LogValue::U64(id as u64)),
+                        ("tenant", LogValue::Str(tenant)),
+                        ("outcome", LogValue::Str("ok")),
+                        ("queue_wait_ms", LogValue::F64(s.queue_wait_ns as f64 / 1e6)),
+                        ("prefill_ms", LogValue::F64(s.prefill_ns as f64 / 1e6)),
+                        ("decode_ms", LogValue::F64(s.decode_ns as f64 / 1e6)),
+                        ("new_tokens", LogValue::U64(s.new_tokens)),
+                    ],
+                );
+            }
+            Event::Failed(e) => {
+                if self.enabled && matches!(e, ServeError::Canceled | ServeError::Deadline) {
+                    self.tenant(tenant).canceled.inc();
+                }
+                obs::log::warn(
+                    "request_failed",
+                    &[
+                        ("id", LogValue::U64(id as u64)),
+                        ("tenant", LogValue::Str(tenant)),
+                        ("outcome", LogValue::Str(e.kind())),
+                    ],
+                );
+            }
+            Event::Token(_) => {}
+        }
+    }
+}
+
+fn finish(
+    tracked: &mut HashMap<usize, Tracked>,
+    tenants: &mut HashMap<String, usize>,
+    dobs: &mut DaemonObs,
+    id: usize,
+    ev: Event,
+) {
     if let Some(t) = tracked.remove(&id) {
         if let Some(n) = tenants.get_mut(&t.tenant) {
             *n = n.saturating_sub(1);
         }
+        dobs.finished(id, &t.tenant, &ev);
         // the owner may have hung up already; that's its problem
         let _ = t.events.send(ev);
     }
@@ -255,6 +449,7 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
     let max_blocks = engine.pool().max_blocks;
     let mut tracked: HashMap<usize, Tracked> = HashMap::new();
     let mut tenants: HashMap<String, usize> = HashMap::new();
+    let mut dobs = DaemonObs::new(engine.obs());
     let mut disconnects: Vec<usize> = Vec::new();
     loop {
         let idle = engine.queued() == 0 && engine.live_lanes() == 0;
@@ -280,25 +475,35 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
                     let SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events } = req;
                     let cap = cfg.per_tenant_cap;
                     let res = if cap > 0 && tenants.get(&tenant).copied().unwrap_or(0) >= cap {
+                        // mirror both shed counters (EngineStats and the
+                        // obs series) exactly as engine-side sheds do, so
+                        // /metrics reconciles with /stats
                         engine.stats.shed += 1;
+                        if engine.obs().enabled {
+                            engine.obs().requests_shed.inc();
+                        }
                         Err(ServeError::QueueFull { cap })
                     } else {
                         engine.submit_tokens_stop(tokens, n_tokens, temp, seed, stop)
                     };
-                    if let Ok(id) = &res {
-                        *tenants.entry(tenant.clone()).or_insert(0) += 1;
-                        tracked.insert(*id, Tracked { events, tenant, deadline });
+                    match &res {
+                        Ok(id) => {
+                            dobs.accepted(*id, &tenant);
+                            *tenants.entry(tenant.clone()).or_insert(0) += 1;
+                            tracked.insert(*id, Tracked { events, tenant, deadline });
+                        }
+                        Err(e) => dobs.rejected(&tenant, e),
                     }
                     let _ = reply.send(res);
                 }
                 Cmd::Cancel(id) => {
                     if engine.cancel(id) {
-                        finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Canceled));
+                        finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Canceled));
                     }
                 }
                 Cmd::Drain => {
                     for id in engine.begin_drain() {
-                        finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Draining));
+                        finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Draining));
                     }
                 }
                 Cmd::Stats(reply) => {
@@ -315,7 +520,7 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
             .collect();
         for id in overdue {
             engine.cancel(id);
-            finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Deadline));
+            finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Deadline));
         }
         if engine.queued() == 0 && engine.live_lanes() == 0 {
             continue;
@@ -339,24 +544,29 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
             // the engine is poisoned — fail every in-flight request and
             // exit; the daemon's accept side then reports Draining
             let msg = format!("engine step failed: {e:#}");
-            for (_, t) in tracked.drain() {
-                let _ = t.events.send(Event::Failed(ServeError::Internal(msg.clone())));
+            obs::log::error("engine_failed", &[("error", LogValue::Str(&msg))]);
+            for (id, t) in tracked.drain() {
+                let ev = Event::Failed(ServeError::Internal(msg.clone()));
+                dobs.finished(id, &t.tenant, &ev);
+                let _ = t.events.send(ev);
             }
             return;
         }
         for c in engine.take_completions() {
             let id = c.id;
-            finish(&mut tracked, &mut tenants, id, Event::Done(c));
+            finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Done(c));
         }
         // a dead Event receiver means the client hung up: reclaim the
         // lane's blocks now instead of decoding into the void
         for id in std::mem::take(&mut disconnects) {
             engine.cancel(id);
-            finish(&mut tracked, &mut tenants, id, Event::Failed(ServeError::Canceled));
+            finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Canceled));
         }
     }
-    for (_, t) in tracked.drain() {
-        let _ = t.events.send(Event::Failed(ServeError::Draining));
+    for (id, t) in tracked.drain() {
+        let ev = Event::Failed(ServeError::Draining);
+        dobs.finished(id, &t.tenant, &ev);
+        let _ = t.events.send(ev);
     }
 }
 
@@ -392,6 +602,66 @@ impl Default for DaemonConfig {
     }
 }
 
+/// Build/version identity served on `/healthz`: crate version, git hash
+/// (`KURTAIL_GIT_HASH` at *compile* time, "unknown" otherwise) and the
+/// engine's resolved feature toggles — enough for an orchestrator to
+/// tell which build and configuration answered the probe.
+#[derive(Clone, Debug)]
+pub struct BuildInfo {
+    pub version: &'static str,
+    pub git_hash: &'static str,
+    pub int_gemm: bool,
+    pub arena: bool,
+    pub fused_epilogue: bool,
+    pub par_backend: &'static str,
+}
+
+impl BuildInfo {
+    fn from_engine(engine: &Engine) -> Self {
+        Self {
+            version: env!("CARGO_PKG_VERSION"),
+            git_hash: option_env!("KURTAIL_GIT_HASH").unwrap_or("unknown"),
+            int_gemm: engine.int_gemm(),
+            arena: engine.arena(),
+            fused_epilogue: engine.fused_epilogue(),
+            par_backend: match engine.par_backend() {
+                ParBackend::Steal => "steal",
+                ParBackend::Static => "static",
+            },
+        }
+    }
+
+    fn to_json(&self, status: &str) -> Json {
+        json::obj(vec![
+            ("status", json::s(status)),
+            ("version", json::s(self.version)),
+            ("git", json::s(self.git_hash)),
+            (
+                "features",
+                json::obj(vec![
+                    ("int_gemm", Json::Bool(self.int_gemm)),
+                    ("arena", Json::Bool(self.arena)),
+                    ("fused_epilogue", Json::Bool(self.fused_epilogue)),
+                    ("par_backend", json::s(self.par_backend)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Everything a connection thread needs, cloned per accept.
+#[derive(Clone)]
+struct ConnShared {
+    host: Host,
+    draining: Arc<AtomicBool>,
+    fault: FaultSpec,
+    deadline_ms: u64,
+    /// Engine telemetry handle: `/metrics` renders its registry, error
+    /// responses derive `Retry-After` from its queue-wait histogram.
+    obs: EngineObs,
+    build: Arc<BuildInfo>,
+}
+
 /// The running daemon: engine thread + accept thread.
 pub struct Daemon {
     addr: SocketAddr,
@@ -407,31 +677,39 @@ impl Daemon {
         let mut scfg = cfg.serve.clone();
         scfg.queue_cap = cfg.queue_cap;
         let engine = Engine::new(model, &scfg)?;
+        let obs = engine.obs().clone();
+        let build = Arc::new(BuildInfo::from_engine(&engine));
         let (host, engine_thread) =
             spawn_host(engine, HostConfig { per_tenant_cap: cfg.per_tenant_cap, fault: cfg.fault.clone() });
         let listener = TcpListener::bind(cfg.addr.as_str())?;
         let addr = listener.local_addr()?;
+        obs::log::info(
+            "daemon_listening",
+            &[("addr", LogValue::Str(&addr.to_string())), ("version", LogValue::Str(build.version))],
+        );
         // non-blocking accept so the loop can observe the stop flag
         listener.set_nonblocking(true)?;
         let draining = Arc::new(AtomicBool::new(false));
         let stopped = Arc::new(AtomicBool::new(false));
         let accept_thread = {
-            let host = host.clone();
-            let draining = Arc::clone(&draining);
+            let shared = ConnShared {
+                host: host.clone(),
+                draining: Arc::clone(&draining),
+                fault: cfg.fault.clone(),
+                deadline_ms: cfg.default_deadline_ms,
+                obs,
+                build,
+            };
             let stopped = Arc::clone(&stopped);
-            let fault = cfg.fault.clone();
-            let deadline_ms = cfg.default_deadline_ms;
             thread::Builder::new().name("kurtail-accept".into()).spawn(move || {
                 while !stopped.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let host = host.clone();
-                            let draining = Arc::clone(&draining);
-                            let fault = fault.clone();
+                            let shared = shared.clone();
                             // detached: a slow client must not block
                             // accept, and drain never waits on sockets
                             let _ = thread::Builder::new().name("kurtail-conn".into()).spawn(move || {
-                                handle_conn(stream, host, draining, fault, deadline_ms);
+                                handle_conn(stream, shared);
                             });
                         }
                         Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -487,7 +765,7 @@ impl Daemon {
 
 // --------------------------------------------------------- connections
 
-fn handle_conn(mut stream: TcpStream, host: Host, draining: Arc<AtomicBool>, fault: FaultSpec, deadline_ms: u64) {
+fn handle_conn(mut stream: TcpStream, shared: ConnShared) {
     // accepted sockets inherit non-blocking from the listener on some
     // platforms; request handling wants plain blocking reads
     let _ = stream.set_nonblocking(false);
@@ -496,38 +774,38 @@ fn handle_conn(mut stream: TcpStream, host: Host, draining: Arc<AtomicBool>, fau
         Ok(r) => r,
         Err(_) => return, // hung-up or garbage client; nothing to answer
     };
-    let _ = route(&mut stream, &req, &host, &draining, &fault, deadline_ms);
+    let _ = route(&mut stream, &req, &shared);
 }
 
-fn route(
-    stream: &mut TcpStream,
-    req: &Request,
-    host: &Host,
-    draining: &AtomicBool,
-    fault: &FaultSpec,
-    deadline_ms: u64,
-) -> io::Result<()> {
+fn route(stream: &mut TcpStream, req: &Request, sh: &ConnShared) -> io::Result<()> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            if draining.load(Ordering::SeqCst) {
-                http::write_response(stream, 503, "Service Unavailable", "text/plain", &[], b"draining")
+            let (status, reason, state) = if sh.draining.load(Ordering::SeqCst) {
+                (503, "Service Unavailable", "draining")
             } else {
-                http::write_response(stream, 200, "OK", "text/plain", &[], b"ok")
-            }
+                (200, "OK", "ok")
+            };
+            let body = sh.build.to_json(state).to_string_pretty();
+            http::write_response(stream, status, reason, "application/json", &[], body.as_bytes())
         }
-        ("GET", "/stats") => match host.stats() {
+        ("GET", "/metrics") => {
+            let body = sh.obs.registry.render_prometheus();
+            http::write_response(stream, 200, "OK", "text/plain; version=0.0.4", &[], body.as_bytes())
+        }
+        ("GET", "/stats") => match sh.host.stats() {
             Ok(s) => {
                 let body = s.to_json().to_string_pretty();
                 http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes())
             }
-            Err(e) => http::write_error(stream, &e),
+            Err(e) => http::write_error(stream, &e, retry_after_s(&sh.obs)),
         },
         ("POST", "/admin/drain") => {
-            draining.store(true, Ordering::SeqCst);
-            host.drain();
+            sh.draining.store(true, Ordering::SeqCst);
+            sh.host.drain();
+            obs::log::info("daemon_draining", &[]);
             http::write_response(stream, 200, "OK", "application/json", &[], b"{\"draining\": true}")
         }
-        ("POST", "/v1/generate") => handle_generate(stream, req, host, fault, deadline_ms),
+        ("POST", "/v1/generate") => handle_generate(stream, req, sh),
         _ => http::write_response(stream, 404, "Not Found", "text/plain", &[], b"not found"),
     }
 }
@@ -569,27 +847,32 @@ fn parse_generate(
     Ok((SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events }, stream_mode))
 }
 
-fn handle_generate(
-    stream: &mut TcpStream,
-    req: &Request,
-    host: &Host,
-    fault: &FaultSpec,
-    deadline_ms: u64,
-) -> io::Result<()> {
+fn handle_generate(stream: &mut TcpStream, req: &Request, sh: &ConnShared) -> io::Result<()> {
     let (events, rx) = mpsc::channel();
-    let (sub, stream_mode) = match parse_generate(&req.body, deadline_ms, events) {
+    let (sub, stream_mode) = match parse_generate(&req.body, sh.deadline_ms, events) {
         Ok(v) => v,
-        Err(e) => return http::write_error(stream, &e),
+        Err(e) => return http::write_error(stream, &e, retry_after_s(&sh.obs)),
     };
-    let id = match host.submit(sub) {
+    let id = match sh.host.submit(sub) {
         Ok(id) => id,
-        Err(e) => return http::write_error(stream, &e),
+        Err(e) => return http::write_error(stream, &e, retry_after_s(&sh.obs)),
     };
     if stream_mode {
-        stream_tokens(stream, host, id, rx, fault)
+        stream_tokens(stream, sh, id, rx)
     } else {
-        wait_completion(stream, host, id, rx)
+        wait_completion(stream, sh, id, rx)
     }
+}
+
+/// The request's trace span in ms, attached to completions (`span`) and
+/// the streaming `done` line.
+fn span_json(c: &Completion) -> Json {
+    json::obj(vec![
+        ("queue_wait_ms", json::num(c.span.queue_wait_ns as f64 / 1e6)),
+        ("prefill_ms", json::num(c.span.prefill_ns as f64 / 1e6)),
+        ("decode_ms", json::num(c.span.decode_ns as f64 / 1e6)),
+        ("new_tokens", json::num(c.span.new_tokens as f64)),
+    ])
 }
 
 fn completion_json(c: &Completion) -> Json {
@@ -598,10 +881,11 @@ fn completion_json(c: &Completion) -> Json {
         ("prompt_len", json::num(c.prompt_len as f64)),
         ("tokens", json::arr(c.tokens.iter().map(|&t| json::num(t as f64)).collect())),
         ("text", json::s(&c.text)),
+        ("span", span_json(c)),
     ])
 }
 
-fn wait_completion(stream: &mut TcpStream, host: &Host, id: usize, events: Receiver<Event>) -> io::Result<()> {
+fn wait_completion(stream: &mut TcpStream, sh: &ConnShared, id: usize, events: Receiver<Event>) -> io::Result<()> {
     loop {
         match events.recv() {
             Ok(Event::Token(_)) => {} // the completion carries them all
@@ -609,10 +893,14 @@ fn wait_completion(stream: &mut TcpStream, host: &Host, id: usize, events: Recei
                 let body = completion_json(&c).to_string_pretty();
                 return http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes());
             }
-            Ok(Event::Failed(e)) => return http::write_error(stream, &e),
+            Ok(Event::Failed(e)) => return http::write_error(stream, &e, retry_after_s(&sh.obs)),
             Err(_) => {
-                host.cancel(id);
-                return http::write_error(stream, &ServeError::Internal("engine exited".into()));
+                sh.host.cancel(id);
+                return http::write_error(
+                    stream,
+                    &ServeError::Internal("engine exited".into()),
+                    retry_after_s(&sh.obs),
+                );
             }
         }
     }
@@ -622,15 +910,9 @@ fn wait_completion(stream: &mut TcpStream, host: &Host, id: usize, events: Recei
 /// `{"done": true, ...}` line carrying the completion. A mid-stream
 /// failure becomes an `{"error": ...}` line — the transfer still
 /// terminates cleanly so clients can tell "failed" from "cut off".
-fn stream_tokens(
-    stream: &mut TcpStream,
-    host: &Host,
-    id: usize,
-    events: Receiver<Event>,
-    fault: &FaultSpec,
-) -> io::Result<()> {
+fn stream_tokens(stream: &mut TcpStream, sh: &ConnShared, id: usize, events: Receiver<Event>) -> io::Result<()> {
     http::write_chunked_head(stream, "application/x-ndjson")?;
-    let drop_after = fault.drop_after(id);
+    let drop_after = sh.fault.drop_after(id);
     let mut sent = 0usize;
     loop {
         match events.recv() {
@@ -638,7 +920,7 @@ fn stream_tokens(
                 let line = format!("{{\"token\": {t}}}\n");
                 if http::write_chunk(stream, line.as_bytes()).is_err() {
                     // client hung up mid-stream: hand the blocks back
-                    host.cancel(id);
+                    sh.host.cancel(id);
                     return Ok(());
                 }
                 sent += 1;
@@ -646,7 +928,7 @@ fn stream_tokens(
                     // injected drop_conn fault: sever the socket the
                     // way a dying client would, then reclaim
                     let _ = stream.shutdown(std::net::Shutdown::Both);
-                    host.cancel(id);
+                    sh.host.cancel(id);
                     return Ok(());
                 }
             }
@@ -657,6 +939,7 @@ fn stream_tokens(
                     ("prompt_len", json::num(c.prompt_len as f64)),
                     ("n_tokens", json::num((c.tokens.len() - c.prompt_len) as f64)),
                     ("text", json::s(&c.text)),
+                    ("span", span_json(&c)),
                 ]);
                 let line = format!("{}\n", done.to_string_compact());
                 let _ = http::write_chunk(stream, line.as_bytes());
@@ -668,7 +951,7 @@ fn stream_tokens(
                 return http::finish_chunks(stream);
             }
             Err(_) => {
-                host.cancel(id);
+                sh.host.cancel(id);
                 let _ = http::write_chunk(stream, b"{\"error\": \"internal\"}\n");
                 return http::finish_chunks(stream);
             }
@@ -857,6 +1140,87 @@ mod tests {
         assert_eq!(stats.engine.shed, 1);
         host.drain();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn retry_after_tracks_queue_wait_p50() {
+        let eobs = EngineObs::new(true);
+        assert_eq!(retry_after_s(&eobs), 1, "empty histogram falls back to 1s");
+        for _ in 0..10 {
+            eobs.queue_wait.record_ns(3_500_000_000); // 3.5s observed waits
+        }
+        // 3.5s lands in the [2^31, 2^32) ns bucket: upper bound ~4.29s
+        assert_eq!(retry_after_s(&eobs), 5, "ceil of the p50 bucket bound");
+        for _ in 0..100 {
+            eobs.queue_wait.record_ns(400 * 1_000_000_000); // pathological waits clamp
+        }
+        assert_eq!(retry_after_s(&eobs), 60);
+    }
+
+    #[test]
+    fn stats_json_carries_latency_quantiles() {
+        let cfg = ServeConfig { obs: Some(true), ..ServeConfig::default() };
+        let mut engine = test_engine(&cfg);
+        engine.submit_tokens(vec![1, 2, 3], 4, 0.0, 7).unwrap();
+        engine.run().unwrap();
+        let snap = snapshot(&engine, Instant::now());
+        assert_eq!(snap.latency.ttft.count, 1);
+        assert_eq!(snap.latency.queue_wait.count, 1);
+        let j = snap.to_json();
+        let lat = j.get("latency").unwrap();
+        assert_eq!(lat.get("ttft").unwrap().get("count").unwrap().as_f64().unwrap(), 1.0);
+        let gemm = lat.get("decode_phase").unwrap().get("gemm").unwrap();
+        assert!(gemm.get("p50_ms").unwrap().as_f64().unwrap() >= 0.0);
+        // the whole document must round-trip through the parser
+        let text = j.to_string_pretty();
+        Json::parse(&text).expect("stats json parses");
+    }
+
+    #[test]
+    fn tenant_counters_reach_the_engine_registry() {
+        let cfg = ServeConfig { max_lanes: 2, obs: Some(true), ..ServeConfig::default() };
+        let engine = test_engine(&cfg);
+        let registry = Arc::clone(&engine.obs().registry);
+        let (host, handle) = spawn_host(
+            engine,
+            HostConfig { per_tenant_cap: 1, fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() } },
+        );
+        let mk = |tenant: &str, tx: Sender<Event>| SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: 4,
+            temp: 0.0,
+            seed: 1,
+            stop: None,
+            tenant: tenant.into(),
+            deadline: None,
+            events: tx,
+        };
+        let (tx_a, rx_a) = mpsc::channel();
+        host.submit(mk("alice", tx_a)).unwrap();
+        let (tx_b, _rx_b) = mpsc::channel();
+        host.submit(mk("alice", tx_b)).unwrap_err(); // over the tenant cap
+        collect(&rx_a);
+        host.drain();
+        handle.join().unwrap();
+        let text = registry.render_prometheus();
+        assert!(
+            text.contains("kurtail_tenant_requests_total{tenant=\"alice\"} 2"),
+            "accepted + shed both count as tenant requests:\n{text}"
+        );
+        assert!(text.contains("kurtail_tenant_shed_total{tenant=\"alice\"} 1"), "{text}");
+        assert!(text.contains("kurtail_requests_retired_total 1"), "{text}");
+    }
+
+    #[test]
+    fn build_info_json_names_the_build() {
+        let engine = test_engine(&ServeConfig::default());
+        let info = BuildInfo::from_engine(&engine);
+        let j = info.to_json("ok");
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(j.get("version").unwrap().as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+        let feats = j.get("features").unwrap();
+        assert!(matches!(feats.get("int_gemm").unwrap(), Json::Bool(_)));
+        Json::parse(&j.to_string_pretty()).expect("healthz json parses");
     }
 
     #[test]

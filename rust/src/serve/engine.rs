@@ -74,11 +74,17 @@
 //! are fixed per backend and kernels are row-independent, so token
 //! streams are bitwise identical across backends too.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::calib::ByteTokenizer;
 use crate::config::{KvQuant, QuantScheme};
 use crate::model::Params;
+use crate::obs::{
+    self, EngineObs, RequestSpan, N_PHASES, PHASE_ACT_QUANT, PHASE_ATTENTION, PHASE_EPILOGUE,
+    PHASE_GEMM, PHASE_SAMPLING,
+};
 use crate::quant::fakequant::{fq_row_sym, row_scale_buf};
 use crate::runtime::ConfigMeta;
 use crate::tensor::matmul::{matmul_into_threads, transpose_into_on, PackedB};
@@ -111,6 +117,45 @@ fn fused_flag(var: Option<&str>) -> bool {
 /// RoPE base shared by every preset (`ModelConfig.rope_base`); the
 /// manifest does not carry it because no config overrides it.
 const ROPE_BASE: f32 = 10000.0;
+
+/// Per-forward phase lap accumulator: at each phase boundary in
+/// [`Engine::forward`], `lap(phase)` adds the time since the previous
+/// boundary to that phase's stack-local bucket; `flush` records each
+/// accumulated total into its histogram once per forward. Disabled
+/// (`on = false`) it is a no-op — no clock reads, no recording — so the
+/// `KURTAIL_OBS=0` A/B run measures the uninstrumented path. All state
+/// is on the stack and recording is atomic adds, preserving the
+/// zero-alloc decode contract.
+struct PhaseClock {
+    on: bool,
+    last: Instant,
+    acc: [u64; N_PHASES],
+}
+
+impl PhaseClock {
+    #[inline]
+    fn start(on: bool) -> Self {
+        Self { on, last: Instant::now(), acc: [0; N_PHASES] }
+    }
+
+    #[inline]
+    fn lap(&mut self, phase: usize) {
+        if self.on {
+            let now = Instant::now();
+            self.acc[phase] += now.duration_since(self.last).as_nanos() as u64;
+            self.last = now;
+        }
+    }
+
+    #[inline]
+    fn flush(self, obs: &EngineObs) {
+        if self.on {
+            for (hist, ns) in obs.phases.iter().zip(self.acc) {
+                hist.record_ns(ns);
+            }
+        }
+    }
+}
 
 // ------------------------------------------------------------- model
 
@@ -563,6 +608,11 @@ pub struct ServeConfig {
     /// many times before admission pauses for it (starvation bound —
     /// see `scheduler.rs`).
     pub max_head_skips: usize,
+    /// Telemetry recording (`crate::obs`): `None` follows `KURTAIL_OBS`
+    /// (unset → on), `Some(false)` skips every clock read and histogram
+    /// record — the bench A/B baseline for the `obs_overhead` gate.
+    /// Bitwise invisible to token streams either way.
+    pub obs: Option<bool>,
 }
 
 impl Default for ServeConfig {
@@ -581,6 +631,7 @@ impl Default for ServeConfig {
             scratch_decay: None,
             queue_cap: 0,
             max_head_skips: DEFAULT_HEAD_SKIPS,
+            obs: None,
         }
     }
 }
@@ -593,6 +644,9 @@ pub struct Completion {
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
     pub text: String,
+    /// Where the request spent its life (queue wait / prefill / decode);
+    /// all-zero timings when the engine runs with `KURTAIL_OBS=0`.
+    pub span: RequestSpan,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -631,6 +685,14 @@ struct Lane {
     /// Tokens already written to the KV cache.
     pos: usize,
     reserved_blocks: usize,
+    /// Submit time (from `QueuedRequest::enqueued`) — drives the TTFT
+    /// histogram and the span's queue-wait component.
+    enqueued: Instant,
+    /// Admission time: span decode time = retirement − admission −
+    /// prefill.
+    admitted_at: Instant,
+    queue_wait_ns: u64,
+    prefill_ns: u64,
 }
 
 /// The continuous-batching serving engine.
@@ -660,6 +722,9 @@ pub struct Engine {
     fused: bool,
     scratch: DecodeScratch,
     pub stats: EngineStats,
+    /// Telemetry bundle (own registry; the daemon serves it on
+    /// `GET /metrics`). `obs.enabled` gates every record call.
+    obs: EngineObs,
 }
 
 impl Engine {
@@ -726,7 +791,15 @@ impl Engine {
             fused,
             scratch,
             stats: EngineStats::default(),
+            obs: EngineObs::new(cfg.obs.unwrap_or_else(obs::obs_enabled)),
         })
+    }
+
+    /// The engine's telemetry bundle: histograms, gauges, counters, and
+    /// the registry behind `GET /metrics`. All handles are `Arc`s, so a
+    /// clone can be read from other threads while the engine records.
+    pub fn obs(&self) -> &EngineObs {
+        &self.obs
     }
 
     /// Whether quantized GEMMs run on the integer-accumulator path
@@ -803,6 +876,9 @@ impl Engine {
     ) -> Result<usize, ServeError> {
         if self.draining {
             self.stats.shed += 1;
+            if self.obs.enabled {
+                self.obs.requests_shed.inc();
+            }
             return Err(ServeError::Draining);
         }
         if tokens.is_empty() {
@@ -827,10 +903,22 @@ impl Engine {
             // the PR-2..5 admission-time hard failure, now recoverable:
             // this request can never fit, but the engine carries on
             self.stats.shed += 1;
+            if self.obs.enabled {
+                self.obs.requests_shed.inc();
+            }
             return Err(ServeError::RequestTooLarge { needed_blocks: needed, pool_blocks: self.pool.max_blocks });
         }
         let id = self.next_id;
-        match self.sched.push(QueuedRequest { id, tokens, n_new: n_tokens, temp, seed, stop }) {
+        let req = QueuedRequest {
+            id,
+            tokens,
+            n_new: n_tokens,
+            temp,
+            seed,
+            stop,
+            enqueued: Instant::now(),
+        };
+        match self.sched.push(req) {
             Ok(()) => {
                 // ids advance only on acceptance, so a replay of the
                 // accepted submissions reproduces the same id sequence
@@ -840,6 +928,9 @@ impl Engine {
             }
             Err(e) => {
                 self.stats.shed += 1;
+                if self.obs.enabled {
+                    self.obs.requests_shed.inc();
+                }
                 Err(e)
             }
         }
@@ -854,6 +945,10 @@ impl Engine {
     pub fn cancel(&mut self, id: usize) -> bool {
         if self.sched.cancel(id).is_some() {
             self.stats.canceled += 1;
+            if self.obs.enabled {
+                self.obs.requests_canceled.inc();
+            }
+            self.refresh_gauges();
             return true;
         }
         for slot in 0..self.lanes.len() {
@@ -863,10 +958,29 @@ impl Engine {
                 self.committed_blocks -= lane.reserved_blocks;
                 self.stats.retired += 1;
                 self.stats.canceled += 1;
+                if self.obs.enabled {
+                    self.obs.requests_retired.inc();
+                    self.obs.requests_canceled.inc();
+                }
+                self.refresh_gauges();
                 return true;
             }
         }
         false
+    }
+
+    /// Re-point the pool/lane/queue gauges at current state. Called at
+    /// the end of every step and after out-of-step state changes
+    /// (cancel, drain) so a scrape between steps never reads a stale
+    /// block count.
+    fn refresh_gauges(&self) {
+        if self.obs.enabled {
+            self.obs.kv_free_blocks.set(self.pool.free_blocks() as u64);
+            self.obs.kv_used_blocks.set(self.pool.used_blocks() as u64);
+            self.obs.kv_withheld_blocks.set(self.withheld_blocks as u64);
+            self.obs.live_lanes.set(self.live_lanes() as u64);
+            self.obs.queued_requests.set(self.sched.len() as u64);
+        }
     }
 
     /// Enter drain: every queued request is shed (their ids are
@@ -878,6 +992,10 @@ impl Engine {
         self.draining = true;
         let shed = self.sched.drain();
         self.stats.shed += shed.len() as u64;
+        if self.obs.enabled {
+            self.obs.requests_shed.add(shed.len() as u64);
+        }
+        self.refresh_gauges();
         shed.into_iter().map(|r| r.id).collect()
     }
 
@@ -955,6 +1073,14 @@ impl Engine {
             let reserved = self.pool.blocks_needed(self.model.meta.n_layers, total);
             self.committed_blocks += reserved;
             let rng = req.rng();
+            let admitted_at = Instant::now();
+            let queue_wait_ns = if self.obs.enabled {
+                let ns = admitted_at.duration_since(req.enqueued).as_nanos() as u64;
+                self.obs.queue_wait.record_ns(ns);
+                ns
+            } else {
+                0
+            };
             // reserve the worst-case token and block capacity up front
             // so the per-step pushes below never reallocate mid-decode
             let mut tokens = req.tokens;
@@ -972,12 +1098,19 @@ impl Engine {
                 seq: SeqKv::with_capacity(self.model.meta.n_layers, per_list),
                 pos: 0,
                 reserved_blocks: reserved,
+                enqueued: req.enqueued,
+                admitted_at,
+                queue_wait_ns,
+                prefill_ns: 0,
                 tokens,
             };
             self.lanes[slot] = Some(lane);
             self.prefill(slot, &mut on_token)?;
             admitted_now.push(slot);
             self.stats.admitted += 1;
+            if self.obs.enabled {
+                self.obs.requests_admitted.inc();
+            }
         }
 
         // one decode token for every live lane not admitted this step;
@@ -994,7 +1127,12 @@ impl Engine {
         let step_res = if slots.is_empty() {
             Ok(())
         } else {
-            self.decode_batch(&slots, &mut on_token)
+            let t_dec = self.obs.enabled.then(Instant::now);
+            let r = self.decode_batch(&slots, &mut on_token);
+            if let Some(t0) = t_dec {
+                self.obs.decode_step.record_duration(t0.elapsed());
+            }
+            r
         };
         self.scratch.slots = slots;
         step_res?;
@@ -1003,6 +1141,7 @@ impl Engine {
         self.stats.peak_lanes = self.stats.peak_lanes.max(live);
         self.stats.steps += 1;
         self.retire_finished();
+        self.refresh_gauges();
         Ok(self.lanes.iter().any(|l| l.is_some()) || !self.sched.is_empty())
     }
 
@@ -1034,11 +1173,24 @@ impl Engine {
             if lane.stopped && lane.produced < lane.n_new {
                 self.stats.eos_retired += 1;
             }
+            let span = if self.obs.enabled {
+                self.obs.requests_retired.inc();
+                RequestSpan {
+                    queue_wait_ns: lane.queue_wait_ns,
+                    prefill_ns: lane.prefill_ns,
+                    decode_ns: (lane.admitted_at.elapsed().as_nanos() as u64)
+                        .saturating_sub(lane.prefill_ns),
+                    new_tokens: lane.produced as u64,
+                }
+            } else {
+                RequestSpan { new_tokens: lane.produced as u64, ..RequestSpan::default() }
+            };
             self.done.push(Completion {
                 id: lane.id,
                 prompt_len: lane.prompt_len,
                 text: ByteTokenizer.decode(&lane.tokens),
                 tokens: lane.tokens,
+                span,
             });
         }
     }
@@ -1060,6 +1212,7 @@ impl Engine {
     /// positions run through the forward as one `(T, d)` block, then the
     /// last position's logits seed the first generated token.
     fn prefill(&mut self, slot: usize, on_token: &mut impl FnMut(usize, i32)) -> Result<()> {
+        let t_prefill = self.obs.enabled.then(Instant::now);
         let p = self.lanes[slot].as_ref().unwrap().prompt_len;
         self.prep_scratch(p);
         {
@@ -1072,7 +1225,7 @@ impl Engine {
         self.forward(p)?;
         let vocab = self.model.meta.vocab;
         let fused = self.fused;
-        let Self { lanes, scratch, stats, .. } = self;
+        let Self { lanes, scratch, stats, obs, .. } = self;
         let DecodeScratch { logits, exps, lrow, .. } = scratch;
         let lane = lanes[slot].as_mut().unwrap();
         lane.pos = lane.prompt_len;
@@ -1094,6 +1247,15 @@ impl Engine {
         on_token(lane.id, next);
         stats.prefill_tokens += p as u64;
         stats.decode_tokens += 1;
+        if let Some(t0) = t_prefill {
+            let ns = t0.elapsed().as_nanos() as u64;
+            lane.prefill_ns = ns;
+            obs.prefill.record_ns(ns);
+            // TTFT spans submit → this first sampled token
+            obs.ttft.record_ns(lane.enqueued.elapsed().as_nanos() as u64);
+            obs.prefill_tokens.add(p as u64);
+            obs.decode_tokens.inc();
+        }
         Ok(())
     }
 
@@ -1116,7 +1278,8 @@ impl Engine {
         self.forward(n)?;
         let vocab = self.model.meta.vocab;
         let fused = self.fused;
-        let Self { lanes, scratch, stats, .. } = self;
+        let Self { lanes, scratch, stats, obs, .. } = self;
+        let t_sample = obs.enabled.then(Instant::now);
         let DecodeScratch { logits, exps, lrow, arg_best, arg_idx, .. } = scratch;
         let any_greedy = slots.iter().any(|&s| lanes[s].as_ref().unwrap().temp <= 0.0);
         if fused && n > 1 && any_greedy {
@@ -1146,6 +1309,10 @@ impl Engine {
             on_token(lane.id, next);
             stats.decode_tokens += 1;
         }
+        if let Some(t0) = t_sample {
+            obs.phases[PHASE_SAMPLING].record_duration(t0.elapsed());
+            obs.decode_tokens.add(n as u64);
+        }
         Ok(())
     }
 
@@ -1158,6 +1325,12 @@ impl Engine {
     /// performs **zero heap allocations** (pinned by
     /// `tests/serve_scratch.rs` under the counting allocator).
     fn forward(&mut self, n: usize) -> Result<()> {
+        // phase attribution (see README §Observability): act_quant =
+        // online rotations + activation quantize; gemm = packed linears
+        // (+ FFN elementwise activation) and the head; attention =
+        // KV append + fused dequant-attention; epilogue = norms, RoPE,
+        // residual adds. Sampling is timed by the callers.
+        let mut ck = PhaseClock::start(self.obs.enabled);
         let threads = self.threads;
         let arena = self.arena;
         let backend = self.backend;
@@ -1222,12 +1395,15 @@ impl Engine {
         for (l, lw) in model.layers.iter().enumerate() {
             // z = act_fq(rmsnorm(x, ln1)) — shared by wq/wk/wv
             rmsnorm_gamma_rows(x, &lw.ln1, z, d, threads, backend);
+            ck.lap(PHASE_EPILOGUE);
             if let Some(q) = quant {
                 quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
+            ck.lap(PHASE_ACT_QUANT);
             project(&lw.wq, use_int, arena, row_epi, z, qcodes, qscales, n, qx, threads, backend, gemm);
             project(&lw.wk, use_int, arena, row_epi, z, qcodes, qscales, n, kx, threads, backend, gemm);
             project(&lw.wv, use_int, arena, row_epi, z, qcodes, qscales, n, vx, threads, backend, gemm);
+            ck.lap(PHASE_GEMM);
 
             // RoPE at each row's position, per head
             for (i, &(_, pos)) in rows.iter().enumerate() {
@@ -1239,16 +1415,19 @@ impl Engine {
                     apply_rope_row(&mut kx[o..o + dh], cos, sin);
                 }
             }
+            ck.lap(PHASE_EPILOGUE);
             // online R3 (cancels in QᵀK, shapes the K cache distribution)
             if let Some(q) = quant {
                 rotate_rows(qx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, backend, arena);
                 rotate_rows(kx, rot, rp.map(|r| &r.r3), &q.r3, n * h, dh, threads, backend, arena);
             }
+            ck.lap(PHASE_ACT_QUANT);
             // append-quantize this token's K/V into the paged pool
             for (i, &(slot, pos)) in rows.iter().enumerate() {
                 let lane = lanes[slot].as_mut().unwrap();
                 pool.append(&mut lane.seq, l, pos, &kx[i * d..(i + 1) * d], &vx[i * d..(i + 1) * d])?;
             }
+            ck.lap(PHASE_ATTENTION);
             // Q activation quant happens after R3 (decode_step order)
             if let Some(q) = quant {
                 if arena {
@@ -1257,6 +1436,7 @@ impl Engine {
                     fq_rows(qx, dh, &q.act, threads);
                 }
             }
+            ck.lap(PHASE_ACT_QUANT);
             // fused dequant-attention per row (rows own disjoint caches
             // or, within a prefill, disjoint causal prefixes); score
             // rows come from the arena, one per worker
@@ -1272,13 +1452,16 @@ impl Engine {
                     }
                 });
             }
+            ck.lap(PHASE_ATTENTION);
             if let Some(q) = quant {
                 rotate_rows(attn, rot, rp.map(|r| &r.r4), &q.r4, n * h, dh, threads, backend, arena);
                 quantize_site(attn, d, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
+            ck.lap(PHASE_ACT_QUANT);
             // wo: column-major straight into the fused residual add —
             // the transpose disappears into x's row-major traversal
             project(&lw.wo, use_int, arena, col_epi, attn, qcodes, qscales, n, z, threads, backend, gemm);
+            ck.lap(PHASE_GEMM);
             if fused {
                 add_assign_colmajor(x, z, n, d);
             } else {
@@ -1287,9 +1470,11 @@ impl Engine {
 
             // FFN
             rmsnorm_gamma_rows(x, &lw.ln2, z, d, threads, backend);
+            ck.lap(PHASE_EPILOGUE);
             if let Some(q) = quant {
                 quantize_site(z, d, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
+            ck.lap(PHASE_ACT_QUANT);
             match &lw.wg {
                 Some(wg) => {
                     // llama: silu(z·Wg) ⊙ (z·Wu) — elementwise, so the
@@ -1309,6 +1494,7 @@ impl Engine {
                     }
                 }
             }
+            ck.lap(PHASE_GEMM);
             if fused && n > 1 {
                 // the R5 rotation (and wd's lhs) needs row-major rows:
                 // one parallel blocked transpose crosses layouts, and
@@ -1327,13 +1513,16 @@ impl Engine {
             if let Some(q) = quant {
                 quantize_site(mid, ff, &q.act, use_int, arena, qcodes, qscales, threads, backend, fq_bufs);
             }
+            ck.lap(PHASE_ACT_QUANT);
             // wd: column-major into the second fused residual add
             project(&lw.wd, use_int, arena, col_epi, mid, qcodes, qscales, n, z, threads, backend, gemm);
+            ck.lap(PHASE_GEMM);
             if fused {
                 add_assign_colmajor(x, z, n, d);
             } else {
                 add_assign(x, z);
             }
+            ck.lap(PHASE_EPILOGUE);
         }
 
         // final norm + fp head (pre-packed on arena engines; overwrite
@@ -1342,6 +1531,7 @@ impl Engine {
         // sizes the head's n (vocab) side is the only one wide enough to
         // parallelize over, and argmax/sampling are column-aware.
         rmsnorm_gamma_rows(x, &model.lnf, z, d, threads, backend);
+        ck.lap(PHASE_EPILOGUE);
         match (&model.head_packed, arena) {
             (Some(p), true) if fused && n > 1 => p.matmul_colmajor_on(backend, z, &model.head_t.data, logits, n, threads),
             (Some(p), true) => p.matmul_overwrite_on(backend, z, &model.head_t.data, logits, n, threads),
@@ -1350,6 +1540,8 @@ impl Engine {
                 matmul_into_threads(z, &model.head_t.data, logits, n, d, meta.vocab, threads);
             }
         }
+        ck.lap(PHASE_GEMM);
+        ck.flush(&self.obs);
         Ok(())
     }
 

@@ -120,6 +120,13 @@ impl KvPool {
         self.free.len()
     }
 
+    /// Blocks currently held by live lanes (the occupancy gauge's
+    /// complement of [`free_blocks`](Self::free_blocks); no allocation,
+    /// safe on the decode hot path).
+    pub fn used_blocks(&self) -> usize {
+        self.max_blocks - self.free.len()
+    }
+
     /// Blocks a sequence of `total_tokens` will claim across `n_layers`
     /// (K and V) — the scheduler's admission currency.
     pub fn blocks_needed(&self, n_layers: usize, total_tokens: usize) -> usize {

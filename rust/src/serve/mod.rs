@@ -30,6 +30,15 @@
 //!   gracefully, and a seeded fault-injection layer (`KURTAIL_FAULT`)
 //!   makes the failure paths testable (`rust/README.md` §Serving
 //!   daemon).
+//! * Telemetry ([`crate::obs`]) — every engine owns an
+//!   [`crate::obs::EngineObs`] bundle (queue-wait/TTFT/prefill/decode
+//!   and per-phase histograms, KV-occupancy gauges, request counters)
+//!   against its own metric registry; the daemon renders that registry
+//!   as Prometheus text on `GET /metrics`, folds quantiles into
+//!   `/stats`, and emits one structured log line per request lifecycle
+//!   event (`KURTAIL_LOG`). Recording is atomics-only on the decode hot
+//!   path and `KURTAIL_OBS=0` / `ServeConfig::obs` turns it off without
+//!   changing a single emitted token (`rust/README.md` §Observability).
 //!
 //! Everything here runs on the host kernel layer (`util::par`
 //! row-chunking, work-stealing by default with `KURTAIL_PAR=static` /

@@ -29,6 +29,7 @@
 //!   batch-invariance guarantee builds on.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::util::Rng;
 
@@ -50,6 +51,10 @@ pub struct QueuedRequest {
     /// token (included in the completion), releasing its whole block
     /// reservation for queued admissions. `None` always runs `n_new`.
     pub stop: Option<i32>,
+    /// Submit time, for the queue-wait histogram and the request's trace
+    /// span. Observability only — admission order never reads the clock
+    /// (the batch-invariance guarantee stands).
+    pub enqueued: Instant,
 }
 
 impl QueuedRequest {
@@ -156,7 +161,15 @@ mod tests {
     use super::*;
 
     fn req(id: usize, len: usize) -> QueuedRequest {
-        QueuedRequest { id, tokens: vec![1; len], n_new: 4, temp: 0.0, seed: 0, stop: None }
+        QueuedRequest {
+            id,
+            tokens: vec![1; len],
+            n_new: 4,
+            temp: 0.0,
+            seed: 0,
+            stop: None,
+            enqueued: Instant::now(),
+        }
     }
 
     #[test]

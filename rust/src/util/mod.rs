@@ -11,4 +11,3 @@ pub mod timer;
 
 pub use json::Json;
 pub use rng::Rng;
-pub use timer::Stopwatch;

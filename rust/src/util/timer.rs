@@ -1,27 +1,12 @@
-//! Wall-clock + peak-RSS instrumentation for the training-cost experiment
-//! (paper §3: SpinQuant needs 4×H100, KurTail one GPU — here the analogous
+//! Peak-RSS instrumentation for the training-cost experiment (paper §3:
+//! SpinQuant needs 4×H100, KurTail one GPU — here the analogous
 //! asymmetry is peak memory + wall-clock of rotation learning).
-
-use std::time::Instant;
-
-pub struct Stopwatch {
-    start: Instant,
-    label: String,
-}
-
-impl Stopwatch {
-    pub fn start(label: &str) -> Self {
-        Self { start: Instant::now(), label: label.to_string() }
-    }
-
-    pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    pub fn report(&self) -> String {
-        format!("{}: {:.2}s", self.label, self.elapsed_s())
-    }
-}
+//!
+//! Wall-clock stage timing lives in [`crate::obs::StageTimer`], which
+//! replaced the old `Stopwatch` label printer: the same `start()` /
+//! `stop() -> f64` shape, but every stage duration also lands in the
+//! `kurtail_stage_seconds{stage=...}` histogram of the global metric
+//! registry instead of vanishing into a formatted string.
 
 /// Current process peak RSS in MiB (from /proc/self/status; Linux only).
 pub fn peak_rss_mib() -> f64 {

@@ -21,6 +21,7 @@ use kurtail::tensor::matmul::{
 };
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
+use kurtail::obs::Histogram;
 use kurtail::serve::{
     Engine, Int4Weight, KvPool, ParBackend, QuantActs, SeqKv, ServeConfig, ServeError, ServeModel,
     ServeQuantSpec,
@@ -760,6 +761,74 @@ fn prop_cancel_interleavings_leak_free_and_replayable() {
             )?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantile_brackets_true_order_statistic() {
+    // the log2-bucket estimate is the upper bound of the bucket holding
+    // rank ceil(q·count): always ≥ the true order statistic and < 2× it
+    // (values stay below the overflow bucket, where the bound is by
+    // construction unavailable)
+    check(25, |rng| {
+        let h = Histogram::new();
+        let n = 1 + rng.below(400);
+        let mut values: Vec<u64> = (0..n)
+            .map(|_| {
+                // spread draws across bucket magnitudes 0..2^41, zeros included
+                let mag = rng.below(41) as u32;
+                rng.next_u64() % (1u64 << (mag + 1))
+            })
+            .collect();
+        for &v in &values {
+            h.record_ns(v);
+        }
+        values.sort_unstable();
+        let s = h.snapshot();
+        prop_assert(s.count == n as u64, "count == recorded")?;
+        prop_assert(s.sum_ns == values.iter().sum::<u64>(), "sum == recorded")?;
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let est = s.quantile_ns(q).unwrap();
+            let rank = ((q * n as f64).ceil() as usize).max(1);
+            let truth = values[rank - 1];
+            prop_assert(
+                est >= truth && est < 2 * truth.max(1),
+                &format!("q={q}: estimate {est} brackets true {truth} (n={n})"),
+            )?;
+        }
+        prop_assert(Histogram::new().snapshot().quantile_ns(0.5).is_none(), "empty → None")
+    });
+}
+
+#[test]
+fn prop_histogram_merge_associative_and_lossless() {
+    // shard merges must be order-independent (associative + commutative)
+    // and must reproduce the histogram a single writer would have built
+    // from the union of the observations
+    check(25, |rng| {
+        let whole = Histogram::new();
+        let shards: Vec<Histogram> = (0..3).map(|_| Histogram::new()).collect();
+        for _ in 0..rng.below(300) {
+            let v = rng.next_u64() % (1u64 << (1 + rng.below(42)));
+            whole.record_ns(v);
+            shards[rng.below(3)].record_ns(v);
+        }
+        let [a, b, c] = [shards[0].snapshot(), shards[1].snapshot(), shards[2].snapshot()];
+
+        let mut left = a; // (a ⊕ b) ⊕ c
+        left.merge(&b);
+        left.merge(&c);
+        let mut right = c; // a ⊕ (c ⊕ b), snapshots are Copy
+        right.merge(&b);
+        let mut swapped = a;
+        swapped.merge(&right);
+
+        prop_assert(left == swapped, "merge order-independent")?;
+        prop_assert(left == whole.snapshot(), "sharded == single-writer")?;
+        prop_assert(
+            left.mean_ns() == whole.snapshot().mean_ns(),
+            "mean survives the merge exactly",
+        )
     });
 }
 

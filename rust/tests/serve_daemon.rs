@@ -383,7 +383,10 @@ fn drain_rejects_new_work_and_finishes_live_streams() {
     let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
     let addr = daemon.addr();
     let health = request(addr, "GET", "/healthz", "");
-    assert_eq!((health.status, health.body.as_str()), (200, "ok"));
+    assert_eq!(health.status, 200, "{}", health.body);
+    let hj = health.json();
+    assert_eq!(hj.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(hj.get("version").is_ok(), "healthz carries build info: {}", health.body);
 
     // open a stream and wait for its first token: the lane is live, so
     // the drain must let it finish
@@ -413,6 +416,125 @@ fn drain_rejects_new_work_and_finishes_live_streams() {
     got.extend_from_slice(&read_lenient(&mut s));
     let resp = parse_response(&got);
     assert!(resp.body.contains("\"done\": true"), "live stream finished: {}", resp.body);
+
+    daemon.join().unwrap();
+}
+
+/// Parse a Prometheus text-0.0.4 body into `(series, value)` pairs,
+/// panicking on duplicate series (the exposition-validity half of the
+/// check) — series name here includes the label set, e.g.
+/// `kurtail_tenant_requests_total{tenant="alice"}`.
+fn parse_metrics(body: &str) -> Vec<(String, f64)> {
+    let mut series: Vec<(String, f64)> = Vec::new();
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+        assert!(
+            series.iter().all(|(n, _)| n != name),
+            "duplicate series in exposition: {name}"
+        );
+        series.push((name.to_string(), value.parse().expect("metric value parses")));
+    }
+    series
+}
+
+fn metric(series: &[(String, f64)], name: &str) -> f64 {
+    series
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("no series named {name}"))
+        .1
+}
+
+#[test]
+fn metrics_exposition_reconciles_with_stats_after_faulted_run() {
+    // two completions under distinct tenants plus one deadline cancel,
+    // all with slowed steps: every counter on /metrics must agree with
+    // the /stats snapshot, and the latency histograms must have seen
+    // exactly the admitted requests
+    let dcfg = DaemonConfig {
+        serve: ServeConfig { block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { slow_step_ms: 5, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    let r = request(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"tokens": [1, 2], "max_tokens": 3, "tenant": "alice"}"#,
+    );
+    assert_eq!(r.status, 200, "{}", r.body);
+    // completions carry their trace span
+    let body = r.json();
+    let span = body.get("span").unwrap();
+    assert!(span.get("queue_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(span.get("new_tokens").unwrap().as_usize().unwrap(), 3);
+
+    let r = request(addr, "POST", "/v1/generate", r#"{"tokens": [3], "max_tokens": 2, "tenant": "bob"}"#);
+    assert_eq!(r.status, 200, "{}", r.body);
+
+    let r = request(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"tokens": [1], "max_tokens": 8, "deadline_ms": 1, "tenant": "alice"}"#,
+    );
+    assert_eq!(r.status, 504, "{}", r.body);
+
+    let m = request(addr, "GET", "/metrics", "");
+    assert_eq!(m.status, 200, "{}", m.body);
+    assert!(
+        m.header("content-type").is_some_and(|c| c.starts_with("text/plain")),
+        "prometheus content type, got {:?}",
+        m.header("content-type")
+    );
+    let series = parse_metrics(&m.body);
+
+    let stats = request(addr, "GET", "/stats", "").json();
+    let engine = stats.get("engine").unwrap();
+    let stat = |k: &str| engine.get(k).unwrap().as_f64().unwrap();
+
+    // counters reconcile exactly with the /stats snapshot
+    for (m_name, s_name) in [
+        ("kurtail_requests_admitted_total", "admitted"),
+        ("kurtail_requests_retired_total", "retired"),
+        ("kurtail_requests_canceled_total", "canceled"),
+        ("kurtail_requests_shed_total", "shed"),
+        ("kurtail_prefill_tokens_total", "prefill_tokens"),
+        ("kurtail_decode_tokens_total", "decode_tokens"),
+    ] {
+        assert_eq!(metric(&series, m_name), stat(s_name), "{m_name} != stats {s_name}");
+    }
+    // the two completions were certainly admitted; the deadline request
+    // may be swept from the queue before ever reaching a lane, so only
+    // bound it
+    let admitted = stat("admitted");
+    assert!((2.0..=3.0).contains(&admitted), "admitted = {admitted}");
+    assert!(stat("canceled") >= 1.0, "the deadline request canceled");
+
+    // every admitted request crossed the queue and prefilled once
+    assert_eq!(metric(&series, "kurtail_queue_wait_seconds_count"), admitted);
+    assert_eq!(metric(&series, "kurtail_ttft_seconds_count"), admitted);
+
+    // tenant series: alice posted twice, bob once, and the deadline
+    // cancel landed on alice
+    assert_eq!(metric(&series, "kurtail_tenant_requests_total{tenant=\"alice\"}"), 2.0);
+    assert_eq!(metric(&series, "kurtail_tenant_requests_total{tenant=\"bob\"}"), 1.0);
+    assert_eq!(metric(&series, "kurtail_tenant_canceled_total{tenant=\"alice\"}"), 1.0);
+
+    // the pool drained back and the gauges agree with /stats
+    assert_eq!(
+        metric(&series, "kurtail_kv_free_blocks"),
+        stats.get("free_blocks").unwrap().as_f64().unwrap()
+    );
+    assert_eq!(metric(&series, "kurtail_live_lanes"), 0.0);
+
+    // /stats mirrors the same histograms as structured quantiles
+    let latency = stats.get("latency").unwrap();
+    assert_eq!(latency.get("ttft").unwrap().get("count").unwrap().as_f64().unwrap(), admitted);
+    assert!(latency.get("decode_phase").unwrap().get("gemm").unwrap().get("count").is_ok());
 
     daemon.join().unwrap();
 }

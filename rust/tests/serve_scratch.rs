@@ -98,6 +98,9 @@ fn steady_state_decode_is_allocation_free() {
         // explicit unbounded budget (None would follow the
         // KURTAIL_PANEL_CACHE env var and break under `=0`)
         panel_cache: Some(usize::MAX),
+        // telemetry ON: histogram records and gauge refreshes are part
+        // of the zero-alloc contract, not exempt from it
+        obs: Some(true),
         ..ServeConfig::default()
     };
     // the serving default: work-stealing runtime + fused epilogues

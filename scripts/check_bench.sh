@@ -20,6 +20,11 @@
 #                                                 through the daemon host;
 #                                                 LOWER is better — gated
 #                                                 as a ceiling, not a floor)
+#              runs[lanes=16].obs_overhead       (telemetry cost: obs-off
+#                                                 tok/s over obs-on − 1;
+#                                                 ABSOLUTE ceiling 0.02 —
+#                                                 the obs layer may never
+#                                                 cost more than 2%)
 #
 # Usage:  scripts/check_bench.sh            # gate current vs baseline
 #         scripts/check_bench.sh --update   # refresh BENCH_baseline/
@@ -117,6 +122,22 @@ for name, fn, cur_args, base_args, direction in metrics:
     print(f"  {status:>10}  {name}: current {cur:.3f} vs baseline {base:.3f} ({kind} {bound:.3f})")
     if not ok:
         failures.append(name)
+
+# absolute gates: fixed bounds rather than baseline-relative ones. The
+# obs overhead contract is "telemetry costs <= 2%", full stop — a slow
+# baseline must not launder a slower current run. Skipped (not failed)
+# when the current bench predates the field.
+OBS_OVERHEAD_CEILING = 0.02
+try:
+    overhead = serve_run_metric(cur_s, 16, "obs_overhead")
+except KeyError:
+    print("  SKIP serve: lanes=16 obs_overhead: current bench has no value")
+else:
+    ok = overhead <= OBS_OVERHEAD_CEILING
+    status = "ok" if ok else "REGRESSION"
+    print(f"  {status:>10}  serve: lanes=16 obs_overhead: current {overhead:.4f} (absolute ceiling {OBS_OVERHEAD_CEILING:.2f})")
+    if not ok:
+        failures.append("serve: lanes=16 obs_overhead over the 2% absolute ceiling")
 
 if failures:
     print(f"check_bench: {len(failures)} metric(s) regressed >= {TOLERANCE:.0%}:", file=sys.stderr)

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Daemon smoke test: start `kurtail daemon --synthetic`, stream one
 # request over real HTTP, check /stats invariants (at least one request
-# admitted, zero leaked KV blocks), then SIGTERM it and assert a clean
-# drained exit (exit code 0, "drained clean" on stdout).
+# admitted, zero leaked KV blocks), scrape /metrics mid-run and check
+# the Prometheus counters reconcile with the driven load, then SIGTERM
+# it and assert a clean drained exit (exit code 0, "drained clean" on
+# stdout).
 #
 # Usage: scripts/daemon_smoke.sh [path/to/kurtail]
 #        KURTAIL_SMOKE_PORT overrides the port (default 8473).
@@ -40,6 +42,7 @@ for _ in $(seq 1 100); do
   sleep 0.1
 done
 curl -sf "$base/healthz" | grep -q ok
+curl -sf "$base/healthz" | grep -q '"version"'
 echo "daemon_smoke: daemon is up on $base"
 
 # stream one request: expect per-token ndjson lines and a done marker
@@ -62,6 +65,31 @@ assert s["free_blocks"] == s["max_blocks"], "leaked KV blocks: %s" % s
 assert "tok_s" in s and "shed" in s["engine"], s
 print("daemon_smoke: stats ok —", s["engine"]["admitted"], "admitted,",
       s["free_blocks"], "/", s["max_blocks"], "blocks free")
+'
+
+# /metrics: valid exposition (no duplicate series), counters match the
+# two driven requests, TTFT histogram saw each of them
+curl -sf "$base/metrics" | python3 -c '
+import sys
+lines = [l.rstrip("\n") for l in sys.stdin if l.strip()]
+series = {}
+for l in lines:
+    if l.startswith("#"):
+        continue
+    name, _, value = l.rpartition(" ")
+    assert name not in series, "duplicate series: %s" % name
+    series[name] = float(value)
+admitted = series["kurtail_requests_admitted_total"]
+assert admitted == 2, "admitted %s != 2 driven requests" % admitted
+assert series["kurtail_requests_retired_total"] == admitted, series
+assert series["kurtail_ttft_seconds_count"] == admitted, series
+assert series["kurtail_queue_wait_seconds_count"] == admitted, series
+tenant = sum(v for k, v in series.items()
+             if k.startswith("kurtail_tenant_requests_total"))
+assert tenant == admitted, "tenant totals %s != admitted %s" % (tenant, admitted)
+assert "kurtail_kv_free_blocks" in series and "kurtail_live_lanes" in series, series
+print("daemon_smoke: metrics ok —", len(series), "series,",
+      int(admitted), "admitted")
 '
 
 # SIGTERM → graceful drain → clean exit
