@@ -46,6 +46,14 @@
 //! lanes = 16 as a *ceiling* — latency regressions fail, lower is
 //! better).
 //!
+//! Each lane count also runs a **shared-prefix stage**: 16 requests
+//! over one 48-token shared system prompt (+ distinct 8-token
+//! suffixes), the donor prefilled first so the rest attach its
+//! registered blocks at admission. Recorded: `prefix_hit_ratio`
+//! (shared / total prompt tokens — gated as a floor at lanes = 16),
+//! `kv_bytes_per_token_shared` (effective bytes per logical token with
+//! sharing) and `admission_p99_ms` (queue-wait p99 under the burst).
+//!
 //! Writes `BENCH_serve.json` (path override: `KURTAIL_BENCH_SERVE_JSON`)
 //! with tokens/sec at 1/4/16 concurrent sequences and KV bytes/token for
 //! the paged 4-bit pool vs the dense f32 cache. `scripts/bench.sh`
@@ -263,6 +271,84 @@ fn poisson_load(model: &ServeModel, lanes: usize, tok_s: f64) -> Vec<(&'static s
     ]
 }
 
+/// Shared-prefix workload: `REQUESTS` requests over one long shared
+/// system prompt with distinct short suffixes. The donor runs through
+/// its (chunked) prefill first so its prompt chunks are registered;
+/// the sharers then attach at admission and map the system prompt onto
+/// the donor's blocks (refcount bump, no compute). Emits the sharing
+/// schema rows: `prefix_hit_ratio` (shared / total prompt tokens —
+/// gated as a floor at lanes = 16 by `scripts/check_bench.sh`),
+/// `kv_bytes_per_token_shared` (effective KV bytes per logical token
+/// once shared positions are stored only once) and `admission_p99_ms`
+/// (queue-wait p99 under the burst admission).
+fn shared_prefix_stage(model: &ServeModel, lanes: usize) -> Vec<(&'static str, Json)> {
+    const SYSTEM_TOKENS: usize = 48; // 3 full blocks at the default block_tokens = 16
+    const SUFFIX_TOKENS: usize = 8;
+    let cfg = ServeConfig {
+        max_lanes: lanes,
+        kv_quant: KvQuant::Asym4,
+        int_gemm: Some(true),
+        arena: Some(true),
+        fused_epilogue: Some(true),
+        par_backend: Some(ParBackend::Steal),
+        prefix_share: Some(true),
+        obs: Some(true),
+        ..ServeConfig::default()
+    };
+    let mut eng = Engine::new(model.clone(), &cfg).expect("engine");
+    let system: Vec<i32> = (0..SYSTEM_TOKENS).map(|t| ((t * 13 + 5) % 256) as i32).collect();
+    let prompt = |i: usize| -> Vec<i32> {
+        let mut p = system.clone();
+        p.extend((0..SUFFIX_TOKENS).map(|t| ((i * 31 + t * 7) % 256) as i32));
+        p
+    };
+    let t0 = Instant::now();
+    eng.submit_tokens(prompt(0), NEW_TOKENS, 0.0, 0xC0FFEE).expect("submit donor");
+    for _ in 0..64 {
+        // sharing is discovered at admission, so the donor must sample
+        // its first token (= prefill complete, chunks registered) before
+        // the sharers arrive
+        if eng.stats.decode_tokens > 0 {
+            break;
+        }
+        eng.step().expect("donor prefill step");
+    }
+    assert!(eng.stats.decode_tokens > 0, "donor prefill must complete");
+    for i in 1..REQUESTS {
+        eng.submit_tokens(prompt(i), NEW_TOKENS, 0.0, 0xC0FFEE + i as u64).expect("submit");
+    }
+    let done = eng.run().expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+    let prompt_tokens = (REQUESTS * (SYSTEM_TOKENS + SUFFIX_TOKENS)) as f64;
+    let shared = eng.stats.prefix_shared_tokens as f64;
+    let hit_ratio = shared / prompt_tokens;
+    // effective KV bytes per logical token: shared positions occupy no
+    // storage of their own, so the layout's per-token cost shrinks by
+    // the fraction of the whole stream served from shared blocks
+    let layout = eng.kv_bytes_per_token() as f64;
+    let kv_shared = layout * (tokens as f64 - shared) / (tokens as f64).max(1.0);
+    let adm_p99_ms = eng
+        .obs()
+        .queue_wait
+        .snapshot()
+        .quantile_ns(0.99)
+        .map(|ns| ns as f64 / 1e6)
+        .unwrap_or(0.0);
+    println!(
+        "shared-prefix lanes={lanes:<2}: hit ratio {hit_ratio:.2} ({shared:.0}/{prompt_tokens:.0} \
+         prompt tokens shared), kv {kv_shared:.1} B/token effective vs {layout:.1} unshared, \
+         admission p99 {adm_p99_ms:.1} ms, {:.1} tok/s",
+        tokens as f64 / wall
+    );
+    vec![
+        ("prefix_hit_ratio", num(hit_ratio)),
+        ("prefix_shared_tokens", num(shared)),
+        ("kv_bytes_per_token_shared", num(kv_shared)),
+        ("admission_p99_ms", num(adm_p99_ms)),
+    ]
+}
+
 fn main() {
     // the Poisson host would otherwise print one lifecycle log line per
     // request into the bench output (format is latched on first use, so
@@ -404,6 +490,7 @@ fn main() {
             ("obs_overhead", num(obs_overhead)),
         ];
         row.extend(poisson_load(&int4, lanes, tok_s));
+        row.extend(shared_prefix_stage(&int4, lanes));
         runs.push(obj(row));
         last_eng = Some(eng);
     }

@@ -102,9 +102,16 @@ pub struct EngineObs {
     pub kv_free_blocks: Arc<Gauge>,
     pub kv_used_blocks: Arc<Gauge>,
     pub kv_withheld_blocks: Arc<Gauge>,
+    /// Σ(refs − 1) over pool blocks — KV blocks lanes hold without
+    /// owning storage (the prefix-sharing memory win).
+    pub kv_shared_block_refs: Arc<Gauge>,
     pub live_lanes: Arc<Gauge>,
     pub queued_requests: Arc<Gauge>,
     pub prefill_tokens: Arc<Counter>,
+    /// Prompt positions served from shared blocks instead of compute.
+    pub prefix_shared_tokens: Arc<Counter>,
+    /// Bounded prefill forwards run (chunked-prefill cadence).
+    pub prefill_chunks: Arc<Counter>,
     pub decode_tokens: Arc<Counter>,
     pub requests_admitted: Arc<Counter>,
     pub requests_retired: Arc<Counter>,
@@ -157,9 +164,24 @@ impl EngineObs {
                 "KV pool blocks withheld by fault injection",
                 &[],
             ),
+            kv_shared_block_refs: r.gauge(
+                "kurtail_kv_shared_block_refs",
+                "KV pool blocks held by more than one lane (sum of refs minus one)",
+                &[],
+            ),
             live_lanes: r.gauge("kurtail_live_lanes", "Lanes currently decoding", &[]),
             queued_requests: r.gauge("kurtail_queued_requests", "Requests waiting for admission", &[]),
-            prefill_tokens: r.counter("kurtail_prefill_tokens_total", "Prompt tokens prefilled", &[]),
+            prefill_tokens: r.counter("kurtail_prefill_tokens_total", "Prompt tokens prefilled (computed positions only)", &[]),
+            prefix_shared_tokens: r.counter(
+                "kurtail_prefix_shared_tokens_total",
+                "Prompt tokens served from shared KV blocks instead of compute",
+                &[],
+            ),
+            prefill_chunks: r.counter(
+                "kurtail_prefill_chunks_total",
+                "Bounded prefill forwards run",
+                &[],
+            ),
             decode_tokens: r.counter("kurtail_decode_tokens_total", "Tokens generated", &[]),
             requests_admitted: r.counter("kurtail_requests_admitted_total", "Requests admitted to a lane", &[]),
             requests_retired: r.counter("kurtail_requests_retired_total", "Requests retired (completed)", &[]),
@@ -199,9 +221,12 @@ mod tests {
             "kurtail_kv_free_blocks",
             "kurtail_kv_used_blocks",
             "kurtail_kv_withheld_blocks",
+            "kurtail_kv_shared_block_refs",
             "kurtail_live_lanes",
             "kurtail_queued_requests",
             "kurtail_prefill_tokens_total",
+            "kurtail_prefix_shared_tokens_total",
+            "kurtail_prefill_chunks_total",
             "kurtail_decode_tokens_total",
             "kurtail_requests_admitted_total",
             "kurtail_requests_retired_total",

@@ -167,6 +167,13 @@ pub struct StatsSnapshot {
     pub max_blocks: usize,
     pub committed_blocks: usize,
     pub withheld_blocks: usize,
+    /// Σ(refs − 1) over pool blocks: blocks lanes hold via prefix
+    /// sharing without owning storage.
+    pub shared_block_refs: usize,
+    /// The scheduler's head-of-line bypass budget
+    /// (`ServeConfig::max_head_skips`) — static config surfaced so
+    /// operators can correlate queue-wait tails with the aging policy.
+    pub max_head_skips: usize,
     pub scratch_rows: usize,
     pub panel_cache_bytes: usize,
     pub draining: bool,
@@ -223,6 +230,9 @@ impl StatsSnapshot {
                 json::obj(vec![
                     ("steps", n(e.steps)),
                     ("prefill_tokens", n(e.prefill_tokens)),
+                    ("prefill_chunks", n(e.prefill_chunks)),
+                    ("prefix_hits", n(e.prefix_hits)),
+                    ("prefix_shared_tokens", n(e.prefix_shared_tokens)),
                     ("decode_tokens", n(e.decode_tokens)),
                     ("admitted", n(e.admitted)),
                     ("retired", n(e.retired)),
@@ -238,6 +248,8 @@ impl StatsSnapshot {
             ("max_blocks", u(self.max_blocks)),
             ("committed_blocks", u(self.committed_blocks)),
             ("withheld_blocks", u(self.withheld_blocks)),
+            ("shared_block_refs", u(self.shared_block_refs)),
+            ("max_head_skips", u(self.max_head_skips)),
             ("scratch_rows", u(self.scratch_rows)),
             ("panel_cache_bytes", u(self.panel_cache_bytes)),
             ("draining", Json::Bool(self.draining)),
@@ -278,6 +290,8 @@ fn snapshot(engine: &Engine, started: Instant) -> StatsSnapshot {
         max_blocks: engine.pool().max_blocks,
         committed_blocks: engine.committed_blocks(),
         withheld_blocks: engine.withheld_blocks(),
+        shared_block_refs: engine.shared_block_refs(),
+        max_head_skips: engine.max_head_skips(),
         scratch_rows: engine.scratch_rows(),
         panel_cache_bytes: engine.panel_cache_bytes(),
         draining: engine.draining(),
@@ -1167,6 +1181,12 @@ mod tests {
         assert_eq!(snap.latency.ttft.count, 1);
         assert_eq!(snap.latency.queue_wait.count, 1);
         let j = snap.to_json();
+        assert!(
+            j.get("max_head_skips").unwrap().as_f64().unwrap() >= 0.0,
+            "scheduler aging budget surfaced in /stats"
+        );
+        assert!(j.get("shared_block_refs").is_some(), "prefix-sharing gauge surfaced in /stats");
+        assert!(j.get("engine").unwrap().get("prefix_shared_tokens").is_some());
         let lat = j.get("latency").unwrap();
         assert_eq!(lat.get("ttft").unwrap().get("count").unwrap().as_f64().unwrap(), 1.0);
         let gemm = lat.get("decode_phase").unwrap().get("gemm").unwrap();

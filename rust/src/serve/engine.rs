@@ -23,6 +23,29 @@
 //! 1-lane engine and a 16-lane engine produce identical completions
 //! (pinned by tests) — and independent of `KURTAIL_THREADS`.
 //!
+//! **Prefix sharing.** Admission consults a [`PrefixIndex`] over the
+//! refcounted KV pool: a request whose prompt shares a prefix with a
+//! resident sequence maps its full shared blocks onto the donor's by
+//! refcount bump and copies only the partial tail block (copy-on-write)
+//! — see `serve/kvcache.rs`. Because the per-token per-head 4-bit
+//! scheme makes block content a pure function of the token prefix,
+//! shared blocks are bitwise the blocks the lane would have computed,
+//! so token streams are identical with `KURTAIL_PREFIX_SHARE=0`
+//! (`ServeConfig::prefix_share = Some(false)`). Only the *computed*
+//! prompt positions run the prefill forward; `EngineStats::
+//! prefix_shared_tokens` counts the skipped ones.
+//!
+//! **Chunked prefill.** A long prompt no longer runs its whole `(T, d)`
+//! activation block through one forward: prefill advances at most
+//! `ServeConfig::prefill_chunk` positions (`KURTAIL_PREFILL_CHUNK`,
+//! default 32, `0` = unchunked) per engine step, interleaved with the
+//! live lanes' decode iterations — a long admission stalls nobody, and
+//! the [`DecodeScratch`] peak is bounded by the chunk size instead of
+//! the longest prompt. Non-final chunks skip the logits head entirely;
+//! the final chunk computes it and samples the first token. Row-level
+//! kernels are per-row independent with fixed accumulation order, so
+//! chunking is bitwise invisible to every stream (pinned by tests).
+//!
 //! **Integer GEMM path.** For quantized models the activation
 //! fake-quant before each packed GEMM produces int8 *codes* + per-row
 //! scales (`serve/qact.rs`) instead of fake-quantized f32 values, and
@@ -94,7 +117,7 @@ use crate::util::Rng;
 
 use super::error::ServeError;
 use super::int4::{panel_cache_budget, GemmScratch, Int4Weight};
-use super::kvcache::{KvPool, SeqKv};
+use super::kvcache::{KvPool, PrefixIndex, SeqKv};
 use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch_on, scheme_fits_i8};
 use super::scheduler::{QueuedRequest, Scheduler, DEFAULT_HEAD_SKIPS};
 use super::scratch::{arena_enabled, scratch_decay_default, DecodeScratch};
@@ -112,6 +135,30 @@ pub fn fused_epilogue_enabled() -> bool {
 /// anything else → on. Split out so the rule itself is testable.
 fn fused_flag(var: Option<&str>) -> bool {
     var.map(|v| v.trim() != "0").unwrap_or(true)
+}
+
+/// `KURTAIL_PREFIX_SHARE` escape hatch: prefix sharing over the
+/// refcounted KV pool is on by default; set `KURTAIL_PREFIX_SHARE=0`
+/// to give every lane private blocks (A/B debugging, the bitwise
+/// sharing-transparency property tests). Read per engine build.
+pub fn prefix_share_enabled() -> bool {
+    fused_flag(std::env::var("KURTAIL_PREFIX_SHARE").ok().as_deref())
+}
+
+/// Default prefill chunk: positions one admission may push through the
+/// forward per engine step before yielding to the decode batch.
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
+
+/// `KURTAIL_PREFILL_CHUNK` fallback for [`ServeConfig::prefill_chunk`]:
+/// unset (or unparseable) → [`DEFAULT_PREFILL_CHUNK`], `0` → unchunked
+/// (the whole prompt in one forward, the pre-chunking profile).
+pub fn prefill_chunk_default() -> usize {
+    chunk_var(std::env::var("KURTAIL_PREFILL_CHUNK").ok().as_deref())
+}
+
+/// Parse rule behind [`prefill_chunk_default`], split out for tests.
+fn chunk_var(var: Option<&str>) -> usize {
+    var.and_then(|v| v.trim().parse().ok()).unwrap_or(DEFAULT_PREFILL_CHUNK)
 }
 
 /// RoPE base shared by every preset (`ModelConfig.rope_base`); the
@@ -613,6 +660,17 @@ pub struct ServeConfig {
     /// record — the bench A/B baseline for the `obs_overhead` gate.
     /// Bitwise invisible to token streams either way.
     pub obs: Option<bool>,
+    /// Prefix sharing over the refcounted KV pool: `None` follows
+    /// `KURTAIL_PREFIX_SHARE` (unset → on), `Some(false)` gives every
+    /// lane private blocks. Shared blocks are bitwise the blocks the
+    /// lane would have computed, so streams are identical either way.
+    pub prefix_share: Option<bool>,
+    /// Prefill chunk: at most this many prompt positions run through
+    /// the forward per engine step, interleaved with live decodes.
+    /// `None` follows `KURTAIL_PREFILL_CHUNK` (unset →
+    /// [`DEFAULT_PREFILL_CHUNK`]), `Some(0)` prefills each prompt in
+    /// one forward (the pre-chunking profile). Bitwise invisible.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -632,6 +690,8 @@ impl Default for ServeConfig {
             queue_cap: 0,
             max_head_skips: DEFAULT_HEAD_SKIPS,
             obs: None,
+            prefix_share: None,
+            prefill_chunk: None,
         }
     }
 }
@@ -652,8 +712,17 @@ pub struct Completion {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     pub steps: u64,
+    /// Prompt positions actually run through the prefill forward
+    /// (prefix-shared positions are skipped, not counted here).
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
+    /// Admissions that attached ≥ 1 prefix-shared token.
+    pub prefix_hits: u64,
+    /// Prompt positions served from shared blocks instead of compute.
+    pub prefix_shared_tokens: u64,
+    /// Bounded prefill forwards run (≥ 1 per admission; more when a
+    /// prompt spans multiple `prefill_chunk` windows).
+    pub prefill_chunks: u64,
     pub admitted: u64,
     /// Lanes taken out of flight for any reason — completion, EOS stop,
     /// or cancellation (each one returned its whole block reservation).
@@ -684,6 +753,10 @@ struct Lane {
     seq: SeqKv,
     /// Tokens already written to the KV cache.
     pos: usize,
+    /// Prompt positions already cached (prefix-shared at admission or
+    /// computed by a prior chunk); prefill resumes here. `== prompt_len`
+    /// once the lane has sampled its first token.
+    prefilled: usize,
     reserved_blocks: usize,
     /// Submit time (from `QueuedRequest::enqueued`) — drives the TTFT
     /// histogram and the span's queue-wait component.
@@ -699,6 +772,17 @@ struct Lane {
 pub struct Engine {
     model: ServeModel,
     pool: KvPool,
+    /// Prompt-prefix trie over the pool's resident blocks (weak: holds
+    /// ids, not references — pruned via `freed` on every release).
+    prefix: PrefixIndex,
+    /// Scratch for the freed-id reports every release feeds into
+    /// [`PrefixIndex::invalidate`]; capacity reserved at build so
+    /// steady-state retirement allocates nothing.
+    freed: Vec<u32>,
+    /// Prefix sharing enabled (`ServeConfig::prefix_share`).
+    prefix_share: bool,
+    /// Prefill chunk size; `0` = unchunked (`ServeConfig::prefill_chunk`).
+    prefill_chunk: usize,
     sched: Scheduler,
     lanes: Vec<Option<Lane>>,
     done: Vec<Completion>,
@@ -774,10 +858,16 @@ impl Engine {
         // the decode slot list is mem::taken around each decode batch,
         // so it must carry its full capacity itself (ensure() skips it)
         scratch.slots.reserve(cfg.max_lanes);
+        let prefix = PrefixIndex::new(cfg.block_tokens, model.meta.n_layers);
         Ok(Self {
             lanes: (0..cfg.max_lanes).map(|_| None).collect(),
             model,
             pool,
+            prefix,
+            // one release reports at most one lane's whole block set
+            freed: Vec::with_capacity(per_seq),
+            prefix_share: cfg.prefix_share.unwrap_or_else(prefix_share_enabled),
+            prefill_chunk: cfg.prefill_chunk.unwrap_or_else(prefill_chunk_default),
             sched: Scheduler::bounded(cfg.queue_cap, cfg.max_head_skips),
             done: Vec::new(),
             next_id: 0,
@@ -831,6 +921,33 @@ impl Engine {
     /// observable of the high-water decay (tests, ops dashboards).
     pub fn scratch_rows(&self) -> usize {
         self.scratch.sized_rows()
+    }
+
+    /// Whether admissions share identical-prefix KV blocks
+    /// (`ServeConfig::prefix_share`, falling back to
+    /// `KURTAIL_PREFIX_SHARE`).
+    pub fn prefix_share(&self) -> bool {
+        self.prefix_share
+    }
+
+    /// Prompt positions one admission may prefill per engine step
+    /// (`ServeConfig::prefill_chunk`, falling back to
+    /// `KURTAIL_PREFILL_CHUNK`); `0` = whole-prompt prefill.
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    /// The scheduler's head-of-line bypass budget
+    /// (`ServeConfig::max_head_skips`) — surfaced in `/stats`.
+    pub fn max_head_skips(&self) -> usize {
+        self.sched.max_skips()
+    }
+
+    /// Pool blocks currently held by more than one lane, counted as
+    /// Σ(refs − 1) — each unit is one block of KV memory prefix sharing
+    /// avoided recomputing and re-storing.
+    pub fn shared_block_refs(&self) -> usize {
+        self.pool.shared_block_refs()
     }
 
     /// Bytes held by the i8 weight panel cache (0 = cache off).
@@ -954,7 +1071,7 @@ impl Engine {
         for slot in 0..self.lanes.len() {
             if self.lanes[slot].as_ref().is_some_and(|l| l.id == id) {
                 let mut lane = self.lanes[slot].take().unwrap();
-                self.pool.release(&mut lane.seq);
+                self.release_lane_blocks(&mut lane.seq);
                 self.committed_blocks -= lane.reserved_blocks;
                 self.stats.retired += 1;
                 self.stats.canceled += 1;
@@ -969,6 +1086,20 @@ impl Engine {
         false
     }
 
+    /// Return one lane's blocks to the pool (last reference frees) and
+    /// prune every index entry naming a freed id — before any admission
+    /// could recycle those ids, so the weak [`PrefixIndex`] never maps a
+    /// prefix onto a block that no longer holds it. The freed-id scratch
+    /// is engine-owned, so steady-state retirement allocates nothing.
+    fn release_lane_blocks(&mut self, seq: &mut SeqKv) {
+        let Self { pool, prefix, freed, .. } = self;
+        freed.clear();
+        pool.release_into(seq, freed);
+        if !freed.is_empty() {
+            prefix.invalidate(freed);
+        }
+    }
+
     /// Re-point the pool/lane/queue gauges at current state. Called at
     /// the end of every step and after out-of-step state changes
     /// (cancel, drain) so a scrape between steps never reads a stale
@@ -978,6 +1109,7 @@ impl Engine {
             self.obs.kv_free_blocks.set(self.pool.free_blocks() as u64);
             self.obs.kv_used_blocks.set(self.pool.used_blocks() as u64);
             self.obs.kv_withheld_blocks.set(self.withheld_blocks as u64);
+            self.obs.kv_shared_block_refs.set(self.pool.shared_block_refs() as u64);
             self.obs.live_lanes.set(self.live_lanes() as u64);
             self.obs.queued_requests.set(self.sched.len() as u64);
         }
@@ -1053,10 +1185,9 @@ impl Engine {
     pub fn step_with(&mut self, mut on_token: impl FnMut(usize, i32)) -> Result<bool> {
         self.retire_finished();
 
-        // admit into free lanes (FCFS, reservation-checked); freshly
-        // admitted lanes already produce their first token via prefill,
-        // so they sit out this iteration's decode batch
-        let mut admitted_now: Vec<usize> = Vec::new();
+        // admit into free lanes (FCFS, reservation-checked); a freshly
+        // admitted lane attaches any shared prompt prefix here and
+        // joins the prefill rotation below
         for slot in 0..self.lanes.len() {
             if self.lanes[slot].is_some() {
                 continue;
@@ -1086,7 +1217,7 @@ impl Engine {
             let mut tokens = req.tokens;
             tokens.reserve(req.n_new);
             let per_list = (total + self.pool.block_tokens - 1) / self.pool.block_tokens;
-            let lane = Lane {
+            let mut lane = Lane {
                 id: req.id,
                 prompt_len: tokens.len(),
                 n_new: req.n_new,
@@ -1097,6 +1228,7 @@ impl Engine {
                 stopped: false,
                 seq: SeqKv::with_capacity(self.model.meta.n_layers, per_list),
                 pos: 0,
+                prefilled: 0,
                 reserved_blocks: reserved,
                 enqueued: req.enqueued,
                 admitted_at,
@@ -1104,25 +1236,51 @@ impl Engine {
                 prefill_ns: 0,
                 tokens,
             };
+            // map any shared prompt prefix onto resident blocks; the
+            // fresh allocations (COW tail + later appends) stay within
+            // this lane's conservative reservation, so attach cannot
+            // exhaust the pool
+            if self.prefix_share {
+                let shared =
+                    self.prefix.attach(&mut self.pool, &lane.tokens[..lane.prompt_len], &mut lane.seq)?;
+                if shared > 0 {
+                    lane.prefilled = shared;
+                    self.stats.prefix_hits += 1;
+                    self.stats.prefix_shared_tokens += shared as u64;
+                    if self.obs.enabled {
+                        self.obs.prefix_shared_tokens.add(shared as u64);
+                    }
+                }
+            }
             self.lanes[slot] = Some(lane);
-            self.prefill(slot, &mut on_token)?;
-            admitted_now.push(slot);
             self.stats.admitted += 1;
             if self.obs.enabled {
                 self.obs.requests_admitted.inc();
             }
         }
 
-        // one decode token for every live lane not admitted this step;
-        // the slot list lives in the arena so steady state allocates
-        // nothing here
+        // one bounded prefill chunk per mid-prefill lane, in slot
+        // order; a lane whose final chunk ran samples its first token
+        // inside prefill_step and sits out this iteration's decode
+        let mut finished_prefill: Vec<usize> = Vec::new();
+        for slot in 0..self.lanes.len() {
+            if self.lanes[slot].as_ref().is_some_and(|l| l.produced == 0)
+                && self.prefill_step(slot, &mut on_token)?
+            {
+                finished_prefill.push(slot);
+            }
+        }
+
+        // one decode token for every live lane past prefill (excluding
+        // those that finished it this step); the slot list lives in the
+        // arena so steady state allocates nothing here
         let mut slots = std::mem::take(&mut self.scratch.slots);
         slots.clear();
         slots.extend((0..self.lanes.len()).filter(|&s| {
             self.lanes[s]
                 .as_ref()
-                .map_or(false, |l| l.produced < l.n_new && !l.stopped)
-                && !admitted_now.contains(&s)
+                .map_or(false, |l| l.produced >= 1 && l.produced < l.n_new && !l.stopped)
+                && !finished_prefill.contains(&s)
         }));
         let step_res = if slots.is_empty() {
             Ok(())
@@ -1162,7 +1320,7 @@ impl Engine {
                 continue;
             }
             let mut lane = self.lanes[slot].take().unwrap();
-            self.pool.release(&mut lane.seq);
+            self.release_lane_blocks(&mut lane.seq);
             // the whole reservation returns — blocks an early-stopped
             // lane never claimed included — so queued requests can
             // admit on the very next step
@@ -1208,35 +1366,61 @@ impl Engine {
         self.scratch.ensure(n, m.d_model, m.d_ff, m.vocab, self.model.max_pos);
     }
 
-    /// Batched prompt prefill for one freshly admitted lane: all prompt
-    /// positions run through the forward as one `(T, d)` block, then the
-    /// last position's logits seed the first generated token.
-    fn prefill(&mut self, slot: usize, on_token: &mut impl FnMut(usize, i32)) -> Result<()> {
+    /// One bounded prefill chunk for a mid-prefill lane: the next
+    /// `min(prefill_chunk, remaining)` prompt positions run through the
+    /// forward as one `(chunk, d)` block, resuming at `lane.prefilled`
+    /// (prefix-shared positions were skipped at admission). Non-final
+    /// chunks skip the logits head entirely; the final chunk computes
+    /// it, seeds the first generated token from the last position's
+    /// logits, and registers the now-resident prompt in the prefix
+    /// index. Returns whether prefill completed this call.
+    fn prefill_step(&mut self, slot: usize, on_token: &mut impl FnMut(usize, i32)) -> Result<bool> {
         let t_prefill = self.obs.enabled.then(Instant::now);
-        let p = self.lanes[slot].as_ref().unwrap().prompt_len;
-        self.prep_scratch(p);
+        let (p, start) = {
+            let lane = self.lanes[slot].as_ref().unwrap();
+            (lane.prompt_len, lane.prefilled)
+        };
+        let chunk = if self.prefill_chunk == 0 { p } else { self.prefill_chunk };
+        let n = chunk.min(p - start);
+        let last = start + n == p;
+        self.prep_scratch(n);
         {
             let Self { lanes, scratch, model, .. } = self;
             let lane = lanes[slot].as_ref().unwrap();
             scratch.rows.clear();
-            scratch.rows.extend((0..p).map(|t| (slot, t)));
-            embed_rows_into(&model.embed, &lane.tokens[..p], model.meta.d_model, &mut scratch.x);
+            scratch.rows.extend((start..start + n).map(|t| (slot, t)));
+            embed_rows_into(&model.embed, &lane.tokens[start..start + n], model.meta.d_model, &mut scratch.x);
         }
-        self.forward(p)?;
+        self.forward(n, last)?;
+        self.stats.prefill_tokens += n as u64;
+        self.stats.prefill_chunks += 1;
+        if self.obs.enabled {
+            self.obs.prefill_tokens.add(n as u64);
+            self.obs.prefill_chunks.inc();
+        }
+        if !last {
+            let lane = self.lanes[slot].as_mut().unwrap();
+            lane.prefilled += n;
+            if let Some(t0) = t_prefill {
+                lane.prefill_ns += t0.elapsed().as_nanos() as u64;
+            }
+            return Ok(false);
+        }
         let vocab = self.model.meta.vocab;
         let fused = self.fused;
         let Self { lanes, scratch, stats, obs, .. } = self;
         let DecodeScratch { logits, exps, lrow, .. } = scratch;
         let lane = lanes[slot].as_mut().unwrap();
-        lane.pos = lane.prompt_len;
-        // fused epilogue: logits are (vocab × p) column-major — gather
+        lane.prefilled = p;
+        lane.pos = p;
+        // fused epilogue: logits are (vocab × n) column-major — gather
         // the last position's column (same values, same order, so the
         // sample is bitwise the row-major one)
-        let row: &[f32] = if fused && p > 1 {
-            gather_col(logits, p, vocab, p - 1, lrow);
+        let row: &[f32] = if fused && n > 1 {
+            gather_col(logits, n, vocab, n - 1, lrow);
             &lrow[..vocab]
         } else {
-            &logits[(p - 1) * vocab..p * vocab]
+            &logits[(n - 1) * vocab..n * vocab]
         };
         let next = sample_token_buf(row, lane.temp, &mut lane.rng, exps);
         lane.tokens.push(next);
@@ -1245,18 +1429,23 @@ impl Engine {
             lane.stopped = true;
         }
         on_token(lane.id, next);
-        stats.prefill_tokens += p as u64;
         stats.decode_tokens += 1;
         if let Some(t0) = t_prefill {
-            let ns = t0.elapsed().as_nanos() as u64;
-            lane.prefill_ns = ns;
-            obs.prefill.record_ns(ns);
+            lane.prefill_ns += t0.elapsed().as_nanos() as u64;
+            obs.prefill.record_ns(lane.prefill_ns);
             // TTFT spans submit → this first sampled token
             obs.ttft.record_ns(lane.enqueued.elapsed().as_nanos() as u64);
-            obs.prefill_tokens.add(p as u64);
             obs.decode_tokens.inc();
         }
-        Ok(())
+        // the full prompt is resident — make its blocks discoverable
+        // by later identical-prefix admissions (existing entries win,
+        // so racing identical prefills register deterministically)
+        if self.prefix_share {
+            let Self { lanes, prefix, .. } = self;
+            let lane = lanes[slot].as_ref().unwrap();
+            prefix.register(&lane.tokens[..p], &lane.seq);
+        }
+        Ok(true)
     }
 
     /// One decode token for every slot in `slots`, batched `(N, d)`.
@@ -1275,7 +1464,7 @@ impl Engine {
             let DecodeScratch { toks, x, .. } = scratch;
             embed_rows_into(&model.embed, toks, model.meta.d_model, x);
         }
-        self.forward(n)?;
+        self.forward(n, true)?;
         let vocab = self.model.meta.vocab;
         let fused = self.fused;
         let Self { lanes, scratch, stats, obs, .. } = self;
@@ -1320,11 +1509,14 @@ impl Engine {
     /// descriptors (`(lane_slot, pos)` pairs, `n` of them) with
     /// activations already embedded in `scratch.x` (`n × d`, row i
     /// belongs to `rows[i]`). Appends this token's K/V to each row's
-    /// paged cache and leaves logits (`n × vocab`) in `scratch.logits`.
+    /// paged cache and — when `with_head` — leaves logits (`n × vocab`)
+    /// in `scratch.logits` (non-final prefill chunks sample nothing, so
+    /// they skip the final norm and the logits head, the widest GEMM of
+    /// the forward).
     /// Mirrors `decode_step` op-for-op. With the arena warm, a call
     /// performs **zero heap allocations** (pinned by
     /// `tests/serve_scratch.rs` under the counting allocator).
-    fn forward(&mut self, n: usize) -> Result<()> {
+    fn forward(&mut self, n: usize, with_head: bool) -> Result<()> {
         // phase attribution (see README §Observability): act_quant =
         // online rotations + activation quantize; gemm = packed linears
         // (+ FFN elementwise activation) and the head; attention =
@@ -1530,17 +1722,19 @@ impl Engine {
         // The fused path emits the logits column-major — at decode batch
         // sizes the head's n (vocab) side is the only one wide enough to
         // parallelize over, and argmax/sampling are column-aware.
-        rmsnorm_gamma_rows(x, &model.lnf, z, d, threads, backend);
-        ck.lap(PHASE_EPILOGUE);
-        match (&model.head_packed, arena) {
-            (Some(p), true) if fused && n > 1 => p.matmul_colmajor_on(backend, z, &model.head_t.data, logits, n, threads),
-            (Some(p), true) => p.matmul_overwrite_on(backend, z, &model.head_t.data, logits, n, threads),
-            _ => {
-                logits.fill(0.0);
-                matmul_into_threads(z, &model.head_t.data, logits, n, d, meta.vocab, threads);
+        if with_head {
+            rmsnorm_gamma_rows(x, &model.lnf, z, d, threads, backend);
+            ck.lap(PHASE_EPILOGUE);
+            match (&model.head_packed, arena) {
+                (Some(p), true) if fused && n > 1 => p.matmul_colmajor_on(backend, z, &model.head_t.data, logits, n, threads),
+                (Some(p), true) => p.matmul_overwrite_on(backend, z, &model.head_t.data, logits, n, threads),
+                _ => {
+                    logits.fill(0.0);
+                    matmul_into_threads(z, &model.head_t.data, logits, n, d, meta.vocab, threads);
+                }
             }
+            ck.lap(PHASE_GEMM);
         }
-        ck.lap(PHASE_GEMM);
         ck.flush(&self.obs);
         Ok(())
     }
@@ -2442,5 +2636,152 @@ mod tests {
         assert_eq!(argmax(&logits), 1);
         let mut rng = Rng::new(0);
         assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn chunk_var_parse_rule() {
+        assert_eq!(chunk_var(None), DEFAULT_PREFILL_CHUNK, "unset follows the default");
+        assert_eq!(chunk_var(Some("0")), 0, "0 = unchunked prefill");
+        assert_eq!(chunk_var(Some(" 8 ")), 8);
+        assert_eq!(chunk_var(Some("nope")), DEFAULT_PREFILL_CHUNK, "garbage falls back");
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_invisible_and_bounds_scratch() {
+        // fake_llama_meta caps prompt + generation at seq_len = 8
+        let model = quant_model();
+        let mk = |chunk: usize| {
+            let cfg = ServeConfig {
+                max_lanes: 2,
+                block_tokens: 4,
+                threads: Some(1),
+                scratch_decay: Some(0), // keep the peak visible
+                prefill_chunk: Some(chunk),
+                ..ServeConfig::default()
+            };
+            let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+            eng.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 7).unwrap();
+            let done = eng.run().unwrap();
+            (done, eng.stats, eng.scratch_rows(), eng.pool().free_blocks() == eng.pool().max_blocks)
+        };
+        let (chunked, cs, c_rows, c_whole) = mk(2);
+        let (whole, ws, w_rows, w_whole) = mk(0);
+        assert_eq!(chunked[0].tokens, whole[0].tokens, "chunking must be bitwise invisible");
+        assert_eq!(cs.prefill_chunks, 3, "5 prompt positions in chunks of 2");
+        assert_eq!(ws.prefill_chunks, 1, "chunk 0 = one forward per prompt");
+        assert_eq!(cs.prefill_tokens, 5);
+        assert_eq!(ws.prefill_tokens, 5);
+        assert_eq!(c_rows, 2, "scratch peak bounded by the chunk, not the prompt");
+        assert_eq!(w_rows, 5, "unchunked prefill grows the arena to the prompt length");
+        assert!(c_whole && w_whole, "pool whole after both profiles");
+    }
+
+    #[test]
+    fn chunked_long_admission_leaves_live_lane_streams_unchanged() {
+        // satellite: a long admission prefilling one bounded chunk per
+        // step must not perturb a lane that is already decoding
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 4,
+            threads: Some(1),
+            prefill_chunk: Some(1),
+            ..ServeConfig::default()
+        };
+        // reference: the short request alone
+        let mut solo = Engine::new(model.clone(), &cfg).unwrap();
+        solo.submit_tokens(vec![7], 5, 0.0, 7).unwrap();
+        let want = solo.run().unwrap();
+
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        let a = eng.submit_tokens(vec![7], 5, 0.0, 7).unwrap();
+        assert!(eng.step().unwrap()); // lane A live: prefilled + first token
+        // the long prompt now prefills one position per step, riding
+        // along with A's decode iterations instead of stalling them
+        eng.submit_tokens(vec![2, 4, 6, 1, 3], 3, 0.0, 7).unwrap();
+        let mut done = eng.run().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, a);
+        assert_eq!(done[0].tokens, want[0].tokens, "live lane bitwise unaffected");
+        assert_eq!(eng.stats.prefill_chunks, 1 + 5, "long prompt ran in 5 single-token chunks");
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn prefix_sharing_is_bitwise_invisible_and_counted() {
+        // a second identical prompt admitted after the donor's prefill
+        // completes maps its full prompt blocks onto the donor's
+        // (refcount bump, no compute) and must emit the same stream as a
+        // share-off run of the same submission schedule
+        let model = quant_model();
+        let mk = |share: bool| {
+            let cfg = ServeConfig {
+                max_lanes: 2,
+                block_tokens: 2,
+                threads: Some(1),
+                prefix_share: Some(share),
+                ..ServeConfig::default()
+            };
+            let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+            eng.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 7).unwrap();
+            // the donor must finish prefill (and register its chunks)
+            // before the sharer is admitted — sharing is discovered at
+            // admission time
+            assert!(eng.step().unwrap());
+            eng.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 9).unwrap();
+            let mut done = eng.run().unwrap();
+            done.sort_by_key(|c| c.id);
+            (done, eng.stats, eng.pool().free_blocks() == eng.pool().max_blocks, eng.shared_block_refs())
+        };
+        let (shared, ss, s_whole, s_refs) = mk(true);
+        let (private, ps, p_whole, _) = mk(false);
+        assert_eq!(shared.len(), 2);
+        for (a, b) in shared.iter().zip(&private) {
+            assert_eq!(a.tokens, b.tokens, "sharing must be bitwise invisible");
+        }
+        // prompt 5, block 2: chunks [1,2] and [3,4] shared (4 positions);
+        // the cap at prompt_len − 1 leaves position 4 computed
+        assert_eq!(ss.prefix_hits, 1);
+        assert_eq!(ss.prefix_shared_tokens, 4);
+        assert_eq!(ss.prefill_tokens, 5 + 1, "sharer computes only the final prompt position");
+        assert_eq!(ps.prefix_hits, 0);
+        assert_eq!(ps.prefill_tokens, 10, "share-off prefills both prompts fully");
+        assert!(s_whole && p_whole, "pool whole after the last reference retired");
+        assert_eq!(s_refs, 0, "no shared refs outlive the lanes");
+    }
+
+    #[test]
+    fn prefix_sharing_survives_donor_retirement_and_cancel() {
+        // the sharer keeps decoding on blocks whose donor is gone: the
+        // refcount (not the donor lane) owns their lifetime, and the
+        // index invalidation on release must not free shared blocks
+        let model = quant_model();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            threads: Some(1),
+            prefix_share: Some(true),
+            ..ServeConfig::default()
+        };
+        let mut reference = Engine::new(model.clone(), &cfg).unwrap();
+        reference.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 7).unwrap();
+        assert!(reference.step().unwrap());
+        reference.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 9).unwrap();
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        let donor = eng.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 7).unwrap();
+        assert!(eng.step().unwrap());
+        eng.submit_tokens(vec![1, 2, 3, 4, 5], 3, 0.0, 9).unwrap();
+        assert!(eng.step().unwrap()); // sharer admitted, attached
+        assert!(eng.shared_block_refs() > 0, "live sharing in flight");
+        assert!(eng.cancel(donor), "donor cancels mid-share");
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, want[1].tokens, "sharer stream survives the donor bitwise");
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks, "no leak, no double free");
+        assert_eq!(eng.shared_block_refs(), 0);
     }
 }

@@ -24,6 +24,31 @@
 //! * **Fp mode.** [`KvQuant::Fp`] stores raw f32 rows in the same block
 //!   structure — the apples-to-apples baseline for `BENCH_serve.json`'s
 //!   bytes/token comparison and the exactness mode of the serve engine.
+//! * **Reference counting + prefix sharing.** Because quantization is
+//!   per-token per-head, a block's bytes are a pure function of the
+//!   token prefix that produced it (K/V at position *t* depends only on
+//!   `tokens[0..=t]` under causal attention) — so two lanes whose
+//!   prompts share a prefix can share the *same* physical blocks.
+//!   Every block carries a refcount: [`KvPool::alloc`] claims at one
+//!   reference, [`KvPool::retain`] bumps it for each additional holder,
+//!   and [`KvPool::release_into`] returns a block to the free list only
+//!   when the **last** reference retires (reporting the actually-freed
+//!   ids so the caller can prune its [`PrefixIndex`]). The PR-6
+//!   leak-free invariant — pool whole after any admit/cancel/EOS/drain
+//!   interleaving — extends unchanged: when every holder has released,
+//!   every refcount is zero and `free_blocks == max_blocks`.
+//! * **Prefix index + COW tails.** [`PrefixIndex`] is a trie keyed on
+//!   exact `block_tokens`-sized token chunks; each node records the
+//!   per-layer K/V block ids a donor lane wrote for that chunk, plus
+//!   any *partial* tail blocks (fewer than `block_tokens` prompt rows).
+//!   [`PrefixIndex::attach`] maps a new lane's longest indexed prefix
+//!   onto the donor blocks — full chunks by refcount bump, the partial
+//!   tail by **copy-on-write**: the donor's tail block bytes are copied
+//!   into fresh private blocks, after which the lane appends (and
+//!   diverges) without ever touching shared bytes. The index holds *no*
+//!   references of its own (weak): [`PrefixIndex::invalidate`] prunes
+//!   every entry naming a freed id the moment the pool frees it, so a
+//!   reused block id can never alias a stale entry.
 
 use crate::config::KvQuant;
 
@@ -98,6 +123,11 @@ pub struct KvPool {
     /// raw rows, `max_blocks × block_tokens·h·dh` (fp mode).
     fdata: Vec<f32>,
     free: Vec<u32>,
+    /// per-block reference count; 0 ⇔ on the free list.
+    refs: Vec<u32>,
+    /// Σ over blocks of `refs − 1` — each unit is one block some lane
+    /// holds without owning physical storage (the sharing win).
+    shared_extra: usize,
 }
 
 impl KvPool {
@@ -113,7 +143,8 @@ impl KvPool {
             KvQuant::Fp => (Vec::new(), Vec::new(), vec![0.0f32; max_blocks * block_tokens * h * dh]),
         };
         let free = (0..max_blocks as u32).rev().collect();
-        Self { mode, h, dh, block_tokens, max_blocks, bpr, data, scales, fdata, free }
+        let refs = vec![0u32; max_blocks];
+        Self { mode, h, dh, block_tokens, max_blocks, bpr, data, scales, fdata, free, refs, shared_extra: 0 }
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -125,6 +156,15 @@ impl KvPool {
     /// safe on the decode hot path).
     pub fn used_blocks(&self) -> usize {
         self.max_blocks - self.free.len()
+    }
+
+    /// Block references satisfied by sharing instead of fresh storage:
+    /// Σ over blocks of `refs − 1`. Each unit is one physical block the
+    /// pool did *not* have to allocate because a lane mapped onto a
+    /// donor's prefix. O(1), safe on the decode hot path (the
+    /// `kurtail_kv_shared_block_refs` gauge reads it every step).
+    pub fn shared_block_refs(&self) -> usize {
+        self.shared_extra
     }
 
     /// Blocks a sequence of `total_tokens` will claim across `n_layers`
@@ -144,7 +184,41 @@ impl KvPool {
 
     fn alloc(&mut self) -> Result<u32, ServeError> {
         let free = self.free.len();
-        self.free.pop().ok_or(ServeError::PoolExhausted { needed: 1, free })
+        let id = self.free.pop().ok_or(ServeError::PoolExhausted { needed: 1, free })?;
+        debug_assert_eq!(self.refs[id as usize], 0, "free block with live refs");
+        self.refs[id as usize] = 1;
+        Ok(id)
+    }
+
+    /// Bump the refcount of a live block — the sharing primitive. The
+    /// caller must also push `blk` into its sequence's block list so the
+    /// matching [`release_into`](Self::release_into) drops the
+    /// reference.
+    pub fn retain(&mut self, blk: u32) {
+        debug_assert!(self.refs[blk as usize] > 0, "retain of a free block");
+        self.refs[blk as usize] += 1;
+        self.shared_extra += 1;
+    }
+
+    /// Copy one block's stored bytes (codes + scales, or raw f32 rows)
+    /// from `src` into `dst` — the copy-on-write step for shared
+    /// partial tail blocks. Rows past the donor's filled count carry
+    /// stale donor bytes; the receiving lane's append cursor guarantees
+    /// they are overwritten before they can be read.
+    fn copy_block(&mut self, src: u32, dst: u32) {
+        let (s, d) = (src as usize, dst as usize);
+        match self.mode {
+            KvQuant::Asym4 => {
+                let cs = self.block_tokens * self.h * self.bpr;
+                self.data.copy_within(s * cs..(s + 1) * cs, d * cs);
+                let ss = self.block_tokens * self.h * 2;
+                self.scales.copy_within(s * ss..(s + 1) * ss, d * ss);
+            }
+            KvQuant::Fp => {
+                let fs = self.block_tokens * self.h * self.dh;
+                self.fdata.copy_within(s * fs..(s + 1) * fs, d * fs);
+            }
+        }
     }
 
     /// Append-quantize one token's K and V rows (`h·dh` f32s each) for
@@ -284,14 +358,237 @@ impl KvPool {
         }
     }
 
-    /// Return every block a sequence holds to the free list.
-    pub fn release(&mut self, seq: &mut SeqKv) {
+    /// Drop one reference per block the sequence holds; blocks whose
+    /// **last** reference this was return to the free list and their ids
+    /// are appended to `freed` (the caller feeds them to
+    /// [`PrefixIndex::invalidate`] so no index entry outlives the
+    /// storage it names). Shared blocks with surviving holders stay
+    /// allocated and are *not* reported.
+    pub fn release_into(&mut self, seq: &mut SeqKv, freed: &mut Vec<u32>) {
         for list in seq.k_blocks.iter_mut().chain(seq.v_blocks.iter_mut()) {
-            self.free.extend(list.drain(..));
+            for id in list.drain(..) {
+                let r = &mut self.refs[id as usize];
+                debug_assert!(*r > 0, "release of a free block");
+                *r -= 1;
+                if *r == 0 {
+                    self.free.push(id);
+                    freed.push(id);
+                } else {
+                    self.shared_extra -= 1;
+                }
+            }
         }
         for a in &mut seq.appended {
             *a = 0;
         }
+    }
+
+    /// [`release_into`](Self::release_into) without freed-id reporting —
+    /// for callers with no prefix index to prune.
+    pub fn release(&mut self, seq: &mut SeqKv) {
+        let mut freed = Vec::new();
+        self.release_into(seq, &mut freed);
+    }
+}
+
+/// Cap on partial-tail entries registered per trie node — bounds index
+/// growth under adversarial prompt churn; registration past the cap is
+/// skipped (sharing is an optimization, never a requirement).
+const MAX_PARTIALS_PER_NODE: usize = 8;
+
+/// One registered partial tail: `toks.len() < block_tokens` prompt rows
+/// written into one K/V block pair per layer.
+#[derive(Debug)]
+struct Partial {
+    toks: Box<[i32]>,
+    k: Box<[u32]>,
+    v: Box<[u32]>,
+}
+
+/// Trie node for one full `block_tokens`-sized chunk: the per-layer K/V
+/// block ids a donor wrote for it, deeper chunks, and partial tails
+/// starting right after it.
+#[derive(Debug, Default)]
+struct Node {
+    /// per-layer block ids (empty at the root pseudo-node).
+    k: Box<[u32]>,
+    v: Box<[u32]>,
+    children: Vec<(Box<[i32]>, Node)>,
+    partials: Vec<Partial>,
+}
+
+impl Node {
+    fn holds_any(&self, freed: &[u32]) -> bool {
+        self.k.iter().chain(self.v.iter()).any(|b| freed.contains(b))
+    }
+}
+
+/// Weak radix index from token prefixes to the KV blocks a live lane
+/// wrote for them. Keys are exact `block_tokens`-sized chunks of token
+/// ids; a node at depth `j` names the `j`-th K/V block pair per layer.
+///
+/// The index never holds references itself — lanes do. Three operations
+/// keep it sound:
+///
+/// * [`attach`](Self::attach) — at admission, map the longest indexed
+///   prefix of a prompt onto donor blocks (full chunks via
+///   [`KvPool::retain`], a matching tail via copy-on-write), capped at
+///   `prompt_len − 1` so the lane always computes at least the final
+///   prompt position (it needs those logits to sample).
+/// * [`register`](Self::register) — after a lane's prefill completes,
+///   record its prompt chunks. Existing entries win ties (two lanes
+///   racing the same prompt produce bitwise-identical blocks, so either
+///   id set is valid).
+/// * [`invalidate`](Self::invalidate) — prune every entry (and its
+///   subtree) naming a block id the pool just freed, called on every
+///   release *before* any later alloc can recycle the id.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_tokens: usize,
+    n_layers: usize,
+    root: Node,
+}
+
+impl PrefixIndex {
+    pub fn new(block_tokens: usize, n_layers: usize) -> Self {
+        assert!(block_tokens > 0 && n_layers > 0);
+        Self { block_tokens, n_layers, root: Node::default() }
+    }
+
+    /// Attach the longest indexed prefix of `tokens` to a fresh
+    /// sequence: shared full blocks by refcount bump, then at most one
+    /// copy-on-write tail block pair per layer. Returns the number of
+    /// prompt positions now covered by the cache (`≤ tokens.len() − 1`);
+    /// the caller resumes prefill at that position. Fresh COW blocks
+    /// come out of the lane's conservative admission reservation, so
+    /// allocation here cannot fail for an admitted lane.
+    pub fn attach(
+        &self,
+        pool: &mut KvPool,
+        tokens: &[i32],
+        seq: &mut SeqKv,
+    ) -> Result<usize, ServeError> {
+        debug_assert!(seq.is_empty(), "attach requires a fresh sequence");
+        if tokens.len() <= 1 {
+            return Ok(0);
+        }
+        let b = self.block_tokens;
+        let limit = tokens.len() - 1; // last prompt position is always computed
+        let mut shared = 0usize;
+        let mut cur = &self.root;
+        while shared + b <= limit && tokens.len() - shared >= b {
+            let key = &tokens[shared..shared + b];
+            let Some((_, child)) = cur.children.iter().find(|(k, _)| &k[..] == key) else { break };
+            for l in 0..self.n_layers {
+                pool.retain(child.k[l]);
+                pool.retain(child.v[l]);
+                seq.k_blocks[l].push(child.k[l]);
+                seq.v_blocks[l].push(child.v[l]);
+            }
+            shared += b;
+            cur = child;
+        }
+        // COW tail: the longest common prefix between the remaining
+        // tokens and any tail candidate at this depth — a registered
+        // partial, or a full child chunk that no longer fits under
+        // `limit`. Rows past the match are stale donor bytes; the
+        // receiving lane's append cursor overwrites them before any
+        // read (attention never looks past the cursor).
+        let rem = &tokens[shared..];
+        let cap = limit - shared;
+        let common = |cand: &[i32]| cand.iter().zip(rem).take_while(|(a, b)| a == b).count().min(cap);
+        let mut best: Option<(&[u32], &[u32], usize)> = None;
+        for p in &cur.partials {
+            let r = common(&p.toks);
+            if r >= 1 && best.map_or(true, |(_, _, br)| r > br) {
+                best = Some((&p.k, &p.v, r));
+            }
+        }
+        for (key, child) in &cur.children {
+            let r = common(key);
+            if r >= 1 && best.map_or(true, |(_, _, br)| r > br) {
+                best = Some((&child.k, &child.v, r));
+            }
+        }
+        if let Some((ks, vs, r)) = best {
+            for l in 0..self.n_layers {
+                let kb = pool.alloc()?;
+                pool.copy_block(ks[l], kb);
+                seq.k_blocks[l].push(kb);
+                let vb = pool.alloc()?;
+                pool.copy_block(vs[l], vb);
+                seq.v_blocks[l].push(vb);
+            }
+            shared += r;
+        }
+        for a in &mut seq.appended {
+            *a = shared;
+        }
+        Ok(shared)
+    }
+
+    /// Record a lane's freshly prefilled prompt: one node per full
+    /// chunk, plus the partial tail (if any) under the deepest node.
+    /// Entries already present are kept — a racing identical prefill
+    /// produced bitwise-identical block contents, so either donor is
+    /// valid — and partial registration is skipped past
+    /// [`MAX_PARTIALS_PER_NODE`].
+    pub fn register(&mut self, tokens: &[i32], seq: &SeqKv) {
+        let b = self.block_tokens;
+        let full = tokens.len() / b;
+        let mut cur = &mut self.root;
+        for j in 0..full {
+            let key = &tokens[j * b..(j + 1) * b];
+            let idx = match cur.children.iter().position(|(k, _)| &k[..] == key) {
+                Some(i) => i,
+                None => {
+                    let node = Node {
+                        k: (0..self.n_layers).map(|l| seq.k_blocks[l][j]).collect(),
+                        v: (0..self.n_layers).map(|l| seq.v_blocks[l][j]).collect(),
+                        ..Node::default()
+                    };
+                    cur.children.push((key.into(), node));
+                    cur.children.len() - 1
+                }
+            };
+            cur = &mut cur.children[idx].1;
+        }
+        let tail = &tokens[full * b..];
+        if !tail.is_empty()
+            && cur.partials.len() < MAX_PARTIALS_PER_NODE
+            && !cur.partials.iter().any(|p| &p.toks[..] == tail)
+        {
+            cur.partials.push(Partial {
+                toks: tail.into(),
+                k: (0..self.n_layers).map(|l| seq.k_blocks[l][full]).collect(),
+                v: (0..self.n_layers).map(|l| seq.v_blocks[l][full]).collect(),
+            });
+        }
+    }
+
+    /// Prune every entry naming a freed block id (and, for full-chunk
+    /// nodes, the whole subtree beneath it — unreachable once its parent
+    /// is gone). Must run before the pool can recycle the ids.
+    pub fn invalidate(&mut self, freed: &[u32]) {
+        fn prune(node: &mut Node, freed: &[u32]) {
+            node.partials.retain(|p| !p.k.iter().chain(p.v.iter()).any(|b| freed.contains(b)));
+            node.children.retain_mut(|(_, c)| {
+                if c.holds_any(freed) {
+                    return false;
+                }
+                prune(c, freed);
+                true
+            });
+        }
+        prune(&mut self.root, freed);
+    }
+
+    /// Registered full-chunk nodes (tests / debugging).
+    pub fn nodes(&self) -> usize {
+        fn count(n: &Node) -> usize {
+            n.children.iter().map(|(_, c)| 1 + count(c)).sum()
+        }
+        count(&self.root)
     }
 }
 
@@ -408,6 +705,140 @@ mod tests {
         assert_eq!(pool.free_blocks(), 6);
         assert_eq!(seq.blocks_held(), 0);
         assert!(seq.is_empty());
+    }
+
+    #[test]
+    fn refcounted_blocks_free_only_at_last_release() {
+        let (h, dh, bt) = (1, 4, 2);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 8);
+        let row = vec![0.25f32; h * dh];
+        let mut donor = SeqKv::new(1);
+        for t in 0..4 {
+            pool.append(&mut donor, 0, t, &row, &row).unwrap();
+        }
+        assert_eq!(pool.free_blocks(), 4);
+        assert_eq!(pool.shared_block_refs(), 0);
+        // a sharer maps onto the donor's two full K/V block pairs
+        let mut sharer = SeqKv::new(1);
+        for j in 0..2 {
+            let (kb, vb) = (donor.k_blocks[0][j], donor.v_blocks[0][j]);
+            pool.retain(kb);
+            pool.retain(vb);
+            sharer.k_blocks[0].push(kb);
+            sharer.v_blocks[0].push(vb);
+        }
+        sharer.appended[0] = 4;
+        assert_eq!(pool.free_blocks(), 4, "retain claims no storage");
+        assert_eq!(pool.shared_block_refs(), 4);
+        // donor retires first: shared blocks must survive for the sharer
+        let mut freed = Vec::new();
+        pool.release_into(&mut donor, &mut freed);
+        assert!(freed.is_empty(), "sharer still holds every block");
+        assert_eq!(pool.free_blocks(), 4);
+        assert_eq!(pool.shared_block_refs(), 0);
+        for t in 0..4 {
+            // the sharer still reads the donor-written rows
+            assert_eq!(pool.read_k_row(&sharer, 0, t, 0).len(), dh);
+        }
+        // last reference retires → pool whole, freed ids reported
+        pool.release_into(&mut sharer, &mut freed);
+        assert_eq!(freed.len(), 4);
+        assert_eq!(pool.free_blocks(), 8);
+        assert_eq!(pool.shared_block_refs(), 0);
+    }
+
+    #[test]
+    fn prefix_attach_shares_full_blocks_and_cows_the_tail() {
+        let mut rng = Rng::new(7);
+        let (h, dh, bt) = (2, 5, 3);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 32);
+        let mut idx = PrefixIndex::new(bt, 1);
+        // donor prompt: 8 tokens → 2 full chunks + a 2-row partial
+        let donor_toks: Vec<i32> = (0..8).map(|t| 10 + t as i32).collect();
+        let rows = rand_rows(8, h * dh, &mut rng);
+        let mut donor = SeqKv::new(1);
+        fill_seq(&mut pool, &mut donor, 0, &rows);
+        idx.register(&donor_toks, &donor);
+        assert_eq!(idx.nodes(), 2);
+
+        // sharer: same 8 tokens + 2 more → shares 2 full chunks by
+        // refcount and copies the partial tail block pair
+        let sharer_toks: Vec<i32> = donor_toks.iter().copied().chain([90, 91]).collect();
+        let mut sharer = SeqKv::with_capacity(1, 4);
+        let shared = idx.attach(&mut pool, &sharer_toks, &mut sharer).unwrap();
+        assert_eq!(shared, 8, "2 full chunks (6) + 2-row COW tail");
+        assert_eq!(pool.shared_block_refs(), 4, "K+V × 2 full chunks");
+        // tail blocks are private copies, not the donor's
+        assert_ne!(sharer.k_blocks[0][2], donor.k_blocks[0][2]);
+        // shared + copied rows read back bitwise identical to the donor
+        for t in 0..8 {
+            for head in 0..h {
+                assert_eq!(
+                    pool.read_k_row(&sharer, 0, t, head),
+                    pool.read_k_row(&donor, 0, t, head),
+                    "t={t} head={head}"
+                );
+                assert_eq!(
+                    pool.read_v_row(&sharer, 0, t, head),
+                    pool.read_v_row(&donor, 0, t, head),
+                );
+            }
+        }
+        // the sharer appends its divergent suffix into the private tail
+        let extra = rand_rows(2, h * dh, &mut rng);
+        for (i, (k, v)) in extra.iter().enumerate() {
+            pool.append(&mut sharer, 0, 8 + i, k, v).unwrap();
+        }
+        // ...without disturbing the donor's partial rows
+        for t in 6..8 {
+            assert_eq!(pool.read_k_row(&donor, 0, t, 0), pool.read_k_row(&sharer, 0, t, 0));
+        }
+
+        // identical prompt: attach caps at prompt_len − 1 so the last
+        // position is always computed, never fully served from cache
+        let mut twin = SeqKv::with_capacity(1, 4);
+        let shared = idx.attach(&mut pool, &donor_toks, &mut twin).unwrap();
+        assert_eq!(shared, 7, "8-token prompt shares at most 7 positions");
+        pool.release(&mut twin);
+
+        // release donor then sharer: pool whole, and freed ids prune
+        // the index so nothing stale can ever be attached
+        let mut freed = Vec::new();
+        pool.release_into(&mut donor, &mut freed);
+        pool.release_into(&mut sharer, &mut freed);
+        idx.invalidate(&freed);
+        assert_eq!(pool.free_blocks(), 32);
+        assert_eq!(pool.shared_block_refs(), 0);
+        assert_eq!(idx.nodes(), 0, "freed blocks must leave the index");
+        let mut fresh = SeqKv::new(1);
+        assert_eq!(idx.attach(&mut pool, &sharer_toks, &mut fresh).unwrap(), 0);
+    }
+
+    #[test]
+    fn prefix_attach_cows_divergent_partial_prefix() {
+        // sharer diverges *inside* the donor's partial tail: the common
+        // prefix of the tail is still shared via COW
+        let mut rng = Rng::new(9);
+        let (h, dh, bt) = (1, 4, 4);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 16);
+        let mut idx = PrefixIndex::new(bt, 1);
+        let donor_toks = vec![1, 2, 3, 4, 5, 6, 7]; // 1 full chunk + 3-row partial
+        let rows = rand_rows(7, h * dh, &mut rng);
+        let mut donor = SeqKv::new(1);
+        fill_seq(&mut pool, &mut donor, 0, &rows);
+        idx.register(&donor_toks, &donor);
+
+        // matches the full chunk and 2 of the 3 partial rows
+        let sharer_toks = vec![1, 2, 3, 4, 5, 6, 99, 100];
+        let mut sharer = SeqKv::new(1);
+        let shared = idx.attach(&mut pool, &sharer_toks, &mut sharer).unwrap();
+        assert_eq!(shared, 6, "full chunk (4) + 2-row partial prefix");
+        for t in 0..6 {
+            assert_eq!(pool.read_k_row(&sharer, 0, t, 0), pool.read_k_row(&donor, 0, t, 0));
+        }
+        pool.release(&mut donor);
+        pool.release(&mut sharer);
+        assert_eq!(pool.free_blocks(), 16);
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //!
 //! * [`Int4Weight`] — nibble-packed weights on the RTN grid with
 //!   per-(channel, group) scales and a fused dequant-GEMV/GEMM.
-//! * [`KvPool`] / [`SeqKv`] — a block-pool allocator storing K/V as
-//!   4-bit codes with per-token per-head asymmetric scales,
-//!   append-quantize on write and fused dequant-attention on read.
+//! * [`KvPool`] / [`SeqKv`] — a reference-counted block-pool allocator
+//!   storing K/V as 4-bit codes with per-token per-head asymmetric
+//!   scales, append-quantize on write and fused dequant-attention on
+//!   read; [`PrefixIndex`] maps identical prompt prefixes onto the same
+//!   blocks (full blocks by refcount bump, partial tails copy-on-write).
 //! * [`Engine`] + [`Scheduler`] — admit N concurrent sequences against
 //!   the shared pool, batch prompt prefill, step every live lane per
 //!   decode iteration, and retire/admit without draining the batch.
@@ -59,12 +61,13 @@ pub mod scratch;
 
 pub use daemon::{Daemon, DaemonConfig, Host, HostConfig};
 pub use engine::{
-    argmax, fused_epilogue_enabled, sample_token, sample_token_buf, Completion, Engine, EngineStats,
-    ServeConfig, ServeModel, ServeQuantSpec,
+    argmax, fused_epilogue_enabled, prefill_chunk_default, prefix_share_enabled, sample_token,
+    sample_token_buf, Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec,
+    DEFAULT_PREFILL_CHUNK,
 };
 pub use error::ServeError;
 pub use int4::{panel_cache_budget, GemmScratch, Int4Weight};
-pub use kvcache::{KvPool, SeqKv};
+pub use kvcache::{KvPool, PrefixIndex, SeqKv};
 pub use qact::{int_gemm_enabled, QuantActs};
 pub use scheduler::{QueuedRequest, Scheduler};
 pub use scratch::{arena_enabled, scratch_decay_default, DecodeScratch, DEFAULT_DECAY_STEPS};

@@ -120,6 +120,13 @@ impl Scheduler {
         self.cap
     }
 
+    /// The configured head-of-line bypass budget
+    /// (`ServeConfig::max_head_skips`) — surfaced in `/stats` so
+    /// operators can correlate queue-wait tails with the aging policy.
+    pub fn max_skips(&self) -> usize {
+        self.max_skips
+    }
+
     /// Pop the next admissible request: the head if `fits` accepts it;
     /// otherwise — while the head's bypass budget lasts — the first
     /// later request that fits (each such bypass spends one unit of the

@@ -765,6 +765,216 @@ fn prop_cancel_interleavings_leak_free_and_replayable() {
 }
 
 #[test]
+fn prop_shared_prefix_cancel_interleavings_leak_free_and_bitwise() {
+    // the PR-6 leak-free invariant extended to refcounted shared
+    // blocks: N lanes admitted over one shared prompt prefix (full
+    // blocks by refcount bump, tails copy-on-write), then cancel / EOS
+    // / drain in random order. Afterwards (a) the pool is whole and no
+    // shared reference survives, (b) every surviving stream is bitwise
+    // the stream of a sharing-OFF undisturbed run of the same schedule,
+    // (c) replaying the workload on the same engine reproduces it
+    let meta = serve_test_meta();
+    check(6, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let mk_cfg = |share: bool| ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            prefix_share: Some(share),
+            ..ServeConfig::default()
+        };
+        // one shared 3-token prefix; distinct suffixes so COW tails (an
+        // odd prefix against block_tokens 2) are exercised too
+        let prefix: Vec<i32> = (0..3).map(|_| rng.below(meta.vocab) as i32).collect();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..4)
+            .map(|i| {
+                let mut toks = prefix.clone();
+                toks.push(i as i32);
+                (toks, 1 + rng.below(4))
+            })
+            .collect();
+        // the donor must finish prefill before the sharers are admitted
+        // (sharing is discovered at admission), so the schedule is:
+        // submit req 0, one step, submit the rest, run. Identical for
+        // every engine below, so streams are comparable bitwise.
+        let submit_all = |eng: &mut Engine, stops: &dyn Fn(usize) -> Option<i32>| -> Vec<usize> {
+            let mut ids = Vec::new();
+            for (i, (toks, n)) in reqs.iter().enumerate() {
+                ids.push(eng.submit_tokens_stop(toks.clone(), *n, 0.0, 3, stops(i)).unwrap());
+                if i == 0 {
+                    eng.step().unwrap();
+                }
+            }
+            ids
+        };
+        // probe to learn the streams, then give one request a stop
+        // token that provably fires so EOS retires join the interleaving
+        let mut probe = Engine::new(model.clone(), &mk_cfg(true)).unwrap();
+        submit_all(&mut probe, &|_| None);
+        let mut probed = probe.run().unwrap();
+        probed.sort_by_key(|c| c.id);
+        let eos_req = rng.below(reqs.len());
+        let stop_of = move |i: usize| -> Option<i32> {
+            (i == eos_req).then(|| probed[i].tokens[probed[i].prompt_len])
+        };
+
+        // undisturbed, sharing OFF: the ground truth the shared runs
+        // must reproduce bitwise
+        let mut reference = Engine::new(model.clone(), &mk_cfg(false)).unwrap();
+        submit_all(&mut reference, &stop_of);
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        let mut eng = Engine::new(model.clone(), &mk_cfg(true)).unwrap();
+        let ids = submit_all(&mut eng, &stop_of);
+        let cancel_at: Vec<Option<usize>> =
+            ids.iter().map(|_| (rng.below(3) == 0).then(|| rng.below(6))).collect();
+        let drain_at = (rng.below(4) == 0).then(|| rng.below(4));
+        let mut gone: HashSet<usize> = HashSet::new();
+        let mut step_n = 0usize;
+        loop {
+            for (i, id) in ids.iter().enumerate() {
+                if cancel_at[i] == Some(step_n) && eng.cancel(*id) {
+                    gone.insert(*id);
+                }
+            }
+            if drain_at == Some(step_n) {
+                for id in eng.begin_drain() {
+                    gone.insert(id);
+                }
+            }
+            if !eng.step().unwrap() {
+                break;
+            }
+            step_n += 1;
+        }
+        let done = eng.take_completions();
+        prop_assert(
+            eng.pool().free_blocks() == eng.pool().max_blocks
+                && eng.committed_blocks() == 0
+                && eng.shared_block_refs() == 0,
+            &format!(
+                "pool whole, no shared refs after interleaving \
+                 (cancels={cancel_at:?} drain={drain_at:?})"
+            ),
+        )?;
+        prop_assert(done.len() == ids.len() - gone.len(), "survivors = submissions - cancels - shed")?;
+        for c in &done {
+            prop_assert(!gone.contains(&c.id), "a canceled/shed request must not complete")?;
+            prop_assert(
+                c.tokens == want[c.id].tokens,
+                &format!("shared stream {} bitwise equal to the sharing-off run", c.id),
+            )?;
+        }
+        if drain_at.is_none() {
+            // replay the same schedule on the SAME engine: refcounted
+            // release + index invalidation left no stale state behind
+            let ids2 = submit_all(&mut eng, &stop_of);
+            let mut done2 = eng.run().unwrap();
+            done2.sort_by_key(|c| c.id);
+            prop_assert(done2.len() == reqs.len(), "round 2 completes everything")?;
+            for (k, c) in done2.iter().enumerate() {
+                prop_assert(c.id == ids2[k], "round-2 ids in submission order")?;
+                prop_assert(c.tokens == want[k].tokens, &format!("round-2 stream {k} replays bitwise"))?;
+            }
+            prop_assert(
+                eng.pool().free_blocks() == eng.pool().max_blocks && eng.shared_block_refs() == 0,
+                "pool whole again after round 2",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharing_and_chunking_bitwise_across_backends_and_layouts() {
+    // prefix sharing and chunked prefill are memory/latency knobs only:
+    // a sharing-off, unchunked, static-backend, serial-flip run is the
+    // reference, and every {share} × {chunk} × {backend} × {epilogue} ×
+    // {lanes, threads} combination must reproduce its token streams
+    // bitwise, on both GEMM paths
+    let meta = serve_test_meta();
+    check(3, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let prefix: Vec<i32> = (0..3).map(|_| rng.below(meta.vocab) as i32).collect();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..4)
+            .map(|i| {
+                let mut toks = prefix.clone();
+                toks.push(i as i32);
+                (toks, 1 + rng.below(4))
+            })
+            .collect();
+        for int_gemm in [true, false] {
+            let run = |lanes: usize,
+                       threads: usize,
+                       backend: ParBackend,
+                       fused: bool,
+                       share: bool,
+                       chunk: usize|
+             -> Vec<Vec<i32>> {
+                let cfg = ServeConfig {
+                    max_lanes: lanes,
+                    block_tokens: 2,
+                    kv_quant: KvQuant::Asym4,
+                    threads: Some(threads),
+                    int_gemm: Some(int_gemm),
+                    arena: Some(true),
+                    par_backend: Some(backend),
+                    fused_epilogue: Some(fused),
+                    prefix_share: Some(share),
+                    prefill_chunk: Some(chunk),
+                    ..ServeConfig::default()
+                };
+                let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+                // step after the first submit so later admissions can
+                // actually share the donor's registered prefix
+                for (i, (toks, n)) in reqs.iter().enumerate() {
+                    eng.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+                    if i == 0 {
+                        eng.step().unwrap();
+                    }
+                }
+                let mut done = eng.run().unwrap();
+                done.sort_by_key(|c| c.id);
+                assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+                done.into_iter().map(|c| c.tokens).collect()
+            };
+            let base = run(1, 1, ParBackend::Static, false, false, 0);
+            for backend in [ParBackend::Static, ParBackend::Steal] {
+                for fused in [false, true] {
+                    for (share, chunk) in [(true, 0), (true, 2), (false, 1)] {
+                        for (lanes, threads) in [(4usize, 1usize), (4, 8)] {
+                            prop_assert(
+                                run(lanes, threads, backend, fused, share, chunk) == base,
+                                &format!(
+                                    "streams bitwise at lanes={lanes} threads={threads} \
+                                     {backend:?} fused={fused} share={share} chunk={chunk} \
+                                     int={int_gemm}"
+                                ),
+                            )?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_histogram_quantile_brackets_true_order_statistic() {
     // the log2-bucket estimate is the upper bound of the bucket holding
     // rank ceil(q·count): always ≥ the true order statistic and < 2× it

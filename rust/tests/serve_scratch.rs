@@ -24,6 +24,9 @@
 //! baseline. The scratch decay stays armed at its default — steady
 //! state at a constant lane count never dips below the arena's
 //! high-water mark, so decay must not fire (and must not allocate).
+//! Prefix sharing and chunked prefill are pinned *on* explicitly: the
+//! refcounted pool and the prefill cursor are live in the measured
+//! engine, and steady-state decode must stay heap-silent with both.
 
 mod common;
 use common::serve_test_meta;
@@ -101,6 +104,12 @@ fn steady_state_decode_is_allocation_free() {
         // telemetry ON: histogram records and gauge refreshes are part
         // of the zero-alloc contract, not exempt from it
         obs: Some(true),
+        // prefix sharing + chunked prefill ON explicitly (not via the
+        // env defaults): the zero-alloc window must hold with the
+        // refcounted pool and the prefill cursor armed, and must not
+        // quietly pass because an env var disabled them
+        prefix_share: Some(true),
+        prefill_chunk: Some(2),
         ..ServeConfig::default()
     };
     // the serving default: work-stealing runtime + fused epilogues

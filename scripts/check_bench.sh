@@ -25,6 +25,12 @@
 #                                                 ABSOLUTE ceiling 0.02 —
 #                                                 the obs layer may never
 #                                                 cost more than 2%)
+#              runs[lanes=16].prefix_hit_ratio   (shared-prefix stage:
+#                                                 prompt tokens served from
+#                                                 shared KV blocks over all
+#                                                 prompt tokens — a FLOOR;
+#                                                 a broken prefix index
+#                                                 collapses it toward 0)
 #
 # Usage:  scripts/check_bench.sh            # gate current vs baseline
 #         scripts/check_bench.sh --update   # refresh BENCH_baseline/
@@ -91,6 +97,7 @@ metrics = [
     ("serve: lanes=16 arena_speedup", serve_run_metric, (cur_s, 16, "arena_speedup"), (base_s, 16, "arena_speedup"), "higher"),
     ("serve: lanes=16 epilogue_fused_speedup", serve_run_metric, (cur_s, 16, "epilogue_fused_speedup"), (base_s, 16, "epilogue_fused_speedup"), "higher"),
     ("serve: lanes=16 p99_ttft_ms", serve_run_metric, (cur_s, 16, "p99_ttft_ms"), (base_s, 16, "p99_ttft_ms"), "lower"),
+    ("serve: lanes=16 prefix_hit_ratio", serve_run_metric, (cur_s, 16, "prefix_hit_ratio"), (base_s, 16, "prefix_hit_ratio"), "higher"),
 ]
 
 failures = []
