@@ -46,6 +46,19 @@
 //! lanes = 16 as a *ceiling* — latency regressions fail, lower is
 //! better).
 //!
+//! Each lane count also runs a **mixed-priority overload stage**: a
+//! same-instant flood of low-class requests (4× the lane count against
+//! a `queue_cap = 2 × lanes` admission queue) plus a small high-class
+//! trickle arriving after the queue has filled. High-class arrivals
+//! outrank every queued low-class request (evicting the newest queued
+//! low request when the queue is full), so the high class should see
+//! near-single-request TTFT while the low class eats the queueing
+//! delay. Recorded: `hi_pri_p99_ttft_ms` (gated at lanes = 16 as a
+//! *ceiling* by `scripts/check_bench.sh`) and `fairness_ratio`
+//! (low-class p99 TTFT over high-class p99 TTFT — gated as a *floor*:
+//! under overload the ratio collapsing toward 1 means priority
+//! admission stopped working).
+//!
 //! Each lane count also runs a **shared-prefix stage**: 16 requests
 //! over one 48-token shared system prompt (+ distinct 8-token
 //! suffixes), the donor prefilled first so the rest attach its
@@ -59,6 +72,7 @@
 //! the paged 4-bit pool vs the dense f32 cache. `scripts/bench.sh`
 //! drops it at the repo root, next to `BENCH_kernels.json`.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -67,7 +81,9 @@ use kurtail::config::{KvQuant, QuantScheme};
 use kurtail::model::Params;
 use kurtail::runtime::{ConfigMeta, ParamSpec};
 use kurtail::serve::daemon::{spawn_host, Event, HostConfig, SubmitReq};
-use kurtail::serve::{Engine, ParBackend, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::serve::{
+    Engine, ParBackend, Priority, ServeConfig, ServeModel, ServeQuantSpec, TenantPolicy,
+};
 use kurtail::tensor::hadamard::random_hadamard;
 use kurtail::util::json::{arr, num, obj, s as js, Json};
 use kurtail::util::par::num_threads;
@@ -268,6 +284,131 @@ fn poisson_load(model: &ServeModel, lanes: usize, tok_s: f64) -> Vec<(&'static s
         ("p50_ttft_ms", num(p50)),
         ("p99_ttft_ms", num(p99)),
         ("shed_rate", num(shed_rate)),
+    ]
+}
+
+/// Mixed-priority overload: a same-instant low-class flood (4× the
+/// lane count against a `queue_cap = 2 × lanes` queue, so part of the
+/// flood sheds at admission) plus a small high-class trickle arriving
+/// once the queue has filled. The weighted scheduler seats queued
+/// high-class work before any queued low-class work and evicts the
+/// newest queued low request when a high arrival finds the queue full,
+/// so the high class should see near-single-request TTFT while the low
+/// class eats the queueing delay. `fairness_ratio` (low p99 TTFT over
+/// high p99 TTFT) collapsing toward 1 means priority admission stopped
+/// working; `hi_pri_p99_ttft_ms` regressing means the high class is
+/// being made to wait. Both are gated at lanes = 16 by
+/// `scripts/check_bench.sh` (floor and ceiling respectively).
+fn priority_overload_stage(model: &ServeModel, lanes: usize) -> Vec<(&'static str, Json)> {
+    const N_HI: usize = 4;
+    let n_lo = 4 * lanes;
+    let cfg = ServeConfig {
+        max_lanes: lanes,
+        kv_quant: KvQuant::Asym4,
+        int_gemm: Some(true),
+        arena: Some(true),
+        fused_epilogue: Some(true),
+        par_backend: Some(ParBackend::Steal),
+        queue_cap: 2 * lanes,
+        ..ServeConfig::default()
+    };
+    let eng = Engine::new(model.clone(), &cfg).expect("engine");
+    let mut tenants = BTreeMap::new();
+    tenants.insert(
+        "hi".to_string(),
+        TenantPolicy { priority: Priority::High, ..TenantPolicy::default() },
+    );
+    tenants.insert(
+        "lo".to_string(),
+        TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() },
+    );
+    let (host, handle) = spawn_host(eng, HostConfig { tenants, ..HostConfig::default() });
+    let spawn_worker = |i: usize, tenant: &'static str| {
+        let host = host.clone();
+        thread::spawn(move || {
+            let prompt: Vec<i32> =
+                (0..PROMPT_TOKENS).map(|t| ((i * 31 + t * 7) % 256) as i32).collect();
+            let (tx, rx) = mpsc::channel();
+            let t0 = Instant::now();
+            let req = SubmitReq {
+                tokens: prompt,
+                n_tokens: NEW_TOKENS,
+                temp: 0.0,
+                seed: 0xC0FFEE + i as u64,
+                stop: None,
+                tenant: tenant.into(),
+                deadline: None,
+                events: tx,
+            };
+            if host.submit(req).is_err() {
+                return (None, false); // shed at admission
+            }
+            let mut ttft = None;
+            loop {
+                match rx.recv() {
+                    Ok(Event::Token(_)) => {
+                        if ttft.is_none() {
+                            ttft = Some(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                    }
+                    Ok(Event::Done(_)) => return (ttft, true),
+                    // evicted by a high arrival (or lost the engine):
+                    // no completion, but a recorded TTFT still counts
+                    Ok(Event::Failed(_)) | Err(_) => return (ttft, false),
+                }
+            }
+        })
+    };
+    let mut lo_workers = Vec::with_capacity(n_lo);
+    for i in 0..n_lo {
+        lo_workers.push(spawn_worker(i, "lo"));
+    }
+    // let the flood land — lanes seated, queue full — before the high
+    // class arrives; the interesting case is hi outranking *queued* lo
+    thread::sleep(Duration::from_millis(50));
+    let mut hi_workers = Vec::with_capacity(N_HI);
+    for i in 0..N_HI {
+        hi_workers.push(spawn_worker(n_lo + i, "hi"));
+        thread::sleep(Duration::from_millis(10));
+    }
+    let collect = |workers: Vec<thread::JoinHandle<(Option<f64>, bool)>>| {
+        let mut ttfts = Vec::new();
+        let mut completed = 0usize;
+        for w in workers {
+            let (ttft, ok) = w.join().expect("priority worker");
+            if let Some(t) = ttft {
+                ttfts.push(t);
+            }
+            if ok {
+                completed += 1;
+            }
+        }
+        ttfts.sort_by(f64::total_cmp);
+        (ttfts, completed)
+    };
+    let (lo_ttfts, lo_completed) = collect(lo_workers);
+    let (hi_ttfts, hi_completed) = collect(hi_workers);
+    host.drain();
+    handle.join().expect("engine thread");
+    let pct = |v: &[f64], p: f64| -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        v[((v.len() - 1) as f64 * p).round() as usize]
+    };
+    let hi_p99 = pct(&hi_ttfts, 0.99);
+    let lo_p99 = pct(&lo_ttfts, 0.99);
+    let fairness = lo_p99 / hi_p99.max(1e-9);
+    println!(
+        "priority lanes={lanes:<2}: hi ttft p99 {hi_p99:.0} ms ({hi_completed}/{N_HI} completed), \
+         lo ttft p99 {lo_p99:.0} ms ({lo_completed}/{n_lo} completed), fairness {fairness:.2}x"
+    );
+    vec![
+        ("hi_pri_p99_ttft_ms", num(hi_p99)),
+        ("lo_pri_p99_ttft_ms", num(lo_p99)),
+        ("fairness_ratio", num(fairness)),
+        ("hi_completed", num(hi_completed as f64)),
+        ("lo_completed", num(lo_completed as f64)),
     ]
 }
 
@@ -490,6 +631,7 @@ fn main() {
             ("obs_overhead", num(obs_overhead)),
         ];
         row.extend(poisson_load(&int4, lanes, tok_s));
+        row.extend(priority_overload_stage(&int4, lanes));
         row.extend(shared_prefix_stage(&int4, lanes));
         runs.push(obj(row));
         last_eng = Some(eng);

@@ -51,6 +51,8 @@ struct Args {
     tenant_cap: usize,
     /// `daemon`: default request deadline in ms (0 = none).
     deadline_ms: u64,
+    /// `daemon`: runtime-config file, live-reloaded on SIGHUP / edit.
+    config: Option<std::path::PathBuf>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -73,6 +75,7 @@ fn parse_args() -> Result<Args, String> {
         queue_cap: 64,
         tenant_cap: 0,
         deadline_ms: 0,
+        config: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -133,6 +136,7 @@ fn parse_args() -> Result<Args, String> {
             "--deadline-ms" => {
                 a.deadline_ms = take("--deadline-ms")?.parse().map_err(|e| format!("--deadline-ms: {e}"))?
             }
+            "--config" => a.config = Some(take("--config")?.into()),
             flag if flag.starts_with("--") => return Err(format!("unknown flag '{flag}'")),
             pos => {
                 if a.cmd.is_empty() {
@@ -157,7 +161,8 @@ fn usage() {
          \x20 serve <model> [--method M] [--lanes N] [--requests N] [--prompt P] [--tokens N]\n\
          \x20       [--par-backend static|steal] [--scratch-decay N]\n\
          \x20 daemon [<model>|--synthetic] [--addr HOST:PORT] [--lanes N] [--queue-cap N]\n\
-         \x20       [--tenant-cap N] [--deadline-ms N]   (KURTAIL_FAULT arms fault injection)\n\
+         \x20       [--tenant-cap N] [--deadline-ms N] [--config FILE]\n\
+         \x20       (KURTAIL_FAULT arms fault injection; SIGHUP reloads --config)\n\
          \x20 list                             artifacts + configs"
     );
 }
@@ -337,6 +342,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 default_deadline_ms: args.deadline_ms,
                 serve: scfg,
                 fault,
+                config_path: args.config.clone(),
+                ..DaemonConfig::default()
             };
             // install before spawn so a SIGTERM racing startup still
             // lands a drain instead of the default kill

@@ -14,6 +14,7 @@
 //! so the allocation it does is irrelevant to the zero-alloc contract.
 
 use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -22,6 +23,28 @@ pub enum LogFormat {
     Text,
     Json,
     Off,
+}
+
+impl LogFormat {
+    /// Strict config-file spelling (`"text"`, `"json"`, `"off"`). The
+    /// env var keeps its lenient fallback-to-text rule; a config file
+    /// must not silently typo into `text`.
+    pub fn parse(s: &str) -> Option<LogFormat> {
+        match s.trim() {
+            "text" => Some(LogFormat::Text),
+            "json" => Some(LogFormat::Json),
+            "off" | "0" => Some(LogFormat::Off),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LogFormat::Text => "text",
+            LogFormat::Json => "json",
+            LogFormat::Off => "off",
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,8 +84,32 @@ fn log_format_flag(var: Option<&str>) -> LogFormat {
     }
 }
 
-/// The process's log format (resolved from `KURTAIL_LOG` once).
+/// Runtime override installed by the daemon's live config reload:
+/// 0 = unset (fall through to the `KURTAIL_LOG` default), 1 = text,
+/// 2 = json, 3 = off.
+static FORMAT_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Override the process log format at runtime (live config reload).
+/// `None` clears the override back to the `KURTAIL_LOG` default.
+pub fn set_log_format(fmt: Option<LogFormat>) {
+    let v = match fmt {
+        None => 0,
+        Some(LogFormat::Text) => 1,
+        Some(LogFormat::Json) => 2,
+        Some(LogFormat::Off) => 3,
+    };
+    FORMAT_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The process's log format: a live-reload override if one is
+/// installed, else `KURTAIL_LOG` (resolved once).
 pub fn log_format() -> LogFormat {
+    match FORMAT_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return LogFormat::Text,
+        2 => return LogFormat::Json,
+        3 => return LogFormat::Off,
+        _ => {}
+    }
     static FORMAT: OnceLock<LogFormat> = OnceLock::new();
     *FORMAT.get_or_init(|| log_format_flag(std::env::var("KURTAIL_LOG").ok().as_deref()))
 }
@@ -161,6 +208,11 @@ mod tests {
         assert_eq!(log_format_flag(Some("off")), LogFormat::Off);
         assert_eq!(log_format_flag(Some("0")), LogFormat::Off);
         assert_eq!(log_format_flag(Some("verbose")), LogFormat::Text);
+        // the config-file rule is strict where the env rule is lenient
+        assert_eq!(LogFormat::parse("json"), Some(LogFormat::Json));
+        assert_eq!(LogFormat::parse(" off "), Some(LogFormat::Off));
+        assert_eq!(LogFormat::parse("verbose"), None);
+        assert_eq!(LogFormat::parse(LogFormat::Text.as_str()), Some(LogFormat::Text));
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! File-backed runtime daemon configuration with atomic live reload.
+//!
+//! Everything an operator may want to change *without restarting* —
+//! tenant policies (priority class, in-flight cap, token-bucket rate
+//! limit), connection limits, deadlines, fault knobs, log mode — lives
+//! in a [`RuntimeConfig`] held by a [`ConfigCell`] (an
+//! `Arc`-swapped cell: readers grab a consistent snapshot with one
+//! lock-free-ish clone, a reload installs a whole new config at once,
+//! never a half-applied one). Reload triggers are SIGHUP and an mtime
+//! poll from the accept loop; a config that fails validation is
+//! rejected with a structured log and the old config stays live.
+//! In-flight streams never observe a reload: admission decisions read
+//! the snapshot once, and live lanes keep the reservation they were
+//! admitted with.
+//!
+//! *Not* hot-reloadable (engine-shape knobs, fixed at startup):
+//! listen address, queue capacity, lane count, and every
+//! `ServeConfig` field — those size the KV pool and scratch arena the
+//! engine was built with.
+//!
+//! Config file format (strict JSON; unknown keys are rejected so a
+//! typo cannot silently become a default):
+//!
+//! ```json
+//! {
+//!   "per_tenant_cap": 8,
+//!   "default_deadline_ms": 30000,
+//!   "keep_alive_ms": 10000,
+//!   "max_conn_requests": 64,
+//!   "read_budget_ms": 10000,
+//!   "log": "json",
+//!   "fault": "slow_step=5",
+//!   "fault_seed": 7,
+//!   "tenants": {
+//!     "alice": { "priority": "high", "rate_tokens_per_s": 100, "burst_tokens": 200 },
+//!     "batch": { "priority": "low", "cap": 2 }
+//!   }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::SystemTime;
+
+use crate::obs::log::LogFormat;
+use crate::util::Json;
+
+use super::super::scheduler::Priority;
+use super::fault::FaultSpec;
+
+/// Per-tenant admission policy. Absent tenants get `Default`, which
+/// reproduces the pre-policy daemon exactly: normal priority, global
+/// cap, no rate limit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantPolicy {
+    /// Admission class (`high`/`normal`/`low`).
+    pub priority: Priority,
+    /// In-flight request cap override; `0` inherits the global
+    /// `per_tenant_cap`.
+    pub cap: usize,
+    /// Token-bucket refill in *generated* tokens per second; `0` =
+    /// unlimited (no bucket at all).
+    pub rate_tokens_per_s: f64,
+    /// Bucket capacity in tokens; `0` = one second of refill.
+    pub burst_tokens: f64,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        Self { priority: Priority::Normal, cap: 0, rate_tokens_per_s: 0.0, burst_tokens: 0.0 }
+    }
+}
+
+impl TenantPolicy {
+    /// Whether this tenant carries a token bucket at all.
+    pub fn rate_limited(&self) -> bool {
+        self.rate_tokens_per_s > 0.0
+    }
+
+    /// Effective bucket capacity (the `0` → one-second-of-refill rule).
+    pub fn effective_burst(&self) -> f64 {
+        if self.burst_tokens > 0.0 {
+            self.burst_tokens
+        } else {
+            self.rate_tokens_per_s
+        }
+    }
+}
+
+/// The hot-reloadable slice of daemon configuration (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeConfig {
+    /// Global in-flight requests per tenant; `0` = unlimited.
+    pub per_tenant_cap: usize,
+    /// Deadline applied to requests that don't carry one; `0` = none.
+    pub default_deadline_ms: u64,
+    /// Keep-alive idle window per connection; `0` disables keep-alive
+    /// (every response closes, the pre-PR-9 behaviour).
+    pub keep_alive_ms: u64,
+    /// Requests served per connection before a graceful close.
+    pub max_conn_requests: usize,
+    /// Slow-loris guard: once a request's first bytes arrive, the
+    /// whole head+body must land within this budget.
+    pub read_budget_ms: u64,
+    /// Tenant name → policy; absent tenants get `TenantPolicy::default`.
+    pub tenants: BTreeMap<String, TenantPolicy>,
+    /// Fault injection (same grammar as `KURTAIL_FAULT`).
+    pub fault: FaultSpec,
+    /// Log mode override; `None` leaves `KURTAIL_LOG` in charge.
+    pub log: Option<LogFormat>,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            per_tenant_cap: 0,
+            default_deadline_ms: 0,
+            keep_alive_ms: 10_000,
+            max_conn_requests: 64,
+            read_budget_ms: 10_000,
+            tenants: BTreeMap::new(),
+            fault: FaultSpec::none(),
+            log: None,
+        }
+    }
+}
+
+fn get_usize(obj: &Json, key: &str, into: &mut usize) -> Result<(), String> {
+    if let Some(v) = obj.opt(key) {
+        *into = v.as_usize().map_err(|e| format!("{key}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn get_u64(obj: &Json, key: &str, into: &mut u64) -> Result<(), String> {
+    let mut n = *into as usize;
+    get_usize(obj, key, &mut n)?;
+    *into = n as u64;
+    Ok(())
+}
+
+fn get_rate(obj: &Json, key: &str, into: &mut f64) -> Result<(), String> {
+    if let Some(v) = obj.opt(key) {
+        let x = v.as_f64().map_err(|e| format!("{key}: {e}"))?;
+        if !x.is_finite() || x < 0.0 {
+            return Err(format!("{key}: must be a finite non-negative number, got {x}"));
+        }
+        *into = x;
+    }
+    Ok(())
+}
+
+impl RuntimeConfig {
+    /// Policy lookup with the global-cap inheritance applied.
+    pub fn policy(&self, tenant: &str) -> TenantPolicy {
+        let mut p = self.tenants.get(tenant).cloned().unwrap_or_default();
+        if p.cap == 0 {
+            p.cap = self.per_tenant_cap;
+        }
+        p
+    }
+
+    /// Parse + validate a config document. Every error names the
+    /// offending key; nothing is applied on error (the caller keeps
+    /// the old config).
+    pub fn parse(text: &str) -> Result<RuntimeConfig, String> {
+        let doc = Json::parse(text).map_err(|e| format!("config: {e}"))?;
+        let top = doc.as_obj().map_err(|e| format!("config: {e}"))?;
+        const KNOWN: &[&str] = &[
+            "per_tenant_cap",
+            "default_deadline_ms",
+            "keep_alive_ms",
+            "max_conn_requests",
+            "read_budget_ms",
+            "tenants",
+            "fault",
+            "fault_seed",
+            "log",
+        ];
+        for key in top.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("config: unknown key '{key}'"));
+            }
+        }
+        let mut cfg = RuntimeConfig::default();
+        get_usize(&doc, "per_tenant_cap", &mut cfg.per_tenant_cap)?;
+        get_u64(&doc, "default_deadline_ms", &mut cfg.default_deadline_ms)?;
+        get_u64(&doc, "keep_alive_ms", &mut cfg.keep_alive_ms)?;
+        get_usize(&doc, "max_conn_requests", &mut cfg.max_conn_requests)?;
+        get_u64(&doc, "read_budget_ms", &mut cfg.read_budget_ms)?;
+        if cfg.max_conn_requests == 0 {
+            return Err("max_conn_requests: must be >= 1".into());
+        }
+        if let Some(v) = doc.opt("log") {
+            let s = v.as_str().map_err(|e| format!("log: {e}"))?;
+            cfg.log = Some(
+                LogFormat::parse(s).ok_or_else(|| format!("log: unknown mode '{s}' (text/json/off)"))?,
+            );
+        }
+        if let Some(v) = doc.opt("fault") {
+            let spec = v.as_str().map_err(|e| format!("fault: {e}"))?;
+            let mut seed = 0usize;
+            get_usize(&doc, "fault_seed", &mut seed)?;
+            cfg.fault = FaultSpec::parse(spec, seed as u64).map_err(|e| format!("fault: {e}"))?;
+        } else if doc.opt("fault_seed").is_some() {
+            return Err("fault_seed: set without a fault spec".into());
+        }
+        if let Some(v) = doc.opt("tenants") {
+            let tenants = v.as_obj().map_err(|e| format!("tenants: {e}"))?;
+            for (name, spec) in tenants {
+                let p = Self::parse_tenant(name, spec)?;
+                cfg.tenants.insert(name.clone(), p);
+            }
+        }
+        Ok(cfg)
+    }
+
+    fn parse_tenant(name: &str, spec: &Json) -> Result<TenantPolicy, String> {
+        let obj = spec.as_obj().map_err(|e| format!("tenant '{name}': {e}"))?;
+        const KNOWN: &[&str] = &["priority", "cap", "rate_tokens_per_s", "burst_tokens"];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("tenant '{name}': unknown key '{key}'"));
+            }
+        }
+        let mut p = TenantPolicy::default();
+        if let Some(v) = spec.opt("priority") {
+            let s = v.as_str().map_err(|e| format!("tenant '{name}' priority: {e}"))?;
+            p.priority = Priority::parse(s)
+                .ok_or_else(|| format!("tenant '{name}' priority: unknown class '{s}' (high/normal/low)"))?;
+        }
+        get_usize(spec, "cap", &mut p.cap).map_err(|e| format!("tenant '{name}' {e}"))?;
+        get_rate(spec, "rate_tokens_per_s", &mut p.rate_tokens_per_s)
+            .map_err(|e| format!("tenant '{name}' {e}"))?;
+        get_rate(spec, "burst_tokens", &mut p.burst_tokens)
+            .map_err(|e| format!("tenant '{name}' {e}"))?;
+        if p.burst_tokens > 0.0 && p.rate_tokens_per_s == 0.0 {
+            return Err(format!("tenant '{name}': burst_tokens without rate_tokens_per_s"));
+        }
+        Ok(p)
+    }
+
+    /// Load + parse a config file.
+    pub fn from_file(path: &Path) -> Result<RuntimeConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("config {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Atomically swappable config cell: readers snapshot with
+/// [`ConfigCell::current`], a reload installs a whole new
+/// [`RuntimeConfig`] at once. The generation counter lets `/stats`
+/// (and the smoke test) observe that a reload landed.
+pub struct ConfigCell {
+    cfg: RwLock<Arc<RuntimeConfig>>,
+    generation: AtomicU64,
+}
+
+impl ConfigCell {
+    pub fn new(initial: RuntimeConfig) -> Self {
+        Self { cfg: RwLock::new(Arc::new(initial)), generation: AtomicU64::new(1) }
+    }
+
+    /// A consistent snapshot; cheap (one `Arc` clone under a read lock).
+    pub fn current(&self) -> Arc<RuntimeConfig> {
+        self.cfg.read().expect("config cell poisoned").clone()
+    }
+
+    /// Swap in a validated config; returns the new generation.
+    pub fn install(&self, cfg: RuntimeConfig) -> u64 {
+        let mut slot = self.cfg.write().expect("config cell poisoned");
+        *slot = Arc::new(cfg);
+        self.generation.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+}
+
+/// Watches a config file for change by `(mtime, len)` stamp — the pair
+/// catches both in-place rewrites and the same-second atomic-rename
+/// case a bare mtime misses when the sizes differ.
+pub struct ConfigWatcher {
+    path: PathBuf,
+    seen: Option<(SystemTime, u64)>,
+}
+
+impl ConfigWatcher {
+    /// Start watching; the current stamp is recorded so only *future*
+    /// edits trigger (the caller has already loaded the file once).
+    pub fn new(path: PathBuf) -> Self {
+        let seen = Self::stamp(&path);
+        Self { path, seen }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn stamp(path: &Path) -> Option<(SystemTime, u64)> {
+        let meta = std::fs::metadata(path).ok()?;
+        Some((meta.modified().ok()?, meta.len()))
+    }
+
+    /// Mtime poll: `None` when unchanged (or the file is mid-rename),
+    /// otherwise the parse result of the new contents. The stamp
+    /// advances even on a parse error so a broken file logs once per
+    /// edit, not once per poll.
+    pub fn poll(&mut self) -> Option<Result<RuntimeConfig, String>> {
+        let stamp = Self::stamp(&self.path)?;
+        if self.seen == Some(stamp) {
+            return None;
+        }
+        self.seen = Some(stamp);
+        Some(RuntimeConfig::from_file(&self.path))
+    }
+
+    /// SIGHUP path: reload unconditionally, refreshing the stamp.
+    pub fn force(&mut self) -> Result<RuntimeConfig, String> {
+        self.seen = Self::stamp(&self.path);
+        RuntimeConfig::from_file(&self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &str) -> PathBuf {
+        let path = std::env::temp_dir().join(format!("kurtail_cfg_{}_{name}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        f.sync_all().unwrap();
+        path
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RuntimeConfig::parse(
+            r#"{
+                "per_tenant_cap": 8,
+                "default_deadline_ms": 30000,
+                "keep_alive_ms": 5000,
+                "max_conn_requests": 16,
+                "read_budget_ms": 2000,
+                "log": "json",
+                "fault": "slow_step=5",
+                "fault_seed": 7,
+                "tenants": {
+                    "alice": { "priority": "high", "rate_tokens_per_s": 100, "burst_tokens": 200 },
+                    "batch": { "priority": "low", "cap": 2 }
+                }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.per_tenant_cap, 8);
+        assert_eq!(cfg.keep_alive_ms, 5000);
+        assert_eq!(cfg.max_conn_requests, 16);
+        assert_eq!(cfg.log, Some(LogFormat::Json));
+        assert_eq!(cfg.fault.slow_step_ms, 5);
+        assert_eq!(cfg.fault.seed, 7);
+        let alice = cfg.policy("alice");
+        assert_eq!(alice.priority, Priority::High);
+        assert_eq!(alice.rate_tokens_per_s, 100.0);
+        assert_eq!(alice.effective_burst(), 200.0);
+        assert!(alice.rate_limited());
+        let batch = cfg.policy("batch");
+        assert_eq!(batch.priority, Priority::Low);
+        assert_eq!(batch.cap, 2, "explicit cap wins over the global");
+        assert!(!batch.rate_limited());
+        // unknown tenants inherit the global cap and normal class
+        let other = cfg.policy("nobody");
+        assert_eq!(other.priority, Priority::Normal);
+        assert_eq!(other.cap, 8);
+    }
+
+    #[test]
+    fn empty_object_is_all_defaults() {
+        let cfg = RuntimeConfig::parse("{}").unwrap();
+        assert_eq!(cfg, RuntimeConfig::default());
+        assert_eq!(cfg.policy("x").cap, 0);
+    }
+
+    #[test]
+    fn rejects_malformed_configs_by_name() {
+        let cases = [
+            ("{\"per_tenant_capz\": 1}", "unknown key"),
+            ("{\"per_tenant_cap\": -1}", "per_tenant_cap"),
+            ("{\"max_conn_requests\": 0}", "max_conn_requests"),
+            ("{\"log\": \"loud\"}", "log"),
+            ("{\"fault\": \"bogus=1\"}", "fault"),
+            ("{\"fault_seed\": 3}", "fault_seed"),
+            ("{\"tenants\": {\"a\": {\"priority\": \"urgent\"}}}", "priority"),
+            ("{\"tenants\": {\"a\": {\"rate_tokens_per_s\": -5}}}", "rate_tokens_per_s"),
+            ("{\"tenants\": {\"a\": {\"burst_tokens\": 5}}}", "burst_tokens without"),
+            ("{\"tenants\": {\"a\": {\"color\": 1}}}", "unknown key"),
+            ("not json", "config"),
+        ];
+        for (text, needle) in cases {
+            let err = RuntimeConfig::parse(text).expect_err(text);
+            assert!(err.contains(needle), "error for {text:?} should name '{needle}': {err}");
+        }
+    }
+
+    #[test]
+    fn cell_swaps_atomically_and_bumps_generation() {
+        let cell = ConfigCell::new(RuntimeConfig::default());
+        assert_eq!(cell.generation(), 1);
+        let before = cell.current();
+        assert_eq!(before.per_tenant_cap, 0);
+        let gen = cell.install(RuntimeConfig { per_tenant_cap: 3, ..RuntimeConfig::default() });
+        assert_eq!(gen, 2);
+        assert_eq!(cell.generation(), 2);
+        assert_eq!(cell.current().per_tenant_cap, 3);
+        // old snapshots stay valid (in-flight requests keep their view)
+        assert_eq!(before.per_tenant_cap, 0);
+    }
+
+    #[test]
+    fn watcher_triggers_on_rewrite_and_keeps_old_on_error() {
+        let path = tmp("watch", "{\"per_tenant_cap\": 1}");
+        let mut w = ConfigWatcher::new(path.clone());
+        assert!(w.poll().is_none(), "freshly recorded stamp must not trigger");
+        // rewrite with different length → stamp changes even within
+        // the same mtime second
+        std::fs::write(&path, "{\"per_tenant_cap\": 22}").unwrap();
+        let got = w.poll().expect("rewrite triggers").expect("valid config parses");
+        assert_eq!(got.per_tenant_cap, 22);
+        assert!(w.poll().is_none(), "no re-trigger until the next edit");
+        // a broken rewrite surfaces the error exactly once
+        std::fs::write(&path, "{\"per_tenant_cap\": }").unwrap();
+        assert!(w.poll().expect("edit triggers").is_err());
+        assert!(w.poll().is_none(), "broken file logs once per edit, not per poll");
+        // force (SIGHUP) reloads even without an edit
+        assert!(w.force().is_err());
+        std::fs::write(&path, "{}").unwrap();
+        assert_eq!(w.force().unwrap(), RuntimeConfig::default());
+        let _ = std::fs::remove_file(&path);
+    }
+}

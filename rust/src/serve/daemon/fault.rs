@@ -19,6 +19,12 @@
 //! * `drop_conn=P` — with probability `P` per streaming request, the
 //!   daemon severs the client socket after a few tokens, exercising the
 //!   disconnect → cancel → block-reclaim path.
+//! * `engine_panic=P` — with probability `P` per engine step, the
+//!   engine thread panics (once per process: the knob disarms after
+//!   firing), exercising the supervisor's catch → fail-in-flight →
+//!   rebuild → retry path. `P = 1` panics on the first step after
+//!   arming, so `engine_panic=1` deterministically yields exactly one
+//!   restart.
 
 use std::time::Duration;
 
@@ -31,6 +37,7 @@ pub struct FaultSpec {
     pub pool_exhaust: f32,
     pub slow_step_ms: u64,
     pub drop_conn: f32,
+    pub engine_panic: f32,
     pub seed: u64,
 }
 
@@ -40,7 +47,10 @@ impl FaultSpec {
     }
 
     pub fn is_none(&self) -> bool {
-        self.pool_exhaust <= 0.0 && self.slow_step_ms == 0 && self.drop_conn <= 0.0
+        self.pool_exhaust <= 0.0
+            && self.slow_step_ms == 0
+            && self.drop_conn <= 0.0
+            && self.engine_panic <= 0.0
     }
 
     /// Parse a `KURTAIL_FAULT`-style spec string.
@@ -54,10 +64,20 @@ impl FaultSpec {
                 }
                 "slow_step" => out.slow_step_ms = val.trim().parse().map_err(|e| format!("slow_step: {e}"))?,
                 "drop_conn" => out.drop_conn = val.trim().parse().map_err(|e| format!("drop_conn: {e}"))?,
-                other => return Err(format!("unknown fault '{other}' (pool_exhaust/slow_step/drop_conn)")),
+                "engine_panic" => {
+                    out.engine_panic = val.trim().parse().map_err(|e| format!("engine_panic: {e}"))?
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault '{other}' (pool_exhaust/slow_step/drop_conn/engine_panic)"
+                    ))
+                }
             }
         }
-        if !(0.0..=1.0).contains(&out.pool_exhaust) || !(0.0..=1.0).contains(&out.drop_conn) {
+        if !(0.0..=1.0).contains(&out.pool_exhaust)
+            || !(0.0..=1.0).contains(&out.drop_conn)
+            || !(0.0..=1.0).contains(&out.engine_panic)
+        {
             return Err("fault probabilities must be in [0, 1]".into());
         }
         Ok(out)
@@ -99,12 +119,18 @@ impl FaultSpec {
 pub struct FaultClock {
     spec: FaultSpec,
     rng: Rng,
+    /// `engine_panic` is one-shot per clock: it disarms after firing,
+    /// so the supervisor (which keeps the clock across engine
+    /// incarnations) sees exactly one injected crash per arming —
+    /// `engine_panic=1` means "one restart", not a crash loop.
+    panic_armed: bool,
 }
 
 impl FaultClock {
     pub fn new(spec: FaultSpec) -> Self {
         let rng = Rng::new(spec.seed ^ 0xFA_u64.wrapping_mul(0x9E3779B97F4A7C15));
-        Self { spec, rng }
+        let panic_armed = spec.engine_panic > 0.0;
+        Self { spec, rng, panic_armed }
     }
 
     pub fn spec(&self) -> &FaultSpec {
@@ -124,6 +150,21 @@ impl FaultClock {
     pub fn step_delay(&self) -> Option<Duration> {
         (self.spec.slow_step_ms > 0).then(|| Duration::from_millis(self.spec.slow_step_ms))
     }
+
+    /// Whether to panic the engine thread this step (`engine_panic`).
+    /// Draws from the rng only while armed, so arming it does not
+    /// perturb the `pool_exhaust`/`slow_step` timelines of a spec that
+    /// leaves it at 0.
+    pub fn engine_panic(&mut self) -> bool {
+        if !self.panic_armed {
+            return false;
+        }
+        if self.rng.uniform() < self.spec.engine_panic {
+            self.panic_armed = false;
+            return true;
+        }
+        false
+    }
 }
 
 #[cfg(test)]
@@ -133,14 +174,36 @@ mod tests {
     #[test]
     fn parses_full_and_partial_specs() {
         let f = FaultSpec::parse("pool_exhaust=0.25, slow_step=10, drop_conn=0.5", 7).unwrap();
-        assert_eq!(f, FaultSpec { pool_exhaust: 0.25, slow_step_ms: 10, drop_conn: 0.5, seed: 7 });
+        assert_eq!(
+            f,
+            FaultSpec { pool_exhaust: 0.25, slow_step_ms: 10, drop_conn: 0.5, engine_panic: 0.0, seed: 7 }
+        );
         let f = FaultSpec::parse("slow_step=3", 0).unwrap();
         assert_eq!(f.slow_step_ms, 3);
-        assert!(f.pool_exhaust == 0.0 && f.drop_conn == 0.0);
+        assert!(f.pool_exhaust == 0.0 && f.drop_conn == 0.0 && f.engine_panic == 0.0);
+        let f = FaultSpec::parse("engine_panic=1", 0).unwrap();
+        assert_eq!(f.engine_panic, 1.0);
+        assert!(!f.is_none());
         assert!(FaultSpec::parse("", 0).unwrap().is_none());
         assert!(FaultSpec::parse("bogus=1", 0).is_err());
         assert!(FaultSpec::parse("drop_conn", 0).is_err());
         assert!(FaultSpec::parse("pool_exhaust=1.5", 0).is_err());
+        assert!(FaultSpec::parse("engine_panic=2", 0).is_err());
+    }
+
+    #[test]
+    fn engine_panic_fires_once_then_disarms() {
+        let spec = FaultSpec { engine_panic: 1.0, seed: 5, ..FaultSpec::none() };
+        let mut c = FaultClock::new(spec);
+        assert!(c.engine_panic(), "p=1 fires on the first armed step");
+        for _ in 0..32 {
+            assert!(!c.engine_panic(), "one-shot: never fires again");
+        }
+        // probabilistic arming still fires at most once over a long run
+        let spec = FaultSpec { engine_panic: 0.3, seed: 11, ..FaultSpec::none() };
+        let mut c = FaultClock::new(spec);
+        let fired: usize = (0..256).filter(|_| c.engine_panic()).count();
+        assert_eq!(fired, 1, "p=0.3 over 256 steps fires exactly once");
     }
 
     #[test]

@@ -2,12 +2,25 @@
 //! no HTTP crates). Scope: exactly what the daemon's API needs — a
 //! request parser (method + path + headers + `Content-Length` body,
 //! with size caps), plain responses, and `Transfer-Encoding: chunked`
-//! writers for per-token streaming. Connections are one-shot
-//! (`Connection: close`), which keeps the server loop trivial and the
-//! drain contract obvious: no idle keep-alive sockets to reap.
+//! writers for per-token streaming.
+//!
+//! Connections are persistent by default (HTTP/1.1 keep-alive): the
+//! daemon's per-connection loop keeps parsing requests off the same
+//! socket until the client sends `Connection: close`, the configured
+//! requests-per-connection bound is reached, the idle window expires,
+//! or a drain begins. Two timers guard the read path:
+//!
+//! * the **idle window** (the socket read timeout set by the caller)
+//!   bounds how long a kept-alive connection may sit silent before the
+//!   first byte of the next request, and
+//! * the **read budget** ([`read_request_within`]) bounds how long a
+//!   request may take from its first byte to its last — a slow-loris
+//!   client dribbling one header byte per second exhausts the budget
+//!   and is disconnected instead of pinning an accept slot.
 
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use super::super::error::ServeError;
 
@@ -31,6 +44,13 @@ impl Request {
     }
 }
 
+/// HTTP/1.1 defaults to persistent connections; only an explicit
+/// `Connection: close` opts out (the daemon ANDs this with its own
+/// keep-alive config, request budget and drain state).
+pub fn wants_keep_alive(req: &Request) -> bool {
+    !req.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+}
+
 fn find_blank_line(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
@@ -39,11 +59,38 @@ fn invalid(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
 }
 
+/// One read against the budget clock. The budget only starts ticking
+/// when the request's first bytes arrive — before that the socket's
+/// own read timeout (the keep-alive idle window) is in charge — and
+/// from then on every subsequent read shrinks its timeout to whatever
+/// budget remains.
+fn read_some(
+    stream: &mut TcpStream,
+    tmp: &mut [u8],
+    deadline: &mut Option<Instant>,
+    budget: Duration,
+) -> io::Result<usize> {
+    if let Some(d) = *deadline {
+        let left = d.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "request read budget exhausted"));
+        }
+        stream.set_read_timeout(Some(left))?;
+    }
+    let n = stream.read(tmp)?;
+    if n > 0 && deadline.is_none() {
+        *deadline = Some(Instant::now() + budget);
+    }
+    Ok(n)
+}
+
 /// Read and parse one request from the stream (blocking; honours the
-/// stream's read timeout).
-pub fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
+/// stream's read timeout for the first byte), requiring the whole
+/// head + body to land within `budget` of the first byte.
+pub fn read_request_within(stream: &mut TcpStream, budget: Duration) -> io::Result<Request> {
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut tmp = [0u8; 1024];
+    let mut deadline: Option<Instant> = None;
     let head_end = loop {
         if let Some(p) = find_blank_line(&buf) {
             break p;
@@ -51,7 +98,7 @@ pub fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
         if buf.len() > MAX_HEAD {
             return Err(invalid("request head too large"));
         }
-        let n = stream.read(&mut tmp)?;
+        let n = read_some(stream, &mut tmp, &mut deadline, budget)?;
         if n == 0 {
             return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed mid-request"));
         }
@@ -77,7 +124,7 @@ pub fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
     }
     let mut body = buf[head_end + 4..].to_vec();
     while body.len() < content_length {
-        let n = stream.read(&mut tmp)?;
+        let n = read_some(stream, &mut tmp, &mut deadline, budget)?;
         if n == 0 {
             return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed mid-body"));
         }
@@ -87,13 +134,21 @@ pub fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
     Ok(Request { method, path, headers, body })
 }
 
-/// `(status, reason, retryable)` for a [`ServeError`] — the daemon's
-/// single error→wire mapping. Retryable errors carry `Retry-After`.
+/// [`read_request_within`] with a generous default budget, for callers
+/// (tests, tools) that don't thread a config through.
+pub fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
+    read_request_within(stream, Duration::from_secs(60))
+}
+
+/// `(status, reason)` for a [`ServeError`] — the daemon's single
+/// error→wire mapping. Retryable errors carry `Retry-After`.
 pub fn status_for(e: &ServeError) -> (u16, &'static str) {
     match e {
         ServeError::QueueFull { .. } => (429, "Too Many Requests"),
+        ServeError::RateLimited { .. } => (429, "Too Many Requests"),
         ServeError::PoolExhausted { .. } => (503, "Service Unavailable"),
         ServeError::Draining => (503, "Service Unavailable"),
+        ServeError::EngineRestarting => (503, "Service Unavailable"),
         ServeError::RequestTooLarge { .. } => (413, "Payload Too Large"),
         ServeError::Invalid(_) => (400, "Bad Request"),
         ServeError::Deadline => (504, "Gateway Timeout"),
@@ -103,7 +158,9 @@ pub fn status_for(e: &ServeError) -> (u16, &'static str) {
 }
 
 /// Write a complete response and flush. `extra` headers are emitted
-/// verbatim after the standard set.
+/// verbatim after the standard set. `keep` picks the `Connection`
+/// header — the caller owns the keep-alive decision (config AND client
+/// AND drain state), this just puts it on the wire.
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
@@ -111,9 +168,11 @@ pub fn write_response(
     content_type: &str,
     extra: &[(&str, String)],
     body: &[u8],
+    keep: bool,
 ) -> io::Result<()> {
+    let conn = if keep { "keep-alive" } else { "close" };
     let mut head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n",
         body.len()
     );
     for (k, v) in extra {
@@ -129,22 +188,30 @@ pub fn write_response(
 }
 
 /// Map a [`ServeError`] onto the wire: status from [`status_for`], a
-/// JSON body with the error kind/message, and `Retry-After: {retry_s}`
-/// on the retryable (backpressure) class. The daemon derives `retry_s`
-/// from the observed queue-wait distribution (p50 drain estimate,
-/// clamped to `[1, 60]`); callers without telemetry pass `1`.
-pub fn write_error(stream: &mut TcpStream, e: &ServeError, retry_s: u64) -> io::Result<()> {
+/// JSON body with the error kind/message, and `Retry-After` on the
+/// retryable (backpressure) class. Rate-limit sheds carry their own
+/// deficit-derived wait ([`ServeError::RateLimited`]); the rest use
+/// `retry_s`, which the daemon derives from the observed queue-wait
+/// distribution (p50 drain estimate, clamped to `[1, 60]`) — callers
+/// without telemetry pass `1`.
+pub fn write_error(stream: &mut TcpStream, e: &ServeError, retry_s: u64, keep: bool) -> io::Result<()> {
     let (status, reason) = status_for(e);
+    let retry_after = match e {
+        ServeError::RateLimited { retry_after_s } => Some(*retry_after_s),
+        _ if e.retryable() => Some(retry_s),
+        _ => None,
+    };
     let retry: Vec<(&str, String)> =
-        if e.retryable() { vec![("Retry-After", retry_s.to_string())] } else { Vec::new() };
+        retry_after.map(|s| vec![("Retry-After", s.to_string())]).unwrap_or_default();
     let body = format!("{{\"error\": \"{}\", \"message\": \"{}\"}}", e.kind(), e.to_string().replace('"', "'"));
-    write_response(stream, status, reason, "application/json", &retry, body.as_bytes())
+    write_response(stream, status, reason, "application/json", &retry, body.as_bytes(), keep)
 }
 
 /// Start a chunked (streaming) response.
-pub fn write_chunked_head(stream: &mut TcpStream, content_type: &str) -> io::Result<()> {
+pub fn write_chunked_head(stream: &mut TcpStream, content_type: &str, keep: bool) -> io::Result<()> {
+    let conn = if keep { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: {conn}\r\n\r\n"
     );
     stream.write_all(head.as_bytes())?;
     stream.flush()
@@ -210,9 +277,42 @@ mod tests {
     }
 
     #[test]
+    fn keep_alive_is_the_default_and_close_opts_out() {
+        let keep = roundtrip(b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert!(wants_keep_alive(&keep), "HTTP/1.1 defaults to persistent");
+        let close = roundtrip(b"GET /stats HTTP/1.1\r\nConnection: Close\r\n\r\n").unwrap();
+        assert!(!wants_keep_alive(&close), "explicit close wins, case-insensitively");
+        let ka = roundtrip(b"GET /stats HTTP/1.1\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(wants_keep_alive(&ka));
+    }
+
+    #[test]
+    fn slow_request_exceeds_read_budget() {
+        // slow-loris: the head starts arriving, then stalls past the
+        // budget — the parser must give up instead of waiting forever
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(b"GET /stats HTTP/1.1\r\n").unwrap();
+            std::thread::sleep(Duration::from_millis(400));
+            let _ = c.write_all(b"Host: x\r\n\r\n"); // peer may be gone already
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let err = read_request_within(&mut s, Duration::from_millis(100)).unwrap_err();
+        assert!(
+            matches!(err.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock),
+            "budget exhaustion surfaces as a timeout: {err:?}"
+        );
+        t.join().unwrap();
+    }
+
+    #[test]
     fn error_mapping_covers_backpressure_semantics() {
         assert_eq!(status_for(&ServeError::QueueFull { cap: 1 }).0, 429);
+        assert_eq!(status_for(&ServeError::RateLimited { retry_after_s: 7 }).0, 429);
         assert_eq!(status_for(&ServeError::Draining).0, 503);
+        assert_eq!(status_for(&ServeError::EngineRestarting).0, 503);
         assert_eq!(status_for(&ServeError::RequestTooLarge { needed_blocks: 9, pool_blocks: 8 }).0, 413);
         assert_eq!(status_for(&ServeError::Deadline).0, 504);
         assert_eq!(status_for(&ServeError::Invalid("x".into())).0, 400);

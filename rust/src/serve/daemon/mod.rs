@@ -10,9 +10,33 @@
 //!   the request, so backpressure ([`ServeError::QueueFull`] and
 //!   friends) reaches the client synchronously.
 //! * [`Daemon`] — the TCP front-end: an accept loop that spawns one
-//!   detached thread per connection, a hand-rolled HTTP/1.1 layer
-//!   (`http.rs`), deterministic fault injection (`fault.rs`) and
-//!   SIGTERM-driven graceful drain (`signal.rs`).
+//!   detached thread per connection, a hand-rolled HTTP/1.1 layer with
+//!   keep-alive (`http.rs`), deterministic fault injection (`fault.rs`)
+//!   and SIGTERM-driven graceful drain (`signal.rs`).
+//!
+//! Overload resilience (PR 9):
+//!
+//! * **Priorities & rate limits** — every tenant carries a
+//!   [`TenantPolicy`] (admission class `high`/`normal`/`low` plus a
+//!   token-bucket rate limit over *generated* tokens). The engine's
+//!   scheduler admits by weighted priority with a starvation bound;
+//!   a high-class arrival at a full queue evicts the newest strictly
+//!   lower-class entry (its owner sees a retryable 429). A bucket that
+//!   can't cover a request's worst-case generation sheds it with
+//!   [`ServeError::RateLimited`] and a `Retry-After` derived from the
+//!   bucket deficit.
+//! * **Live config reload** — the hot-reloadable knobs live in a
+//!   [`RuntimeConfig`] inside a [`ConfigCell`]; SIGHUP or an edit to
+//!   the `--config` file swaps a validated snapshot atomically
+//!   (invalid files are logged and dropped, the old config stays).
+//!   In-flight streams never notice a reload.
+//! * **Engine supervision** — the engine thread runs its serve loop
+//!   under `catch_unwind`. On a panic (or step error) the supervisor
+//!   fails every in-flight request with the retryable
+//!   [`ServeError::EngineRestarting`] (503), rebuilds a fresh engine
+//!   from the dead one's read-only model, bumps
+//!   `kurtail_engine_restarts_total`, and keeps serving — request ids
+//!   keep counting across incarnations.
 //!
 //! The daemon adds *no* model math of its own — completed token streams
 //! are bitwise identical to an in-process [`Engine::run`] over the same
@@ -37,13 +61,17 @@
 //! and derives `Retry-After` on backpressure responses from the
 //! observed queue-wait p50 instead of a constant.
 
+pub mod config;
 pub mod fault;
 pub mod http;
+pub mod ratelimit;
 pub mod signal;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -63,8 +91,10 @@ use crate::util::Rng;
 
 use super::engine::{Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
 use super::error::ServeError;
+use config::{ConfigCell, ConfigWatcher, RuntimeConfig, TenantPolicy};
 use fault::{FaultClock, FaultSpec};
 use http::Request;
+use ratelimit::TokenBucket;
 
 // ---------------------------------------------------------------- host
 
@@ -114,6 +144,10 @@ pub struct HostConfig {
     pub per_tenant_cap: usize,
     /// Deterministic fault injection (`KURTAIL_FAULT`).
     pub fault: FaultSpec,
+    /// Tenant policies (priority class + rate limits) for hosts spawned
+    /// without a daemon/config file (benches, tests). Absent tenants
+    /// get [`TenantPolicy::default`].
+    pub tenants: BTreeMap<String, TenantPolicy>,
 }
 
 /// Clone-able handle to the engine thread.
@@ -177,6 +211,12 @@ pub struct StatsSnapshot {
     pub scratch_rows: usize,
     pub panel_cache_bytes: usize,
     pub draining: bool,
+    /// Runtime-config generation from the live-reload cell (starts at
+    /// 1; every applied reload bumps it — the smoke test polls this).
+    pub config_generation: u64,
+    /// Engine incarnations rebuilt by the supervisor after a panic or
+    /// step failure.
+    pub engine_restarts: u64,
     pub uptime_s: f64,
     pub tok_s: f64,
     pub latency: LatencySnapshot,
@@ -253,6 +293,8 @@ impl StatsSnapshot {
             ("scratch_rows", u(self.scratch_rows)),
             ("panel_cache_bytes", u(self.panel_cache_bytes)),
             ("draining", Json::Bool(self.draining)),
+            ("config_generation", n(self.config_generation)),
+            ("engine_restarts", n(self.engine_restarts)),
             ("uptime_s", json::num(self.uptime_s)),
             ("tok_s", json::num(self.tok_s)),
             (
@@ -295,6 +337,10 @@ fn snapshot(engine: &Engine, started: Instant) -> StatsSnapshot {
         scratch_rows: engine.scratch_rows(),
         panel_cache_bytes: engine.panel_cache_bytes(),
         draining: engine.draining(),
+        // both owned by the engine thread's supervisor state, patched
+        // in by the Cmd::Stats handler
+        config_generation: 0,
+        engine_restarts: 0,
         uptime_s: uptime,
         tok_s: if uptime > 0.0 { toks / uptime } else { 0.0 },
         latency: LatencySnapshot::of(engine.obs()),
@@ -314,12 +360,48 @@ fn retry_after_s(eobs: &EngineObs) -> u64 {
 
 /// Spawn the engine thread and return its [`Host`] handle (public so
 /// the serve bench can drive the host without a socket in the path).
+/// Hosts spawned this way carry a fixed config (no reload) and no
+/// rebuild recipe: an engine failure fails everything and exits, the
+/// pre-supervision behaviour.
 pub fn spawn_host(engine: Engine, cfg: HostConfig) -> (Host, JoinHandle<()>) {
+    let cell = Arc::new(ConfigCell::new(RuntimeConfig {
+        per_tenant_cap: cfg.per_tenant_cap,
+        tenants: cfg.tenants.clone(),
+        fault: cfg.fault.clone(),
+        ..RuntimeConfig::default()
+    }));
+    spawn_host_with(engine, cell, None)
+}
+
+/// Spawn a host against a caller-held [`ConfigCell`]: the caller keeps
+/// installing new configs and the host picks them up live. Used by the
+/// reload property/integration tests; no supervision (like
+/// [`spawn_host`], an engine failure fails everything and exits).
+pub fn spawn_host_reloadable(engine: Engine, cell: Arc<ConfigCell>) -> (Host, JoinHandle<()>) {
+    spawn_host_with(engine, cell, None)
+}
+
+/// Rebuild recipe for the supervised path ([`Daemon::spawn`]): with it,
+/// an engine panic or step error is survivable — in-flight requests
+/// fail with the retryable [`ServeError::EngineRestarting`] and a fresh
+/// engine is built from the dead one's (read-only, already-warmed)
+/// model.
+struct Supervise {
+    scfg: ServeConfig,
+    /// `kurtail_engine_restarts_total`; `None` with obs off.
+    restarts: Option<Arc<Counter>>,
+}
+
+fn spawn_host_with(
+    engine: Engine,
+    cell: Arc<ConfigCell>,
+    supervise: Option<Supervise>,
+) -> (Host, JoinHandle<()>) {
     let (tx, rx) = mpsc::channel();
     let started = Instant::now();
     let handle = thread::Builder::new()
         .name("kurtail-engine".into())
-        .spawn(move || run_host(engine, cfg, rx, started))
+        .spawn(move || run_supervisor(engine, cell, supervise, rx, started))
         .expect("spawn engine thread");
     (Host { tx }, handle)
 }
@@ -328,13 +410,21 @@ struct Tracked {
     events: Sender<Event>,
     tenant: String,
     deadline: Option<Instant>,
+    /// Tokens charged to the tenant's bucket at admission (`0` when the
+    /// tenant has no rate limit); the unused remainder is refunded when
+    /// the request finishes.
+    charged: f64,
+    /// Tokens actually streamed so far — the refund basis when the
+    /// request ends without a completion.
+    sent: usize,
 }
 
-/// The three per-tenant series (`kurtail_tenant_*_total{tenant=...}`).
+/// The per-tenant series (`kurtail_tenant_*_total{tenant=...}`).
 struct TenantCounters {
     requests: Arc<Counter>,
     shed: Arc<Counter>,
     canceled: Arc<Counter>,
+    rate_limited: Arc<Counter>,
 }
 
 /// Daemon-side telemetry, owned by the engine thread: per-tenant
@@ -371,6 +461,11 @@ impl DaemonObs {
                     "Requests canceled per tenant (client cancel or deadline)",
                     &[("tenant", tenant)],
                 ),
+                rate_limited: self.registry.counter(
+                    "kurtail_tenant_rate_limited_total",
+                    "Requests shed per tenant by the token-bucket rate limit",
+                    &[("tenant", tenant)],
+                ),
             };
             self.tenants.insert(tenant.to_string(), c);
         }
@@ -395,6 +490,9 @@ impl DaemonObs {
             t.requests.inc();
             if is_shed {
                 t.shed.inc();
+            }
+            if matches!(e, ServeError::RateLimited { .. }) {
+                t.rate_limited.inc();
             }
         }
         obs::log::warn(
@@ -436,39 +534,181 @@ impl DaemonObs {
             Event::Token(_) => {}
         }
     }
-}
 
-fn finish(
-    tracked: &mut HashMap<usize, Tracked>,
-    tenants: &mut HashMap<String, usize>,
-    dobs: &mut DaemonObs,
-    id: usize,
-    ev: Event,
-) {
-    if let Some(t) = tracked.remove(&id) {
-        if let Some(n) = tenants.get_mut(&t.tenant) {
-            *n = n.saturating_sub(1);
+    /// An already-accepted request evicted from the queue by a
+    /// higher-class arrival: counts toward the tenant's shed series
+    /// (it was counted in `requests` at acceptance).
+    fn evicted(&mut self, tenant: &str) {
+        if self.enabled {
+            self.tenant(tenant).shed.inc();
         }
-        dobs.finished(id, &t.tenant, &ev);
-        // the owner may have hung up already; that's its problem
-        let _ = t.events.send(ev);
     }
 }
 
-/// The engine thread: single owner of the [`Engine`], processing
-/// commands between steps. Exits when draining and idle (the clean
-/// path) or when every [`Host`] is gone and no work remains.
-fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Instant) {
-    let mut clock = FaultClock::new(cfg.fault.clone());
-    let max_blocks = engine.pool().max_blocks;
-    let mut tracked: HashMap<usize, Tracked> = HashMap::new();
-    let mut tenants: HashMap<String, usize> = HashMap::new();
-    let mut dobs = DaemonObs::new(engine.obs());
-    let mut disconnects: Vec<usize> = Vec::new();
+/// Engine-thread bookkeeping that must survive an engine restart: who
+/// is in flight, per-tenant in-flight counts and token buckets, the
+/// daemon-side telemetry and the restart tally.
+struct HostState {
+    tracked: HashMap<usize, Tracked>,
+    tenants: HashMap<String, usize>,
+    buckets: HashMap<String, TokenBucket>,
+    dobs: DaemonObs,
+    restarts: u64,
+}
+
+impl HostState {
+    fn new(eobs: &EngineObs) -> Self {
+        Self {
+            tracked: HashMap::new(),
+            tenants: HashMap::new(),
+            buckets: HashMap::new(),
+            dobs: DaemonObs::new(eobs),
+            restarts: 0,
+        }
+    }
+
+    /// Retire one request: refund the unused bucket charge, update the
+    /// telemetry and hand the terminal event to its owner.
+    fn finish(&mut self, id: usize, ev: Event) {
+        if let Some(t) = self.tracked.remove(&id) {
+            if let Some(n) = self.tenants.get_mut(&t.tenant) {
+                *n = n.saturating_sub(1);
+            }
+            if t.charged > 0.0 {
+                let used = match &ev {
+                    Event::Done(c) => (c.tokens.len() - c.prompt_len) as f64,
+                    _ => t.sent as f64,
+                };
+                if let Some(b) = self.buckets.get_mut(&t.tenant) {
+                    b.refund((t.charged - used).max(0.0));
+                }
+            }
+            self.dobs.finished(id, &t.tenant, &ev);
+            // the owner may have hung up already; that's its problem
+            let _ = t.events.send(ev);
+        }
+    }
+
+    /// Fail every in-flight request with (a clone of) `e`.
+    fn fail_all(&mut self, e: &ServeError) {
+        let ids: Vec<usize> = self.tracked.keys().copied().collect();
+        for id in ids {
+            self.finish(id, Event::Failed(e.clone()));
+        }
+    }
+}
+
+/// Why one engine incarnation's serve loop returned.
+enum HostExit {
+    /// Drained to idle, or every [`Host`] handle is gone: clean exit.
+    Done,
+    /// `Engine::step_with` reported an error; the supervisor decides
+    /// whether to rebuild or fail out.
+    EngineFailed(String),
+}
+
+/// The engine thread: a supervisor around [`run_host_once`]. The serve
+/// loop runs under `catch_unwind`; on a panic or step error the
+/// supervisor fails every in-flight request with the retryable
+/// [`ServeError::EngineRestarting`], rebuilds a fresh engine from the
+/// dead one's read-only model (when it has a [`Supervise`] recipe) and
+/// keeps serving. Request ids continue across incarnations so a stale
+/// cancel can never hit a new request.
+fn run_supervisor(
+    mut engine: Engine,
+    cell: Arc<ConfigCell>,
+    supervise: Option<Supervise>,
+    rx: Receiver<Cmd>,
+    started: Instant,
+) {
+    let mut st = HostState::new(engine.obs());
+    let mut clock = FaultClock::new(cell.current().fault.clone());
+    let eobs = engine.obs().clone();
     loop {
+        let exit = catch_unwind(AssertUnwindSafe(|| {
+            run_host_once(&mut engine, &cell, &mut st, &mut clock, &rx, started)
+        }));
+        let msg = match exit {
+            Ok(HostExit::Done) => break,
+            Ok(HostExit::EngineFailed(msg)) => msg,
+            Err(panic) => {
+                let what = panic
+                    .downcast_ref::<&'static str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".into());
+                format!("engine panicked: {what}")
+            }
+        };
+        let Some(sup) = &supervise else {
+            // no rebuild recipe (bare spawn_host): fail in-flight and
+            // exit; the accept side then reports Draining
+            obs::log::error("engine_failed", &[("error", LogValue::Str(&msg))]);
+            st.fail_all(&ServeError::Internal(msg));
+            return;
+        };
+        // supervised: shed the in-flight set with a retryable signal,
+        // rebuild from the dead engine's model, keep serving
+        st.restarts += 1;
+        if let Some(c) = &sup.restarts {
+            c.inc();
+        }
+        obs::log::error(
+            "engine_restarting",
+            &[("error", LogValue::Str(&msg)), ("restarts", LogValue::U64(st.restarts))],
+        );
+        st.fail_all(&ServeError::EngineRestarting);
+        let draining = engine.draining();
+        let next_id = engine.next_id();
+        match Engine::with_obs(engine.model().clone(), &sup.scfg, eobs.clone()) {
+            Ok(mut fresh) => {
+                fresh.resume_ids_from(next_id);
+                if draining {
+                    fresh.begin_drain();
+                }
+                engine = fresh;
+            }
+            Err(e) => {
+                let err = format!("{e:#}");
+                obs::log::error("engine_rebuild_failed", &[("error", LogValue::Str(&err))]);
+                return;
+            }
+        }
+    }
+    // clean exit: whatever is still tracked gets the drain signal
+    st.fail_all(&ServeError::Draining);
+}
+
+/// One engine incarnation's serve loop: single owner of the [`Engine`],
+/// processing commands between steps. Returns when draining and idle
+/// (the clean path), when every [`Host`] is gone and no work remains,
+/// or when a step fails.
+fn run_host_once(
+    engine: &mut Engine,
+    cell: &ConfigCell,
+    st: &mut HostState,
+    clock: &mut FaultClock,
+    rx: &Receiver<Cmd>,
+    started: Instant,
+) -> HostExit {
+    let max_blocks = engine.pool().max_blocks;
+    let mut disconnects: Vec<usize> = Vec::new();
+    let mut seen_gen = 0u64;
+    loop {
+        // pick up config reloads: swap the fault timeline only when the
+        // spec actually changed (a reload that leaves `fault` alone must
+        // not re-seed or re-arm the clock mid-run)
+        let gen = cell.generation();
+        if gen != seen_gen {
+            seen_gen = gen;
+            let fault = cell.current().fault.clone();
+            if &fault != clock.spec() {
+                *clock = FaultClock::new(fault);
+            }
+        }
         let idle = engine.queued() == 0 && engine.live_lanes() == 0;
         if idle && engine.draining() {
-            break;
+            return HostExit::Done;
         }
         // gather commands: park briefly when idle, never block when
         // lanes are live (steps must keep flowing)
@@ -477,7 +717,7 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
             match rx.recv_timeout(Duration::from_millis(10)) {
                 Ok(c) => cmds.push(c),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return HostExit::Done,
             }
         }
         while let Ok(c) = rx.try_recv() {
@@ -486,55 +726,46 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
         for c in cmds {
             match c {
                 Cmd::Submit(req, reply) => {
-                    let SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events } = req;
-                    let cap = cfg.per_tenant_cap;
-                    let res = if cap > 0 && tenants.get(&tenant).copied().unwrap_or(0) >= cap {
-                        // mirror both shed counters (EngineStats and the
-                        // obs series) exactly as engine-side sheds do, so
-                        // /metrics reconciles with /stats
-                        engine.stats.shed += 1;
-                        if engine.obs().enabled {
-                            engine.obs().requests_shed.inc();
-                        }
-                        Err(ServeError::QueueFull { cap })
-                    } else {
-                        engine.submit_tokens_stop(tokens, n_tokens, temp, seed, stop)
-                    };
-                    match &res {
-                        Ok(id) => {
-                            dobs.accepted(*id, &tenant);
-                            *tenants.entry(tenant.clone()).or_insert(0) += 1;
-                            tracked.insert(*id, Tracked { events, tenant, deadline });
-                        }
-                        Err(e) => dobs.rejected(&tenant, e),
-                    }
-                    let _ = reply.send(res);
+                    let _ = reply.send(admit(engine, cell, st, req));
                 }
                 Cmd::Cancel(id) => {
                     if engine.cancel(id) {
-                        finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Canceled));
+                        st.finish(id, Event::Failed(ServeError::Canceled));
                     }
                 }
                 Cmd::Drain => {
                     for id in engine.begin_drain() {
-                        finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Draining));
+                        st.finish(id, Event::Failed(ServeError::Draining));
                     }
                 }
                 Cmd::Stats(reply) => {
-                    let _ = reply.send(snapshot(&engine, started));
+                    let mut s = snapshot(engine, started);
+                    s.config_generation = cell.generation();
+                    s.engine_restarts = st.restarts;
+                    let _ = reply.send(s);
                 }
             }
         }
+        // a higher-class arrival may have evicted queued lower-class
+        // requests at the bound: their owners get the shed signal now
+        for id in engine.take_preempted() {
+            if let Some(t) = st.tracked.get(&id) {
+                let tenant = t.tenant.clone();
+                st.dobs.evicted(&tenant);
+            }
+            st.finish(id, Event::Failed(ServeError::QueueFull { cap: engine.queue_cap() }));
+        }
         // deadline sweep: cancel overdue requests wherever they are
         let now = Instant::now();
-        let overdue: Vec<usize> = tracked
+        let overdue: Vec<usize> = st
+            .tracked
             .iter()
             .filter(|(_, t)| t.deadline.is_some_and(|d| now >= d))
             .map(|(&id, _)| id)
             .collect();
         for id in overdue {
             engine.cancel(id);
-            finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Deadline));
+            st.finish(id, Event::Failed(ServeError::Deadline));
         }
         if engine.queued() == 0 && engine.live_lanes() == 0 {
             continue;
@@ -546,42 +777,110 @@ fn run_host(mut engine: Engine, cfg: HostConfig, rx: Receiver<Cmd>, started: Ins
             if let Some(d) = clock.step_delay() {
                 thread::sleep(d);
             }
+            if clock.engine_panic() {
+                panic!("injected engine_panic fault");
+            }
         }
+        let tracked = &mut st.tracked;
         let step = engine.step_with(|id, tok| {
-            if let Some(t) = tracked.get(&id) {
+            if let Some(t) = tracked.get_mut(&id) {
                 if t.events.send(Event::Token(tok)).is_err() {
                     disconnects.push(id);
+                } else {
+                    t.sent += 1;
                 }
             }
         });
         if let Err(e) = step {
-            // the engine is poisoned — fail every in-flight request and
-            // exit; the daemon's accept side then reports Draining
-            let msg = format!("engine step failed: {e:#}");
-            obs::log::error("engine_failed", &[("error", LogValue::Str(&msg))]);
-            for (id, t) in tracked.drain() {
-                let ev = Event::Failed(ServeError::Internal(msg.clone()));
-                dobs.finished(id, &t.tenant, &ev);
-                let _ = t.events.send(ev);
-            }
-            return;
+            return HostExit::EngineFailed(format!("engine step failed: {e:#}"));
         }
         for c in engine.take_completions() {
             let id = c.id;
-            finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Done(c));
+            st.finish(id, Event::Done(c));
         }
         // a dead Event receiver means the client hung up: reclaim the
         // lane's blocks now instead of decoding into the void
         for id in std::mem::take(&mut disconnects) {
             engine.cancel(id);
-            finish(&mut tracked, &mut tenants, &mut dobs, id, Event::Failed(ServeError::Canceled));
+            st.finish(id, Event::Failed(ServeError::Canceled));
         }
     }
-    for (id, t) in tracked.drain() {
-        let ev = Event::Failed(ServeError::Draining);
-        dobs.finished(id, &t.tenant, &ev);
-        let _ = t.events.send(ev);
+}
+
+/// One admission decision against the current config snapshot: tenant
+/// in-flight cap, then the token bucket, then the engine's priority
+/// queue. The bucket is charged the full `n_tokens` upfront (worst
+/// case, mirroring the engine's conservative KV reservation); the
+/// unused remainder comes back when the request finishes.
+fn admit(
+    engine: &mut Engine,
+    cell: &ConfigCell,
+    st: &mut HostState,
+    req: SubmitReq,
+) -> Result<usize, ServeError> {
+    let SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events } = req;
+    let policy = cell.current().policy(&tenant);
+    let mut charged = 0.0f64;
+    let res = if policy.cap > 0 && st.tenants.get(&tenant).copied().unwrap_or(0) >= policy.cap {
+        shed_mirror(engine);
+        Err(ServeError::QueueFull { cap: policy.cap })
+    } else if let Err(retry_after_s) = charge_bucket(st, &policy, &tenant, n_tokens, &mut charged) {
+        shed_mirror(engine);
+        Err(ServeError::RateLimited { retry_after_s })
+    } else {
+        let r = engine.submit_tokens_prio(tokens, n_tokens, temp, seed, stop, policy.priority);
+        if r.is_err() && charged > 0.0 {
+            if let Some(b) = st.buckets.get_mut(&tenant) {
+                b.refund(charged);
+            }
+        }
+        r
+    };
+    match &res {
+        Ok(id) => {
+            st.dobs.accepted(*id, &tenant);
+            *st.tenants.entry(tenant.clone()).or_insert(0) += 1;
+            st.tracked.insert(*id, Tracked { events, tenant, deadline, charged, sent: 0 });
+        }
+        Err(e) => st.dobs.rejected(&tenant, e),
     }
+    res
+}
+
+/// Mirror an admission-layer shed into the engine's counters (exactly
+/// as engine-side sheds do) so `/metrics` reconciles with `/stats`.
+fn shed_mirror(engine: &mut Engine) {
+    engine.stats.shed += 1;
+    if engine.obs().enabled {
+        engine.obs().requests_shed.inc();
+    }
+}
+
+/// Charge the tenant's token bucket for the worst-case generation,
+/// creating the bucket on first use and reconfiguring it when a live
+/// reload changed the tenant's limit. `Err(retry_after_s)` when the
+/// bucket can't cover the request.
+fn charge_bucket(
+    st: &mut HostState,
+    policy: &TenantPolicy,
+    tenant: &str,
+    n_tokens: usize,
+    charged: &mut f64,
+) -> Result<(), u64> {
+    if !policy.rate_limited() {
+        return Ok(());
+    }
+    let now = Instant::now();
+    let bucket = st
+        .buckets
+        .entry(tenant.to_string())
+        .or_insert_with(|| TokenBucket::new(policy.rate_tokens_per_s, policy.effective_burst(), now));
+    if bucket.rate() != policy.rate_tokens_per_s || bucket.burst() != policy.effective_burst() {
+        bucket.reconfigure(policy.rate_tokens_per_s, policy.effective_burst(), now);
+    }
+    bucket.try_take(n_tokens as f64, now)?;
+    *charged = n_tokens as f64;
+    Ok(())
 }
 
 // -------------------------------------------------------------- daemon
@@ -601,6 +900,13 @@ pub struct DaemonConfig {
     pub default_deadline_ms: u64,
     pub serve: ServeConfig,
     pub fault: FaultSpec,
+    /// Tenant policies for the file-less path (tests/benches construct
+    /// these directly); with a config file the file's `tenants` win.
+    pub tenants: BTreeMap<String, TenantPolicy>,
+    /// Optional runtime-config file (`--config`): loaded at startup —
+    /// it then owns the runtime knobs — and live-reloaded on SIGHUP or
+    /// file edit.
+    pub config_path: Option<PathBuf>,
 }
 
 impl Default for DaemonConfig {
@@ -612,6 +918,8 @@ impl Default for DaemonConfig {
             default_deadline_ms: 0,
             serve: ServeConfig::default(),
             fault: FaultSpec::none(),
+            tenants: BTreeMap::new(),
+            config_path: None,
         }
     }
 }
@@ -668,12 +976,59 @@ impl BuildInfo {
 struct ConnShared {
     host: Host,
     draining: Arc<AtomicBool>,
-    fault: FaultSpec,
-    deadline_ms: u64,
+    /// Live runtime config: keep-alive windows, read budgets, default
+    /// deadlines and the fault spec are re-read per request so a reload
+    /// reaches new work immediately (never in-flight streams).
+    config: Arc<ConfigCell>,
     /// Engine telemetry handle: `/metrics` renders its registry, error
     /// responses derive `Retry-After` from its queue-wait histogram.
     obs: EngineObs,
     build: Arc<BuildInfo>,
+}
+
+/// Live-reload driver, polled from the accept loop: applies a pending
+/// SIGHUP immediately, otherwise checks the config file's (mtime, len)
+/// stamp at most every 300 ms. A config that fails validation is
+/// logged and dropped — the old config stays live.
+struct Reloader {
+    cell: Arc<ConfigCell>,
+    watcher: Option<ConfigWatcher>,
+    reloads: Option<Arc<Counter>>,
+    last_poll: Instant,
+}
+
+impl Reloader {
+    const POLL_EVERY: Duration = Duration::from_millis(300);
+
+    fn tick(&mut self) {
+        let Some(w) = self.watcher.as_mut() else { return };
+        let result = if signal::take_reload() {
+            Some(w.force())
+        } else if self.last_poll.elapsed() >= Self::POLL_EVERY {
+            self.last_poll = Instant::now();
+            w.poll()
+        } else {
+            None
+        };
+        match result {
+            None => {}
+            Some(Ok(cfg)) => {
+                obs::log::set_log_format(cfg.log);
+                let generation = self.cell.install(cfg);
+                if let Some(c) = &self.reloads {
+                    c.inc();
+                }
+                let path = w.path().display().to_string();
+                obs::log::info(
+                    "config_reloaded",
+                    &[("path", LogValue::Str(&path)), ("generation", LogValue::U64(generation))],
+                );
+            }
+            Some(Err(e)) => {
+                obs::log::warn("config_reload_failed", &[("error", LogValue::Str(&e))]);
+            }
+        }
+    }
 }
 
 /// The running daemon: engine thread + accept thread.
@@ -690,11 +1045,50 @@ impl Daemon {
     pub fn spawn(model: ServeModel, cfg: &DaemonConfig) -> Result<Self> {
         let mut scfg = cfg.serve.clone();
         scfg.queue_cap = cfg.queue_cap;
+        // resolve the initial runtime config: a config file wins
+        // wholesale when present (it is the operator's live source of
+        // truth), with the CLI/env fault spec backstopping a file that
+        // doesn't mention faults; without a file the CLI knobs seed a
+        // fixed-but-still-swappable cell
+        let mut runtime = RuntimeConfig {
+            per_tenant_cap: cfg.per_tenant_cap,
+            default_deadline_ms: cfg.default_deadline_ms,
+            tenants: cfg.tenants.clone(),
+            fault: cfg.fault.clone(),
+            ..RuntimeConfig::default()
+        };
+        let mut watcher = None;
+        if let Some(path) = &cfg.config_path {
+            runtime = RuntimeConfig::from_file(path).map_err(|e| anyhow::anyhow!(e))?;
+            if runtime.fault.is_none() && !cfg.fault.is_none() {
+                runtime.fault = cfg.fault.clone();
+            }
+            watcher = Some(ConfigWatcher::new(path.clone()));
+            // SIGHUP keeps its default disposition (terminate) unless
+            // there is actually a file to re-read
+            signal::install_reload();
+        }
+        obs::log::set_log_format(runtime.log);
+        let cell = Arc::new(ConfigCell::new(runtime));
         let engine = Engine::new(model, &scfg)?;
         let obs = engine.obs().clone();
         let build = Arc::new(BuildInfo::from_engine(&engine));
+        let restarts = obs.enabled.then(|| {
+            obs.registry.counter(
+                "kurtail_engine_restarts_total",
+                "Engine incarnations rebuilt by the supervisor after a panic or step failure",
+                &[],
+            )
+        });
+        let reloads = obs.enabled.then(|| {
+            obs.registry.counter(
+                "kurtail_config_reloads_total",
+                "Runtime config reloads applied (SIGHUP or file edit)",
+                &[],
+            )
+        });
         let (host, engine_thread) =
-            spawn_host(engine, HostConfig { per_tenant_cap: cfg.per_tenant_cap, fault: cfg.fault.clone() });
+            spawn_host_with(engine, Arc::clone(&cell), Some(Supervise { scfg, restarts }));
         let listener = TcpListener::bind(cfg.addr.as_str())?;
         let addr = listener.local_addr()?;
         obs::log::info(
@@ -709,14 +1103,16 @@ impl Daemon {
             let shared = ConnShared {
                 host: host.clone(),
                 draining: Arc::clone(&draining),
-                fault: cfg.fault.clone(),
-                deadline_ms: cfg.default_deadline_ms,
+                config: Arc::clone(&cell),
                 obs,
                 build,
             };
             let stopped = Arc::clone(&stopped);
+            let mut reloader =
+                Reloader { cell: Arc::clone(&cell), watcher, reloads, last_poll: Instant::now() };
             thread::Builder::new().name("kurtail-accept".into()).spawn(move || {
                 while !stopped.load(Ordering::SeqCst) {
+                    reloader.tick();
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let shared = shared.clone();
@@ -779,19 +1175,39 @@ impl Daemon {
 
 // --------------------------------------------------------- connections
 
+/// Serve one connection: a keep-alive loop with an idle window, a
+/// per-request read budget (slow-loris guard) and a bounded request
+/// count, all read from the live config. `Connection: close` from the
+/// client, keep-alive disabled, the request bound, or a drain all fall
+/// back to the one-shot close.
 fn handle_conn(mut stream: TcpStream, shared: ConnShared) {
     // accepted sockets inherit non-blocking from the listener on some
     // platforms; request handling wants plain blocking reads
     let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
-    let req = match http::read_request(&mut stream) {
-        Ok(r) => r,
-        Err(_) => return, // hung-up or garbage client; nothing to answer
-    };
-    let _ = route(&mut stream, &req, &shared);
+    let mut served = 0usize;
+    loop {
+        let rc = shared.config.current();
+        // the socket read timeout is the idle window: how long we wait
+        // for the *first* byte of the next request
+        let idle_ms = if rc.keep_alive_ms > 0 { rc.keep_alive_ms } else { 60_000 };
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(idle_ms)));
+        let budget = Duration::from_millis(rc.read_budget_ms.max(1));
+        let req = match http::read_request_within(&mut stream, budget) {
+            Ok(r) => r,
+            Err(_) => return, // idle timeout, hang-up, slow-loris or garbage
+        };
+        served += 1;
+        let keep = rc.keep_alive_ms > 0
+            && served < rc.max_conn_requests.max(1)
+            && !shared.draining.load(Ordering::SeqCst)
+            && http::wants_keep_alive(&req);
+        if route(&mut stream, &req, &shared, keep).is_err() || !keep {
+            return;
+        }
+    }
 }
 
-fn route(stream: &mut TcpStream, req: &Request, sh: &ConnShared) -> io::Result<()> {
+fn route(stream: &mut TcpStream, req: &Request, sh: &ConnShared, keep: bool) -> io::Result<()> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let (status, reason, state) = if sh.draining.load(Ordering::SeqCst) {
@@ -800,27 +1216,31 @@ fn route(stream: &mut TcpStream, req: &Request, sh: &ConnShared) -> io::Result<(
                 (200, "OK", "ok")
             };
             let body = sh.build.to_json(state).to_string_pretty();
-            http::write_response(stream, status, reason, "application/json", &[], body.as_bytes())
+            http::write_response(stream, status, reason, "application/json", &[], body.as_bytes(), keep)
         }
         ("GET", "/metrics") => {
             let body = sh.obs.registry.render_prometheus();
-            http::write_response(stream, 200, "OK", "text/plain; version=0.0.4", &[], body.as_bytes())
+            http::write_response(stream, 200, "OK", "text/plain; version=0.0.4", &[], body.as_bytes(), keep)
         }
         ("GET", "/stats") => match sh.host.stats() {
             Ok(s) => {
                 let body = s.to_json().to_string_pretty();
-                http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes())
+                http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes(), keep)
             }
-            Err(e) => http::write_error(stream, &e, retry_after_s(&sh.obs)),
+            Err(e) => http::write_error(stream, &e, retry_after_s(&sh.obs), keep),
         },
         ("POST", "/admin/drain") => {
             sh.draining.store(true, Ordering::SeqCst);
             sh.host.drain();
             obs::log::info("daemon_draining", &[]);
-            http::write_response(stream, 200, "OK", "application/json", &[], b"{\"draining\": true}")
+            // this response still closes: the drain flag was set after
+            // `keep` was computed, and a draining daemon reaps idle
+            // keep-alive sockets by not keeping this one
+            http::write_response(stream, 200, "OK", "application/json", &[], b"{\"draining\": true}", false)
+                .and(Err(io::ErrorKind::ConnectionAborted.into()))
         }
-        ("POST", "/v1/generate") => handle_generate(stream, req, sh),
-        _ => http::write_response(stream, 404, "Not Found", "text/plain", &[], b"not found"),
+        ("POST", "/v1/generate") => handle_generate(stream, req, sh, keep),
+        _ => http::write_response(stream, 404, "Not Found", "text/plain", &[], b"not found", keep),
     }
 }
 
@@ -861,20 +1281,21 @@ fn parse_generate(
     Ok((SubmitReq { tokens, n_tokens, temp, seed, stop, tenant, deadline, events }, stream_mode))
 }
 
-fn handle_generate(stream: &mut TcpStream, req: &Request, sh: &ConnShared) -> io::Result<()> {
+fn handle_generate(stream: &mut TcpStream, req: &Request, sh: &ConnShared, keep: bool) -> io::Result<()> {
     let (events, rx) = mpsc::channel();
-    let (sub, stream_mode) = match parse_generate(&req.body, sh.deadline_ms, events) {
+    let deadline_ms = sh.config.current().default_deadline_ms;
+    let (sub, stream_mode) = match parse_generate(&req.body, deadline_ms, events) {
         Ok(v) => v,
-        Err(e) => return http::write_error(stream, &e, retry_after_s(&sh.obs)),
+        Err(e) => return http::write_error(stream, &e, retry_after_s(&sh.obs), keep),
     };
     let id = match sh.host.submit(sub) {
         Ok(id) => id,
-        Err(e) => return http::write_error(stream, &e, retry_after_s(&sh.obs)),
+        Err(e) => return http::write_error(stream, &e, retry_after_s(&sh.obs), keep),
     };
     if stream_mode {
-        stream_tokens(stream, sh, id, rx)
+        stream_tokens(stream, sh, id, rx, keep)
     } else {
-        wait_completion(stream, sh, id, rx)
+        wait_completion(stream, sh, id, rx, keep)
     }
 }
 
@@ -899,21 +1320,28 @@ fn completion_json(c: &Completion) -> Json {
     ])
 }
 
-fn wait_completion(stream: &mut TcpStream, sh: &ConnShared, id: usize, events: Receiver<Event>) -> io::Result<()> {
+fn wait_completion(
+    stream: &mut TcpStream,
+    sh: &ConnShared,
+    id: usize,
+    events: Receiver<Event>,
+    keep: bool,
+) -> io::Result<()> {
     loop {
         match events.recv() {
             Ok(Event::Token(_)) => {} // the completion carries them all
             Ok(Event::Done(c)) => {
                 let body = completion_json(&c).to_string_pretty();
-                return http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes());
+                return http::write_response(stream, 200, "OK", "application/json", &[], body.as_bytes(), keep);
             }
-            Ok(Event::Failed(e)) => return http::write_error(stream, &e, retry_after_s(&sh.obs)),
+            Ok(Event::Failed(e)) => return http::write_error(stream, &e, retry_after_s(&sh.obs), keep),
             Err(_) => {
                 sh.host.cancel(id);
                 return http::write_error(
                     stream,
                     &ServeError::Internal("engine exited".into()),
                     retry_after_s(&sh.obs),
+                    keep,
                 );
             }
         }
@@ -924,9 +1352,15 @@ fn wait_completion(stream: &mut TcpStream, sh: &ConnShared, id: usize, events: R
 /// `{"done": true, ...}` line carrying the completion. A mid-stream
 /// failure becomes an `{"error": ...}` line — the transfer still
 /// terminates cleanly so clients can tell "failed" from "cut off".
-fn stream_tokens(stream: &mut TcpStream, sh: &ConnShared, id: usize, events: Receiver<Event>) -> io::Result<()> {
-    http::write_chunked_head(stream, "application/x-ndjson")?;
-    let drop_after = sh.fault.drop_after(id);
+fn stream_tokens(
+    stream: &mut TcpStream,
+    sh: &ConnShared,
+    id: usize,
+    events: Receiver<Event>,
+    keep: bool,
+) -> io::Result<()> {
+    http::write_chunked_head(stream, "application/x-ndjson", keep)?;
+    let drop_after = sh.config.current().fault.drop_after(id);
     let mut sent = 0usize;
     loop {
         match events.recv() {
@@ -1030,6 +1464,7 @@ pub fn synthetic_model(seed: u64) -> Result<ServeModel> {
 mod tests {
     use super::*;
     use crate::model::params::tests_support::fake_llama_meta;
+    use crate::serve::scheduler::Priority;
 
     fn test_engine(cfg: &ServeConfig) -> Engine {
         let mut rng = Rng::new(11);
@@ -1128,6 +1563,7 @@ mod tests {
         let cfg = HostConfig {
             per_tenant_cap: 1,
             fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() },
+            ..HostConfig::default()
         };
         let (host, handle) = spawn_host(test_engine(&ServeConfig::default()), cfg);
         let mk = |tenant: &str, tx: Sender<Event>| SubmitReq {
@@ -1203,7 +1639,11 @@ mod tests {
         let registry = Arc::clone(&engine.obs().registry);
         let (host, handle) = spawn_host(
             engine,
-            HostConfig { per_tenant_cap: 1, fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() } },
+            HostConfig {
+                per_tenant_cap: 1,
+                fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() },
+                ..HostConfig::default()
+            },
         );
         let mk = |tenant: &str, tx: Sender<Event>| SubmitReq {
             tokens: vec![1, 2],
@@ -1253,5 +1693,268 @@ mod tests {
             eng.run().unwrap().remove(0).tokens
         };
         assert_eq!(run(m), run(synthetic_model(3).unwrap()), "same seed, same stream");
+    }
+
+    #[test]
+    fn supervised_host_restarts_after_injected_panic() {
+        let scfg = ServeConfig { obs: Some(true), ..ServeConfig::default() };
+        // reference: what the retried request should stream, bitwise
+        let mut reference = test_engine(&scfg);
+        reference.submit_tokens(vec![1, 2, 3], 4, 0.0, 7).unwrap();
+        let want = reference.run().unwrap().remove(0);
+
+        let engine = test_engine(&scfg);
+        let registry = Arc::clone(&engine.obs().registry);
+        let restarts = registry.counter(
+            "kurtail_engine_restarts_total",
+            "Engine rebuilds after a panic or step failure.",
+            &[],
+        );
+        let cell = Arc::new(ConfigCell::new(RuntimeConfig {
+            fault: FaultSpec { engine_panic: 1.0, ..FaultSpec::none() },
+            ..RuntimeConfig::default()
+        }));
+        let (host, handle) = spawn_host_with(
+            engine,
+            cell,
+            Some(Supervise { scfg: scfg.clone(), restarts: Some(Arc::clone(&restarts)) }),
+        );
+        let mk = |tx: Sender<Event>| SubmitReq {
+            tokens: vec![1, 2, 3],
+            n_tokens: 4,
+            temp: 0.0,
+            seed: 7,
+            stop: None,
+            tenant: "t".into(),
+            deadline: None,
+            events: tx,
+        };
+        let (tx0, rx0) = mpsc::channel();
+        let id0 = host.submit(mk(tx0)).unwrap();
+        let (_, done0, err0) = collect(&rx0);
+        assert!(done0.is_none());
+        assert_eq!(err0, Some(ServeError::EngineRestarting), "in-flight fails retryable");
+
+        // the one-shot fault has fired; the retry runs on the rebuilt
+        // engine and must stream exactly the reference tokens
+        let (tx1, rx1) = mpsc::channel();
+        let id1 = host.submit(mk(tx1)).unwrap();
+        assert!(id1 > id0, "request ids continue across engine incarnations");
+        let (_, done1, err1) = collect(&rx1);
+        assert_eq!(err1, None, "retry succeeds after exactly one restart");
+        assert_eq!(done1.unwrap().tokens, want.tokens, "rebuilt engine is bitwise identical");
+
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.engine_restarts, 1);
+        assert_eq!(stats.free_blocks, stats.max_blocks, "the crash leaked no KV blocks");
+        assert_eq!(restarts.get(), 1);
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn host_rate_limits_by_token_bucket_and_refunds_unused() {
+        let mut tenants = BTreeMap::new();
+        tenants.insert(
+            "metered".to_string(),
+            TenantPolicy {
+                rate_tokens_per_s: 0.001, // effectively no refill within the test
+                burst_tokens: 8.0,
+                ..TenantPolicy::default()
+            },
+        );
+        // slow steps keep the first request in flight while the second
+        // hits the drained bucket
+        let cfg = HostConfig {
+            tenants,
+            fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() },
+            ..HostConfig::default()
+        };
+        let (host, handle) = spawn_host(test_engine(&ServeConfig::default()), cfg);
+        let mk = |n: usize, tx: Sender<Event>| SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: n,
+            temp: 0.0,
+            seed: 1,
+            stop: None,
+            tenant: "metered".into(),
+            deadline: None,
+            events: tx,
+        };
+        let (tx_a, rx_a) = mpsc::channel();
+        host.submit(mk(6, tx_a)).unwrap(); // bucket 8 -> 2
+        let (tx_b, _rx_b) = mpsc::channel();
+        let err = host.submit(mk(6, tx_b)).unwrap_err();
+        // deficit of 4 tokens at 0.001 tok/s clamps to the 60s ceiling
+        assert_eq!(err, ServeError::RateLimited { retry_after_s: 60 });
+        let (_, done_a, _) = collect(&rx_a);
+        assert!(done_a.is_some(), "in-flight request unaffected by the shed");
+
+        // a request that dies before generating refunds its full charge:
+        // the 2-token charge (bucket 2 -> 0) comes back on the deadline
+        // failure, so the follow-up 2-token submit still fits
+        let (tx_c, rx_c) = mpsc::channel();
+        host.submit(SubmitReq { deadline: Some(Instant::now()), ..mk(2, tx_c) }).unwrap();
+        let (_, _, err_c) = collect(&rx_c);
+        assert_eq!(err_c, Some(ServeError::Deadline));
+        let (tx_d, rx_d) = mpsc::channel();
+        host.submit(mk(2, tx_d)).unwrap();
+        let (_, done_d, _) = collect(&rx_d);
+        assert!(done_d.is_some(), "refunded tokens are spendable again");
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn host_admits_high_class_before_queued_low_class() {
+        // one lane + slow steps: the first low request occupies the
+        // lane while the second low and the high queue behind it — the
+        // scheduler must seat the high first even though it arrived last
+        let mut tenants = BTreeMap::new();
+        tenants.insert(
+            "vip".to_string(),
+            TenantPolicy { priority: Priority::High, ..TenantPolicy::default() },
+        );
+        tenants.insert(
+            "batch".to_string(),
+            TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() },
+        );
+        let cfg = HostConfig {
+            tenants,
+            fault: FaultSpec { slow_step_ms: 30, ..FaultSpec::none() },
+            ..HostConfig::default()
+        };
+        let scfg = ServeConfig { max_lanes: 1, ..ServeConfig::default() };
+        let (host, handle) = spawn_host(test_engine(&scfg), cfg);
+        let (tx, rx) = mpsc::channel();
+        let mk = |tenant: &str, seed: u64| SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: 3,
+            temp: 0.0,
+            seed,
+            stop: None,
+            tenant: tenant.into(),
+            deadline: None,
+            events: tx.clone(),
+        };
+        let lo1 = host.submit(mk("batch", 1)).unwrap();
+        let lo2 = host.submit(mk("batch", 2)).unwrap();
+        let hi = host.submit(mk("vip", 3)).unwrap();
+        let mut order = Vec::new();
+        while order.len() < 3 {
+            match rx.recv_timeout(Duration::from_secs(20)).expect("engine thread answers") {
+                Event::Done(c) => order.push(c.id),
+                Event::Token(_) => {}
+                Event::Failed(e) => panic!("unexpected failure: {e:?}"),
+            }
+        }
+        let pos = |id: usize| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(hi) < pos(lo2), "queued high completes before queued low: {order:?}");
+        let _ = lo1; // first low may finish before or after hi (already seated)
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn high_arrival_evicts_newest_queued_low_and_notifies_owner() {
+        let mut tenants = BTreeMap::new();
+        tenants.insert(
+            "vip".to_string(),
+            TenantPolicy { priority: Priority::High, ..TenantPolicy::default() },
+        );
+        tenants.insert(
+            "batch".to_string(),
+            TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() },
+        );
+        let cfg = HostConfig {
+            tenants,
+            fault: FaultSpec { slow_step_ms: 30, ..FaultSpec::none() },
+            ..HostConfig::default()
+        };
+        let scfg = ServeConfig { max_lanes: 1, queue_cap: 2, ..ServeConfig::default() };
+        let (host, handle) = spawn_host(test_engine(&scfg), cfg);
+        let mk = |tenant: &str, n: usize, seed: u64, tx: Sender<Event>| SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: n,
+            temp: 0.0,
+            seed,
+            stop: None,
+            tenant: tenant.into(),
+            deadline: None,
+            events: tx,
+        };
+        // seat lo1 in the lane (wait for its first token so it is
+        // decoding, not queued), then fill the queue with lo2, lo3
+        let (tx1, rx1) = mpsc::channel();
+        host.submit(mk("batch", 10, 1, tx1)).unwrap();
+        match rx1.recv_timeout(Duration::from_secs(20)).expect("engine thread answers") {
+            Event::Token(_) => {}
+            other => panic!("expected lo1's first token, got {other:?}"),
+        }
+        let (tx2, rx2) = mpsc::channel();
+        host.submit(mk("batch", 3, 2, tx2)).unwrap();
+        let (tx3, rx3) = mpsc::channel();
+        host.submit(mk("batch", 3, 3, tx3)).unwrap();
+        // hi outranks the queued lows: the newest low (lo3) is evicted
+        // and its owner is told, the high is accepted in its place
+        let (tx_h, rx_h) = mpsc::channel();
+        host.submit(mk("vip", 3, 4, tx_h)).unwrap();
+        let (_, done3, err3) = collect(&rx3);
+        assert!(done3.is_none());
+        assert_eq!(err3, Some(ServeError::QueueFull { cap: 2 }), "victim sheds as queue-full");
+        let (_, done_h, _) = collect(&rx_h);
+        let (_, done2, _) = collect(&rx2);
+        assert!(done_h.is_some() && done2.is_some(), "accepted requests all complete");
+        let (_, done1, _) = collect(&rx1);
+        assert!(done1.is_some(), "the seated low request rides out the eviction");
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.free_blocks, stats.max_blocks, "eviction returned every block");
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn live_reload_changes_admission_without_dropping_streams() {
+        let cell = Arc::new(ConfigCell::new(RuntimeConfig {
+            fault: FaultSpec { slow_step_ms: 20, ..FaultSpec::none() },
+            ..RuntimeConfig::default()
+        }));
+        let (host, handle) =
+            spawn_host_with(test_engine(&ServeConfig::default()), Arc::clone(&cell), None);
+        let mk = |tx: Sender<Event>| SubmitReq {
+            tokens: vec![1, 2],
+            n_tokens: 8,
+            temp: 0.0,
+            seed: 1,
+            stop: None,
+            tenant: "t".into(),
+            deadline: None,
+            events: tx,
+        };
+        let (tx_a, rx_a) = mpsc::channel();
+        host.submit(mk(tx_a)).unwrap();
+        // wait until the stream is live, then swap the config under it
+        match rx_a.recv_timeout(Duration::from_secs(20)).expect("engine thread answers") {
+            Event::Token(_) => {}
+            other => panic!("expected a token, got {other:?}"),
+        }
+        cell.install(RuntimeConfig { per_tenant_cap: 1, ..RuntimeConfig::default() });
+        // new admissions see the new config immediately...
+        let (tx_b, _rx_b) = mpsc::channel();
+        let err = host.submit(mk(tx_b)).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { cap: 1 }, "reloaded cap applies at once");
+        // ...and the in-flight stream is untouched by the swap
+        let (toks, done, err_a) = collect(&rx_a);
+        assert_eq!(err_a, None, "reload never drops an in-flight stream");
+        let done = done.unwrap();
+        assert_eq!(
+            1 + toks.len(),
+            done.tokens.len() - done.prompt_len,
+            "every generated token was streamed across the reload"
+        );
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.config_generation, 2, "install bumped the generation");
+        host.drain();
+        handle.join().unwrap();
     }
 }

@@ -1,0 +1,183 @@
+//! Per-tenant token-bucket rate limiting.
+//!
+//! The bucket counts *generated* tokens, not requests: a tenant
+//! streaming long completions drains its budget proportionally to the
+//! load it actually puts on the engine, while short requests stay
+//! cheap. Because the daemon must decide admission *before* any token
+//! is generated, it charges the request's worst case (`max_tokens`) up
+//! front and refunds the unused remainder when the request finishes
+//! (early EOS, cancel, failure) — so the bucket level is always a
+//! conservative bound and a tenant can never overdraw by racing
+//! submissions.
+//!
+//! Deliberately clock-explicit: every method takes `now: Instant` so
+//! the daemon passes real time and tests pass synthetic time. Nothing
+//! here reads the wall clock, keeping bucket decisions reproducible
+//! under test.
+
+use std::time::Instant;
+
+/// The wire clamp for `Retry-After` seconds, shared with the
+/// queue-wait derivation in `daemon/mod.rs` (documented [1, 60] window).
+pub const RETRY_AFTER_MIN_S: u64 = 1;
+pub const RETRY_AFTER_MAX_S: u64 = 60;
+
+/// A token bucket: `level` refills at `rate` tokens/s up to `burst`.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    /// Refill rate in tokens per second (> 0).
+    rate: f64,
+    /// Bucket capacity: the largest charge admissible after idleness.
+    burst: f64,
+    /// Current level in tokens (`0 ..= burst`).
+    level: f64,
+    /// Last refill instant.
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket born full. `rate` must be positive; `burst <= 0` falls
+    /// back to one second of refill.
+    pub fn new(rate: f64, burst: f64, now: Instant) -> Self {
+        let rate = if rate > 0.0 { rate } else { 1.0 };
+        let burst = if burst > 0.0 { burst } else { rate };
+        Self { rate, burst, level: burst, last: now }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.level = (self.level + dt * self.rate).min(self.burst);
+        self.last = now;
+    }
+
+    /// Charge `cost` tokens, or report the refill deficit as whole
+    /// `Retry-After` seconds (clamped to the documented [1, 60]
+    /// window). A cost above `burst` can never succeed; it reports the
+    /// full-bucket wait so the client backs off maximally.
+    pub fn try_take(&mut self, cost: f64, now: Instant) -> Result<(), u64> {
+        self.refill(now);
+        if cost <= self.level {
+            self.level -= cost;
+            return Ok(());
+        }
+        let deficit = (cost.min(self.burst) - self.level).max(0.0);
+        let secs = (deficit / self.rate).ceil() as u64;
+        Err(secs.clamp(RETRY_AFTER_MIN_S, RETRY_AFTER_MAX_S))
+    }
+
+    /// Return unused tokens from an up-front charge (early EOS,
+    /// cancel, failure). Never lifts the level past `burst`.
+    pub fn refund(&mut self, tokens: f64) {
+        self.level = (self.level + tokens.max(0.0)).min(self.burst);
+    }
+
+    /// Apply a live-reloaded policy without forgetting spent budget:
+    /// the level keeps its *deficit* relative to the old burst, so a
+    /// reload can tighten or loosen the limit but never mints free
+    /// tokens for a tenant that just drained its bucket.
+    pub fn reconfigure(&mut self, rate: f64, burst: f64, now: Instant) {
+        self.refill(now);
+        let spent = self.burst - self.level;
+        self.rate = if rate > 0.0 { rate } else { 1.0 };
+        self.burst = if burst > 0.0 { burst } else { self.rate };
+        self.level = (self.burst - spent).clamp(0.0, self.burst);
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn burst(&self) -> f64 {
+        self.burst
+    }
+
+    /// Current level after a refill to `now` (stats/tests).
+    pub fn level(&mut self, now: Instant) -> f64 {
+        self.refill(now);
+        self.level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn charges_until_empty_then_reports_deficit() {
+        let now = t0();
+        let mut b = TokenBucket::new(10.0, 20.0, now);
+        assert_eq!(b.try_take(16.0, now), Ok(()));
+        // 4 left; a 16-token charge is 12 short → ceil(12/10) = 2s
+        assert_eq!(b.try_take(16.0, now), Err(2));
+        // the failed attempt must not have drained anything
+        assert!((b.level(now) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refills_at_rate_up_to_burst() {
+        let now = t0();
+        let mut b = TokenBucket::new(10.0, 20.0, now);
+        assert_eq!(b.try_take(20.0, now), Ok(()));
+        let later = now + Duration::from_millis(500);
+        // 0.5s * 10 tok/s = 5 tokens back
+        assert!((b.level(later) - 5.0).abs() < 1e-6);
+        let much_later = now + Duration::from_secs(3600);
+        assert!((b.level(much_later) - 20.0).abs() < 1e-9, "capped at burst");
+    }
+
+    #[test]
+    fn retry_after_clamps_to_wire_window() {
+        let now = t0();
+        // tiny rate: a full-burst deficit takes 1000s → clamped to 60
+        let mut b = TokenBucket::new(0.01, 10.0, now);
+        assert_eq!(b.try_take(10.0, now), Ok(()));
+        assert_eq!(b.try_take(10.0, now), Err(RETRY_AFTER_MAX_S));
+        // sub-second deficit still reports at least 1s
+        let mut b = TokenBucket::new(1000.0, 100.0, now);
+        assert_eq!(b.try_take(100.0, now), Ok(()));
+        assert_eq!(b.try_take(50.0, now), Err(RETRY_AFTER_MIN_S));
+    }
+
+    #[test]
+    fn oversized_cost_reports_full_bucket_wait() {
+        let now = t0();
+        let mut b = TokenBucket::new(2.0, 8.0, now);
+        assert_eq!(b.try_take(8.0, now), Ok(())); // drain to empty
+        // cost 100 > burst 8: can never succeed; deficit capped at the
+        // burst so the wait is finite (8/2 = 4s), not absurd
+        assert_eq!(b.try_take(100.0, now), Err(4));
+    }
+
+    #[test]
+    fn refund_restores_unused_charge() {
+        let now = t0();
+        let mut b = TokenBucket::new(10.0, 32.0, now);
+        assert_eq!(b.try_take(32.0, now), Ok(()));
+        // request stopped early: 20 of 32 tokens unused
+        b.refund(20.0);
+        assert_eq!(b.try_take(20.0, now), Ok(()));
+        // refunds never overflow the burst
+        b.refund(1e9);
+        assert!((b.level(now) - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconfigure_preserves_spent_deficit() {
+        let now = t0();
+        let mut b = TokenBucket::new(10.0, 20.0, now);
+        assert_eq!(b.try_take(15.0, now), Ok(())); // 5 left, 15 spent
+        b.reconfigure(5.0, 40.0, now);
+        // deficit 15 carries over: 40 - 15 = 25 available
+        assert!((b.level(now) - 25.0).abs() < 1e-9);
+        b.reconfigure(5.0, 8.0, now);
+        // tightened below the spend: clamped to empty, not negative
+        assert!(b.level(now).abs() < 1e-9);
+        assert_eq!(b.rate(), 5.0);
+        assert_eq!(b.burst(), 8.0);
+    }
+}

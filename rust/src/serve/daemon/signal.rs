@@ -1,21 +1,26 @@
-//! Minimal SIGTERM/SIGINT hook for graceful drain.
+//! Minimal SIGTERM/SIGINT/SIGHUP hooks for graceful drain and config
+//! reload.
 //!
 //! The offline build has no `libc`/`signal-hook` crates, so the unix
-//! path declares `signal(2)` directly and installs an async-signal-safe
-//! handler that only flips a static `AtomicBool` (stores on atomics are
+//! path declares `signal(2)` directly and installs async-signal-safe
+//! handlers that only flip static `AtomicBool`s (stores on atomics are
 //! on POSIX's async-signal-safe list; nothing else happens in the
-//! handler). The daemon's run loop polls [`requested`] and starts a
-//! drain when it flips. Non-unix builds compile to a no-op installer —
-//! the flag then only flips via `/admin/drain`.
+//! handlers). The daemon's run loop polls [`requested`] and starts a
+//! drain when the shutdown flag flips; its accept loop polls
+//! [`take_reload`] and re-reads the config file when the reload flag
+//! flips. Non-unix builds compile to no-op installers — the flags then
+//! only flip via `/admin/drain` and the mtime poll respectively.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
 static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+static RELOAD: AtomicBool = AtomicBool::new(false);
 
 #[cfg(unix)]
 mod imp {
     use std::sync::atomic::Ordering;
 
+    const SIGHUP: i32 = 1;
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
 
@@ -27,10 +32,20 @@ mod imp {
         super::SHUTDOWN.store(true, Ordering::SeqCst);
     }
 
+    extern "C" fn on_reload(_sig: i32) {
+        super::RELOAD.store(true, Ordering::SeqCst);
+    }
+
     pub fn install() {
         unsafe {
             signal(SIGTERM, on_signal);
             signal(SIGINT, on_signal);
+        }
+    }
+
+    pub fn install_reload() {
+        unsafe {
+            signal(SIGHUP, on_reload);
         }
     }
 }
@@ -38,6 +53,7 @@ mod imp {
 #[cfg(not(unix))]
 mod imp {
     pub fn install() {}
+    pub fn install_reload() {}
 }
 
 /// Install the SIGTERM/SIGINT handler (idempotent) and return the
@@ -52,6 +68,18 @@ pub fn requested() -> bool {
     SHUTDOWN.load(Ordering::SeqCst)
 }
 
+/// Install the SIGHUP handler (idempotent). Without it SIGHUP keeps
+/// its default disposition (terminate), so the daemon only installs it
+/// when it actually has a config file to re-read.
+pub fn install_reload() {
+    imp::install_reload();
+}
+
+/// Consume a pending reload request (SIGHUP since the last call).
+pub fn take_reload() -> bool {
+    RELOAD.swap(false, Ordering::SeqCst)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +91,13 @@ mod tests {
         let flag = install();
         assert!(std::ptr::eq(flag, install()), "one shared flag");
         assert_eq!(flag.load(Ordering::SeqCst), requested());
+    }
+
+    #[test]
+    fn reload_flag_is_consumed_once() {
+        install_reload();
+        RELOAD.store(true, Ordering::SeqCst);
+        assert!(take_reload());
+        assert!(!take_reload(), "swap(false) consumes the request");
     }
 }

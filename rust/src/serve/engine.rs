@@ -119,7 +119,7 @@ use super::error::ServeError;
 use super::int4::{panel_cache_budget, GemmScratch, Int4Weight};
 use super::kvcache::{KvPool, PrefixIndex, SeqKv};
 use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch_on, scheme_fits_i8};
-use super::scheduler::{QueuedRequest, Scheduler, DEFAULT_HEAD_SKIPS};
+use super::scheduler::{Priority, QueuedRequest, Scheduler, DEFAULT_HEAD_SKIPS};
 use super::scratch::{arena_enabled, scratch_decay_default, DecodeScratch};
 
 /// `KURTAIL_FUSED_EPILOGUE` escape hatch: the fused column-major /
@@ -786,6 +786,11 @@ pub struct Engine {
     sched: Scheduler,
     lanes: Vec<Option<Lane>>,
     done: Vec<Completion>,
+    /// Queued requests evicted by higher-priority arrivals at the
+    /// queue bound since the last [`Self::take_preempted`] — the
+    /// daemon fails their streams with `QueueFull`. Only ever grows
+    /// on the overloaded-push path, never during decode.
+    preempted: Vec<usize>,
     next_id: usize,
     committed_blocks: usize,
     /// Blocks temporarily hidden from the admission budget
@@ -812,7 +817,16 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(mut model: ServeModel, cfg: &ServeConfig) -> Result<Self> {
+    pub fn new(model: ServeModel, cfg: &ServeConfig) -> Result<Self> {
+        let obs = EngineObs::new(cfg.obs.unwrap_or_else(obs::obs_enabled));
+        Self::with_obs(model, cfg, obs)
+    }
+
+    /// Build an engine recording into an *existing* telemetry bundle —
+    /// the supervisor's rebuild path: counters, histograms, and the
+    /// registry behind `GET /metrics` survive an engine restart, so a
+    /// scrape across a crash sees monotone counters, not a reset.
+    pub fn with_obs(mut model: ServeModel, cfg: &ServeConfig, obs: EngineObs) -> Result<Self> {
         anyhow::ensure!(cfg.max_lanes >= 1, "need at least one lane");
         let meta = &model.meta;
         let threads = cfg.threads.unwrap_or_else(num_threads).max(1);
@@ -870,6 +884,7 @@ impl Engine {
             prefill_chunk: cfg.prefill_chunk.unwrap_or_else(prefill_chunk_default),
             sched: Scheduler::bounded(cfg.queue_cap, cfg.max_head_skips),
             done: Vec::new(),
+            preempted: Vec::new(),
             next_id: 0,
             committed_blocks: 0,
             withheld_blocks: 0,
@@ -881,7 +896,7 @@ impl Engine {
             fused,
             scratch,
             stats: EngineStats::default(),
-            obs: EngineObs::new(cfg.obs.unwrap_or_else(obs::obs_enabled)),
+            obs,
         })
     }
 
@@ -991,6 +1006,24 @@ impl Engine {
         seed: u64,
         stop: Option<i32>,
     ) -> Result<usize, ServeError> {
+        self.submit_tokens_prio(tokens, n_tokens, temp, seed, stop, Priority::Normal)
+    }
+
+    /// [`Self::submit_tokens_stop`] with an explicit admission
+    /// [`Priority`] (the daemon maps tenants onto classes; library
+    /// callers default to `Normal`, which is exactly the old FCFS).
+    /// At the queue bound, an arrival that outranks a queued request
+    /// evicts the newest lowest-class one instead of shedding itself —
+    /// the victim's id lands in [`Self::take_preempted`].
+    pub fn submit_tokens_prio(
+        &mut self,
+        tokens: Vec<i32>,
+        n_tokens: usize,
+        temp: f32,
+        seed: u64,
+        stop: Option<i32>,
+        priority: Priority,
+    ) -> Result<usize, ServeError> {
         if self.draining {
             self.stats.shed += 1;
             if self.obs.enabled {
@@ -1033,14 +1066,25 @@ impl Engine {
             temp,
             seed,
             stop,
+            priority,
             enqueued: Instant::now(),
         };
         match self.sched.push(req) {
-            Ok(()) => {
+            Ok(victim) => {
                 // ids advance only on acceptance, so a replay of the
                 // accepted submissions reproduces the same id sequence
                 // (and therefore the same per-request rng streams)
                 self.next_id += 1;
+                if let Some(v) = victim {
+                    // an accepted-but-queued request was evicted to
+                    // make room: it held no blocks, so this is pure
+                    // bookkeeping — count the shed and surface the id
+                    self.stats.shed += 1;
+                    if self.obs.enabled {
+                        self.obs.requests_shed.inc();
+                    }
+                    self.preempted.push(v.id);
+                }
                 Ok(id)
             }
             Err(e) => {
@@ -1051,6 +1095,13 @@ impl Engine {
                 Err(e)
             }
         }
+    }
+
+    /// Ids evicted from the queue by higher-priority arrivals since
+    /// the last call (never admitted to a lane; no blocks to reclaim).
+    /// The daemon fails their streams with [`ServeError::QueueFull`].
+    pub fn take_preempted(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.preempted)
     }
 
     /// Cancel a request by id, wherever it is: still queued (removed
@@ -1762,6 +1813,24 @@ impl Engine {
 
     pub fn queued(&self) -> usize {
         self.sched.len()
+    }
+
+    /// The admission-queue bound this engine was built with
+    /// (`ServeConfig::queue_cap`; `0` = unbounded).
+    pub fn queue_cap(&self) -> usize {
+        self.sched.cap()
+    }
+
+    /// The next request id this engine would assign.
+    pub fn next_id(&self) -> usize {
+        self.next_id
+    }
+
+    /// Restart support: continue the request-id sequence of a previous
+    /// engine incarnation, so ids stay unique across a supervisor
+    /// rebuild and a stale cancel can never hit a stranger's request.
+    pub fn resume_ids_from(&mut self, next_id: usize) {
+        self.next_id = self.next_id.max(next_id);
     }
 }
 

@@ -37,6 +37,15 @@ pub enum ServeError {
     Canceled,
     /// The daemon is draining: no new admissions, live lanes finish.
     Draining,
+    /// The tenant's token-bucket rate limit is exhausted. Carries the
+    /// refill deficit in whole seconds (already clamped to the wire's
+    /// [1, 60] `Retry-After` window) so the HTTP layer can echo it
+    /// without recomputing bucket state.
+    RateLimited { retry_after_s: u64 },
+    /// The engine thread panicked and the supervisor is rebuilding it.
+    /// In-flight requests are failed with this (retryable) error; a
+    /// fresh submit after the restart will succeed.
+    EngineRestarting,
     /// An engine-internal invariant broke (out-of-order KV append,
     /// forward failure). Not client-correctable.
     Internal(String),
@@ -48,7 +57,11 @@ impl ServeError {
     pub fn retryable(&self) -> bool {
         matches!(
             self,
-            ServeError::PoolExhausted { .. } | ServeError::QueueFull { .. } | ServeError::Draining
+            ServeError::PoolExhausted { .. }
+                | ServeError::QueueFull { .. }
+                | ServeError::Draining
+                | ServeError::RateLimited { .. }
+                | ServeError::EngineRestarting
         )
     }
 
@@ -62,6 +75,8 @@ impl ServeError {
             ServeError::Deadline => "deadline",
             ServeError::Canceled => "canceled",
             ServeError::Draining => "draining",
+            ServeError::RateLimited { .. } => "rate_limited",
+            ServeError::EngineRestarting => "engine_restarting",
             ServeError::Internal(_) => "internal",
         }
     }
@@ -81,6 +96,12 @@ impl fmt::Display for ServeError {
             ServeError::Deadline => write!(f, "deadline exceeded"),
             ServeError::Canceled => write!(f, "request canceled"),
             ServeError::Draining => write!(f, "daemon is draining; not accepting work"),
+            ServeError::RateLimited { retry_after_s } => {
+                write!(f, "tenant rate limit exhausted; retry in {retry_after_s}s")
+            }
+            ServeError::EngineRestarting => {
+                write!(f, "engine restarting after failure; retry shortly")
+            }
             ServeError::Internal(msg) => write!(f, "internal serving error: {msg}"),
         }
     }
@@ -97,6 +118,8 @@ mod tests {
         assert!(ServeError::QueueFull { cap: 4 }.retryable());
         assert!(ServeError::PoolExhausted { needed: 2, free: 0 }.retryable());
         assert!(ServeError::Draining.retryable());
+        assert!(ServeError::RateLimited { retry_after_s: 3 }.retryable());
+        assert!(ServeError::EngineRestarting.retryable());
         assert!(!ServeError::RequestTooLarge { needed_blocks: 9, pool_blocks: 8 }.retryable());
         assert!(!ServeError::Invalid("x".into()).retryable());
         assert!(!ServeError::Deadline.retryable());

@@ -59,6 +59,8 @@ pub mod qact;
 pub mod scheduler;
 pub mod scratch;
 
+pub use daemon::config::{ConfigCell, RuntimeConfig, TenantPolicy};
+pub use daemon::ratelimit::TokenBucket;
 pub use daemon::{Daemon, DaemonConfig, Host, HostConfig};
 pub use engine::{
     argmax, fused_epilogue_enabled, prefill_chunk_default, prefix_share_enabled, sample_token,
@@ -69,7 +71,7 @@ pub use error::ServeError;
 pub use int4::{panel_cache_budget, GemmScratch, Int4Weight};
 pub use kvcache::{KvPool, PrefixIndex, SeqKv};
 pub use qact::{int_gemm_enabled, QuantActs};
-pub use scheduler::{QueuedRequest, Scheduler};
+pub use scheduler::{Priority, QueuedRequest, Scheduler};
 pub use scratch::{arena_enabled, scratch_decay_default, DecodeScratch, DEFAULT_DECAY_STEPS};
 
 pub use crate::util::par::ParBackend;

@@ -1,32 +1,44 @@
 //! Admission scheduling for the continuous-batching engine.
 //!
-//! Policy: **bounded FCFS with conservative reservation and aged
-//! head-of-line bypass**. A request is admitted only when (a) a lane
-//! slot is free and (b) the KV pool can cover the request's
-//! *worst-case* block footprint (`prompt + max_new` tokens across every
-//! layer, K and V) on top of what already-admitted lanes may still
-//! claim. Admitted sequences therefore never hit pool exhaustion
-//! mid-flight, at the cost of admitting slightly fewer lanes than an
-//! optimistic scheduler would.
+//! Policy: **bounded weighted-priority admission with conservative
+//! reservation and aged head-of-line bypass**. A request is admitted
+//! only when (a) a lane slot is free and (b) the KV pool can cover the
+//! request's *worst-case* block footprint (`prompt + max_new` tokens
+//! across every layer, K and V) on top of what already-admitted lanes
+//! may still claim. Admitted sequences therefore never hit pool
+//! exhaustion mid-flight, at the cost of admitting slightly fewer
+//! lanes than an optimistic scheduler would.
 //!
-//! Two robustness amendments over the PR-2 pure-FCFS queue:
+//! Three robustness amendments over the PR-2 pure-FCFS queue:
 //!
 //! * **Bounded queue.** `cap > 0` rejects pushes past `cap` requests
 //!   with [`ServeError::QueueFull`] — the daemon's backpressure signal
 //!   (shed + retry-after) instead of unbounded memory growth under
-//!   overload.
-//! * **Aged bypass.** Pure FCFS never skips the head, so one large
-//!   request whose KV reservation doesn't fit blocks every small
-//!   request behind it (head-of-line blocking). Pure bypass has the
-//!   dual failure: a continuous stream of small requests keeps the pool
-//!   fragmented and starves the large head forever. The compromise: a
-//!   blocked head may be bypassed at most `max_skips` times; after
-//!   that, admission pauses until the head itself fits (live lanes
-//!   retire and return their blocks in bounded time, so the head
-//!   admits in bounded time). Admission order remains deterministic —
-//!   it depends only on the queue contents and the fits-predicate
-//!   sequence, never on wall-clock time — which the engine's
-//!   batch-invariance guarantee builds on.
+//!   overload. When the bound is hit by a higher-priority arrival, the
+//!   newest request of the lowest class strictly below it is evicted
+//!   instead (returned to the caller to shed), so a low-priority flood
+//!   cannot lock a full queue against high-priority traffic.
+//! * **Priority classes.** Each request carries a [`Priority`]
+//!   (`high`/`normal`/`low`); admission scans classes in priority
+//!   order, FCFS within a class. Tenant → class mapping lives in the
+//!   daemon's runtime config; the in-process/library default is
+//!   `Normal`, which reduces exactly to the old FCFS behaviour.
+//! * **Aged bypass, generalized.** Pure FCFS never skips the head, so
+//!   one large request whose KV reservation doesn't fit blocks every
+//!   small request behind it (head-of-line blocking). Pure bypass has
+//!   the dual failure: a continuous stream of small requests keeps the
+//!   pool fragmented and starves the large head forever. With priority
+//!   classes there is a third failure: a high-priority stream starves
+//!   every lower class forever. One mechanism bounds all three: each
+//!   class head carries a bypass budget (`max_skips` × the class
+//!   weight, lower classes getting a larger multiplier); *any*
+//!   admission that is not that head spends one unit of it; a head
+//!   past its budget gates admission entirely until it fits (live
+//!   lanes retire and return their blocks in bounded time, so every
+//!   head admits in bounded time, whatever its class). Admission order
+//!   remains deterministic — it depends only on the queue contents and
+//!   the fits-predicate sequence, never on wall-clock time — which the
+//!   engine's batch-invariance guarantee builds on.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -38,6 +50,69 @@ use super::error::ServeError;
 /// Default bypass budget before a blocked head pauses admissions
 /// (`ServeConfig::max_head_skips`).
 pub const DEFAULT_HEAD_SKIPS: usize = 4;
+
+/// Admission priority class. Classes are scanned `High → Normal →
+/// Low`; within a class admission is FCFS (plus the aged bypass).
+/// `Low` gets a doubled aging budget — it tolerates more bypasses
+/// before gating admission — so high-priority bursts ride through,
+/// but it still gates eventually: no class can be starved forever.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Scan order: 0 is served first.
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Aging-budget multiplier: a class head gates admission after
+    /// `max_skips * weight()` bypasses. `Normal` must stay at 1 so the
+    /// single-class behaviour is exactly the pre-priority scheduler.
+    pub fn weight(self) -> usize {
+        match self {
+            Priority::High => 1,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Config-file / API spelling (`"high"`, `"normal"`, `"low"`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    fn from_rank(c: usize) -> Priority {
+        match c {
+            0 => Priority::High,
+            1 => Priority::Normal,
+            _ => Priority::Low,
+        }
+    }
+}
+
+const CLASSES: usize = 3;
 
 /// A queued generation request (tokenized, ready to admit).
 #[derive(Clone, Debug)]
@@ -51,6 +126,8 @@ pub struct QueuedRequest {
     /// token (included in the completion), releasing its whole block
     /// reservation for queued admissions. `None` always runs `n_new`.
     pub stop: Option<i32>,
+    /// Admission class (tenant policy); `Normal` for library callers.
+    pub priority: Priority,
     /// Submit time, for the queue-wait histogram and the request's trace
     /// span. Observability only — admission order never reads the clock
     /// (the batch-invariance guarantee stands).
@@ -70,16 +147,20 @@ impl QueuedRequest {
     }
 }
 
-/// Bounded FCFS admission queue with aged head-of-line bypass.
+/// Bounded weighted-priority admission queue with aged head-of-line
+/// bypass (see the module docs for the policy).
 pub struct Scheduler {
-    queue: VecDeque<QueuedRequest>,
-    /// Queue bound; `0` = unbounded (the in-process/library default).
+    /// One FCFS queue per [`Priority`] class, indexed by `rank()`.
+    queues: [VecDeque<QueuedRequest>; CLASSES],
+    /// Total bound across classes; `0` = unbounded (the library default).
     cap: usize,
-    /// Bypass budget for a blocked head (see the module docs).
+    /// Base bypass budget for a blocked head (scaled per class by
+    /// `Priority::weight`).
     max_skips: usize,
-    /// Times the *current* head has been bypassed; resets whenever the
-    /// head changes (pop, cancel of the head, or drain).
-    head_skips: usize,
+    /// Times the *current* head of each class has been bypassed by an
+    /// admission from elsewhere; resets whenever that head changes
+    /// (pop, cancel of the head, or drain).
+    head_skips: [usize; CLASSES],
 }
 
 impl Default for Scheduler {
@@ -93,73 +174,149 @@ impl Scheduler {
         Self::default()
     }
 
-    /// Queue bounded at `cap` requests (`0` = unbounded) with a
-    /// `max_skips` head-of-line bypass budget.
+    /// Queue bounded at `cap` requests total (`0` = unbounded) with a
+    /// `max_skips` base head-of-line bypass budget.
     pub fn bounded(cap: usize, max_skips: usize) -> Self {
-        Self { queue: VecDeque::new(), cap, max_skips, head_skips: 0 }
+        Self {
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            cap,
+            max_skips,
+            head_skips: [0; CLASSES],
+        }
     }
 
-    /// Enqueue, or shed with [`ServeError::QueueFull`] at the bound.
-    pub fn push(&mut self, r: QueuedRequest) -> Result<(), ServeError> {
-        if self.cap > 0 && self.queue.len() >= self.cap {
-            return Err(ServeError::QueueFull { cap: self.cap });
+    /// Enqueue. At the bound, an arrival outranking some queued request
+    /// evicts the newest request of the lowest class strictly below it
+    /// and returns the victim (`Ok(Some(..))`) for the caller to shed;
+    /// otherwise the push itself is shed with [`ServeError::QueueFull`].
+    pub fn push(&mut self, r: QueuedRequest) -> Result<Option<QueuedRequest>, ServeError> {
+        if self.cap > 0 && self.len() >= self.cap {
+            let victim_class = (r.priority.rank() + 1..CLASSES)
+                .rev()
+                .find(|&c| !self.queues[c].is_empty());
+            let Some(c) = victim_class else {
+                return Err(ServeError::QueueFull { cap: self.cap });
+            };
+            let victim = self.queues[c].pop_back();
+            if self.queues[c].is_empty() {
+                self.head_skips[c] = 0;
+            }
+            self.queues[r.priority.rank()].push_back(r);
+            return Ok(victim);
         }
-        self.queue.push_back(r);
-        Ok(())
+        self.queues[r.priority.rank()].push_back(r);
+        Ok(None)
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.queues.iter().all(|q| q.is_empty())
     }
 
     pub fn cap(&self) -> usize {
         self.cap
     }
 
-    /// The configured head-of-line bypass budget
+    /// The configured base head-of-line bypass budget
     /// (`ServeConfig::max_head_skips`) — surfaced in `/stats` so
     /// operators can correlate queue-wait tails with the aging policy.
     pub fn max_skips(&self) -> usize {
         self.max_skips
     }
 
-    /// Pop the next admissible request: the head if `fits` accepts it;
-    /// otherwise — while the head's bypass budget lasts — the first
-    /// later request that fits (each such bypass spends one unit of the
-    /// budget). A head past its budget pauses admission entirely until
-    /// it fits, which bounds its wait by the live lanes' retirement.
+    /// Queued requests in the given class (for `/stats`).
+    pub fn len_class(&self, p: Priority) -> usize {
+        self.queues[p.rank()].len()
+    }
+
+    fn budget(&self, c: usize) -> usize {
+        self.max_skips * Priority::from_rank(c).weight()
+    }
+
+    /// Charge one bypass against every *other* non-empty class head
+    /// after admitting from class `c`.
+    fn charge_others(&mut self, c: usize) {
+        for k in 0..CLASSES {
+            if k != c && !self.queues[k].is_empty() {
+                self.head_skips[k] += 1;
+            }
+        }
+    }
+
+    /// Pop the next admissible request. Scan order: classes by
+    /// priority; within a class, the head if `fits` accepts it,
+    /// otherwise the first later request that fits. Every admission
+    /// that is not a given class's head spends one unit of that head's
+    /// aging budget (`max_skips × weight`); a head past its budget
+    /// *gates* — admission pauses entirely until that head fits, which
+    /// bounds its wait by the live lanes' retirement, whatever its
+    /// class. Deterministic: depends only on queue contents and the
+    /// fits-predicate sequence.
     pub fn pop_if(&mut self, fits: impl Fn(&QueuedRequest) -> bool) -> Option<QueuedRequest> {
-        if fits(self.queue.front()?) {
-            self.head_skips = 0;
-            return self.queue.pop_front();
+        // 1. a starved head gates all admission: pop it if it fits,
+        //    else pause. (Highest-priority starved head wins if several
+        //    classes starved at once.)
+        for c in 0..CLASSES {
+            if !self.queues[c].is_empty() && self.head_skips[c] >= self.budget(c) {
+                if !fits(self.queues[c].front().expect("non-empty")) {
+                    return None;
+                }
+                self.head_skips[c] = 0;
+                let r = self.queues[c].pop_front();
+                self.charge_others(c);
+                return r;
+            }
         }
-        if self.head_skips >= self.max_skips {
-            return None;
+        // 2. weighted scan — every non-empty class is under budget here
+        for c in 0..CLASSES {
+            let Some(head) = self.queues[c].front() else { continue };
+            if fits(head) {
+                self.head_skips[c] = 0;
+                let r = self.queues[c].pop_front();
+                self.charge_others(c);
+                return r;
+            }
+            // head blocked: aged in-class bypass
+            if let Some(pos) = self.queues[c].iter().skip(1).position(&fits) {
+                self.head_skips[c] += 1;
+                let r = self.queues[c].remove(1 + pos);
+                self.charge_others(c);
+                return r;
+            }
+            // nothing in this class fits — falling through to a lower
+            // class is itself a bypass of this head, charged on the
+            // admitting class's charge_others
         }
-        let idx = 1 + self.queue.iter().skip(1).position(fits)?;
-        self.head_skips += 1;
-        self.queue.remove(idx)
+        None
     }
 
     /// Remove a queued request by id (cancellation before admission).
     pub fn cancel(&mut self, id: usize) -> Option<QueuedRequest> {
-        let idx = self.queue.iter().position(|r| r.id == id)?;
-        if idx == 0 {
-            // a new head gets a fresh bypass budget
-            self.head_skips = 0;
+        for c in 0..CLASSES {
+            if let Some(idx) = self.queues[c].iter().position(|r| r.id == id) {
+                if idx == 0 {
+                    // a new head gets a fresh bypass budget
+                    self.head_skips[c] = 0;
+                }
+                return self.queues[c].remove(idx);
+            }
         }
-        self.queue.remove(idx)
+        None
     }
 
     /// Shed every queued request (graceful drain): the caller notifies
-    /// their owners; live lanes are unaffected.
+    /// their owners; live lanes are unaffected. Order: by class, FCFS
+    /// within a class.
     pub fn drain(&mut self) -> Vec<QueuedRequest> {
-        self.head_skips = 0;
-        self.queue.drain(..).collect()
+        self.head_skips = [0; CLASSES];
+        let mut out = Vec::new();
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        out
     }
 }
 
@@ -168,6 +325,10 @@ mod tests {
     use super::*;
 
     fn req(id: usize, len: usize) -> QueuedRequest {
+        req_prio(id, len, Priority::Normal)
+    }
+
+    fn req_prio(id: usize, len: usize, priority: Priority) -> QueuedRequest {
         QueuedRequest {
             id,
             tokens: vec![1; len],
@@ -175,6 +336,7 @@ mod tests {
             temp: 0.0,
             seed: 0,
             stop: None,
+            priority,
             enqueued: Instant::now(),
         }
     }
@@ -244,12 +406,71 @@ mod tests {
         let mut s = Scheduler::bounded(2, DEFAULT_HEAD_SKIPS);
         s.push(req(0, 1)).unwrap();
         s.push(req(1, 1)).unwrap();
-        assert_eq!(s.push(req(2, 1)), Err(ServeError::QueueFull { cap: 2 }));
+        // same-class arrival at the bound: shed the push itself
+        assert_eq!(s.push(req(2, 1)).unwrap_err(), ServeError::QueueFull { cap: 2 });
         assert_eq!(s.len(), 2);
         // popping frees capacity again
         assert_eq!(s.pop_if(|_| true).unwrap().id, 0);
         s.push(req(2, 1)).unwrap();
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn high_priority_pops_before_earlier_lower_classes() {
+        let mut s = Scheduler::bounded(0, DEFAULT_HEAD_SKIPS);
+        s.push(req_prio(0, 1, Priority::Low)).unwrap();
+        s.push(req_prio(1, 1, Priority::Normal)).unwrap();
+        s.push(req_prio(2, 1, Priority::High)).unwrap();
+        s.push(req_prio(3, 1, Priority::High)).unwrap();
+        let ids: Vec<usize> = std::iter::from_fn(|| s.pop_if(|_| true)).map(|r| r.id).collect();
+        // class order first, FCFS within a class
+        assert_eq!(ids, vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn high_arrival_evicts_newest_low_at_the_bound() {
+        let mut s = Scheduler::bounded(3, DEFAULT_HEAD_SKIPS);
+        s.push(req_prio(0, 1, Priority::Low)).unwrap();
+        s.push(req_prio(1, 1, Priority::Normal)).unwrap();
+        s.push(req_prio(2, 1, Priority::Low)).unwrap();
+        // a high push at the bound evicts the newest Low request…
+        let victim = s.push(req_prio(3, 1, Priority::High)).unwrap().unwrap();
+        assert_eq!(victim.id, 2);
+        assert_eq!(s.len(), 3);
+        // …a normal push evicts the remaining Low one…
+        let victim = s.push(req_prio(4, 1, Priority::Normal)).unwrap().unwrap();
+        assert_eq!(victim.id, 0);
+        // …and once nothing outranked remains, the push itself sheds
+        assert_eq!(
+            s.push(req_prio(5, 1, Priority::Normal)).unwrap_err(),
+            ServeError::QueueFull { cap: 3 }
+        );
+        let ids: Vec<usize> = std::iter::from_fn(|| s.pop_if(|_| true)).map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn low_class_is_starvation_bounded_under_high_flood() {
+        // a Low request with an endless stream of High arrivals in
+        // front of it: after max_skips * weight(Low) bypasses its head
+        // gates admission, so it must admit in bounded time
+        let mut s = Scheduler::bounded(0, 2);
+        s.push(req_prio(0, 1, Priority::Low)).unwrap();
+        let budget = 2 * Priority::Low.weight();
+        let mut next_id = 1;
+        let mut admitted_low_at = None;
+        for step in 0..32 {
+            s.push(req_prio(next_id, 1, Priority::High)).unwrap();
+            next_id += 1;
+            let got = s.pop_if(|_| true).expect("everything fits");
+            if got.priority == Priority::Low {
+                admitted_low_at = Some(step);
+                break;
+            }
+        }
+        let at = admitted_low_at.expect("low head must not starve");
+        // exactly `budget` high admissions ride through, then Low gates
+        assert_eq!(at, budget);
     }
 
     #[test]
@@ -279,6 +500,15 @@ mod tests {
         assert!(s.is_empty());
         s.push(req(9, 1)).unwrap(); // queue is reusable after a drain
         assert_eq!(s.pop_if(|_| true).unwrap().id, 9);
+    }
+
+    #[test]
+    fn priority_parse_roundtrips() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
     }
 
     #[test]

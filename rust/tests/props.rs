@@ -5,7 +5,9 @@
 mod common;
 use common::serve_test_meta;
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use kurtail::calib::{corpus, ByteTokenizer, CorpusKind, TokenDataset, World};
 use kurtail::config::QuantScheme;
@@ -22,13 +24,16 @@ use kurtail::tensor::matmul::{
 use kurtail::config::KvQuant;
 use kurtail::model::Params;
 use kurtail::obs::Histogram;
+use kurtail::serve::daemon::fault::FaultSpec;
+use kurtail::serve::daemon::{spawn_host_reloadable, Event, SubmitReq};
 use kurtail::serve::{
-    Engine, Int4Weight, KvPool, ParBackend, QuantActs, SeqKv, ServeConfig, ServeError, ServeModel,
-    ServeQuantSpec,
+    ConfigCell, Engine, Int4Weight, KvPool, ParBackend, Priority, QuantActs, RuntimeConfig, SeqKv,
+    ServeConfig, ServeError, ServeModel, ServeQuantSpec, TenantPolicy,
 };
 use kurtail::tensor::stats::{kurtail_loss, kurtosis};
 use kurtail::tensor::Tensor;
 use kurtail::util::proptest::{check, prop_assert, prop_close};
+use kurtail::util::Rng;
 
 /// Naive triple-loop matmul — the ground truth the packed kernels are
 /// checked against at awkward (odd, non-block-aligned) shapes.
@@ -1074,5 +1079,143 @@ fn prop_corpus_kinds_deterministic_and_distinct() {
         let w = corpus::generate(CorpusKind::Wiki, 2_000, seed);
         let p = corpus::generate(CorpusKind::Ptb, 2_000, seed);
         prop_assert(w != p, "kinds differ")
+    });
+}
+
+#[test]
+fn prop_reload_priority_interleavings_leak_free_and_bitwise() {
+    // the PR-9 overload-resilience invariant: ANY interleaving of
+    // priority-classed admissions, live config reloads (tenant caps,
+    // policies, fault timing) and queue evictions (a) leaves the pool
+    // whole, (b) never drops an in-flight stream mid-flight, and (c)
+    // completes every surviving request bitwise identical to an
+    // undisturbed run of the same prompts (temp 0: argmax sampling is
+    // id- and batch-independent)
+    let meta = serve_test_meta();
+    check(4, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let cfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            queue_cap: 3, // small enough that priority evictions happen
+            ..ServeConfig::default()
+        };
+        let reqs: Vec<(Vec<i32>, usize)> = (0..6)
+            .map(|_| {
+                let p = 1 + rng.below(3);
+                let toks = (0..p).map(|_| rng.below(meta.vocab) as i32).collect();
+                (toks, 1 + rng.below(4))
+            })
+            .collect();
+        // undisturbed reference: a lane's stream does not depend on its
+        // batch-mates, so one run of all six yields each prompt's
+        // canonical stream, indexable by submission order
+        let mut reference = Engine::new(model.clone(), &cfg).unwrap();
+        for (toks, n) in &reqs {
+            reference.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+        }
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        let mk_runtime = |rng: &mut Rng| -> RuntimeConfig {
+            let mut tenants = BTreeMap::new();
+            tenants.insert(
+                "hi".to_string(),
+                TenantPolicy { priority: Priority::High, ..TenantPolicy::default() },
+            );
+            tenants.insert(
+                "lo".to_string(),
+                TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() },
+            );
+            RuntimeConfig {
+                per_tenant_cap: rng.below(3), // 0 = unlimited, or 1..2
+                tenants,
+                fault: FaultSpec { slow_step_ms: rng.below(2) as u64, ..FaultSpec::none() },
+                ..RuntimeConfig::default()
+            }
+        };
+        let cell = Arc::new(ConfigCell::new(mk_runtime(rng)));
+        let engine = Engine::new(model.clone(), &cfg).unwrap();
+        let (host, handle) = spawn_host_reloadable(engine, Arc::clone(&cell));
+        let tenant_names = ["hi", "lo", "mid"]; // mid = default (Normal)
+        let mut rxs = Vec::new();
+        for (i, (toks, n)) in reqs.iter().enumerate() {
+            if rng.below(2) == 0 {
+                cell.install(mk_runtime(rng)); // live reload mid-workload
+            }
+            let (tx, rx) = mpsc::channel();
+            let res = host.submit(SubmitReq {
+                tokens: toks.clone(),
+                n_tokens: *n,
+                temp: 0.0,
+                seed: 3,
+                stop: None,
+                tenant: tenant_names[rng.below(3)].to_string(),
+                deadline: None,
+                events: tx,
+            });
+            rxs.push((i, rx, res));
+        }
+        for (i, rx, res) in rxs {
+            match res {
+                Err(e) => prop_assert(
+                    matches!(e, ServeError::QueueFull { .. } | ServeError::RateLimited { .. }),
+                    &format!("admission shed {i} is a typed backpressure error, got {e:?}"),
+                )?,
+                Ok(_) => {
+                    let mut toks = Vec::new();
+                    loop {
+                        match rx.recv_timeout(Duration::from_secs(20)) {
+                            Ok(Event::Token(t)) => toks.push(t),
+                            Ok(Event::Done(c)) => {
+                                prop_assert(
+                                    c.tokens == want[i].tokens,
+                                    &format!("completion {i} bitwise equals the undisturbed run"),
+                                )?;
+                                prop_assert(
+                                    toks == want[i].tokens[want[i].prompt_len..],
+                                    &format!("stream {i} == generated suffix"),
+                                )?;
+                                break;
+                            }
+                            Ok(Event::Failed(e)) => {
+                                // the only legitimate in-flight failure
+                                // here is a priority eviction; reloads
+                                // must never kill a stream
+                                prop_assert(
+                                    matches!(e, ServeError::QueueFull { .. }),
+                                    &format!("in-flight failure {i} is an eviction, got {e:?}"),
+                                )?;
+                                prop_assert(
+                                    toks.is_empty(),
+                                    &format!("evicted request {i} was queued, never streaming"),
+                                )?;
+                                break;
+                            }
+                            Err(_) => {
+                                prop_assert(false, &format!("request {i}: engine thread hung"))?;
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let stats = host.stats().expect("host alive");
+        prop_assert(
+            stats.free_blocks == stats.max_blocks,
+            "pool whole after reload/priority interleaving",
+        )?;
+        host.drain();
+        handle.join().expect("engine thread exits clean");
+        Ok(())
     });
 }

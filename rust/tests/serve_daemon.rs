@@ -16,6 +16,7 @@
 mod common;
 use common::serve_test_meta;
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::thread;
@@ -23,7 +24,9 @@ use std::time::{Duration, Instant};
 
 use kurtail::model::Params;
 use kurtail::serve::daemon::fault::FaultSpec;
-use kurtail::serve::{Daemon, DaemonConfig, Engine, ServeConfig, ServeModel, ServeQuantSpec};
+use kurtail::serve::{
+    Daemon, DaemonConfig, Engine, Priority, ServeConfig, ServeModel, ServeQuantSpec, TenantPolicy,
+};
 use kurtail::tensor::hadamard::random_hadamard;
 use kurtail::util::json::Json;
 use kurtail::util::Rng;
@@ -567,4 +570,243 @@ fn daemon_rejects_malformed_requests() {
         stats.get("max_blocks").unwrap().as_usize().unwrap()
     );
     daemon.join().unwrap();
+}
+
+// -------------------------------------------- keep-alive client bits
+
+/// Send one request on an already-open connection WITHOUT
+/// `Connection: close`, then read exactly one `Content-Length`-framed
+/// response (keep-alive means no EOF to read until).
+fn send_keepalive(s: &mut TcpStream, method: &str, path: &str, body: &str) -> Response {
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    read_one_response(s)
+}
+
+fn read_one_response(s: &mut TcpStream) -> Response {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let n = s.read(&mut tmp).expect("response head read");
+        assert!(n > 0, "connection closed before a full response head");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .expect("status line");
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let cl: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .expect("keep-alive responses are Content-Length framed");
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < cl {
+        let n = s.read(&mut tmp).expect("response body read");
+        assert!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(cl);
+    Response { status, headers, body: String::from_utf8_lossy(&body).into_owned() }
+}
+
+// -------------------------------------------------------- pr-9 tests
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let daemon = Daemon::spawn(test_model(), &DaemonConfig::default()).unwrap();
+    let addr = daemon.addr();
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    for i in 0..3 {
+        let r = send_keepalive(&mut s, "GET", "/healthz", "");
+        assert_eq!(r.status, 200, "request {i} on the same socket: {}", r.body);
+        assert_eq!(r.header("connection"), Some("keep-alive"), "request {i}");
+    }
+    // a generate rides the same connection as the probes before it
+    let r = send_keepalive(&mut s, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 2}"#);
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("connection"), Some("keep-alive"));
+
+    // `Connection: close` is honoured: response says close, then EOF
+    let req = "GET /healthz HTTP/1.1\r\nHost: test\r\nConnection: close\r\nContent-Length: 0\r\n\r\n";
+    s.write_all(req.as_bytes()).unwrap();
+    let resp = parse_response(&read_lenient(&mut s));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(resp.header("connection"), Some("close"));
+
+    // the shared engine saw every request from this one socket
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert_eq!(stats.get("engine").unwrap().get("admitted").unwrap().as_usize().unwrap(), 1);
+    daemon.join().unwrap();
+}
+
+#[test]
+fn priority_tenant_overtakes_low_flood() {
+    // one slow lane: low-class requests fill it and the queue; a
+    // late-arriving high-class request must still finish before the
+    // queued lows it outranks
+    let mut tenants = BTreeMap::new();
+    tenants.insert("vip".to_string(), TenantPolicy { priority: Priority::High, ..TenantPolicy::default() });
+    tenants.insert("batch".to_string(), TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() });
+    let dcfg = DaemonConfig {
+        queue_cap: 8,
+        tenants,
+        serve: ServeConfig { max_lanes: 1, block_tokens: 4, ..ServeConfig::default() },
+        fault: FaultSpec { slow_step_ms: 15, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    let lows: Vec<_> = (0..4)
+        .map(|i| {
+            thread::spawn(move || {
+                let body =
+                    format!(r#"{{"tokens": [1], "max_tokens": 6, "seed": {i}, "tenant": "batch"}}"#);
+                let r = request(addr, "POST", "/v1/generate", &body);
+                (r.status, Instant::now())
+            })
+        })
+        .collect();
+    thread::sleep(Duration::from_millis(60)); // let the flood queue up
+    let hi = request(addr, "POST", "/v1/generate", r#"{"tokens": [2], "max_tokens": 2, "tenant": "vip"}"#);
+    let hi_done = Instant::now();
+    assert_eq!(hi.status, 200, "{}", hi.body);
+
+    let low_times: Vec<(u16, Instant)> = lows.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(low_times.iter().all(|(st, _)| *st == 200), "no eviction below the queue bound");
+    let overtaken = low_times.iter().filter(|(_, t)| *t > hi_done).count();
+    assert!(overtaken >= 1, "the high-class request overtook at least one queued low");
+    daemon.join().unwrap();
+}
+
+#[test]
+fn engine_panic_restarts_and_recovers() {
+    // reference for the post-restart stream: the same submission on an
+    // untouched in-process engine
+    let cfg = ServeConfig { block_tokens: 4, ..ServeConfig::default() };
+    let mut reference = Engine::new(test_model(), &cfg).unwrap();
+    reference.submit_tokens(vec![1, 2], 3, 0.0, 7).unwrap();
+    let want = reference.run().unwrap().remove(0);
+
+    let dcfg = DaemonConfig {
+        serve: cfg,
+        fault: FaultSpec { engine_panic: 1.0, ..FaultSpec::none() },
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    // the first request trips the one-shot injected panic
+    let r = request(addr, "POST", "/v1/generate", r#"{"tokens": [1, 2], "max_tokens": 3, "seed": 7}"#);
+    assert_eq!(r.status, 503, "{}", r.body);
+    assert_eq!(r.json().get("error").unwrap().as_str().unwrap(), "engine_restarting");
+    assert!(r.header("retry-after").is_some(), "restart sheds are retryable");
+
+    // the retry lands on the rebuilt engine and matches the reference
+    let retry = request(addr, "POST", "/v1/generate", r#"{"tokens": [1, 2], "max_tokens": 3, "seed": 7}"#);
+    assert_eq!(retry.status, 200, "rebuilt engine serves: {}", retry.body);
+    let toks: Vec<i32> = retry
+        .json()
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(toks, want.tokens, "rebuilt engine streams bitwise-identically");
+
+    // exactly one restart on the books, zero leaked KV blocks
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert_eq!(stats.get("engine_restarts").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        stats.get("free_blocks").unwrap().as_usize().unwrap(),
+        stats.get("max_blocks").unwrap().as_usize().unwrap(),
+        "the crash leaked nothing"
+    );
+    let m = request(addr, "GET", "/metrics", "");
+    assert!(m.body.contains("kurtail_engine_restarts_total 1"), "{}", m.body);
+    daemon.join().unwrap();
+}
+
+#[test]
+fn config_file_reload_applies_live() {
+    // a daemon started on a config file picks up edits without restart:
+    // generation bumps on /stats and the new tenant policy (a drained
+    // token bucket) governs the very next admission
+    let path = std::env::temp_dir().join(format!("kurtail-reload-{}.json", std::process::id()));
+    std::fs::write(&path, "{\"per_tenant_cap\": 0}\n").unwrap();
+    let dcfg = DaemonConfig { config_path: Some(path.clone()), ..DaemonConfig::default() };
+    let daemon = Daemon::spawn(test_model(), &dcfg).unwrap();
+    let addr = daemon.addr();
+
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert_eq!(stats.get("config_generation").unwrap().as_usize().unwrap(), 1);
+    let ok = request(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 4, "tenant": "m"}"#);
+    assert_eq!(ok.status, 200, "unlimited before the reload: {}", ok.body);
+
+    // rewrite the file: tenant "m" now has a 2-token bucket refilled at
+    // 0.001 tok/s (different length than the original so the
+    // (mtime, len) stamp always changes)
+    std::fs::write(
+        &path,
+        "{\"tenants\": {\"m\": {\"rate_tokens_per_s\": 0.001, \"burst_tokens\": 2}}}\n",
+    )
+    .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let gen = request(addr, "GET", "/stats", "")
+            .json()
+            .get("config_generation")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        if gen >= 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "reload never landed (generation stuck at {gen})");
+        thread::sleep(Duration::from_millis(50));
+    }
+
+    // drain the fresh 2-token bucket with an admissible request (it
+    // generates ≥ 1 token, so at most 1 of the 2-token charge refunds)…
+    let drain = request(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 2, "tenant": "m"}"#);
+    assert_eq!(drain.status, 200, "a charge within the burst admits: {}", drain.body);
+    // …then 2 more tokens are ≥ 1 short: shed 429 with the
+    // deficit-derived Retry-After (≥ 1 token / 0.001 tok/s clamps to 60)
+    let shed = request(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 2, "tenant": "m"}"#);
+    assert_eq!(shed.status, 429, "{}", shed.body);
+    assert_eq!(shed.json().get("error").unwrap().as_str().unwrap(), "rate_limited");
+    assert_eq!(shed.header("retry-after"), Some("60"), "Retry-After from the bucket deficit");
+
+    // an invalid rewrite is rejected and the good config stays live
+    std::fs::write(&path, "{\"nonsense\": true}\n").unwrap();
+    thread::sleep(Duration::from_millis(800));
+    let stats = request(addr, "GET", "/stats", "").json();
+    assert_eq!(
+        stats.get("config_generation").unwrap().as_usize().unwrap(),
+        2,
+        "bad config must not install"
+    );
+    let still = request(addr, "POST", "/v1/generate", r#"{"tokens": [1], "max_tokens": 4, "tenant": "m"}"#);
+    assert_eq!(still.status, 429, "the pre-edit policy is still in charge: {}", still.body);
+
+    daemon.join().unwrap();
+    let _ = std::fs::remove_file(&path);
 }

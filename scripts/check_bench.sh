@@ -20,6 +20,18 @@
 #                                                 through the daemon host;
 #                                                 LOWER is better — gated
 #                                                 as a ceiling, not a floor)
+#              runs[lanes=16].hi_pri_p99_ttft_ms (high-class TTFT under a
+#                                                 low-class flood through
+#                                                 the priority scheduler;
+#                                                 LOWER is better — gated
+#                                                 as a ceiling)
+#              runs[lanes=16].fairness_ratio     (low-class p99 TTFT over
+#                                                 high-class p99 TTFT in
+#                                                 the same overload stage;
+#                                                 a FLOOR — collapsing
+#                                                 toward 1 means priority
+#                                                 admission stopped
+#                                                 working)
 #              runs[lanes=16].obs_overhead       (telemetry cost: obs-off
 #                                                 tok/s over obs-on − 1;
 #                                                 ABSOLUTE ceiling 0.02 —
@@ -97,6 +109,8 @@ metrics = [
     ("serve: lanes=16 arena_speedup", serve_run_metric, (cur_s, 16, "arena_speedup"), (base_s, 16, "arena_speedup"), "higher"),
     ("serve: lanes=16 epilogue_fused_speedup", serve_run_metric, (cur_s, 16, "epilogue_fused_speedup"), (base_s, 16, "epilogue_fused_speedup"), "higher"),
     ("serve: lanes=16 p99_ttft_ms", serve_run_metric, (cur_s, 16, "p99_ttft_ms"), (base_s, 16, "p99_ttft_ms"), "lower"),
+    ("serve: lanes=16 hi_pri_p99_ttft_ms", serve_run_metric, (cur_s, 16, "hi_pri_p99_ttft_ms"), (base_s, 16, "hi_pri_p99_ttft_ms"), "lower"),
+    ("serve: lanes=16 fairness_ratio", serve_run_metric, (cur_s, 16, "fairness_ratio"), (base_s, 16, "fairness_ratio"), "higher"),
     ("serve: lanes=16 prefix_hit_ratio", serve_run_metric, (cur_s, 16, "prefix_hit_ratio"), (base_s, 16, "prefix_hit_ratio"), "higher"),
 ]
 

@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
-# Daemon smoke test: start `kurtail daemon --synthetic`, stream one
-# request over real HTTP, check /stats invariants (at least one request
-# admitted, zero leaked KV blocks), scrape /metrics mid-run and check
-# the Prometheus counters reconcile with the driven load, then SIGTERM
-# it and assert a clean drained exit (exit code 0, "drained clean" on
-# stdout).
+# Daemon smoke test: start `kurtail daemon --synthetic` with a runtime
+# config file, stream one request over real HTTP, check /stats
+# invariants (at least one request admitted, zero leaked KV blocks),
+# scrape /metrics mid-run and check the Prometheus counters reconcile
+# with the driven load, SIGHUP-reload the config live (generation bumps,
+# a mid-flight stream survives, the new tenant policy sheds 429, an
+# invalid rewrite is rejected without killing the old config), run a
+# second instance under `KURTAIL_FAULT=engine_panic=1` and check the
+# supervisor path (first request 503 retryable, retry 200, exactly one
+# restart, zero leaked blocks), then SIGTERM everything and assert a
+# clean drained exit (exit code 0, "drained clean" on stdout).
 #
 # Usage: scripts/daemon_smoke.sh [path/to/kurtail]
-#        KURTAIL_SMOKE_PORT overrides the port (default 8473).
+#        KURTAIL_SMOKE_PORT overrides the port (default 8473; the
+#        engine-panic stage uses port+1).
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -15,18 +21,26 @@ bin="${1:-$repo_root/rust/target/release/kurtail}"
 port="${KURTAIL_SMOKE_PORT:-8473}"
 base="http://127.0.0.1:$port"
 log="$(mktemp)"
+log2="$(mktemp)"
+cfg="$(mktemp)"
+streamf="$(mktemp)"
 
 if [[ ! -x "$bin" ]]; then
   echo "daemon_smoke: no binary at $bin — build with 'cargo build --release' first" >&2
   exit 2
 fi
 
-"$bin" daemon --synthetic --addr "127.0.0.1:$port" >"$log" 2>&1 &
+# benign startup config: the reload stage rewrites it and SIGHUPs
+printf '{"per_tenant_cap": 0}\n' >"$cfg"
+
+"$bin" daemon --synthetic --addr "127.0.0.1:$port" --config "$cfg" >"$log" 2>&1 &
 pid=$!
+pid2=""
 cleanup() {
   kill -9 "$pid" 2>/dev/null || true
+  [[ -n "$pid2" ]] && kill -9 "$pid2" 2>/dev/null || true
   cat "$log" >&2 || true
-  rm -f "$log"
+  rm -f "$log" "$log2" "$cfg" "$streamf"
 }
 trap cleanup EXIT
 
@@ -91,6 +105,104 @@ assert "kurtail_kv_free_blocks" in series and "kurtail_live_lanes" in series, se
 print("daemon_smoke: metrics ok —", len(series), "series,",
       int(admitted), "admitted")
 '
+
+# --- live config reload (SIGHUP) --------------------------------------
+# boot generation is 1; a stream started before the reload must survive
+curl -sf "$base/stats" | python3 -c '
+import json, sys
+s = json.load(sys.stdin)
+assert s["config_generation"] == 1, s
+'
+curl -sf -X POST "$base/v1/generate" \
+  -d '{"prompt": "reload survivor", "max_tokens": 48, "stream": true}' >"$streamf" &
+stream_pid=$!
+sleep 0.2
+# rewrite: rate-limit tenant "metered" to a 2-token burst, then SIGHUP
+printf '{"tenants": {"metered": {"rate_tokens_per_s": 0.001, "burst_tokens": 2}}}\n' >"$cfg"
+kill -HUP "$pid"
+gen=1
+for _ in $(seq 1 100); do
+  gen="$(curl -sf "$base/stats" | python3 -c 'import json, sys; print(json.load(sys.stdin)["config_generation"])')"
+  [[ "$gen" -ge 2 ]] && break
+  sleep 0.1
+done
+if [[ "$gen" -lt 2 ]]; then
+  echo "daemon_smoke: SIGHUP reload never landed (generation $gen)" >&2
+  exit 1
+fi
+wait "$stream_pid"
+grep -q '"done": true' "$streamf"
+echo "daemon_smoke: SIGHUP reload landed (generation $gen), in-flight stream survived"
+# the new policy is live: "metered" asking for 8 tokens against a
+# 2-token burst sheds 429 with a Retry-After from the bucket deficit
+code="$(curl -s -o /dev/null -w '%{http_code}' -X POST "$base/v1/generate" \
+  -d '{"prompt": "x", "max_tokens": 8, "tenant": "metered"}')"
+if [[ "$code" != 429 ]]; then
+  echo "daemon_smoke: rate-limited tenant got $code, expected 429" >&2
+  exit 1
+fi
+# an invalid rewrite is rejected: generation holds, old config survives
+printf '{"per_tenant_cap": "not a number"}\n' >"$cfg"
+kill -HUP "$pid"
+sleep 0.5
+curl -sf "$base/stats" | python3 -c "
+import json, sys
+s = json.load(sys.stdin)
+assert s['config_generation'] == $gen, 'invalid config must not bump the generation: %s' % s
+"
+code="$(curl -s -o /dev/null -w '%{http_code}' -X POST "$base/v1/generate" \
+  -d '{"prompt": "x", "max_tokens": 8, "tenant": "metered"}')"
+if [[ "$code" != 429 ]]; then
+  echo "daemon_smoke: old policy should survive an invalid reload, got $code" >&2
+  exit 1
+fi
+echo "daemon_smoke: invalid config rejected, previous config stayed live"
+
+# --- engine-panic supervision ------------------------------------------
+# a second instance armed with a one-shot engine panic: the first
+# request rides the panicking step and gets a retryable 503; the retry
+# lands on the rebuilt engine; exactly one restart, zero leaked blocks
+port2=$((port + 1))
+base2="http://127.0.0.1:$port2"
+KURTAIL_FAULT="engine_panic=1" "$bin" daemon --synthetic --addr "127.0.0.1:$port2" >"$log2" 2>&1 &
+pid2=$!
+for _ in $(seq 1 100); do
+  if curl -sf "$base2/healthz" >/dev/null 2>&1; then
+    break
+  fi
+  if ! kill -0 "$pid2" 2>/dev/null; then
+    echo "daemon_smoke: fault daemon exited during startup" >&2
+    cat "$log2" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+hdrs="$(mktemp)"
+body="$(curl -s -D "$hdrs" -X POST "$base2/v1/generate" \
+  -d '{"prompt": "panic ride", "max_tokens": 4}')"
+grep -q "503" "$hdrs"
+echo "$body" | grep -q '"engine_restarting"'
+grep -qi "^retry-after:" "$hdrs"
+rm -f "$hdrs"
+curl -sf -X POST "$base2/v1/generate" \
+  -d '{"prompt": "panic ride", "max_tokens": 4}' | grep -q '"tokens"'
+curl -sf "$base2/stats" | python3 -c '
+import json, sys
+s = json.load(sys.stdin)
+assert s["engine_restarts"] == 1, "expected exactly one restart: %s" % s
+assert s["free_blocks"] == s["max_blocks"], "leaked KV blocks across restart: %s" % s
+'
+curl -sf "$base2/metrics" | grep -q "^kurtail_engine_restarts_total 1$"
+kill -TERM "$pid2"
+status=0
+wait "$pid2" || status=$?
+if [[ "$status" -ne 0 ]]; then
+  echo "daemon_smoke: fault daemon exited with status $status after SIGTERM" >&2
+  cat "$log2" >&2
+  exit 1
+fi
+pid2=""
+echo "daemon_smoke: engine panic supervised — 503, retry ok, 1 restart, no leak"
 
 # SIGTERM → graceful drain → clean exit
 kill -TERM "$pid"
