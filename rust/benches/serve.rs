@@ -67,6 +67,20 @@
 //! `kv_bytes_per_token_shared` (effective bytes per logical token with
 //! sharing) and `admission_p99_ms` (queue-wait p99 under the burst).
 //!
+//! At lanes = 16 only, a **KV-pressure stage** runs a low-class flood
+//! (2× the lane count) through the daemon host while the deterministic
+//! `kv_pressure` fault withholds half the block pool, then trickles in
+//! a high-class tenant once every effective block is committed. Each
+//! high arrival preempts the newest low lane (snapshot → release →
+//! requeue at class front); preempted streams pause and later resume
+//! via recompute, so with an unbounded queue every offered request
+//! should still complete. Recorded: `completed_under_pressure_ratio`
+//! (completions / offered — gated as a *floor* by
+//! `scripts/check_bench.sh`; a drop below the floor means degradation
+//! stopped being graceful and streams were dropped, not paused), plus
+//! ungated `pressure_preempted` / `pressure_resumed` /
+//! `pressure_recompute_tokens` context counters.
+//!
 //! Writes `BENCH_serve.json` (path override: `KURTAIL_BENCH_SERVE_JSON`)
 //! with tokens/sec at 1/4/16 concurrent sequences and KV bytes/token for
 //! the paged 4-bit pool vs the dense f32 cache. `scripts/bench.sh`
@@ -80,6 +94,7 @@ use std::time::{Duration, Instant};
 use kurtail::config::{KvQuant, QuantScheme};
 use kurtail::model::Params;
 use kurtail::runtime::{ConfigMeta, ParamSpec};
+use kurtail::serve::daemon::fault::FaultSpec;
 use kurtail::serve::daemon::{spawn_host, Event, HostConfig, SubmitReq};
 use kurtail::serve::{
     Engine, ParBackend, Priority, ServeConfig, ServeModel, ServeQuantSpec, TenantPolicy,
@@ -412,6 +427,117 @@ fn priority_overload_stage(model: &ServeModel, lanes: usize) -> Vec<(&'static st
     ]
 }
 
+/// KV-pressure graceful-degradation stage (lanes = 16 only): a
+/// low-class flood sized to fill the pool twice over while the
+/// deterministic `kv_pressure` fault withholds half the blocks, plus a
+/// high-class trickle arriving once every effective block is committed.
+/// Each high arrival preempts the newest low lane — snapshot → whole-
+/// reservation release → requeue at the front of its class — so the
+/// preempted streams pause and later resume via recompute instead of
+/// failing. With an unbounded admission queue and no deadlines, every
+/// offered request must therefore still complete:
+/// `completed_under_pressure_ratio` (completions / offered) is gated as
+/// a *floor* at lanes = 16 by `scripts/check_bench.sh`.
+fn kv_pressure_stage(model: &ServeModel, lanes: usize) -> Vec<(&'static str, Json)> {
+    const N_HI: usize = 4;
+    let n_lo = 2 * lanes;
+    // exact capacity for `lanes` concurrent lanes of PROMPT+NEW tokens
+    // (K+V × n_layers × ceil(tokens / block_tokens)); the fault then
+    // withholds half of it, so only lanes/2 low lanes seat at once and
+    // the high trickle must preempt to be seated
+    let blocks_per_lane = 2 * 4 * ((PROMPT_TOKENS + NEW_TOKENS).div_ceil(16));
+    let max_blocks = lanes * blocks_per_lane;
+    let cfg = ServeConfig {
+        max_lanes: lanes,
+        max_blocks,
+        kv_quant: KvQuant::Asym4,
+        int_gemm: Some(true),
+        arena: Some(true),
+        fused_epilogue: Some(true),
+        par_backend: Some(ParBackend::Steal),
+        preempt: Some(true),
+        obs: Some(true),
+        ..ServeConfig::default()
+    };
+    let eng = Engine::new(model.clone(), &cfg).expect("engine");
+    let mut tenants = BTreeMap::new();
+    tenants.insert(
+        "hi".to_string(),
+        TenantPolicy { priority: Priority::High, ..TenantPolicy::default() },
+    );
+    tenants.insert(
+        "lo".to_string(),
+        TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() },
+    );
+    let fault = FaultSpec { kv_pressure: max_blocks / 2, ..FaultSpec::default() };
+    let (host, handle) = spawn_host(eng, HostConfig { tenants, fault, ..HostConfig::default() });
+    let spawn_worker = |i: usize, tenant: &'static str| {
+        let host = host.clone();
+        thread::spawn(move || {
+            let prompt: Vec<i32> =
+                (0..PROMPT_TOKENS).map(|t| ((i * 31 + t * 7) % 256) as i32).collect();
+            let (tx, rx) = mpsc::channel();
+            let req = SubmitReq {
+                tokens: prompt,
+                n_tokens: NEW_TOKENS,
+                temp: 0.0,
+                seed: 0xC0FFEE + i as u64,
+                stop: None,
+                tenant: tenant.into(),
+                deadline: None,
+                events: tx,
+            };
+            if host.submit(req).is_err() {
+                return false;
+            }
+            loop {
+                match rx.recv() {
+                    Ok(Event::Token(_)) => {}
+                    Ok(Event::Done(_)) => return true,
+                    Ok(Event::Failed(_)) | Err(_) => return false,
+                }
+            }
+        })
+    };
+    let mut workers = Vec::with_capacity(n_lo + N_HI);
+    for i in 0..n_lo {
+        workers.push(spawn_worker(i, "lo"));
+    }
+    // let the flood commit every effective block before the high class
+    // arrives — the interesting case is hi preempting *live* lo lanes
+    thread::sleep(Duration::from_millis(80));
+    for i in 0..N_HI {
+        workers.push(spawn_worker(n_lo + i, "hi"));
+        thread::sleep(Duration::from_millis(10));
+    }
+    let offered = workers.len();
+    let mut completed = 0usize;
+    for w in workers {
+        completed += w.join().expect("pressure worker") as usize;
+    }
+    let stats = host.stats().expect("stats");
+    host.drain();
+    handle.join().expect("engine thread");
+    let ratio = completed as f64 / offered as f64;
+    println!(
+        "kv-pressure lanes={lanes:<2}: {completed}/{offered} completed (ratio {ratio:.2}), \
+         {} preempted, {} resumed, {} recompute tokens, pool {}/{} free",
+        stats.engine.preempted,
+        stats.engine.resumed,
+        stats.engine.resume_recompute_tokens,
+        stats.free_blocks,
+        stats.max_blocks
+    );
+    vec![
+        ("completed_under_pressure_ratio", num(ratio)),
+        ("pressure_offered", num(offered as f64)),
+        ("pressure_completed", num(completed as f64)),
+        ("pressure_preempted", num(stats.engine.preempted as f64)),
+        ("pressure_resumed", num(stats.engine.resumed as f64)),
+        ("pressure_recompute_tokens", num(stats.engine.resume_recompute_tokens as f64)),
+    ]
+}
+
 /// Shared-prefix workload: `REQUESTS` requests over one long shared
 /// system prompt with distinct short suffixes. The donor runs through
 /// its (chunked) prefill first so its prompt chunks are registered;
@@ -633,6 +759,9 @@ fn main() {
         row.extend(poisson_load(&int4, lanes, tok_s));
         row.extend(priority_overload_stage(&int4, lanes));
         row.extend(shared_prefix_stage(&int4, lanes));
+        if lanes == 16 {
+            row.extend(kv_pressure_stage(&int4, lanes));
+        }
         runs.push(obj(row));
         last_eng = Some(eng);
     }

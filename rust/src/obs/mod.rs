@@ -117,6 +117,18 @@ pub struct EngineObs {
     pub requests_retired: Arc<Counter>,
     pub requests_shed: Arc<Counter>,
     pub requests_canceled: Arc<Counter>,
+    /// Lanes snapshotted and requeued under KV pressure (not failures;
+    /// each stream resumes byte-identically).
+    pub requests_preempted: Arc<Counter>,
+    /// Preempted or restart-orphaned lanes re-admitted and continued.
+    pub requests_resumed: Arc<Counter>,
+    /// Positions re-run through prefill on resume (the recompute cost
+    /// of transparent degradation).
+    pub resume_recompute_tokens: Arc<Counter>,
+    /// Request retirements per second × 1000 (EWMA, maintained by the
+    /// daemon host loop) — drives the block-free-time `Retry-After`
+    /// fallback when the queue-wait histogram is still empty.
+    pub retire_rate_milli: Arc<Gauge>,
 }
 
 impl EngineObs {
@@ -187,6 +199,26 @@ impl EngineObs {
             requests_retired: r.counter("kurtail_requests_retired_total", "Requests retired (completed)", &[]),
             requests_shed: r.counter("kurtail_requests_shed_total", "Requests shed (queue full, too large, draining)", &[]),
             requests_canceled: r.counter("kurtail_requests_canceled_total", "Requests canceled (client or deadline)", &[]),
+            requests_preempted: r.counter(
+                "kurtail_requests_preempted_total",
+                "Live lanes snapshotted and requeued under KV pressure",
+                &[],
+            ),
+            requests_resumed: r.counter(
+                "kurtail_requests_resumed_total",
+                "Preempted or restart-orphaned lanes re-admitted and continued",
+                &[],
+            ),
+            resume_recompute_tokens: r.counter(
+                "kurtail_resume_recompute_tokens_total",
+                "Positions re-run through prefill when resuming a lane",
+                &[],
+            ),
+            retire_rate_milli: r.gauge(
+                "kurtail_retire_rate_milli",
+                "Request retirements per second x1000 (EWMA)",
+                &[],
+            ),
             registry,
         }
     }
@@ -232,6 +264,10 @@ mod tests {
             "kurtail_requests_retired_total",
             "kurtail_requests_shed_total",
             "kurtail_requests_canceled_total",
+            "kurtail_requests_preempted_total",
+            "kurtail_requests_resumed_total",
+            "kurtail_resume_recompute_tokens_total",
+            "kurtail_retire_rate_milli",
         ] {
             assert!(text.contains(name), "{name} missing from exposition:\n{text}");
             let type_lines =

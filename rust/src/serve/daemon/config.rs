@@ -31,6 +31,7 @@
 //!   "log": "json",
 //!   "fault": "slow_step=5",
 //!   "fault_seed": 7,
+//!   "resume_on_restart": true,
 //!   "tenants": {
 //!     "alice": { "priority": "high", "rate_tokens_per_s": 100, "burst_tokens": 200 },
 //!     "batch": { "priority": "low", "cap": 2 }
@@ -110,6 +111,10 @@ pub struct RuntimeConfig {
     pub fault: FaultSpec,
     /// Log mode override; `None` leaves `KURTAIL_LOG` in charge.
     pub log: Option<LogFormat>,
+    /// When the supervised engine restarts after a panic, re-submit
+    /// in-flight streams from their host-side snapshots (transparent
+    /// resume) instead of failing them with 503 `EngineRestarting`.
+    pub resume_on_restart: bool,
 }
 
 impl Default for RuntimeConfig {
@@ -123,6 +128,7 @@ impl Default for RuntimeConfig {
             tenants: BTreeMap::new(),
             fault: FaultSpec::none(),
             log: None,
+            resume_on_restart: true,
         }
     }
 }
@@ -178,6 +184,7 @@ impl RuntimeConfig {
             "fault",
             "fault_seed",
             "log",
+            "resume_on_restart",
         ];
         for key in top.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -206,6 +213,12 @@ impl RuntimeConfig {
             cfg.fault = FaultSpec::parse(spec, seed as u64).map_err(|e| format!("fault: {e}"))?;
         } else if doc.opt("fault_seed").is_some() {
             return Err("fault_seed: set without a fault spec".into());
+        }
+        if let Some(v) = doc.opt("resume_on_restart") {
+            match v {
+                Json::Bool(b) => cfg.resume_on_restart = *b,
+                _ => return Err("resume_on_restart: expected a boolean".into()),
+            }
         }
         if let Some(v) = doc.opt("tenants") {
             let tenants = v.as_obj().map_err(|e| format!("tenants: {e}"))?;
@@ -351,6 +364,7 @@ mod tests {
                 "log": "json",
                 "fault": "slow_step=5",
                 "fault_seed": 7,
+                "resume_on_restart": false,
                 "tenants": {
                     "alice": { "priority": "high", "rate_tokens_per_s": 100, "burst_tokens": 200 },
                     "batch": { "priority": "low", "cap": 2 }
@@ -364,6 +378,7 @@ mod tests {
         assert_eq!(cfg.log, Some(LogFormat::Json));
         assert_eq!(cfg.fault.slow_step_ms, 5);
         assert_eq!(cfg.fault.seed, 7);
+        assert!(!cfg.resume_on_restart, "explicit false overrides the on-by-default");
         let alice = cfg.policy("alice");
         assert_eq!(alice.priority, Priority::High);
         assert_eq!(alice.rate_tokens_per_s, 100.0);
@@ -395,6 +410,7 @@ mod tests {
             ("{\"log\": \"loud\"}", "log"),
             ("{\"fault\": \"bogus=1\"}", "fault"),
             ("{\"fault_seed\": 3}", "fault_seed"),
+            ("{\"resume_on_restart\": 3}", "resume_on_restart"),
             ("{\"tenants\": {\"a\": {\"priority\": \"urgent\"}}}", "priority"),
             ("{\"tenants\": {\"a\": {\"rate_tokens_per_s\": -5}}}", "rate_tokens_per_s"),
             ("{\"tenants\": {\"a\": {\"burst_tokens\": 5}}}", "burst_tokens without"),

@@ -21,10 +21,16 @@
 //!   disconnect → cancel → block-reclaim path.
 //! * `engine_panic=P` — with probability `P` per engine step, the
 //!   engine thread panics (once per process: the knob disarms after
-//!   firing), exercising the supervisor's catch → fail-in-flight →
-//!   rebuild → retry path. `P = 1` panics on the first step after
-//!   arming, so `engine_panic=1` deterministically yields exactly one
-//!   restart.
+//!   firing), exercising the supervisor's catch → rebuild →
+//!   resume-in-flight path (or fail-in-flight with
+//!   `resume_on_restart: false`). `P = 1` panics on the first step
+//!   after arming, so `engine_panic=1` deterministically yields exactly
+//!   one restart.
+//! * `kv_pressure=N` — every engine step withholds a constant `N`
+//!   blocks from the admission budget, shrinking the effective pool so
+//!   KV-pressure preemption is exercisable without giant prompts.
+//!   Deterministic and rng-free: arming it does not perturb the other
+//!   knobs' seeded timelines.
 
 use std::time::Duration;
 
@@ -38,6 +44,9 @@ pub struct FaultSpec {
     pub slow_step_ms: u64,
     pub drop_conn: f32,
     pub engine_panic: f32,
+    /// Blocks withheld from the admission budget every step (constant,
+    /// rng-free) — the deterministic KV-pressure fault.
+    pub kv_pressure: usize,
     pub seed: u64,
 }
 
@@ -51,6 +60,7 @@ impl FaultSpec {
             && self.slow_step_ms == 0
             && self.drop_conn <= 0.0
             && self.engine_panic <= 0.0
+            && self.kv_pressure == 0
     }
 
     /// Parse a `KURTAIL_FAULT`-style spec string.
@@ -67,9 +77,12 @@ impl FaultSpec {
                 "engine_panic" => {
                     out.engine_panic = val.trim().parse().map_err(|e| format!("engine_panic: {e}"))?
                 }
+                "kv_pressure" => {
+                    out.kv_pressure = val.trim().parse().map_err(|e| format!("kv_pressure: {e}"))?
+                }
                 other => {
                     return Err(format!(
-                        "unknown fault '{other}' (pool_exhaust/slow_step/drop_conn/engine_panic)"
+                        "unknown fault '{other}' (pool_exhaust/slow_step/drop_conn/engine_panic/kv_pressure)"
                     ))
                 }
             }
@@ -137,13 +150,18 @@ impl FaultClock {
         &self.spec
     }
 
-    /// Blocks to withhold from admission this step (`pool_exhaust`).
+    /// Blocks to withhold from admission this step: the whole pool with
+    /// probability `pool_exhaust`, plus the constant `kv_pressure`
+    /// withhold (rng-free, so arming it never shifts the seeded
+    /// `pool_exhaust` timeline). Clamped to the pool size.
     pub fn withhold_blocks(&mut self, max_blocks: usize) -> usize {
-        if self.spec.pool_exhaust > 0.0 && self.rng.uniform() < self.spec.pool_exhaust {
+        let exhausted = if self.spec.pool_exhaust > 0.0 && self.rng.uniform() < self.spec.pool_exhaust
+        {
             max_blocks
         } else {
             0
-        }
+        };
+        exhausted.max(self.spec.kv_pressure).min(max_blocks)
     }
 
     /// Injected latency per engine step (`slow_step`).
@@ -176,7 +194,14 @@ mod tests {
         let f = FaultSpec::parse("pool_exhaust=0.25, slow_step=10, drop_conn=0.5", 7).unwrap();
         assert_eq!(
             f,
-            FaultSpec { pool_exhaust: 0.25, slow_step_ms: 10, drop_conn: 0.5, engine_panic: 0.0, seed: 7 }
+            FaultSpec {
+                pool_exhaust: 0.25,
+                slow_step_ms: 10,
+                drop_conn: 0.5,
+                engine_panic: 0.0,
+                kv_pressure: 0,
+                seed: 7
+            }
         );
         let f = FaultSpec::parse("slow_step=3", 0).unwrap();
         assert_eq!(f.slow_step_ms, 3);
@@ -184,6 +209,10 @@ mod tests {
         let f = FaultSpec::parse("engine_panic=1", 0).unwrap();
         assert_eq!(f.engine_panic, 1.0);
         assert!(!f.is_none());
+        let f = FaultSpec::parse("kv_pressure=12", 0).unwrap();
+        assert_eq!(f.kv_pressure, 12);
+        assert!(!f.is_none());
+        assert!(FaultSpec::parse("kv_pressure=0.5", 0).is_err());
         assert!(FaultSpec::parse("", 0).unwrap().is_none());
         assert!(FaultSpec::parse("bogus=1", 0).is_err());
         assert!(FaultSpec::parse("drop_conn", 0).is_err());
@@ -224,6 +253,22 @@ mod tests {
         let a = run(&spec);
         assert_eq!(a, run(&spec), "per-step withholding replays exactly");
         assert!(a.iter().any(|&w| w == 8) && a.iter().any(|&w| w == 0));
+
+        // kv_pressure is a constant floor under the same timeline: the
+        // pool_exhaust decisions don't shift (rng-free knob), every
+        // step withholds at least N, and the result clamps to the pool
+        let both = FaultSpec { kv_pressure: 3, ..spec.clone() };
+        let b = {
+            let mut c = FaultClock::new(both.clone());
+            (0..64).map(|_| c.withhold_blocks(8)).collect::<Vec<_>>()
+        };
+        assert_eq!(
+            b,
+            a.iter().map(|&w| w.max(3)).collect::<Vec<_>>(),
+            "constant pressure floors the pool_exhaust timeline without shifting it"
+        );
+        let mut c = FaultClock::new(FaultSpec { kv_pressure: 100, ..FaultSpec::none() });
+        assert_eq!(c.withhold_blocks(8), 8, "pressure clamps to the pool size");
     }
 
     #[test]

@@ -30,13 +30,32 @@
 //!   the `--config` file swaps a validated snapshot atomically
 //!   (invalid files are logged and dropped, the old config stays).
 //!   In-flight streams never notice a reload.
-//! * **Engine supervision** — the engine thread runs its serve loop
-//!   under `catch_unwind`. On a panic (or step error) the supervisor
-//!   fails every in-flight request with the retryable
-//!   [`ServeError::EngineRestarting`] (503), rebuilds a fresh engine
-//!   from the dead one's read-only model, bumps
-//!   `kurtail_engine_restarts_total`, and keeps serving — request ids
-//!   keep counting across incarnations.
+//! * **Engine supervision with transparent resume** — the engine
+//!   thread runs its serve loop under `catch_unwind`. On a panic (or
+//!   step error) the supervisor rebuilds a fresh engine from the dead
+//!   one's read-only model, bumps `kurtail_engine_restarts_total`, and
+//!   — with `resume_on_restart` (default on) — re-submits every
+//!   in-flight stream from its host-side snapshot (prompt + tokens
+//!   already streamed, kept in [`Tracked`]). Recompute is bitwise
+//!   deterministic, so resumed streams continue exactly where they
+//!   paused: clients see a stall, never a 503, and deadlines and
+//!   rate-limit charges carry over. `resume_on_restart = false`
+//!   restores the old behaviour (fail in-flight with the retryable
+//!   [`ServeError::EngineRestarting`]). Request ids keep counting
+//!   across incarnations.
+//!
+//! Graceful degradation (PR 10):
+//!
+//! * **KV-pressure preemption** — when the pool runs hot
+//!   (`ServeConfig::kv_high_water`) and a queued higher-class request
+//!   cannot fit, the engine snapshots the newest lowest-class live
+//!   lane, releases its whole KV reservation and re-queues it at the
+//!   front of its class ([`crate::serve::LaneSnapshot`]). The daemon
+//!   holds the owning stream open — the client sees a pause — and the
+//!   lane later resumes byte-identically via chunked-prefill
+//!   recompute. `/stats` surfaces `preempted` / `resumed` /
+//!   `resume_recompute_tokens`; `KURTAIL_FAULT=kv_pressure=N`
+//!   synthesizes the pressure deterministically for tests.
 //!
 //! The daemon adds *no* model math of its own — completed token streams
 //! are bitwise identical to an in-process [`Engine::run`] over the same
@@ -59,7 +78,9 @@
 //! here), folds latency quantiles into `/stats`, emits one structured
 //! log line per request lifecycle event (`KURTAIL_LOG=json|text|off`),
 //! and derives `Retry-After` on backpressure responses from the
-//! observed queue-wait p50 instead of a constant.
+//! observed queue-wait p50 — or, before any queue wait was observed,
+//! from the expected time until a retirement frees KV blocks (the
+//! host loop's retirements/sec EWMA, `kurtail_retire_rate_milli`).
 
 pub mod config;
 pub mod fault;
@@ -82,7 +103,7 @@ use anyhow::Result;
 
 use crate::calib::ByteTokenizer;
 use crate::model::Params;
-use crate::obs::{self, Counter, EngineObs, HistSnapshot, LogValue, Registry};
+use crate::obs::{self, Counter, EngineObs, HistSnapshot, LogValue, Registry, RequestSpan};
 use crate::runtime::manifest::{ConfigMeta, ParamSpec};
 use crate::tensor::hadamard::random_hadamard;
 use crate::util::json::{self, Json};
@@ -91,6 +112,7 @@ use crate::util::Rng;
 
 use super::engine::{Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec};
 use super::error::ServeError;
+use super::scheduler::Priority;
 use config::{ConfigCell, ConfigWatcher, RuntimeConfig, TenantPolicy};
 use fault::{FaultClock, FaultSpec};
 use http::Request;
@@ -279,6 +301,9 @@ impl StatsSnapshot {
                     ("eos_retired", n(e.eos_retired)),
                     ("shed", n(e.shed)),
                     ("canceled", n(e.canceled)),
+                    ("preempted", n(e.preempted)),
+                    ("resumed", n(e.resumed)),
+                    ("resume_recompute_tokens", n(e.resume_recompute_tokens)),
                     ("peak_lanes", u(e.peak_lanes)),
                 ]),
             ),
@@ -347,14 +372,25 @@ fn snapshot(engine: &Engine, started: Instant) -> StatsSnapshot {
     }
 }
 
-/// Satellite: `Retry-After` from the observed queue drain rate — the
-/// p50 queue wait rounded up to whole seconds, clamped to `[1, 60]`.
-/// An empty histogram (cold start, obs off) falls back to `1`, the
-/// previous constant.
+/// `Retry-After` from the observed queue drain rate — the p50 queue
+/// wait rounded up to whole seconds, clamped to `[1, 60]`. With an
+/// empty histogram (cold start, obs off) the hint falls back to the
+/// expected time until the next retirement frees KV blocks, from the
+/// host loop's retirements/sec EWMA (`kurtail_retire_rate_milli`);
+/// with no observed retirements either it stays at `1`, the old
+/// constant.
 fn retry_after_s(eobs: &EngineObs) -> u64 {
     match eobs.queue_wait.snapshot().quantile_ns(0.5) {
         Some(ns) => ((ns as f64 / 1e9).ceil() as u64).clamp(1, 60),
-        None => 1,
+        None => {
+            let rate_milli = eobs.retire_rate_milli.get();
+            if rate_milli == 0 {
+                1
+            } else {
+                // ceil(1 / rate) seconds between block-freeing retirements
+                ((1000 + rate_milli - 1) / rate_milli).clamp(1, 60)
+            }
+        }
     }
 }
 
@@ -381,11 +417,30 @@ pub fn spawn_host_reloadable(engine: Engine, cell: Arc<ConfigCell>) -> (Host, Jo
     spawn_host_with(engine, cell, None)
 }
 
+/// Spawn a *supervised* host against a caller-held [`ConfigCell`]: an
+/// engine panic or step error rebuilds a fresh engine from `scfg` and
+/// — per `resume_on_restart` — resumes the in-flight streams. This is
+/// the daemon's engine-thread behaviour without the HTTP front-end,
+/// for the restart/resume property tests and the serve bench.
+pub fn spawn_host_supervised(
+    engine: Engine,
+    cell: Arc<ConfigCell>,
+    scfg: ServeConfig,
+) -> (Host, JoinHandle<()>) {
+    let restarts = Some(engine.obs().registry.counter(
+        "kurtail_engine_restarts_total",
+        "Engine rebuilds after a panic or step failure.",
+        &[],
+    ));
+    spawn_host_with(engine, cell, Some(Supervise { scfg, restarts }))
+}
+
 /// Rebuild recipe for the supervised path ([`Daemon::spawn`]): with it,
-/// an engine panic or step error is survivable — in-flight requests
-/// fail with the retryable [`ServeError::EngineRestarting`] and a fresh
-/// engine is built from the dead one's (read-only, already-warmed)
-/// model.
+/// an engine panic or step error is survivable — a fresh engine is
+/// built from the dead one's (read-only, already-warmed) model and
+/// in-flight streams resume from their host-side snapshots
+/// (`resume_on_restart`, default on) or fail with the retryable
+/// [`ServeError::EngineRestarting`] when resume is disabled.
 struct Supervise {
     scfg: ServeConfig,
     /// `kurtail_engine_restarts_total`; `None` with obs off.
@@ -415,8 +470,22 @@ struct Tracked {
     /// the request finishes.
     charged: f64,
     /// Tokens actually streamed so far — the refund basis when the
-    /// request ends without a completion.
+    /// request ends without a completion. Stays monotone across a
+    /// resume, so recomputed positions are never double-charged.
     sent: usize,
+    /// Resume snapshot: the prompt plus every token streamed so far,
+    /// appended as the engine emits. On an engine restart the
+    /// supervisor re-submits this into the fresh incarnation
+    /// ([`resume_tracked`]) so the stream continues byte-identically.
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    /// The remaining submit parameters, kept verbatim so a restart can
+    /// reconstruct the request exactly (same id → same rng stream).
+    n_tokens: usize,
+    temp: f32,
+    seed: u64,
+    stop: Option<i32>,
+    priority: Priority,
 }
 
 /// The per-tenant series (`kurtail_tenant_*_total{tenant=...}`).
@@ -647,8 +716,9 @@ fn run_supervisor(
             st.fail_all(&ServeError::Internal(msg));
             return;
         };
-        // supervised: shed the in-flight set with a retryable signal,
-        // rebuild from the dead engine's model, keep serving
+        // supervised: rebuild from the dead engine's model and keep
+        // serving — in-flight streams resume from their host snapshots
+        // (default) or shed with a retryable signal (resume off)
         st.restarts += 1;
         if let Some(c) = &sup.restarts {
             c.inc();
@@ -657,7 +727,10 @@ fn run_supervisor(
             "engine_restarting",
             &[("error", LogValue::Str(&msg)), ("restarts", LogValue::U64(st.restarts))],
         );
-        st.fail_all(&ServeError::EngineRestarting);
+        let resume = cell.current().resume_on_restart;
+        if !resume {
+            st.fail_all(&ServeError::EngineRestarting);
+        }
         let draining = engine.draining();
         let next_id = engine.next_id();
         match Engine::with_obs(engine.model().clone(), &sup.scfg, eobs.clone()) {
@@ -666,17 +739,63 @@ fn run_supervisor(
                 if draining {
                     fresh.begin_drain();
                 }
+                if resume {
+                    resume_tracked(&mut fresh, &mut st);
+                }
                 engine = fresh;
             }
             Err(e) => {
                 let err = format!("{e:#}");
                 obs::log::error("engine_rebuild_failed", &[("error", LogValue::Str(&err))]);
+                st.fail_all(&ServeError::EngineRestarting);
                 return;
             }
         }
     }
     // clean exit: whatever is still tracked gets the drain signal
     st.fail_all(&ServeError::Draining);
+}
+
+/// Transparent resume across an engine restart: every tracked stream is
+/// re-submitted into the fresh incarnation from its host-side snapshot
+/// (prompt + tokens already streamed). Bitwise-deterministic recompute
+/// makes the restart invisible — each resumed stream continues exactly
+/// where it paused, so its owner sees a stall instead of a 503, and
+/// deadlines and bucket charges carry over untouched (`Tracked` is
+/// host state, not engine state). A snapshot that had already produced
+/// its full budget (the crash landed between its last token and its
+/// completion event) gets a host-synthesized [`Event::Done`]. Ids are
+/// re-queued in descending order: `resubmit_resumed` prepends, so the
+/// queue comes out ascending and FCFS order within a class survives.
+fn resume_tracked(engine: &mut Engine, st: &mut HostState) {
+    let mut ids: Vec<usize> = st.tracked.keys().copied().collect();
+    ids.sort_unstable_by(|a, b| b.cmp(a));
+    let mut resumed = 0u64;
+    for id in ids {
+        let (tokens, prompt_len, n_tokens, temp, seed, stop, priority) = {
+            let t = &st.tracked[&id];
+            (t.tokens.clone(), t.prompt_len, t.n_tokens, t.temp, t.seed, t.stop, t.priority)
+        };
+        let produced = tokens.len() - prompt_len;
+        let hit_stop = produced > 0 && stop.is_some() && tokens.last() == stop.as_ref();
+        if produced >= n_tokens || hit_stop {
+            let c = Completion {
+                id,
+                prompt_len,
+                text: ByteTokenizer.decode(&tokens),
+                tokens,
+                span: RequestSpan { new_tokens: produced as u64, ..RequestSpan::default() },
+            };
+            st.finish(id, Event::Done(c));
+            continue;
+        }
+        match engine.resubmit_resumed(id, tokens, prompt_len, n_tokens, temp, seed, stop, priority)
+        {
+            Ok(()) => resumed += 1,
+            Err(e) => st.finish(id, Event::Failed(e)),
+        }
+    }
+    obs::log::info("engine_resumed", &[("streams", LogValue::U64(resumed))]);
 }
 
 /// One engine incarnation's serve loop: single owner of the [`Engine`],
@@ -694,6 +813,11 @@ fn run_host_once(
     let max_blocks = engine.pool().max_blocks;
     let mut disconnects: Vec<usize> = Vec::new();
     let mut seen_gen = 0u64;
+    // retirements/sec EWMA (`kurtail_retire_rate_milli`): the expected
+    // block-free time behind the cold-start `Retry-After` fallback
+    let obs_on = engine.obs().enabled;
+    let mut rate_at = Instant::now();
+    let mut rate_retired = engine.stats.retired;
     loop {
         // pick up config reloads: swap the fault timeline only when the
         // spec actually changed (a reload that leaves `fault` alone must
@@ -768,6 +892,10 @@ fn run_host_once(
             st.finish(id, Event::Failed(ServeError::Deadline));
         }
         if engine.queued() == 0 && engine.live_lanes() == 0 {
+            // idle: park the EWMA window so dead time between bursts
+            // doesn't read as a collapsed retirement rate
+            rate_at = Instant::now();
+            rate_retired = engine.stats.retired;
             continue;
         }
         // fault injection is a per-step decision so a given seed yields
@@ -784,6 +912,10 @@ fn run_host_once(
         let tracked = &mut st.tracked;
         let step = engine.step_with(|id, tok| {
             if let Some(t) = tracked.get_mut(&id) {
+                // grow the resume snapshot first: a disconnected owner
+                // is canceled below, so an extra token is harmless, but
+                // a missing one would corrupt a restart resume
+                t.tokens.push(tok);
                 if t.events.send(Event::Token(tok)).is_err() {
                     disconnects.push(id);
                 } else {
@@ -797,6 +929,18 @@ fn run_host_once(
         for c in engine.take_completions() {
             let id = c.id;
             st.finish(id, Event::Done(c));
+        }
+        // fold this window's retirement rate into the EWMA (only while
+        // actively stepping: idle time must not decay the estimate)
+        let dt = rate_at.elapsed();
+        if obs_on && dt >= Duration::from_millis(200) {
+            let retired = engine.stats.retired;
+            let inst = retired.saturating_sub(rate_retired) as f64 * 1000.0 / dt.as_secs_f64();
+            let prev = engine.obs().retire_rate_milli.get() as f64;
+            let ewma = if prev == 0.0 { inst } else { 0.8 * prev + 0.2 * inst };
+            engine.obs().retire_rate_milli.set(ewma.round() as u64);
+            rate_at = Instant::now();
+            rate_retired = retired;
         }
         // a dead Event receiver means the client hung up: reclaim the
         // lane's blocks now instead of decoding into the void
@@ -828,7 +972,10 @@ fn admit(
         shed_mirror(engine);
         Err(ServeError::RateLimited { retry_after_s })
     } else {
-        let r = engine.submit_tokens_prio(tokens, n_tokens, temp, seed, stop, policy.priority);
+        // the engine consumes the tokens; the clone seeds the host-side
+        // resume snapshot so a restart can reconstruct the request
+        let r =
+            engine.submit_tokens_prio(tokens.clone(), n_tokens, temp, seed, stop, policy.priority);
         if r.is_err() && charged > 0.0 {
             if let Some(b) = st.buckets.get_mut(&tenant) {
                 b.refund(charged);
@@ -840,7 +987,23 @@ fn admit(
         Ok(id) => {
             st.dobs.accepted(*id, &tenant);
             *st.tenants.entry(tenant.clone()).or_insert(0) += 1;
-            st.tracked.insert(*id, Tracked { events, tenant, deadline, charged, sent: 0 });
+            st.tracked.insert(
+                *id,
+                Tracked {
+                    events,
+                    tenant,
+                    deadline,
+                    charged,
+                    sent: 0,
+                    prompt_len: tokens.len(),
+                    tokens,
+                    n_tokens,
+                    temp,
+                    seed,
+                    stop,
+                    priority: policy.priority,
+                },
+            );
         }
         Err(e) => st.dobs.rejected(&tenant, e),
     }
@@ -1608,6 +1771,93 @@ mod tests {
     }
 
     #[test]
+    fn retry_after_cold_start_uses_the_retirement_rate() {
+        let eobs = EngineObs::new(true);
+        assert_eq!(retry_after_s(&eobs), 1, "no queue waits, no retirements: 1s");
+        eobs.retire_rate_milli.set(250); // 0.25 retirements/s -> ~4s per freed block
+        assert_eq!(retry_after_s(&eobs), 4);
+        eobs.retire_rate_milli.set(5); // pathologically slow drain clamps
+        assert_eq!(retry_after_s(&eobs), 60);
+        eobs.retire_rate_milli.set(4000); // fast drain floors at 1s
+        assert_eq!(retry_after_s(&eobs), 1);
+        // an observed queue wait beats the block-free-time estimate
+        eobs.retire_rate_milli.set(5);
+        for _ in 0..10 {
+            eobs.queue_wait.record_ns(3_500_000_000);
+        }
+        assert_eq!(retry_after_s(&eobs), 5, "the p50 path wins once populated");
+    }
+
+    #[test]
+    fn kv_pressure_fault_preempts_low_and_both_streams_complete() {
+        // block math (fake_llama_meta: 2 layers, block_tokens 2): each
+        // request reserves 2*2*ceil(6/2) = 12 blocks. kv_pressure=12
+        // leaves 14 of 26 usable, so the seated low lane sits at 12/14
+        // = 86% (over the 0.85 watermark) and the high arrival (12 > 2
+        // free) can only fit by preempting it.
+        let scfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            max_blocks: 26,
+            threads: Some(1),
+            preempt: Some(true),
+            obs: Some(true),
+            ..ServeConfig::default()
+        };
+        // reference: the low stream on an engine without pressure
+        let mut reference = test_engine(&scfg);
+        reference.submit_tokens(vec![1, 2], 4, 0.0, 7).unwrap();
+        let want_low = reference.run().unwrap().remove(0);
+
+        let mut tenants = BTreeMap::new();
+        tenants
+            .insert("vip".to_string(), TenantPolicy { priority: Priority::High, ..TenantPolicy::default() });
+        tenants
+            .insert("batch".to_string(), TenantPolicy { priority: Priority::Low, ..TenantPolicy::default() });
+        let cfg = HostConfig {
+            tenants,
+            fault: FaultSpec { kv_pressure: 12, ..FaultSpec::none() },
+            ..HostConfig::default()
+        };
+        let (host, handle) = spawn_host(test_engine(&scfg), cfg);
+        let mk = |tokens: Vec<i32>, tenant: &str, tx: Sender<Event>| SubmitReq {
+            tokens,
+            n_tokens: 4,
+            temp: 0.0,
+            seed: 7,
+            stop: None,
+            tenant: tenant.into(),
+            deadline: None,
+            events: tx,
+        };
+        let (tx_l, rx_l) = mpsc::channel();
+        host.submit(mk(vec![1, 2], "batch", tx_l)).unwrap();
+        // wait until low is decoding so the preemption hits a live lane
+        match rx_l.recv_timeout(Duration::from_secs(20)).expect("engine thread answers") {
+            Event::Token(_) => {}
+            other => panic!("expected low's first token, got {other:?}"),
+        }
+        let (tx_h, rx_h) = mpsc::channel();
+        host.submit(mk(vec![3, 4], "vip", tx_h)).unwrap();
+        let (_, done_h, err_h) = collect(&rx_h);
+        assert_eq!(err_h, None, "the high request admits under pressure");
+        assert!(done_h.is_some());
+        let (toks_l, done_l, err_l) = collect(&rx_l);
+        assert_eq!(err_l, None, "preemption is a pause, never an error");
+        let done_l = done_l.unwrap();
+        assert_eq!(done_l.tokens, want_low.tokens, "bitwise across preempt + resume");
+        assert_eq!(toks_l.len(), 4, "each generated token streamed exactly once");
+
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.engine.preempted, 1, "the low lane was snapshotted out");
+        assert_eq!(stats.engine.resumed, 1, "and later resumed");
+        assert!(stats.engine.resume_recompute_tokens > 0, "resume recomputed the prefix");
+        assert_eq!(stats.free_blocks, stats.max_blocks, "the pool came back whole");
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
     fn stats_json_carries_latency_quantiles() {
         let cfg = ServeConfig { obs: Some(true), ..ServeConfig::default() };
         let mut engine = test_engine(&cfg);
@@ -1623,6 +1873,12 @@ mod tests {
         );
         assert!(j.get("shared_block_refs").is_some(), "prefix-sharing gauge surfaced in /stats");
         assert!(j.get("engine").unwrap().get("prefix_shared_tokens").is_some());
+        for field in ["preempted", "resumed", "resume_recompute_tokens"] {
+            assert!(
+                j.get("engine").unwrap().get(field).is_some(),
+                "{field} surfaced in /stats for preemption dashboards"
+            );
+        }
         let lat = j.get("latency").unwrap();
         assert_eq!(lat.get("ttft").unwrap().get("count").unwrap().as_f64().unwrap(), 1.0);
         let gemm = lat.get("decode_phase").unwrap().get("gemm").unwrap();
@@ -1696,7 +1952,60 @@ mod tests {
     }
 
     #[test]
-    fn supervised_host_restarts_after_injected_panic() {
+    fn supervised_host_resumes_streams_across_engine_restart() {
+        let scfg = ServeConfig { obs: Some(true), ..ServeConfig::default() };
+        // reference: the same request on an engine that never crashes
+        let mut reference = test_engine(&scfg);
+        reference.submit_tokens(vec![1, 2, 3], 4, 0.8, 7).unwrap();
+        let want = reference.run().unwrap().remove(0);
+
+        let engine = test_engine(&scfg);
+        let registry = Arc::clone(&engine.obs().registry);
+        let restarts = registry.counter(
+            "kurtail_engine_restarts_total",
+            "Engine rebuilds after a panic or step failure.",
+            &[],
+        );
+        let cell = Arc::new(ConfigCell::new(RuntimeConfig {
+            fault: FaultSpec { engine_panic: 1.0, ..FaultSpec::none() },
+            ..RuntimeConfig::default() // resume_on_restart defaults on
+        }));
+        let (host, handle) = spawn_host_with(
+            engine,
+            cell,
+            Some(Supervise { scfg: scfg.clone(), restarts: Some(Arc::clone(&restarts)) }),
+        );
+        let (tx0, rx0) = mpsc::channel();
+        host.submit(SubmitReq {
+            tokens: vec![1, 2, 3],
+            n_tokens: 4,
+            temp: 0.8,
+            seed: 7,
+            stop: None,
+            tenant: "t".into(),
+            deadline: None,
+            events: tx0,
+        })
+        .unwrap();
+        // the one-shot panic fires on the first step; the supervisor
+        // must re-submit the stream into the rebuilt engine, not 503 it
+        let (toks, done, err) = collect(&rx0);
+        assert_eq!(err, None, "resume hides the restart from the client");
+        let done = done.unwrap();
+        assert_eq!(done.tokens, want.tokens, "resumed stream is bitwise the undisturbed run");
+        assert_eq!(toks, want.tokens[want.prompt_len..], "every token streamed exactly once");
+
+        let stats = host.stats().unwrap();
+        assert_eq!(stats.engine_restarts, 1);
+        assert_eq!(stats.engine.resumed, 1, "the replayed stream counts as resumed");
+        assert_eq!(stats.free_blocks, stats.max_blocks, "the crash leaked no KV blocks");
+        assert_eq!(restarts.get(), 1);
+        host.drain();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn resume_off_restores_the_retryable_restart_failure() {
         let scfg = ServeConfig { obs: Some(true), ..ServeConfig::default() };
         // reference: what the retried request should stream, bitwise
         let mut reference = test_engine(&scfg);
@@ -1712,6 +2021,7 @@ mod tests {
         );
         let cell = Arc::new(ConfigCell::new(RuntimeConfig {
             fault: FaultSpec { engine_panic: 1.0, ..FaultSpec::none() },
+            resume_on_restart: false,
             ..RuntimeConfig::default()
         }));
         let (host, handle) = spawn_host_with(
@@ -1746,6 +2056,7 @@ mod tests {
 
         let stats = host.stats().unwrap();
         assert_eq!(stats.engine_restarts, 1);
+        assert_eq!(stats.engine.resumed, 0, "nothing resumes with the knob off");
         assert_eq!(stats.free_blocks, stats.max_blocks, "the crash leaked no KV blocks");
         assert_eq!(restarts.get(), 1);
         host.drain();

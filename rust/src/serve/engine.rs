@@ -119,7 +119,7 @@ use super::error::ServeError;
 use super::int4::{panel_cache_budget, GemmScratch, Int4Weight};
 use super::kvcache::{KvPool, PrefixIndex, SeqKv};
 use super::qact::{int_gemm_enabled, quantize_rows_into, quantize_rows_scratch_on, scheme_fits_i8};
-use super::scheduler::{Priority, QueuedRequest, Scheduler, DEFAULT_HEAD_SKIPS};
+use super::scheduler::{LaneSnapshot, Priority, QueuedRequest, Scheduler, DEFAULT_HEAD_SKIPS};
 use super::scratch::{arena_enabled, scratch_decay_default, DecodeScratch};
 
 /// `KURTAIL_FUSED_EPILOGUE` escape hatch: the fused column-major /
@@ -143,6 +143,31 @@ fn fused_flag(var: Option<&str>) -> bool {
 /// sharing-transparency property tests). Read per engine build.
 pub fn prefix_share_enabled() -> bool {
     fused_flag(std::env::var("KURTAIL_PREFIX_SHARE").ok().as_deref())
+}
+
+/// `KURTAIL_PREEMPT` escape hatch: KV-pressure lane preemption with
+/// transparent resume is on by default; set `KURTAIL_PREEMPT=0` to
+/// restore the shed-only behaviour (queued requests wait or shed, live
+/// lanes are never disturbed). Read per engine build.
+pub fn preempt_enabled() -> bool {
+    fused_flag(std::env::var("KURTAIL_PREEMPT").ok().as_deref())
+}
+
+/// Default KV-pressure high watermark: preemption may fire only once
+/// committed blocks reach this fraction of the (non-withheld) pool.
+pub const DEFAULT_KV_HIGH_WATER: f32 = 0.85;
+
+/// `KURTAIL_KV_HIGH_WATER` fallback for [`ServeConfig::kv_high_water`]:
+/// unset (or out of `[0, 1]`) → [`DEFAULT_KV_HIGH_WATER`].
+pub fn kv_high_water_default() -> f32 {
+    water_var(std::env::var("KURTAIL_KV_HIGH_WATER").ok().as_deref())
+}
+
+/// Parse rule behind [`kv_high_water_default`], split out for tests.
+fn water_var(var: Option<&str>) -> f32 {
+    var.and_then(|v| v.trim().parse::<f32>().ok())
+        .filter(|w| (0.0..=1.0).contains(w))
+        .unwrap_or(DEFAULT_KV_HIGH_WATER)
 }
 
 /// Default prefill chunk: positions one admission may push through the
@@ -671,6 +696,21 @@ pub struct ServeConfig {
     /// [`DEFAULT_PREFILL_CHUNK`]), `Some(0)` prefills each prompt in
     /// one forward (the pre-chunking profile). Bitwise invisible.
     pub prefill_chunk: Option<usize>,
+    /// KV-pressure lane preemption: when the best queued request's
+    /// reservation cannot fit and pool occupancy is past the high
+    /// watermark, a live lane of a *strictly lower* priority class
+    /// (newest first) is snapshotted, its whole reservation released,
+    /// and the snapshot requeued at the front of its class — the stream
+    /// resumes byte-identically after re-prefill. `None` follows
+    /// `KURTAIL_PREEMPT` (unset → on); `Some(false)` restores the
+    /// shed-only behaviour.
+    pub preempt: Option<bool>,
+    /// Occupancy fraction of the (non-withheld) pool that arms
+    /// preemption. `None` follows `KURTAIL_KV_HIGH_WATER` (unset →
+    /// [`DEFAULT_KV_HIGH_WATER`]). `1.0` preempts only when the pool is
+    /// fully committed; values near `0` preempt as soon as the best
+    /// head fails to fit.
+    pub kv_high_water: Option<f32>,
 }
 
 impl Default for ServeConfig {
@@ -692,6 +732,8 @@ impl Default for ServeConfig {
             obs: None,
             prefix_share: None,
             prefill_chunk: None,
+            preempt: None,
+            kv_high_water: None,
         }
     }
 }
@@ -735,6 +777,18 @@ pub struct EngineStats {
     /// Requests canceled after acceptance — client disconnect, explicit
     /// cancel, or deadline expiry (queued or live).
     pub canceled: u64,
+    /// Live lanes snapshotted and requeued under KV pressure (each one
+    /// released its whole reservation; not a failure — the stream
+    /// resumes byte-identically on re-admission).
+    pub preempted: u64,
+    /// Preempted (or restart-orphaned) lanes re-admitted and continued.
+    /// Counted here, *not* in `admitted`, so `admitted` still counts
+    /// requests exactly once and balances `retired`.
+    pub resumed: u64,
+    /// Positions re-run through the prefill forward on resume (prompt +
+    /// already-emitted tokens, minus whatever the prefix index still
+    /// served) — the compute cost of transparent degradation.
+    pub resume_recompute_tokens: u64,
     pub peak_lanes: usize,
 }
 
@@ -750,12 +804,22 @@ struct Lane {
     stop: Option<i32>,
     /// The stop token fired — retire at the next sweep.
     stopped: bool,
+    /// Admission class — read by the preemption victim scan (strictly
+    /// lower classes than the stalled head are preemptible).
+    priority: Priority,
+    /// Admission tick (monotone per engine): preemption evicts the
+    /// *newest* victim within the lowest class, deterministically.
+    admit_seq: u64,
     seq: SeqKv,
     /// Tokens already written to the KV cache.
     pos: usize,
-    /// Prompt positions already cached (prefix-shared at admission or
-    /// computed by a prior chunk); prefill resumes here. `== prompt_len`
-    /// once the lane has sampled its first token.
+    /// Positions the prefill forward must cover before decode:
+    /// `prompt_len` for a fresh lane, `prompt_len + produced` for a
+    /// resumed one (already-emitted tokens re-prefill too).
+    prefill_target: usize,
+    /// Positions already cached (prefix-shared at admission or computed
+    /// by a prior chunk); prefill resumes here. `== prefill_target`
+    /// once the lane has sampled a token this incarnation.
     prefilled: usize,
     reserved_blocks: usize,
     /// Submit time (from `QueuedRequest::enqueued`) — drives the TTFT
@@ -800,6 +864,12 @@ pub struct Engine {
     withheld_blocks: usize,
     /// Draining: every submit is rejected; live lanes run to completion.
     draining: bool,
+    /// KV-pressure preemption enabled (`ServeConfig::preempt`).
+    preempt: bool,
+    /// Occupancy fraction arming preemption (`ServeConfig::kv_high_water`).
+    high_water: f32,
+    /// Monotone admission tick feeding `Lane::admit_seq`.
+    admit_ticks: u64,
     threads: usize,
     int_gemm: bool,
     /// Persistent-arena mode (`ServeConfig::arena` / `KURTAIL_ARENA`).
@@ -889,6 +959,9 @@ impl Engine {
             committed_blocks: 0,
             withheld_blocks: 0,
             draining: false,
+            preempt: cfg.preempt.unwrap_or_else(preempt_enabled),
+            high_water: cfg.kv_high_water.unwrap_or_else(kv_high_water_default),
+            admit_ticks: 0,
             threads,
             int_gemm,
             arena,
@@ -1068,6 +1141,7 @@ impl Engine {
             stop,
             priority,
             enqueued: Instant::now(),
+            resume: None,
         };
         match self.sched.push(req) {
             Ok(victim) => {
@@ -1170,10 +1244,18 @@ impl Engine {
     /// returned so the caller can notify owners), and every subsequent
     /// submit is rejected with [`ServeError::Draining`]. Live lanes are
     /// untouched — keep stepping until [`Self::step`] returns `false`
-    /// for a clean exit.
+    /// for a clean exit. Preempted lanes waiting to resume count as
+    /// live, not queued: they stay in the queue and run to completion
+    /// like the lanes they were.
     pub fn begin_drain(&mut self) -> Vec<usize> {
         self.draining = true;
-        let shed = self.sched.drain();
+        let (resumed, shed): (Vec<_>, Vec<_>) =
+            self.sched.drain().into_iter().partition(|r| r.resume.is_some());
+        // reverse requeue-front per class reconstructs the drained
+        // FCFS order exactly
+        for r in resumed.into_iter().rev() {
+            self.sched.requeue_front(r);
+        }
         self.stats.shed += shed.len() as u64;
         if self.obs.enabled {
             self.obs.requests_shed.add(shed.len() as u64);
@@ -1220,6 +1302,148 @@ impl Engine {
         (self.pool.max_blocks - self.committed_blocks).saturating_sub(self.withheld_blocks)
     }
 
+    /// KV-pressure preemption (runs at the top of every step, after
+    /// retirement): while the best queued request's reservation cannot
+    /// fit the admission budget AND pool occupancy is past the high
+    /// watermark, snapshot-and-requeue the newest live lane of the
+    /// lowest priority class *strictly below* that head's class. The
+    /// strict-class requirement makes single-class workloads (every
+    /// pre-preemption test and bench) completely preemption-free, and
+    /// rules out two same-class lanes thrashing each other. Victims are
+    /// not failures: each one releases its whole reservation through
+    /// the refcounted pool (shared-prefix refs simply drop one count)
+    /// and rejoins the queue at the front of its class, to resume
+    /// byte-identically. Deterministic: depends only on queue contents,
+    /// lane state, and block accounting — never wall-clock.
+    fn maybe_preempt(&mut self) {
+        if !self.preempt {
+            return;
+        }
+        loop {
+            let Some(head) = self.sched.peek_best() else { return };
+            let needed = self.pool.blocks_needed(self.model.meta.n_layers, head.total_tokens());
+            if needed <= self.uncommitted_blocks() {
+                return; // the head admits on its own this step
+            }
+            // occupancy watermark over the non-withheld pool: below it,
+            // pressure is transient (retirements will free blocks soon)
+            // and preempting would churn lanes for nothing
+            let avail = self.pool.max_blocks.saturating_sub(self.withheld_blocks);
+            if (self.committed_blocks as f32) < self.high_water * avail as f32 {
+                return;
+            }
+            let head_rank = head.priority.rank();
+            // victim: lowest class first (highest rank), newest within
+            // the class (largest admit tick) — the lane that lost the
+            // least work and outranks the fewest peers
+            let victim = (0..self.lanes.len())
+                .filter(|&s| {
+                    self.lanes[s].as_ref().is_some_and(|l| l.priority.rank() > head_rank)
+                })
+                .max_by_key(|&s| {
+                    let l = self.lanes[s].as_ref().unwrap();
+                    (l.priority.rank(), l.admit_seq)
+                });
+            let Some(slot) = victim else { return };
+            self.preempt_lane(slot);
+        }
+    }
+
+    /// Snapshot one live lane, release its whole KV reservation, and
+    /// requeue it at the front of its priority class (see
+    /// [`LaneSnapshot`]). The lane's emitted tokens stand — the daemon
+    /// keeps its stream open — and on re-admission the chunked-prefill
+    /// path recomputes `prompt + emitted` (prefix-index cheap when the
+    /// donor blocks survived) before emitting the next token.
+    fn preempt_lane(&mut self, slot: usize) {
+        let mut lane = self.lanes[slot].take().unwrap();
+        self.release_lane_blocks(&mut lane.seq);
+        self.committed_blocks -= lane.reserved_blocks;
+        self.stats.preempted += 1;
+        if self.obs.enabled {
+            self.obs.requests_preempted.inc();
+        }
+        self.sched.requeue_front(QueuedRequest {
+            id: lane.id,
+            n_new: lane.n_new,
+            temp: lane.temp,
+            // the snapshot rng supersedes seed-derived sampling state
+            seed: 0,
+            stop: lane.stop,
+            priority: lane.priority,
+            enqueued: lane.enqueued,
+            resume: Some(LaneSnapshot {
+                prompt_len: lane.prompt_len,
+                produced: lane.produced,
+                rng: lane.rng,
+            }),
+            tokens: lane.tokens,
+        });
+    }
+
+    /// Restart support: re-inject a request that was in flight (or
+    /// queued) in a previous engine incarnation, resuming after
+    /// `tokens.len() - prompt_len` already-delivered tokens. The
+    /// sampling rng is reconstructed by replaying the per-request
+    /// stream: [`sample_token_buf`] draws exactly one uniform per
+    /// emitted token at `temp > 0` and none at `temp <= 0`, so the
+    /// replayed state equals the dead lane's — the continuation is
+    /// byte-identical to the undisturbed run. Queue-bound- and
+    /// drain-exempt like preemption requeues (the request already held
+    /// admission once); the id sequence is advanced past `id`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resubmit_resumed(
+        &mut self,
+        id: usize,
+        tokens: Vec<i32>,
+        prompt_len: usize,
+        n_new: usize,
+        temp: f32,
+        seed: u64,
+        stop: Option<i32>,
+        priority: Priority,
+    ) -> Result<(), ServeError> {
+        if prompt_len == 0 || prompt_len > tokens.len() {
+            return Err(ServeError::Invalid(format!(
+                "resume: prompt_len {prompt_len} out of range for {} tokens",
+                tokens.len()
+            )));
+        }
+        let produced = tokens.len() - prompt_len;
+        if produced > n_new {
+            return Err(ServeError::Invalid(format!(
+                "resume: {produced} emitted tokens exceed the n_new budget {n_new}"
+            )));
+        }
+        let needed = self.pool.blocks_needed(self.model.meta.n_layers, prompt_len + n_new);
+        if needed > self.pool.max_blocks {
+            return Err(ServeError::RequestTooLarge {
+                needed_blocks: needed,
+                pool_blocks: self.pool.max_blocks,
+            });
+        }
+        let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if temp > 0.0 {
+            for _ in 0..produced {
+                rng.uniform();
+            }
+        }
+        self.sched.requeue_front(QueuedRequest {
+            id,
+            tokens,
+            n_new,
+            temp,
+            seed,
+            stop,
+            priority,
+            enqueued: Instant::now(),
+            resume: Some(LaneSnapshot { prompt_len, produced, rng }),
+        });
+        self.next_id = self.next_id.max(id + 1);
+        self.refresh_gauges();
+        Ok(())
+    }
+
     /// One engine iteration: retire finished lanes, admit + prefill
     /// queued requests into free lanes, then decode one token on every
     /// other live lane. Returns `false` once no work remains.
@@ -1235,6 +1459,7 @@ impl Engine {
     /// SSE-style serving hook; `step()` is this with a no-op callback.
     pub fn step_with(&mut self, mut on_token: impl FnMut(usize, i32)) -> Result<bool> {
         self.retire_finished();
+        self.maybe_preempt();
 
         // admit into free lanes (FCFS, reservation-checked); a freshly
         // admitted lane attaches any shared prompt prefix here and
@@ -1256,29 +1481,42 @@ impl Engine {
             self.committed_blocks += reserved;
             let rng = req.rng();
             let admitted_at = Instant::now();
-            let queue_wait_ns = if self.obs.enabled {
+            // a resumed lane already paid its queue wait in its first
+            // incarnation; recording the gap again would double-count
+            let queue_wait_ns = if self.obs.enabled && req.resume.is_none() {
                 let ns = admitted_at.duration_since(req.enqueued).as_nanos() as u64;
                 self.obs.queue_wait.record_ns(ns);
                 ns
             } else {
                 0
             };
+            let resume = req.resume;
+            let (prompt_len, produced) = match &resume {
+                Some(s) => (s.prompt_len, s.produced),
+                None => (req.tokens.len(), 0),
+            };
             // reserve the worst-case token and block capacity up front
             // so the per-step pushes below never reallocate mid-decode
             let mut tokens = req.tokens;
-            tokens.reserve(req.n_new);
+            tokens.reserve(req.n_new - produced);
             let per_list = (total + self.pool.block_tokens - 1) / self.pool.block_tokens;
             let mut lane = Lane {
                 id: req.id,
-                prompt_len: tokens.len(),
+                prompt_len,
                 n_new: req.n_new,
-                produced: 0,
+                produced,
                 temp: req.temp,
                 rng,
                 stop: req.stop,
                 stopped: false,
+                priority: req.priority,
+                admit_seq: self.admit_ticks,
                 seq: SeqKv::with_capacity(self.model.meta.n_layers, per_list),
                 pos: 0,
+                // resumed lanes re-prefill prompt + already-emitted
+                // tokens; the final chunk samples the *next* token with
+                // the snapshotted rng, continuing the stream exactly
+                prefill_target: tokens.len(),
                 prefilled: 0,
                 reserved_blocks: reserved,
                 enqueued: req.enqueued,
@@ -1287,13 +1525,16 @@ impl Engine {
                 prefill_ns: 0,
                 tokens,
             };
-            // map any shared prompt prefix onto resident blocks; the
-            // fresh allocations (COW tail + later appends) stay within
-            // this lane's conservative reservation, so attach cannot
-            // exhaust the pool
+            self.admit_ticks += 1;
+            // map any shared prefix onto resident blocks; the fresh
+            // allocations (COW tail + later appends) stay within this
+            // lane's conservative reservation, so attach cannot
+            // exhaust the pool. For a resumed lane the prefix covers
+            // emitted tokens too — cheap resume when the donor survived
             if self.prefix_share {
-                let shared =
-                    self.prefix.attach(&mut self.pool, &lane.tokens[..lane.prompt_len], &mut lane.seq)?;
+                let shared = self
+                    .prefix
+                    .attach(&mut self.pool, &lane.tokens[..lane.prefill_target], &mut lane.seq)?;
                 if shared > 0 {
                     lane.prefilled = shared;
                     self.stats.prefix_hits += 1;
@@ -1303,19 +1544,29 @@ impl Engine {
                     }
                 }
             }
-            self.lanes[slot] = Some(lane);
-            self.stats.admitted += 1;
-            if self.obs.enabled {
-                self.obs.requests_admitted.inc();
+            if resume.is_some() {
+                let recompute = (lane.prefill_target - lane.prefilled) as u64;
+                self.stats.resumed += 1;
+                self.stats.resume_recompute_tokens += recompute;
+                if self.obs.enabled {
+                    self.obs.requests_resumed.inc();
+                    self.obs.resume_recompute_tokens.add(recompute);
+                }
+            } else {
+                self.stats.admitted += 1;
+                if self.obs.enabled {
+                    self.obs.requests_admitted.inc();
+                }
             }
+            self.lanes[slot] = Some(lane);
         }
 
         // one bounded prefill chunk per mid-prefill lane, in slot
-        // order; a lane whose final chunk ran samples its first token
+        // order; a lane whose final chunk ran samples its next token
         // inside prefill_step and sits out this iteration's decode
         let mut finished_prefill: Vec<usize> = Vec::new();
         for slot in 0..self.lanes.len() {
-            if self.lanes[slot].as_ref().is_some_and(|l| l.produced == 0)
+            if self.lanes[slot].as_ref().is_some_and(|l| l.prefilled < l.prefill_target)
                 && self.prefill_step(slot, &mut on_token)?
             {
                 finished_prefill.push(slot);
@@ -1330,7 +1581,9 @@ impl Engine {
         slots.extend((0..self.lanes.len()).filter(|&s| {
             self.lanes[s]
                 .as_ref()
-                .map_or(false, |l| l.produced >= 1 && l.produced < l.n_new && !l.stopped)
+                .map_or(false, |l| {
+                    l.prefilled >= l.prefill_target && l.produced < l.n_new && !l.stopped
+                })
                 && !finished_prefill.contains(&s)
         }));
         let step_res = if slots.is_empty() {
@@ -1429,7 +1682,7 @@ impl Engine {
         let t_prefill = self.obs.enabled.then(Instant::now);
         let (p, start) = {
             let lane = self.lanes[slot].as_ref().unwrap();
-            (lane.prompt_len, lane.prefilled)
+            (lane.prefill_target, lane.prefilled)
         };
         let chunk = if self.prefill_chunk == 0 { p } else { self.prefill_chunk };
         let n = chunk.min(p - start);
@@ -1475,7 +1728,7 @@ impl Engine {
         };
         let next = sample_token_buf(row, lane.temp, &mut lane.rng, exps);
         lane.tokens.push(next);
-        lane.produced = 1;
+        lane.produced += 1;
         if lane.stop == Some(next) {
             lane.stopped = true;
         }
@@ -1483,9 +1736,14 @@ impl Engine {
         stats.decode_tokens += 1;
         if let Some(t0) = t_prefill {
             lane.prefill_ns += t0.elapsed().as_nanos() as u64;
-            obs.prefill.record_ns(lane.prefill_ns);
-            // TTFT spans submit → this first sampled token
-            obs.ttft.record_ns(lane.enqueued.elapsed().as_nanos() as u64);
+            // a resumed lane (produced > 1 here) already recorded its
+            // prefill and TTFT in its first incarnation — per-request
+            // histogram counts must keep matching `admitted`
+            if lane.produced == 1 {
+                obs.prefill.record_ns(lane.prefill_ns);
+                // TTFT spans submit → this first sampled token
+                obs.ttft.record_ns(lane.enqueued.elapsed().as_nanos() as u64);
+            }
             obs.decode_tokens.inc();
         }
         // the full prompt is resident — make its blocks discoverable
@@ -1831,6 +2089,19 @@ impl Engine {
     /// rebuild and a stale cancel can never hit a stranger's request.
     pub fn resume_ids_from(&mut self, next_id: usize) {
         self.next_id = self.next_id.max(next_id);
+    }
+
+    /// Whether KV-pressure preemption is active
+    /// (`ServeConfig::preempt`, falling back to `KURTAIL_PREEMPT`).
+    pub fn preempt(&self) -> bool {
+        self.preempt
+    }
+
+    /// The occupancy fraction arming preemption
+    /// (`ServeConfig::kv_high_water`, falling back to
+    /// `KURTAIL_KV_HIGH_WATER`).
+    pub fn kv_high_water(&self) -> f32 {
+        self.high_water
     }
 }
 
@@ -2852,5 +3123,238 @@ mod tests {
         assert_eq!(done[0].tokens, want[1].tokens, "sharer stream survives the donor bitwise");
         assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks, "no leak, no double free");
         assert_eq!(eng.shared_block_refs(), 0);
+    }
+
+    // ------------------------------------------- KV-pressure preemption
+    //
+    // fp model: 2 layers, block_tokens 2 → a lane of `total` tokens
+    // reserves 2·2·ceil(total/2) blocks (12 for the 6-token requests
+    // below). max_blocks is picked per test so the low lane fits alone
+    // *past* the 0.85 watermark while the arriving head cannot.
+
+    fn preempt_cfg(max_lanes: usize, max_blocks: usize) -> ServeConfig {
+        ServeConfig {
+            max_lanes,
+            block_tokens: 2,
+            max_blocks,
+            threads: Some(1),
+            preempt: Some(true),
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn preemption_resumes_bitwise_and_leaves_the_pool_whole() {
+        let model = fp_model();
+        // undisturbed references: the low lane keeps id 0 and seed 5 in
+        // both runs, so its rng stream is comparable at temperature;
+        // the high lane is greedy (id-independent)
+        let mut reference = Engine::new(model.clone(), &preempt_cfg(2, 0)).unwrap();
+        reference.submit_tokens(vec![1, 2], 4, 0.8, 5).unwrap();
+        let want_low = reference.run().unwrap().remove(0).tokens;
+        let mut ref_high = Engine::new(model.clone(), &preempt_cfg(2, 0)).unwrap();
+        ref_high.submit_tokens(vec![3, 4], 4, 0.0, 0).unwrap();
+        let want_high = ref_high.run().unwrap().remove(0).tokens;
+
+        // 14 blocks: the low lane's 12 sit at 86% occupancy and leave
+        // only 2 uncommitted — the high arrival's 12 cannot fit
+        let mut eng = Engine::new(model, &preempt_cfg(2, 14)).unwrap();
+        let low = eng.submit_tokens_prio(vec![1, 2], 4, 0.8, 5, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap()); // prefill + first token
+        assert!(eng.step().unwrap()); // second token
+        let high = eng.submit_tokens_prio(vec![3, 4], 4, 0.0, 0, None, Priority::High).unwrap();
+        assert!(eng.step().unwrap()); // preempts low, admits high
+        assert_eq!(eng.stats.preempted, 1, "the low lane is snapshotted under pressure");
+        assert_eq!(eng.queued(), 1, "the victim waits at the front of its class");
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, low);
+        assert_eq!(done[0].tokens, want_low, "preempted stream must resume byte-identically");
+        assert_eq!(done[1].id, high);
+        assert_eq!(done[1].tokens, want_high, "the preemptor's stream is undisturbed");
+        assert_eq!(eng.stats.admitted, 2, "resume is not a second admission");
+        assert_eq!(eng.stats.resumed, 1);
+        assert_eq!(eng.stats.retired, 2);
+        // at preemption the lane held 2 prompt + 2 emitted tokens; its
+        // blocks were freed and no donor matches, so all 4 recompute
+        assert_eq!(eng.stats.resume_recompute_tokens, 4);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks, "pool whole afterward");
+        assert_eq!(eng.committed_blocks(), 0);
+        assert_eq!(eng.shared_block_refs(), 0);
+    }
+
+    #[test]
+    fn preemption_evicts_the_newest_lane_of_the_lowest_class() {
+        let model = fp_model();
+        // two low lanes (12 blocks each, 24/26 committed), high head:
+        // exactly one eviction — the newer low lane — lets it fit
+        let mut eng = Engine::new(model.clone(), &preempt_cfg(3, 26)).unwrap();
+        let l1 = eng.submit_tokens_prio(vec![1, 2], 3, 0.0, 0, None, Priority::Low).unwrap();
+        let l2 = eng.submit_tokens_prio(vec![4, 5], 3, 0.0, 0, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap());
+        let h = eng.submit_tokens_prio(vec![7, 8], 2, 0.0, 0, None, Priority::High).unwrap();
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.preempted, 1, "one eviction suffices for the head to fit");
+        // cancel the survivors: the parked victim identifies itself by
+        // completing alone
+        assert!(eng.cancel(l1) && eng.cancel(h));
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, l2, "within a class the newest lane loses");
+        let mut r = Engine::new(model, &preempt_cfg(3, 0)).unwrap();
+        r.submit_tokens(vec![4, 5], 3, 0.0, 0).unwrap();
+        assert_eq!(done[0].tokens, r.run().unwrap().remove(0).tokens);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn preemption_class_order_beats_age() {
+        let model = fp_model();
+        // the low lane is *older* than the normal one; a high head must
+        // still evict the low lane — class outranks admission age
+        let mut eng = Engine::new(model.clone(), &preempt_cfg(3, 26)).unwrap();
+        let lo = eng.submit_tokens_prio(vec![1, 2], 3, 0.0, 0, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap()); // lo admitted first (admit_seq 0)
+        let no = eng.submit_tokens_prio(vec![4, 5], 3, 0.0, 0, None, Priority::Normal).unwrap();
+        assert!(eng.step().unwrap()); // no admitted second (admit_seq 1)
+        let h = eng.submit_tokens_prio(vec![7, 8], 2, 0.0, 0, None, Priority::High).unwrap();
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.preempted, 1);
+        assert!(eng.cancel(no) && eng.cancel(h));
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, lo, "the lowest class loses even when a lower-ranked lane is newer");
+        let mut r = Engine::new(model, &preempt_cfg(3, 0)).unwrap();
+        r.submit_tokens(vec![1, 2], 3, 0.0, 0).unwrap();
+        assert_eq!(done[0].tokens, r.run().unwrap().remove(0).tokens);
+    }
+
+    #[test]
+    fn preemption_mid_chunked_prefill_resumes_bitwise() {
+        // a victim that has not emitted a single token yet (caught
+        // between prefill chunks) snapshots produced = 0 and restarts
+        // its prefill from scratch on resume — on the quantized KV path
+        let model = quant_model();
+        let cfg = ServeConfig {
+            kv_quant: KvQuant::Asym4,
+            prefill_chunk: Some(1),
+            ..preempt_cfg(2, 14)
+        };
+        let mut reference =
+            Engine::new(model.clone(), &ServeConfig { max_blocks: 0, ..cfg.clone() }).unwrap();
+        reference.submit_tokens(vec![1, 2, 3, 4], 2, 0.8, 5).unwrap();
+        let want = reference.run().unwrap().remove(0).tokens;
+
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        let low = eng.submit_tokens_prio(vec![1, 2, 3, 4], 2, 0.8, 5, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap()); // prefill chunk 1 of 4
+        assert!(eng.step().unwrap()); // chunk 2 of 4 — nothing emitted yet
+        let high = eng.submit_tokens_prio(vec![7, 8], 4, 0.0, 0, None, Priority::High).unwrap();
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.preempted, 1, "a mid-prefill lane is a valid victim");
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, low);
+        assert_eq!(done[0].tokens, want, "mid-prefill snapshot resumes bitwise");
+        assert_eq!(done[1].id, high);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+        assert_eq!(eng.shared_block_refs(), 0);
+    }
+
+    #[test]
+    fn preempted_lane_still_cancels_while_queued() {
+        // the daemon enforces deadlines by cancel-by-id; a lane parked
+        // in the queue between incarnations must stay reachable
+        let model = fp_model();
+        let mut eng = Engine::new(model, &preempt_cfg(2, 14)).unwrap();
+        let low = eng.submit_tokens_prio(vec![1, 2], 4, 0.0, 0, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap());
+        assert!(eng.step().unwrap());
+        let high = eng.submit_tokens_prio(vec![3, 4], 4, 0.0, 0, None, Priority::High).unwrap();
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.preempted, 1);
+        assert!(eng.cancel(low), "deadline-style cancel reaches the parked snapshot");
+        assert_eq!(eng.stats.canceled, 1);
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, high);
+        assert_eq!(eng.stats.resumed, 0, "a canceled snapshot never resumes");
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+        assert_eq!(eng.committed_blocks(), 0);
+    }
+
+    #[test]
+    fn drain_keeps_preempted_lanes_and_sheds_fresh_queue() {
+        let model = fp_model();
+        let mut eng = Engine::new(model, &preempt_cfg(2, 14)).unwrap();
+        let low = eng.submit_tokens_prio(vec![1, 2], 4, 0.0, 0, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap());
+        assert!(eng.step().unwrap());
+        let high = eng.submit_tokens_prio(vec![3, 4], 4, 0.0, 0, None, Priority::High).unwrap();
+        assert!(eng.step().unwrap());
+        assert_eq!(eng.stats.preempted, 1);
+        // a fresh request queued behind the snapshot is shed by drain —
+        // the preempted lane is morally in flight and survives it
+        let fresh = eng.submit_tokens(vec![6], 2, 0.0, 0).unwrap();
+        let shed = eng.begin_drain();
+        assert_eq!(shed, vec![fresh]);
+        let done = eng.run().unwrap();
+        assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), vec![low, high]);
+        assert_eq!(eng.stats.resumed, 1, "the snapshot resumed during the drain");
+        assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+    }
+
+    #[test]
+    fn preemption_off_keeps_the_head_waiting() {
+        let model = fp_model();
+        let cfg = ServeConfig { preempt: Some(false), ..preempt_cfg(2, 14) };
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        assert!(!eng.preempt());
+        eng.submit_tokens_prio(vec![1, 2], 4, 0.0, 0, None, Priority::Low).unwrap();
+        assert!(eng.step().unwrap());
+        eng.submit_tokens_prio(vec![3, 4], 4, 0.0, 0, None, Priority::High).unwrap();
+        let done = eng.run().unwrap();
+        assert_eq!(done.len(), 2, "the head waits out the low lane instead of evicting it");
+        assert_eq!(eng.stats.preempted, 0);
+        assert_eq!(eng.stats.resumed, 0);
+    }
+
+    #[test]
+    fn resubmit_resumed_replays_the_rng_and_continues_bitwise() {
+        // the supervisor's restart path: a fresh engine handed only
+        // (prompt + delivered tokens, seed) must finish the stream
+        // byte-identically — at temperature (rng replay) and greedy
+        let model = fp_model();
+        let cfg = preempt_cfg(2, 0);
+        for temp in [0.8f32, 0.0] {
+            let mut reference = Engine::new(model.clone(), &cfg).unwrap();
+            let id = reference.submit_tokens(vec![1, 2, 3], 5, temp, 9).unwrap();
+            let want = reference.run().unwrap().remove(0).tokens;
+            assert_eq!(want.len(), 8);
+
+            let mut eng = Engine::new(model.clone(), &cfg).unwrap();
+            // the dead incarnation had delivered the first two tokens
+            eng.resubmit_resumed(id, want[..5].to_vec(), 3, 5, temp, 9, None, Priority::Normal)
+                .unwrap();
+            let done = eng.run().unwrap();
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].id, id);
+            assert_eq!(done[0].prompt_len, 3);
+            assert_eq!(done[0].tokens, want, "temp={temp}: resumed continuation diverged");
+            assert_eq!(eng.stats.resumed, 1);
+            assert_eq!(eng.stats.admitted, 0, "a resumed lane is not a fresh admission");
+            assert!(eng.next_id() > id, "the id sequence continues past the resumed id");
+            assert_eq!(eng.pool().free_blocks(), eng.pool().max_blocks);
+        }
+        // malformed snapshots are rejected, not admitted
+        let mut eng = Engine::new(model, &cfg).unwrap();
+        assert!(matches!(
+            eng.resubmit_resumed(0, vec![1, 2], 0, 4, 0.0, 0, None, Priority::Normal),
+            Err(ServeError::Invalid(_))
+        ));
+        assert!(matches!(
+            eng.resubmit_resumed(0, vec![1, 2, 3, 4], 2, 1, 0.0, 0, None, Priority::Normal),
+            Err(ServeError::Invalid(_))
+        ));
     }
 }

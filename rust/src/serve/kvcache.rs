@@ -36,7 +36,12 @@
 //!   ids so the caller can prune its [`PrefixIndex`]). The PR-6
 //!   leak-free invariant — pool whole after any admit/cancel/EOS/drain
 //!   interleaving — extends unchanged: when every holder has released,
-//!   every refcount is zero and `free_blocks == max_blocks`.
+//!   every refcount is zero and `free_blocks == max_blocks`. KV-pressure
+//!   preemption (PR 10) releases a victim lane's *whole* reservation
+//!   through this same last-reference path: blocks the victim shared
+//!   with surviving lanes stay allocated and prefix-attachable, so
+//!   preempting a sharer costs its donors (and future attachers)
+//!   nothing.
 //! * **Prefix index + COW tails.** [`PrefixIndex`] is a trie keyed on
 //!   exact `block_tokens`-sized token chunks; each node records the
 //!   per-layer K/V block ids a donor lane wrote for that chunk, plus
@@ -745,6 +750,60 @@ mod tests {
         assert_eq!(freed.len(), 4);
         assert_eq!(pool.free_blocks(), 8);
         assert_eq!(pool.shared_block_refs(), 0);
+    }
+
+    #[test]
+    fn preemption_release_keeps_shared_blocks_attachable() {
+        // KV-pressure preemption releases a victim's *whole* reservation
+        // in one shot. Blocks the victim donated to a surviving sharer
+        // must stay allocated, readable, and prefix-attachable — only
+        // the victim's private blocks free (and prune the index).
+        let mut rng = Rng::new(11);
+        let (h, dh, bt) = (1, 4, 3);
+        let mut pool = KvPool::new(KvQuant::Asym4, h, dh, bt, 32);
+        let mut idx = PrefixIndex::new(bt, 1);
+        // victim-to-be prompt: 8 tokens → 2 full chunks + 2-row partial
+        let donor_toks: Vec<i32> = (0..8).map(|t| 20 + t as i32).collect();
+        let rows = rand_rows(8, h * dh, &mut rng);
+        let mut donor = SeqKv::new(1);
+        fill_seq(&mut pool, &mut donor, 0, &rows);
+        idx.register(&donor_toks, &donor);
+        let want_k: Vec<_> = (0..8).map(|t| pool.read_k_row(&donor, 0, t, 0)).collect();
+
+        // a sharer maps both full chunks by refcount and COWs the tail
+        let sharer_toks: Vec<i32> = donor_toks.iter().copied().chain([90, 91]).collect();
+        let mut sharer = SeqKv::with_capacity(1, 4);
+        assert_eq!(idx.attach(&mut pool, &sharer_toks, &mut sharer).unwrap(), 8);
+        assert_eq!(pool.shared_block_refs(), 4);
+
+        // preempt the donor: one whole-reservation release
+        let mut freed = Vec::new();
+        pool.release_into(&mut donor, &mut freed);
+        idx.invalidate(&freed);
+        assert_eq!(freed.len(), 2, "only the private partial tail pair frees");
+        assert_eq!(pool.shared_block_refs(), 0, "sharer is now the sole holder");
+        assert_eq!(idx.nodes(), 2, "full-chunk entries survive the preemption");
+        // the sharer still reads the victim-written rows bitwise
+        for t in 0..8 {
+            assert_eq!(pool.read_k_row(&sharer, 0, t, 0), want_k[t], "t={t}");
+        }
+
+        // the victim re-admits (resume recomputes from the prompt) and
+        // reattaches the surviving shared chunks — only the pruned
+        // partial tail is gone, so 2 full chunks still come from cache
+        let mut resumed = SeqKv::with_capacity(1, 4);
+        assert_eq!(idx.attach(&mut pool, &donor_toks, &mut resumed).unwrap(), 6);
+        for t in 0..6 {
+            assert_eq!(pool.read_k_row(&resumed, 0, t, 0), want_k[t], "t={t}");
+        }
+
+        // last holders release → pool whole, index empty
+        pool.release_into(&mut resumed, &mut freed);
+        pool.release_into(&mut sharer, &mut freed);
+        idx.invalidate(&freed);
+        assert_eq!(pool.free_blocks(), 32);
+        assert_eq!(pool.shared_block_refs(), 0);
+        assert_eq!(idx.nodes(), 0);
     }
 
     #[test]

@@ -31,7 +31,11 @@
 //!   canceled mid-flight with full KV-block reclaim, SIGTERM drains
 //!   gracefully, and a seeded fault-injection layer (`KURTAIL_FAULT`)
 //!   makes the failure paths testable (`rust/README.md` §Serving
-//!   daemon).
+//!   daemon). Under KV pressure the engine preempts the
+//!   lowest-class/newest lane ([`LaneSnapshot`]) and later resumes it
+//!   byte-identically via recompute; the daemon's supervisor replays
+//!   host-side snapshots across engine restarts so clients see a
+//!   pause, not a 503 (`rust/README.md` §Preemption & resume).
 //! * Telemetry ([`crate::obs`]) — every engine owns an
 //!   [`crate::obs::EngineObs`] bundle (queue-wait/TTFT/prefill/decode
 //!   and per-phase histograms, KV-occupancy gauges, request counters)
@@ -63,15 +67,15 @@ pub use daemon::config::{ConfigCell, RuntimeConfig, TenantPolicy};
 pub use daemon::ratelimit::TokenBucket;
 pub use daemon::{Daemon, DaemonConfig, Host, HostConfig};
 pub use engine::{
-    argmax, fused_epilogue_enabled, prefill_chunk_default, prefix_share_enabled, sample_token,
-    sample_token_buf, Completion, Engine, EngineStats, ServeConfig, ServeModel, ServeQuantSpec,
-    DEFAULT_PREFILL_CHUNK,
+    argmax, fused_epilogue_enabled, kv_high_water_default, preempt_enabled, prefill_chunk_default,
+    prefix_share_enabled, sample_token, sample_token_buf, Completion, Engine, EngineStats,
+    ServeConfig, ServeModel, ServeQuantSpec, DEFAULT_KV_HIGH_WATER, DEFAULT_PREFILL_CHUNK,
 };
 pub use error::ServeError;
 pub use int4::{panel_cache_budget, GemmScratch, Int4Weight};
 pub use kvcache::{KvPool, PrefixIndex, SeqKv};
 pub use qact::{int_gemm_enabled, QuantActs};
-pub use scheduler::{Priority, QueuedRequest, Scheduler};
+pub use scheduler::{LaneSnapshot, Priority, QueuedRequest, Scheduler};
 pub use scratch::{arena_enabled, scratch_decay_default, DecodeScratch, DEFAULT_DECAY_STEPS};
 
 pub use crate::util::par::ParBackend;

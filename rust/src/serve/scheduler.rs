@@ -114,6 +114,25 @@ impl Priority {
 
 const CLASSES: usize = 3;
 
+/// Frozen mid-flight state of a preempted (or restart-orphaned) lane,
+/// carried on its requeued [`QueuedRequest`]. Because every stream is
+/// bitwise-deterministic, `prompt + emitted tokens` plus the sampling
+/// rng *as of the last emitted token* fully determine the rest of the
+/// stream: on re-admission the engine re-prefills the whole
+/// `QueuedRequest::tokens` (prompt and already-emitted tokens alike,
+/// cheap again where the prefix index still holds the donor blocks) and
+/// the final prefill chunk samples the *next* token with this rng —
+/// continuing the stream byte-identically to the undisturbed run.
+#[derive(Clone, Debug)]
+pub struct LaneSnapshot {
+    /// Original prompt length; `tokens[prompt_len..]` are emitted tokens.
+    pub prompt_len: usize,
+    /// Tokens already emitted (and delivered) before preemption.
+    pub produced: usize,
+    /// Sampling rng state after `produced` draws.
+    pub rng: Rng,
+}
+
 /// A queued generation request (tokenized, ready to admit).
 #[derive(Clone, Debug)]
 pub struct QueuedRequest {
@@ -132,18 +151,29 @@ pub struct QueuedRequest {
     /// span. Observability only — admission order never reads the clock
     /// (the batch-invariance guarantee stands).
     pub enqueued: Instant,
+    /// Present when this request is a preempted lane coming back:
+    /// `tokens` then holds `prompt + emitted` and admission resumes the
+    /// stream instead of starting it (see [`LaneSnapshot`]).
+    pub resume: Option<LaneSnapshot>,
 }
 
 impl QueuedRequest {
-    /// Worst-case sequence length (prompt fully cached + every new token).
+    /// Worst-case sequence length (prompt fully cached + every new
+    /// token). For a resumed request, already-emitted tokens live in
+    /// `tokens`, so they are subtracted from the new-token budget —
+    /// the footprint never grows across preempt/resume cycles.
     pub fn total_tokens(&self) -> usize {
-        self.tokens.len() + self.n_new
+        self.tokens.len() + self.n_new - self.resume.as_ref().map_or(0, |s| s.produced)
     }
 
     /// Per-request sampling stream, independent of admission order and
     /// lane placement (a lane's tokens never depend on its neighbours).
+    /// A resumed request continues its snapshotted rng mid-stream.
     pub fn rng(&self) -> Rng {
-        Rng::new(self.seed ^ (self.id as u64).wrapping_mul(0x9E3779B97F4A7C15))
+        match &self.resume {
+            Some(s) => s.rng.clone(),
+            None => Rng::new(self.seed ^ (self.id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+        }
     }
 }
 
@@ -206,6 +236,29 @@ impl Scheduler {
         }
         self.queues[r.priority.rank()].push_back(r);
         Ok(None)
+    }
+
+    /// Requeue a preempted lane at the *front* of its priority class.
+    /// Cap-exempt: the request already held an admission slot, so
+    /// putting it back can never be shed — preemption must be lossless.
+    /// The class head changes, so its bypass budget resets.
+    pub fn requeue_front(&mut self, r: QueuedRequest) {
+        let c = r.priority.rank();
+        self.queues[c].push_front(r);
+        self.head_skips[c] = 0;
+    }
+
+    /// The request the next unconstrained `pop_if` would consider first
+    /// (the head of the highest-priority non-empty class, or a gating
+    /// starved head). Used by the engine's preemption trigger to ask
+    /// "what is waiting, and does it fit?" without committing to a pop.
+    pub fn peek_best(&self) -> Option<&QueuedRequest> {
+        for c in 0..CLASSES {
+            if !self.queues[c].is_empty() && self.head_skips[c] >= self.budget(c) {
+                return self.queues[c].front();
+            }
+        }
+        self.queues.iter().find_map(|q| q.front())
     }
 
     pub fn len(&self) -> usize {
@@ -338,6 +391,7 @@ mod tests {
             stop: None,
             priority,
             enqueued: Instant::now(),
+            resume: None,
         }
     }
 
@@ -500,6 +554,38 @@ mod tests {
         assert!(s.is_empty());
         s.push(req(9, 1)).unwrap(); // queue is reusable after a drain
         assert_eq!(s.pop_if(|_| true).unwrap().id, 9);
+    }
+
+    #[test]
+    fn requeue_front_jumps_the_class_and_ignores_the_cap() {
+        let mut s = Scheduler::bounded(2, DEFAULT_HEAD_SKIPS);
+        s.push(req_prio(0, 1, Priority::Low)).unwrap();
+        s.push(req_prio(1, 1, Priority::Low)).unwrap();
+        // a preempted Low lane comes back at the front of Low even
+        // though the queue is at its bound
+        let mut back = req_prio(2, 1, Priority::Low);
+        back.resume =
+            Some(LaneSnapshot { prompt_len: 1, produced: 2, rng: Rng::new(7) });
+        s.requeue_front(back);
+        assert_eq!(s.len(), 3, "requeue_front is cap-exempt");
+        assert_eq!(s.peek_best().unwrap().id, 2);
+        // …but a High request still outranks it
+        s.push(req_prio(3, 1, Priority::High)).unwrap();
+        assert_eq!(s.peek_best().unwrap().id, 3);
+        let ids: Vec<usize> = std::iter::from_fn(|| s.pop_if(|_| true)).map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 2, 0, 1]);
+    }
+
+    #[test]
+    fn resumed_footprint_and_rng_come_from_the_snapshot() {
+        // a resumed request's tokens hold prompt + emitted, so its
+        // worst-case footprint must not double-count the emitted part
+        let mut r = req(0, 3); // prompt 3, n_new 4 → total 7
+        assert_eq!(r.total_tokens(), 7);
+        r.tokens.extend([5, 6]); // two tokens emitted before preemption
+        r.resume = Some(LaneSnapshot { prompt_len: 3, produced: 2, rng: Rng::new(42) });
+        assert_eq!(r.total_tokens(), 7, "footprint is stable across preempt/resume");
+        assert_eq!(r.rng().next_u64(), Rng::new(42).next_u64(), "rng resumes mid-stream");
     }
 
     #[test]

@@ -25,7 +25,7 @@ use kurtail::config::KvQuant;
 use kurtail::model::Params;
 use kurtail::obs::Histogram;
 use kurtail::serve::daemon::fault::FaultSpec;
-use kurtail::serve::daemon::{spawn_host_reloadable, Event, SubmitReq};
+use kurtail::serve::daemon::{spawn_host_reloadable, spawn_host_supervised, Event, SubmitReq};
 use kurtail::serve::{
     ConfigCell, Engine, Int4Weight, KvPool, ParBackend, Priority, QuantActs, RuntimeConfig, SeqKv,
     ServeConfig, ServeError, ServeModel, ServeQuantSpec, TenantPolicy,
@@ -1213,6 +1213,254 @@ fn prop_reload_priority_interleavings_leak_free_and_bitwise() {
         prop_assert(
             stats.free_blocks == stats.max_blocks,
             "pool whole after reload/priority interleaving",
+        )?;
+        host.drain();
+        handle.join().expect("engine thread exits clean");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preemption_interleavings_leak_free_and_bitwise() {
+    // the PR-10 graceful-degradation invariant: for ANY schedule of
+    // KV-pressure preemptions, cancels and drains over shared-prefix
+    // lanes of mixed priority, (a) the pool ends whole with zero shared
+    // refs, and (b) every completed stream is bitwise the stream of an
+    // undisturbed run on a roomy pool with preemption off — preemption
+    // moves *when* tokens are computed, never *which* tokens
+    let meta = serve_test_meta();
+    check(5, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        // tight pool: each lane reserves 2 layers × 2 (K,V) ×
+        // ceil(6/2) = 12 blocks, so two live lanes commit 24/26 — past
+        // the 0.85 watermark — and a queued higher-class request can
+        // only seat by preempting a lower-class lane
+        let tight = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            max_blocks: 26,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            preempt: Some(true),
+            ..ServeConfig::default()
+        };
+        let roomy = ServeConfig {
+            max_blocks: 0, // auto-sized: never under pressure
+            preempt: Some(false),
+            ..tight.clone()
+        };
+        // one shared 3-token prefix (odd against block_tokens 2, so COW
+        // tails are in play); class order Low, Normal first so at least
+        // one later arrival outranks a seated lane
+        let prefix: Vec<i32> = (0..3).map(|_| rng.below(meta.vocab) as i32).collect();
+        let classes = [Priority::Low, Priority::Normal, Priority::High];
+        let reqs: Vec<(Vec<i32>, usize, Priority)> = (0..4)
+            .map(|i| {
+                let mut toks = prefix.clone();
+                toks.push(i as i32);
+                let class = match i {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => classes[rng.below(3)],
+                };
+                (toks, 1 + rng.below(2), class)
+            })
+            .collect();
+        // the donor must finish prefill before sharers admit, so every
+        // engine runs the same schedule: submit 0, one step, the rest
+        let submit_all = |eng: &mut Engine| -> Vec<usize> {
+            let mut ids = Vec::new();
+            for (i, (toks, n, class)) in reqs.iter().enumerate() {
+                ids.push(eng.submit_tokens_prio(toks.clone(), *n, 0.0, 3, None, *class).unwrap());
+                if i == 0 {
+                    eng.step().unwrap();
+                }
+            }
+            ids
+        };
+        // ground truth: roomy pool, preemption off, temp 0 (argmax is
+        // id- and batch-independent, so streams are comparable)
+        let mut reference = Engine::new(model.clone(), &roomy).unwrap();
+        submit_all(&mut reference);
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        let mut eng = Engine::new(model.clone(), &tight).unwrap();
+        let ids = submit_all(&mut eng);
+        let cancel_at: Vec<Option<usize>> =
+            ids.iter().map(|_| (rng.below(3) == 0).then(|| rng.below(6))).collect();
+        let drain_at = (rng.below(4) == 0).then(|| rng.below(4));
+        let mut gone: HashSet<usize> = HashSet::new();
+        let mut step_n = 0usize;
+        loop {
+            for (i, id) in ids.iter().enumerate() {
+                if cancel_at[i] == Some(step_n) && eng.cancel(*id) {
+                    gone.insert(*id);
+                }
+            }
+            if drain_at == Some(step_n) {
+                // drain sheds only fresh queued requests; preempted
+                // lanes are morally in-flight and must still finish
+                for id in eng.begin_drain() {
+                    gone.insert(id);
+                }
+            }
+            if !eng.step().unwrap() {
+                break;
+            }
+            step_n += 1;
+        }
+        let done = eng.take_completions();
+        prop_assert(
+            eng.pool().free_blocks() == eng.pool().max_blocks
+                && eng.committed_blocks() == 0
+                && eng.shared_block_refs() == 0,
+            &format!(
+                "pool whole, no shared refs after preemption interleaving \
+                 (preempted={} cancels={cancel_at:?} drain={drain_at:?})",
+                eng.stats.preempted
+            ),
+        )?;
+        prop_assert(
+            eng.stats.resumed <= eng.stats.preempted,
+            "every resume traces back to a preemption",
+        )?;
+        prop_assert(done.len() == ids.len() - gone.len(), "survivors = submissions - cancels - shed")?;
+        for c in &done {
+            prop_assert(!gone.contains(&c.id), "a canceled/shed request must not complete")?;
+            prop_assert(
+                c.tokens == want[c.id].tokens,
+                &format!(
+                    "preempted/resumed stream {} bitwise equal to the undisturbed roomy run",
+                    c.id
+                ),
+            )?;
+        }
+        if drain_at.is_none() {
+            // replay the same workload on the SAME engine: preemption
+            // snapshots left no stale scheduler or pool state behind
+            let ids2 = submit_all(&mut eng);
+            let mut done2 = eng.run().unwrap();
+            done2.sort_by_key(|c| c.id);
+            prop_assert(done2.len() == reqs.len(), "round 2 completes everything")?;
+            for (k, c) in done2.iter().enumerate() {
+                prop_assert(c.id == ids2[k], "round-2 ids in submission order")?;
+                prop_assert(c.tokens == want[k].tokens, &format!("round-2 stream {k} replays bitwise"))?;
+            }
+            prop_assert(
+                eng.pool().free_blocks() == eng.pool().max_blocks && eng.shared_block_refs() == 0,
+                "pool whole again after round 2",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_panic_resume_completes_every_stream_bitwise() {
+    // host-level transparent resume: a one-shot injected engine panic
+    // lands at a seeded-random step — before any token, mid-stream, or
+    // never — and must be invisible to clients: no stream fails, every
+    // completion is bitwise the undisturbed run, every generated token
+    // is streamed exactly once, and the pool comes back whole
+    let meta = serve_test_meta();
+    check(4, |rng| {
+        let params = Params::init(&meta, &mut rng.fork(1));
+        let spec = ServeQuantSpec::paper_default(
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_head, rng),
+            random_hadamard(meta.d_ff, rng),
+        );
+        let model = ServeModel::from_params(&params, Some(spec)).unwrap();
+        let scfg = ServeConfig {
+            max_lanes: 2,
+            block_tokens: 2,
+            kv_quant: KvQuant::Asym4,
+            threads: Some(1),
+            ..ServeConfig::default()
+        };
+        let prefix: Vec<i32> = (0..3).map(|_| rng.below(meta.vocab) as i32).collect();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..3)
+            .map(|i| {
+                let mut toks = prefix.clone();
+                toks.push(i as i32);
+                (toks, 2 + rng.below(3))
+            })
+            .collect();
+        let mut reference = Engine::new(model.clone(), &scfg).unwrap();
+        for (toks, n) in &reqs {
+            reference.submit_tokens(toks.clone(), *n, 0.0, 3).unwrap();
+        }
+        let mut want = reference.run().unwrap();
+        want.sort_by_key(|c| c.id);
+
+        // seeded panic timing: p=0.4 per step, one-shot, so a random
+        // seed places the (at most one) restart anywhere in the run
+        let fault = FaultSpec {
+            engine_panic: 0.4,
+            seed: rng.next_u64(),
+            ..FaultSpec::none()
+        };
+        let cell = Arc::new(ConfigCell::new(RuntimeConfig { fault, ..RuntimeConfig::default() }));
+        let engine = Engine::new(model.clone(), &scfg).unwrap();
+        let (host, handle) = spawn_host_supervised(engine, Arc::clone(&cell), scfg.clone());
+        let mut rxs = Vec::new();
+        for (toks, n) in &reqs {
+            let (tx, rx) = mpsc::channel();
+            host.submit(SubmitReq {
+                tokens: toks.clone(),
+                n_tokens: *n,
+                temp: 0.0,
+                seed: 3,
+                stop: None,
+                tenant: "t".to_string(),
+                deadline: None,
+                events: tx,
+            })
+            .expect("admission under supervision");
+            rxs.push(rx);
+        }
+        for (i, rx) in rxs.iter().enumerate() {
+            let mut toks = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Event::Token(t)) => toks.push(t),
+                    Ok(Event::Done(c)) => {
+                        prop_assert(
+                            c.tokens == want[i].tokens,
+                            &format!("stream {i} bitwise equals the undisturbed run"),
+                        )?;
+                        prop_assert(
+                            toks == want[i].tokens[want[i].prompt_len..],
+                            &format!("stream {i}: every token streamed exactly once"),
+                        )?;
+                        break;
+                    }
+                    Ok(Event::Failed(e)) => {
+                        prop_assert(false, &format!("stream {i} failed across restart: {e:?}"))?;
+                        break;
+                    }
+                    Err(_) => {
+                        prop_assert(false, &format!("stream {i}: engine thread hung"))?;
+                        break;
+                    }
+                }
+            }
+        }
+        let stats = host.stats().expect("host alive");
+        prop_assert(
+            stats.free_blocks == stats.max_blocks,
+            &format!("pool whole after {} restart(s)", stats.engine_restarts),
+        )?;
+        prop_assert(
+            stats.engine_restarts <= 1,
+            "the injected panic is one-shot: at most one restart",
         )?;
         host.drain();
         handle.join().expect("engine thread exits clean");

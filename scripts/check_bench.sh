@@ -43,6 +43,16 @@
 #                                                 prompt tokens — a FLOOR;
 #                                                 a broken prefix index
 #                                                 collapses it toward 0)
+#              runs[lanes=16].completed_under_pressure_ratio
+#                                                (KV-pressure stage:
+#                                                 completions over offered
+#                                                 requests while half the
+#                                                 pool is withheld and a
+#                                                 high-class tenant preempts
+#                                                 low lanes — a FLOOR; any
+#                                                 drop means preempted
+#                                                 streams were dropped, not
+#                                                 paused and resumed)
 #
 # Usage:  scripts/check_bench.sh            # gate current vs baseline
 #         scripts/check_bench.sh --update   # refresh BENCH_baseline/
@@ -112,6 +122,7 @@ metrics = [
     ("serve: lanes=16 hi_pri_p99_ttft_ms", serve_run_metric, (cur_s, 16, "hi_pri_p99_ttft_ms"), (base_s, 16, "hi_pri_p99_ttft_ms"), "lower"),
     ("serve: lanes=16 fairness_ratio", serve_run_metric, (cur_s, 16, "fairness_ratio"), (base_s, 16, "fairness_ratio"), "higher"),
     ("serve: lanes=16 prefix_hit_ratio", serve_run_metric, (cur_s, 16, "prefix_hit_ratio"), (base_s, 16, "prefix_hit_ratio"), "higher"),
+    ("serve: lanes=16 completed_under_pressure_ratio", serve_run_metric, (cur_s, 16, "completed_under_pressure_ratio"), (base_s, 16, "completed_under_pressure_ratio"), "higher"),
 ]
 
 failures = []

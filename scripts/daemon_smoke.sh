@@ -7,13 +7,18 @@
 # a mid-flight stream survives, the new tenant policy sheds 429, an
 # invalid rewrite is rejected without killing the old config), run a
 # second instance under `KURTAIL_FAULT=engine_panic=1` and check the
-# supervisor path (first request 503 retryable, retry 200, exactly one
-# restart, zero leaked blocks), then SIGTERM everything and assert a
-# clean drained exit (exit code 0, "drained clean" on stdout).
+# transparent-resume supervisor path (the request riding the panic
+# completes with a 200 and the same bytes as a rerun — zero 503s —
+# exactly one restart, zero leaked blocks), run a third instance under
+# `KURTAIL_FAULT=kv_pressure=...` with high/low tenant classes and
+# check KV-pressure preemption (a live low-priority stream pauses for a
+# high-priority arrival, then resumes and completes with the same bytes
+# as an uncontended run), then SIGTERM everything and assert a clean
+# drained exit (exit code 0, "drained clean" on stdout).
 #
 # Usage: scripts/daemon_smoke.sh [path/to/kurtail]
 #        KURTAIL_SMOKE_PORT overrides the port (default 8473; the
-#        engine-panic stage uses port+1).
+#        engine-panic stage uses port+1, the kv-pressure stage port+2).
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -22,8 +27,12 @@ port="${KURTAIL_SMOKE_PORT:-8473}"
 base="http://127.0.0.1:$port"
 log="$(mktemp)"
 log2="$(mktemp)"
+log3="$(mktemp)"
 cfg="$(mktemp)"
+cfg3="$(mktemp)"
 streamf="$(mktemp)"
+lowref="$(mktemp)"
+lowstream="$(mktemp)"
 
 if [[ ! -x "$bin" ]]; then
   echo "daemon_smoke: no binary at $bin — build with 'cargo build --release' first" >&2
@@ -36,11 +45,13 @@ printf '{"per_tenant_cap": 0}\n' >"$cfg"
 "$bin" daemon --synthetic --addr "127.0.0.1:$port" --config "$cfg" >"$log" 2>&1 &
 pid=$!
 pid2=""
+pid3=""
 cleanup() {
   kill -9 "$pid" 2>/dev/null || true
   [[ -n "$pid2" ]] && kill -9 "$pid2" 2>/dev/null || true
+  [[ -n "$pid3" ]] && kill -9 "$pid3" 2>/dev/null || true
   cat "$log" >&2 || true
-  rm -f "$log" "$log2" "$cfg" "$streamf"
+  rm -f "$log" "$log2" "$log3" "$cfg" "$cfg3" "$streamf" "$lowref" "$lowstream"
 }
 trap cleanup EXIT
 
@@ -158,10 +169,12 @@ if [[ "$code" != 429 ]]; then
 fi
 echo "daemon_smoke: invalid config rejected, previous config stayed live"
 
-# --- engine-panic supervision ------------------------------------------
-# a second instance armed with a one-shot engine panic: the first
-# request rides the panicking step and gets a retryable 503; the retry
-# lands on the rebuilt engine; exactly one restart, zero leaked blocks
+# --- engine-panic supervision with transparent resume ------------------
+# a second instance armed with a one-shot engine panic: the request
+# riding the panicking step must NOT see a 503 — the supervisor
+# rebuilds the engine, replays the host-side snapshot, and the stream
+# completes with a 200 and the same bytes a rerun on the rebuilt engine
+# produces; exactly one restart, zero leaked blocks
 port2=$((port + 1))
 base2="http://127.0.0.1:$port2"
 KURTAIL_FAULT="engine_panic=1" "$bin" daemon --synthetic --addr "127.0.0.1:$port2" >"$log2" 2>&1 &
@@ -180,19 +193,28 @@ done
 hdrs="$(mktemp)"
 body="$(curl -s -D "$hdrs" -X POST "$base2/v1/generate" \
   -d '{"prompt": "panic ride", "max_tokens": 4}')"
-grep -q "503" "$hdrs"
-echo "$body" | grep -q '"engine_restarting"'
-grep -qi "^retry-after:" "$hdrs"
+grep -q " 200 " "$hdrs"
 rm -f "$hdrs"
-curl -sf -X POST "$base2/v1/generate" \
-  -d '{"prompt": "panic ride", "max_tokens": 4}' | grep -q '"tokens"'
+echo "$body" | grep -q '"tokens"'
+# the same request on the rebuilt (now panic-free) engine is the
+# undisturbed reference: greedy decode must be bitwise identical
+retry="$(curl -sf -X POST "$base2/v1/generate" \
+  -d '{"prompt": "panic ride", "max_tokens": 4}')"
+python3 - "$body" "$retry" <<'PY'
+import json, sys
+rode, clean = json.loads(sys.argv[1]), json.loads(sys.argv[2])
+assert rode["tokens"] == clean["tokens"], \
+    "resume across the restart changed the bytes: %s vs %s" % (rode, clean)
+PY
 curl -sf "$base2/stats" | python3 -c '
 import json, sys
 s = json.load(sys.stdin)
 assert s["engine_restarts"] == 1, "expected exactly one restart: %s" % s
+assert s["engine"]["resumed"] == 1, "expected one resumed stream: %s" % s
 assert s["free_blocks"] == s["max_blocks"], "leaked KV blocks across restart: %s" % s
 '
 curl -sf "$base2/metrics" | grep -q "^kurtail_engine_restarts_total 1$"
+curl -sf "$base2/metrics" | grep -q "^kurtail_requests_resumed_total 1$"
 kill -TERM "$pid2"
 status=0
 wait "$pid2" || status=$?
@@ -202,7 +224,81 @@ if [[ "$status" -ne 0 ]]; then
   exit 1
 fi
 pid2=""
-echo "daemon_smoke: engine panic supervised — 503, retry ok, 1 restart, no leak"
+echo "daemon_smoke: engine panic supervised — zero 503s, bitwise resume, 1 restart, no leak"
+
+# --- KV-pressure preemption with transparent resume ---------------------
+# a third instance: the kv_pressure fault withholds 46 of the synthetic
+# engine's 64 blocks (effective pool 18), slow_step stretches each step
+# so the stage has time to interleave, and the config file defines a
+# high-class "vip" tenant and a low-class "batch" tenant. A 17-token
+# batch prompt + 40 new tokens needs 16 blocks — it fits alone (and
+# sits above the 0.85 watermark), but a vip arrival (4 blocks > the 2
+# uncommitted) must preempt it: the live low stream pauses, vip admits
+# and completes, then the low stream resumes and completes with exactly
+# the bytes an uncontended run produces.
+port3=$((port + 2))
+base3="http://127.0.0.1:$port3"
+printf '{"tenants": {"vip": {"priority": "high"}, "batch": {"priority": "low"}}}\n' >"$cfg3"
+KURTAIL_FAULT="kv_pressure=46,slow_step=20" "$bin" daemon --synthetic \
+  --addr "127.0.0.1:$port3" --config "$cfg3" >"$log3" 2>&1 &
+pid3=$!
+for _ in $(seq 1 100); do
+  if curl -sf "$base3/healthz" >/dev/null 2>&1; then
+    break
+  fi
+  if ! kill -0 "$pid3" 2>/dev/null; then
+    echo "daemon_smoke: pressure daemon exited during startup" >&2
+    cat "$log3" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+# uncontended reference run (same engine, no vip competition)
+curl -sf -X POST "$base3/v1/generate" \
+  -d '{"prompt": "hold the low lane", "max_tokens": 40, "tenant": "batch"}' >"$lowref"
+grep -q '"tokens"' "$lowref"
+# live run: start the low stream, let it emit a few tokens, then land a
+# high-priority admission that cannot fit without preempting it
+curl -sf -X POST "$base3/v1/generate" \
+  -d '{"prompt": "hold the low lane", "max_tokens": 40, "tenant": "batch", "stream": true}' >"$lowstream" &
+low_pid=$!
+sleep 0.4
+vip="$(curl -sf -X POST "$base3/v1/generate" \
+  -d '{"prompt": "vip", "max_tokens": 10, "tenant": "vip"}')"
+echo "$vip" | grep -q '"tokens"'
+wait "$low_pid"
+grep -q '"done": true' "$lowstream"
+python3 - "$lowref" "$lowstream" <<'PY'
+import json, sys
+ref = json.load(open(sys.argv[1]))
+lines = [json.loads(l) for l in open(sys.argv[2]) if l.strip()]
+toks = [l["token"] for l in lines if "token" in l]
+done = [l for l in lines if l.get("done")]
+assert done, "low stream never finished: %s" % lines[-3:]
+assert len(toks) == 40, "expected 40 streamed tokens, got %d" % len(toks)
+assert toks == ref["tokens"][ref["prompt_len"]:], \
+    "preempted stream diverged from the uncontended run"
+assert done[0]["text"] == ref["text"], "decoded text diverged across preemption"
+PY
+curl -sf "$base3/stats" | python3 -c '
+import json, sys
+s = json.load(sys.stdin)
+assert s["engine"]["preempted"] >= 1, "vip arrival never preempted the low lane: %s" % s
+assert s["engine"]["resumed"] >= 1, "preempted lane never resumed: %s" % s
+assert s["engine"]["resume_recompute_tokens"] >= 1, s
+assert s["free_blocks"] == s["max_blocks"], "leaked KV blocks across preemption: %s" % s
+'
+curl -sf "$base3/metrics" | grep -q "^kurtail_requests_preempted_total"
+kill -TERM "$pid3"
+status=0
+wait "$pid3" || status=$?
+if [[ "$status" -ne 0 ]]; then
+  echo "daemon_smoke: pressure daemon exited with status $status after SIGTERM" >&2
+  cat "$log3" >&2
+  exit 1
+fi
+pid3=""
+echo "daemon_smoke: kv pressure — low stream paused, vip admitted, bitwise resume, no leak"
 
 # SIGTERM → graceful drain → clean exit
 kill -TERM "$pid"
